@@ -1,0 +1,66 @@
+//! Quickstart: the Pilot-API in ~60 lines.
+//!
+//! Allocates a local pilot, submits a bag of compute-units (custom tasks +
+//! a K-Means step), waits, and reads results — the unified task model that
+//! also drives the serverless and HPC backends unchanged.
+//!
+//! Run: `cargo run --example quickstart`
+
+use pilot_streaming::engine::CalibratedEngine;
+use pilot_streaming::pilot::{PilotComputeService, PilotDescription, Platform, TaskSpec};
+use pilot_streaming::sim::WallClock;
+use std::sync::Arc;
+
+fn main() {
+    // 1. a Pilot-Compute service: the single entry point to all platforms
+    let service = PilotComputeService::new(
+        Arc::new(WallClock::new()),
+        Arc::new(CalibratedEngine::new(42)),
+    );
+
+    // 2. describe the resources you want — platform-agnostic
+    let description = PilotDescription::new(Platform::Local).with_parallelism(4);
+    let pilot = service.submit_pilot(description).expect("provision pilot");
+    println!("pilot {} is {}", pilot.id, pilot.state());
+
+    // 3. submit a bag of tasks (data parallelism)
+    let squares: Vec<_> = (1..=8)
+        .map(|i| {
+            pilot
+                .submit_compute_unit(TaskSpec::Custom(Box::new(move || Ok((i * i) as f64))))
+                .expect("submit")
+        })
+        .collect();
+
+    // 4. ... and a streaming K-Means step, same API
+    let step = pilot
+        .submit_compute_unit(TaskSpec::KMeansStep {
+            points: Arc::new(vec![0.5; 256 * 8]),
+            dim: 8,
+            model_key: "quickstart-model".into(),
+            centroids: 16,
+        })
+        .expect("submit kmeans");
+
+    // 5. wait and collect
+    let sum: f64 = squares
+        .iter()
+        .map(|cu| {
+            cu.wait();
+            cu.outcome().expect("outcome").value
+        })
+        .sum();
+    println!("sum of squares 1..8 = {sum} (expected 204)");
+
+    step.wait();
+    let o = step.outcome().expect("kmeans outcome");
+    println!(
+        "k-means step on {}: compute {:.4}s, io {:.4}s",
+        o.executor, o.compute_seconds, o.io_seconds
+    );
+
+    // 6. graceful teardown
+    pilot.finish();
+    println!("pilot {} is {}", pilot.id, pilot.state());
+    assert_eq!(sum, 204.0);
+}

@@ -1,0 +1,80 @@
+//! Serverless streaming (paper Fig 2): provision a Kinesis pilot and a
+//! Lambda function pilot through the Pilot-API, stream K-Means messages
+//! through the broker, and process them with per-shard event-source
+//! semantics — live, with the real AOT artifact on PJRT when
+//! `artifacts/` exists (falls back to the native Rust engine otherwise).
+//!
+//! Run: `make artifacts && cargo run --release --example serverless_streaming`
+
+use pilot_streaming::engine::StepEngine;
+use pilot_streaming::kmeans::NativeEngine;
+use pilot_streaming::miniapp::{run_live, PlatformKind, Scenario};
+use pilot_streaming::pilot::{PilotComputeService, PilotDescription, Platform};
+use pilot_streaming::runtime::{Manifest, PjrtEngine};
+use pilot_streaming::sim::WallClock;
+use std::sync::Arc;
+
+fn engine() -> (Arc<dyn StepEngine>, &'static str) {
+    match Manifest::load(&Manifest::default_dir()) {
+        Ok(man) => (Arc::new(PjrtEngine::new(man, 2)), "pjrt"),
+        Err(e) => {
+            eprintln!("note: {e}; using native engine (run `make artifacts` for PJRT)");
+            (Arc::new(NativeEngine), "native")
+        }
+    }
+}
+
+fn main() {
+    let (engine, kind) = engine();
+
+    // Step 1 (paper Fig 2 1a/b): the Kinesis pilot — resource container for
+    // the broker, described with the same attribute a Kafka pilot would use.
+    let service = PilotComputeService::new(Arc::new(WallClock::new()), Arc::clone(&engine));
+    let kinesis = service
+        .submit_pilot(PilotDescription::new(Platform::Kinesis).with_parallelism(4))
+        .expect("kinesis pilot");
+    println!(
+        "kinesis pilot up: {} shards",
+        kinesis.broker().unwrap().num_partitions()
+    );
+
+    // Step 2 (paper Fig 2 2a/b): the Function pilot (Lambda fleet).
+    let lambda = service
+        .submit_pilot(
+            PilotDescription::new(Platform::Lambda)
+                .with_parallelism(4)
+                .with_memory_mb(3008),
+        )
+        .expect("lambda pilot");
+    println!("lambda pilot up ({} engine)", kind);
+
+    // Stream a live workload: 256-point messages, 16 centroids (the tiny
+    // artifact variant), 4 shards, one container per shard.
+    let scenario = Scenario {
+        platform: PlatformKind::Lambda,
+        partitions: 4,
+        points_per_message: 256,
+        centroids: 16,
+        messages: 48,
+        ..Default::default()
+    };
+    let result = run_live(&scenario, engine, 100.0).expect("live run");
+    let s = &result.summary;
+    println!("\n-- streamed {} messages over {:.2}s --", s.messages, s.window_seconds);
+    println!("throughput T^px     {:.2} msg/s", s.throughput);
+    println!(
+        "service time        mean {:.1} ms  p95 {:.1} ms",
+        s.service.mean * 1e3,
+        s.service.p95 * 1e3
+    );
+    println!("broker latency L^br mean {:.1} ms", s.broker.mean * 1e3);
+    println!("backoff events      {}", result.backoff_events);
+    println!(
+        "producer rate       converged to {:.1} msg/s",
+        result.final_rate
+    );
+
+    lambda.finish();
+    kinesis.cancel();
+    assert!(s.messages >= 48);
+}

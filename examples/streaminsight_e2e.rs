@@ -1,0 +1,140 @@
+//! End-to-end StreamInsight driver — the repository's full-stack proof.
+//!
+//! All three layers compose on a real small workload:
+//!   1. **Calibrate**: execute the AOT-lowered Pallas/JAX K-Means artifact
+//!      (L1+L2) on the PJRT CPU client from Rust (L3) and measure real
+//!      kernel times per (MS, WC) variant.
+//!   2. **Live run**: stream blob-structured messages through the
+//!      Kinesis-like broker into the Lambda-like fleet; every message
+//!      executes the real artifact; verify learning (inertia falls).
+//!   3. **Characterize**: sweep partitions on both platforms in simulated
+//!      time with the calibrated engine.
+//!   4. **Model**: fit USL; report σ/κ contrast (the paper's headline),
+//!      prediction RMSE, and a config recommendation.
+//!
+//! Results recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example streaminsight_e2e`
+
+use pilot_streaming::insight::{analyze, table, ExperimentSpec, Predictor};
+use pilot_streaming::miniapp::{run_live, PlatformKind, Scenario};
+use pilot_streaming::runtime::{calibrate, Manifest, PjrtEngine};
+use pilot_streaming::usl::rmse_vs_train_size;
+use pilot_streaming::util::stats::mean;
+use std::sync::Arc;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let manifest = Manifest::load(&Manifest::default_dir())
+        .expect("artifacts/manifest.json missing — run `make artifacts`");
+
+    // ---- 1. calibrate: real PJRT executions of every artifact variant ----
+    println!("[1/4] calibrating {} artifact variants on PJRT...", manifest.variants.len());
+    let engine = Arc::new(PjrtEngine::new(manifest, 2));
+    let rows = calibrate::calibrate(&engine, 3, 42);
+    for r in &rows {
+        println!(
+            "   kmeans n={:<6} c={:<5} -> {:>8.2} ms/step (real XLA exec)",
+            r.key.0,
+            r.key.1,
+            r.dist.mean() * 1e3
+        );
+    }
+    std::fs::create_dir_all("artifacts").ok();
+    std::fs::write(
+        "artifacts/calibration.json",
+        calibrate::to_json(&rows).pretty(),
+    )
+    .expect("write calibration");
+
+    // ---- 2. live streaming run through broker + fleet + PJRT ----
+    println!("\n[2/4] live streaming: 64 x 8,000-point messages, 4 shards, PJRT on every message...");
+    let scenario = Scenario {
+        platform: PlatformKind::Lambda,
+        partitions: 4,
+        points_per_message: 8_000,
+        centroids: 128,
+        messages: 64,
+        ..Default::default()
+    };
+    let live = run_live(&scenario, engine.clone(), 100.0).expect("live run");
+    let s = &live.summary;
+    println!(
+        "   {} messages in {:.1}s -> T^px {:.2} msg/s ({:.1} MB/s of points)",
+        s.messages,
+        s.window_seconds,
+        s.throughput,
+        s.throughput * 8_000.0 * 8.0 * 4.0 / 1e6
+    );
+    println!(
+        "   service mean {:.1} ms (compute {:.1} ms) | L^br {:.1} ms | backoff events {}",
+        s.service.mean * 1e3,
+        s.compute_mean * 1e3,
+        s.broker.mean * 1e3,
+        live.backoff_events
+    );
+
+    // ---- 3. characterize: both platforms, partitions sweep (sim time) ----
+    println!("\n[3/4] characterization sweep (simulated time, calibrated engine)...");
+    let mut spec = ExperimentSpec::paper_grid(64, 42);
+    spec.message_sizes = vec![16_000];
+    spec.partitions = vec![1, 2, 4, 8, 16];
+    let factory = pilot_streaming::insight::figures::engine_factory(rows.clone());
+    let sweep = pilot_streaming::insight::run_sweep(&spec, factory);
+    let analysis = analyze(&sweep);
+    println!("{}", table(&analysis));
+
+    // ---- 4. model: the paper's headline sigma/kappa contrast ----
+    println!("[4/4] USL verdict:");
+    let lam: Vec<_> = analysis
+        .iter()
+        .filter(|a| a.platform == PlatformKind::Lambda)
+        .collect();
+    let dask: Vec<_> = analysis
+        .iter()
+        .filter(|a| a.platform == PlatformKind::DaskWrangler)
+        .collect();
+    let lam_sigma = mean(&lam.iter().map(|a| a.fit.params.sigma).collect::<Vec<_>>());
+    let dask_sigma = mean(&dask.iter().map(|a| a.fit.params.sigma).collect::<Vec<_>>());
+    println!(
+        "   Kinesis/Lambda: mean sigma {lam_sigma:.3} — near-optimal, predictable scaling"
+    );
+    println!(
+        "   Kafka/Dask:     mean sigma {dask_sigma:.3} — contention-bound, peaks early"
+    );
+    assert!(
+        lam_sigma < 0.1 && dask_sigma > 0.3,
+        "headline contrast failed: lambda sigma {lam_sigma}, dask sigma {dask_sigma}"
+    );
+
+    // prediction quality on held-out configurations (Fig 7's question)
+    if let Some(first_dask) = dask.first() {
+        let obs = pilot_streaming::insight::group_observations(
+            &sweep,
+            (
+                first_dask.platform,
+                first_dask.message_size,
+                first_dask.centroids,
+                first_dask.memory_mb,
+            ),
+        );
+        if let Ok(eval) = rmse_vs_train_size(&obs, &[3], 20, 42) {
+            let mean_t = mean(&obs.iter().map(|o| o.t).collect::<Vec<_>>());
+            println!(
+                "   3-config prediction RMSE (dask, WC={}): {:.1}% of mean throughput",
+                first_dask.centroids,
+                eval[0].rmse_mean / mean_t * 100.0
+            );
+        }
+    }
+
+    // a deployment recommendation from the fitted model
+    if let Some(a) = dask.first() {
+        let p = Predictor::from_fit(&a.fit);
+        println!(
+            "   recommendation: run kafka/dask at N = {} partitions (peak of its USL curve)",
+            p.optimal_parallelism(32)
+        );
+    }
+    println!("\ne2e complete in {:.1}s — all layers composed (Pallas kernel -> JAX step -> HLO -> PJRT -> broker/fleet -> USL).", t0.elapsed().as_secs_f64());
+}

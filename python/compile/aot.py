@@ -1,0 +1,117 @@
+"""AOT lowering: jax -> HLO *text* artifacts + manifest for the Rust runtime.
+
+Interchange format is HLO text, NOT `lowered.compile().serialize()` /
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published `xla` 0.1.6 crate
+binds) rejects (`proto.id() <= INT_MAX`).  The HLO text parser reassigns
+ids, so text round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per (message-size, workload-complexity) shape variant of
+the MiniBatch K-Means step plus a manifest.json the Rust loader consumes.
+Variants mirror the paper's experiment grid:
+  MS (points/message): 8_000, 16_000, 26_000   (~296/592/962 kB messages)
+  WC (centroids):      128, 1_024, 8_192
+plus a small `tiny` variant (256 points, 16 centroids) for tests/quickstart.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The paper's experiment grid (d=8 f32 features: 8000*8*4 B = 256 KiB payload,
+# ~296 kB on the wire with envelope — matches the paper's message sizes).
+DIM = 8
+MESSAGE_POINTS = (8_000, 16_000, 26_000)
+CENTROIDS = (128, 1_024, 8_192)
+TINY = (256, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n: int, c: int, d: int) -> str:
+    fn, args = model.step_fn(n, c, d)
+    return to_hlo_text(fn.lower(*args))
+
+
+def variant_name(n: int, c: int, d: int) -> str:
+    return f"kmeans_n{n}_c{c}_d{d}"
+
+
+def default_variants() -> list[tuple[int, int, int]]:
+    variants = [(n, c, DIM) for n in MESSAGE_POINTS for c in CENTROIDS]
+    variants.append((TINY[0], TINY[1], DIM))
+    return variants
+
+
+def build(out_dir: str, *, force: bool = False, variants=None) -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    if variants is None:
+        variants = default_variants()
+    entries = []
+    for n, c, d in variants:
+        name = variant_name(n, c, d)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        if force or not os.path.exists(path):
+            text = lower_variant(n, c, d)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+        else:
+            print(f"kept  {path}")
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "points": n,
+                "centroids": c,
+                "dim": d,
+                "inputs": [
+                    {"name": "points", "shape": [n, d], "dtype": "f32"},
+                    {"name": "centroids", "shape": [c, d], "dtype": "f32"},
+                    {"name": "counts", "shape": [c], "dtype": "f32"},
+                ],
+                "outputs": [
+                    {"name": "centroids", "shape": [c, d], "dtype": "f32"},
+                    {"name": "counts", "shape": [c], "dtype": "f32"},
+                    {"name": "inertia", "shape": [], "dtype": "f32"},
+                ],
+            }
+        )
+    manifest = {
+        "schema": 1,
+        "model": "minibatch_kmeans_step",
+        "dim": DIM,
+        "variants": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(entries)} variants)")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="re-lower even if artifact exists")
+    args = ap.parse_args()
+    build(args.out_dir, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

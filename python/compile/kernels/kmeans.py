@@ -1,0 +1,106 @@
+"""L1 — Pallas kernel for the streaming K-Means hot spot.
+
+The paper's workload is MiniBatch K-Means (scikit-learn) processing one
+message (a batch of `n` points, d=8 features) per invocation.  Complexity is
+O(n*c): the distance phase between all points and all `c` centroids
+dominates — that phase is this kernel.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper ran on CPUs
+(Lambda containers / KNL nodes), so there is no CUDA to port; we still shape
+the kernel for the MXU: squared Euclidean distance is expressed as
+``|x|^2 - 2 x @ c^T + |c|^2`` so the O(n*c*d) work is one matmul
+contraction, blocked points x centroids for VMEM.  The kernel keeps a
+running (min, argmin) carry over centroid tiles so a block never
+materializes the full n x c distance matrix.
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that runs on any backend
+(including the Rust PJRT client on the request path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  VMEM budget per grid step (f32):
+#   points tile   bp x d          = 1024*8*4   =  32 KiB
+#   centroids     bc x d (tile)   =  512*8*4   =  16 KiB
+#   dist tile     bp x bc         = 1024*512*4 =   2 MiB
+#   carries       2 * bp          =            =   8 KiB
+# ~2.1 MiB << 16 MiB VMEM; the dist tile is the MXU output tile.
+DEFAULT_BLOCK_POINTS = 1024
+DEFAULT_BLOCK_CENTROIDS = 512
+
+
+def _assign_kernel(x_ref, c_ref, idx_ref, dist_ref, *, block_c: int):
+    """One grid step: assign a tile of points to the nearest centroid.
+
+    x_ref:    (bp, d)  tile of points (VMEM)
+    c_ref:    (c, d)   all centroids (VMEM; c*d is small: 8192*8*4 = 256 KiB)
+    idx_ref:  (bp,)    output argmin indices (int32)
+    dist_ref: (bp,)    output min squared distances (f32)
+    """
+    x = x_ref[...]
+    n_c = c_ref.shape[0]
+    n_tiles = pl.cdiv(n_c, block_c)
+    x2 = jnp.sum(x * x, axis=1)
+
+    def body(t, carry):
+        best_d, best_i = carry
+        c_tile = pl.load(c_ref, (pl.dslice(t * block_c, block_c), slice(None)))
+        c2 = jnp.sum(c_tile * c_tile, axis=1)
+        # MXU contraction: (bp, d) @ (d, bc) -> (bp, bc)
+        prod = jax.lax.dot_general(
+            x, c_tile, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        d2 = x2[:, None] - 2.0 * prod + c2[None, :]
+        # mask the ragged tail of the last centroid tile
+        col = t * block_c + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+        d2 = jnp.where(col < n_c, d2, jnp.inf)
+        tile_best = jnp.min(d2, axis=1)
+        tile_idx = jnp.argmin(d2, axis=1).astype(jnp.int32) + t * block_c
+        take = tile_best < best_d
+        return jnp.where(take, tile_best, best_d), jnp.where(take, tile_idx, best_i)
+
+    init = (jnp.full((x.shape[0],), jnp.inf, jnp.float32),
+            jnp.zeros((x.shape[0],), jnp.int32))
+    best_d, best_i = jax.lax.fori_loop(0, n_tiles, body, init)
+    idx_ref[...] = best_i
+    dist_ref[...] = jnp.maximum(best_d, 0.0)  # clamp fp cancellation
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "block_c"))
+def assign(points, centroids, *, block_p: int = DEFAULT_BLOCK_POINTS,
+           block_c: int = DEFAULT_BLOCK_CENTROIDS):
+    """Nearest-centroid assignment via the Pallas kernel.
+
+    points:    f32[n, d]
+    centroids: f32[c, d]
+    returns (idx: i32[n], min_sq_dist: f32[n])
+    """
+    n, d = points.shape
+    c = centroids.shape[0]
+    bp = min(block_p, n)
+    bc = min(block_c, c)
+    grid = (pl.cdiv(n, bp),)
+    kernel = functools.partial(_assign_kernel, block_c=bc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, d), lambda i: (i, 0)),
+            pl.BlockSpec((c, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(points, centroids)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the Pallas K-Means kernels (no Pallas, no tiling).
+
+Used by pytest to validate `kernels.kmeans.assign` and by `model.py` tests
+to validate the full MiniBatch step against a straightforward
+implementation of the scikit-learn MiniBatchKMeans update rule.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def assign_ref(points, centroids):
+    """Brute-force nearest-centroid assignment.
+
+    points:    f32[n, d]
+    centroids: f32[c, d]
+    returns (idx: i32[n], min_sq_dist: f32[n])
+    """
+    d2 = (
+        jnp.sum(points * points, axis=1)[:, None]
+        - 2.0 * points @ centroids.T
+        + jnp.sum(centroids * centroids, axis=1)[None, :]
+    )
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    mind = jnp.maximum(jnp.min(d2, axis=1), 0.0)
+    return idx, mind
+
+
+def minibatch_step_ref(points, centroids, counts):
+    """One MiniBatch K-Means update, sklearn-style (batch formulation).
+
+    For each centroid j with batch members B_j (|B_j| = b_j) and running
+    per-centroid sample count v_j, the batch-folded update is
+
+        v_j' = v_j + b_j
+        c_j' = c_j * (v_j / v_j') + sum(B_j) / v_j'
+
+    points:    f32[n, d]
+    centroids: f32[c, d]
+    counts:    f32[c]     running per-centroid sample counts
+    returns (centroids': f32[c,d], counts': f32[c], inertia: f32[])
+    """
+    c = centroids.shape[0]
+    idx, mind = assign_ref(points, centroids)
+    onehot = jnp.zeros((points.shape[0], c), points.dtype).at[
+        jnp.arange(points.shape[0]), idx
+    ].set(1.0)
+    bcount = jnp.sum(onehot, axis=0)                     # b_j
+    bsum = onehot.T @ points                             # sum(B_j)
+    new_counts = counts + bcount
+    denom = jnp.maximum(new_counts, 1.0)
+    new_centroids = centroids * (counts / denom)[:, None] + bsum / denom[:, None]
+    # centroids that have never seen a sample keep their position
+    seen = new_counts > 0.0
+    new_centroids = jnp.where(seen[:, None], new_centroids, centroids)
+    inertia = jnp.sum(mind)
+    return new_centroids, new_counts, inertia

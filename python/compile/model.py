@@ -1,0 +1,44 @@
+"""L2 — JAX compute graph: one streaming MiniBatch K-Means step.
+
+This is the function that gets AOT-lowered (aot.py) and executed from the
+Rust coordinator via PJRT for every message on the request path.  It calls
+the L1 Pallas assignment kernel for the O(n*c) hot spot and does the O(n*d)
+centroid fold in plain jnp (segment-sum shaped so XLA fuses it).
+
+The update rule matches scikit-learn MiniBatchKMeans (per-centroid counts
+as learning-rate denominators) — see kernels/ref.py for the derivation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kmeans as kmeans_kernels
+
+
+def minibatch_kmeans_step(points, centroids, counts):
+    """points f32[n,d], centroids f32[c,d], counts f32[c]
+    -> (centroids' f32[c,d], counts' f32[c], inertia f32[])"""
+    c = centroids.shape[0]
+    idx, mind = kmeans_kernels.assign(points, centroids)
+    bcount = jax.ops.segment_sum(
+        jnp.ones_like(mind), idx, num_segments=c
+    )
+    bsum = jax.ops.segment_sum(points, idx, num_segments=c)
+    new_counts = counts + bcount
+    denom = jnp.maximum(new_counts, 1.0)
+    new_centroids = centroids * (counts / denom)[:, None] + bsum / denom[:, None]
+    seen = new_counts > 0.0
+    new_centroids = jnp.where(seen[:, None], new_centroids, centroids)
+    inertia = jnp.sum(mind)
+    return new_centroids, new_counts, inertia
+
+
+def step_fn(n: int, c: int, d: int):
+    """Return (jitted_fn, example_args) for a concrete (n, c, d) variant."""
+    args = (
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+        jax.ShapeDtypeStruct((c, d), jnp.float32),
+        jax.ShapeDtypeStruct((c,), jnp.float32),
+    )
+    return jax.jit(minibatch_kmeans_step), args

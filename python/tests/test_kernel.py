@@ -1,0 +1,101 @@
+"""Pallas assignment kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Sweeps shapes (including ragged tails smaller than the block sizes), dtypes,
+block configurations, and degenerate geometries, hypothesis-style via
+seeded random draws.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import kmeans as K
+from compile.kernels import ref
+
+
+def _data(rng, n, c, d, scale=1.0, dtype=np.float32):
+    pts = rng.normal(size=(n, d), scale=scale).astype(dtype)
+    cen = rng.normal(size=(c, d), scale=scale).astype(dtype)
+    return jnp.asarray(pts), jnp.asarray(cen)
+
+
+@pytest.mark.parametrize(
+    "n,c,d",
+    [
+        (8, 4, 2),
+        (64, 16, 8),
+        (100, 7, 3),      # ragged everything
+        (1024, 128, 8),
+        (1025, 129, 8),   # one past the block boundary
+        (2048, 512, 8),
+        (333, 1000, 5),   # more centroids than points
+        (1, 1, 1),        # degenerate
+        (2, 8192, 4),     # huge centroid count, tiny batch
+    ],
+)
+def test_assign_matches_ref(n, c, d):
+    rng = np.random.default_rng(n * 31 + c * 7 + d)
+    pts, cen = _data(rng, n, c, d)
+    idx, dist = K.assign(pts, cen)
+    ridx, rdist = ref.assign_ref(pts, cen)
+    np.testing.assert_allclose(dist, rdist, rtol=1e-4, atol=1e-4)
+    # argmin ties can differ between tiled and flat evaluation; require the
+    # chosen centroid to achieve the minimal distance, not the same index.
+    chosen = jnp.sum((pts - cen[idx]) ** 2, axis=1)
+    np.testing.assert_allclose(chosen, rdist, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_p,block_c", [(8, 4), (16, 16), (128, 32), (1024, 512)])
+def test_assign_block_config_invariance(block_p, block_c):
+    rng = np.random.default_rng(42)
+    pts, cen = _data(rng, 257, 65, 8)
+    idx, dist = K.assign(pts, cen, block_p=block_p, block_c=block_c)
+    ridx, rdist = ref.assign_ref(pts, cen)
+    np.testing.assert_allclose(dist, rdist, rtol=1e-4, atol=1e-4)
+
+
+def test_assign_random_shape_sweep():
+    """Hypothesis-style: 25 seeded random shape/scale draws."""
+    rng = np.random.default_rng(7)
+    for trial in range(25):
+        n = int(rng.integers(1, 300))
+        c = int(rng.integers(1, 200))
+        d = int(rng.integers(1, 16))
+        scale = float(rng.choice([0.01, 1.0, 100.0]))
+        pts, cen = _data(rng, n, c, d, scale=scale)
+        idx, dist = K.assign(pts, cen)
+        ridx, rdist = ref.assign_ref(pts, cen)
+        np.testing.assert_allclose(
+            dist, rdist, rtol=1e-3, atol=1e-3 * scale * scale,
+            err_msg=f"trial={trial} n={n} c={c} d={d} scale={scale}",
+        )
+
+
+def test_assign_identical_points():
+    """All points identical -> all assigned to the same nearest centroid."""
+    pts = jnp.ones((64, 8))
+    rng = np.random.default_rng(0)
+    cen = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    idx, dist = K.assign(pts, cen)
+    assert len(set(np.asarray(idx).tolist())) == 1
+    ridx, _ = ref.assign_ref(pts, cen)
+    assert int(idx[0]) == int(ridx[0])
+
+
+def test_assign_points_on_centroids():
+    """Points exactly at centroid positions -> distance 0, correct index."""
+    rng = np.random.default_rng(3)
+    cen = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    order = rng.permutation(32)
+    pts = cen[order]
+    idx, dist = K.assign(pts, cen)
+    np.testing.assert_allclose(dist, np.zeros(32), atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(idx), order)
+
+
+def test_assign_nonnegative_distances():
+    """The |x|^2-2xc+|c|^2 form can go slightly negative; kernel clamps."""
+    rng = np.random.default_rng(9)
+    pts, cen = _data(rng, 512, 64, 8, scale=1000.0)
+    _, dist = K.assign(pts, cen)
+    assert float(jnp.min(dist)) >= 0.0

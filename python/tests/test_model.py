@@ -1,0 +1,95 @@
+"""L2 model tests: MiniBatch K-Means step — shapes, semantics, convergence."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _blob_data(rng, n, c, d, spread=0.1):
+    """n points drawn around c well-separated blob centers."""
+    centers = rng.normal(size=(c, d), scale=10.0).astype(np.float32)
+    labels = rng.integers(0, c, size=n)
+    pts = centers[labels] + rng.normal(size=(n, d), scale=spread).astype(np.float32)
+    return jnp.asarray(pts), jnp.asarray(centers), labels
+
+
+def test_step_matches_ref():
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.normal(size=(512, 8)).astype(np.float32))
+    cen = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    counts = jnp.zeros(32)
+    got = model.minibatch_kmeans_step(pts, cen, counts)
+    want = ref.minibatch_step_ref(pts, cen, counts)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-4)
+
+
+def test_step_shapes():
+    for n, c, d in [(256, 16, 8), (100, 7, 3)]:
+        pts = jnp.zeros((n, d))
+        cen = jnp.ones((c, d))
+        counts = jnp.zeros(c)
+        nc, ncounts, inertia = model.minibatch_kmeans_step(pts, cen, counts)
+        assert nc.shape == (c, d)
+        assert ncounts.shape == (c,)
+        assert inertia.shape == ()
+
+
+def test_counts_monotone_and_conserved():
+    rng = np.random.default_rng(1)
+    pts = jnp.asarray(rng.normal(size=(300, 8)).astype(np.float32))
+    cen = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    counts = jnp.asarray(rng.integers(0, 50, size=16).astype(np.float32))
+    _, ncounts, _ = model.minibatch_kmeans_step(pts, cen, counts)
+    assert np.all(np.asarray(ncounts) >= np.asarray(counts))
+    np.testing.assert_allclose(float(jnp.sum(ncounts - counts)), 300.0, rtol=1e-6)
+
+
+def test_empty_centroid_unchanged():
+    """A centroid far from every point receives no samples and stays put."""
+    pts = jnp.zeros((64, 4))
+    cen = jnp.asarray(
+        np.vstack([np.zeros((1, 4)), 1e6 * np.ones((1, 4))]).astype(np.float32)
+    )
+    counts = jnp.zeros(2)
+    nc, ncounts, _ = model.minibatch_kmeans_step(pts, cen, counts)
+    np.testing.assert_allclose(np.asarray(nc[1]), 1e6 * np.ones(4))
+    assert float(ncounts[1]) == 0.0
+
+
+def test_inertia_decreases_over_stream():
+    """Streaming repeated batches from fixed blobs: inertia should shrink."""
+    rng = np.random.default_rng(2)
+    pts, centers, _ = _blob_data(rng, 2000, 8, 8)
+    # init centroids at perturbed blob centers
+    cen = centers + jnp.asarray(rng.normal(size=centers.shape, scale=2.0).astype(np.float32))
+    counts = jnp.zeros(8)
+    inertias = []
+    for step in range(10):
+        batch = pts[(step * 200) % 2000 : (step * 200) % 2000 + 200]
+        cen, counts, inertia = model.minibatch_kmeans_step(batch, cen, counts)
+        inertias.append(float(inertia) / 200)
+    assert inertias[-1] < inertias[0]
+
+
+def test_sklearn_equivalence_single_point_batches():
+    """Feeding one point at a time reproduces the classic per-sample rule
+    c' = c + (x - c)/v' exactly."""
+    rng = np.random.default_rng(3)
+    cen = jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))
+    counts = jnp.zeros(4)
+    expect = np.asarray(cen).copy()
+    expect_counts = np.zeros(4)
+    for _ in range(20):
+        x = rng.normal(size=(1, 3)).astype(np.float32)
+        d2 = ((expect - x) ** 2).sum(axis=1)
+        j = int(np.argmin(d2))
+        # run the model step
+        cen, counts, _ = model.minibatch_kmeans_step(jnp.asarray(x), cen, counts)
+        # classic rule
+        expect_counts[j] += 1
+        expect[j] += (x[0] - expect[j]) / expect_counts[j]
+    np.testing.assert_allclose(np.asarray(cen), expect, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts), expect_counts)

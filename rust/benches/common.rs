@@ -1,0 +1,49 @@
+//! Shared bench plumbing (no criterion offline): a small timing harness
+//! for micro benches and a uniform runner for the figure benches.
+
+use std::time::Instant;
+
+/// Time `f` with warmup; returns (ns/op, ops measured).
+pub fn bench_ns<F: FnMut()>(name: &str, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    // scale iterations to ~0.5 s
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((0.5 / once) as u64).clamp(1, 1_000_000);
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let total = t1.elapsed().as_secs_f64();
+    let ns = total / iters as f64 * 1e9;
+    println!("{name:<44} {:>12.1} ns/op   ({iters} iters)", ns);
+    ns
+}
+
+/// Run one figure bench: regenerate, print, and exit nonzero on shape-check
+/// failure so `cargo bench` is a real regression gate.
+pub fn run_figure(result: pilot_streaming::insight::figures::FigureResult, started: Instant) {
+    println!("{}", result.render());
+    println!(
+        "[bench] {} regenerated in {:.1}s",
+        result.id,
+        started.elapsed().as_secs_f64()
+    );
+    if !result.all_pass() {
+        eprintln!("[bench] {}: SHAPE CHECKS FAILED", result.id);
+        std::process::exit(1);
+    }
+}
+
+/// Messages per configuration for figure benches: more than tests (fidelity)
+/// but bounded for CI. Override with PS_BENCH_MESSAGES.
+pub fn bench_messages() -> usize {
+    std::env::var("PS_BENCH_MESSAGES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(96)
+}

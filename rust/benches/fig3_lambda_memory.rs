@@ -1,0 +1,11 @@
+//! Regenerates the paper's Fig 3: Lambda container memory vs K-Means
+//! function runtime (8,000 points, 1,024 centroids).
+//! Run: cargo bench --bench fig3_lambda_memory
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = pilot_streaming::insight::figures::fig3(common::bench_messages(), 42);
+    common::run_figure(r, t0);
+}

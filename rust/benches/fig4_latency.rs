@@ -1,0 +1,11 @@
+//! Regenerates the paper's Fig 4: message processing time L^px by
+//! partitions x message size x workload complexity, Lambda vs Dask.
+//! Run: cargo bench --bench fig4_latency
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = pilot_streaming::insight::figures::fig4(common::bench_messages(), 42);
+    common::run_figure(r, t0);
+}

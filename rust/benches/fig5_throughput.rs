@@ -1,0 +1,11 @@
+//! Regenerates the paper's Fig 5: throughput T^px and speedup for
+//! Kinesis/Lambda vs Kafka/Dask.
+//! Run: cargo bench --bench fig5_throughput
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = pilot_streaming::insight::figures::fig5(common::bench_messages(), 42);
+    common::run_figure(r, t0);
+}

@@ -1,0 +1,11 @@
+//! Regenerates the paper's Fig 6: USL model fits (sigma, kappa, lambda,
+//! R^2) at MS = 16,000 points for both platforms across model sizes.
+//! Run: cargo bench --bench fig6_usl_fit
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = pilot_streaming::insight::figures::fig6(common::bench_messages(), 42);
+    common::run_figure(r, t0);
+}

@@ -1,0 +1,11 @@
+//! Regenerates the paper's Fig 7: prediction RMSE vs number of training
+//! configurations (train/test splits over partition counts).
+//! Run: cargo bench --bench fig7_rmse
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = pilot_streaming::insight::figures::fig7(common::bench_messages(), 42);
+    common::run_figure(r, t0);
+}

@@ -1,0 +1,165 @@
+//! Micro benchmarks over the coordinator's hot paths (EXPERIMENTS.md §Perf):
+//! broker put/fetch, event-source polling, USL fitting, histogram record,
+//! native K-Means, model-store I/O costing, DES event dispatch, and — when
+//! artifacts exist — real PJRT step execution.
+//!
+//! Run: cargo bench --bench micro
+
+#[path = "common.rs"]
+mod common;
+
+use common::bench_ns;
+use pilot_streaming::broker::kinesis::ShardLimits;
+use pilot_streaming::broker::{Broker, KafkaTopic, KinesisStream, Message};
+use pilot_streaming::engine::StepEngine;
+use pilot_streaming::kmeans::minibatch_step;
+use pilot_streaming::metrics::Histogram;
+use pilot_streaming::serverless::EventSourceMapping;
+use pilot_streaming::sim::{Engine as Des, SimClock};
+use pilot_streaming::store::{ModelState, ModelStore, ObjectStore};
+use pilot_streaming::usl::{fit, fit_linearized, Obs, UslParams};
+use pilot_streaming::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn main() {
+    println!("== micro benches (hot paths) ==");
+
+    // --- broker put/fetch ---
+    let clock = Arc::new(SimClock::new());
+    let kafka = KafkaTopic::isolated("bench", 8, clock.clone());
+    let payload: Arc<Vec<f32>> = Arc::new(vec![0.0; 256 * 8]);
+    let mut key = 0u64;
+    bench_ns("kafka.put (256-pt message)", || {
+        key = key.wrapping_add(1);
+        let m = Message::new(1, key, Arc::clone(&payload), 8, 0.0);
+        let _ = kafka.put(m);
+    });
+    clock.advance_to(1e9);
+    let mut offset = 0u64;
+    bench_ns("kafka.fetch (batch of 16)", || {
+        let recs = kafka.fetch(0, offset, 16, 1e9).unwrap();
+        offset = recs.last().map(|r| r.offset + 1).unwrap_or(0);
+        if recs.is_empty() {
+            offset = 0;
+        }
+    });
+
+    let kinesis = KinesisStream::new(
+        "bench",
+        8,
+        ShardLimits {
+            bytes_per_sec: 1e12,
+            records_per_sec: 1e12,
+            put_latency: 0.015,
+        },
+        clock.clone(),
+    );
+    bench_ns("kinesis.put (256-pt message, no throttle)", || {
+        key = key.wrapping_add(1);
+        let m = Message::new(1, key, Arc::clone(&payload), 8, 0.0);
+        let _ = kinesis.put(m);
+    });
+
+    // --- event-source mapping poll+commit ---
+    let esm_topic = Arc::new(KafkaTopic::isolated("esm", 1, clock.clone()));
+    for i in 0..4096u64 {
+        esm_topic
+            .put(Message::new(1, i, Arc::clone(&payload), 8, 0.0))
+            .unwrap();
+    }
+    let esm = EventSourceMapping::new(esm_topic.clone() as Arc<dyn Broker>, 1);
+    bench_ns("esm.poll+commit", || match esm.poll(0, 1e9) {
+        Some(lease) => esm.commit(lease),
+        None => {}
+    });
+
+    // --- USL fitting ---
+    let truth = UslParams::new(0.4, 0.02, 20.0);
+    let obs: Vec<Obs> = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0]
+        .iter()
+        .map(|&n| Obs::new(n, truth.throughput(n)))
+        .collect();
+    bench_ns("usl.fit_linearized (7 obs)", || {
+        let _ = fit_linearized(&obs);
+    });
+    bench_ns("usl.fit_lm (7 obs)", || {
+        let _ = fit(&obs);
+    });
+
+    // --- histogram (values pre-generated so the RNG isn't measured) ---
+    let mut h = Histogram::new();
+    let mut rng = Pcg32::seeded(1);
+    let values: Vec<f64> = (0..1024).map(|_| rng.lognormal(-4.0, 1.0)).collect();
+    let mut vi = 0usize;
+    bench_ns("histogram.record", || {
+        h.record(values[vi & 1023]);
+        vi += 1;
+    });
+    bench_ns("histogram.quantile(0.95)", || {
+        let _ = h.quantile(0.95);
+    });
+
+    // --- rng + data generation (the live producer's hot loop) ---
+    let mut nrng = Pcg32::seeded(9);
+    bench_ns("rng.normal", || {
+        std::hint::black_box(nrng.normal());
+    });
+    let mut generator = pilot_streaming::miniapp::DataGenerator::new(
+        pilot_streaming::miniapp::GeneratorConfig {
+            points_per_message: 8_000,
+            ..Default::default()
+        },
+    );
+    bench_ns("generator.next_message (8000x8)", || {
+        std::hint::black_box(generator.next_message(1, 0.0));
+    });
+
+    // --- native k-means step (the engine baseline) ---
+    let mut rng2 = Pcg32::seeded(2);
+    let pts: Vec<f32> = (0..256 * 8).map(|_| rng2.normal() as f32).collect();
+    let cen: Vec<f32> = (0..16 * 8).map(|_| rng2.normal() as f32).collect();
+    let counts = vec![0.0f32; 16];
+    bench_ns("kmeans.native_step (256x16x8)", || {
+        let _ = minibatch_step(&pts, 8, &cen, &counts);
+    });
+
+    // --- store I/O costing ---
+    let store = ObjectStore::default();
+    let model = ModelState::new_random(1024, 8, 3);
+    store.put("m", model).unwrap();
+    bench_ns("object_store.get (1024x8 model)", || {
+        let _ = store.get("m");
+    });
+
+    // --- DES event dispatch ---
+    bench_ns("des.schedule+run (1k events)", || {
+        let mut des = Des::new();
+        for i in 0..1000 {
+            des.schedule_at(i as f64 * 1e-3, Box::new(|_| {}));
+        }
+        des.run();
+    });
+
+    // --- real PJRT step, when artifacts are present ---
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let man = pilot_streaming::runtime::Manifest::load(&dir).unwrap();
+        let engine = pilot_streaming::runtime::PjrtEngine::new(man, 1);
+        let model = ModelState::new_random(16, 8, 4);
+        let pts: Vec<f32> = (0..256 * 8).map(|_| rng2.normal() as f32).collect();
+        // warmup compiles
+        let _ = engine.execute_step(&pts, 8, &model);
+        bench_ns("pjrt.execute_step (256x16x8 artifact)", || {
+            let _ = engine.execute_step(&pts, 8, &model).unwrap();
+        });
+        let model_big = ModelState::new_random(1024, 8, 5);
+        let pts_big: Vec<f32> = (0..8_000 * 8).map(|_| rng2.normal() as f32).collect();
+        let _ = engine.execute_step(&pts_big, 8, &model_big);
+        bench_ns("pjrt.execute_step (8000x1024x8 artifact)", || {
+            let _ = engine.execute_step(&pts_big, 8, &model_big).unwrap();
+        });
+    } else {
+        println!("(skipping pjrt benches — run `make artifacts`)");
+    }
+    println!("== micro benches done ==");
+}

@@ -1,0 +1,138 @@
+//! Intelligent backoff for the data producer.
+//!
+//! The paper: "To conduct measurements at the maximum sustained throughput,
+//! the framework utilizes an intelligent backoff strategy during data
+//! production."  This is an AIMD (additive-increase, multiplicative-
+//! decrease) controller on the production rate driven by two signals:
+//! broker throttling (Kinesis) and consumer lag (Kafka), converging to the
+//! highest rate the downstream can absorb without backpressure build-up —
+//! the *maximum sustained throughput* T the USL model is fitted against.
+
+/// AIMD rate controller.
+#[derive(Debug, Clone)]
+pub struct BackoffController {
+    /// Current target production rate, messages/second.
+    rate: f64,
+    /// Additive increase per congestion-free control interval.
+    pub increase: f64,
+    /// Multiplicative decrease factor on congestion (0 < f < 1).
+    pub decrease: f64,
+    /// Rate bounds.
+    pub min_rate: f64,
+    pub max_rate: f64,
+    /// Lag (messages) above which we consider the system congested.
+    pub lag_threshold: u64,
+    congestion_events: u64,
+    increases: u64,
+}
+
+impl BackoffController {
+    pub fn new(initial_rate: f64) -> Self {
+        assert!(initial_rate > 0.0);
+        Self {
+            rate: initial_rate,
+            increase: initial_rate * 0.1,
+            decrease: 0.5,
+            min_rate: initial_rate * 0.01,
+            max_rate: initial_rate * 100.0,
+            lag_threshold: 32,
+            congestion_events: 0,
+            increases: 0,
+        }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Inter-message gap at the current rate, seconds.
+    pub fn interval(&self) -> f64 {
+        1.0 / self.rate
+    }
+
+    pub fn congestion_events(&self) -> u64 {
+        self.congestion_events
+    }
+
+    /// Producer was throttled by the broker: back off immediately.
+    pub fn on_throttle(&mut self) {
+        self.rate = (self.rate * self.decrease).max(self.min_rate);
+        self.congestion_events += 1;
+    }
+
+    /// Periodic control-interval tick with the currently observed backlog.
+    pub fn on_lag_sample(&mut self, lag: u64) {
+        if lag > self.lag_threshold {
+            self.rate = (self.rate * self.decrease).max(self.min_rate);
+            self.congestion_events += 1;
+        } else {
+            self.rate = (self.rate + self.increase).min(self.max_rate);
+            self.increases += 1;
+        }
+    }
+
+    /// Has the controller seen enough increase/decrease cycles to be
+    /// considered converged around the sustainable rate?
+    pub fn is_converged(&self) -> bool {
+        self.congestion_events >= 3 && self.increases >= 3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throttle_halves_rate() {
+        let mut b = BackoffController::new(100.0);
+        b.on_throttle();
+        assert!((b.rate() - 50.0).abs() < 1e-9);
+        assert_eq!(b.congestion_events(), 1);
+    }
+
+    #[test]
+    fn rate_floor_and_ceiling() {
+        let mut b = BackoffController::new(100.0);
+        for _ in 0..100 {
+            b.on_throttle();
+        }
+        assert!((b.rate() - b.min_rate).abs() < 1e-9);
+        for _ in 0..10_000 {
+            b.on_lag_sample(0);
+        }
+        assert!((b.rate() - b.max_rate).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lag_above_threshold_decreases() {
+        let mut b = BackoffController::new(100.0);
+        b.on_lag_sample(1000);
+        assert!(b.rate() < 100.0);
+        b.on_lag_sample(0);
+        assert!(b.rate() > 50.0);
+    }
+
+    #[test]
+    fn converges_to_capacity() {
+        // simulate a downstream that can absorb exactly 60 msg/s:
+        // backlog grows by (rate - 60) per control second
+        let mut b = BackoffController::new(100.0);
+        let mut backlog = 0.0f64;
+        for _ in 0..300 {
+            backlog = (backlog + b.rate() - 60.0).max(0.0);
+            b.on_lag_sample(backlog as u64);
+        }
+        assert!(b.is_converged());
+        let r = b.rate();
+        assert!(
+            (30.0..=90.0).contains(&r),
+            "rate {r} should hover near the 60 msg/s capacity"
+        );
+    }
+
+    #[test]
+    fn interval_is_inverse_rate() {
+        let b = BackoffController::new(50.0);
+        assert!((b.interval() - 0.02).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,207 @@
+//! Kafka-like topic: partitioned append-only log whose writes go through a
+//! shared filesystem — the HPC deployment of the paper, where the Kafka
+//! data log lives on Lustre and competes with the processing engine's model
+//! synchronization for the same I/O resource.
+
+use super::message::{Message, StoredRecord};
+use super::shard::Shard;
+use super::{partition_for_key, Broker, BrokerError, PutResult};
+use crate::sim::{ContentionParams, SharedClock, SharedResource};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Kafka broker configuration.
+#[derive(Debug, Clone)]
+pub struct KafkaConfig {
+    /// Base append latency (local commit, in-memory page cache), seconds.
+    pub append_latency: f64,
+    /// Log-flush bytes/second through the backing filesystem.
+    pub fs_bytes_per_sec: f64,
+    /// Records retained per partition (0 = unlimited).
+    pub retention: usize,
+}
+
+impl Default for KafkaConfig {
+    fn default() -> Self {
+        Self {
+            append_latency: 0.002,
+            fs_bytes_per_sec: 500e6, // one Lustre OST stripe ballpark
+            retention: 0,
+        }
+    }
+}
+
+/// The Kafka-like topic.
+pub struct KafkaTopic {
+    name: String,
+    partitions: Vec<Shard>,
+    config: KafkaConfig,
+    clock: SharedClock,
+    /// The shared filesystem the log is flushed to.  On the paper's HPC
+    /// machines this is the same Lustre resource the processing engine uses
+    /// for model sync — sharing this handle is what couples them.
+    shared_fs: Arc<SharedResource>,
+    appends: AtomicU64,
+}
+
+impl KafkaTopic {
+    pub fn new(
+        name: &str,
+        num_partitions: usize,
+        config: KafkaConfig,
+        clock: SharedClock,
+        shared_fs: Arc<SharedResource>,
+    ) -> Self {
+        assert!(num_partitions > 0);
+        Self {
+            name: name.to_string(),
+            partitions: (0..num_partitions)
+                .map(|_| Shard::new(config.retention))
+                .collect(),
+            config,
+            clock,
+            shared_fs,
+            appends: AtomicU64::new(0),
+        }
+    }
+
+    /// Convenience: topic on an isolated (uncontended) filesystem.
+    pub fn isolated(name: &str, num_partitions: usize, clock: SharedClock) -> Self {
+        Self::new(
+            name,
+            num_partitions,
+            KafkaConfig::default(),
+            clock,
+            SharedResource::new("isolated-fs", ContentionParams::ISOLATED),
+        )
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn shared_fs(&self) -> Arc<SharedResource> {
+        Arc::clone(&self.shared_fs)
+    }
+
+    pub fn append_count(&self) -> u64 {
+        self.appends.load(Ordering::Relaxed)
+    }
+
+    /// Append latency for a message of `wire` bytes under current FS load.
+    fn append_cost(&self, wire: f64) -> f64 {
+        let guard = self.shared_fs.enter();
+        let flush = wire / self.config.fs_bytes_per_sec;
+        self.config.append_latency + flush * guard.inflation()
+    }
+}
+
+impl Broker for KafkaTopic {
+    fn kind(&self) -> &'static str {
+        "kafka"
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    fn put(&self, message: Message) -> Result<PutResult, BrokerError> {
+        let partition = partition_for_key(message.key, self.partitions.len());
+        let now = self.clock.now();
+        let cost = self.append_cost(message.wire_bytes() as f64);
+        let produced_at = message.produced_at;
+        let available_at = now + cost;
+        let offset = self.partitions[partition].append(message, available_at);
+        self.appends.fetch_add(1, Ordering::Relaxed);
+        Ok(PutResult {
+            partition,
+            offset,
+            broker_latency: available_at - produced_at,
+        })
+    }
+
+    fn fetch(
+        &self,
+        partition: usize,
+        offset: u64,
+        max: usize,
+        now: f64,
+    ) -> Result<Vec<StoredRecord>, BrokerError> {
+        self.partitions
+            .get(partition)
+            .map(|s| s.fetch(offset, max, now))
+            .ok_or(BrokerError::UnknownPartition(partition))
+    }
+
+    fn latest_offset(&self, partition: usize) -> Result<u64, BrokerError> {
+        self.partitions
+            .get(partition)
+            .map(|s| s.latest_offset())
+            .ok_or(BrokerError::UnknownPartition(partition))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimClock;
+
+    fn msg(key: u64, n: usize, t: f64) -> Message {
+        Message::new(9, key, Arc::new(vec![0.0; n * 8]), 8, t)
+    }
+
+    #[test]
+    fn append_and_fetch() {
+        let clock = Arc::new(SimClock::new());
+        let t = KafkaTopic::isolated("t", 2, clock.clone());
+        clock.advance_to(1.0);
+        let r = t.put(msg(1, 100, 1.0)).unwrap();
+        assert!(r.broker_latency > 0.0);
+        let recs = t.fetch(r.partition, 0, 10, 2.0).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(t.append_count(), 1);
+    }
+
+    #[test]
+    fn never_throttles() {
+        let clock = Arc::new(SimClock::new());
+        let t = KafkaTopic::isolated("t", 1, clock);
+        for i in 0..100 {
+            assert!(t.put(msg(i, 8000, 0.0)).is_ok());
+        }
+    }
+
+    #[test]
+    fn contended_fs_inflates_append_latency() {
+        let clock = Arc::new(SimClock::new());
+        let fs = SharedResource::new("lustre", ContentionParams::new(2.0, 0.1));
+        let mut cfg = KafkaConfig::default();
+        cfg.fs_bytes_per_sec = 1e6; // make flush cost visible
+        let t = KafkaTopic::new("t", 1, cfg, clock.clone(), Arc::clone(&fs));
+        let quiet = t.put(msg(1, 8000, 0.0)).unwrap().broker_latency;
+        // hold the FS busy with 8 concurrent users
+        let guards: Vec<_> = (0..8).map(|_| fs.enter()).collect();
+        let busy = t.put(msg(2, 8000, 0.0)).unwrap().broker_latency;
+        drop(guards);
+        assert!(
+            busy > quiet * 2.0,
+            "expected contention inflation: quiet={quiet} busy={busy}"
+        );
+    }
+
+    #[test]
+    fn retention_applies() {
+        let clock = Arc::new(SimClock::new());
+        let mut cfg = KafkaConfig::default();
+        cfg.retention = 5;
+        let fs = SharedResource::new("fs", ContentionParams::ISOLATED);
+        let t = KafkaTopic::new("t", 1, cfg, clock.clone(), fs);
+        for i in 0..20 {
+            t.put(msg(0, 10, 0.0)).unwrap();
+            let _ = i;
+        }
+        clock.advance_to(10.0);
+        let recs = t.fetch(0, 0, 100, 10.0).unwrap();
+        assert_eq!(recs.len(), 5);
+    }
+}

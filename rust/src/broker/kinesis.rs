@@ -1,0 +1,278 @@
+//! Kinesis-like stream: provisioned shards, per-shard ingest rate limits
+//! with throttling, isolated (no cross-shard contention) — the serverless
+//! broker of the paper's AWS experiments.
+
+use super::message::{Message, StoredRecord};
+use super::shard::Shard;
+use super::{partition_for_key, Broker, BrokerError, PutResult};
+use crate::sim::SharedClock;
+use std::sync::Mutex;
+
+/// Per-shard ingest limits (real Kinesis: 1 MB/s and 1,000 records/s).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardLimits {
+    pub bytes_per_sec: f64,
+    pub records_per_sec: f64,
+    /// Base put latency (propagation + commit), seconds.
+    pub put_latency: f64,
+}
+
+impl Default for ShardLimits {
+    fn default() -> Self {
+        Self {
+            bytes_per_sec: 1_000_000.0,
+            records_per_sec: 1_000.0,
+            put_latency: 0.015, // ~15 ms typical PutRecord p50
+        }
+    }
+}
+
+/// Token bucket over continuous time (works with wall or virtual clocks).
+#[derive(Debug)]
+struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: f64,
+}
+
+impl TokenBucket {
+    fn new(rate: f64, burst: f64) -> Self {
+        Self {
+            rate,
+            burst,
+            tokens: burst,
+            last: 0.0,
+        }
+    }
+
+    /// Try to take `amount` tokens at time `now`. On failure returns the
+    /// time until enough tokens accrue.
+    fn try_take(&mut self, amount: f64, now: f64) -> Result<(), f64> {
+        if now > self.last {
+            self.tokens = (self.tokens + (now - self.last) * self.rate).min(self.burst);
+            self.last = now;
+        }
+        if self.tokens >= amount {
+            self.tokens -= amount;
+            Ok(())
+        } else {
+            Err((amount - self.tokens) / self.rate)
+        }
+    }
+}
+
+struct ShardState {
+    bytes: TokenBucket,
+    records: TokenBucket,
+    throttles: u64,
+    puts: u64,
+}
+
+/// The Kinesis-like stream.
+pub struct KinesisStream {
+    name: String,
+    shards: Vec<Shard>,
+    states: Vec<Mutex<ShardState>>,
+    limits: ShardLimits,
+    clock: SharedClock,
+}
+
+impl KinesisStream {
+    pub fn new(name: &str, num_shards: usize, limits: ShardLimits, clock: SharedClock) -> Self {
+        assert!(num_shards > 0);
+        Self {
+            name: name.to_string(),
+            shards: (0..num_shards).map(|_| Shard::new(0)).collect(),
+            states: (0..num_shards)
+                .map(|_| {
+                    Mutex::new(ShardState {
+                        bytes: TokenBucket::new(limits.bytes_per_sec, limits.bytes_per_sec),
+                        records: TokenBucket::new(
+                            limits.records_per_sec,
+                            limits.records_per_sec,
+                        ),
+                        throttles: 0,
+                        puts: 0,
+                    })
+                })
+                .collect(),
+            limits,
+            clock,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Throttling events observed on a shard (for backoff diagnostics).
+    pub fn throttle_count(&self, shard: usize) -> u64 {
+        self.states[shard].lock().unwrap().throttles
+    }
+
+    pub fn put_count(&self, shard: usize) -> u64 {
+        self.states[shard].lock().unwrap().puts
+    }
+}
+
+impl Broker for KinesisStream {
+    fn kind(&self) -> &'static str {
+        "kinesis"
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn put(&self, message: Message) -> Result<PutResult, BrokerError> {
+        let partition = partition_for_key(message.key, self.shards.len());
+        let now = self.clock.now();
+        let wire = message.wire_bytes() as f64;
+        {
+            let mut st = self.states[partition].lock().unwrap();
+            let need_bytes = st.bytes.try_take(wire, now);
+            let need_recs = st.records.try_take(1.0, now);
+            match (need_bytes, need_recs) {
+                (Ok(()), Ok(())) => {
+                    st.puts += 1;
+                }
+                (b, r) => {
+                    st.throttles += 1;
+                    let retry_after = b.err().unwrap_or(0.0).max(r.err().unwrap_or(0.0));
+                    return Err(BrokerError::Throttled {
+                        shard: partition,
+                        retry_after,
+                    });
+                }
+            }
+        }
+        let produced_at = message.produced_at;
+        let available_at = now + self.limits.put_latency;
+        let offset = self.shards[partition].append(message, available_at);
+        Ok(PutResult {
+            partition,
+            offset,
+            broker_latency: available_at - produced_at,
+        })
+    }
+
+    fn fetch(
+        &self,
+        partition: usize,
+        offset: u64,
+        max: usize,
+        now: f64,
+    ) -> Result<Vec<StoredRecord>, BrokerError> {
+        self.shards
+            .get(partition)
+            .map(|s| s.fetch(offset, max, now))
+            .ok_or(BrokerError::UnknownPartition(partition))
+    }
+
+    fn latest_offset(&self, partition: usize) -> Result<u64, BrokerError> {
+        self.shards
+            .get(partition)
+            .map(|s| s.latest_offset())
+            .ok_or(BrokerError::UnknownPartition(partition))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimClock;
+    use std::sync::Arc;
+
+    fn mk(shards: usize) -> (KinesisStream, Arc<SimClock>) {
+        let clock = Arc::new(SimClock::new());
+        let s = KinesisStream::new(
+            "test",
+            shards,
+            ShardLimits::default(),
+            clock.clone() as SharedClock,
+        );
+        (s, clock)
+    }
+
+    fn msg(key: u64, n: usize, t: f64) -> Message {
+        Message::new(7, key, Arc::new(vec![0.0; n * 8]), 8, t)
+    }
+
+    #[test]
+    fn put_assigns_partition_and_latency() {
+        let (s, clock) = mk(4);
+        clock.advance_to(1.0);
+        let r = s.put(msg(3, 100, 1.0)).unwrap();
+        assert!(r.partition < 4);
+        assert!((r.broker_latency - 0.015).abs() < 1e-9);
+        // not visible before availability
+        assert!(s.fetch(r.partition, 0, 10, 1.0).unwrap().is_empty());
+        assert_eq!(s.fetch(r.partition, 0, 10, 1.02).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn throttles_when_rate_exceeded() {
+        let (s, clock) = mk(1);
+        clock.advance_to(1.0);
+        // 1 MB/s limit with 1 MB burst; 8000-point messages are ~0.3 MB
+        let mut throttled = false;
+        for i in 0..10 {
+            match s.put(msg(i, 8000, 1.0)) {
+                Ok(_) => {}
+                Err(BrokerError::Throttled { retry_after, .. }) => {
+                    assert!(retry_after > 0.0);
+                    throttled = true;
+                    break;
+                }
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert!(throttled, "expected throttling within 10 puts");
+        assert!(s.throttle_count(0) > 0);
+    }
+
+    #[test]
+    fn tokens_refill_over_time() {
+        let (s, clock) = mk(1);
+        clock.advance_to(0.0);
+        while s.put(msg(1, 8000, 0.0)).is_ok() {}
+        // after 2 virtual seconds the bucket refills
+        clock.advance_to(2.0);
+        assert!(s.put(msg(1, 8000, 2.0)).is_ok());
+    }
+
+    #[test]
+    fn per_shard_isolation() {
+        let (s, clock) = mk(8);
+        clock.advance_to(0.0);
+        // saturate messages on one key; other shards stay usable
+        let hot_key = 1u64;
+        let hot = partition_for_key(hot_key, 8);
+        while s.put(msg(hot_key, 8000, 0.0)).is_ok() {}
+        let other_key = (0..100)
+            .find(|&k| partition_for_key(k, 8) != hot)
+            .unwrap();
+        assert!(s.put(msg(other_key, 8000, 0.0)).is_ok());
+    }
+
+    #[test]
+    fn unknown_partition() {
+        let (s, _) = mk(2);
+        assert!(matches!(
+            s.fetch(5, 0, 1, 0.0),
+            Err(BrokerError::UnknownPartition(5))
+        ));
+    }
+
+    #[test]
+    fn total_lag() {
+        let (s, clock) = mk(2);
+        clock.advance_to(0.0);
+        for k in 0..20u64 {
+            let _ = s.put(msg(k, 10, 0.0));
+        }
+        let lag = s.total_lag(&[0, 0]);
+        assert_eq!(lag, s.latest_offset(0).unwrap() + s.latest_offset(1).unwrap());
+    }
+}

@@ -1,0 +1,118 @@
+//! Message model shared by all brokers.
+//!
+//! A message is one unit of streaming work: a batch of `n_points` d-dim f32
+//! points (the K-Means minibatch) plus tracing metadata.  The payload is an
+//! `Arc<Vec<f32>>` so brokers, consumers and the PJRT runtime share one
+//! allocation — no copies on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Unique, process-wide message id.
+pub fn next_message_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One streaming message.
+#[derive(Debug, Clone)]
+pub struct Message {
+    /// Process-unique id.
+    pub id: u64,
+    /// Benchmark run this message belongs to (StreamInsight trace id,
+    /// propagated producer → broker → processing, paper §IV).
+    pub run_id: u64,
+    /// Partitioning key (hashed onto a shard).
+    pub key: u64,
+    /// The points payload, row-major [n_points, dim].
+    pub points: Arc<Vec<f32>>,
+    /// Number of points in the payload.
+    pub n_points: usize,
+    /// Feature dimension.
+    pub dim: usize,
+    /// Producer timestamp (seconds, shared clock).
+    pub produced_at: f64,
+    /// Time the broker made the record available (set by the broker).
+    pub available_at: f64,
+}
+
+impl Message {
+    pub fn new(run_id: u64, key: u64, points: Arc<Vec<f32>>, dim: usize, now: f64) -> Self {
+        assert!(dim > 0 && points.len() % dim == 0, "ragged payload");
+        let n_points = points.len() / dim;
+        Self {
+            id: next_message_id(),
+            run_id,
+            key,
+            points,
+            n_points,
+            dim,
+            produced_at: now,
+            available_at: f64::NAN,
+        }
+    }
+
+    /// Payload size in bytes (f32 data only).
+    pub fn payload_bytes(&self) -> usize {
+        self.points.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Wire size including a fixed envelope (headers, ids, timestamps) —
+    /// this is what broker rate limits account against.  The ~40 B/point
+    /// total for d=8 matches the paper's 296 kB / 8,000-point messages.
+    pub fn wire_bytes(&self) -> usize {
+        self.payload_bytes() + 64 + 5 * self.n_points
+    }
+
+    /// Broker latency L^br: production → availability.
+    pub fn broker_latency(&self) -> f64 {
+        self.available_at - self.produced_at
+    }
+}
+
+/// A record as stored in a shard: message + position.
+#[derive(Debug, Clone)]
+pub struct StoredRecord {
+    pub offset: u64,
+    pub message: Message,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(n: usize, d: usize) -> Message {
+        Message::new(1, 42, Arc::new(vec![0.0; n * d]), d, 10.0)
+    }
+
+    #[test]
+    fn ids_unique_and_increasing() {
+        let a = msg(4, 2);
+        let b = msg(4, 2);
+        assert!(b.id > a.id);
+    }
+
+    #[test]
+    fn sizes() {
+        let m = msg(8000, 8);
+        assert_eq!(m.n_points, 8000);
+        assert_eq!(m.payload_bytes(), 8000 * 8 * 4);
+        // ~296 kB on the wire for the paper's 8,000-point message
+        let kb = m.wire_bytes() as f64 / 1000.0;
+        assert!((kb - 296.0).abs() < 10.0, "wire={kb} kB");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_payload_rejected() {
+        Message::new(1, 0, Arc::new(vec![0.0; 7]), 2, 0.0);
+    }
+
+    #[test]
+    fn broker_latency() {
+        let mut m = msg(4, 2);
+        m.available_at = 10.5;
+        assert!((m.broker_latency() - 0.5).abs() < 1e-12);
+    }
+}

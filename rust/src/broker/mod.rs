@@ -1,0 +1,117 @@
+//! Message-broker substrate: the paper's two brokers, rebuilt.
+//!
+//! - [`kinesis::KinesisStream`] — Kinesis-like: provisioned shards with
+//!   per-shard ingest rate limits and throttling, strong isolation.
+//! - [`kafka::KafkaTopic`] — Kafka-like: partitions whose log writes go
+//!   through a (possibly contended) shared filesystem, as deployed on the
+//!   paper's HPC machines where the Kafka data log lived on Lustre.
+//!
+//! Both implement [`Broker`], so Pilot-Streaming's `PilotDescription` can
+//! specify "number of topic shards" once and run against either — the
+//! paper's interoperability claim.
+
+pub mod backoff;
+pub mod kafka;
+pub mod kinesis;
+pub mod message;
+pub mod shard;
+
+pub use backoff::BackoffController;
+pub use kafka::KafkaTopic;
+pub use kinesis::KinesisStream;
+pub use message::{Message, StoredRecord};
+pub use shard::Shard;
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum BrokerError {
+    /// Per-shard ingest rate exceeded (Kinesis `ProvisionedThroughputExceeded`).
+    #[error("shard {shard} throttled, retry after {retry_after:.3}s")]
+    Throttled { shard: usize, retry_after: f64 },
+    #[error("unknown partition {0}")]
+    UnknownPartition(usize),
+}
+
+/// Result of a successful put.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PutResult {
+    pub partition: usize,
+    pub offset: u64,
+    /// L^br for this record: production → availability.
+    pub broker_latency: f64,
+}
+
+/// Common broker interface (paper: the `Pilot-Description` abstracts
+/// Kinesis and Kafka behind the same "shards" attribute).
+pub trait Broker: Send + Sync {
+    /// Broker kind label for reports ("kinesis" | "kafka").
+    fn kind(&self) -> &'static str;
+
+    /// Number of shards/partitions.
+    fn num_partitions(&self) -> usize;
+
+    /// Put a record; the broker assigns the partition from `message.key`.
+    fn put(&self, message: Message) -> Result<PutResult, BrokerError>;
+
+    /// Fetch up to `max` records from `partition` starting at `offset`,
+    /// visible at time `now`.
+    fn fetch(
+        &self,
+        partition: usize,
+        offset: u64,
+        max: usize,
+        now: f64,
+    ) -> Result<Vec<StoredRecord>, BrokerError>;
+
+    /// End-of-log offset for a partition.
+    fn latest_offset(&self, partition: usize) -> Result<u64, BrokerError>;
+
+    /// Total backlog across partitions given per-partition committed offsets.
+    fn total_lag(&self, committed: &[u64]) -> u64 {
+        (0..self.num_partitions())
+            .map(|p| {
+                let c = committed.get(p).copied().unwrap_or(0);
+                self.latest_offset(p).map(|l| l.saturating_sub(c)).unwrap_or(0)
+            })
+            .sum()
+    }
+}
+
+/// Deterministic key → partition mapping (splitmix hash, uniform).
+pub fn partition_for_key(key: u64, partitions: usize) -> usize {
+    assert!(partitions > 0);
+    let mut z = key.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    ((z ^ (z >> 31)) % partitions as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_mapping_uniform_and_stable() {
+        let p = 8;
+        let mut counts = vec![0usize; p];
+        for key in 0..8000u64 {
+            let a = partition_for_key(key, p);
+            assert_eq!(a, partition_for_key(key, p)); // stable
+            counts[a] += 1;
+        }
+        let expect = 8000 / p;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect as f64).abs() < expect as f64 * 0.25,
+                "partition {i} count {c} far from {expect}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_partitions_panics() {
+        partition_for_key(1, 0);
+    }
+}

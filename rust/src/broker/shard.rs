@@ -1,0 +1,184 @@
+//! A shard/partition: an append-only, offset-addressed in-memory log.
+//! Used as the storage core by both the Kinesis-like stream and the
+//! Kafka-like topic.
+
+use super::message::{Message, StoredRecord};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Append-only log with offset-based fetch and optional retention trimming.
+pub struct Shard {
+    inner: Mutex<ShardInner>,
+}
+
+struct ShardInner {
+    records: VecDeque<StoredRecord>,
+    next_offset: u64,
+    /// Offset of records[0]; records before it were trimmed.
+    base_offset: u64,
+    /// Maximum records retained (0 = unlimited).
+    retention: usize,
+    /// Total bytes currently retained.
+    bytes: usize,
+}
+
+impl Shard {
+    pub fn new(retention: usize) -> Self {
+        Self {
+            inner: Mutex::new(ShardInner {
+                records: VecDeque::new(),
+                next_offset: 0,
+                base_offset: 0,
+                retention,
+                bytes: 0,
+            }),
+        }
+    }
+
+    /// Append a message; returns its offset.
+    pub fn append(&self, mut message: Message, available_at: f64) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let offset = g.next_offset;
+        message.available_at = available_at;
+        g.bytes += message.wire_bytes();
+        g.records.push_back(StoredRecord { offset, message });
+        g.next_offset += 1;
+        if g.retention > 0 {
+            while g.records.len() > g.retention {
+                let dropped = g.records.pop_front().unwrap();
+                g.bytes -= dropped.message.wire_bytes();
+                g.base_offset = dropped.offset + 1;
+            }
+        }
+        offset
+    }
+
+    /// Fetch up to `max` records starting at `offset` (inclusive), but only
+    /// records already *available* at time `now` — in simulated time a
+    /// record appended with a future availability must not be visible yet.
+    pub fn fetch(&self, offset: u64, max: usize, now: f64) -> Vec<StoredRecord> {
+        let g = self.inner.lock().unwrap();
+        if offset >= g.next_offset || max == 0 {
+            return Vec::new();
+        }
+        let start = offset.max(g.base_offset);
+        let idx = (start - g.base_offset) as usize;
+        g.records
+            .iter()
+            .skip(idx)
+            .take_while(|r| r.message.available_at <= now)
+            .take(max)
+            .cloned()
+            .collect()
+    }
+
+    /// Next offset to be assigned (== "latest" end of log).
+    pub fn latest_offset(&self) -> u64 {
+        self.inner.lock().unwrap().next_offset
+    }
+
+    /// Oldest retained offset.
+    pub fn earliest_offset(&self) -> u64 {
+        self.inner.lock().unwrap().base_offset
+    }
+
+    /// Records between a committed offset and the end of the log.
+    pub fn lag(&self, committed: u64) -> u64 {
+        self.latest_offset().saturating_sub(committed)
+    }
+
+    /// Bytes currently retained.
+    pub fn retained_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn msg(key: u64, t: f64) -> Message {
+        Message::new(1, key, Arc::new(vec![0.0; 8]), 2, t)
+    }
+
+    #[test]
+    fn append_fetch_roundtrip() {
+        let s = Shard::new(0);
+        for i in 0..5 {
+            let off = s.append(msg(i, i as f64), i as f64);
+            assert_eq!(off, i);
+        }
+        let got = s.fetch(0, 10, 100.0);
+        assert_eq!(got.len(), 5);
+        assert_eq!(got[0].offset, 0);
+        assert_eq!(got[4].offset, 4);
+        assert_eq!(s.latest_offset(), 5);
+    }
+
+    #[test]
+    fn fetch_respects_availability_time() {
+        let s = Shard::new(0);
+        s.append(msg(0, 0.0), 1.0);
+        s.append(msg(1, 0.0), 5.0); // becomes visible only at t=5
+        assert_eq!(s.fetch(0, 10, 2.0).len(), 1);
+        assert_eq!(s.fetch(0, 10, 5.0).len(), 2);
+    }
+
+    #[test]
+    fn fetch_from_offset_and_max() {
+        let s = Shard::new(0);
+        for i in 0..10 {
+            s.append(msg(i, 0.0), 0.0);
+        }
+        let got = s.fetch(7, 2, 1.0);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].offset, 7);
+        assert!(s.fetch(10, 5, 1.0).is_empty());
+    }
+
+    #[test]
+    fn retention_trims_head() {
+        let s = Shard::new(3);
+        for i in 0..10 {
+            s.append(msg(i, 0.0), 0.0);
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.earliest_offset(), 7);
+        // fetching below the base offset starts at the base
+        let got = s.fetch(0, 10, 1.0);
+        assert_eq!(got[0].offset, 7);
+    }
+
+    #[test]
+    fn lag_counts_uncommitted() {
+        let s = Shard::new(0);
+        for i in 0..6 {
+            s.append(msg(i, 0.0), 0.0);
+        }
+        assert_eq!(s.lag(0), 6);
+        assert_eq!(s.lag(4), 2);
+        assert_eq!(s.lag(6), 0);
+        assert_eq!(s.lag(9), 0); // never negative
+    }
+
+    #[test]
+    fn bytes_tracked() {
+        let s = Shard::new(2);
+        let m = msg(0, 0.0);
+        let per = m.wire_bytes();
+        s.append(m, 0.0);
+        s.append(msg(1, 0.0), 0.0);
+        assert_eq!(s.retained_bytes(), 2 * per);
+        s.append(msg(2, 0.0), 0.0); // trims one
+        assert_eq!(s.retained_bytes(), 2 * per);
+    }
+}

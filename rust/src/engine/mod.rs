@@ -1,0 +1,175 @@
+//! Compute engines: how a processing task executes one MiniBatch K-Means
+//! step.  The platform models (serverless Lambda fleet, HPC Dask pool) are
+//! generic over [`StepEngine`] so the same coordination code runs with:
+//!
+//! - [`runtime::PjrtEngine`](crate::runtime) — **live**: the real AOT
+//!   artifact executed via PJRT (Python never on this path),
+//! - [`kmeans::NativeEngine`](crate::kmeans) — pure-Rust baseline (ablation
+//!   and engine-independence tests),
+//! - [`CalibratedEngine`] — **sim**: no numerics, CPU cost drawn from a
+//!   distribution calibrated against live PJRT runs (large sweeps).
+
+use crate::sim::Dist;
+use crate::store::ModelState;
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Result of one processing step.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    /// Updated model (same version; stores assign versions on put).
+    pub model: ModelState,
+    /// Sum of squared distances of the batch to its assigned centroids.
+    pub inertia: f64,
+    /// CPU cost of the step at reference speed (1.0 CPU factor), seconds.
+    /// Live engines measure this; the calibrated engine samples it.
+    pub cpu_seconds: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("no artifact variant for n_points={n_points}, centroids={centroids}")]
+    NoVariant { n_points: usize, centroids: usize },
+    #[error("payload shape mismatch: {0}")]
+    ShapeMismatch(String),
+    #[error("execution failed: {0}")]
+    ExecutionFailed(String),
+}
+
+/// Executes one MiniBatch K-Means step for a batch of points.
+pub trait StepEngine: Send + Sync {
+    /// Engine kind label ("pjrt" | "native" | "calibrated").
+    fn kind(&self) -> &'static str;
+
+    /// Run one step: assign `points` ([n, dim] row-major) to `model`'s
+    /// centroids and fold them into the model.
+    fn execute_step(
+        &self,
+        points: &[f32],
+        dim: usize,
+        model: &ModelState,
+    ) -> Result<StepResult, EngineError>;
+}
+
+/// Key for calibration tables: (points-per-message, centroids).
+pub type WorkloadKey = (usize, usize);
+
+/// Simulation engine: draws CPU cost from per-workload calibrated
+/// distributions and bumps the model version without computing numerics.
+pub struct CalibratedEngine {
+    table: HashMap<WorkloadKey, Dist>,
+    /// Fallback cost model used when a key is missing: seconds per
+    /// point-centroid pair (the O(n*c) coefficient) + fixed overhead.
+    pub per_pair_seconds: f64,
+    pub fixed_seconds: f64,
+    rng: Mutex<Pcg32>,
+}
+
+impl CalibratedEngine {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            table: HashMap::new(),
+            // defaults calibrated against the PJRT CPU engine on this
+            // machine (see runtime::calibrate and EXPERIMENTS.md §Perf)
+            per_pair_seconds: 2.0e-9,
+            fixed_seconds: 1.5e-3,
+            rng: Mutex::new(Pcg32::seeded(seed)),
+        }
+    }
+
+    /// Register a calibrated service-time distribution for a workload.
+    pub fn insert(&mut self, key: WorkloadKey, dist: Dist) {
+        self.table.insert(key, dist);
+    }
+
+    pub fn calibrated_keys(&self) -> Vec<WorkloadKey> {
+        let mut ks: Vec<_> = self.table.keys().copied().collect();
+        ks.sort_unstable();
+        ks
+    }
+
+    fn cost(&self, n_points: usize, centroids: usize) -> f64 {
+        let mut rng = self.rng.lock().unwrap();
+        if let Some(d) = self.table.get(&(n_points, centroids)) {
+            return d.sample(&mut rng).max(0.0);
+        }
+        // analytic O(n*c) fallback with mild lognormal jitter
+        let base = self.fixed_seconds + self.per_pair_seconds * (n_points * centroids) as f64;
+        base * rng.lognormal(0.0, 0.05)
+    }
+}
+
+impl StepEngine for CalibratedEngine {
+    fn kind(&self) -> &'static str {
+        "calibrated"
+    }
+
+    fn execute_step(
+        &self,
+        points: &[f32],
+        dim: usize,
+        model: &ModelState,
+    ) -> Result<StepResult, EngineError> {
+        if dim == 0 || points.len() % dim != 0 {
+            return Err(EngineError::ShapeMismatch(format!(
+                "len {} not divisible by dim {dim}",
+                points.len()
+            )));
+        }
+        let n_points = points.len() / dim;
+        let cpu = self.cost(n_points, model.num_centroids());
+        Ok(StepResult {
+            model: model.clone(),
+            inertia: f64::NAN, // no numerics in simulation
+            cpu_seconds: cpu,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_uses_table() {
+        let mut e = CalibratedEngine::new(1);
+        e.insert((100, 16), Dist::Const(0.25));
+        let m = ModelState::new_random(16, 8, 1);
+        let r = e.execute_step(&vec![0.0; 800], 8, &m).unwrap();
+        assert_eq!(r.cpu_seconds, 0.25);
+        assert_eq!(e.calibrated_keys(), vec![(100, 16)]);
+    }
+
+    #[test]
+    fn calibrated_fallback_scales_with_work() {
+        let e = CalibratedEngine::new(2);
+        let m_small = ModelState::new_random(128, 8, 1);
+        let m_big = ModelState::new_random(8192, 8, 1);
+        let pts = vec![0.0; 8000 * 8];
+        let small = e.execute_step(&pts, 8, &m_small).unwrap().cpu_seconds;
+        let big = e.execute_step(&pts, 8, &m_big).unwrap().cpu_seconds;
+        assert!(big > small * 10.0, "small={small} big={big}");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let e = CalibratedEngine::new(3);
+        let m = ModelState::new_random(4, 4, 1);
+        assert!(e.execute_step(&vec![0.0; 7], 4, &m).is_err());
+        assert!(e.execute_step(&vec![0.0; 4], 0, &m).is_err());
+    }
+
+    #[test]
+    fn deterministic_with_same_seed() {
+        let run = |seed| {
+            let e = CalibratedEngine::new(seed);
+            let m = ModelState::new_random(16, 8, 1);
+            (0..10)
+                .map(|_| e.execute_step(&vec![0.0; 80], 8, &m).unwrap().cpu_seconds)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

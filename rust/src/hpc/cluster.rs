@@ -1,0 +1,159 @@
+//! Slurm-like batch allocation: queue wait + node startup, the path
+//! Pilot-Streaming's HPC plugin goes through to stand up Kafka/Dask.
+//! (Startup overheads are excluded from the paper's steady-state analysis,
+//! but the pilot lifecycle needs them to exist.)
+
+use super::node::Machine;
+use crate::sim::Dist;
+use crate::util::rng::Pcg32;
+use std::sync::Mutex;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AllocError {
+    #[error("requested {requested} nodes exceeds machine capacity {capacity}")]
+    TooLarge { requested: usize, capacity: usize },
+    #[error("allocation {0} not found")]
+    NotFound(u64),
+}
+
+/// A granted allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub id: u64,
+    pub nodes: usize,
+    /// Simulated seconds spent waiting in the batch queue.
+    pub queue_wait: f64,
+    /// Simulated seconds for node boot + framework startup.
+    pub startup: f64,
+}
+
+/// The batch scheduler front-end for one machine.
+pub struct Cluster {
+    machine: Machine,
+    queue_wait: Dist,
+    startup_per_node: Dist,
+    state: Mutex<ClusterState>,
+}
+
+struct ClusterState {
+    rng: Pcg32,
+    next_id: u64,
+    allocated_nodes: usize,
+    active: Vec<Allocation>,
+}
+
+impl Cluster {
+    pub fn new(machine: Machine, seed: u64) -> Self {
+        Self {
+            machine,
+            // minutes-scale queue waits, right-skewed
+            queue_wait: Dist::LogNormal {
+                mu: 3.0,
+                sigma: 1.0,
+            },
+            startup_per_node: Dist::Normal {
+                mean: 8.0,
+                std: 2.0,
+                min: 2.0,
+            },
+            state: Mutex::new(ClusterState {
+                rng: Pcg32::seeded(seed),
+                next_id: 1,
+                allocated_nodes: 0,
+                active: Vec::new(),
+            }),
+        }
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    pub fn allocated_nodes(&self) -> usize {
+        self.state.lock().unwrap().allocated_nodes
+    }
+
+    /// Request `nodes` nodes.
+    pub fn allocate(&self, nodes: usize) -> Result<Allocation, AllocError> {
+        let mut st = self.state.lock().unwrap();
+        let free = self.machine.max_nodes - st.allocated_nodes;
+        if nodes > free {
+            return Err(AllocError::TooLarge {
+                requested: nodes,
+                capacity: free,
+            });
+        }
+        let queue_wait = self.queue_wait.sample(&mut st.rng);
+        let startup = self.startup_per_node.sample(&mut st.rng)
+            + 0.5 * nodes as f64; // mild per-node fan-out cost
+        let id = st.next_id;
+        st.next_id += 1;
+        st.allocated_nodes += nodes;
+        let alloc = Allocation {
+            id,
+            nodes,
+            queue_wait,
+            startup,
+        };
+        st.active.push(alloc.clone());
+        Ok(alloc)
+    }
+
+    /// Release an allocation.
+    pub fn release(&self, id: u64) -> Result<(), AllocError> {
+        let mut st = self.state.lock().unwrap();
+        let idx = st
+            .active
+            .iter()
+            .position(|a| a.id == id)
+            .ok_or(AllocError::NotFound(id))?;
+        let a = st.active.remove(idx);
+        st.allocated_nodes -= a.nodes;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> Cluster {
+        Cluster::new(Machine::wrangler(8), 7)
+    }
+
+    #[test]
+    fn allocate_and_release() {
+        let c = cluster();
+        let a = c.allocate(4).unwrap();
+        assert!(a.queue_wait > 0.0 && a.startup > 0.0);
+        assert_eq!(c.allocated_nodes(), 4);
+        c.release(a.id).unwrap();
+        assert_eq!(c.allocated_nodes(), 0);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let c = cluster();
+        c.allocate(6).unwrap();
+        assert_eq!(
+            c.allocate(4),
+            Err(AllocError::TooLarge {
+                requested: 4,
+                capacity: 2
+            })
+        );
+    }
+
+    #[test]
+    fn release_unknown() {
+        let c = cluster();
+        assert_eq!(c.release(99), Err(AllocError::NotFound(99)));
+    }
+
+    #[test]
+    fn allocations_deterministic_by_seed() {
+        let a = Cluster::new(Machine::wrangler(8), 3).allocate(2).unwrap();
+        let b = Cluster::new(Machine::wrangler(8), 3).allocate(2).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,12 @@
+//! HPC platform substrate: XSEDE-like machines (Wrangler, Stampede2 KNL),
+//! Slurm-like batch allocation, and the Dask-like worker pool whose model
+//! synchronization rides the shared Lustre filesystem — the paper's HPC
+//! deployment.  See DESIGN.md §Substitutions.
+
+pub mod cluster;
+pub mod dask;
+pub mod node;
+
+pub use cluster::{AllocError, Allocation, Cluster};
+pub use dask::{DaskError, DaskPool, TaskReport};
+pub use node::{Machine, NodeSpec};

@@ -1,0 +1,116 @@
+//! HPC node and machine models — the paper's XSEDE testbeds.
+
+/// Specification of one compute node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub name: &'static str,
+    pub cores: usize,
+    pub mem_gb: f64,
+    /// Per-core speed relative to the reference core the engines are
+    /// calibrated on.  KNL cores are individually slow.
+    pub core_speed: f64,
+}
+
+impl NodeSpec {
+    /// TACC Wrangler: 48 cores, 128 GB (paper §IV-B).
+    pub fn wrangler() -> Self {
+        Self {
+            name: "wrangler",
+            cores: 48,
+            mem_gb: 128.0,
+            core_speed: 1.0,
+        }
+    }
+
+    /// TACC Stampede2 Knights Landing: 68 cores, 96 GB (paper §IV-B).
+    pub fn stampede2_knl() -> Self {
+        Self {
+            name: "stampede2-knl",
+            cores: 68,
+            mem_gb: 96.0,
+            core_speed: 0.55, // KNL single-thread is roughly half a Xeon
+        }
+    }
+
+    /// AWS m5.4xlarge (the paper's data-generator node): 16 cores, 64 GB.
+    pub fn m5_4xlarge() -> Self {
+        Self {
+            name: "m5.4xlarge",
+            cores: 16,
+            mem_gb: 64.0,
+            core_speed: 1.0,
+        }
+    }
+
+    /// Memory per core at a given worker density.
+    pub fn mem_per_worker_gb(&self, workers_per_node: usize) -> f64 {
+        assert!(workers_per_node > 0);
+        self.mem_gb / workers_per_node as f64
+    }
+}
+
+/// A named machine: node type + count + the core/node ratio the paper
+/// tuned ("on both Wrangler and Stampede2, we use 12 cores/node", giving
+/// 11 GB/core on Wrangler and 8 GB/core on Stampede2).
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub node: NodeSpec,
+    pub max_nodes: usize,
+    pub workers_per_node: usize,
+}
+
+impl Machine {
+    pub fn wrangler(max_nodes: usize) -> Self {
+        Self {
+            node: NodeSpec::wrangler(),
+            max_nodes,
+            workers_per_node: 12,
+        }
+    }
+
+    pub fn stampede2(max_nodes: usize) -> Self {
+        Self {
+            node: NodeSpec::stampede2_knl(),
+            max_nodes,
+            workers_per_node: 12,
+        }
+    }
+
+    /// Nodes required for `workers` workers.
+    pub fn nodes_for(&self, workers: usize) -> usize {
+        workers.div_ceil(self.workers_per_node).max(1)
+    }
+
+    pub fn max_workers(&self) -> usize {
+        self.max_nodes * self.workers_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_memory_ratios() {
+        // "11 GB per core on Wrangler and 8 GB per core on Stampede2"
+        let w = Machine::wrangler(4);
+        let s = Machine::stampede2(4);
+        assert!((w.node.mem_per_worker_gb(12) - 10.67).abs() < 0.5);
+        assert!((s.node.mem_per_worker_gb(12) - 8.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn nodes_for_workers() {
+        let m = Machine::wrangler(10);
+        assert_eq!(m.nodes_for(1), 1);
+        assert_eq!(m.nodes_for(12), 1);
+        assert_eq!(m.nodes_for(13), 2);
+        assert_eq!(m.nodes_for(48), 4);
+        assert_eq!(m.max_workers(), 120);
+    }
+
+    #[test]
+    fn knl_slower_than_xeon() {
+        assert!(NodeSpec::stampede2_knl().core_speed < NodeSpec::wrangler().core_speed);
+    }
+}

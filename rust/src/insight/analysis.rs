@@ -1,0 +1,149 @@
+//! Analysis: fit USL per sweep group and build the Fig 6-style report
+//! (σ, κ, λ, R², peak N per scenario).
+
+use super::sweep::{group_keys, group_observations, SweepRow};
+use crate::miniapp::PlatformKind;
+use crate::usl::{fit, UslFit};
+use crate::util::json::Json;
+
+/// One analyzed scenario group.
+#[derive(Debug, Clone)]
+pub struct AnalysisRow {
+    pub platform: PlatformKind,
+    pub message_size: usize,
+    pub centroids: usize,
+    pub memory_mb: u32,
+    pub fit: UslFit,
+    pub observations: usize,
+}
+
+impl AnalysisRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("platform", Json::from(self.platform.label())),
+            ("message_size", Json::from(self.message_size)),
+            ("centroids", Json::from(self.centroids)),
+            ("memory_mb", Json::from(self.memory_mb as usize)),
+            ("sigma", Json::from(self.fit.params.sigma)),
+            ("kappa", Json::from(self.fit.params.kappa)),
+            ("lambda", Json::from(self.fit.params.lambda)),
+            ("r2", Json::from(self.fit.r2)),
+            ("rmse", Json::from(self.fit.rmse)),
+            (
+                "peak_n",
+                self.fit
+                    .params
+                    .peak_n()
+                    .map(Json::from)
+                    .unwrap_or(Json::Null),
+            ),
+            ("regime", Json::from(self.fit.params.regime())),
+        ])
+    }
+}
+
+/// Fit USL for every group in the sweep.
+pub fn analyze(rows: &[SweepRow]) -> Vec<AnalysisRow> {
+    let mut out = Vec::new();
+    for key in group_keys(rows) {
+        let obs = group_observations(rows, key);
+        match fit(&obs) {
+            Ok(f) => out.push(AnalysisRow {
+                platform: key.0,
+                message_size: key.1,
+                centroids: key.2,
+                memory_mb: key.3,
+                fit: f,
+                observations: obs.len(),
+            }),
+            Err(e) => log::warn!("USL fit failed for {key:?}: {e}"),
+        }
+    }
+    out
+}
+
+/// Render the analysis as a fixed-width text table (Fig 6's numbers).
+pub fn table(rows: &[AnalysisRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<22} {:>7} {:>6} {:>8} {:>8} {:>9} {:>6} {:>7}  {}\n",
+        "platform", "MS", "WC", "sigma", "kappa", "lambda", "R2", "peakN", "regime"
+    ));
+    s.push_str(&"-".repeat(100));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!(
+            "{:<22} {:>7} {:>6} {:>8.4} {:>8.5} {:>9.2} {:>6.3} {:>7}  {}\n",
+            r.platform.label(),
+            r.message_size,
+            r.centroids,
+            r.fit.params.sigma,
+            r.fit.params.kappa,
+            r.fit.params.lambda,
+            r.fit.r2,
+            r.fit
+                .params
+                .peak_n()
+                .map(|n| format!("{n:.1}"))
+                .unwrap_or_else(|| "-".into()),
+            r.fit.params.regime()
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::usl::UslParams;
+
+    fn synth_rows(platform: PlatformKind, params: UslParams) -> Vec<SweepRow> {
+        [1, 2, 4, 8, 16]
+            .iter()
+            .map(|&p| SweepRow {
+                platform,
+                partitions: p,
+                message_size: 16_000,
+                centroids: 1_024,
+                memory_mb: 3_008,
+                throughput: params.throughput(p as f64),
+                service_mean: 0.1,
+                service_p95: 0.12,
+                service_cv: 0.05,
+                warm_mean: 0.1,
+                warm_cv: 0.04,
+                broker_mean: 0.01,
+                messages: 64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn analyze_recovers_generating_params() {
+        let truth = UslParams::new(0.6, 0.03, 9.0);
+        let rows = synth_rows(PlatformKind::DaskWrangler, truth);
+        let analysis = analyze(&rows);
+        assert_eq!(analysis.len(), 1);
+        let f = &analysis[0].fit;
+        assert!((f.params.sigma - 0.6).abs() < 0.05, "{:?}", f.params);
+        assert!((f.params.kappa - 0.03).abs() < 0.01, "{:?}", f.params);
+        assert!(f.r2 > 0.999);
+    }
+
+    #[test]
+    fn table_renders() {
+        let rows = synth_rows(PlatformKind::Lambda, UslParams::new(0.01, 0.0001, 5.0));
+        let analysis = analyze(&rows);
+        let t = table(&analysis);
+        assert!(t.contains("kinesis/lambda"));
+        assert!(t.contains("sigma"));
+    }
+
+    #[test]
+    fn json_export() {
+        let rows = synth_rows(PlatformKind::Lambda, UslParams::new(0.1, 0.001, 5.0));
+        let j = analyze(&rows)[0].to_json();
+        assert!(j.get("sigma").as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("platform").as_str(), Some("kinesis/lambda"));
+    }
+}

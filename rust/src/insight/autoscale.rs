@@ -1,0 +1,207 @@
+//! Predictive autoscaling — the paper's future-work feature, built on the
+//! USL predictor: "integrate StreamInsight into the resource management
+//! algorithm of Pilot-Streaming so as to support predictive scaling, viz.,
+//! the ability to adapt the resource allocations ... to changes in the
+//! incoming data rate(s). This will also enable the determination of the
+//! amount of throttling of data sources to guarantee processing."
+
+use super::predict::Predictor;
+use crate::util::stats::Ewma;
+
+/// Autoscaler decision for one control interval.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScaleDecision {
+    /// Keep the current parallelism.
+    Hold { parallelism: usize },
+    /// Change parallelism.
+    Scale { from: usize, to: usize },
+    /// Even the optimal deployment cannot absorb the rate: throttle the
+    /// source to `max_rate` while running at `parallelism`.
+    Throttle { parallelism: usize, max_rate: f64 },
+}
+
+/// Configuration of the predictive autoscaler.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Capacity headroom kept above the observed rate.
+    pub headroom: f64,
+    /// EWMA smoothing for the observed rate.
+    pub alpha: f64,
+    /// Hysteresis: don't scale unless the target differs by this factor
+    /// in required capacity (prevents flapping).
+    pub hysteresis: f64,
+    /// Hard parallelism cap (shards available / budget).
+    pub max_parallelism: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            headroom: 1.25,
+            alpha: 0.3,
+            hysteresis: 1.15,
+            max_parallelism: 64,
+        }
+    }
+}
+
+/// The predictive autoscaler: feeds observed ingest rates into an EWMA,
+/// consults the USL predictor, and recommends scale/hold/throttle.
+pub struct Autoscaler {
+    predictor: Predictor,
+    config: AutoscaleConfig,
+    rate: Ewma,
+    current: usize,
+    decisions: u64,
+    scale_events: u64,
+}
+
+impl Autoscaler {
+    pub fn new(predictor: Predictor, config: AutoscaleConfig, initial_parallelism: usize) -> Self {
+        let alpha = config.alpha;
+        Self {
+            predictor,
+            config,
+            rate: Ewma::new(alpha),
+            current: initial_parallelism.max(1),
+            decisions: 0,
+            scale_events: 0,
+        }
+    }
+
+    pub fn current_parallelism(&self) -> usize {
+        self.current
+    }
+
+    pub fn scale_events(&self) -> u64 {
+        self.scale_events
+    }
+
+    /// Feed one control-interval observation of the incoming rate (msg/s)
+    /// and get a decision.
+    pub fn observe(&mut self, incoming_rate: f64) -> ScaleDecision {
+        self.decisions += 1;
+        let smoothed = self.rate.observe(incoming_rate.max(0.0));
+        let target =
+            self.predictor
+                .required_parallelism(smoothed, self.config.headroom, self.config.max_parallelism);
+        match target {
+            None => {
+                // cap at the optimum and throttle the source
+                let best = self.predictor.optimal_parallelism(self.config.max_parallelism);
+                if best != self.current {
+                    self.scale_events += 1;
+                    self.current = best;
+                }
+                ScaleDecision::Throttle {
+                    parallelism: best,
+                    max_rate: self.predictor.sustainable_rate(best, self.config.headroom),
+                }
+            }
+            Some(n) if n == self.current => ScaleDecision::Hold {
+                parallelism: self.current,
+            },
+            Some(n) => {
+                // hysteresis: require a meaningful capacity delta
+                let cur_cap = self.predictor.throughput(self.current);
+                let new_cap = self.predictor.throughput(n);
+                let ratio = if new_cap > cur_cap {
+                    new_cap / cur_cap.max(1e-12)
+                } else {
+                    cur_cap / new_cap.max(1e-12)
+                };
+                if ratio < self.config.hysteresis {
+                    return ScaleDecision::Hold {
+                        parallelism: self.current,
+                    };
+                }
+                let from = self.current;
+                self.current = n;
+                self.scale_events += 1;
+                ScaleDecision::Scale { from, to: n }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::usl::UslParams;
+
+    fn autoscaler(sigma: f64, kappa: f64, lambda: f64, start: usize) -> Autoscaler {
+        Autoscaler::new(
+            Predictor {
+                params: UslParams::new(sigma, kappa, lambda),
+            },
+            AutoscaleConfig::default(),
+            start,
+        )
+    }
+
+    #[test]
+    fn scales_up_on_rate_increase() {
+        let mut a = autoscaler(0.02, 0.0001, 10.0, 1);
+        // rate well above 1-partition capacity (λ=10)
+        let mut scaled = false;
+        for _ in 0..10 {
+            if let ScaleDecision::Scale { from, to } = a.observe(50.0) {
+                assert!(to > from);
+                scaled = true;
+            }
+        }
+        assert!(scaled);
+        assert!(a.current_parallelism() >= 6);
+    }
+
+    #[test]
+    fn scales_down_when_rate_drops() {
+        let mut a = autoscaler(0.02, 0.0001, 10.0, 32);
+        for _ in 0..20 {
+            a.observe(5.0);
+        }
+        assert!(a.current_parallelism() <= 2);
+    }
+
+    #[test]
+    fn holds_within_hysteresis() {
+        let mut a = autoscaler(0.02, 0.0001, 10.0, 4);
+        // capacity at 4 ≈ 37.7; rate needing exactly ~4 partitions
+        let mut holds = 0;
+        for _ in 0..20 {
+            if matches!(a.observe(28.0), ScaleDecision::Hold { .. }) {
+                holds += 1;
+            }
+        }
+        assert!(holds >= 18, "holds={holds}");
+        assert_eq!(a.current_parallelism(), 4);
+    }
+
+    #[test]
+    fn throttles_unreachable_rates() {
+        // heavily retrograde platform: peak near N=1
+        let mut a = autoscaler(0.9, 0.1, 5.0, 2);
+        let d = (0..10).map(|_| a.observe(500.0)).last().unwrap();
+        match d {
+            ScaleDecision::Throttle {
+                parallelism,
+                max_rate,
+            } => {
+                assert!(parallelism >= 1);
+                assert!(max_rate < 500.0);
+            }
+            other => panic!("expected throttle, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ewma_smooths_spikes() {
+        let mut a = autoscaler(0.02, 0.0001, 10.0, 2);
+        a.observe(15.0);
+        // a single spike shouldn't jump straight to the spike's demand
+        let d = a.observe(500.0);
+        if let ScaleDecision::Scale { to, .. } = d {
+            assert!(to < 40, "single spike over-reacted: {to}");
+        }
+    }
+}

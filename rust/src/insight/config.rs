@@ -1,0 +1,177 @@
+//! Config-file-driven experiments: load an [`ExperimentSpec`] from a
+//! TOML(-subset) file, so characterization campaigns are declarative —
+//! `pilot-streaming sweep --config experiments/paper.toml`.
+//!
+//! ```toml
+//! name = "paper-grid"
+//! platforms = ["lambda", "dask"]
+//! partitions = [1, 2, 4, 8, 16]
+//! message_sizes = [8000, 16000, 26000]
+//! centroids = [128, 1024, 8192]
+//! messages = 64
+//! seed = 42
+//!
+//! [lustre]
+//! alpha = 0.9
+//! beta = 0.05
+//! ```
+
+use super::experiment::ExperimentSpec;
+use crate::miniapp::PlatformKind;
+use crate::sim::ContentionParams;
+use crate::util::json::Json;
+use crate::util::tomlmini;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("cannot read {0}: {1}")]
+    Io(String, std::io::Error),
+    #[error("toml parse: {0}")]
+    Toml(#[from] tomlmini::TomlError),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+fn usize_list(v: &Json, key: &str) -> Result<Option<Vec<usize>>, ConfigError> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        Json::Arr(items) => items
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .ok_or_else(|| ConfigError::Invalid(format!("{key}: non-integer entry")))
+            })
+            .collect::<Result<Vec<_>, _>>()
+            .map(Some),
+        _ => Err(ConfigError::Invalid(format!("{key}: expected an array"))),
+    }
+}
+
+/// Parse an ExperimentSpec from TOML text. Unspecified fields keep the
+/// paper-grid defaults.
+pub fn spec_from_toml(text: &str) -> Result<ExperimentSpec, ConfigError> {
+    let v = tomlmini::parse(text)?;
+    let mut spec = ExperimentSpec::paper_grid(64, 42);
+    if let Some(name) = v.get("name").as_str() {
+        spec.name = name.to_string();
+    }
+    if let Json::Arr(platforms) = v.get("platforms") {
+        let mut parsed = Vec::new();
+        for p in platforms {
+            let s = p
+                .as_str()
+                .ok_or_else(|| ConfigError::Invalid("platforms: expected strings".into()))?;
+            parsed.push(
+                PlatformKind::parse(s)
+                    .ok_or_else(|| ConfigError::Invalid(format!("unknown platform {s:?}")))?,
+            );
+        }
+        if parsed.is_empty() {
+            return Err(ConfigError::Invalid("platforms: empty".into()));
+        }
+        spec.platforms = parsed;
+    }
+    if let Some(xs) = usize_list(&v, "partitions")? {
+        spec.partitions = xs;
+    }
+    if let Some(xs) = usize_list(&v, "message_sizes")? {
+        spec.message_sizes = xs;
+    }
+    if let Some(xs) = usize_list(&v, "centroids")? {
+        spec.centroids = xs;
+    }
+    if let Some(xs) = usize_list(&v, "memory_mb")? {
+        spec.memory_mb = xs.into_iter().map(|x| x as u32).collect();
+    }
+    if let Some(m) = v.get("messages").as_usize() {
+        spec.messages = m;
+    }
+    if let Some(s) = v.get("seed").as_i64() {
+        spec.seed = s as u64;
+    }
+    let lustre = v.get("lustre");
+    if lustre.as_obj().is_some() {
+        let alpha = lustre.get("alpha").as_f64().unwrap_or(0.9);
+        let beta = lustre.get("beta").as_f64().unwrap_or(0.05);
+        if alpha < 0.0 || beta < 0.0 {
+            return Err(ConfigError::Invalid("lustre: negative coefficient".into()));
+        }
+        spec.lustre = ContentionParams::new(alpha, beta);
+    }
+    if spec.partitions.is_empty() || spec.messages == 0 {
+        return Err(ConfigError::Invalid(
+            "partitions and messages must be non-empty/non-zero".into(),
+        ));
+    }
+    Ok(spec)
+}
+
+/// Load a spec from a TOML file.
+pub fn spec_from_file(path: &str) -> Result<ExperimentSpec, ConfigError> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| ConfigError::Io(path.to_string(), e))?;
+    spec_from_toml(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_parses() {
+        let spec = spec_from_toml(
+            r#"
+name = "custom"
+platforms = ["lambda", "stampede2"]
+partitions = [1, 2, 4]
+message_sizes = [8_000]
+centroids = [128, 1024]
+messages = 32
+seed = 7
+
+[lustre]
+alpha = 1.2
+beta = 0.1
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.name, "custom");
+        assert_eq!(
+            spec.platforms,
+            vec![PlatformKind::Lambda, PlatformKind::DaskStampede2]
+        );
+        assert_eq!(spec.partitions, vec![1, 2, 4]);
+        assert_eq!(spec.centroids, vec![128, 1024]);
+        assert_eq!(spec.messages, 32);
+        assert_eq!(spec.seed, 7);
+        assert!((spec.lustre.alpha - 1.2).abs() < 1e-12);
+        assert_eq!(spec.size(), 2 * 3 * 1 * 2);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let spec = spec_from_toml("messages = 16\n").unwrap();
+        assert_eq!(spec.messages, 16);
+        assert_eq!(spec.platforms.len(), 2); // paper grid default
+        assert_eq!(spec.message_sizes, vec![8_000, 16_000, 26_000]);
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        assert!(spec_from_toml("platforms = [\"flink\"]\n").is_err());
+        assert!(spec_from_toml("partitions = [\"x\"]\n").is_err());
+        assert!(spec_from_toml("partitions = []\n").is_err());
+        assert!(spec_from_toml("[lustre]\nalpha = -1\n").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ps-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exp.toml");
+        std::fs::write(&p, "name = \"from-file\"\nmessages = 8\n").unwrap();
+        let spec = spec_from_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(spec.name, "from-file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,162 @@
+//! Experiment specification: the full factorial parameter space of a
+//! characterization campaign (paper: "the combinatorial space of parameters
+//! is ample, and thus, a careful selection of the most significant factors
+//! to investigate is critical").
+
+use crate::miniapp::{PlatformKind, Scenario};
+use crate::sim::ContentionParams;
+use crate::util::json::Json;
+
+/// A sweep specification, expanded into concrete [`Scenario`]s.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub name: String,
+    pub platforms: Vec<PlatformKind>,
+    /// N^px(p) values to sweep.
+    pub partitions: Vec<usize>,
+    /// MS axis (points per message).
+    pub message_sizes: Vec<usize>,
+    /// WC axis (centroids).
+    pub centroids: Vec<usize>,
+    /// Lambda memory sizes (Fig 3 axis; single value for other figures).
+    pub memory_mb: Vec<u32>,
+    /// Messages per configuration.
+    pub messages: usize,
+    pub seed: u64,
+    /// Lustre contention for the Dask platforms.
+    pub lustre: ContentionParams,
+}
+
+impl ExperimentSpec {
+    /// The paper's main grid (Figs 4-6): both platforms, partitions 1..16,
+    /// all three message sizes, three model sizes.
+    pub fn paper_grid(messages: usize, seed: u64) -> Self {
+        Self {
+            name: "paper-grid".into(),
+            platforms: vec![PlatformKind::Lambda, PlatformKind::DaskWrangler],
+            partitions: vec![1, 2, 4, 8, 16],
+            message_sizes: vec![8_000, 16_000, 26_000],
+            centroids: vec![128, 1_024, 8_192],
+            memory_mb: vec![3_008],
+            messages,
+            seed,
+            lustre: ContentionParams::new(
+                crate::pilot::plugins::hpc::DEFAULT_LUSTRE_ALPHA,
+                crate::pilot::plugins::hpc::DEFAULT_LUSTRE_BETA,
+            ),
+        }
+    }
+
+    /// Fig 3's memory sweep: Lambda, 8,000 points, 1,024 centroids.
+    pub fn lambda_memory_sweep(messages: usize, seed: u64) -> Self {
+        Self {
+            name: "lambda-memory".into(),
+            platforms: vec![PlatformKind::Lambda],
+            partitions: vec![8],
+            message_sizes: vec![8_000],
+            centroids: vec![1_024],
+            memory_mb: vec![256, 512, 1_024, 1_792, 2_240, 3_008],
+            messages,
+            seed,
+            lustre: ContentionParams::ISOLATED,
+        }
+    }
+
+    /// Number of concrete scenarios this spec expands to.
+    pub fn size(&self) -> usize {
+        self.platforms.len()
+            * self.partitions.len()
+            * self.message_sizes.len()
+            * self.centroids.len()
+            * self.memory_mb.len()
+    }
+
+    /// Expand to concrete scenarios (deterministic order).
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.size());
+        for &platform in &self.platforms {
+            for &ms in &self.message_sizes {
+                for &wc in &self.centroids {
+                    for &mem in &self.memory_mb {
+                        for &p in &self.partitions {
+                            out.push(Scenario {
+                                platform,
+                                partitions: p,
+                                points_per_message: ms,
+                                centroids: wc,
+                                memory_mb: mem,
+                                messages: self.messages,
+                                lustre: self.lustre,
+                                seed: self.seed,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            (
+                "platforms",
+                Json::Arr(
+                    self.platforms
+                        .iter()
+                        .map(|p| Json::from(p.label()))
+                        .collect(),
+                ),
+            ),
+            (
+                "partitions",
+                Json::from(self.partitions.clone()),
+            ),
+            ("message_sizes", Json::from(self.message_sizes.clone())),
+            ("centroids", Json::from(self.centroids.clone())),
+            ("messages", Json::from(self.messages)),
+            ("size", Json::from(self.size())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_dimensions() {
+        let spec = ExperimentSpec::paper_grid(32, 1);
+        // 2 platforms x 5 partitions x 3 MS x 3 WC x 1 memory = 90
+        assert_eq!(spec.size(), 90);
+        assert_eq!(spec.scenarios().len(), 90);
+    }
+
+    #[test]
+    fn memory_sweep_dimensions() {
+        let spec = ExperimentSpec::lambda_memory_sweep(32, 1);
+        assert_eq!(spec.size(), 6);
+        for s in spec.scenarios() {
+            assert_eq!(s.points_per_message, 8_000);
+            assert_eq!(s.centroids, 1_024);
+        }
+    }
+
+    #[test]
+    fn scenarios_deterministic() {
+        let a = ExperimentSpec::paper_grid(8, 3).scenarios();
+        let b = ExperimentSpec::paper_grid(8, 3).scenarios();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.partitions, y.partitions);
+            assert_eq!(x.platform, y.platform);
+        }
+    }
+
+    #[test]
+    fn json_export() {
+        let j = ExperimentSpec::paper_grid(8, 3).to_json();
+        assert_eq!(j.get("size").as_usize(), Some(90));
+    }
+}

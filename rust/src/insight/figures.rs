@@ -1,0 +1,489 @@
+//! Figure regeneration: one function per table/figure of the paper's
+//! evaluation (DESIGN.md experiment index).  Shared by the CLI
+//! (`pilot-streaming fig3` …) and the bench harness
+//! (`cargo bench --bench fig3_lambda_memory` …).
+//!
+//! Each function returns a [`FigureResult`]: a printable table plus the
+//! qualitative *shape checks* the paper's claims imply.  Benches print the
+//! table and assert the checks — reproducing who wins, by roughly what
+//! factor, and where crossovers fall (not the authors' absolute numbers;
+//! our substrate is a simulator calibrated to this machine's PJRT).
+
+use super::analysis::{analyze, AnalysisRow};
+use super::experiment::ExperimentSpec;
+use super::sweep::{group_observations, run_sweep};
+use crate::engine::{CalibratedEngine, StepEngine};
+use crate::miniapp::{PlatformKind, Scenario};
+use crate::runtime::calibrate::{calibrated_engine, load_or_fallback, CalibrationRow};
+use crate::usl::{rmse_vs_train_size, Obs};
+use crate::util::stats::mean;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// Output of one figure regeneration.
+#[derive(Debug, Clone)]
+pub struct FigureResult {
+    pub id: &'static str,
+    pub title: &'static str,
+    /// Fixed-width table, ready to print.
+    pub table: String,
+    /// Shape checks: (claim, holds).
+    pub checks: Vec<(String, bool)>,
+}
+
+impl FigureResult {
+    pub fn all_pass(&self) -> bool {
+        self.checks.iter().all(|(_, ok)| *ok)
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!("== {} — {} ==\n{}\n", self.id, self.title, self.table);
+        for (claim, ok) in &self.checks {
+            let _ = writeln!(s, "  [{}] {}", if *ok { "PASS" } else { "FAIL" }, claim);
+        }
+        s
+    }
+}
+
+/// Calibration rows for figure runs: artifacts/calibration.json if present,
+/// else the built-in fallback.
+pub fn default_calibration() -> Vec<CalibrationRow> {
+    let path = crate::runtime::Manifest::default_dir().join("calibration.json");
+    load_or_fallback(&path)
+}
+
+/// Engine factory used by all figure sweeps.
+pub fn engine_factory(rows: Vec<CalibrationRow>) -> impl Fn(&Scenario) -> Arc<dyn StepEngine> {
+    move |sc: &Scenario| {
+        // derive a per-config seed so configs don't share RNG streams
+        let seed = sc.seed ^ (sc.partitions as u64)
+            | ((sc.centroids as u64) << 20)
+            | ((sc.points_per_message as u64) << 40)
+            ^ ((sc.memory_mb as u64) << 8);
+        let eng: CalibratedEngine = calibrated_engine(&rows, seed);
+        Arc::new(eng)
+    }
+}
+
+// ---------------------------------------------------------------- Fig 3
+
+/// Fig 3: Lambda container memory vs function runtime (8,000 points,
+/// 1,024 centroids).
+pub fn fig3(messages: usize, seed: u64) -> FigureResult {
+    let spec = ExperimentSpec::lambda_memory_sweep(messages, seed);
+    let rows = run_sweep(&spec, engine_factory(default_calibration()));
+    // warm-path stats: the paper's Fig 3 box plots show steady-state
+    // function runtimes; one-off cold starts are provisioning, not runtime
+    let mut table = String::from("memory_mb  runtime_mean_s  runtime_cv\n");
+    for r in &rows {
+        let _ = writeln!(
+            table,
+            "{:>9}  {:>14.3}  {:>10.3}",
+            r.memory_mb, r.warm_mean, r.warm_cv
+        );
+    }
+    let first = rows.first();
+    let last = rows.last();
+    let (lo, hi) = match (first, last) {
+        (Some(a), Some(b)) => (a.clone(), b.clone()),
+        _ => {
+            return FigureResult {
+                id: "fig3",
+                title: "Lambda container memory vs runtime",
+                table,
+                checks: vec![("sweep produced data".into(), false)],
+            }
+        }
+    };
+    let monotone = rows.windows(2).all(|w| w[1].warm_mean <= w[0].warm_mean * 1.10);
+    FigureResult {
+        id: "fig3",
+        title: "Lambda container memory vs runtime (8k pts, 1024 centroids)",
+        table,
+        checks: vec![
+            (
+                format!(
+                    "larger memory → shorter runtime ({}MB {:.2}s vs {}MB {:.2}s)",
+                    lo.memory_mb, lo.warm_mean, hi.memory_mb, hi.warm_mean
+                ),
+                lo.warm_mean > hi.warm_mean * 1.5,
+            ),
+            (
+                format!(
+                    "fluctuation shrinks with memory (warm cv {:.3} → {:.3})",
+                    lo.warm_cv, hi.warm_cv
+                ),
+                lo.warm_cv > hi.warm_cv,
+            ),
+            ("runtime non-increasing across the sweep".into(), monotone),
+        ],
+    }
+}
+
+// ---------------------------------------------------------------- Fig 4
+
+/// Fig 4: message processing time L^px by partitions x MS x WC,
+/// Lambda vs Dask.
+pub fn fig4(messages: usize, seed: u64) -> FigureResult {
+    let spec = ExperimentSpec::paper_grid(messages, seed);
+    let rows = run_sweep(&spec, engine_factory(default_calibration()));
+    let mut table =
+        String::from("platform               MS      WC      P  service_mean_s\n");
+    for r in &rows {
+        let _ = writeln!(
+            table,
+            "{:<22} {:>6} {:>6} {:>6}  {:>13.3}",
+            r.platform.label(),
+            r.message_size,
+            r.centroids,
+            r.partitions,
+            r.service_mean
+        );
+    }
+    let svc = |pf: PlatformKind, p: usize| {
+        mean(
+            &rows
+                .iter()
+                .filter(|r| r.platform == pf && r.partitions == p)
+                .map(|r| r.service_mean)
+                .collect::<Vec<_>>(),
+        )
+    };
+    let lam1 = svc(PlatformKind::Lambda, 1);
+    let lam16 = svc(PlatformKind::Lambda, 16);
+    let dask1 = svc(PlatformKind::DaskWrangler, 1);
+    let dask16 = svc(PlatformKind::DaskWrangler, 16);
+    // processing time grows with MS and WC on both platforms; compare at
+    // P=1 where neither contention nor cold-start amortization mixes in
+    let grows = |pf: PlatformKind| {
+        let at_p1 = |ms: usize, wc: usize| {
+            mean(
+                &rows
+                    .iter()
+                    .filter(|r| {
+                        r.platform == pf
+                            && r.partitions == 1
+                            && r.message_size == ms
+                            && r.centroids == wc
+                    })
+                    .map(|r| r.service_mean)
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let small = at_p1(8_000, 128);
+        let big = at_p1(26_000, 8_192);
+        big > small * 5.0
+    };
+    FigureResult {
+        id: "fig4",
+        title: "Message processing time L^px (Lambda vs Dask)",
+        table,
+        checks: vec![
+            (
+                format!(
+                    "Lambda stays flat with parallelism ({:.2}s @P1 vs {:.2}s @P16)",
+                    lam1, lam16
+                ),
+                lam16 < lam1 * 1.35,
+            ),
+            (
+                format!(
+                    "Dask degrades with parallelism ({:.2}s @P1 vs {:.2}s @P16)",
+                    dask1, dask16
+                ),
+                dask16 > dask1 * 2.0,
+            ),
+            (
+                "processing time grows with points and centroids (both platforms)".into(),
+                grows(PlatformKind::Lambda) && grows(PlatformKind::DaskWrangler),
+            ),
+        ],
+    }
+}
+
+// ---------------------------------------------------------------- Fig 5
+
+/// Fig 5: throughput T^px and speedup.
+pub fn fig5(messages: usize, seed: u64) -> FigureResult {
+    let spec = ExperimentSpec::paper_grid(messages, seed);
+    let rows = run_sweep(&spec, engine_factory(default_calibration()));
+    let mut table = String::from(
+        "platform               MS      WC      P  T^px_msg_s   speedup\n",
+    );
+    let mut checks: Vec<(String, bool)> = Vec::new();
+    for key in super::sweep::group_keys(&rows) {
+        let obs = group_observations(&rows, key);
+        let t1 = obs.first().map(|o| o.t).unwrap_or(1.0);
+        for o in &obs {
+            let _ = writeln!(
+                table,
+                "{:<22} {:>6} {:>6} {:>6}  {:>10.3} {:>9.2}",
+                key.0.label(),
+                key.1,
+                key.2,
+                o.n as usize,
+                o.t,
+                o.t / t1
+            );
+        }
+    }
+    // Lambda throughput increases with partitions (all groups)
+    let lambda_ok = super::sweep::group_keys(&rows)
+        .into_iter()
+        .filter(|k| k.0 == PlatformKind::Lambda)
+        .all(|k| {
+            let obs = group_observations(&rows, k);
+            obs.last().unwrap().t > obs.first().unwrap().t * 3.0
+        });
+    checks.push((
+        "Lambda: throughput grows with partitions (>3x at P16 vs P1)".into(),
+        lambda_ok,
+    ));
+    // Dask: compute-heavy (8192) shows a small early speedup; overall
+    // degradation for larger P
+    let dask_heavy = group_observations(
+        &rows,
+        (PlatformKind::DaskWrangler, 16_000, 8_192, 3_008),
+    );
+    if !dask_heavy.is_empty() {
+        let t1 = dask_heavy[0].t;
+        let early_peak = dask_heavy
+            .iter()
+            .filter(|o| o.n <= 4.0)
+            .map(|o| o.t / t1)
+            .fold(0.0f64, f64::max);
+        checks.push((
+            format!(
+                "Dask compute-heavy: early speedup up to {:.2}x by P<=4 (paper ~1.2x, small)",
+                early_peak
+            ),
+            early_peak > 1.05 && early_peak < 2.5,
+        ));
+        // compute-heavy: gains must flatten out — speedup at P=16 no better
+        // than ~10% above P=8 (paper: degradation for larger N^px(p))
+        let at = |n: f64| dask_heavy.iter().find(|o| o.n == n).map(|o| o.t);
+        if let (Some(t8), Some(t16)) = (at(8.0), at(16.0)) {
+            checks.push((
+                format!(
+                    "Dask compute-heavy gains exhausted by P8-16 (T8 {:.2}, T16 {:.2})",
+                    t8, t16
+                ),
+                t16 <= t8 * 1.10,
+            ));
+        }
+        // light groups retrograde strictly by P=16
+        for wc in [128usize, 1_024] {
+            let obs = group_observations(
+                &rows,
+                (PlatformKind::DaskWrangler, 16_000, wc, 3_008),
+            );
+            if obs.is_empty() {
+                continue;
+            }
+            let peak = obs.iter().map(|o| o.t).fold(0.0f64, f64::max);
+            let last = obs.last().unwrap().t;
+            checks.push((
+                format!("Dask WC={wc} throughput degrades past its peak ({last:.2} < {peak:.2})"),
+                last < peak,
+            ));
+        }
+    }
+    // Lambda vs Dask absolute: HPC wins at P=1 for compute-heavy workloads
+    let lam_heavy =
+        group_observations(&rows, (PlatformKind::Lambda, 16_000, 8_192, 3_008));
+    if let (Some(d1), Some(l1)) = (dask_heavy.first(), lam_heavy.first()) {
+        checks.push((
+            format!(
+                "HPC better absolute performance at P=1 (dask {:.2} vs lambda {:.2} msg/s)",
+                d1.t, l1.t
+            ),
+            d1.t > l1.t * 0.8, // wrangler cores ≈ reference speed, lambda ≤ 1.68 cpu
+        ));
+    }
+    FigureResult {
+        id: "fig5",
+        title: "Throughput T^px and speedup (Lambda vs Dask)",
+        table,
+        checks,
+    }
+}
+
+// ---------------------------------------------------------------- Fig 6
+
+/// Fig 6: USL fit per scenario at MS = 16,000 points.
+pub fn fig6(messages: usize, seed: u64) -> FigureResult {
+    let mut spec = ExperimentSpec::paper_grid(messages, seed);
+    spec.message_sizes = vec![16_000]; // the figure's fixed MS
+    // stay within the 30-container Lambda cap (the paper's Fig 6 x-range)
+    spec.partitions = vec![1, 2, 4, 8, 16];
+    let rows = run_sweep(&spec, engine_factory(default_calibration()));
+    let analysis = analyze(&rows);
+    let table = super::analysis::table(&analysis);
+    let lambda_rows: Vec<&AnalysisRow> = analysis
+        .iter()
+        .filter(|a| a.platform == PlatformKind::Lambda)
+        .collect();
+    let dask_rows: Vec<&AnalysisRow> = analysis
+        .iter()
+        .filter(|a| a.platform == PlatformKind::DaskWrangler)
+        .collect();
+    let lam_sigma = mean(&lambda_rows.iter().map(|a| a.fit.params.sigma).collect::<Vec<_>>());
+    let lam_kappa = mean(&lambda_rows.iter().map(|a| a.fit.params.kappa).collect::<Vec<_>>());
+    let dask_sigma = mean(&dask_rows.iter().map(|a| a.fit.params.sigma).collect::<Vec<_>>());
+    let dask_kappa = mean(&dask_rows.iter().map(|a| a.fit.params.kappa).collect::<Vec<_>>());
+    let r2_ok = analysis.iter().all(|a| a.fit.r2 > 0.85);
+    // Paper: "In many cases the peak performance is already reached using a
+    // single partition"; only "for the more compute-intensive scenarios,
+    // i.e. in particular larger model sizes such as 8,192 clusters, a small
+    // speedup ... until 4 partitions" — light groups must peak early, the
+    // compute-heavy group may peak later but with a bounded, small gain.
+    let dask_peak_small = dask_rows.iter().all(|a| {
+        let Some(peak) = a.fit.params.peak_n() else {
+            return false;
+        };
+        if a.centroids <= 128 {
+            peak <= 5.0
+        } else {
+            let max_speedup = a.fit.params.speedup(peak.max(1.0));
+            peak <= 12.0 && max_speedup < 2.5
+        }
+    });
+    FigureResult {
+        id: "fig6",
+        title: "USL model fit (MS=16k): sigma/kappa per platform x WC",
+        table,
+        checks: vec![
+            (
+                format!(
+                    "Lambda near-optimal scalability: sigma {:.3} (<0.1), kappa {:.5} (≈0)",
+                    lam_sigma, lam_kappa
+                ),
+                lam_sigma < 0.1 && lam_kappa < 0.002,
+            ),
+            (
+                format!(
+                    "Dask contention-dominated: sigma {:.2} in [0.4, 1.0], kappa {:.4} > 0",
+                    dask_sigma, dask_kappa
+                ),
+                (0.4..=1.0).contains(&dask_sigma) && dask_kappa > 0.001,
+            ),
+            (
+                "Dask peaks early: <=5 partitions for light WC; compute-heavy WC only a small bounded speedup".into(),
+                dask_peak_small,
+            ),
+            (
+                format!("training R^2 in the paper's 0.85-0.98 band (all groups)"),
+                r2_ok,
+            ),
+        ],
+    }
+}
+
+// ---------------------------------------------------------------- Fig 7
+
+/// Fig 7: prediction RMSE vs number of training configurations.
+pub fn fig7(messages: usize, seed: u64) -> FigureResult {
+    let mut spec = ExperimentSpec::paper_grid(messages, seed);
+    spec.message_sizes = vec![16_000];
+    spec.centroids = vec![128, 8_192];
+    // the paper's x-range (its figures stop at 12-16 partitions); beyond
+    // ~24 the 30-container Lambda cap introduces a kink USL cannot model
+    spec.partitions = vec![1, 2, 3, 4, 6, 8, 10, 12, 16];
+    // steady-state windows: at P=16 each shard must still amortize its
+    // one-off cold start, or the tail configurations bias the fit
+    spec.messages = spec.messages.max(12 * 16);
+    let rows = run_sweep(&spec, engine_factory(default_calibration()));
+    let mut table = String::from(
+        "platform               WC     train_configs  rmse_norm\n",
+    );
+    let mut checks: Vec<(String, bool)> = Vec::new();
+    let train_sizes = [3usize, 4, 5, 6, 8];
+    let mut lambda_norm = Vec::new();
+    let mut dask_norm = Vec::new();
+    for key in super::sweep::group_keys(&rows) {
+        let obs: Vec<Obs> = group_observations(&rows, key);
+        let Ok(points) = rmse_vs_train_size(&obs, &train_sizes, 30, seed) else {
+            continue;
+        };
+        let mean_t = mean(&obs.iter().map(|o| o.t).collect::<Vec<_>>()).max(1e-12);
+        for p in &points {
+            let norm = p.rmse_mean / mean_t;
+            let _ = writeln!(
+                table,
+                "{:<22} {:>6} {:>13} {:>10.4}",
+                key.0.label(),
+                key.2,
+                p.train_size,
+                norm
+            );
+            if key.0 == PlatformKind::Lambda {
+                lambda_norm.push(norm);
+            } else {
+                dask_norm.push(norm);
+            }
+        }
+    }
+    let lam = mean(&lambda_norm);
+    let dask = mean(&dask_norm);
+    checks.push((
+        format!(
+            "Lambda/Kinesis more predictable than Dask/Kafka (norm RMSE {:.3} vs {:.3})",
+            lam, dask
+        ),
+        lam < dask,
+    ));
+    checks.push((
+        format!("small training sets suffice (3-config norm RMSE {:.3} < 0.35)", {
+            let threes: Vec<f64> = lambda_norm.iter().step_by(train_sizes.len()).copied().collect();
+            mean(&threes)
+        }),
+        {
+            let threes: Vec<f64> = lambda_norm.iter().step_by(train_sizes.len()).copied().collect();
+            mean(&threes) < 0.35
+        },
+    ));
+    FigureResult {
+        id: "fig7",
+        title: "RMSE vs number of training configurations",
+        table,
+        checks,
+    }
+}
+
+// ---------------------------------------------------------------- Table I
+
+/// Table I: the variable glossary (rendered from `vars`).
+pub fn table1() -> FigureResult {
+    FigureResult {
+        id: "table1",
+        title: "Model variables",
+        table: super::vars::render(),
+        checks: vec![("13 variables documented".into(), super::vars::TABLE_I.len() == 13)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The figure functions are exercised end-to-end by the bench targets
+    // (cargo bench) with larger message counts; these tests use tiny runs
+    // to keep `cargo test` fast while verifying the plumbing end to end.
+
+    #[test]
+    fn fig3_shape_holds_on_small_run() {
+        let r = fig3(24, 11);
+        assert!(r.all_pass(), "\n{}", r.render());
+    }
+
+    #[test]
+    fn fig6_shape_holds_on_small_run() {
+        let r = fig6(24, 13);
+        assert!(r.all_pass(), "\n{}", r.render());
+    }
+
+    #[test]
+    fn table1_renders() {
+        assert!(table1().all_pass());
+    }
+}

@@ -1,0 +1,23 @@
+//! StreamInsight (paper §IV): end-to-end performance experimentation —
+//! experiment design ([`experiment`]), automated sweeps ([`sweep`]), USL
+//! analysis ([`analysis`]), prediction ([`predict`]), predictive
+//! autoscaling ([`autoscale`]), and the Table I variable glossary
+//! ([`vars`]).
+
+pub mod analysis;
+pub mod autoscale_sim;
+pub mod config;
+pub mod autoscale;
+pub mod experiment;
+pub mod figures;
+pub mod predict;
+pub mod sweep;
+pub mod vars;
+
+pub use analysis::{analyze, table, AnalysisRow};
+pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
+pub use autoscale_sim::{replay, trace_burst, trace_diurnal, AutoscaleReport};
+pub use config::{spec_from_file, spec_from_toml};
+pub use experiment::ExperimentSpec;
+pub use predict::Predictor;
+pub use sweep::{group_keys, group_observations, run_sweep, to_csv, SweepRow};

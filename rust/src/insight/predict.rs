@@ -1,0 +1,97 @@
+//! Prediction & configuration recommendation on top of a USL fit
+//! (paper: "Due to the small amount of data, it can easily be used to
+//! identify optimal configurations for production systems").
+
+use crate::usl::{UslFit, UslParams};
+
+/// A performance predictor for one scenario group.
+#[derive(Debug, Clone)]
+pub struct Predictor {
+    pub params: UslParams,
+}
+
+impl Predictor {
+    pub fn from_fit(fit: &UslFit) -> Self {
+        Self { params: fit.params }
+    }
+
+    /// Predicted throughput at parallelism `n`.
+    pub fn throughput(&self, n: usize) -> f64 {
+        self.params.throughput(n.max(1) as f64)
+    }
+
+    /// The parallelism maximizing throughput, clamped to `max_n`.
+    pub fn optimal_parallelism(&self, max_n: usize) -> usize {
+        match self.params.peak_n() {
+            Some(peak) => (peak.round() as usize).clamp(1, max_n),
+            None => max_n, // monotone: more is (weakly) better
+        }
+    }
+
+    /// Minimal parallelism sustaining `target_rate` msg/s with a headroom
+    /// factor (>1).  `None` if even the peak cannot sustain it — the caller
+    /// must throttle the source instead (paper's future-work knob).
+    pub fn required_parallelism(
+        &self,
+        target_rate: f64,
+        headroom: f64,
+        max_n: usize,
+    ) -> Option<usize> {
+        let need = target_rate * headroom.max(1.0);
+        for n in 1..=max_n {
+            if self.throughput(n) >= need {
+                return Some(n);
+            }
+        }
+        None
+    }
+
+    /// Max ingest rate a deployment of `n` can sustain (for throttling).
+    pub fn sustainable_rate(&self, n: usize, headroom: f64) -> f64 {
+        self.throughput(n) / headroom.max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn predictor(sigma: f64, kappa: f64, lambda: f64) -> Predictor {
+        Predictor {
+            params: UslParams::new(sigma, kappa, lambda),
+        }
+    }
+
+    #[test]
+    fn optimal_for_linear_is_max() {
+        let p = predictor(0.01, 0.0, 10.0);
+        assert_eq!(p.optimal_parallelism(32), 32);
+    }
+
+    #[test]
+    fn optimal_for_retrograde_is_peak() {
+        let p = predictor(0.1, 0.01, 10.0); // peak ≈ 9.5
+        let n = p.optimal_parallelism(64);
+        assert!((9..=10).contains(&n), "n={n}");
+        // clamped by max
+        assert_eq!(p.optimal_parallelism(4), 4);
+    }
+
+    #[test]
+    fn required_parallelism_found() {
+        let p = predictor(0.05, 0.001, 10.0);
+        // need 50 msg/s with 20% headroom => 60 msg/s
+        let n = p.required_parallelism(50.0, 1.2, 64).unwrap();
+        assert!(p.throughput(n) >= 60.0);
+        assert!(n == 1 || p.throughput(n - 1) < 60.0, "minimality");
+    }
+
+    #[test]
+    fn unreachable_target_returns_none() {
+        let p = predictor(0.9, 0.1, 5.0); // peaks at ~N=1, T≈5
+        assert!(p.required_parallelism(100.0, 1.0, 64).is_none());
+        // so the source must be throttled to the sustainable rate
+        let cap = p.sustainable_rate(p.optimal_parallelism(64), 1.2);
+        assert!(cap < 100.0 && cap > 0.0);
+    }
+}

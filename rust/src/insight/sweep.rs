@@ -1,0 +1,199 @@
+//! Sweep execution: run every scenario of an [`ExperimentSpec`] through the
+//! simulated-time driver and collect one row per configuration.
+
+use super::experiment::ExperimentSpec;
+use crate::engine::StepEngine;
+use crate::miniapp::{run_sim, PlatformKind, Scenario};
+use crate::usl::Obs;
+use std::sync::Arc;
+
+/// One measured configuration.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub platform: PlatformKind,
+    pub partitions: usize,
+    pub message_size: usize,
+    pub centroids: usize,
+    pub memory_mb: u32,
+    /// T^px (messages/second).
+    pub throughput: f64,
+    /// Mean service time per message (Fig 4).
+    pub service_mean: f64,
+    pub service_p95: f64,
+    pub service_cv: f64,
+    /// Warm-path (cold-start-free) service stats — Fig 3's quantities.
+    pub warm_mean: f64,
+    pub warm_cv: f64,
+    /// Mean L^br.
+    pub broker_mean: f64,
+    pub messages: usize,
+}
+
+impl SweepRow {
+    /// Group key for USL fitting: one throughput curve per
+    /// (platform, MS, WC, memory).
+    pub fn group_key(&self) -> (PlatformKind, usize, usize, u32) {
+        (
+            self.platform,
+            self.message_size,
+            self.centroids,
+            self.memory_mb,
+        )
+    }
+}
+
+/// Run the full sweep (simulated time).  `engine_factory` builds a fresh
+/// engine per scenario so RNG streams don't interleave across configs.
+pub fn run_sweep<F>(spec: &ExperimentSpec, engine_factory: F) -> Vec<SweepRow>
+where
+    F: Fn(&Scenario) -> Arc<dyn StepEngine>,
+{
+    let scenarios = spec.scenarios();
+    let mut rows = Vec::with_capacity(scenarios.len());
+    for (i, sc) in scenarios.iter().enumerate() {
+        match run_sim(sc, engine_factory(sc)) {
+            Ok(r) => {
+                log::debug!(
+                    "sweep {}/{}: {} p={} ms={} wc={} -> T={:.2} msg/s",
+                    i + 1,
+                    scenarios.len(),
+                    sc.platform.label(),
+                    sc.partitions,
+                    sc.points_per_message,
+                    sc.centroids,
+                    r.summary.throughput
+                );
+                rows.push(SweepRow {
+                    platform: sc.platform,
+                    partitions: sc.partitions,
+                    message_size: sc.points_per_message,
+                    centroids: sc.centroids,
+                    memory_mb: sc.memory_mb,
+                    throughput: r.summary.throughput,
+                    service_mean: r.summary.service.mean,
+                    service_p95: r.summary.service.p95,
+                    service_cv: r.summary.service.cv(),
+                    warm_mean: r.summary.service_warm.mean,
+                    warm_cv: r.summary.service_warm.cv(),
+                    broker_mean: r.summary.broker.mean,
+                    messages: r.summary.messages,
+                });
+            }
+            Err(e) => log::error!("sweep config failed ({sc:?}): {e}"),
+        }
+    }
+    rows
+}
+
+/// Extract the (N, T) observations of one group, sorted by N.
+pub fn group_observations(
+    rows: &[SweepRow],
+    key: (PlatformKind, usize, usize, u32),
+) -> Vec<Obs> {
+    let mut obs: Vec<Obs> = rows
+        .iter()
+        .filter(|r| r.group_key() == key)
+        .map(|r| Obs::new(r.partitions as f64, r.throughput))
+        .collect();
+    obs.sort_by(|a, b| a.n.partial_cmp(&b.n).unwrap());
+    obs
+}
+
+/// All distinct group keys in sweep order.
+pub fn group_keys(rows: &[SweepRow]) -> Vec<(PlatformKind, usize, usize, u32)> {
+    let mut keys = Vec::new();
+    for r in rows {
+        let k = r.group_key();
+        if !keys.contains(&k) {
+            keys.push(k);
+        }
+    }
+    keys
+}
+
+/// CSV export (one row per configuration) for external plotting.
+pub fn to_csv(rows: &[SweepRow]) -> String {
+    let mut s = String::from(
+        "platform,partitions,message_size,centroids,memory_mb,throughput,service_mean,service_p95,service_cv,broker_mean,messages\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{}\n",
+            r.platform.label(),
+            r.partitions,
+            r.message_size,
+            r.centroids,
+            r.memory_mb,
+            r.throughput,
+            r.service_mean,
+            r.service_p95,
+            r.service_cv,
+            r.broker_mean,
+            r.messages
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CalibratedEngine;
+    use crate::sim::{ContentionParams, Dist};
+
+    fn tiny_spec() -> ExperimentSpec {
+        ExperimentSpec {
+            name: "tiny".into(),
+            platforms: vec![PlatformKind::Lambda, PlatformKind::DaskWrangler],
+            partitions: vec![1, 2, 4],
+            message_sizes: vec![256],
+            centroids: vec![16],
+            memory_mb: vec![3_008],
+            messages: 24,
+            seed: 5,
+            lustre: ContentionParams::new(0.5, 0.03),
+        }
+    }
+
+    fn factory(sc: &crate::miniapp::Scenario) -> Arc<dyn StepEngine> {
+        let mut e = CalibratedEngine::new(sc.seed ^ sc.partitions as u64);
+        e.insert((256, 16), Dist::Const(0.05));
+        Arc::new(e)
+    }
+
+    #[test]
+    fn sweep_covers_all_configs() {
+        let spec = tiny_spec();
+        let rows = run_sweep(&spec, factory);
+        assert_eq!(rows.len(), spec.size());
+        let keys = group_keys(&rows);
+        assert_eq!(keys.len(), 2); // one per platform
+        for k in keys {
+            let obs = group_observations(&rows, k);
+            assert_eq!(obs.len(), 3);
+            assert!(obs.windows(2).all(|w| w[0].n < w[1].n));
+        }
+    }
+
+    #[test]
+    fn lambda_scales_dask_does_not() {
+        let rows = run_sweep(&tiny_spec(), factory);
+        let lam = group_observations(&rows, (PlatformKind::Lambda, 256, 16, 3_008));
+        let dask = group_observations(&rows, (PlatformKind::DaskWrangler, 256, 16, 3_008));
+        let lam_speedup = lam.last().unwrap().t / lam[0].t;
+        let dask_speedup = dask.last().unwrap().t / dask[0].t;
+        assert!(
+            lam_speedup > dask_speedup,
+            "lambda {lam_speedup} vs dask {dask_speedup}"
+        );
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let rows = run_sweep(&tiny_spec(), factory);
+        let csv = to_csv(&rows);
+        assert_eq!(csv.lines().count(), rows.len() + 1);
+        assert!(csv.contains("kinesis/lambda"));
+        assert!(csv.contains("kafka/dask"));
+    }
+}

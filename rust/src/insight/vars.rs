@@ -1,0 +1,49 @@
+//! Table I — the model's dependent, independent and control variables.
+
+/// One glossary row.
+#[derive(Debug, Clone, Copy)]
+pub struct Variable {
+    pub symbol: &'static str,
+    pub description: &'static str,
+    pub role: &'static str,
+}
+
+/// The paper's Table I.
+pub const TABLE_I: &[Variable] = &[
+    Variable { symbol: "L", description: "Overall Latency", role: "dependent" },
+    Variable { symbol: "L^px", description: "Latency Processing System", role: "dependent" },
+    Variable { symbol: "L^br", description: "Latency Broker System", role: "dependent" },
+    Variable { symbol: "T", description: "Overall Throughput", role: "dependent" },
+    Variable { symbol: "T^px", description: "Throughput Processing System", role: "dependent" },
+    Variable { symbol: "T^br", description: "Throughput Broker System", role: "dependent" },
+    Variable { symbol: "N^px(n)", description: "Number Nodes Processing System", role: "independent" },
+    Variable { symbol: "N^px(p)", description: "Number Partitions Processing System", role: "independent" },
+    Variable { symbol: "N^br(n)", description: "Number Nodes Broker System", role: "independent" },
+    Variable { symbol: "N^br(p)", description: "Number Partitions Broker System", role: "independent" },
+    Variable { symbol: "M", description: "Machine and Infrastructure", role: "control" },
+    Variable { symbol: "WC", description: "Workload Complexity", role: "control" },
+    Variable { symbol: "MS", description: "Message Size", role: "control" },
+];
+
+/// Render Table I as fixed-width text.
+pub fn render() -> String {
+    let mut s = String::new();
+    s.push_str(&format!("{:<10} {:<42} {}\n", "Symbol", "Description", "Role"));
+    s.push_str(&"-".repeat(66));
+    s.push('\n');
+    for v in TABLE_I {
+        s.push_str(&format!("{:<10} {:<42} {}\n", v.symbol, v.description, v.role));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table_complete() {
+        assert_eq!(super::TABLE_I.len(), 13);
+        let r = super::render();
+        assert!(r.contains("N^px(p)"));
+        assert!(r.contains("Workload Complexity"));
+    }
+}

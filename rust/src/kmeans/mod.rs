@@ -1,0 +1,10 @@
+//! Pure-Rust MiniBatch K-Means — the native baseline engine.
+//!
+//! Implements exactly the same math as the L1/L2 AOT artifact (assignment
+//! via nearest centroid, sklearn-style per-centroid-count learning rates)
+//! so the PJRT path can be validated against it end to end, and so
+//! ablations can compare native-Rust vs XLA execution cost.
+
+pub mod native;
+
+pub use native::{minibatch_step, NativeEngine};

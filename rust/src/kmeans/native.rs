@@ -1,0 +1,228 @@
+//! Native MiniBatch K-Means step + the [`NativeEngine`] wrapper.
+
+use crate::engine::{EngineError, StepEngine, StepResult};
+use crate::store::ModelState;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One MiniBatch K-Means step (scikit-learn batch formulation, identical
+/// to `python/compile/kernels/ref.py`):
+///
+/// ```text
+/// j(i)  = argmin_j ||x_i - c_j||^2
+/// v'_j  = v_j + b_j                       (b_j = batch members of j)
+/// c'_j  = c_j * v_j/v'_j + sum(B_j)/v'_j  (unseen centroids unchanged)
+/// ```
+///
+/// Returns (new_centroids, new_counts, inertia).
+pub fn minibatch_step(
+    points: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    counts: &[f32],
+) -> (Vec<f32>, Vec<f32>, f64) {
+    assert!(dim > 0 && points.len() % dim == 0);
+    assert!(centroids.len() % dim == 0);
+    let n = points.len() / dim;
+    let c = centroids.len() / dim;
+    assert_eq!(counts.len(), c);
+
+    // precompute |c_j|^2 (same algebra as the Pallas kernel)
+    let mut c2 = vec![0.0f32; c];
+    for j in 0..c {
+        let row = &centroids[j * dim..(j + 1) * dim];
+        c2[j] = row.iter().map(|v| v * v).sum();
+    }
+
+    let mut bsum = vec![0.0f32; c * dim];
+    let mut bcount = vec![0.0f32; c];
+    let mut inertia = 0.0f64;
+
+    for i in 0..n {
+        let x = &points[i * dim..(i + 1) * dim];
+        let x2: f32 = x.iter().map(|v| v * v).sum();
+        let mut best = f32::INFINITY;
+        let mut best_j = 0usize;
+        for j in 0..c {
+            let crow = &centroids[j * dim..(j + 1) * dim];
+            let dot: f32 = x.iter().zip(crow).map(|(a, b)| a * b).sum();
+            let d2 = x2 - 2.0 * dot + c2[j];
+            if d2 < best {
+                best = d2;
+                best_j = j;
+            }
+        }
+        inertia += best.max(0.0) as f64;
+        bcount[best_j] += 1.0;
+        let acc = &mut bsum[best_j * dim..(best_j + 1) * dim];
+        for (a, v) in acc.iter_mut().zip(x) {
+            *a += v;
+        }
+    }
+
+    let mut new_centroids = centroids.to_vec();
+    let mut new_counts = counts.to_vec();
+    for j in 0..c {
+        new_counts[j] += bcount[j];
+        if new_counts[j] > 0.0 && bcount[j] > 0.0 {
+            let denom = new_counts[j].max(1.0);
+            let keep = counts[j] / denom;
+            let row = &mut new_centroids[j * dim..(j + 1) * dim];
+            for (k, r) in row.iter_mut().enumerate() {
+                *r = *r * keep + bsum[j * dim + k] / denom;
+            }
+        }
+    }
+    (new_centroids, new_counts, inertia)
+}
+
+/// Step engine running the native implementation and measuring real CPU
+/// time — the ablation baseline against the PJRT path.
+pub struct NativeEngine;
+
+impl StepEngine for NativeEngine {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn execute_step(
+        &self,
+        points: &[f32],
+        dim: usize,
+        model: &ModelState,
+    ) -> Result<StepResult, EngineError> {
+        if dim != model.dim {
+            return Err(EngineError::ShapeMismatch(format!(
+                "points dim {dim} != model dim {}",
+                model.dim
+            )));
+        }
+        if dim == 0 || points.len() % dim != 0 {
+            return Err(EngineError::ShapeMismatch(format!(
+                "len {} not divisible by dim {dim}",
+                points.len()
+            )));
+        }
+        let start = Instant::now();
+        let (centroids, counts, inertia) =
+            minibatch_step(points, dim, &model.centroids, &model.counts);
+        let cpu_seconds = start.elapsed().as_secs_f64();
+        Ok(StepResult {
+            model: ModelState {
+                centroids: Arc::new(centroids),
+                counts: Arc::new(counts),
+                dim,
+                version: model.version,
+            },
+            inertia,
+            cpu_seconds,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_data(n: usize, c: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let pts: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let cen: Vec<f32> = (0..c * d).map(|_| rng.normal() as f32).collect();
+        (pts, cen, vec![0.0; c])
+    }
+
+    #[test]
+    fn counts_conserve_batch_size() {
+        let (pts, cen, counts) = random_data(300, 16, 8, 1);
+        let (_, new_counts, _) = minibatch_step(&pts, 8, &cen, &counts);
+        let total: f32 = new_counts.iter().sum();
+        assert!((total - 300.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn single_point_classic_rule() {
+        // one point at a time reproduces c' = c + (x-c)/v'
+        let mut cen = vec![0.0f32, 0.0, 10.0, 10.0]; // 2 centroids in 2-D
+        let mut counts = vec![0.0f32; 2];
+        let x = [1.0f32, 1.0];
+        let (c1, n1, _) = minibatch_step(&x, 2, &cen, &counts);
+        assert_eq!(n1, vec![1.0, 0.0]);
+        assert_eq!(&c1[0..2], &[1.0, 1.0]); // moved fully onto first point
+        assert_eq!(&c1[2..4], &[10.0, 10.0]); // untouched
+        cen = c1;
+        counts = n1;
+        let y = [3.0f32, 3.0];
+        let (c2, n2, _) = minibatch_step(&y, 2, &cen, &counts);
+        assert_eq!(n2, vec![2.0, 0.0]);
+        // c' = 1 + (3-1)/2 = 2
+        assert!((c2[0] - 2.0).abs() < 1e-6 && (c2[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_centroids_stay_put() {
+        let pts = vec![0.0f32; 16]; // 8 points at origin, d=2
+        let cen = vec![0.0, 0.0, 100.0, 100.0];
+        let (c, n, _) = minibatch_step(&pts, 2, &cen, &[0.0, 0.0]);
+        assert_eq!(&c[2..4], &[100.0, 100.0]);
+        assert_eq!(n[1], 0.0);
+    }
+
+    #[test]
+    fn inertia_zero_on_centroid_hits() {
+        let cen = vec![1.0f32, 2.0, -3.0, 4.0];
+        let pts = cen.clone();
+        let (_, _, inertia) = minibatch_step(&pts, 2, &cen, &[5.0, 5.0]);
+        assert!(inertia < 1e-9);
+    }
+
+    #[test]
+    fn streaming_reduces_inertia() {
+        let mut rng = Pcg32::seeded(4);
+        // 4 separated blobs in 4-D
+        let blob_centers: Vec<f32> = (0..16).map(|_| rng.normal() as f32 * 20.0).collect();
+        let gen_batch = |rng: &mut Pcg32, n: usize| -> Vec<f32> {
+            (0..n)
+                .flat_map(|_| {
+                    let b = rng.gen_range(4) as usize;
+                    (0..4)
+                        .map(|k| blob_centers[b * 4 + k] + rng.normal() as f32 * 0.1)
+                        .collect::<Vec<_>>()
+                })
+                .collect()
+        };
+        let mut cen: Vec<f32> = (0..16).map(|i| blob_centers[i] + 5.0).collect();
+        let mut counts = vec![0.0f32; 4];
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..12 {
+            let batch = gen_batch(&mut rng, 128);
+            let (c, n, inertia) = minibatch_step(&batch, 4, &cen, &counts);
+            cen = c;
+            counts = n;
+            let per_point = inertia / 128.0;
+            first.get_or_insert(per_point);
+            last = per_point;
+        }
+        assert!(last < first.unwrap() * 0.5, "first={first:?} last={last}");
+    }
+
+    #[test]
+    fn native_engine_measures_time() {
+        let e = NativeEngine;
+        let m = ModelState::new_random(64, 8, 2);
+        let pts = vec![0.3; 1000 * 8];
+        let r = e.execute_step(&pts, 8, &m).unwrap();
+        assert!(r.cpu_seconds > 0.0);
+        assert!(r.inertia.is_finite());
+        assert_eq!(r.model.counts.iter().sum::<f32>(), 1000.0);
+    }
+
+    #[test]
+    fn native_engine_shape_checks() {
+        let e = NativeEngine;
+        let m = ModelState::new_random(4, 4, 1);
+        assert!(e.execute_step(&vec![0.0; 9], 4, &m).is_err()); // ragged
+        assert!(e.execute_step(&vec![0.0; 8], 2, &m).is_err()); // dim mismatch
+    }
+}

@@ -1,0 +1,34 @@
+//! # Pilot-Streaming + StreamInsight
+//!
+//! A reproduction of *"Performance Characterization and Modeling of
+//! Serverless and HPC Streaming Applications"* (Luckow & Jha, 2019) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the paper's systems: the *pilot abstraction*
+//!   for unified resource management across serverless/HPC ([`pilot`]), the
+//!   platform substrates it manages ([`broker`], [`serverless`], [`hpc`],
+//!   [`store`]), the *Streaming Mini-App* measurement harness ([`miniapp`]),
+//!   and the *StreamInsight* USL-based performance modeling stack ([`usl`],
+//!   [`insight`]).
+//! - **Layer 2** — a JAX MiniBatch K-Means step (`python/compile/model.py`),
+//!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//! - **Layer 1** — the Pallas assignment kernel
+//!   (`python/compile/kernels/kmeans.py`), the O(n·c) hot spot.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the model
+//! once; the Rust binary executes it via PJRT ([`runtime`]).
+
+pub mod broker;
+pub mod engine;
+pub mod hpc;
+pub mod insight;
+pub mod kmeans;
+pub mod metrics;
+pub mod miniapp;
+pub mod pilot;
+pub mod runtime;
+pub mod serverless;
+pub mod sim;
+pub mod store;
+pub mod usl;
+pub mod util;

@@ -1,0 +1,324 @@
+//! `pilot-streaming` — the leader binary: CLI over the Pilot-Streaming +
+//! StreamInsight stack.  See `pilot-streaming --help`.
+
+use pilot_streaming::engine::StepEngine;
+use pilot_streaming::insight::{self, figures, ExperimentSpec};
+use pilot_streaming::miniapp::{run_live, run_sim, PlatformKind, Scenario};
+use pilot_streaming::runtime::{calibrate, Manifest, PjrtEngine};
+use pilot_streaming::util::cli::{App, Args, CliError, CommandSpec};
+use pilot_streaming::util::logging;
+use std::sync::Arc;
+
+fn app() -> App {
+    App::new(
+        "pilot-streaming",
+        "Pilot-Streaming + StreamInsight: serverless/HPC streaming performance characterization (Luckow & Jha 2019)",
+    )
+    .command(CommandSpec::new("vars", "print Table I (model variables)"))
+    .command(
+        CommandSpec::new("calibrate", "measure PJRT execution times per artifact variant")
+            .opt("reps", "5", "measured repetitions per variant")
+            .opt("seed", "42", "rng seed")
+            .opt("out", "artifacts/calibration.json", "output file")
+            .opt("pool", "1", "PJRT runtime threads"),
+    )
+    .command(
+        CommandSpec::new("run", "run one scenario and print its summary")
+            .opt("platform", "lambda", "lambda | dask | stampede2")
+            .opt("partitions", "4", "N^px(p)")
+            .opt("points", "8000", "points per message (MS)")
+            .opt("centroids", "1024", "centroids (WC)")
+            .opt("memory", "3008", "lambda memory MB")
+            .opt("messages", "64", "messages to process")
+            .opt("seed", "42", "rng seed")
+            .flag("live", "run live (threads + real PJRT) instead of simulated time"),
+    )
+    .command(
+        CommandSpec::new("sweep", "run the paper grid sweep, fit USL, print analysis")
+            .opt("messages", "64", "messages per configuration")
+            .opt("seed", "42", "rng seed")
+            .opt("csv", "", "write per-config CSV to this path")
+            .opt("config", "", "TOML experiment file (overrides the paper grid)"),
+    )
+    .command(
+        CommandSpec::new("autoscale", "replay a rate trace against the USL-driven predictive autoscaler")
+            .opt("sigma", "0.02", "platform contention coefficient")
+            .opt("kappa", "0.0001", "platform coherency coefficient")
+            .opt("lambda", "10", "throughput at N=1 (msg/s)")
+            .opt("trace", "diurnal", "diurnal | burst")
+            .opt("intervals", "120", "control intervals to replay")
+            .opt("peak", "200", "peak offered rate (msg/s)"),
+    )
+    .command(
+        CommandSpec::new("figs", "regenerate all tables/figures (fig3..fig7, table1)")
+            .opt("messages", "64", "messages per configuration")
+            .opt("seed", "42", "rng seed")
+            .opt("only", "", "comma list, e.g. fig3,fig6"),
+    )
+    .command(
+        CommandSpec::new("predict", "USL prediction / config recommendation from sigma,kappa,lambda")
+            .req("sigma", "contention coefficient")
+            .req("kappa", "coherency coefficient")
+            .req("lambda", "throughput at N=1 (msg/s)")
+            .opt("target", "0", "target ingest rate to size for (msg/s)")
+            .opt("max", "64", "max parallelism considered"),
+    )
+}
+
+fn engine_for_scenario(live: bool, pool: usize) -> Result<Arc<dyn StepEngine>, String> {
+    if live {
+        let manifest = Manifest::load(&Manifest::default_dir())
+            .map_err(|e| format!("{e} (run `make artifacts`)"))?;
+        Ok(Arc::new(PjrtEngine::new(manifest, pool)))
+    } else {
+        let rows = figures::default_calibration();
+        Ok(Arc::new(calibrate::calibrated_engine(&rows, 42)))
+    }
+}
+
+fn cmd_calibrate(args: &Args) -> Result<(), String> {
+    let manifest = Manifest::load(&Manifest::default_dir())
+        .map_err(|e| format!("{e} (run `make artifacts`)"))?;
+    let pool = args.get_usize("pool").map_err(|e| e.to_string())?;
+    let engine = PjrtEngine::new(manifest, pool.max(1));
+    let reps = args.get_usize("reps").map_err(|e| e.to_string())?;
+    let seed = args.get_u64("seed").map_err(|e| e.to_string())?;
+    let rows = calibrate::calibrate(&engine, reps, seed);
+    println!("{:<28} {:>10} {:>10}", "variant", "mean_s", "samples");
+    for r in &rows {
+        println!(
+            "kmeans_n{:<6}_c{:<6}       {:>10.4} {:>10}",
+            r.key.0,
+            r.key.1,
+            r.dist.mean(),
+            r.samples.len()
+        );
+    }
+    let out = args.get_or("out", "artifacts/calibration.json");
+    std::fs::write(out, calibrate::to_json(&rows).pretty()).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn scenario_from(args: &Args) -> Result<Scenario, String> {
+    let platform = PlatformKind::parse(args.get_or("platform", "lambda"))
+        .ok_or_else(|| format!("unknown platform {:?}", args.get("platform")))?;
+    Ok(Scenario {
+        platform,
+        partitions: args.get_usize("partitions").map_err(|e| e.to_string())?,
+        points_per_message: args.get_usize("points").map_err(|e| e.to_string())?,
+        centroids: args.get_usize("centroids").map_err(|e| e.to_string())?,
+        memory_mb: args.get_usize("memory").map_err(|e| e.to_string())? as u32,
+        messages: args.get_usize("messages").map_err(|e| e.to_string())?,
+        seed: args.get_u64("seed").map_err(|e| e.to_string())?,
+        ..Default::default()
+    })
+}
+
+fn print_summary(label: &str, s: &pilot_streaming::miniapp::RunSummary) {
+    println!("-- {label} --");
+    println!("messages           {}", s.messages);
+    println!("window             {:.3} s", s.window_seconds);
+    println!("throughput T^px    {:.3} msg/s", s.throughput);
+    println!(
+        "service time       mean {:.4} s  p95 {:.4} s  cv {:.3}",
+        s.service.mean,
+        s.service.p95,
+        s.service.cv()
+    );
+    println!("broker latency     mean {:.4} s", s.broker.mean);
+    println!(
+        "breakdown          compute {:.4} s  io {:.4} s",
+        s.compute_mean, s.io_mean
+    );
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let sc = scenario_from(args)?;
+    if args.has_flag("live") {
+        let engine = engine_for_scenario(true, sc.partitions.min(4))?;
+        let r = run_live(&sc, engine, 50.0)?;
+        print_summary(&format!("live {}", sc.platform.label()), &r.summary);
+        println!("backoff events     {}", r.backoff_events);
+        println!("final rate         {:.2} msg/s", r.final_rate);
+    } else {
+        let engine = engine_for_scenario(false, 1)?;
+        let r = run_sim(&sc, engine)?;
+        print_summary(&format!("sim {}", sc.platform.label()), &r.summary);
+        println!("des events         {}", r.des_events);
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let messages = args.get_usize("messages").map_err(|e| e.to_string())?;
+    let seed = args.get_u64("seed").map_err(|e| e.to_string())?;
+    let spec = match args.get("config").filter(|s| !s.is_empty()) {
+        Some(path) => insight::spec_from_file(path).map_err(|e| e.to_string())?,
+        None => ExperimentSpec::paper_grid(messages, seed),
+    };
+    eprintln!("running {} configurations (simulated time)...", spec.size());
+    let rows = insight::run_sweep(&spec, figures::engine_factory(figures::default_calibration()));
+    let analysis = insight::analyze(&rows);
+    println!("{}", insight::table(&analysis));
+    if let Some(path) = args.get("csv").filter(|s| !s.is_empty()) {
+        std::fs::write(path, insight::to_csv(&rows)).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_figs(args: &Args) -> Result<(), String> {
+    let messages = args.get_usize("messages").map_err(|e| e.to_string())?;
+    let seed = args.get_u64("seed").map_err(|e| e.to_string())?;
+    let only = args.get_or("only", "").to_string();
+    let wanted: Vec<&str> = if only.is_empty() {
+        vec!["table1", "fig3", "fig4", "fig5", "fig6", "fig7"]
+    } else {
+        only.split(',').map(str::trim).collect()
+    };
+    let mut all_ok = true;
+    for name in wanted {
+        let result = match name {
+            "table1" => figures::table1(),
+            "fig3" => figures::fig3(messages, seed),
+            "fig4" => figures::fig4(messages, seed),
+            "fig5" => figures::fig5(messages, seed),
+            "fig6" => figures::fig6(messages, seed),
+            "fig7" => figures::fig7(messages, seed),
+            other => return Err(format!("unknown figure {other:?}")),
+        };
+        println!("{}", result.render());
+        all_ok &= result.all_pass();
+    }
+    if !all_ok {
+        return Err("some figure shape checks FAILED".into());
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<(), String> {
+    let sigma = args.get_f64("sigma").map_err(|e| e.to_string())?;
+    let kappa = args.get_f64("kappa").map_err(|e| e.to_string())?;
+    let lambda = args.get_f64("lambda").map_err(|e| e.to_string())?;
+    let max = args.get_usize("max").map_err(|e| e.to_string())?;
+    let target = args.get_f64("target").map_err(|e| e.to_string())?;
+    let p = insight::Predictor {
+        params: pilot_streaming::usl::UslParams::new(sigma, kappa, lambda),
+    };
+    println!("{:>4}  {:>12}  {:>8}", "N", "T(N) msg/s", "speedup");
+    for n in [1usize, 2, 4, 8, 16, 32, 64] {
+        if n > max {
+            break;
+        }
+        println!(
+            "{:>4}  {:>12.3}  {:>8.2}",
+            n,
+            p.throughput(n),
+            p.throughput(n) / p.throughput(1)
+        );
+    }
+    println!("regime: {}", p.params.regime());
+    println!(
+        "optimal parallelism (<= {max}): {}",
+        p.optimal_parallelism(max)
+    );
+    if target > 0.0 {
+        match p.required_parallelism(target, 1.25, max) {
+            Some(n) => println!("to sustain {target} msg/s (+25% headroom): N = {n}"),
+            None => println!(
+                "target {target} msg/s unreachable; throttle source to {:.2} msg/s at N = {}",
+                p.sustainable_rate(p.optimal_parallelism(max), 1.25),
+                p.optimal_parallelism(max)
+            ),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_autoscale(args: &Args) -> Result<(), String> {
+    let predictor = insight::Predictor {
+        params: pilot_streaming::usl::UslParams::new(
+            args.get_f64("sigma").map_err(|e| e.to_string())?,
+            args.get_f64("kappa").map_err(|e| e.to_string())?,
+            args.get_f64("lambda").map_err(|e| e.to_string())?,
+        ),
+    };
+    let intervals = args.get_usize("intervals").map_err(|e| e.to_string())?;
+    let peak = args.get_f64("peak").map_err(|e| e.to_string())?;
+    let trace = match args.get_or("trace", "diurnal") {
+        "burst" => insight::trace_burst(intervals, peak * 0.1, peak, intervals / 3),
+        _ => insight::trace_diurnal(intervals, peak * 0.05, peak, 42),
+    };
+    let report = insight::replay(
+        predictor,
+        insight::AutoscaleConfig::default(),
+        &trace,
+        1.0,
+        1,
+    );
+    println!("{:>5} {:>10} {:>6} {:>10} {:>10} {:>10}", "t", "rate", "N", "capacity", "backlog", "decision");
+    for tick in report.ticks.iter().step_by((intervals / 24).max(1)) {
+        let d = match &tick.decision {
+            insight::ScaleDecision::Hold { .. } => "hold".to_string(),
+            insight::ScaleDecision::Scale { from, to } => format!("{from}->{to}"),
+            insight::ScaleDecision::Throttle { max_rate, .. } => {
+                format!("throttle@{max_rate:.1}")
+            }
+        };
+        println!(
+            "{:>5.0} {:>10.1} {:>6} {:>10.1} {:>10.1} {:>10}",
+            tick.t, tick.offered_rate, tick.parallelism, tick.capacity, tick.backlog, d
+        );
+    }
+    println!(
+        "
+goodput {:.1}%  scale events {}  max backlog {:.0}  throttled {:.0} msgs",
+        report.goodput() * 100.0,
+        report.scale_events,
+        report.max_backlog,
+        report.throttled_total
+    );
+    Ok(())
+}
+
+fn main() {
+    logging::init();
+    let app = app();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, args) = match app.parse(&argv) {
+        Ok(x) => x,
+        Err(CliError::Help) | Err(CliError::NoCommand) => {
+            if let Some(spec) = argv
+                .first()
+                .and_then(|c| app.commands.iter().find(|s| s.name == *c))
+            {
+                print!("{}", app.command_usage(spec));
+            } else {
+                print!("{}", app.usage());
+            }
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "vars" => {
+            println!("{}", figures::table1().table);
+            Ok(())
+        }
+        "calibrate" => cmd_calibrate(&args),
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "figs" => cmd_figs(&args),
+        "predict" => cmd_predict(&args),
+        "autoscale" => cmd_autoscale(&args),
+        other => Err(format!("unhandled command {other}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,235 @@
+//! Log-scale latency histogram (HDR-style, base-10 sub-decades).
+//!
+//! Buckets span 1 µs .. ~1000 s with ~5% relative resolution, constant
+//! memory, O(1) record.  Quantiles interpolate within the winning bucket.
+
+/// Number of sub-buckets per decade (resolution ~ 10^(1/SUB) ≈ 5%).
+const SUB: usize = 48;
+/// Decades covered: 1e-6 .. 1e+3 seconds.
+const DECADES: usize = 9;
+const NBUCKETS: usize = SUB * DECADES + 2; // + underflow + overflow
+const MIN_VALUE: f64 = 1e-6;
+/// log2(1e-6), precomputed for the fast bucket path.
+const LOG2_MIN_VALUE: f64 = -19.931568569324174;
+
+/// log2(1 + m/128) for the top 7 mantissa bits (midpoint of each cell).
+fn log2_lut() -> &'static [f64; 128] {
+    use once_cell::sync::Lazy;
+    static LUT: Lazy<[f64; 128]> = Lazy::new(|| {
+        let mut t = [0.0; 128];
+        for (i, slot) in t.iter_mut().enumerate() {
+            *slot = (1.0 + (i as f64 + 0.5) / 128.0).log2();
+        }
+        t
+    });
+    &LUT
+}
+
+/// A fixed-memory log-scale histogram over positive values (seconds).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; NBUCKETS],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v < MIN_VALUE {
+            return 0; // underflow
+        }
+        // hot path: log10 via exponent extraction + a mantissa log2 LUT
+        // (≈0.1% worst-case log error ≪ the 1/SUB bucket width); see
+        // EXPERIMENTS.md §Perf — ~10x faster than f64::log10 here.
+        let bits = v.to_bits();
+        let exp = ((bits >> 52) & 0x7ff) as i64 - 1023;
+        let mant = ((bits >> 45) & 0x7f) as usize; // top 7 mantissa bits
+        let log2v = exp as f64 + log2_lut()[mant];
+        // pos = (log2(v) - log2(MIN_VALUE)) * SUB * log10(2)
+        const K: f64 = SUB as f64 * std::f64::consts::LOG10_2;
+        let pos = (log2v - LOG2_MIN_VALUE) * K;
+        let idx = pos.floor().max(0.0) as usize + 1;
+        idx.min(NBUCKETS - 1)
+    }
+
+    /// Lower edge of bucket `i` (for interpolation/reporting).
+    fn bucket_floor(i: usize) -> f64 {
+        if i == 0 {
+            return 0.0;
+        }
+        MIN_VALUE * 10f64.powf((i - 1) as f64 / SUB as f64)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        self.counts[Self::bucket_of(v)] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile in [0, 1] with intra-bucket linear interpolation.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let lo = Self::bucket_floor(i).max(self.min);
+                let hi = Self::bucket_floor(i + 1).min(self.max.max(lo));
+                let frac = (target - seen) as f64 / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+            seen += c;
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn mean_min_max_exact() {
+        let mut h = Histogram::new();
+        for v in [0.001, 0.002, 0.003] {
+            h.record(v);
+        }
+        assert!((h.mean() - 0.002).abs() < 1e-12);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 0.003);
+    }
+
+    #[test]
+    fn quantiles_within_resolution() {
+        let mut h = Histogram::new();
+        let mut rng = Pcg32::seeded(1);
+        let mut vals: Vec<f64> = (0..100_000).map(|_| rng.lognormal(-4.0, 1.0)).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            let exact = vals[((q * vals.len() as f64) as usize).min(vals.len() - 1)];
+            let approx = h.quantile(q);
+            assert!(
+                (approx - exact).abs() / exact < 0.08,
+                "q={q}: approx={approx} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn ignores_garbage() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(-1.0);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn overflow_and_underflow_clamped() {
+        let mut h = Histogram::new();
+        h.record(1e-9); // underflow bucket
+        h.record(1e6); // overflow bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) >= 1e3);
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut both = Histogram::new();
+        let mut rng = Pcg32::seeded(2);
+        for i in 0..10_000 {
+            let v = rng.exponential(10.0);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert!((a.mean() - both.mean()).abs() < 1e-12);
+        assert!((a.quantile(0.9) - both.quantile(0.9)).abs() / both.quantile(0.9) < 0.01);
+    }
+}

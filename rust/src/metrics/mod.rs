@@ -1,0 +1,10 @@
+//! Metrics: counters, gauges, latency histograms, and a registry with
+//! JSON/CSV export — the Mini-App's "modular instrumentation system"
+//! (paper §IV): components register metrics; the collector exports them
+//! uniformly.
+
+pub mod histogram;
+pub mod registry;
+
+pub use histogram::Histogram;
+pub use registry::{MetricRegistry, Snapshot};

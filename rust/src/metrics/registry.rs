@@ -1,0 +1,217 @@
+//! Metric registry: named counters, gauges and histograms with JSON and
+//! CSV export.  Components register metrics by dotted name
+//! (`broker.put.latency`, `lambda.invocations`).
+
+use super::histogram::Histogram;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Thread-safe metric registry (cheap to clone — shared state).
+#[derive(Clone, Default)]
+pub struct MetricRegistry {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicI64>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Mutex<Histogram>>>>,
+}
+
+impl MetricRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut g = self.inner.counters.lock().unwrap();
+        Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.counter(name).fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        self.counter(name).fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<AtomicI64> {
+        let mut g = self.inner.gauges.lock().unwrap();
+        Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
+    pub fn set_gauge(&self, name: &str, v: i64) {
+        self.gauge(name).store(v, Ordering::Relaxed);
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Mutex<Histogram>> {
+        let mut g = self.inner.histograms.lock().unwrap();
+        Arc::clone(
+            g.entry(name.to_string())
+                .or_insert_with(|| Arc::new(Mutex::new(Histogram::new()))),
+        )
+    }
+
+    pub fn observe(&self, name: &str, v: f64) {
+        self.histogram(name).lock().unwrap().record(v);
+    }
+
+    /// Snapshot all metrics.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = self
+            .inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let histograms = self
+            .inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.lock().unwrap().clone()))
+            .collect();
+        Snapshot {
+            counters,
+            gauges,
+            histograms,
+        }
+    }
+}
+
+/// Point-in-time view of all metrics.
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Json {
+        let mut obj = Vec::new();
+        for (k, v) in &self.counters {
+            obj.push((k.as_str(), Json::from(*v as usize)));
+        }
+        for (k, v) in &self.gauges {
+            obj.push((k.as_str(), Json::from(*v)));
+        }
+        let mut hmap: Vec<(String, Json)> = Vec::new();
+        for (k, h) in &self.histograms {
+            hmap.push((
+                k.clone(),
+                Json::obj(vec![
+                    ("count", Json::from(h.count() as usize)),
+                    ("mean", Json::from(h.mean())),
+                    ("p50", Json::from(h.quantile(0.5))),
+                    ("p95", Json::from(h.quantile(0.95))),
+                    ("p99", Json::from(h.quantile(0.99))),
+                    ("min", Json::from(h.min())),
+                    ("max", Json::from(h.max())),
+                ]),
+            ));
+        }
+        let mut out: Vec<(&str, Json)> = obj;
+        let hkeys: Vec<(String, Json)> = hmap;
+        for (k, v) in &hkeys {
+            out.push((k.as_str(), v.clone()));
+        }
+        Json::obj(out)
+    }
+
+    /// CSV with one row per histogram: name,count,mean,p50,p95,p99.
+    pub fn histograms_csv(&self) -> String {
+        let mut s = String::from("name,count,mean,p50,p95,p99,min,max\n");
+        for (k, h) in &self.histograms {
+            s.push_str(&format!(
+                "{k},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6}\n",
+                h.count(),
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.95),
+                h.quantile(0.99),
+                h.min(),
+                h.max()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = MetricRegistry::new();
+        m.inc("a");
+        m.inc("a");
+        m.add("a", 3);
+        m.set_gauge("g", -7);
+        let s = m.snapshot();
+        assert_eq!(s.counters["a"], 5);
+        assert_eq!(s.gauges["g"], -7);
+    }
+
+    #[test]
+    fn histograms_observe() {
+        let m = MetricRegistry::new();
+        for i in 1..=100 {
+            m.observe("lat", i as f64 / 1000.0);
+        }
+        let s = m.snapshot();
+        let h = &s.histograms["lat"];
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shared_across_clones_and_threads() {
+        let m = MetricRegistry::new();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.inc("hits");
+                    m.observe("lat", 0.001);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.counters["hits"], 4000);
+        assert_eq!(s.histograms["lat"].count(), 4000);
+    }
+
+    #[test]
+    fn export_formats() {
+        let m = MetricRegistry::new();
+        m.inc("c");
+        m.observe("h", 0.5);
+        let s = m.snapshot();
+        let j = s.to_json();
+        assert_eq!(j.get("c").as_i64(), Some(1));
+        assert_eq!(j.get("h").get("count").as_i64(), Some(1));
+        let csv = s.histograms_csv();
+        assert!(csv.starts_with("name,count"));
+        assert!(csv.contains("h,1,"));
+    }
+}

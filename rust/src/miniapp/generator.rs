@@ -1,0 +1,198 @@
+//! Synthetic data generator (paper: "the framework ... can simulate
+//! different data rates and characteristics (e.g., message sizes)").
+//!
+//! Points are drawn from a fixed set of Gaussian blobs so the K-Means
+//! workload is *learnable* — per-point inertia falls over the stream,
+//! which the e2e example uses as its convergence check.
+
+use crate::broker::Message;
+use crate::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    /// Points per message (the paper's MS axis: 8,000 / 16,000 / 26,000).
+    pub points_per_message: usize,
+    /// Feature dimension (d=8 ≈ the paper's ~37 B/point messages).
+    pub dim: usize,
+    /// Number of latent blobs the points are drawn from.
+    pub blobs: usize,
+    /// Blob center spread and intra-blob noise.
+    pub center_scale: f64,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        Self {
+            points_per_message: 8_000,
+            dim: 8,
+            blobs: 32,
+            center_scale: 15.0,
+            noise: 0.5,
+            seed: 42,
+        }
+    }
+}
+
+/// The generator: deterministic, seeded, cheap per message.
+pub struct DataGenerator {
+    config: GeneratorConfig,
+    centers: Vec<f32>,
+    rng: Pcg32,
+    produced: u64,
+    next_key: u64,
+}
+
+impl DataGenerator {
+    pub fn new(config: GeneratorConfig) -> Self {
+        let mut rng = Pcg32::seeded(config.seed);
+        let centers = (0..config.blobs * config.dim)
+            .map(|_| (rng.normal() * config.center_scale) as f32)
+            .collect();
+        Self {
+            config,
+            centers,
+            rng,
+            produced: 0,
+            next_key: 0,
+        }
+    }
+
+    pub fn config(&self) -> &GeneratorConfig {
+        &self.config
+    }
+
+    pub fn produced(&self) -> u64 {
+        self.produced
+    }
+
+    /// The latent blob centers (ground truth for convergence tests).
+    pub fn centers(&self) -> &[f32] {
+        &self.centers
+    }
+
+    /// Generate one message at time `now` for `run_id`.  Keys rotate so
+    /// messages spread uniformly over shards.
+    pub fn next_message(&mut self, run_id: u64, now: f64) -> Message {
+        let d = self.config.dim;
+        let n = self.config.points_per_message;
+        let mut points = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let b = self.rng.gen_range(self.config.blobs as u64) as usize;
+            for k in 0..d {
+                points.push(
+                    self.centers[b * d + k] + (self.rng.normal() * self.config.noise) as f32,
+                );
+            }
+        }
+        self.produced += 1;
+        self.next_key = self.next_key.wrapping_add(1);
+        Message::new(run_id, self.next_key, Arc::new(points), d, now)
+    }
+
+    /// Generate a message targeted at a specific partition of a
+    /// `partitions`-wide broker (used by the closed-loop sim driver to keep
+    /// every shard saturated).
+    pub fn next_message_for_partition(
+        &mut self,
+        run_id: u64,
+        now: f64,
+        partition: usize,
+        partitions: usize,
+    ) -> Message {
+        let mut msg = self.next_message(run_id, now);
+        // find a key mapping to the wanted partition (bounded scan)
+        let mut key = msg.key;
+        for _ in 0..10_000 {
+            if crate::broker::partition_for_key(key, partitions) == partition {
+                break;
+            }
+            key = key.wrapping_add(1);
+        }
+        self.next_key = key;
+        msg.key = key;
+        msg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_shape_matches_config() {
+        let mut g = DataGenerator::new(GeneratorConfig {
+            points_per_message: 100,
+            dim: 4,
+            ..Default::default()
+        });
+        let m = g.next_message(1, 0.0);
+        assert_eq!(m.n_points, 100);
+        assert_eq!(m.dim, 4);
+        assert_eq!(m.points.len(), 400);
+        assert_eq!(g.produced(), 1);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = GeneratorConfig {
+            points_per_message: 10,
+            seed: 9,
+            ..Default::default()
+        };
+        let mut a = DataGenerator::new(cfg.clone());
+        let mut b = DataGenerator::new(cfg);
+        assert_eq!(a.next_message(1, 0.0).points, b.next_message(1, 0.0).points);
+    }
+
+    #[test]
+    fn keys_rotate() {
+        let mut g = DataGenerator::new(GeneratorConfig::default());
+        let k1 = g.next_message(1, 0.0).key;
+        let k2 = g.next_message(1, 0.0).key;
+        assert_ne!(k1, k2);
+    }
+
+    #[test]
+    fn partition_targeting() {
+        let mut g = DataGenerator::new(GeneratorConfig {
+            points_per_message: 4,
+            ..Default::default()
+        });
+        for p in 0..8 {
+            let m = g.next_message_for_partition(1, 0.0, p, 8);
+            assert_eq!(crate::broker::partition_for_key(m.key, 8), p);
+        }
+    }
+
+    #[test]
+    fn points_cluster_around_centers() {
+        let mut g = DataGenerator::new(GeneratorConfig {
+            points_per_message: 2000,
+            dim: 4,
+            blobs: 4,
+            center_scale: 50.0,
+            noise: 0.1,
+            seed: 3,
+            ..Default::default()
+        });
+        let centers = g.centers().to_vec();
+        let m = g.next_message(1, 0.0);
+        // each point should be within ~1.0 of some blob center
+        for i in 0..m.n_points {
+            let p = &m.points[i * 4..(i + 1) * 4];
+            let mind = (0..4)
+                .map(|b| {
+                    (0..4)
+                        .map(|k| (p[k] - centers[b * 4 + k]).powi(2))
+                        .sum::<f32>()
+                        .sqrt()
+                })
+                .fold(f32::INFINITY, f32::min);
+            assert!(mind < 1.0, "point {i} too far: {mind}");
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Live (wall-clock, threaded) benchmark driver.
+//!
+//! Same pipeline as the sim driver but with real threads and, when wired
+//! with a [`PjrtEngine`](crate::runtime::PjrtEngine), the real AOT K-Means
+//! artifact executing on PJRT for every message — the path the e2e example
+//! and calibration use.  A producer thread paces itself with the
+//! intelligent-backoff controller; one consumer thread per shard drains
+//! the broker.
+
+use super::generator::{DataGenerator, GeneratorConfig};
+use super::platform::{PlatformUnderTest, Scenario};
+use super::trace::{next_run_id, MessageTrace, RunSummary, RunTrace};
+use crate::broker::{BackoffController, BrokerError};
+use crate::engine::StepEngine;
+use crate::serverless::EventSourceMapping;
+use crate::sim::{SharedClock, WallClock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Result of one live configuration run.
+#[derive(Debug, Clone)]
+pub struct LiveRunResult {
+    pub summary: RunSummary,
+    pub backoff_events: u64,
+    /// Final producer rate the backoff controller converged to (msg/s).
+    pub final_rate: f64,
+}
+
+/// Run one scenario live.  `initial_rate` seeds the backoff controller.
+pub fn run_live(
+    scenario: &Scenario,
+    engine: Arc<dyn StepEngine>,
+    initial_rate: f64,
+) -> Result<LiveRunResult, String> {
+    let clock: SharedClock = Arc::new(WallClock::new());
+    let platform = Arc::new(PlatformUnderTest::build(
+        scenario,
+        engine,
+        Arc::clone(&clock),
+    )?);
+    let esm = Arc::new(EventSourceMapping::new(platform.broker(), 1));
+    let run_id = next_run_id();
+    let run = Arc::new(RunTrace::new(run_id));
+    let processed = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let target = scenario.messages as u64;
+
+    // consumer threads: one per shard (the AWS invariant)
+    let mut consumers = Vec::new();
+    for shard in 0..scenario.partitions {
+        let esm = Arc::clone(&esm);
+        let platform = Arc::clone(&platform);
+        let run = Arc::clone(&run);
+        let processed = Arc::clone(&processed);
+        let stop = Arc::clone(&stop);
+        let clock = Arc::clone(&clock);
+        let scenario = scenario.clone();
+        consumers.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let now = clock.now();
+                let Some(lease) = esm.poll(shard, now) else {
+                    std::thread::sleep(Duration::from_micros(200));
+                    continue;
+                };
+                let msg = lease.records[0].message.clone();
+                let start = clock.now();
+                match platform.process(
+                    shard,
+                    &msg.points,
+                    msg.dim,
+                    &format!("model-{run_id}"),
+                    scenario.centroids,
+                ) {
+                    Ok(cost) => {
+                        let end = clock.now();
+                        esm.commit(lease);
+                        run.record(MessageTrace {
+                            run_id: msg.run_id,
+                            message_id: msg.id,
+                            partition: shard,
+                            produced_at: msg.produced_at,
+                            available_at: msg.available_at,
+                            proc_start: start,
+                            proc_end: end,
+                            compute: cost.compute,
+                            io: cost.io,
+                            overhead: cost.overhead,
+                        });
+                        processed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        log::warn!("live process failed: {e}");
+                        esm.abort(lease);
+                    }
+                }
+            }
+        }));
+    }
+
+    // producer with intelligent backoff
+    let mut generator = DataGenerator::new(GeneratorConfig {
+        points_per_message: scenario.points_per_message,
+        seed: scenario.seed,
+        ..Default::default()
+    });
+    let mut backoff = BackoffController::new(initial_rate);
+    let mut produced = 0u64;
+    let mut last_control = clock.now();
+    // produce slightly more than target so consumers never starve early
+    let produce_target = target + scenario.partitions as u64;
+    while processed.load(Ordering::Relaxed) < target {
+        if produced < produce_target {
+            let msg = generator.next_message(run_id, clock.now());
+            match platform.broker().put(msg) {
+                Ok(_) => {
+                    produced += 1;
+                }
+                Err(BrokerError::Throttled { retry_after, .. }) => {
+                    backoff.on_throttle();
+                    std::thread::sleep(Duration::from_secs_f64(retry_after.min(0.05)));
+                }
+                Err(e) => return Err(e.to_string()),
+            }
+            std::thread::sleep(Duration::from_secs_f64(backoff.interval().min(0.05)));
+        } else {
+            std::thread::sleep(Duration::from_micros(300));
+        }
+        let now = clock.now();
+        if now - last_control > 0.1 {
+            backoff.on_lag_sample(esm.lag());
+            last_control = now;
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    for c in consumers {
+        let _ = c.join();
+    }
+    let summary = run
+        .summarize()
+        .ok_or_else(|| "no messages processed".to_string())?;
+    Ok(LiveRunResult {
+        summary,
+        backoff_events: backoff.congestion_events(),
+        final_rate: backoff.rate(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{CalibratedEngine, StepEngine};
+    use crate::kmeans::NativeEngine;
+    use crate::miniapp::platform::PlatformKind;
+    use crate::sim::Dist;
+
+    fn fast_engine() -> Arc<dyn StepEngine> {
+        let mut e = CalibratedEngine::new(3);
+        e.insert((64, 8), Dist::Const(0.001));
+        Arc::new(e)
+    }
+
+    fn tiny_scenario(platform: PlatformKind) -> Scenario {
+        Scenario {
+            platform,
+            partitions: 2,
+            points_per_message: 64,
+            centroids: 8,
+            messages: 12,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn live_lambda_run_completes() {
+        let r = run_live(&tiny_scenario(PlatformKind::Lambda), fast_engine(), 200.0).unwrap();
+        assert!(r.summary.messages >= 12);
+        assert!(r.summary.throughput > 0.0);
+        assert!(r.final_rate > 0.0);
+    }
+
+    #[test]
+    fn live_dask_run_completes() {
+        let r = run_live(
+            &tiny_scenario(PlatformKind::DaskWrangler),
+            fast_engine(),
+            200.0,
+        )
+        .unwrap();
+        assert!(r.summary.messages >= 12);
+    }
+
+    #[test]
+    fn live_run_with_native_engine_computes_real_kmeans() {
+        // real numerics through the whole live pipeline (native baseline;
+        // the PJRT variant is tests/pipeline_live.rs)
+        let s = tiny_scenario(PlatformKind::Lambda);
+        let r = run_live(&s, Arc::new(NativeEngine), 500.0).unwrap();
+        assert!(r.summary.messages >= 12);
+        assert!(r.summary.compute_mean > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! The Streaming Mini-App framework (paper §IV): synthetic data generation,
+//! end-to-end run-id tracing, and benchmark drivers that run a scenario to
+//! completion in simulated time ([`sim_driver`], large sweeps) or live
+//! wall-clock time with real PJRT execution ([`live_driver`], e2e +
+//! calibration).
+
+pub mod generator;
+pub mod live_driver;
+pub mod platform;
+pub mod sim_driver;
+pub mod trace;
+
+pub use generator::{DataGenerator, GeneratorConfig};
+pub use live_driver::{run_live, LiveRunResult};
+pub use platform::{PlatformKind, PlatformUnderTest, ProcessCost, Scenario};
+pub use sim_driver::{run_sim, SimRunResult};
+pub use trace::{next_run_id, MessageTrace, RunSummary, RunTrace};

@@ -1,0 +1,291 @@
+//! The platform-under-test: one object bundling broker + processing
+//! system for a benchmark scenario, so the sim and live drivers can treat
+//! Kinesis/Lambda and Kafka/Dask uniformly.
+
+use crate::broker::kafka::KafkaConfig;
+use crate::broker::kinesis::ShardLimits;
+use crate::broker::{Broker, KafkaTopic, KinesisStream};
+use crate::engine::StepEngine;
+use crate::hpc::DaskPool;
+use crate::pilot::MachineKind;
+use crate::serverless::{FunctionConfig, LambdaFleet};
+use crate::sim::{ContentionParams, SharedClock, SharedResource};
+use crate::store::shared_fs::{SharedFsParams, SharedFsStore};
+use crate::store::ObjectStore;
+use std::sync::Arc;
+
+/// Which stack a scenario runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlatformKind {
+    /// Kinesis broker + Lambda processing (AWS serverless).
+    Lambda,
+    /// Kafka broker + Dask processing on Wrangler.
+    DaskWrangler,
+    /// Kafka broker + Dask processing on Stampede2 KNL.
+    DaskStampede2,
+}
+
+impl PlatformKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Lambda => "kinesis/lambda",
+            Self::DaskWrangler => "kafka/dask(wrangler)",
+            Self::DaskStampede2 => "kafka/dask(stampede2)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "lambda" | "kinesis/lambda" | "serverless" => Some(Self::Lambda),
+            "dask" | "wrangler" | "kafka/dask" => Some(Self::DaskWrangler),
+            "stampede2" | "knl" => Some(Self::DaskStampede2),
+            _ => None,
+        }
+    }
+
+    pub fn is_serverless(self) -> bool {
+        matches!(self, Self::Lambda)
+    }
+}
+
+/// One benchmark configuration (a point in the paper's parameter space).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub platform: PlatformKind,
+    /// N^px(p): partitions == max processing parallelism.
+    pub partitions: usize,
+    /// MS axis: points per message.
+    pub points_per_message: usize,
+    /// WC axis: number of centroids.
+    pub centroids: usize,
+    /// Lambda container memory (ignored on Dask).
+    pub memory_mb: u32,
+    /// Messages to process in the measurement window.
+    pub messages: usize,
+    /// Lustre contention (Dask only; Lambda is isolated by construction).
+    pub lustre: ContentionParams,
+    pub seed: u64,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Self {
+            platform: PlatformKind::Lambda,
+            partitions: 4,
+            points_per_message: 8_000,
+            centroids: 1_024,
+            memory_mb: 3_008,
+            messages: 64,
+            lustre: ContentionParams::new(
+                crate::pilot::plugins::hpc::DEFAULT_LUSTRE_ALPHA,
+                crate::pilot::plugins::hpc::DEFAULT_LUSTRE_BETA,
+            ),
+            seed: 42,
+        }
+    }
+}
+
+/// The instantiated platform: broker + processor.
+pub enum PlatformUnderTest {
+    Lambda {
+        stream: Arc<KinesisStream>,
+        fleet: Arc<LambdaFleet>,
+    },
+    Dask {
+        topic: Arc<KafkaTopic>,
+        pool: Arc<DaskPool>,
+    },
+}
+
+/// Breakdown of one processed message.
+#[derive(Debug, Clone, Copy)]
+pub struct ProcessCost {
+    pub compute: f64,
+    pub io: f64,
+    pub overhead: f64,
+}
+
+impl ProcessCost {
+    pub fn total(&self) -> f64 {
+        self.compute + self.io + self.overhead
+    }
+}
+
+impl PlatformUnderTest {
+    /// Build the platform for `scenario` on `clock` with `engine`.
+    pub fn build(
+        scenario: &Scenario,
+        engine: Arc<dyn StepEngine>,
+        clock: SharedClock,
+    ) -> Result<Self, String> {
+        match scenario.platform {
+            PlatformKind::Lambda => {
+                let stream = Arc::new(KinesisStream::new(
+                    "mini-app",
+                    scenario.partitions,
+                    ShardLimits::default(),
+                    Arc::clone(&clock),
+                ));
+                let config = FunctionConfig {
+                    memory_mb: scenario.memory_mb,
+                    timeout_s: crate::serverless::MAX_WALLTIME_S,
+                    package_mb: 50.0,
+                    // AWS never runs more containers than shards; the paper
+                    // additionally observed at most 30 concurrent containers
+                    max_concurrency: scenario.partitions.min(30),
+                };
+                let fleet = Arc::new(LambdaFleet::new(
+                    config,
+                    engine,
+                    Arc::new(ObjectStore::default()),
+                    clock,
+                    scenario.seed,
+                )?);
+                Ok(Self::Lambda { stream, fleet })
+            }
+            PlatformKind::DaskWrangler | PlatformKind::DaskStampede2 => {
+                let machine = match scenario.platform {
+                    PlatformKind::DaskStampede2 => MachineKind::Stampede2,
+                    _ => MachineKind::Wrangler,
+                }
+                .machine(64);
+                if scenario.partitions > machine.max_workers() {
+                    return Err(format!(
+                        "{} workers exceed machine capacity {}",
+                        scenario.partitions,
+                        machine.max_workers()
+                    ));
+                }
+                // the broker log and the model store share the same Lustre
+                let fs = SharedResource::new("lustre", scenario.lustre);
+                let topic = Arc::new(KafkaTopic::new(
+                    "mini-app",
+                    scenario.partitions,
+                    KafkaConfig::default(),
+                    clock,
+                    Arc::clone(&fs),
+                ));
+                let store = Arc::new(SharedFsStore::new(SharedFsParams::default(), fs));
+                let pool = Arc::new(DaskPool::new(
+                    machine,
+                    scenario.partitions,
+                    engine,
+                    store,
+                    scenario.seed,
+                ));
+                Ok(Self::Dask { topic, pool })
+            }
+        }
+    }
+
+    pub fn broker(&self) -> Arc<dyn Broker> {
+        match self {
+            Self::Lambda { stream, .. } => Arc::clone(stream) as Arc<dyn Broker>,
+            Self::Dask { topic, .. } => Arc::clone(topic) as Arc<dyn Broker>,
+        }
+    }
+
+    /// Process one message's points on `partition`; returns the modeled
+    /// cost breakdown.
+    pub fn process(
+        &self,
+        partition: usize,
+        points: &[f32],
+        dim: usize,
+        model_key: &str,
+        centroids: usize,
+    ) -> Result<ProcessCost, String> {
+        match self {
+            Self::Lambda { fleet, .. } => {
+                let r = fleet
+                    .invoke(points, dim, model_key, centroids)
+                    .map_err(|e| e.to_string())?;
+                Ok(ProcessCost {
+                    compute: r.compute,
+                    io: r.io_get + r.io_put,
+                    overhead: r.cold_start,
+                })
+            }
+            Self::Dask { pool, .. } => {
+                let r = pool
+                    .process(partition, points, dim, model_key, centroids)
+                    .map_err(|e| e.to_string())?;
+                Ok(ProcessCost {
+                    compute: r.compute,
+                    io: r.io_get + r.io_put,
+                    overhead: r.sync,
+                })
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Lambda { .. } => "kinesis/lambda",
+            Self::Dask { .. } => "kafka/dask",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CalibratedEngine;
+    use crate::sim::SimClock;
+
+    fn engine() -> Arc<dyn StepEngine> {
+        Arc::new(CalibratedEngine::new(1))
+    }
+
+    #[test]
+    fn builds_both_platforms() {
+        let clock = Arc::new(SimClock::new()) as SharedClock;
+        let s = Scenario::default();
+        let lambda = PlatformUnderTest::build(&s, engine(), Arc::clone(&clock)).unwrap();
+        assert_eq!(lambda.broker().kind(), "kinesis");
+        let s2 = Scenario {
+            platform: PlatformKind::DaskWrangler,
+            ..s
+        };
+        let dask = PlatformUnderTest::build(&s2, engine(), clock).unwrap();
+        assert_eq!(dask.broker().kind(), "kafka");
+    }
+
+    #[test]
+    fn process_works_on_both() {
+        let clock = Arc::new(SimClock::new()) as SharedClock;
+        let pts = vec![0.1f32; 100 * 8];
+        for platform in [PlatformKind::Lambda, PlatformKind::DaskWrangler] {
+            let s = Scenario {
+                platform,
+                centroids: 16,
+                ..Default::default()
+            };
+            let p = PlatformUnderTest::build(&s, engine(), Arc::clone(&clock)).unwrap();
+            let cost = p.process(0, &pts, 8, "m", 16).unwrap();
+            assert!(cost.total() > 0.0, "{platform:?}");
+        }
+    }
+
+    #[test]
+    fn platform_kind_parsing() {
+        assert_eq!(PlatformKind::parse("lambda"), Some(PlatformKind::Lambda));
+        assert_eq!(PlatformKind::parse("DASK"), Some(PlatformKind::DaskWrangler));
+        assert_eq!(
+            PlatformKind::parse("stampede2"),
+            Some(PlatformKind::DaskStampede2)
+        );
+        assert_eq!(PlatformKind::parse("flink"), None);
+    }
+
+    #[test]
+    fn dask_capacity_checked() {
+        let clock = Arc::new(SimClock::new()) as SharedClock;
+        let s = Scenario {
+            platform: PlatformKind::DaskWrangler,
+            partitions: 10_000,
+            ..Default::default()
+        };
+        assert!(PlatformUnderTest::build(&s, engine(), clock).is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! Compute-units: the task abstraction of the Pilot-API.
+//!
+//! "compute-unit ... is a task representing a self-contained set of
+//! operations and is the key abstraction for expressing the application
+//! workload."  A CU carries a [`TaskSpec`]; backends execute it and post a
+//! [`CuOutcome`].  Waiters block on a condvar.
+
+use super::state::CuState;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+static NEXT_CU_ID: AtomicU64 = AtomicU64::new(1);
+
+/// What a compute-unit does.
+pub enum TaskSpec {
+    /// One MiniBatch K-Means step over a batch of points (the paper's
+    /// streaming workload).  Points are [n, dim] row-major.
+    KMeansStep {
+        points: Arc<Vec<f32>>,
+        dim: usize,
+        model_key: String,
+        centroids: usize,
+    },
+    /// Arbitrary code (the "submission of arbitrary compute tasks" usage
+    /// mode; supported by the local backend).
+    Custom(Box<dyn FnOnce() -> Result<f64, String> + Send>),
+    /// Sleep for a fixed duration (testing, DAG glue).
+    Sleep(f64),
+}
+
+impl std::fmt::Debug for TaskSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TaskSpec::KMeansStep {
+                dim,
+                model_key,
+                centroids,
+                points,
+            } => write!(
+                f,
+                "KMeansStep(n={}, dim={dim}, model={model_key}, c={centroids})",
+                points.len() / dim.max(&1)
+            ),
+            TaskSpec::Custom(_) => write!(f, "Custom"),
+            TaskSpec::Sleep(s) => write!(f, "Sleep({s})"),
+        }
+    }
+}
+
+/// Result of a finished compute-unit.
+#[derive(Debug, Clone)]
+pub struct CuOutcome {
+    /// Scalar result (inertia for K-Means steps, custom value otherwise).
+    pub value: f64,
+    /// Timing breakdown (platform-dependent), modeled seconds.
+    pub compute_seconds: f64,
+    pub io_seconds: f64,
+    pub overhead_seconds: f64,
+    /// Which container/worker ran it.
+    pub executor: String,
+}
+
+impl CuOutcome {
+    pub fn total_seconds(&self) -> f64 {
+        self.compute_seconds + self.io_seconds + self.overhead_seconds
+    }
+}
+
+struct CuInner {
+    state: Mutex<CuSnapshot>,
+    cond: Condvar,
+}
+
+#[derive(Debug, Clone)]
+struct CuSnapshot {
+    state: CuState,
+    outcome: Option<CuOutcome>,
+    error: Option<String>,
+}
+
+/// A handle to a submitted compute-unit (cheap to clone).
+#[derive(Clone)]
+pub struct ComputeUnit {
+    pub id: u64,
+    inner: Arc<CuInner>,
+}
+
+impl ComputeUnit {
+    pub fn new() -> ComputeUnit {
+        ComputeUnit {
+            id: NEXT_CU_ID.fetch_add(1, Ordering::Relaxed),
+            inner: Arc::new(CuInner {
+                state: Mutex::new(CuSnapshot {
+                    state: CuState::New,
+                    outcome: None,
+                    error: None,
+                }),
+                cond: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn state(&self) -> CuState {
+        self.inner.state.lock().unwrap().state
+    }
+
+    /// Attempt a state transition; panics on illegal transitions (bug).
+    pub fn transition(&self, next: CuState) {
+        let mut g = self.inner.state.lock().unwrap();
+        assert!(
+            g.state.can_transition(next),
+            "illegal CU transition {} -> {next}",
+            g.state
+        );
+        g.state = next;
+        self.inner.cond.notify_all();
+    }
+
+    /// Mark done with an outcome.
+    pub fn complete(&self, outcome: CuOutcome) {
+        let mut g = self.inner.state.lock().unwrap();
+        assert!(g.state.can_transition(CuState::Done));
+        g.state = CuState::Done;
+        g.outcome = Some(outcome);
+        self.inner.cond.notify_all();
+    }
+
+    /// Mark failed with an error.
+    pub fn fail(&self, error: String) {
+        let mut g = self.inner.state.lock().unwrap();
+        if g.state.can_transition(CuState::Failed) {
+            g.state = CuState::Failed;
+            g.error = Some(error);
+            self.inner.cond.notify_all();
+        }
+    }
+
+    /// Cancel if not already terminal. Returns whether it was canceled.
+    pub fn cancel(&self) -> bool {
+        let mut g = self.inner.state.lock().unwrap();
+        if g.state.can_transition(CuState::Canceled) {
+            g.state = CuState::Canceled;
+            self.inner.cond.notify_all();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Block until the CU reaches a terminal state.
+    pub fn wait(&self) -> CuState {
+        let mut g = self.inner.state.lock().unwrap();
+        while !g.state.is_terminal() {
+            g = self.inner.cond.wait(g).unwrap();
+        }
+        g.state
+    }
+
+    /// Block with a timeout; returns the state observed at the end.
+    pub fn wait_timeout(&self, timeout: std::time::Duration) -> CuState {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.state.lock().unwrap();
+        while !g.state.is_terminal() {
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            let (ng, _) = self.inner.cond.wait_timeout(g, remaining).unwrap();
+            g = ng;
+        }
+        g.state
+    }
+
+    pub fn outcome(&self) -> Option<CuOutcome> {
+        self.inner.state.lock().unwrap().outcome.clone()
+    }
+
+    pub fn error(&self) -> Option<String> {
+        self.inner.state.lock().unwrap().error.clone()
+    }
+}
+
+impl Default for ComputeUnit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn outcome() -> CuOutcome {
+        CuOutcome {
+            value: 1.0,
+            compute_seconds: 0.1,
+            io_seconds: 0.02,
+            overhead_seconds: 0.0,
+            executor: "t".into(),
+        }
+    }
+
+    #[test]
+    fn lifecycle_and_wait() {
+        let cu = ComputeUnit::new();
+        assert_eq!(cu.state(), CuState::New);
+        cu.transition(CuState::Queued);
+        let waiter = {
+            let cu = cu.clone();
+            std::thread::spawn(move || cu.wait())
+        };
+        cu.transition(CuState::Running);
+        cu.complete(outcome());
+        assert_eq!(waiter.join().unwrap(), CuState::Done);
+        assert!((cu.outcome().unwrap().total_seconds() - 0.12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failure_records_error() {
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        cu.transition(CuState::Running);
+        cu.fail("boom".into());
+        assert_eq!(cu.state(), CuState::Failed);
+        assert_eq!(cu.error().unwrap(), "boom");
+        assert!(cu.outcome().is_none());
+    }
+
+    #[test]
+    fn cancel_before_running() {
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        assert!(cu.cancel());
+        assert_eq!(cu.state(), CuState::Canceled);
+        // cancel on terminal is a no-op
+        assert!(!cu.cancel());
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal CU transition")]
+    fn illegal_transition_panics() {
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Running); // must go through Queued
+    }
+
+    #[test]
+    fn wait_timeout_expires() {
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        let s = cu.wait_timeout(Duration::from_millis(20));
+        assert_eq!(s, CuState::Queued); // still not terminal
+    }
+
+    #[test]
+    fn ids_unique() {
+        let a = ComputeUnit::new();
+        let b = ComputeUnit::new();
+        assert_ne!(a.id, b.id);
+    }
+}

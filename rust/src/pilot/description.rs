@@ -1,0 +1,339 @@
+//! `PilotDescription` — the normative, platform-agnostic resource spec.
+//!
+//! The paper: "the user needs to create a Pilot-Description, which provides
+//! a normative way to specify resources for a streaming broker, e.g., the
+//! number of topic shards for Kinesis and Kafka can be specified using the
+//! same attribute" — and likewise parallelism/memory for the processing
+//! platform, "while allowing the support for infrastructure-specific
+//! capabilities, such as layers or memory limits on Lambda."
+
+use crate::util::json::Json;
+
+/// Target platform for a pilot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Platform {
+    /// Kinesis-like broker (serverless).
+    Kinesis,
+    /// Kafka-like broker (HPC / cloud nodes).
+    Kafka,
+    /// Lambda-like FaaS processing.
+    Lambda,
+    /// Dask-like processing on HPC nodes.
+    Dask,
+    /// In-process thread pool (testing, bag-of-tasks).
+    Local,
+}
+
+impl Platform {
+    pub fn parse(s: &str) -> Option<Platform> {
+        match s.to_ascii_lowercase().as_str() {
+            "kinesis" => Some(Self::Kinesis),
+            "kafka" => Some(Self::Kafka),
+            "lambda" => Some(Self::Lambda),
+            "dask" => Some(Self::Dask),
+            "local" => Some(Self::Local),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Kinesis => "kinesis",
+            Self::Kafka => "kafka",
+            Self::Lambda => "lambda",
+            Self::Dask => "dask",
+            Self::Local => "local",
+        }
+    }
+
+    pub fn is_broker(self) -> bool {
+        matches!(self, Self::Kinesis | Self::Kafka)
+    }
+}
+
+/// HPC machine selection for Dask pilots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MachineKind {
+    Wrangler,
+    Stampede2,
+}
+
+impl MachineKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "wrangler" => Some(Self::Wrangler),
+            "stampede2" | "stampede2-knl" => Some(Self::Stampede2),
+            _ => None,
+        }
+    }
+
+    pub fn machine(self, max_nodes: usize) -> crate::hpc::Machine {
+        match self {
+            Self::Wrangler => crate::hpc::Machine::wrangler(max_nodes),
+            Self::Stampede2 => crate::hpc::Machine::stampede2(max_nodes),
+        }
+    }
+}
+
+/// The normative resource description.
+#[derive(Debug, Clone)]
+pub struct PilotDescription {
+    pub platform: Platform,
+    /// Broker: number of shards/partitions. Processing: parallelism
+    /// (one concurrent container / worker per unit) — the paper's single
+    /// unified attribute.
+    pub parallelism: usize,
+    /// Processing memory per container/worker, MB (Lambda-specific knob).
+    pub memory_mb: u32,
+    /// Walltime limit, seconds.
+    pub walltime_s: f64,
+    /// HPC machine (Dask only).
+    pub machine: MachineKind,
+    /// Max nodes the HPC allocation may use.
+    pub max_nodes: usize,
+    /// Records per invocation batch (event-source mapping).
+    pub batch_size: usize,
+    /// Deployment package size, MB (Lambda cold starts).
+    pub package_mb: f64,
+    /// RNG seed for everything this pilot provisions.
+    pub seed: u64,
+}
+
+impl Default for PilotDescription {
+    fn default() -> Self {
+        Self {
+            platform: Platform::Local,
+            parallelism: 4,
+            memory_mb: 3008,
+            walltime_s: 900.0,
+            machine: MachineKind::Wrangler,
+            max_nodes: 16,
+            batch_size: 1,
+            package_mb: 50.0,
+            seed: 42,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DescriptionError {
+    #[error("invalid {field}: {reason}")]
+    Invalid {
+        field: &'static str,
+        reason: String,
+    },
+    #[error("unknown platform {0:?}")]
+    UnknownPlatform(String),
+}
+
+impl PilotDescription {
+    pub fn new(platform: Platform) -> Self {
+        Self {
+            platform,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_parallelism(mut self, p: usize) -> Self {
+        self.parallelism = p;
+        self
+    }
+
+    pub fn with_memory_mb(mut self, m: u32) -> Self {
+        self.memory_mb = m;
+        self
+    }
+
+    pub fn with_machine(mut self, m: MachineKind) -> Self {
+        self.machine = m;
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), DescriptionError> {
+        let inv = |field: &'static str, reason: String| DescriptionError::Invalid { field, reason };
+        if self.parallelism == 0 {
+            return Err(inv("parallelism", "must be > 0".into()));
+        }
+        if self.platform == Platform::Lambda {
+            if !(crate::serverless::MIN_MEMORY_MB..=crate::serverless::MAX_MEMORY_MB)
+                .contains(&self.memory_mb)
+            {
+                return Err(inv(
+                    "memory_mb",
+                    format!(
+                        "{} outside Lambda range [{}, {}]",
+                        self.memory_mb,
+                        crate::serverless::MIN_MEMORY_MB,
+                        crate::serverless::MAX_MEMORY_MB
+                    ),
+                ));
+            }
+            if self.walltime_s > crate::serverless::MAX_WALLTIME_S {
+                return Err(inv(
+                    "walltime_s",
+                    format!("{} exceeds Lambda 15-minute cap", self.walltime_s),
+                ));
+            }
+        }
+        if self.platform == Platform::Dask {
+            let machine = self.machine.machine(self.max_nodes);
+            if self.parallelism > machine.max_workers() {
+                return Err(inv(
+                    "parallelism",
+                    format!(
+                        "{} workers exceed {} ({} nodes x {}/node)",
+                        self.parallelism,
+                        machine.max_workers(),
+                        self.max_nodes,
+                        machine.workers_per_node
+                    ),
+                ));
+            }
+        }
+        if self.batch_size == 0 {
+            return Err(inv("batch_size", "must be > 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Parse from a config JSON/TOML object (see `util::tomlmini`).
+    pub fn from_json(v: &Json) -> Result<Self, DescriptionError> {
+        let mut d = PilotDescription::default();
+        if let Some(p) = v.get("platform").as_str() {
+            d.platform = Platform::parse(p)
+                .ok_or_else(|| DescriptionError::UnknownPlatform(p.to_string()))?;
+        }
+        if let Some(x) = v.get("parallelism").as_usize() {
+            d.parallelism = x;
+        }
+        if let Some(x) = v.get("memory_mb").as_usize() {
+            d.memory_mb = x as u32;
+        }
+        if let Some(x) = v.get("walltime_s").as_f64() {
+            d.walltime_s = x;
+        }
+        if let Some(m) = v.get("machine").as_str() {
+            d.machine = MachineKind::parse(m).ok_or_else(|| DescriptionError::Invalid {
+                field: "machine",
+                reason: format!("unknown machine {m:?}"),
+            })?;
+        }
+        if let Some(x) = v.get("max_nodes").as_usize() {
+            d.max_nodes = x;
+        }
+        if let Some(x) = v.get("batch_size").as_usize() {
+            d.batch_size = x;
+        }
+        if let Some(x) = v.get("package_mb").as_f64() {
+            d.package_mb = x;
+        }
+        if let Some(x) = v.get("seed").as_i64() {
+            d.seed = x as u64;
+        }
+        d.validate()?;
+        Ok(d)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("platform", Json::from(self.platform.name())),
+            ("parallelism", Json::from(self.parallelism)),
+            ("memory_mb", Json::from(self.memory_mb as usize)),
+            ("walltime_s", Json::from(self.walltime_s)),
+            ("max_nodes", Json::from(self.max_nodes)),
+            ("batch_size", Json::from(self.batch_size)),
+            ("seed", Json::from(self.seed as i64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn platform_parse_roundtrip() {
+        for p in [
+            Platform::Kinesis,
+            Platform::Kafka,
+            Platform::Lambda,
+            Platform::Dask,
+            Platform::Local,
+        ] {
+            assert_eq!(Platform::parse(p.name()), Some(p));
+        }
+        assert_eq!(Platform::parse("spark"), None);
+        assert!(Platform::Kinesis.is_broker());
+        assert!(!Platform::Lambda.is_broker());
+    }
+
+    #[test]
+    fn lambda_constraints() {
+        let mut d = PilotDescription::new(Platform::Lambda);
+        assert!(d.validate().is_ok());
+        d.memory_mb = 64;
+        assert!(d.validate().is_err());
+        d.memory_mb = 1024;
+        d.walltime_s = 2000.0;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn dask_capacity_constraint() {
+        let mut d = PilotDescription::new(Platform::Dask);
+        d.max_nodes = 1; // 12 workers max
+        d.parallelism = 12;
+        assert!(d.validate().is_ok());
+        d.parallelism = 13;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn same_attribute_for_both_brokers() {
+        // the paper's normative claim: one attribute, two brokers
+        let k = PilotDescription::new(Platform::Kinesis).with_parallelism(8);
+        let q = PilotDescription::new(Platform::Kafka).with_parallelism(8);
+        assert_eq!(k.parallelism, q.parallelism);
+        assert!(k.validate().is_ok() && q.validate().is_ok());
+    }
+
+    #[test]
+    fn from_json() {
+        let v = crate::util::json::parse(
+            r#"{"platform": "lambda", "parallelism": 16, "memory_mb": 1792,
+                "batch_size": 2, "seed": 7}"#,
+        )
+        .unwrap();
+        let d = PilotDescription::from_json(&v).unwrap();
+        assert_eq!(d.platform, Platform::Lambda);
+        assert_eq!(d.parallelism, 16);
+        assert_eq!(d.memory_mb, 1792);
+        assert_eq!(d.batch_size, 2);
+        assert_eq!(d.seed, 7);
+    }
+
+    #[test]
+    fn from_json_rejects_bad() {
+        let v = crate::util::json::parse(r#"{"platform": "spark"}"#).unwrap();
+        assert!(matches!(
+            PilotDescription::from_json(&v),
+            Err(DescriptionError::UnknownPlatform(_))
+        ));
+        let v = crate::util::json::parse(r#"{"platform": "lambda", "memory_mb": 9999}"#).unwrap();
+        assert!(PilotDescription::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let d = PilotDescription::new(Platform::Dask).with_parallelism(24);
+        let j = d.to_json();
+        let d2 = PilotDescription::from_json(&j).unwrap();
+        assert_eq!(d2.platform, Platform::Dask);
+        assert_eq!(d2.parallelism, 24);
+    }
+}

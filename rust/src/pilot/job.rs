@@ -1,0 +1,148 @@
+//! `PilotJob` — a user-visible handle to an allocated resource container —
+//! and the backend interface plugins implement.
+
+use super::compute_unit::{ComputeUnit, TaskSpec};
+use super::description::{PilotDescription, Platform};
+use super::state::PilotState;
+use crate::broker::Broker;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+static NEXT_PILOT_ID: AtomicU64 = AtomicU64::new(1);
+
+#[derive(Debug, thiserror::Error)]
+pub enum PilotError {
+    #[error("pilot is not running (state {0})")]
+    NotRunning(super::state::PilotState),
+    #[error("platform {0} does not accept compute units")]
+    NoCompute(&'static str),
+    #[error("provisioning failed: {0}")]
+    Provision(String),
+    #[error(transparent)]
+    Description(#[from] super::description::DescriptionError),
+}
+
+/// What a platform plugin provides after provisioning.
+pub trait PilotBackend: Send + Sync {
+    fn platform(&self) -> Platform;
+
+    /// Submit a compute-unit for execution.  The backend must eventually
+    /// drive `cu` to a terminal state.
+    fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), PilotError>;
+
+    /// The broker this pilot provisioned, if it is a broker pilot.
+    fn broker(&self) -> Option<Arc<dyn Broker>> {
+        None
+    }
+
+    /// Graceful shutdown (drain and stop workers).
+    fn shutdown(&self);
+
+    /// Executed-task count (diagnostics).
+    fn completed(&self) -> u64;
+}
+
+struct PilotShared {
+    state: Mutex<PilotState>,
+    cond: Condvar,
+}
+
+/// A resource container handle (cheap to clone).
+#[derive(Clone)]
+pub struct PilotJob {
+    pub id: u64,
+    pub description: PilotDescription,
+    backend: Arc<dyn PilotBackend>,
+    shared: Arc<PilotShared>,
+    cus: Arc<Mutex<Vec<ComputeUnit>>>,
+}
+
+impl PilotJob {
+    /// Wrap a provisioned backend (called by the service).
+    pub fn new(description: PilotDescription, backend: Arc<dyn PilotBackend>) -> Self {
+        let job = Self {
+            id: NEXT_PILOT_ID.fetch_add(1, Ordering::Relaxed),
+            description,
+            backend,
+            shared: Arc::new(PilotShared {
+                state: Mutex::new(PilotState::New),
+                cond: Condvar::new(),
+            }),
+            cus: Arc::new(Mutex::new(Vec::new())),
+        };
+        job.set_state(PilotState::Pending);
+        job.set_state(PilotState::Running);
+        job
+    }
+
+    pub fn state(&self) -> PilotState {
+        *self.shared.state.lock().unwrap()
+    }
+
+    fn set_state(&self, next: PilotState) {
+        let mut g = self.shared.state.lock().unwrap();
+        assert!(
+            g.can_transition(next),
+            "illegal pilot transition {} -> {next}",
+            *g
+        );
+        *g = next;
+        self.shared.cond.notify_all();
+    }
+
+    pub fn platform(&self) -> Platform {
+        self.backend.platform()
+    }
+
+    /// Submit a task to this pilot's resources.
+    pub fn submit_compute_unit(&self, spec: TaskSpec) -> Result<ComputeUnit, PilotError> {
+        let state = self.state();
+        if state != PilotState::Running {
+            return Err(PilotError::NotRunning(state));
+        }
+        let cu = ComputeUnit::new();
+        cu.transition(super::state::CuState::Queued);
+        self.backend.submit(cu.clone(), spec)?;
+        self.cus.lock().unwrap().push(cu.clone());
+        Ok(cu)
+    }
+
+    /// Wait until every submitted CU reaches a terminal state.
+    pub fn wait_all(&self) {
+        let cus = self.cus.lock().unwrap().clone();
+        for cu in cus {
+            cu.wait();
+        }
+    }
+
+    /// The broker this pilot stood up (broker pilots only).
+    pub fn broker(&self) -> Option<Arc<dyn Broker>> {
+        self.backend.broker()
+    }
+
+    /// All compute units submitted so far.
+    pub fn compute_units(&self) -> Vec<ComputeUnit> {
+        self.cus.lock().unwrap().clone()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.backend.completed()
+    }
+
+    /// Drain workers and mark the pilot done.
+    pub fn cancel(&self) {
+        if self.state() == PilotState::Running {
+            self.backend.shutdown();
+            self.set_state(PilotState::Canceled);
+        }
+    }
+
+    /// Graceful completion: wait for CUs, stop workers.
+    pub fn finish(&self) {
+        if self.state() == PilotState::Running {
+            self.wait_all();
+            self.backend.shutdown();
+            self.set_state(PilotState::Done);
+        }
+    }
+}

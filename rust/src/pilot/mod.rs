@@ -1,0 +1,25 @@
+//! The pilot abstraction (paper §III): unified resource management across
+//! serverless, cloud, and HPC.
+//!
+//! - [`PilotDescription`] — normative resource spec (one `parallelism`
+//!   attribute covers Kinesis shards, Kafka partitions, Lambda concurrency
+//!   and Dask workers)
+//! - [`PilotComputeService`] — the Pilot-API: `submit_pilot(description)`
+//! - [`PilotJob`] — an allocated resource container:
+//!   `submit_compute_unit(task)`
+//! - [`ComputeUnit`] — the task handle: `wait()`, `outcome()`
+//! - [`plugins`] — per-platform provisioning (Fig 2's plugin architecture)
+
+pub mod compute_unit;
+pub mod description;
+pub mod job;
+pub mod plugins;
+pub mod service;
+pub mod state;
+pub mod workers;
+
+pub use compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
+pub use description::{MachineKind, PilotDescription, Platform};
+pub use job::{PilotBackend, PilotError, PilotJob};
+pub use service::PilotComputeService;
+pub use state::{CuState, PilotState};

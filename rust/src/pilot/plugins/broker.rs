@@ -1,0 +1,146 @@
+//! Broker plugins: provision a Kinesis-like stream ("Kinesis Pilot", paper
+//! Fig 2 step 1a/b) or a Kafka-like topic.  Broker pilots do not accept
+//! compute-units — they expose the provisioned [`Broker`] instead.
+
+use crate::broker::kafka::{KafkaConfig, KafkaTopic};
+use crate::broker::kinesis::{KinesisStream, ShardLimits};
+use crate::broker::Broker;
+use crate::pilot::compute_unit::{ComputeUnit, TaskSpec};
+use crate::pilot::description::{PilotDescription, Platform};
+use crate::pilot::job::{PilotBackend, PilotError};
+use crate::sim::{SharedClock, SharedResource};
+use std::sync::Arc;
+
+/// Kinesis broker pilot backend.
+pub struct KinesisBrokerBackend {
+    stream: Arc<KinesisStream>,
+}
+
+impl KinesisBrokerBackend {
+    pub fn provision(desc: &PilotDescription, clock: SharedClock) -> Result<Self, PilotError> {
+        desc.validate()?;
+        Ok(Self {
+            stream: Arc::new(KinesisStream::new(
+                "pilot-stream",
+                desc.parallelism,
+                ShardLimits::default(),
+                clock,
+            )),
+        })
+    }
+
+    pub fn stream(&self) -> Arc<KinesisStream> {
+        Arc::clone(&self.stream)
+    }
+}
+
+impl PilotBackend for KinesisBrokerBackend {
+    fn platform(&self) -> Platform {
+        Platform::Kinesis
+    }
+
+    fn submit(&self, cu: ComputeUnit, _spec: TaskSpec) -> Result<(), PilotError> {
+        cu.fail("broker pilots do not execute compute units".into());
+        Err(PilotError::NoCompute("kinesis"))
+    }
+
+    fn broker(&self) -> Option<Arc<dyn Broker>> {
+        Some(self.stream.clone() as Arc<dyn Broker>)
+    }
+
+    fn shutdown(&self) {}
+
+    fn completed(&self) -> u64 {
+        0
+    }
+}
+
+/// Kafka broker pilot backend.  `shared_fs` couples the broker's log to
+/// the same Lustre resource the Dask pool syncs models through (HPC
+/// co-deployment, the paper's configuration).
+pub struct KafkaBrokerBackend {
+    topic: Arc<KafkaTopic>,
+}
+
+impl KafkaBrokerBackend {
+    pub fn provision(
+        desc: &PilotDescription,
+        clock: SharedClock,
+        shared_fs: Arc<SharedResource>,
+    ) -> Result<Self, PilotError> {
+        desc.validate()?;
+        Ok(Self {
+            topic: Arc::new(KafkaTopic::new(
+                "pilot-topic",
+                desc.parallelism,
+                KafkaConfig::default(),
+                clock,
+                shared_fs,
+            )),
+        })
+    }
+
+    pub fn topic(&self) -> Arc<KafkaTopic> {
+        Arc::clone(&self.topic)
+    }
+}
+
+impl PilotBackend for KafkaBrokerBackend {
+    fn platform(&self) -> Platform {
+        Platform::Kafka
+    }
+
+    fn submit(&self, cu: ComputeUnit, _spec: TaskSpec) -> Result<(), PilotError> {
+        cu.fail("broker pilots do not execute compute units".into());
+        Err(PilotError::NoCompute("kafka"))
+    }
+
+    fn broker(&self) -> Option<Arc<dyn Broker>> {
+        Some(self.topic.clone() as Arc<dyn Broker>)
+    }
+
+    fn shutdown(&self) {}
+
+    fn completed(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::Message;
+    use crate::sim::{ContentionParams, WallClock};
+
+    #[test]
+    fn kinesis_pilot_provisions_shards() {
+        let desc = PilotDescription::new(Platform::Kinesis).with_parallelism(8);
+        let b = KinesisBrokerBackend::provision(&desc, Arc::new(WallClock::new())).unwrap();
+        let broker = b.broker().unwrap();
+        assert_eq!(broker.num_partitions(), 8);
+        assert_eq!(broker.kind(), "kinesis");
+        broker
+            .put(Message::new(1, 0, Arc::new(vec![0.0; 16]), 8, 0.0))
+            .unwrap();
+    }
+
+    #[test]
+    fn kafka_pilot_provisions_partitions() {
+        let desc = PilotDescription::new(Platform::Kafka).with_parallelism(4);
+        let fs = SharedResource::new("fs", ContentionParams::ISOLATED);
+        let b =
+            KafkaBrokerBackend::provision(&desc, Arc::new(WallClock::new()), fs).unwrap();
+        assert_eq!(b.broker().unwrap().num_partitions(), 4);
+    }
+
+    #[test]
+    fn broker_pilots_reject_compute() {
+        let desc = PilotDescription::new(Platform::Kinesis);
+        let b = KinesisBrokerBackend::provision(&desc, Arc::new(WallClock::new())).unwrap();
+        let cu = ComputeUnit::new();
+        cu.transition(crate::pilot::state::CuState::Queued);
+        // queued CUs fail cleanly rather than hanging
+        assert!(b.submit(cu.clone(), TaskSpec::Sleep(0.0)).is_err());
+        assert_eq!(cu.state(), crate::pilot::state::CuState::Failed);
+    }
+}

@@ -1,0 +1,187 @@
+//! HPC plugin: allocates nodes through the Slurm-like [`Cluster`], stands
+//! up a [`DaskPool`] whose model sync rides the shared Lustre filesystem,
+//! and executes compute-units as Dask tasks.
+
+use crate::engine::StepEngine;
+use crate::hpc::{Cluster, DaskPool};
+use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
+use crate::pilot::description::{PilotDescription, Platform};
+use crate::pilot::job::{PilotBackend, PilotError};
+use crate::pilot::workers::{TaskExecutor, WorkerPool};
+use crate::sim::{ContentionParams, SharedResource};
+use crate::store::shared_fs::{SharedFsParams, SharedFsStore};
+use std::sync::Arc;
+
+/// Default Lustre contention coefficients.
+///
+/// All P workers read/write the *same* model file, so Lustre's distributed
+/// lock manager serializes conflicting extent locks — writes are close to
+/// fully serialized (alpha ≈ 1), and lock revocation traffic grows with
+/// every reader pair (beta).  Chosen so the end-to-end USL fit on the Dask
+/// side lands in the paper's observed range (σ ∈ [0.6, 1], κ > 0) — see
+/// EXPERIMENTS.md Fig 6 and `tests/usl_repro.rs`.
+pub const DEFAULT_LUSTRE_ALPHA: f64 = 0.9;
+pub const DEFAULT_LUSTRE_BETA: f64 = 0.05;
+
+struct DaskExecutor {
+    pool: Arc<DaskPool>,
+}
+
+impl TaskExecutor for DaskExecutor {
+    fn execute(&self, worker: usize, spec: TaskSpec) -> Result<CuOutcome, String> {
+        match spec {
+            TaskSpec::KMeansStep {
+                points,
+                dim,
+                model_key,
+                centroids,
+            } => {
+                let report = self
+                    .pool
+                    .process(worker % self.pool.workers(), &points, dim, &model_key, centroids)
+                    .map_err(|e| e.to_string())?;
+                Ok(CuOutcome {
+                    value: report.inertia,
+                    compute_seconds: report.compute,
+                    io_seconds: report.io_get + report.io_put,
+                    overhead_seconds: report.sync,
+                    executor: format!("dask-{}", report.worker),
+                })
+            }
+            TaskSpec::Sleep(s) => Ok(CuOutcome {
+                value: s,
+                compute_seconds: s,
+                io_seconds: 0.0,
+                overhead_seconds: 0.0,
+                executor: "dask".into(),
+            }),
+            TaskSpec::Custom(_) => Err("HPC backend runs staged tasks, not closures".into()),
+        }
+    }
+}
+
+/// The HPC processing backend.
+pub struct HpcBackend {
+    dask: Arc<DaskPool>,
+    cluster: Arc<Cluster>,
+    allocation_id: u64,
+    pool: WorkerPool,
+}
+
+impl HpcBackend {
+    pub fn provision(
+        desc: &PilotDescription,
+        engine: Arc<dyn StepEngine>,
+        shared_fs: Option<Arc<SharedResource>>,
+    ) -> Result<Self, PilotError> {
+        desc.validate()?;
+        let machine = desc.machine.machine(desc.max_nodes);
+        let cluster = Arc::new(Cluster::new(machine.clone(), desc.seed));
+        let nodes = machine.nodes_for(desc.parallelism);
+        let allocation = cluster
+            .allocate(nodes)
+            .map_err(|e| PilotError::Provision(e.to_string()))?;
+        log::info!(
+            "hpc pilot: {} nodes on {} (queue {:.0}s, startup {:.0}s)",
+            allocation.nodes,
+            machine.node.name,
+            allocation.queue_wait,
+            allocation.startup
+        );
+        let fs = shared_fs.unwrap_or_else(|| {
+            SharedResource::new(
+                "lustre",
+                ContentionParams::new(DEFAULT_LUSTRE_ALPHA, DEFAULT_LUSTRE_BETA),
+            )
+        });
+        let store = Arc::new(SharedFsStore::new(SharedFsParams::default(), fs));
+        let dask = Arc::new(DaskPool::new(
+            machine,
+            desc.parallelism,
+            engine,
+            store,
+            desc.seed,
+        ));
+        let pool = WorkerPool::new(
+            desc.parallelism,
+            Arc::new(DaskExecutor {
+                pool: Arc::clone(&dask),
+            }),
+        );
+        Ok(Self {
+            dask,
+            cluster,
+            allocation_id: allocation.id,
+            pool,
+        })
+    }
+
+    pub fn dask(&self) -> Arc<DaskPool> {
+        Arc::clone(&self.dask)
+    }
+}
+
+impl PilotBackend for HpcBackend {
+    fn platform(&self) -> Platform {
+        Platform::Dask
+    }
+
+    fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), PilotError> {
+        self.pool.submit(cu, spec).map_err(PilotError::Provision)
+    }
+
+    fn shutdown(&self) {
+        self.pool.shutdown();
+        let _ = self.cluster.release(self.allocation_id);
+    }
+
+    fn completed(&self) -> u64 {
+        self.pool.completed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CalibratedEngine;
+    use crate::pilot::description::MachineKind;
+    use crate::pilot::state::CuState;
+
+    #[test]
+    fn provision_and_run_task() {
+        let desc = PilotDescription::new(Platform::Dask)
+            .with_parallelism(4)
+            .with_machine(MachineKind::Wrangler);
+        let backend =
+            HpcBackend::provision(&desc, Arc::new(CalibratedEngine::new(1)), None).unwrap();
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        backend
+            .submit(
+                cu.clone(),
+                TaskSpec::KMeansStep {
+                    points: Arc::new(vec![0.2; 160]),
+                    dim: 8,
+                    model_key: "m".into(),
+                    centroids: 8,
+                },
+            )
+            .unwrap();
+        assert_eq!(cu.wait(), CuState::Done);
+        let o = cu.outcome().unwrap();
+        assert!(o.io_seconds > 0.0);
+        assert!(o.overhead_seconds > 0.0, "coherency sync cost");
+        assert!(o.executor.starts_with("dask-"));
+    }
+
+    #[test]
+    fn releases_allocation_on_shutdown() {
+        let desc = PilotDescription::new(Platform::Dask).with_parallelism(2);
+        let backend =
+            HpcBackend::provision(&desc, Arc::new(CalibratedEngine::new(1)), None).unwrap();
+        let nodes_before = backend.cluster.allocated_nodes();
+        assert!(nodes_before > 0);
+        backend.shutdown();
+        assert_eq!(backend.cluster.allocated_nodes(), 0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Local plugin: an in-process thread pool.  The quickest way to run
+//! bag-of-tasks / DAG workloads through the Pilot-API, and the only backend
+//! that accepts [`TaskSpec::Custom`] closures.
+
+use crate::engine::StepEngine;
+use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
+use crate::pilot::description::Platform;
+use crate::pilot::job::{PilotBackend, PilotError};
+use crate::pilot::workers::{TaskExecutor, WorkerPool};
+use crate::store::{ModelState, ModelStore, ObjectStore};
+use std::sync::Arc;
+
+struct LocalExecutor {
+    engine: Arc<dyn StepEngine>,
+    store: Arc<dyn ModelStore>,
+}
+
+impl TaskExecutor for LocalExecutor {
+    fn execute(&self, worker: usize, spec: TaskSpec) -> Result<CuOutcome, String> {
+        match spec {
+            TaskSpec::KMeansStep {
+                points,
+                dim,
+                model_key,
+                centroids,
+            } => {
+                if !self.store.contains(&model_key) {
+                    let init = ModelState::new_random(centroids, dim, 42);
+                    let _ = self.store.put(&model_key, init);
+                }
+                let (model, io_get) = self.store.get(&model_key).map_err(|e| e.to_string())?;
+                let step = self
+                    .engine
+                    .execute_step(&points, dim, &model)
+                    .map_err(|e| e.to_string())?;
+                let (_, io_put) = self
+                    .store
+                    .put(&model_key, step.model)
+                    .map_err(|e| e.to_string())?;
+                Ok(CuOutcome {
+                    value: step.inertia,
+                    compute_seconds: step.cpu_seconds,
+                    io_seconds: io_get.seconds + io_put.seconds,
+                    overhead_seconds: 0.0,
+                    executor: format!("local-{worker}"),
+                })
+            }
+            TaskSpec::Custom(f) => f().map(|value| CuOutcome {
+                value,
+                compute_seconds: 0.0,
+                io_seconds: 0.0,
+                overhead_seconds: 0.0,
+                executor: format!("local-{worker}"),
+            }),
+            TaskSpec::Sleep(s) => {
+                std::thread::sleep(std::time::Duration::from_secs_f64(s.min(1.0)));
+                Ok(CuOutcome {
+                    value: s,
+                    compute_seconds: s,
+                    io_seconds: 0.0,
+                    overhead_seconds: 0.0,
+                    executor: format!("local-{worker}"),
+                })
+            }
+        }
+    }
+}
+
+/// The local backend.
+pub struct LocalBackend {
+    pool: WorkerPool,
+}
+
+impl LocalBackend {
+    pub fn new(workers: usize, engine: Arc<dyn StepEngine>) -> Self {
+        Self {
+            pool: WorkerPool::new(
+                workers,
+                Arc::new(LocalExecutor {
+                    engine,
+                    store: Arc::new(ObjectStore::default()),
+                }),
+            ),
+        }
+    }
+}
+
+impl PilotBackend for LocalBackend {
+    fn platform(&self) -> Platform {
+        Platform::Local
+    }
+
+    fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), PilotError> {
+        self.pool
+            .submit(cu, spec)
+            .map_err(PilotError::Provision)
+    }
+
+    fn shutdown(&self) {
+        self.pool.shutdown();
+    }
+
+    fn completed(&self) -> u64 {
+        self.pool.completed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CalibratedEngine;
+    use crate::pilot::state::CuState;
+
+    #[test]
+    fn runs_kmeans_and_custom_tasks() {
+        let backend = LocalBackend::new(2, Arc::new(CalibratedEngine::new(1)));
+        let cu1 = ComputeUnit::new();
+        cu1.transition(CuState::Queued);
+        backend
+            .submit(
+                cu1.clone(),
+                TaskSpec::KMeansStep {
+                    points: Arc::new(vec![0.0; 80]),
+                    dim: 8,
+                    model_key: "m".into(),
+                    centroids: 4,
+                },
+            )
+            .unwrap();
+        let cu2 = ComputeUnit::new();
+        cu2.transition(CuState::Queued);
+        backend
+            .submit(cu2.clone(), TaskSpec::Custom(Box::new(|| Ok(7.0))))
+            .unwrap();
+        assert_eq!(cu1.wait(), CuState::Done);
+        assert_eq!(cu2.wait(), CuState::Done);
+        assert_eq!(cu2.outcome().unwrap().value, 7.0);
+        assert_eq!(backend.completed(), 2);
+    }
+}

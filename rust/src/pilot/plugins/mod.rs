@@ -1,0 +1,12 @@
+//! Platform plugins: provision a [`PilotBackend`](super::job::PilotBackend)
+//! for each supported platform (paper Fig 2's plugin architecture).
+
+pub mod broker;
+pub mod hpc;
+pub mod local;
+pub mod serverless;
+
+pub use broker::{KafkaBrokerBackend, KinesisBrokerBackend};
+pub use hpc::HpcBackend;
+pub use local::LocalBackend;
+pub use serverless::ServerlessBackend;

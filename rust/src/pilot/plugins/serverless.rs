@@ -1,0 +1,180 @@
+//! Serverless plugin: provisions a [`LambdaFleet`] ("Function Pilot",
+//! paper Fig 2 step 2a/b) and executes compute-units as function
+//! invocations against the S3-like model store.
+
+use crate::engine::StepEngine;
+use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
+use crate::pilot::description::{PilotDescription, Platform};
+use crate::pilot::job::{PilotBackend, PilotError};
+use crate::pilot::workers::{TaskExecutor, WorkerPool};
+use crate::serverless::{FunctionConfig, LambdaFleet};
+use crate::sim::SharedClock;
+use crate::store::ObjectStore;
+use std::sync::Arc;
+
+struct LambdaExecutor {
+    fleet: Arc<LambdaFleet>,
+}
+
+impl TaskExecutor for LambdaExecutor {
+    fn execute(&self, _worker: usize, spec: TaskSpec) -> Result<CuOutcome, String> {
+        match spec {
+            TaskSpec::KMeansStep {
+                points,
+                dim,
+                model_key,
+                centroids,
+            } => {
+                let report = self
+                    .fleet
+                    .invoke(&points, dim, &model_key, centroids)
+                    .map_err(|e| e.to_string())?;
+                Ok(CuOutcome {
+                    value: report.inertia,
+                    compute_seconds: report.compute,
+                    io_seconds: report.io_get + report.io_put,
+                    overhead_seconds: report.cold_start,
+                    executor: format!("lambda-{}", report.container_id),
+                })
+            }
+            TaskSpec::Sleep(s) => Ok(CuOutcome {
+                value: s,
+                compute_seconds: s,
+                io_seconds: 0.0,
+                overhead_seconds: 0.0,
+                executor: "lambda".into(),
+            }),
+            TaskSpec::Custom(_) => {
+                Err("serverless backend runs packaged functions, not closures".into())
+            }
+        }
+    }
+}
+
+/// The serverless processing backend.
+pub struct ServerlessBackend {
+    fleet: Arc<LambdaFleet>,
+    pool: WorkerPool,
+}
+
+impl ServerlessBackend {
+    pub fn provision(
+        desc: &PilotDescription,
+        engine: Arc<dyn StepEngine>,
+        clock: SharedClock,
+    ) -> Result<Self, PilotError> {
+        desc.validate()?;
+        let config = FunctionConfig {
+            memory_mb: desc.memory_mb,
+            timeout_s: desc.walltime_s,
+            package_mb: desc.package_mb,
+            max_concurrency: desc.parallelism,
+        };
+        let fleet = Arc::new(
+            LambdaFleet::new(
+                config,
+                engine,
+                Arc::new(ObjectStore::default()),
+                clock,
+                desc.seed,
+            )
+            .map_err(PilotError::Provision)?,
+        );
+        // dispatch parallelism mirrors the concurrency cap
+        let pool = WorkerPool::new(
+            desc.parallelism,
+            Arc::new(LambdaExecutor {
+                fleet: Arc::clone(&fleet),
+            }),
+        );
+        Ok(Self { fleet, pool })
+    }
+
+    pub fn fleet(&self) -> Arc<LambdaFleet> {
+        Arc::clone(&self.fleet)
+    }
+}
+
+impl PilotBackend for ServerlessBackend {
+    fn platform(&self) -> Platform {
+        Platform::Lambda
+    }
+
+    fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), PilotError> {
+        self.pool.submit(cu, spec).map_err(PilotError::Provision)
+    }
+
+    fn shutdown(&self) {
+        self.pool.shutdown();
+    }
+
+    fn completed(&self) -> u64 {
+        self.pool.completed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CalibratedEngine;
+    use crate::pilot::state::CuState;
+    use crate::sim::WallClock;
+
+    #[test]
+    fn provision_and_invoke() {
+        let desc = PilotDescription::new(Platform::Lambda).with_parallelism(2);
+        let backend = ServerlessBackend::provision(
+            &desc,
+            Arc::new(CalibratedEngine::new(1)),
+            Arc::new(WallClock::new()),
+        )
+        .unwrap();
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        backend
+            .submit(
+                cu.clone(),
+                TaskSpec::KMeansStep {
+                    points: Arc::new(vec![0.1; 160]),
+                    dim: 8,
+                    model_key: "m".into(),
+                    centroids: 8,
+                },
+            )
+            .unwrap();
+        assert_eq!(cu.wait(), CuState::Done);
+        let o = cu.outcome().unwrap();
+        assert!(o.overhead_seconds > 0.0, "first call pays a cold start");
+        assert!(o.executor.starts_with("lambda-"));
+        assert_eq!(backend.fleet().invocation_count(), 1);
+    }
+
+    #[test]
+    fn custom_closures_rejected() {
+        let desc = PilotDescription::new(Platform::Lambda);
+        let backend = ServerlessBackend::provision(
+            &desc,
+            Arc::new(CalibratedEngine::new(1)),
+            Arc::new(WallClock::new()),
+        )
+        .unwrap();
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        backend
+            .submit(cu.clone(), TaskSpec::Custom(Box::new(|| Ok(0.0))))
+            .unwrap();
+        assert_eq!(cu.wait(), CuState::Failed);
+    }
+
+    #[test]
+    fn invalid_description_rejected() {
+        let mut desc = PilotDescription::new(Platform::Lambda);
+        desc.memory_mb = 10;
+        assert!(ServerlessBackend::provision(
+            &desc,
+            Arc::new(CalibratedEngine::new(1)),
+            Arc::new(WallClock::new()),
+        )
+        .is_err());
+    }
+}

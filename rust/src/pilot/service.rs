@@ -1,0 +1,215 @@
+//! `PilotComputeService` — the Pilot-API facade (paper Fig 2's
+//! Pilot-Manager): one entry point that provisions pilots on any supported
+//! platform from a [`PilotDescription`] and hands back [`PilotJob`]s.
+
+use super::description::{PilotDescription, Platform};
+use super::job::{PilotError, PilotJob};
+use super::plugins::{
+    HpcBackend, KafkaBrokerBackend, KinesisBrokerBackend, LocalBackend, ServerlessBackend,
+};
+use crate::engine::StepEngine;
+use crate::sim::{ContentionParams, SharedClock, SharedResource};
+use std::sync::{Arc, Mutex};
+
+/// Service-wide context shared by all pilots it creates.
+pub struct PilotComputeService {
+    clock: SharedClock,
+    engine: Arc<dyn StepEngine>,
+    /// The shared filesystem of the "HPC machine" this service fronts;
+    /// Kafka pilots and Dask pilots created here contend on it together,
+    /// mirroring the paper's co-deployment.
+    shared_fs: Arc<SharedResource>,
+    pilots: Mutex<Vec<PilotJob>>,
+}
+
+impl PilotComputeService {
+    pub fn new(clock: SharedClock, engine: Arc<dyn StepEngine>) -> Self {
+        Self {
+            clock,
+            engine,
+            shared_fs: SharedResource::new(
+                "lustre",
+                ContentionParams::new(
+                    super::plugins::hpc::DEFAULT_LUSTRE_ALPHA,
+                    super::plugins::hpc::DEFAULT_LUSTRE_BETA,
+                ),
+            ),
+            pilots: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Override the shared-FS contention model (ablations; isolated FS).
+    pub fn with_shared_fs(mut self, fs: Arc<SharedResource>) -> Self {
+        self.shared_fs = fs;
+        self
+    }
+
+    pub fn shared_fs(&self) -> Arc<SharedResource> {
+        Arc::clone(&self.shared_fs)
+    }
+
+    pub fn clock(&self) -> SharedClock {
+        Arc::clone(&self.clock)
+    }
+
+    /// Provision a pilot for `description` (paper: `submit_pilot`).
+    pub fn submit_pilot(&self, description: PilotDescription) -> Result<PilotJob, PilotError> {
+        description.validate()?;
+        let backend: Arc<dyn super::job::PilotBackend> = match description.platform {
+            Platform::Local => Arc::new(LocalBackend::new(
+                description.parallelism,
+                Arc::clone(&self.engine),
+            )),
+            Platform::Lambda => Arc::new(ServerlessBackend::provision(
+                &description,
+                Arc::clone(&self.engine),
+                Arc::clone(&self.clock),
+            )?),
+            Platform::Dask => Arc::new(HpcBackend::provision(
+                &description,
+                Arc::clone(&self.engine),
+                Some(Arc::clone(&self.shared_fs)),
+            )?),
+            Platform::Kinesis => Arc::new(KinesisBrokerBackend::provision(
+                &description,
+                Arc::clone(&self.clock),
+            )?),
+            Platform::Kafka => Arc::new(KafkaBrokerBackend::provision(
+                &description,
+                Arc::clone(&self.clock),
+                Arc::clone(&self.shared_fs),
+            )?),
+        };
+        let job = PilotJob::new(description, backend);
+        self.pilots.lock().unwrap().push(job.clone());
+        Ok(job)
+    }
+
+    /// All pilots created through this service.
+    pub fn pilots(&self) -> Vec<PilotJob> {
+        self.pilots.lock().unwrap().clone()
+    }
+
+    /// Cancel everything (teardown).
+    pub fn shutdown(&self) {
+        for p in self.pilots() {
+            p.cancel();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CalibratedEngine;
+    use crate::pilot::compute_unit::TaskSpec;
+    use crate::pilot::state::PilotState;
+    use crate::sim::WallClock;
+
+    fn service() -> PilotComputeService {
+        PilotComputeService::new(
+            Arc::new(WallClock::new()),
+            Arc::new(CalibratedEngine::new(1)),
+        )
+    }
+
+    #[test]
+    fn submits_pilots_on_every_platform() {
+        let svc = service();
+        for platform in [
+            Platform::Local,
+            Platform::Lambda,
+            Platform::Dask,
+            Platform::Kinesis,
+            Platform::Kafka,
+        ] {
+            let job = svc
+                .submit_pilot(PilotDescription::new(platform).with_parallelism(2))
+                .unwrap();
+            assert_eq!(job.state(), PilotState::Running, "{platform:?}");
+            assert_eq!(job.platform(), platform);
+        }
+        assert_eq!(svc.pilots().len(), 5);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unified_interface_runs_same_workload_everywhere() {
+        // the paper's interoperability claim: identical submission code on
+        // serverless and HPC
+        let svc = service();
+        for platform in [Platform::Local, Platform::Lambda, Platform::Dask] {
+            let job = svc
+                .submit_pilot(PilotDescription::new(platform).with_parallelism(2))
+                .unwrap();
+            let cu = job
+                .submit_compute_unit(TaskSpec::KMeansStep {
+                    points: Arc::new(vec![0.1; 160]),
+                    dim: 8,
+                    model_key: format!("m-{}", platform.name()),
+                    centroids: 8,
+                })
+                .unwrap();
+            assert_eq!(cu.wait(), crate::pilot::state::CuState::Done, "{platform:?}");
+            job.finish();
+            assert_eq!(job.state(), PilotState::Done);
+        }
+    }
+
+    #[test]
+    fn kafka_and_dask_share_the_filesystem() {
+        let svc = service();
+        let fs_before = svc.shared_fs();
+        let kafka = svc
+            .submit_pilot(PilotDescription::new(Platform::Kafka).with_parallelism(2))
+            .unwrap();
+        let _broker = kafka.broker().unwrap();
+        // the broker's appends enter the same resource the service owns
+        assert_eq!(fs_before.current_users(), 0);
+        let g = fs_before.enter();
+        assert_eq!(fs_before.current_users(), 1);
+        drop(g);
+    }
+
+    #[test]
+    fn submit_to_finished_pilot_fails() {
+        let svc = service();
+        let job = svc
+            .submit_pilot(PilotDescription::new(Platform::Local))
+            .unwrap();
+        job.finish();
+        assert!(matches!(
+            job.submit_compute_unit(TaskSpec::Sleep(0.0)),
+            Err(PilotError::NotRunning(_))
+        ));
+    }
+
+    #[test]
+    fn dag_of_dependent_tasks() {
+        // "the pilot abstraction can be used to ... compose complex DAGs":
+        // stage 2 consumes stage 1 results.
+        let svc = service();
+        let job = svc
+            .submit_pilot(PilotDescription::new(Platform::Local).with_parallelism(4))
+            .unwrap();
+        let stage1: Vec<_> = (0..4)
+            .map(|i| {
+                job.submit_compute_unit(TaskSpec::Custom(Box::new(move || Ok(i as f64))))
+                    .unwrap()
+            })
+            .collect();
+        let sum: f64 = stage1
+            .iter()
+            .map(|cu| {
+                cu.wait();
+                cu.outcome().unwrap().value
+            })
+            .sum();
+        let stage2 = job
+            .submit_compute_unit(TaskSpec::Custom(Box::new(move || Ok(sum * 10.0))))
+            .unwrap();
+        stage2.wait();
+        assert_eq!(stage2.outcome().unwrap().value, 60.0);
+        job.finish();
+    }
+}

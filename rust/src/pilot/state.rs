@@ -1,0 +1,148 @@
+//! State machines for pilots and compute-units.
+//!
+//! The pilot abstraction's lifecycle (P* model, Luckow et al. 2012):
+//! pilots move `New → Pending → Running → {Done, Failed, Canceled}`;
+//! compute-units move `New → Queued → Running → {Done, Failed, Canceled}`.
+//! Transitions are validated — an illegal transition is a bug, not data.
+
+use std::fmt;
+
+/// Pilot (resource container) lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PilotState {
+    New,
+    /// Submitted to the resource manager (batch queue / provisioning).
+    Pending,
+    /// Resources are up; compute-units can run.
+    Running,
+    Done,
+    Failed,
+    Canceled,
+}
+
+impl PilotState {
+    pub fn is_terminal(self) -> bool {
+        matches!(self, Self::Done | Self::Failed | Self::Canceled)
+    }
+
+    /// Whether `self -> next` is a legal transition.
+    pub fn can_transition(self, next: PilotState) -> bool {
+        use PilotState::*;
+        matches!(
+            (self, next),
+            (New, Pending)
+                | (New, Canceled)
+                | (Pending, Running)
+                | (Pending, Failed)
+                | (Pending, Canceled)
+                | (Running, Done)
+                | (Running, Failed)
+                | (Running, Canceled)
+        )
+    }
+}
+
+impl fmt::Display for PilotState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Self::New => "new",
+            Self::Pending => "pending",
+            Self::Running => "running",
+            Self::Done => "done",
+            Self::Failed => "failed",
+            Self::Canceled => "canceled",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Compute-unit (task) lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CuState {
+    New,
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Canceled,
+}
+
+impl CuState {
+    pub fn is_terminal(self) -> bool {
+        matches!(self, Self::Done | Self::Failed | Self::Canceled)
+    }
+
+    pub fn can_transition(self, next: CuState) -> bool {
+        use CuState::*;
+        matches!(
+            (self, next),
+            (New, Queued)
+                | (New, Canceled)
+                | (Queued, Running)
+                | (Queued, Failed) // rejected at submission
+                | (Queued, Canceled)
+                | (Running, Done)
+                | (Running, Failed)
+                | (Running, Canceled)
+        )
+    }
+}
+
+impl fmt::Display for CuState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Self::New => "new",
+            Self::Queued => "queued",
+            Self::Running => "running",
+            Self::Done => "done",
+            Self::Failed => "failed",
+            Self::Canceled => "canceled",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pilot_happy_path() {
+        use PilotState::*;
+        let path = [New, Pending, Running, Done];
+        for w in path.windows(2) {
+            assert!(w[0].can_transition(w[1]), "{} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn pilot_illegal_transitions() {
+        use PilotState::*;
+        assert!(!New.can_transition(Running)); // must go through Pending
+        assert!(!Done.can_transition(Running));
+        assert!(!Failed.can_transition(Pending));
+        assert!(!Running.can_transition(Pending));
+    }
+
+    #[test]
+    fn terminal_states_have_no_exits() {
+        use PilotState::*;
+        for s in [Done, Failed, Canceled] {
+            assert!(s.is_terminal());
+            for t in [New, Pending, Running, Done, Failed, Canceled] {
+                assert!(!s.can_transition(t));
+            }
+        }
+    }
+
+    #[test]
+    fn cu_happy_path_and_cancel() {
+        use CuState::*;
+        assert!(New.can_transition(Queued));
+        assert!(Queued.can_transition(Running));
+        assert!(Running.can_transition(Done));
+        assert!(Queued.can_transition(Canceled));
+        assert!(!Done.can_transition(Running));
+        assert!(!New.can_transition(Running));
+    }
+}

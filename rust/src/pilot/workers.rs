@@ -1,0 +1,184 @@
+//! Shared worker-pool plumbing for pilot backends: N threads pulling
+//! (ComputeUnit, TaskSpec) pairs from a channel and running a
+//! backend-provided executor function.
+
+use super::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
+use super::state::CuState;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = (ComputeUnit, TaskSpec);
+
+/// Executes one task on worker `index`.
+pub trait TaskExecutor: Send + Sync + 'static {
+    fn execute(&self, worker: usize, spec: TaskSpec) -> Result<CuOutcome, String>;
+}
+
+/// A fixed-size pool of task workers.
+pub struct WorkerPool {
+    sender: Mutex<Option<mpsc::Sender<Job>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    completed: Arc<AtomicU64>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize, executor: Arc<dyn TaskExecutor>) -> Self {
+        assert!(workers > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let completed = Arc::new(AtomicU64::new(0));
+        let handles = (0..workers)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let executor = Arc::clone(&executor);
+                let completed = Arc::clone(&completed);
+                std::thread::Builder::new()
+                    .name(format!("pilot-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let g = rx.lock().unwrap();
+                            g.recv()
+                        };
+                        let Ok((cu, spec)) = job else { break };
+                        if cu.state() != CuState::Queued {
+                            continue; // canceled while queued
+                        }
+                        cu.transition(CuState::Running);
+                        match executor.execute(i, spec) {
+                            Ok(outcome) => {
+                                cu.complete(outcome);
+                                completed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => cu.fail(e),
+                        }
+                    })
+                    .expect("spawn pilot worker")
+            })
+            .collect();
+        Self {
+            sender: Mutex::new(Some(tx)),
+            handles: Mutex::new(handles),
+            completed,
+        }
+    }
+
+    pub fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), String> {
+        let g = self.sender.lock().unwrap();
+        match g.as_ref() {
+            Some(tx) => tx.send((cu, spec)).map_err(|_| "pool stopped".to_string()),
+            None => Err("pool stopped".to_string()),
+        }
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Close the queue and join all workers.
+    pub fn shutdown(&self) {
+        let tx = self.sender.lock().unwrap().take();
+        drop(tx);
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Doubler;
+    impl TaskExecutor for Doubler {
+        fn execute(&self, worker: usize, spec: TaskSpec) -> Result<CuOutcome, String> {
+            match spec {
+                TaskSpec::Sleep(s) => Ok(CuOutcome {
+                    value: s * 2.0,
+                    compute_seconds: s,
+                    io_seconds: 0.0,
+                    overhead_seconds: 0.0,
+                    executor: format!("w{worker}"),
+                }),
+                TaskSpec::Custom(f) => f().map(|v| CuOutcome {
+                    value: v,
+                    compute_seconds: 0.0,
+                    io_seconds: 0.0,
+                    overhead_seconds: 0.0,
+                    executor: format!("w{worker}"),
+                }),
+                _ => Err("unsupported".into()),
+            }
+        }
+    }
+
+    #[test]
+    fn executes_tasks_in_parallel() {
+        let pool = WorkerPool::new(4, Arc::new(Doubler));
+        let cus: Vec<ComputeUnit> = (0..16)
+            .map(|i| {
+                let cu = ComputeUnit::new();
+                cu.transition(CuState::Queued);
+                pool.submit(cu.clone(), TaskSpec::Sleep(i as f64)).unwrap();
+                cu
+            })
+            .collect();
+        for (i, cu) in cus.iter().enumerate() {
+            assert_eq!(cu.wait(), CuState::Done);
+            assert_eq!(cu.outcome().unwrap().value, i as f64 * 2.0);
+        }
+        assert_eq!(pool.completed(), 16);
+    }
+
+    #[test]
+    fn failures_propagate() {
+        let pool = WorkerPool::new(2, Arc::new(Doubler));
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        pool.submit(
+            cu.clone(),
+            TaskSpec::Custom(Box::new(|| Err("kaput".into()))),
+        )
+        .unwrap();
+        assert_eq!(cu.wait(), CuState::Failed);
+        assert_eq!(cu.error().unwrap(), "kaput");
+    }
+
+    #[test]
+    fn canceled_cus_are_skipped() {
+        let pool = WorkerPool::new(1, Arc::new(Doubler));
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        cu.cancel();
+        pool.submit(cu.clone(), TaskSpec::Sleep(0.0)).unwrap();
+        pool.shutdown();
+        assert_eq!(cu.state(), CuState::Canceled);
+    }
+
+    #[test]
+    fn shutdown_then_submit_errors() {
+        let pool = WorkerPool::new(1, Arc::new(Doubler));
+        pool.shutdown();
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        assert!(pool.submit(cu, TaskSpec::Sleep(0.0)).is_err());
+    }
+
+    #[test]
+    fn custom_closures_return_values() {
+        let pool = WorkerPool::new(2, Arc::new(Doubler));
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        pool.submit(cu.clone(), TaskSpec::Custom(Box::new(|| Ok(42.0))))
+            .unwrap();
+        cu.wait();
+        assert_eq!(cu.outcome().unwrap().value, 42.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust loader.  `artifacts/manifest.json` lists one HLO-text file per
+//! (message-size, workload-complexity) shape variant of the K-Means step.
+
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("cannot read {path}: {source}")]
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+    #[error("unsupported manifest schema {0}")]
+    Schema(i64),
+}
+
+/// One model variant's metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantMeta {
+    pub name: String,
+    pub file: String,
+    pub points: usize,
+    pub centroids: usize,
+    pub dim: usize,
+}
+
+impl VariantMeta {
+    /// Absolute path of the HLO text file.
+    pub fn path(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.file)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ArtifactError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|source| ArtifactError::Io {
+            path: path.clone(),
+            source,
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest JSON (separated for testability).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, ArtifactError> {
+        let v = json::parse(text).map_err(|e| ArtifactError::Parse(e.to_string()))?;
+        let schema = v.get("schema").as_i64().unwrap_or(-1);
+        if schema != 1 {
+            return Err(ArtifactError::Schema(schema));
+        }
+        let raw = v
+            .get("variants")
+            .as_arr()
+            .ok_or_else(|| ArtifactError::Parse("missing variants".into()))?;
+        let mut variants = Vec::with_capacity(raw.len());
+        for (i, item) in raw.iter().enumerate() {
+            let get_usize = |key: &str| {
+                item.get(key)
+                    .as_usize()
+                    .ok_or_else(|| ArtifactError::Parse(format!("variant {i}: bad {key}")))
+            };
+            let get_str = |key: &str| {
+                item.get(key)
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| ArtifactError::Parse(format!("variant {i}: bad {key}")))
+            };
+            variants.push(VariantMeta {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                points: get_usize("points")?,
+                centroids: get_usize("centroids")?,
+                dim: get_usize("dim")?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            variants,
+        })
+    }
+
+    /// Exact-match lookup by workload shape.
+    pub fn find(&self, points: usize, centroids: usize) -> Option<&VariantMeta> {
+        self.variants
+            .iter()
+            .find(|v| v.points == points && v.centroids == centroids)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&VariantMeta> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// Default artifacts directory: `$PS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Make sure every listed HLO file exists on disk.
+    pub fn verify_files(&self) -> Result<(), ArtifactError> {
+        for v in &self.variants {
+            let p = v.path(&self.dir);
+            if !p.exists() {
+                return Err(ArtifactError::Io {
+                    path: p,
+                    source: std::io::Error::new(std::io::ErrorKind::NotFound, "missing artifact"),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Convenience: load a manifest by conventional name for the Json value.
+impl From<&VariantMeta> for Json {
+    fn from(v: &VariantMeta) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(v.name.as_str())),
+            ("file", Json::from(v.file.as_str())),
+            ("points", Json::from(v.points)),
+            ("centroids", Json::from(v.centroids)),
+            ("dim", Json::from(v.dim)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "schema": 1,
+        "model": "minibatch_kmeans_step",
+        "dim": 8,
+        "variants": [
+            {"name": "kmeans_n256_c16_d8", "file": "kmeans_n256_c16_d8.hlo.txt",
+             "points": 256, "centroids": 16, "dim": 8,
+             "inputs": [], "outputs": []},
+            {"name": "kmeans_n8000_c1024_d8", "file": "kmeans_n8000_c1024_d8.hlo.txt",
+             "points": 8000, "centroids": 1024, "dim": 8,
+             "inputs": [], "outputs": []}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        let v = m.find(8000, 1024).unwrap();
+        assert_eq!(v.name, "kmeans_n8000_c1024_d8");
+        assert_eq!(v.path(&m.dir), Path::new("/tmp/a/kmeans_n8000_c1024_d8.hlo.txt"));
+        assert!(m.find(9999, 1).is_none());
+        assert!(m.by_name("kmeans_n256_c16_d8").is_some());
+    }
+
+    #[test]
+    fn bad_schema_rejected() {
+        let bad = SAMPLE.replace("\"schema\": 1", "\"schema\": 2");
+        assert!(matches!(
+            Manifest::parse(Path::new("."), &bad),
+            Err(ArtifactError::Schema(2))
+        ));
+    }
+
+    #[test]
+    fn parse_real_manifest_if_present() {
+        // integration sanity: when `make artifacts` has run, the real
+        // manifest must parse and reference existing files.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find(8000, 1024).is_some(), "paper grid variant missing");
+            m.verify_files().unwrap();
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Calibration: measure real PJRT execution times per artifact variant and
+//! turn them into the service-time distributions the simulator uses.
+//!
+//! This is the bridge between the live and simulated execution modes
+//! (DESIGN.md §Execution modes): simulated compute cost is whatever the
+//! real compiled kernel costs on this machine, not a made-up constant.
+
+use super::engine::PjrtEngine;
+use crate::engine::{CalibratedEngine, WorkloadKey};
+use crate::sim::Dist;
+use crate::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// Measured calibration for one variant.
+#[derive(Debug, Clone)]
+pub struct CalibrationRow {
+    pub key: WorkloadKey,
+    pub samples: Vec<f64>,
+    pub dist: Dist,
+}
+
+/// Run `reps` executions per variant (after one warm-up compile+run) and
+/// fit service-time distributions.
+pub fn calibrate(engine: &PjrtEngine, reps: usize, seed: u64) -> Vec<CalibrationRow> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut rows = Vec::new();
+    let variants: Vec<_> = engine.manifest().variants.clone();
+    for v in variants {
+        let points: Arc<Vec<f32>> = Arc::new(
+            (0..v.points * v.dim)
+                .map(|_| rng.normal() as f32)
+                .collect(),
+        );
+        let centroids: Arc<Vec<f32>> = Arc::new(
+            (0..v.centroids * v.dim)
+                .map(|_| rng.normal() as f32 * 5.0)
+                .collect(),
+        );
+        let counts: Arc<Vec<f32>> = Arc::new(vec![0.0; v.centroids]);
+
+        // warm-up: compile + first run
+        let warm = engine.execute_variant(
+            Arc::clone(&points),
+            Arc::clone(&centroids),
+            Arc::clone(&counts),
+            v.points,
+            v.centroids,
+        );
+        if let Err(e) = warm {
+            log::warn!("calibration skip {}: {e}", v.name);
+            continue;
+        }
+
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            match engine.execute_variant(
+                Arc::clone(&points),
+                Arc::clone(&centroids),
+                Arc::clone(&counts),
+                v.points,
+                v.centroids,
+            ) {
+                Ok(r) => samples.push(r.exec_seconds),
+                Err(e) => log::warn!("calibration rep failed for {}: {e}", v.name),
+            }
+        }
+        if samples.is_empty() {
+            continue;
+        }
+        let dist = Dist::from_observations(&samples);
+        log::info!(
+            "calibrated {}: mean {:.4}s over {} reps",
+            v.name,
+            dist.mean(),
+            samples.len()
+        );
+        rows.push(CalibrationRow {
+            key: (v.points, v.centroids),
+            samples,
+            dist,
+        });
+    }
+    rows
+}
+
+/// Build a simulation engine from calibration rows.
+pub fn calibrated_engine(rows: &[CalibrationRow], seed: u64) -> CalibratedEngine {
+    let mut eng = CalibratedEngine::new(seed);
+    for row in rows {
+        eng.insert(row.key, row.dist.clone());
+    }
+    eng
+}
+
+/// Serialize rows for reuse (EXPERIMENTS.md provenance + offline sim runs).
+pub fn to_json(rows: &[CalibrationRow]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("points", Json::from(r.key.0)),
+                    ("centroids", Json::from(r.key.1)),
+                    ("mean_s", Json::from(r.dist.mean())),
+                    (
+                        "samples",
+                        Json::Arr(r.samples.iter().map(|&s| Json::from(s)).collect()),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Load calibration rows back from JSON.
+pub fn from_json(v: &crate::util::json::Json) -> Vec<CalibrationRow> {
+    let mut rows = Vec::new();
+    if let Some(arr) = v.as_arr() {
+        for item in arr {
+            let (Some(p), Some(c)) = (
+                item.get("points").as_usize(),
+                item.get("centroids").as_usize(),
+            ) else {
+                continue;
+            };
+            let samples: Vec<f64> = item
+                .get("samples")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or_default();
+            if samples.is_empty() {
+                continue;
+            }
+            let dist = Dist::from_observations(&samples);
+            rows.push(CalibrationRow {
+                key: (p, c),
+                samples,
+                dist,
+            });
+        }
+    }
+    rows
+}
+
+/// A built-in fallback calibration (measured on the reference dev box, see
+/// EXPERIMENTS.md §Perf) used when artifacts haven't been built — keeps the
+/// simulation benches runnable standalone.
+pub fn fallback_rows() -> Vec<CalibrationRow> {
+    let table: &[(usize, usize, f64)] = &[
+        (8_000, 128, 0.004),
+        (8_000, 1_024, 0.022),
+        (8_000, 8_192, 0.165),
+        (16_000, 128, 0.008),
+        (16_000, 1_024, 0.044),
+        (16_000, 8_192, 0.330),
+        (26_000, 128, 0.013),
+        (26_000, 1_024, 0.072),
+        (26_000, 8_192, 0.540),
+        (256, 16, 0.0006),
+    ];
+    table
+        .iter()
+        .map(|&(p, c, mean)| {
+            let samples = vec![mean * 0.97, mean, mean * 1.03];
+            CalibrationRow {
+                key: (p, c),
+                dist: Dist::from_observations(&samples),
+                samples,
+            }
+        })
+        .collect()
+}
+
+/// Calibration rows from a JSON file if it exists, else the fallback.
+pub fn load_or_fallback(path: &std::path::Path) -> Vec<CalibrationRow> {
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(v) = crate::util::json::parse(&text) {
+            let rows = from_json(&v);
+            if !rows.is_empty() {
+                return rows;
+            }
+        }
+    }
+    fallback_rows()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fallback_covers_paper_grid() {
+        let rows = fallback_rows();
+        for p in [8_000, 16_000, 26_000] {
+            for c in [128, 1_024, 8_192] {
+                assert!(rows.iter().any(|r| r.key == (p, c)), "missing {p}x{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let rows = fallback_rows();
+        let j = to_json(&rows);
+        let back = from_json(&j);
+        assert_eq!(back.len(), rows.len());
+        for (a, b) in rows.iter().zip(&back) {
+            assert_eq!(a.key, b.key);
+            assert!((a.dist.mean() - b.dist.mean()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn calibrated_engine_built_from_rows() {
+        let rows = fallback_rows();
+        let eng = calibrated_engine(&rows, 1);
+        assert_eq!(eng.calibrated_keys().len(), rows.len());
+    }
+
+    #[test]
+    fn fallback_costs_scale_with_work() {
+        let rows = fallback_rows();
+        let mean_of = |p: usize, c: usize| {
+            rows.iter()
+                .find(|r| r.key == (p, c))
+                .unwrap()
+                .dist
+                .mean()
+        };
+        assert!(mean_of(8_000, 8_192) > mean_of(8_000, 128) * 10.0);
+        assert!(mean_of(26_000, 1_024) > mean_of(8_000, 1_024) * 2.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! [`PjrtEngine`]: the live [`StepEngine`] — every call executes the AOT
+//! K-Means artifact on the PJRT CPU client.  Requests round-robin over a
+//! small pool of runtime threads (see `server.rs` for why threads own the
+//! clients).
+
+use super::artifact::Manifest;
+use super::server::{ExecReply, ExecRequest, RuntimeThread};
+use crate::engine::{EngineError, StepEngine, StepResult};
+use crate::store::ModelState;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Live PJRT-backed step engine.
+pub struct PjrtEngine {
+    manifest: Manifest,
+    threads: Vec<RuntimeThread>,
+    next: AtomicUsize,
+}
+
+impl PjrtEngine {
+    /// Start `pool_size` runtime threads serving `manifest`'s artifacts.
+    pub fn new(manifest: Manifest, pool_size: usize) -> Self {
+        assert!(pool_size > 0);
+        let threads = (0..pool_size)
+            .map(|_| RuntimeThread::spawn(manifest.clone()))
+            .collect();
+        Self {
+            manifest,
+            threads,
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Load from the default artifacts directory with one thread.
+    pub fn from_default_dir() -> Result<Self, super::artifact::ArtifactError> {
+        let manifest = Manifest::load(&Manifest::default_dir())?;
+        Ok(Self::new(manifest, 1))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Raw variant execution (used by calibration, which needs the pure
+    /// exec time without store/ModelState plumbing).
+    pub fn execute_variant(
+        &self,
+        points: Arc<Vec<f32>>,
+        centroids: Arc<Vec<f32>>,
+        counts: Arc<Vec<f32>>,
+        n_points: usize,
+        n_centroids: usize,
+    ) -> Result<ExecReply, EngineError> {
+        let variant = self
+            .manifest
+            .find(n_points, n_centroids)
+            .ok_or(EngineError::NoVariant {
+                n_points,
+                centroids: n_centroids,
+            })?
+            .clone();
+        let (tx, rx) = mpsc::channel();
+        let idx = self.next.fetch_add(1, Ordering::Relaxed) % self.threads.len();
+        self.threads[idx]
+            .sender()
+            .send(ExecRequest {
+                variant,
+                points,
+                centroids,
+                counts,
+                reply: tx,
+            })
+            .map_err(|_| EngineError::ExecutionFailed("runtime thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| EngineError::ExecutionFailed("runtime reply dropped".into()))?
+            .map_err(EngineError::ExecutionFailed)
+    }
+}
+
+impl StepEngine for PjrtEngine {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute_step(
+        &self,
+        points: &[f32],
+        dim: usize,
+        model: &ModelState,
+    ) -> Result<StepResult, EngineError> {
+        if dim == 0 || points.len() % dim != 0 {
+            return Err(EngineError::ShapeMismatch(format!(
+                "len {} not divisible by dim {dim}",
+                points.len()
+            )));
+        }
+        let n_points = points.len() / dim;
+        let reply = self.execute_variant(
+            Arc::new(points.to_vec()),
+            Arc::clone(&model.centroids),
+            Arc::clone(&model.counts),
+            n_points,
+            model.num_centroids(),
+        )?;
+        Ok(StepResult {
+            model: ModelState {
+                centroids: Arc::new(reply.centroids),
+                counts: Arc::new(reply.counts),
+                dim,
+                version: model.version,
+            },
+            inertia: reply.inertia,
+            cpu_seconds: reply.exec_seconds,
+        })
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT-lowered HLO artifacts (`make artifacts`)
+//! and executes them from the Rust request path — Python never runs here.
+//!
+//! - [`artifact`] — manifest contract with `python/compile/aot.py`
+//! - [`server`] — runtime threads owning the (non-Send) PJRT client
+//! - [`engine`] — [`PjrtEngine`], the live [`crate::engine::StepEngine`]
+//! - [`calibrate`] — measure real exec times → simulator distributions
+
+pub mod artifact;
+pub mod calibrate;
+pub mod engine;
+pub mod server;
+
+pub use artifact::{ArtifactError, Manifest, VariantMeta};
+pub use calibrate::{calibrate, calibrated_engine, CalibrationRow};
+pub use engine::PjrtEngine;

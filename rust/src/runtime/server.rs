@@ -1,0 +1,166 @@
+//! PJRT execution threads.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`/`Sync`), so all
+//! PJRT work happens on dedicated runtime threads that own their client and
+//! compiled-executable cache; the rest of the system talks to them through
+//! channels.  One request = one K-Means step on one message.
+
+use super::artifact::{Manifest, VariantMeta};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A step-execution request.
+pub struct ExecRequest {
+    pub variant: VariantMeta,
+    pub points: Arc<Vec<f32>>,
+    pub centroids: Arc<Vec<f32>>,
+    pub counts: Arc<Vec<f32>>,
+    pub reply: mpsc::Sender<Result<ExecReply, String>>,
+}
+
+/// A step-execution result.
+#[derive(Debug)]
+pub struct ExecReply {
+    pub centroids: Vec<f32>,
+    pub counts: Vec<f32>,
+    pub inertia: f64,
+    /// Pure PJRT execute time (excludes channel/queueing overhead).
+    pub exec_seconds: f64,
+}
+
+/// Handle to one runtime thread.
+pub struct RuntimeThread {
+    sender: mpsc::Sender<ExecRequest>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl RuntimeThread {
+    /// Spawn a runtime thread serving executions for `manifest`'s artifacts.
+    pub fn spawn(manifest: Manifest) -> Self {
+        let (tx, rx) = mpsc::channel::<ExecRequest>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || runtime_main(manifest, rx))
+            .expect("spawn pjrt runtime thread");
+        Self {
+            sender: tx,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn sender(&self) -> mpsc::Sender<ExecRequest> {
+        self.sender.clone()
+    }
+}
+
+impl Drop for RuntimeThread {
+    fn drop(&mut self) {
+        // closing the channel ends the thread's recv loop
+        let (tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.sender, tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn runtime_main(manifest: Manifest, rx: mpsc::Receiver<ExecRequest>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            log::error!("PJRT CPU client failed: {e}");
+            // drain requests with errors so callers unblock
+            for req in rx {
+                let _ = req.reply.send(Err(format!("no PJRT client: {e}")));
+            }
+            return;
+        }
+    };
+    log::debug!(
+        "pjrt runtime up: platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    for req in rx {
+        let result = serve_one(&client, &mut cache, &manifest, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn serve_one(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    req: &ExecRequest,
+) -> Result<ExecReply, String> {
+    let v = &req.variant;
+    if !cache.contains_key(&v.name) {
+        let path = v.path(&manifest.dir);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| format!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| format!("compile {}: {e}", v.name))?;
+        log::info!(
+            "compiled {} in {:.2}s",
+            v.name,
+            t0.elapsed().as_secs_f64()
+        );
+        cache.insert(v.name.clone(), exe);
+    }
+    let exe = cache.get(&v.name).unwrap();
+
+    // shape checks before handing to XLA
+    if req.points.len() != v.points * v.dim {
+        return Err(format!(
+            "points len {} != {}x{}",
+            req.points.len(),
+            v.points,
+            v.dim
+        ));
+    }
+    if req.centroids.len() != v.centroids * v.dim || req.counts.len() != v.centroids {
+        return Err(format!(
+            "model shape mismatch for {} (got {} centroids x {} dim)",
+            v.name,
+            req.counts.len(),
+            if req.counts.is_empty() {
+                0
+            } else {
+                req.centroids.len() / req.counts.len()
+            },
+        ));
+    }
+
+    let points = xla::Literal::vec1(req.points.as_slice())
+        .reshape(&[v.points as i64, v.dim as i64])
+        .map_err(|e| e.to_string())?;
+    let centroids = xla::Literal::vec1(req.centroids.as_slice())
+        .reshape(&[v.centroids as i64, v.dim as i64])
+        .map_err(|e| e.to_string())?;
+    let counts = xla::Literal::vec1(req.counts.as_slice());
+
+    let t0 = Instant::now();
+    let outs = exe
+        .execute::<xla::Literal>(&[points, centroids, counts])
+        .map_err(|e| format!("execute {}: {e}", v.name))?;
+    let tuple = outs[0][0].to_literal_sync().map_err(|e| e.to_string())?;
+    let exec_seconds = t0.elapsed().as_secs_f64();
+
+    let (c_lit, n_lit, i_lit) = tuple.to_tuple3().map_err(|e| e.to_string())?;
+    Ok(ExecReply {
+        centroids: c_lit.to_vec::<f32>().map_err(|e| e.to_string())?,
+        counts: n_lit.to_vec::<f32>().map_err(|e| e.to_string())?,
+        inertia: i_lit
+            .get_first_element::<f32>()
+            .map_err(|e| e.to_string())? as f64,
+        exec_seconds,
+    })
+}

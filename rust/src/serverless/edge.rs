@@ -1,0 +1,150 @@
+//! Edge / Greengrass extension (the paper's §V future work): "With
+//! Greengrass, AWS supports the execution of Lambda functions on the edge.
+//! By moving serverless functions to the edge and thus, closer to the data,
+//! further optimizations are possible."
+//!
+//! An [`EdgeSite`] hosts Lambda-compatible functions on constrained
+//! edge hardware next to the data source: broker hops are local-network
+//! cheap (~2 ms instead of ~15 ms WAN), but CPU is weaker, memory is
+//! capped, and only a handful of containers fit on the box.
+
+use super::container::FunctionConfig;
+
+/// Greengrass-class device limits.
+pub const EDGE_MAX_MEMORY_MB: u32 = 1_536;
+/// Edge cores vs the cloud Lambda reference vCPU (embedded-class silicon).
+pub const EDGE_CPU_EFFICIENCY: f64 = 0.35;
+/// Containers that fit on one edge box.
+pub const EDGE_MAX_CONCURRENCY: usize = 4;
+/// Local-network put latency to the on-site broker, seconds.
+pub const EDGE_BROKER_LATENCY: f64 = 0.002;
+/// Cloud put latency (the Kinesis WAN default), for comparison.
+pub const CLOUD_BROKER_LATENCY: f64 = 0.015;
+
+/// One edge deployment site.
+#[derive(Debug, Clone)]
+pub struct EdgeSite {
+    pub name: String,
+    /// Device memory available to function containers.
+    pub memory_mb: u32,
+    /// Max concurrent containers on the device.
+    pub max_concurrency: usize,
+    /// Per-core speed vs the cloud Lambda reference.
+    pub cpu_efficiency: f64,
+    /// One-way latency to the site-local broker, seconds.
+    pub broker_latency: f64,
+    /// Backhaul latency to the cloud region, seconds (for model sync to
+    /// S3 when the model store stays in the region).
+    pub backhaul_latency: f64,
+}
+
+impl Default for EdgeSite {
+    fn default() -> Self {
+        Self {
+            name: "edge-site".into(),
+            memory_mb: EDGE_MAX_MEMORY_MB,
+            max_concurrency: EDGE_MAX_CONCURRENCY,
+            cpu_efficiency: EDGE_CPU_EFFICIENCY,
+            broker_latency: EDGE_BROKER_LATENCY,
+            backhaul_latency: 0.040,
+        }
+    }
+}
+
+impl EdgeSite {
+    /// Validate and clamp a function config to this device's envelope.
+    pub fn admit(&self, mut config: FunctionConfig) -> Result<FunctionConfig, String> {
+        if config.memory_mb > self.memory_mb {
+            return Err(format!(
+                "function wants {} MB; edge site {} has {} MB",
+                config.memory_mb, self.name, self.memory_mb
+            ));
+        }
+        config.max_concurrency = config.max_concurrency.min(self.max_concurrency);
+        config.validate()?;
+        Ok(config)
+    }
+
+    /// End-to-end data latency advantage vs processing in-region: the
+    /// message skips the WAN hop to the cloud broker.
+    pub fn ingest_latency_saving(&self) -> f64 {
+        (CLOUD_BROKER_LATENCY - self.broker_latency).max(0.0)
+    }
+
+    /// Compute-time ratio edge/cloud for the same function memory: how
+    /// much slower one step runs on the edge device.
+    pub fn compute_slowdown(&self, config: &FunctionConfig) -> f64 {
+        (config.cpu_factor() * super::container::LAMBDA_CPU_EFFICIENCY)
+            / (config.cpu_factor() * self.cpu_efficiency)
+    }
+
+    /// Break-even compute time: for steps shorter than this, the edge's
+    /// ingest saving beats its compute penalty and the function should run
+    /// at the edge (the paper's "further optimizations are possible").
+    pub fn breakeven_compute_seconds(&self, config: &FunctionConfig) -> f64 {
+        // saving >= cloud_compute * (slowdown - 1)
+        let slowdown = self.compute_slowdown(config);
+        if slowdown <= 1.0 {
+            return f64::INFINITY;
+        }
+        self.ingest_latency_saving() / (slowdown - 1.0)
+    }
+
+    /// Placement decision for a step with known cloud-side compute cost.
+    pub fn should_run_at_edge(&self, config: &FunctionConfig, cloud_compute_s: f64) -> bool {
+        cloud_compute_s <= self.breakeven_compute_seconds(config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(memory_mb: u32) -> FunctionConfig {
+        FunctionConfig {
+            memory_mb,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn admission_clamps_and_rejects() {
+        let site = EdgeSite::default();
+        let ok = site.admit(cfg(1024)).unwrap();
+        assert!(ok.max_concurrency <= EDGE_MAX_CONCURRENCY);
+        assert!(site.admit(cfg(3008)).is_err(), "exceeds device memory");
+    }
+
+    #[test]
+    fn edge_is_slower_but_closer() {
+        let site = EdgeSite::default();
+        let c = cfg(1024);
+        assert!(site.compute_slowdown(&c) > 1.0);
+        assert!(site.ingest_latency_saving() > 0.01);
+    }
+
+    #[test]
+    fn placement_prefers_edge_for_short_steps() {
+        // short pre-processing steps (the paper's event-detection use case)
+        // go to the edge; heavy model updates stay in the region
+        let site = EdgeSite::default();
+        let c = cfg(1024);
+        let breakeven = site.breakeven_compute_seconds(&c);
+        assert!(breakeven > 0.0 && breakeven.is_finite());
+        assert!(site.should_run_at_edge(&c, breakeven * 0.5));
+        assert!(!site.should_run_at_edge(&c, breakeven * 2.0));
+    }
+
+    #[test]
+    fn faster_edge_hardware_always_wins() {
+        let site = EdgeSite {
+            cpu_efficiency: super::super::container::LAMBDA_CPU_EFFICIENCY * 2.0,
+            ..Default::default()
+        };
+        assert_eq!(
+            site.breakeven_compute_seconds(&cfg(1024)),
+            f64::INFINITY
+        );
+        assert!(site.should_run_at_edge(&cfg(1024), 1e9));
+    }
+}

@@ -1,0 +1,331 @@
+//! The Lambda-like FaaS runtime: container pool, invocation lifecycle,
+//! walltime enforcement, billing — the serverless processing platform of
+//! the paper's AWS experiments.
+//!
+//! One invocation = get model (S3-like store) → compute step (engine,
+//! scaled by the container's CPU factor and multi-tenancy jitter) → put
+//! model.  Containers are strongly isolated: no cross-container contention
+//! term anywhere, which is precisely why the fitted USL σ, κ ≈ 0.
+
+use super::container::{Container, FunctionConfig};
+use crate::engine::{EngineError, StepEngine};
+use crate::sim::SharedClock;
+use crate::store::{ModelStore, StoreError};
+use crate::util::rng::Pcg32;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Why an invocation failed.
+#[derive(Debug, thiserror::Error)]
+pub enum InvokeError {
+    /// Function exceeded its configured walltime (Lambda kills it).
+    #[error("function timed out after {0:.1}s")]
+    TimedOut(f64),
+    #[error(transparent)]
+    Engine(#[from] EngineError),
+    #[error(transparent)]
+    Store(#[from] StoreError),
+    /// All containers busy and the concurrency cap is reached.
+    #[error("throttled: concurrency limit {0} reached")]
+    ConcurrencyLimit(usize),
+}
+
+/// Timing breakdown of one invocation (modeled seconds).
+#[derive(Debug, Clone)]
+pub struct InvocationReport {
+    pub container_id: u64,
+    pub cold_start: f64,
+    pub io_get: f64,
+    pub compute: f64,
+    pub io_put: f64,
+    pub inertia: f64,
+    pub billed_gb_seconds: f64,
+    /// True if this invocation created a new container.
+    pub was_cold: bool,
+}
+
+impl InvocationReport {
+    /// End-to-end function duration (what Lambda bills and Fig 3 plots).
+    pub fn duration(&self) -> f64 {
+        self.cold_start + self.io_get + self.compute + self.io_put
+    }
+}
+
+/// The function runtime ("Function Pilot" backend).
+pub struct LambdaFleet {
+    config: FunctionConfig,
+    engine: Arc<dyn StepEngine>,
+    store: Arc<dyn ModelStore>,
+    clock: SharedClock,
+    containers: Mutex<Vec<Container>>,
+    next_container_id: AtomicU64,
+    rng: Mutex<Pcg32>,
+    /// Idle container reuse window (AWS keeps sandboxes warm ~5–15 min).
+    pub keep_alive_s: f64,
+    invocations: AtomicU64,
+    cold_starts: AtomicU64,
+}
+
+impl LambdaFleet {
+    pub fn new(
+        config: FunctionConfig,
+        engine: Arc<dyn StepEngine>,
+        store: Arc<dyn ModelStore>,
+        clock: SharedClock,
+        seed: u64,
+    ) -> Result<Self, String> {
+        config.validate()?;
+        Ok(Self {
+            config,
+            engine,
+            store,
+            clock,
+            containers: Mutex::new(Vec::new()),
+            next_container_id: AtomicU64::new(1),
+            rng: Mutex::new(Pcg32::seeded(seed)),
+            keep_alive_s: 600.0,
+            invocations: AtomicU64::new(0),
+            cold_starts: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> &FunctionConfig {
+        &self.config
+    }
+
+    pub fn invocation_count(&self) -> u64 {
+        self.invocations.load(Ordering::Relaxed)
+    }
+
+    pub fn cold_start_count(&self) -> u64 {
+        self.cold_starts.load(Ordering::Relaxed)
+    }
+
+    /// Containers currently alive (warm or busy).
+    pub fn container_count(&self) -> usize {
+        self.containers.lock().unwrap().len()
+    }
+
+    /// Acquire a container at time `now`: reuse a warm idle one, or create
+    /// a new one if under the concurrency cap.  Returns (container id,
+    /// cold-start seconds, was_cold).
+    fn acquire(&self, now: f64) -> Result<(u64, f64, bool), InvokeError> {
+        let mut pool = self.containers.lock().unwrap();
+        // expire stale sandboxes
+        pool.retain(|c| c.busy_until > now || c.is_warm(now, self.keep_alive_s));
+        // a warm, idle container?
+        if let Some(c) = pool
+            .iter_mut()
+            .filter(|c| c.busy_until <= now && c.is_warm(now, self.keep_alive_s))
+            .min_by(|a, b| b.last_used.partial_cmp(&a.last_used).unwrap())
+        {
+            c.invocations += 1;
+            return Ok((c.id, 0.0, false));
+        }
+        if pool.len() >= self.config.max_concurrency {
+            return Err(InvokeError::ConcurrencyLimit(self.config.max_concurrency));
+        }
+        let id = self.next_container_id.fetch_add(1, Ordering::Relaxed);
+        let cold = {
+            let mut rng = self.rng.lock().unwrap();
+            self.config.cold_start_dist().sample(&mut rng)
+        };
+        pool.push(Container {
+            id,
+            busy_until: now, // caller marks busy via finish()
+            last_used: now,
+            invocations: 1,
+        });
+        self.cold_starts.fetch_add(1, Ordering::Relaxed);
+        Ok((id, cold, true))
+    }
+
+    /// Mark a container's work interval (so later acquires see it busy
+    /// until `until` in simulated time).
+    fn finish(&self, id: u64, until: f64) {
+        let mut pool = self.containers.lock().unwrap();
+        if let Some(c) = pool.iter_mut().find(|c| c.id == id) {
+            c.busy_until = until;
+            c.last_used = until;
+        }
+    }
+
+    /// Invoke the function on one message's points.
+    ///
+    /// `model_key` names the shared model object in the store; if absent, a
+    /// fresh model with `centroids` centroids is initialized first (the
+    /// deploy step does this in practice).
+    pub fn invoke(
+        &self,
+        points: &[f32],
+        dim: usize,
+        model_key: &str,
+        centroids: usize,
+    ) -> Result<InvocationReport, InvokeError> {
+        let now = self.clock.now();
+        let (container_id, cold_start, was_cold) = self.acquire(now)?;
+        self.invocations.fetch_add(1, Ordering::Relaxed);
+
+        if !self.store.contains(model_key) {
+            let init = crate::store::ModelState::new_random(centroids, dim, 42);
+            let _ = self.store.put(model_key, init);
+        }
+        let (model, io_get) = self.store.get(model_key)?;
+
+        let step = self.engine.execute_step(points, dim, &model)?;
+        // CPU share + multi-tenancy jitter
+        let noise = {
+            let mut rng = self.rng.lock().unwrap();
+            rng.normal_with(1.0, self.config.jitter_cv()).max(0.3)
+        };
+        let compute = step.cpu_seconds
+            / (self.config.cpu_factor() * super::container::LAMBDA_CPU_EFFICIENCY)
+            * noise;
+
+        let (_, io_put) = self.store.put(model_key, step.model)?;
+
+        let duration = cold_start + io_get.seconds + compute + io_put.seconds;
+        if duration > self.config.timeout_s {
+            self.finish(container_id, now + self.config.timeout_s);
+            return Err(InvokeError::TimedOut(self.config.timeout_s));
+        }
+        self.finish(container_id, now + duration);
+        Ok(InvocationReport {
+            container_id,
+            cold_start,
+            io_get: io_get.seconds,
+            compute,
+            io_put: io_put.seconds,
+            inertia: step.inertia,
+            billed_gb_seconds: self.config.billed_gb_seconds(duration),
+            was_cold,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CalibratedEngine;
+    use crate::sim::{Dist, SimClock};
+    use crate::store::ObjectStore;
+
+    fn fleet(memory_mb: u32, clock: Arc<SimClock>) -> LambdaFleet {
+        let mut eng = CalibratedEngine::new(5);
+        eng.insert((100, 16), Dist::Const(0.1));
+        LambdaFleet::new(
+            FunctionConfig {
+                memory_mb,
+                ..Default::default()
+            },
+            Arc::new(eng),
+            Arc::new(ObjectStore::default()),
+            clock as SharedClock,
+            11,
+        )
+        .unwrap()
+    }
+
+    fn pts() -> Vec<f32> {
+        vec![0.5; 100 * 8]
+    }
+
+    #[test]
+    fn invoke_reports_breakdown() {
+        let clock = Arc::new(SimClock::new());
+        let f = fleet(1792, clock);
+        let r = f.invoke(&pts(), 8, "m", 16).unwrap();
+        assert!(r.was_cold);
+        assert!(r.cold_start > 0.0);
+        assert!(r.io_get > 0.0 && r.io_put > 0.0);
+        assert!(r.compute > 0.0);
+        assert!(r.billed_gb_seconds > 0.0);
+        assert_eq!(f.invocation_count(), 1);
+        assert_eq!(f.cold_start_count(), 1);
+    }
+
+    #[test]
+    fn warm_reuse_skips_cold_start() {
+        let clock = Arc::new(SimClock::new());
+        let f = fleet(1792, clock.clone());
+        let r1 = f.invoke(&pts(), 8, "m", 16).unwrap();
+        clock.advance_to(r1.duration() + 0.1);
+        let r2 = f.invoke(&pts(), 8, "m", 16).unwrap();
+        assert!(!r2.was_cold);
+        assert_eq!(r2.cold_start, 0.0);
+        assert_eq!(f.cold_start_count(), 1);
+        assert_eq!(f.container_count(), 1);
+    }
+
+    #[test]
+    fn more_memory_runs_faster_and_steadier() {
+        // Fig 3's mechanism: larger containers → shorter, less noisy runtimes
+        let run = |mb: u32| {
+            let clock = Arc::new(SimClock::new());
+            let f = fleet(mb, clock.clone());
+            let mut times = Vec::new();
+            let mut t = 0.0;
+            for _ in 0..40 {
+                let r = f.invoke(&pts(), 8, "m", 16).unwrap();
+                t += r.duration() + 0.01;
+                clock.advance_to(t);
+                times.push(r.compute);
+            }
+            crate::util::stats::Summary::of(&times).unwrap()
+        };
+        let small = run(256);
+        let large = run(3008);
+        assert!(small.mean > large.mean * 2.0, "small={} large={}", small.mean, large.mean);
+        assert!(small.cv() > large.cv());
+    }
+
+    #[test]
+    fn concurrency_cap_throttles() {
+        let clock = Arc::new(SimClock::new());
+        let mut cfg = FunctionConfig::default();
+        cfg.max_concurrency = 2;
+        let f = LambdaFleet::new(
+            cfg,
+            Arc::new(CalibratedEngine::new(1)),
+            Arc::new(ObjectStore::default()),
+            clock as SharedClock,
+            3,
+        )
+        .unwrap();
+        // both containers end up busy at t=0 (busy_until > now)
+        f.invoke(&pts(), 8, "m", 16).unwrap();
+        f.invoke(&pts(), 8, "m", 16).unwrap();
+        let err = f.invoke(&pts(), 8, "m", 16).unwrap_err();
+        assert!(matches!(err, InvokeError::ConcurrencyLimit(2)));
+    }
+
+    #[test]
+    fn walltime_enforced() {
+        let clock = Arc::new(SimClock::new());
+        let mut eng = CalibratedEngine::new(1);
+        eng.insert((100, 16), Dist::Const(2000.0)); // way past 900 s
+        let f = LambdaFleet::new(
+            FunctionConfig::default(),
+            Arc::new(eng),
+            Arc::new(ObjectStore::default()),
+            clock as SharedClock,
+            3,
+        )
+        .unwrap();
+        assert!(matches!(
+            f.invoke(&pts(), 8, "m", 16),
+            Err(InvokeError::TimedOut(_))
+        ));
+    }
+
+    #[test]
+    fn model_persists_across_invocations() {
+        let clock = Arc::new(SimClock::new());
+        let f = fleet(1792, clock.clone());
+        let r1 = f.invoke(&pts(), 8, "model-a", 16).unwrap();
+        clock.advance_to(r1.duration() + 1.0);
+        f.invoke(&pts(), 8, "model-a", 16).unwrap();
+        let (m, _) = f.store.get("model-a").unwrap();
+        assert_eq!(m.version, 3); // init + 2 step writes
+    }
+}

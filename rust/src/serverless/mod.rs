@@ -1,0 +1,14 @@
+//! Serverless platform substrate: a Lambda-like FaaS runtime with
+//! memory-proportional CPU scaling, cold starts, per-shard event-source
+//! mapping, walltime enforcement and billing — everything the paper's
+//! AWS Lambda/Kinesis experiments depend on.  See DESIGN.md §Substitutions.
+
+pub mod container;
+pub mod edge;
+pub mod event_source;
+pub mod lambda;
+
+pub use container::{Container, FunctionConfig, FULL_VCPU_MB, LAMBDA_CPU_EFFICIENCY, MAX_MEMORY_MB, MAX_WALLTIME_S, MIN_MEMORY_MB};
+pub use edge::EdgeSite;
+pub use event_source::{EventSourceMapping, Lease};
+pub use lambda::{InvocationReport, InvokeError, LambdaFleet};

@@ -1,0 +1,239 @@
+//! Shared-resource contention models.
+//!
+//! The paper attributes the HPC scalability collapse to *contention* on
+//! shared resources (Lustre filesystem, network) and *coherency* cost from
+//! all-to-all model synchronization — exactly the two USL terms.  This
+//! module models the mechanism rather than curve-fitting the outcome:
+//!
+//! - [`SharedResource`] inflates service time as a function of concurrent
+//!   users: `inflation(n) = 1 + alpha*(n-1) + beta*n*(n-1)`.  With
+//!   `alpha = beta = 0` the resource is perfectly isolated (the serverless
+//!   case); positive values reproduce the Dask/Kafka-on-Lustre behaviour.
+//! - [`Bandwidth`] models a shared pipe: `n` concurrent transfers each get
+//!   `capacity/n`.
+//!
+//! Contention state is tracked by *virtual* concurrency counters so the same
+//! model works in live (threaded) and simulated executions.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Parameters of a contended resource.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ContentionParams {
+    /// Linear (queueing/serialization) coefficient — the USL sigma mechanism.
+    pub alpha: f64,
+    /// Quadratic (all-to-all coherency) coefficient — the USL kappa mechanism.
+    pub beta: f64,
+}
+
+impl ContentionParams {
+    pub const ISOLATED: ContentionParams = ContentionParams {
+        alpha: 0.0,
+        beta: 0.0,
+    };
+
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        assert!(alpha >= 0.0 && beta >= 0.0);
+        Self { alpha, beta }
+    }
+
+    /// Multiplicative service-time inflation for `n` concurrent users.
+    pub fn inflation(&self, n: usize) -> f64 {
+        if n <= 1 {
+            return 1.0;
+        }
+        let nf = n as f64;
+        1.0 + self.alpha * (nf - 1.0) + self.beta * nf * (nf - 1.0)
+    }
+}
+
+/// A shared resource with a live concurrency counter.
+pub struct SharedResource {
+    name: String,
+    params: ContentionParams,
+    users: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl SharedResource {
+    pub fn new(name: &str, params: ContentionParams) -> Arc<Self> {
+        Arc::new(Self {
+            name: name.to_string(),
+            params,
+            users: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn params(&self) -> ContentionParams {
+        self.params
+    }
+
+    pub fn current_users(&self) -> usize {
+        self.users.load(Ordering::SeqCst)
+    }
+
+    pub fn peak_users(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+
+    /// Enter the resource; returns a guard whose `inflation()` reflects the
+    /// concurrency *including* this user. Dropping the guard leaves.
+    pub fn enter(self: &Arc<Self>) -> ResourceGuard {
+        let n = self.users.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(n, Ordering::SeqCst);
+        ResourceGuard {
+            resource: Arc::clone(self),
+            entered_with: n,
+        }
+    }
+
+    /// Inflation if `n` users were active (pure function of the params).
+    pub fn inflation_at(&self, n: usize) -> f64 {
+        self.params.inflation(n)
+    }
+}
+
+/// RAII guard for resource occupancy.
+pub struct ResourceGuard {
+    resource: Arc<SharedResource>,
+    entered_with: usize,
+}
+
+impl ResourceGuard {
+    /// Concurrency observed on entry (including self).
+    pub fn concurrency(&self) -> usize {
+        self.entered_with
+    }
+
+    /// Service-time inflation at entry concurrency.
+    pub fn inflation(&self) -> f64 {
+        self.resource.params.inflation(self.entered_with)
+    }
+}
+
+impl Drop for ResourceGuard {
+    fn drop(&mut self) {
+        self.resource.users.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A shared bandwidth pipe: `n` concurrent transfers share `capacity`
+/// bytes/second equally (processor-sharing approximation).
+#[derive(Debug)]
+pub struct Bandwidth {
+    capacity_bps: f64,
+    users: AtomicUsize,
+}
+
+impl Bandwidth {
+    pub fn new(capacity_bps: f64) -> Arc<Self> {
+        assert!(capacity_bps > 0.0);
+        Arc::new(Self {
+            capacity_bps,
+            users: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn capacity(&self) -> f64 {
+        self.capacity_bps
+    }
+
+    /// Transfer time for `bytes` at the *current* sharing level, counting
+    /// this transfer.
+    pub fn transfer_time(self: &Arc<Self>, bytes: f64) -> f64 {
+        let n = (self.users.load(Ordering::SeqCst) + 1) as f64;
+        bytes / (self.capacity_bps / n)
+    }
+
+    pub fn begin(self: &Arc<Self>) -> BandwidthGuard {
+        self.users.fetch_add(1, Ordering::SeqCst);
+        BandwidthGuard {
+            bw: Arc::clone(self),
+        }
+    }
+}
+
+pub struct BandwidthGuard {
+    bw: Arc<Bandwidth>,
+}
+
+impl Drop for BandwidthGuard {
+    fn drop(&mut self) {
+        self.bw.users.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isolated_never_inflates() {
+        let p = ContentionParams::ISOLATED;
+        for n in 1..100 {
+            assert_eq!(p.inflation(n), 1.0);
+        }
+    }
+
+    #[test]
+    fn inflation_is_usl_shaped() {
+        let p = ContentionParams::new(0.1, 0.01);
+        assert_eq!(p.inflation(1), 1.0);
+        assert!((p.inflation(2) - (1.0 + 0.1 + 0.02)).abs() < 1e-12);
+        // superlinear growth: ratio of increments increases
+        let d1 = p.inflation(3) - p.inflation(2);
+        let d2 = p.inflation(10) - p.inflation(9);
+        assert!(d2 > d1);
+    }
+
+    #[test]
+    fn guards_track_concurrency() {
+        let r = SharedResource::new("lustre", ContentionParams::new(0.5, 0.0));
+        assert_eq!(r.current_users(), 0);
+        let g1 = r.enter();
+        let g2 = r.enter();
+        assert_eq!(g1.concurrency(), 1);
+        assert_eq!(g2.concurrency(), 2);
+        assert_eq!(r.current_users(), 2);
+        assert!((g2.inflation() - 1.5).abs() < 1e-12);
+        drop(g1);
+        assert_eq!(r.current_users(), 1);
+        drop(g2);
+        assert_eq!(r.current_users(), 0);
+        assert_eq!(r.peak_users(), 2);
+    }
+
+    #[test]
+    fn guards_are_thread_safe() {
+        let r = SharedResource::new("net", ContentionParams::new(0.1, 0.0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let r = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    let _g = r.enter();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.current_users(), 0);
+        assert!(r.peak_users() >= 1);
+    }
+
+    #[test]
+    fn bandwidth_sharing() {
+        let bw = Bandwidth::new(100.0);
+        assert!((bw.transfer_time(100.0) - 1.0).abs() < 1e-12);
+        let _g = bw.begin();
+        // a second transfer sees half the capacity
+        assert!((bw.transfer_time(100.0) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,166 @@
+//! Service-time distributions for the simulator.
+//!
+//! Simulated executions draw task durations from these distributions; the
+//! parameters are *calibrated* from live PJRT runs of the same HLO artifact
+//! (see `runtime::calibrate`), so simulated compute cost tracks the real
+//! kernel rather than made-up constants.
+
+use crate::util::rng::Pcg32;
+
+/// A positive duration distribution (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Dist {
+    /// Always the same value.
+    Const(f64),
+    /// Normal(mean, std) truncated at `min`.
+    Normal { mean: f64, std: f64, min: f64 },
+    /// LogNormal with underlying N(mu, sigma).
+    LogNormal { mu: f64, sigma: f64 },
+    /// Exponential with the given mean.
+    Exponential { mean: f64 },
+    /// Gamma(shape, scale).
+    Gamma { shape: f64, scale: f64 },
+    /// Uniform in [lo, hi).
+    Uniform { lo: f64, hi: f64 },
+}
+
+impl Dist {
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        match *self {
+            Dist::Const(x) => x,
+            Dist::Normal { mean, std, min } => rng.normal_with(mean, std).max(min),
+            Dist::LogNormal { mu, sigma } => rng.lognormal(mu, sigma),
+            Dist::Exponential { mean } => rng.exponential(1.0 / mean.max(1e-12)),
+            Dist::Gamma { shape, scale } => rng.gamma(shape, scale),
+            Dist::Uniform { lo, hi } => rng.uniform(lo, hi),
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Dist::Const(x) => x,
+            Dist::Normal { mean, .. } => mean, // truncation bias ignored
+            Dist::LogNormal { mu, sigma } => (mu + sigma * sigma / 2.0).exp(),
+            Dist::Exponential { mean } => mean,
+            Dist::Gamma { shape, scale } => shape * scale,
+            Dist::Uniform { lo, hi } => 0.5 * (lo + hi),
+        }
+    }
+
+    /// Build a distribution from an observed sample: a truncated normal
+    /// matching the sample's mean/std (the calibration path).
+    pub fn from_observations(xs: &[f64]) -> Dist {
+        match crate::util::stats::Summary::of(xs) {
+            None => Dist::Const(0.0),
+            Some(s) if s.n == 1 || s.std == 0.0 => Dist::Const(s.mean),
+            Some(s) => Dist::Normal {
+                mean: s.mean,
+                std: s.std,
+                min: (s.mean - 3.0 * s.std).max(s.min * 0.5).max(0.0),
+            },
+        }
+    }
+
+    /// Scale the distribution by a multiplicative factor (e.g. the Lambda
+    /// memory→CPU slowdown or a contention inflation).
+    pub fn scaled(&self, k: f64) -> Dist {
+        match *self {
+            Dist::Const(x) => Dist::Const(x * k),
+            Dist::Normal { mean, std, min } => Dist::Normal {
+                mean: mean * k,
+                std: std * k,
+                min: min * k,
+            },
+            Dist::LogNormal { mu, sigma } => Dist::LogNormal {
+                mu: mu + k.ln(),
+                sigma,
+            },
+            Dist::Exponential { mean } => Dist::Exponential { mean: mean * k },
+            Dist::Gamma { shape, scale } => Dist::Gamma {
+                shape,
+                scale: scale * k,
+            },
+            Dist::Uniform { lo, hi } => Dist::Uniform {
+                lo: lo * k,
+                hi: hi * k,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_mean(d: &Dist, n: usize, seed: u64) -> f64 {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn const_dist() {
+        let d = Dist::Const(2.5);
+        assert_eq!(sample_mean(&d, 10, 1), 2.5);
+        assert_eq!(d.mean(), 2.5);
+    }
+
+    #[test]
+    fn normal_truncated_at_min() {
+        let d = Dist::Normal {
+            mean: 1.0,
+            std: 10.0,
+            min: 0.5,
+        };
+        let mut rng = Pcg32::seeded(2);
+        for _ in 0..10_000 {
+            assert!(d.sample(&mut rng) >= 0.5);
+        }
+    }
+
+    #[test]
+    fn means_match_analytic() {
+        for (d, expect, tol) in [
+            (Dist::Exponential { mean: 2.0 }, 2.0, 0.05),
+            (Dist::Gamma { shape: 4.0, scale: 0.5 }, 2.0, 0.05),
+            (Dist::Uniform { lo: 1.0, hi: 3.0 }, 2.0, 0.02),
+            (Dist::LogNormal { mu: 0.0, sigma: 0.5 }, (0.125f64).exp(), 0.05),
+        ] {
+            let m = sample_mean(&d, 100_000, 3);
+            assert!(
+                (m - expect).abs() < tol,
+                "{d:?}: sample mean {m} vs {expect}"
+            );
+            assert!((d.mean() - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn from_observations_matches_moments() {
+        let xs = [1.0, 1.1, 0.9, 1.05, 0.95];
+        let d = Dist::from_observations(&xs);
+        match d {
+            Dist::Normal { mean, .. } => assert!((mean - 1.0).abs() < 1e-9),
+            _ => panic!("expected Normal"),
+        }
+        assert_eq!(Dist::from_observations(&[3.0]), Dist::Const(3.0));
+        assert_eq!(Dist::from_observations(&[]), Dist::Const(0.0));
+    }
+
+    #[test]
+    fn scaling_scales_mean() {
+        for d in [
+            Dist::Const(2.0),
+            Dist::Exponential { mean: 2.0 },
+            Dist::Gamma { shape: 2.0, scale: 1.0 },
+            Dist::LogNormal { mu: 0.3, sigma: 0.4 },
+            Dist::Uniform { lo: 1.0, hi: 3.0 },
+        ] {
+            let k = 2.5;
+            let scaled = d.scaled(k);
+            assert!(
+                (scaled.mean() - d.mean() * k).abs() < 1e-9,
+                "{d:?} scaled mean mismatch"
+            );
+        }
+    }
+}

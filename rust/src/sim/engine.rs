@@ -1,0 +1,231 @@
+//! Discrete-event simulation engine.
+//!
+//! A minimal, deterministic DES core: events are boxed closures scheduled at
+//! virtual times; ties break by insertion sequence so runs are exactly
+//! reproducible.  The engine owns a [`SimClock`] that passive components
+//! (broker shards, metrics) share, so the same code observes consistent
+//! timestamps in live and simulated executions.
+
+use super::clock::SimClock;
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+/// An event handler. Receives the engine so it can schedule follow-ups.
+pub type Handler = Box<dyn FnOnce(&mut Engine)>;
+
+struct Scheduled {
+    time: f64,
+    seq: u64,
+    handler: Handler,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // min-heap: earlier time first; ties by lower sequence number
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(CmpOrdering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The DES engine.
+pub struct Engine {
+    queue: BinaryHeap<Scheduled>,
+    clock: Arc<SimClock>,
+    seq: u64,
+    executed: u64,
+    limit: Option<u64>,
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Self {
+            queue: BinaryHeap::new(),
+            clock: Arc::new(SimClock::new()),
+            seq: 0,
+            executed: 0,
+            limit: None,
+        }
+    }
+
+    /// Cap the number of events executed (runaway protection for tests).
+    pub fn with_event_limit(mut self, limit: u64) -> Self {
+        self.limit = Some(limit);
+        self
+    }
+
+    /// The engine's shared virtual clock.
+    pub fn clock(&self) -> Arc<SimClock> {
+        Arc::clone(&self.clock)
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        use super::clock::Clock;
+        self.clock.now()
+    }
+
+    /// Schedule `handler` to run at absolute virtual time `t` (>= now).
+    pub fn schedule_at(&mut self, t: f64, handler: Handler) {
+        let t = t.max(self.now());
+        self.seq += 1;
+        self.queue.push(Scheduled {
+            time: t,
+            seq: self.seq,
+            handler,
+        });
+    }
+
+    /// Schedule `handler` after a delay relative to now.
+    pub fn schedule_in(&mut self, delay: f64, handler: Handler) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        let now = self.now();
+        self.schedule_at(now + delay.max(0.0), handler);
+    }
+
+    /// Number of events executed so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Number of pending events.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Run until the queue is empty or `until` (virtual seconds) is reached.
+    /// Returns the final virtual time.
+    pub fn run_until(&mut self, until: f64) -> f64 {
+        while let Some(ev) = self.queue.peek() {
+            if ev.time > until {
+                break;
+            }
+            if let Some(limit) = self.limit {
+                if self.executed >= limit {
+                    log::warn!("sim event limit {limit} reached at t={}", self.now());
+                    break;
+                }
+            }
+            let ev = self.queue.pop().unwrap();
+            self.clock.advance_to(ev.time);
+            self.executed += 1;
+            (ev.handler)(self);
+        }
+        if until.is_finite() {
+            self.clock.advance_to(until.max(self.now()));
+        }
+        self.now()
+    }
+
+    /// Run to exhaustion.
+    pub fn run(&mut self) -> f64 {
+        self.run_until(f64::INFINITY)
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn executes_in_time_order() {
+        let mut e = Engine::new();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for (t, tag) in [(3.0, 'c'), (1.0, 'a'), (2.0, 'b')] {
+            let o = Rc::clone(&order);
+            e.schedule_at(t, Box::new(move |_| o.borrow_mut().push(tag)));
+        }
+        e.run();
+        assert_eq!(*order.borrow(), vec!['a', 'b', 'c']);
+        assert_eq!(e.executed(), 3);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut e = Engine::new();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for tag in 0..10 {
+            let o = Rc::clone(&order);
+            e.schedule_at(1.0, Box::new(move |_| o.borrow_mut().push(tag)));
+        }
+        e.run();
+        assert_eq!(*order.borrow(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handlers_can_schedule_followups() {
+        let mut e = Engine::new();
+        let hits = Rc::new(RefCell::new(0u32));
+        fn tick(e: &mut Engine, hits: Rc<RefCell<u32>>, remaining: u32) {
+            *hits.borrow_mut() += 1;
+            if remaining > 0 {
+                e.schedule_in(
+                    1.0,
+                    Box::new(move |e| tick(e, hits, remaining - 1)),
+                );
+            }
+        }
+        let h = Rc::clone(&hits);
+        e.schedule_at(0.0, Box::new(move |e| tick(e, h, 4)));
+        let end = e.run();
+        assert_eq!(*hits.borrow(), 5);
+        assert!((end - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_until_stops_early() {
+        let mut e = Engine::new();
+        let hits = Rc::new(RefCell::new(0u32));
+        for t in 1..=10 {
+            let h = Rc::clone(&hits);
+            e.schedule_at(t as f64, Box::new(move |_| *h.borrow_mut() += 1));
+        }
+        e.run_until(5.0);
+        assert_eq!(*hits.borrow(), 5);
+        assert_eq!(e.pending(), 5);
+        assert!((e.now() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clock_visible_during_events() {
+        let mut e = Engine::new();
+        let seen = Rc::new(RefCell::new(0.0));
+        let s = Rc::clone(&seen);
+        e.schedule_at(2.5, Box::new(move |e| *s.borrow_mut() = e.now()));
+        e.run();
+        assert!((*seen.borrow() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn event_limit_guards_runaway() {
+        let mut e = Engine::new().with_event_limit(100);
+        fn forever(e: &mut Engine) {
+            e.schedule_in(0.001, Box::new(forever));
+        }
+        e.schedule_at(0.0, Box::new(forever));
+        e.run_until(1e9);
+        assert_eq!(e.executed(), 100);
+    }
+}

@@ -1,0 +1,15 @@
+//! Discrete-event simulation substrate: virtual clock, event engine,
+//! calibrated service-time distributions, and shared-resource contention
+//! models.  See DESIGN.md "Execution modes" — large parameter sweeps run on
+//! this engine with service times calibrated from live PJRT executions.
+
+pub mod clock;
+pub mod contention;
+pub mod dist;
+pub mod engine;
+
+pub use clock::{Clock, SharedClock, SimClock, WallClock};
+
+pub use contention::{Bandwidth, ContentionParams, SharedResource};
+pub use dist::Dist;
+pub use engine::Engine;

@@ -1,0 +1,121 @@
+//! Model-state stores.
+//!
+//! The paper's K-Means model is "shared across tasks using file storage
+//! (S3 on AWS, Lustre filesystem on HPC)".  That single sentence is the
+//! root of the paper's main finding: on serverless, model sync goes through
+//! an isolated object store (predictable, no cross-task interference); on
+//! HPC it goes through the *shared* filesystem that also carries the Kafka
+//! log and everyone else's traffic — producing the contention (σ) and
+//! coherency (κ) the USL fit surfaces.
+//!
+//! [`ModelStore`] is the common interface; [`ObjectStore`] is the S3-like
+//! backend, [`SharedFsStore`] the Lustre-like one.
+
+pub mod object;
+pub mod shared_fs;
+pub mod shared_fs_ext;
+
+pub use object::ObjectStore;
+pub use shared_fs::SharedFsStore;
+
+use std::sync::Arc;
+
+/// A versioned K-Means model: flat centroids [c*d] + per-centroid counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelState {
+    pub centroids: Arc<Vec<f32>>,
+    pub counts: Arc<Vec<f32>>,
+    pub dim: usize,
+    pub version: u64,
+}
+
+impl ModelState {
+    pub fn new_random(centroids: usize, dim: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Pcg32::seeded(seed);
+        let data: Vec<f32> = (0..centroids * dim)
+            .map(|_| rng.normal() as f32 * 10.0)
+            .collect();
+        Self {
+            centroids: Arc::new(data),
+            counts: Arc::new(vec![0.0; centroids]),
+            dim,
+            version: 0,
+        }
+    }
+
+    pub fn num_centroids(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Serialized size in bytes (what store I/O is charged for).
+    pub fn bytes(&self) -> usize {
+        (self.centroids.len() + self.counts.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Result of a store operation: the payload plus the modeled I/O cost in
+/// seconds (simulated time; live mode accounts it without sleeping).
+#[derive(Debug, Clone)]
+pub struct IoReport {
+    pub seconds: f64,
+    pub bytes: usize,
+    /// Concurrency observed on the backing resource during the op.
+    pub concurrency: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum StoreError {
+    #[error("model key {0:?} not found")]
+    NotFound(String),
+    #[error("version conflict on {key:?}: expected {expected}, found {found}")]
+    VersionConflict {
+        key: String,
+        expected: u64,
+        found: u64,
+    },
+}
+
+/// Shared model storage used for cross-task model synchronization.
+pub trait ModelStore: Send + Sync {
+    /// Store kind label ("s3" | "lustre").
+    fn kind(&self) -> &'static str;
+
+    /// Read the latest model under `key`.
+    fn get(&self, key: &str) -> Result<(ModelState, IoReport), StoreError>;
+
+    /// Unconditionally write (last-writer-wins, the paper's minor-
+    /// synchronization regime). Returns the stored version.
+    fn put(&self, key: &str, model: ModelState) -> Result<(u64, IoReport), StoreError>;
+
+    /// Compare-and-swap write: succeeds only if the stored version equals
+    /// `expected`. Used by the optimistic-concurrency ablation.
+    fn put_if_version(
+        &self,
+        key: &str,
+        model: ModelState,
+        expected: u64,
+    ) -> Result<(u64, IoReport), StoreError>;
+
+    /// True if a model exists under `key`.
+    fn contains(&self, key: &str) -> bool;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_state_sizes() {
+        let m = ModelState::new_random(1024, 8, 1);
+        assert_eq!(m.num_centroids(), 1024);
+        assert_eq!(m.bytes(), (1024 * 8 + 1024) * 4);
+        assert_eq!(m.version, 0);
+    }
+
+    #[test]
+    fn model_state_deterministic_by_seed() {
+        let a = ModelState::new_random(16, 4, 9);
+        let b = ModelState::new_random(16, 4, 9);
+        assert_eq!(a.centroids, b.centroids);
+    }
+}

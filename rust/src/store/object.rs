@@ -1,0 +1,165 @@
+//! S3-like object store: isolated per-request performance.
+//!
+//! Request cost = base latency + size/bandwidth, with *no* cross-request
+//! contention — AWS absorbs concurrency behind its SLA.  This is the model
+//! store of the serverless deployment and the reason Lambda's USL σ/κ come
+//! out near zero.
+
+use super::{IoReport, ModelState, ModelStore, StoreError};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Object-store latency parameters (S3-class defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct ObjectStoreParams {
+    /// Per-request base latency, seconds (TTFB).
+    pub base_latency: f64,
+    /// Sustained per-request bandwidth, bytes/second.
+    pub bytes_per_sec: f64,
+}
+
+impl Default for ObjectStoreParams {
+    fn default() -> Self {
+        Self {
+            base_latency: 0.020,   // ~20 ms TTFB
+            bytes_per_sec: 90e6,   // ~90 MB/s per connection
+        }
+    }
+}
+
+/// The S3-like store.
+pub struct ObjectStore {
+    params: ObjectStoreParams,
+    objects: Mutex<HashMap<String, ModelState>>,
+}
+
+impl ObjectStore {
+    pub fn new(params: ObjectStoreParams) -> Self {
+        Self {
+            params,
+            objects: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn io(&self, bytes: usize) -> IoReport {
+        IoReport {
+            seconds: self.params.base_latency + bytes as f64 / self.params.bytes_per_sec,
+            bytes,
+            concurrency: 1, // isolated by construction
+        }
+    }
+}
+
+impl Default for ObjectStore {
+    fn default() -> Self {
+        Self::new(ObjectStoreParams::default())
+    }
+}
+
+impl ModelStore for ObjectStore {
+    fn kind(&self) -> &'static str {
+        "s3"
+    }
+
+    fn get(&self, key: &str) -> Result<(ModelState, IoReport), StoreError> {
+        let g = self.objects.lock().unwrap();
+        let m = g
+            .get(key)
+            .cloned()
+            .ok_or_else(|| StoreError::NotFound(key.to_string()))?;
+        let io = self.io(m.bytes());
+        Ok((m, io))
+    }
+
+    fn put(&self, key: &str, mut model: ModelState) -> Result<(u64, IoReport), StoreError> {
+        let mut g = self.objects.lock().unwrap();
+        let next = g.get(key).map(|m| m.version + 1).unwrap_or(1);
+        model.version = next;
+        let io = self.io(model.bytes());
+        g.insert(key.to_string(), model);
+        Ok((next, io))
+    }
+
+    fn put_if_version(
+        &self,
+        key: &str,
+        mut model: ModelState,
+        expected: u64,
+    ) -> Result<(u64, IoReport), StoreError> {
+        let mut g = self.objects.lock().unwrap();
+        let found = g.get(key).map(|m| m.version).unwrap_or(0);
+        if found != expected {
+            return Err(StoreError::VersionConflict {
+                key: key.to_string(),
+                expected,
+                found,
+            });
+        }
+        model.version = found + 1;
+        let io = self.io(model.bytes());
+        g.insert(key.to_string(), model);
+        Ok((found + 1, io))
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.objects.lock().unwrap().contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelState {
+        ModelState::new_random(16, 8, 1)
+    }
+
+    #[test]
+    fn put_get_roundtrip_with_versions() {
+        let s = ObjectStore::default();
+        assert!(!s.contains("m"));
+        let (v1, _) = s.put("m", model()).unwrap();
+        assert_eq!(v1, 1);
+        let (got, io) = s.get("m").unwrap();
+        assert_eq!(got.version, 1);
+        assert!(io.seconds > 0.0);
+        let (v2, _) = s.put("m", model()).unwrap();
+        assert_eq!(v2, 2);
+    }
+
+    #[test]
+    fn get_missing() {
+        let s = ObjectStore::default();
+        assert!(matches!(s.get("nope"), Err(StoreError::NotFound(_))));
+    }
+
+    #[test]
+    fn cas_succeeds_then_conflicts() {
+        let s = ObjectStore::default();
+        s.put("m", model()).unwrap();
+        let (v, _) = s.put_if_version("m", model(), 1).unwrap();
+        assert_eq!(v, 2);
+        let err = s.put_if_version("m", model(), 1).unwrap_err();
+        assert!(matches!(err, StoreError::VersionConflict { found: 2, .. }));
+    }
+
+    #[test]
+    fn io_cost_scales_with_size() {
+        let s = ObjectStore::default();
+        let small = ModelState::new_random(16, 8, 1);
+        let big = ModelState::new_random(8192, 8, 1);
+        let (_, io_s) = s.put("a", small).unwrap();
+        let (_, io_b) = s.put("b", big).unwrap();
+        assert!(io_b.seconds > io_s.seconds);
+        assert!(io_b.bytes > io_s.bytes);
+    }
+
+    #[test]
+    fn io_cost_is_concurrency_independent() {
+        // the object store is isolated: concurrency never inflates cost
+        let s = ObjectStore::default();
+        s.put("m", model()).unwrap();
+        let (_, io1) = s.get("m").unwrap();
+        assert_eq!(io1.concurrency, 1);
+    }
+}

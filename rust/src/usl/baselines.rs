@@ -1,0 +1,109 @@
+//! Baseline scalability models for the model-selection ablation:
+//! Amdahl's law (USL with κ=0) and pure linear scaling.  Gunther (2005)
+//! showed USL generalizes Amdahl; the ablation quantifies what the
+//! coherency term buys on retrograde data (DESIGN.md ablations).
+
+use super::fit::{FitError, Obs, UslFit};
+use super::model::UslParams;
+use crate::util::stats;
+
+/// Fit Amdahl's law T(N) = λN / (1 + σ(N−1)) by linearized OLS.
+pub fn fit_amdahl(obs: &[Obs]) -> Result<UslFit, FitError> {
+    if obs.len() < 2 {
+        return Err(FitError::TooFew(2, obs.len()));
+    }
+    if obs.iter().any(|o| o.n < 1.0 || o.t <= 0.0) {
+        return Err(FitError::BadData);
+    }
+    // y = N/T = 1/λ + (σ/λ)(N−1)
+    let x: Vec<f64> = obs.iter().map(|o| o.n - 1.0).collect();
+    let y: Vec<f64> = obs.iter().map(|o| o.n / o.t).collect();
+    let (b0, b1) = stats::linreg(&x, &y);
+    let lambda = if b0 > 1e-12 { 1.0 / b0 } else { 1.0 };
+    let params = UslParams::new(b1 * lambda, 0.0, lambda);
+    let pred: Vec<f64> = obs.iter().map(|o| params.throughput(o.n)).collect();
+    let actual: Vec<f64> = obs.iter().map(|o| o.t).collect();
+    Ok(UslFit {
+        params,
+        r2: stats::r_squared(&pred, &actual),
+        rmse: stats::rmse(&pred, &actual),
+        method: "amdahl",
+    })
+}
+
+/// Fit pure linear scaling T(N) = λN.
+pub fn fit_linear(obs: &[Obs]) -> Result<UslFit, FitError> {
+    if obs.is_empty() {
+        return Err(FitError::TooFew(1, 0));
+    }
+    if obs.iter().any(|o| o.n < 1.0 || o.t <= 0.0) {
+        return Err(FitError::BadData);
+    }
+    // least squares through origin in (N, T)
+    let num: f64 = obs.iter().map(|o| o.n * o.t).sum();
+    let den: f64 = obs.iter().map(|o| o.n * o.n).sum();
+    let lambda = num / den.max(1e-12);
+    let params = UslParams::new(0.0, 0.0, lambda);
+    let pred: Vec<f64> = obs.iter().map(|o| params.throughput(o.n)).collect();
+    let actual: Vec<f64> = obs.iter().map(|o| o.t).collect();
+    Ok(UslFit {
+        params,
+        r2: stats::r_squared(&pred, &actual),
+        rmse: stats::rmse(&pred, &actual),
+        method: "linear",
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::usl::fit::fit;
+
+    fn retrograde_data() -> Vec<Obs> {
+        let truth = UslParams::new(0.5, 0.04, 20.0);
+        [1.0, 2.0, 4.0, 8.0, 16.0, 32.0]
+            .iter()
+            .map(|&n| Obs::new(n, truth.throughput(n)))
+            .collect()
+    }
+
+    #[test]
+    fn amdahl_recovers_amdahl_data() {
+        let truth = UslParams::new(0.2, 0.0, 10.0);
+        let obs: Vec<Obs> = [1.0, 2.0, 4.0, 8.0, 16.0]
+            .iter()
+            .map(|&n| Obs::new(n, truth.throughput(n)))
+            .collect();
+        let f = fit_amdahl(&obs).unwrap();
+        assert!((f.params.sigma - 0.2).abs() < 1e-6);
+        assert!(f.r2 > 0.99999);
+    }
+
+    #[test]
+    fn usl_beats_amdahl_on_retrograde_data() {
+        let obs = retrograde_data();
+        let usl = fit(&obs).unwrap();
+        let amdahl = fit_amdahl(&obs).unwrap();
+        let linear = fit_linear(&obs).unwrap();
+        assert!(usl.rmse < amdahl.rmse * 0.5, "usl={} amdahl={}", usl.rmse, amdahl.rmse);
+        assert!(amdahl.rmse < linear.rmse, "amdahl={} linear={}", amdahl.rmse, linear.rmse);
+    }
+
+    #[test]
+    fn amdahl_cannot_model_retrograde() {
+        // Amdahl is monotone nondecreasing: it must miss the downturn
+        let obs = retrograde_data();
+        let f = fit_amdahl(&obs).unwrap();
+        assert!(f.params.throughput(32.0) >= f.params.throughput(16.0) * 0.999);
+        // whereas the data itself retrogrades
+        assert!(obs.last().unwrap().t < obs[3].t);
+    }
+
+    #[test]
+    fn linear_fit_on_linear_data() {
+        let obs: Vec<Obs> = (1..=8).map(|n| Obs::new(n as f64, 5.0 * n as f64)).collect();
+        let f = fit_linear(&obs).unwrap();
+        assert!((f.params.lambda - 5.0).abs() < 1e-9);
+        assert!(f.r2 > 0.99999);
+    }
+}

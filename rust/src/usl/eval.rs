@@ -1,0 +1,148 @@
+//! Model evaluation on unseen data (paper §IV-D, Fig 7).
+//!
+//! "We utilize a different number of training configurations to create a
+//! performance model. We investigate the root mean squared error of the
+//! predictions on the unseen test data of the remaining configurations."
+
+use super::fit::{fit, FitError, Obs};
+use crate::util::rng::Pcg32;
+use crate::util::stats;
+
+/// One point of the Fig 7 curve.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub train_size: usize,
+    /// Mean test RMSE over the resampled splits.
+    pub rmse_mean: f64,
+    pub rmse_std: f64,
+    /// Number of splits that produced a valid fit.
+    pub splits_ok: usize,
+}
+
+/// Evaluate fit quality vs training-set size: for each `train_size`,
+/// repeatedly sample that many configurations as the training set, fit USL,
+/// and measure RMSE on the held-out rest.
+pub fn rmse_vs_train_size(
+    obs: &[Obs],
+    train_sizes: &[usize],
+    resamples: usize,
+    seed: u64,
+) -> Result<Vec<EvalPoint>, FitError> {
+    if obs.len() < 4 {
+        return Err(FitError::TooFew(4, obs.len()));
+    }
+    let mut rng = Pcg32::seeded(seed);
+    let mut out = Vec::new();
+    for &k in train_sizes {
+        let k = k.min(obs.len() - 1).max(3);
+        let mut rmses = Vec::new();
+        for _ in 0..resamples {
+            let idx = rng.sample_indices(obs.len(), k);
+            let train: Vec<Obs> = idx.iter().map(|&i| obs[i]).collect();
+            let test: Vec<Obs> = (0..obs.len())
+                .filter(|i| !idx.contains(i))
+                .map(|i| obs[i])
+                .collect();
+            if test.is_empty() {
+                continue;
+            }
+            let Ok(f) = fit(&train) else { continue };
+            let pred: Vec<f64> = test.iter().map(|o| f.params.throughput(o.n)).collect();
+            let actual: Vec<f64> = test.iter().map(|o| o.t).collect();
+            rmses.push(stats::rmse(&pred, &actual));
+        }
+        let s = stats::Summary::of(&rmses);
+        out.push(EvalPoint {
+            train_size: k,
+            rmse_mean: s.as_ref().map(|s| s.mean).unwrap_or(f64::NAN),
+            rmse_std: s.as_ref().map(|s| s.std).unwrap_or(f64::NAN),
+            splits_ok: rmses.len(),
+        });
+    }
+    Ok(out)
+}
+
+/// Normalized RMSE (relative to the mean observed throughput) — lets Fig 7
+/// compare scenarios with very different absolute throughputs.
+pub fn normalized(points: &[EvalPoint], obs: &[Obs]) -> Vec<(usize, f64)> {
+    let mean_t = stats::mean(&obs.iter().map(|o| o.t).collect::<Vec<_>>()).max(1e-12);
+    points
+        .iter()
+        .map(|p| (p.train_size, p.rmse_mean / mean_t))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::usl::model::UslParams;
+
+    fn synth(params: UslParams, noise_cv: f64, seed: u64) -> Vec<Obs> {
+        let mut rng = Pcg32::seeded(seed);
+        [1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0]
+            .iter()
+            .map(|&n| {
+                Obs::new(
+                    n,
+                    params.throughput(n) * rng.normal_with(1.0, noise_cv).max(0.5),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rmse_decreases_with_more_training_data() {
+        let obs = synth(UslParams::new(0.3, 0.01, 40.0), 0.05, 1);
+        let pts = rmse_vs_train_size(&obs, &[3, 5, 7, 9], 40, 2).unwrap();
+        assert_eq!(pts.len(), 4);
+        // paper finding: 2-3 configs are "enough"; RMSE shouldn't blow up,
+        // and more data should not make it dramatically worse
+        assert!(
+            pts[3].rmse_mean <= pts[0].rmse_mean * 1.5,
+            "{:?}",
+            pts.iter().map(|p| p.rmse_mean).collect::<Vec<_>>()
+        );
+        for p in &pts {
+            assert!(p.splits_ok > 0);
+        }
+    }
+
+    #[test]
+    fn small_training_sets_suffice_on_clean_data() {
+        // the paper's headline Fig 7 claim, on near-noise-free data
+        let obs = synth(UslParams::new(0.1, 0.001, 100.0), 0.01, 3);
+        let pts = rmse_vs_train_size(&obs, &[3], 40, 4).unwrap();
+        let mean_t = stats::mean(&obs.iter().map(|o| o.t).collect::<Vec<_>>());
+        assert!(
+            pts[0].rmse_mean / mean_t < 0.2,
+            "3-config normalized RMSE {} too large (mean T {mean_t})",
+            pts[0].rmse_mean
+        );
+    }
+
+    #[test]
+    fn noisy_scenarios_have_higher_rmse() {
+        // paper: "For Dask, we observe a higher RMSE for short-running
+        // tasks" (higher relative noise)
+        let quiet = synth(UslParams::new(0.1, 0.001, 50.0), 0.02, 5);
+        let noisy = synth(UslParams::new(0.1, 0.001, 50.0), 0.25, 6);
+        let pq = rmse_vs_train_size(&quiet, &[5], 40, 7).unwrap();
+        let pn = rmse_vs_train_size(&noisy, &[5], 40, 7).unwrap();
+        assert!(pn[0].rmse_mean > pq[0].rmse_mean * 2.0);
+    }
+
+    #[test]
+    fn too_few_observations_rejected() {
+        let obs = vec![Obs::new(1.0, 1.0); 3];
+        assert!(rmse_vs_train_size(&obs, &[3], 5, 1).is_err());
+    }
+
+    #[test]
+    fn normalized_scaling() {
+        let obs = synth(UslParams::new(0.1, 0.001, 100.0), 0.02, 8);
+        let pts = rmse_vs_train_size(&obs, &[4], 20, 9).unwrap();
+        let norm = normalized(&pts, &obs);
+        assert_eq!(norm[0].0, 4);
+        assert!(norm[0].1 > 0.0 && norm[0].1 < 1.0);
+    }
+}

@@ -1,0 +1,355 @@
+//! Fitting USL to (N, T) observations.
+//!
+//! Two fitters, composed:
+//! 1. **Linearized** (Gunther's quadratic transform): with
+//!    `y = N/T`, `x1 = N−1`, `x2 = N(N−1)`,
+//!    `y = 1/λ + (σ/λ)·x1 + (κ/λ)·x2` — ordinary least squares with
+//!    intercept. Fast, closed-form, good starting point.
+//! 2. **Levenberg–Marquardt** refinement on the nonlinear model in
+//!    throughput space (the linearized fit minimizes error in 1/T space,
+//!    which over-weights small-T points — the same reason the USL R
+//!    package uses `nls`).
+//!
+//! Both enforce σ, κ ≥ 0 by clamping.
+
+use super::model::UslParams;
+use crate::util::stats;
+
+/// An observation: parallelism N with measured throughput T.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Obs {
+    pub n: f64,
+    pub t: f64,
+}
+
+impl Obs {
+    pub fn new(n: f64, t: f64) -> Self {
+        Self { n, t }
+    }
+}
+
+/// Fit outcome.
+#[derive(Debug, Clone)]
+pub struct UslFit {
+    pub params: UslParams,
+    /// R² in throughput space over the training data.
+    pub r2: f64,
+    /// RMSE in throughput space over the training data.
+    pub rmse: f64,
+    /// Which fitter produced the final params ("linearized" | "lm").
+    pub method: &'static str,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum FitError {
+    #[error("need at least {0} observations, got {1}")]
+    TooFew(usize, usize),
+    #[error("observations must have N >= 1 and T > 0")]
+    BadData,
+}
+
+fn validate(obs: &[Obs], min: usize) -> Result<(), FitError> {
+    if obs.len() < min {
+        return Err(FitError::TooFew(min, obs.len()));
+    }
+    if obs.iter().any(|o| o.n < 1.0 || o.t <= 0.0 || !o.t.is_finite()) {
+        return Err(FitError::BadData);
+    }
+    Ok(())
+}
+
+fn metrics(params: &UslParams, obs: &[Obs]) -> (f64, f64) {
+    let pred: Vec<f64> = obs.iter().map(|o| params.throughput(o.n)).collect();
+    let actual: Vec<f64> = obs.iter().map(|o| o.t).collect();
+    (
+        stats::r_squared(&pred, &actual),
+        stats::rmse(&pred, &actual),
+    )
+}
+
+/// OLS with intercept on two regressors: y = b0 + b1 x1 + b2 x2.
+fn ols3(x1: &[f64], x2: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    let n = y.len() as f64;
+    // normal equations, 3x3 symmetric
+    let s1: f64 = x1.iter().sum();
+    let s2: f64 = x2.iter().sum();
+    let s11: f64 = x1.iter().map(|v| v * v).sum();
+    let s22: f64 = x2.iter().map(|v| v * v).sum();
+    let s12: f64 = x1.iter().zip(x2).map(|(a, b)| a * b).sum();
+    let sy: f64 = y.iter().sum();
+    let sy1: f64 = y.iter().zip(x1).map(|(a, b)| a * b).sum();
+    let sy2: f64 = y.iter().zip(x2).map(|(a, b)| a * b).sum();
+
+    // solve [n s1 s2; s1 s11 s12; s2 s12 s22] b = [sy sy1 sy2]
+    let a = [[n, s1, s2], [s1, s11, s12], [s2, s12, s22]];
+    let rhs = [sy, sy1, sy2];
+    solve3(a, rhs).unwrap_or((sy / n, 0.0, 0.0).into()).into()
+}
+
+struct Triple(f64, f64, f64);
+impl From<(f64, f64, f64)> for Triple {
+    fn from(t: (f64, f64, f64)) -> Self {
+        Triple(t.0, t.1, t.2)
+    }
+}
+impl From<Triple> for (f64, f64, f64) {
+    fn from(t: Triple) -> Self {
+        (t.0, t.1, t.2)
+    }
+}
+
+/// Gaussian elimination for a 3x3 system.
+fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<Triple> {
+    for col in 0..3 {
+        // partial pivot
+        let piv = (col..3).max_by(|&i, &j| {
+            a[i][col]
+                .abs()
+                .partial_cmp(&a[j][col].abs())
+                .unwrap()
+        })?;
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for row in (col + 1)..3 {
+            let f = a[row][col] / a[col][col];
+            for k in col..3 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; 3];
+    for row in (0..3).rev() {
+        let mut acc = b[row];
+        for k in (row + 1)..3 {
+            acc -= a[row][k] * x[k];
+        }
+        x[row] = acc / a[row][row];
+    }
+    Some(Triple(x[0], x[1], x[2]))
+}
+
+/// Gunther's linearized least-squares fit.
+pub fn fit_linearized(obs: &[Obs]) -> Result<UslFit, FitError> {
+    validate(obs, 3)?;
+    let x1: Vec<f64> = obs.iter().map(|o| o.n - 1.0).collect();
+    let x2: Vec<f64> = obs.iter().map(|o| o.n * (o.n - 1.0)).collect();
+    let y: Vec<f64> = obs.iter().map(|o| o.n / o.t).collect();
+    let (b0, b1, b2) = ols3(&x1, &x2, &y);
+    // y = 1/λ + (σ/λ) x1 + (κ/λ) x2
+    let lambda = if b0 > 1e-12 { 1.0 / b0 } else {
+        // degenerate intercept: fall back to λ from the N=1-ish point
+        obs.iter()
+            .min_by(|a, b| a.n.partial_cmp(&b.n).unwrap())
+            .map(|o| o.t / o.n)
+            .unwrap_or(1.0)
+    };
+    let params = UslParams::new(b1 * lambda, b2 * lambda, lambda);
+    let (r2, rmse) = metrics(&params, obs);
+    Ok(UslFit {
+        params,
+        r2,
+        rmse,
+        method: "linearized",
+    })
+}
+
+/// Levenberg–Marquardt refinement in throughput space, seeded by the
+/// linearized fit.
+pub fn fit_lm(obs: &[Obs]) -> Result<UslFit, FitError> {
+    let seed = fit_linearized(obs)?;
+    let mut p = [
+        seed.params.sigma.max(1e-9),
+        seed.params.kappa.max(1e-12),
+        seed.params.lambda,
+    ];
+    let mut mu = 1e-3;
+    let mut last_sse = sse(p, obs);
+
+    for _iter in 0..200 {
+        // Jacobian (residual = T_pred - T_obs) via analytic partials
+        let mut jtj = [[0.0f64; 3]; 3];
+        let mut jtr = [0.0f64; 3];
+        for o in obs {
+            let n = o.n;
+            let d = 1.0 + p[0] * (n - 1.0) + p[1] * n * (n - 1.0);
+            let tp = p[2] * n / d;
+            let r = tp - o.t;
+            // ∂T/∂σ = -λ n (n-1) / d², ∂T/∂κ = -λ n² (n-1) / d², ∂T/∂λ = n/d
+            let g = [
+                -p[2] * n * (n - 1.0) / (d * d),
+                -p[2] * n * n * (n - 1.0) / (d * d),
+                n / d,
+            ];
+            for i in 0..3 {
+                jtr[i] += g[i] * r;
+                for j in 0..3 {
+                    jtj[i][j] += g[i] * g[j];
+                }
+            }
+        }
+        // (JtJ + mu diag(JtJ)) delta = -Jtr
+        let mut a = jtj;
+        for i in 0..3 {
+            a[i][i] += mu * jtj[i][i].max(1e-12);
+        }
+        let Some(Triple(d0, d1, d2)) = solve3(a, [-jtr[0], -jtr[1], -jtr[2]]) else {
+            break;
+        };
+        let cand = [
+            (p[0] + d0).max(0.0),
+            (p[1] + d1).max(0.0),
+            (p[2] + d2).max(1e-12),
+        ];
+        let cand_sse = sse(cand, obs);
+        if cand_sse < last_sse {
+            let rel = (last_sse - cand_sse) / last_sse.max(1e-300);
+            p = cand;
+            last_sse = cand_sse;
+            mu = (mu * 0.5).max(1e-12);
+            if rel < 1e-12 {
+                break;
+            }
+        } else {
+            mu *= 4.0;
+            if mu > 1e12 {
+                break;
+            }
+        }
+    }
+    let params = UslParams::new(p[0], p[1], p[2]);
+    let (r2, rmse) = metrics(&params, obs);
+    // keep whichever fit is better in throughput space (LM should win)
+    if rmse <= seed.rmse {
+        Ok(UslFit {
+            params,
+            r2,
+            rmse,
+            method: "lm",
+        })
+    } else {
+        Ok(seed)
+    }
+}
+
+fn sse(p: [f64; 3], obs: &[Obs]) -> f64 {
+    obs.iter()
+        .map(|o| {
+            let d = 1.0 + p[0] * (o.n - 1.0) + p[1] * o.n * (o.n - 1.0);
+            let tp = p[2] * o.n / d;
+            (tp - o.t) * (tp - o.t)
+        })
+        .sum()
+}
+
+/// Default fit = LM with linearized seeding (the USL R package approach).
+pub fn fit(obs: &[Obs]) -> Result<UslFit, FitError> {
+    fit_lm(obs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn synth(params: UslParams, ns: &[f64], noise_cv: f64, seed: u64) -> Vec<Obs> {
+        let mut rng = Pcg32::seeded(seed);
+        ns.iter()
+            .map(|&n| {
+                let t = params.throughput(n) * rng.normal_with(1.0, noise_cv).max(0.5);
+                Obs::new(n, t)
+            })
+            .collect()
+    }
+
+    const NS: [f64; 7] = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
+
+    #[test]
+    fn exact_recovery_noise_free() {
+        let truth = UslParams::new(0.08, 0.002, 120.0);
+        let obs = synth(truth, &NS, 0.0, 1);
+        for f in [fit_linearized(&obs).unwrap(), fit_lm(&obs).unwrap()] {
+            assert!((f.params.sigma - truth.sigma).abs() < 1e-6, "{f:?}");
+            assert!((f.params.kappa - truth.kappa).abs() < 1e-8, "{f:?}");
+            assert!((f.params.lambda - truth.lambda).abs() < 1e-3, "{f:?}");
+            assert!(f.r2 > 0.999999);
+        }
+    }
+
+    #[test]
+    fn recovery_with_noise() {
+        let truth = UslParams::new(0.3, 0.01, 50.0);
+        let obs = synth(truth, &NS, 0.03, 2);
+        let f = fit(&obs).unwrap();
+        assert!((f.params.sigma - truth.sigma).abs() < 0.1, "{:?}", f.params);
+        assert!((f.params.kappa - truth.kappa).abs() < 0.005, "{:?}", f.params);
+        assert!(f.r2 > 0.95, "r2={}", f.r2);
+    }
+
+    #[test]
+    fn lm_beats_or_matches_linearized_under_noise() {
+        let truth = UslParams::new(0.6, 0.05, 10.0);
+        let mut lin_worse = 0;
+        for seed in 0..10 {
+            let obs = synth(truth, &NS, 0.05, seed);
+            let lin = fit_linearized(&obs).unwrap();
+            let lm = fit_lm(&obs).unwrap();
+            assert!(lm.rmse <= lin.rmse + 1e-12);
+            if lm.rmse < lin.rmse - 1e-12 {
+                lin_worse += 1;
+            }
+        }
+        assert!(lin_worse >= 5, "LM should usually improve: {lin_worse}/10");
+    }
+
+    #[test]
+    fn near_linear_data_yields_tiny_coefficients() {
+        // the Lambda regime: σ, κ ≈ 0
+        let truth = UslParams::new(0.005, 0.00001, 30.0);
+        let obs = synth(truth, &NS, 0.02, 3);
+        let f = fit(&obs).unwrap();
+        assert!(f.params.sigma < 0.05, "σ={}", f.params.sigma);
+        assert!(f.params.kappa < 0.001, "κ={}", f.params.kappa);
+    }
+
+    #[test]
+    fn retrograde_data_finds_peak() {
+        let truth = UslParams::new(0.7, 0.06, 8.0);
+        let obs = synth(truth, &[1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0], 0.0, 4);
+        let f = fit(&obs).unwrap();
+        let peak = f.params.peak_n().expect("retrograde must have a peak");
+        assert!((peak - truth.peak_n().unwrap()).abs() < 0.5);
+    }
+
+    #[test]
+    fn too_few_points_rejected() {
+        let obs = vec![Obs::new(1.0, 10.0), Obs::new(2.0, 15.0)];
+        assert!(matches!(fit(&obs), Err(FitError::TooFew(3, 2))));
+    }
+
+    #[test]
+    fn bad_data_rejected() {
+        let obs = vec![
+            Obs::new(1.0, 10.0),
+            Obs::new(2.0, 0.0),
+            Obs::new(4.0, 20.0),
+        ];
+        assert!(matches!(fit(&obs), Err(FitError::BadData)));
+    }
+
+    #[test]
+    fn coefficients_never_negative() {
+        // superlinear data would push σ negative; fit must clamp
+        let obs = vec![
+            Obs::new(1.0, 10.0),
+            Obs::new(2.0, 25.0),
+            Obs::new(4.0, 60.0),
+            Obs::new(8.0, 130.0),
+        ];
+        let f = fit(&obs).unwrap();
+        assert!(f.params.sigma >= 0.0 && f.params.kappa >= 0.0);
+    }
+}

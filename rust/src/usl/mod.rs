@@ -1,0 +1,13 @@
+//! Universal Scalability Law modeling — StreamInsight's analytical core
+//! (paper §IV-A): model, fitting (linearized + Levenberg–Marquardt),
+//! held-out evaluation, and Amdahl/linear baselines.
+
+pub mod baselines;
+pub mod eval;
+pub mod fit;
+pub mod model;
+
+pub use baselines::{fit_amdahl, fit_linear};
+pub use eval::{rmse_vs_train_size, EvalPoint};
+pub use fit::{fit, fit_linearized, fit_lm, FitError, Obs, UslFit};
+pub use model::UslParams;

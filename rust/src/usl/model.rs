@@ -1,0 +1,137 @@
+//! The Universal Scalability Law (Gunther 1993).
+//!
+//! ```text
+//! T(N) = λ·N / (1 + σ(N−1) + κ·N(N−1))
+//! ```
+//!
+//! σ — *contention*: serialization on shared resources (queueing);
+//! κ — *coherency*: pairwise/all-to-all synchronization cost;
+//! λ — capacity scale: throughput of one unit at N = 1.
+//!
+//! Special cases: κ=0 reduces to Amdahl's law; σ=κ=0 is linear scaling.
+//! USL's superpower for the paper: with κ>0 throughput *retrogrades* past
+//! the peak N* = √((1−σ)/κ) — exactly the Dask-on-Lustre behaviour.
+
+/// USL parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UslParams {
+    /// Contention coefficient σ ≥ 0.
+    pub sigma: f64,
+    /// Coherency coefficient κ ≥ 0.
+    pub kappa: f64,
+    /// Capacity scale λ > 0 (throughput at N=1).
+    pub lambda: f64,
+}
+
+impl UslParams {
+    pub fn new(sigma: f64, kappa: f64, lambda: f64) -> Self {
+        Self {
+            sigma: sigma.max(0.0),
+            kappa: kappa.max(0.0),
+            lambda: lambda.max(f64::MIN_POSITIVE),
+        }
+    }
+
+    /// Predicted throughput at parallelism `n`.
+    pub fn throughput(&self, n: f64) -> f64 {
+        debug_assert!(n >= 1.0);
+        self.lambda * n / (1.0 + self.sigma * (n - 1.0) + self.kappa * n * (n - 1.0))
+    }
+
+    /// Relative capacity (speedup over N=1).
+    pub fn speedup(&self, n: f64) -> f64 {
+        self.throughput(n) / self.throughput(1.0)
+    }
+
+    /// Parallelism that maximizes throughput: N* = √((1−σ)/κ).
+    /// `None` when throughput is monotone nondecreasing (κ = 0, σ ≤ 1).
+    pub fn peak_n(&self) -> Option<f64> {
+        if self.kappa <= 0.0 {
+            return None;
+        }
+        let inner = (1.0 - self.sigma) / self.kappa;
+        if inner <= 1.0 {
+            Some(1.0) // already past peak at N=1
+        } else {
+            Some(inner.sqrt())
+        }
+    }
+
+    /// Maximum achievable throughput.
+    pub fn peak_throughput(&self) -> f64 {
+        match self.peak_n() {
+            Some(n) => self.throughput(n.max(1.0)),
+            None => self.lambda / self.sigma.max(1e-12), // asymptote 1/σ
+        }
+    }
+
+    /// Scalability classification for reports.
+    pub fn regime(&self) -> &'static str {
+        if self.sigma < 0.02 && self.kappa < 1e-4 {
+            "near-linear"
+        } else if self.kappa < 1e-6 {
+            "contention-limited (Amdahl)"
+        } else {
+            "retrograde (contention + coherency)"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_when_no_overheads() {
+        let p = UslParams::new(0.0, 0.0, 10.0);
+        assert!((p.throughput(1.0) - 10.0).abs() < 1e-12);
+        assert!((p.throughput(8.0) - 80.0).abs() < 1e-12);
+        assert_eq!(p.peak_n(), None);
+        assert_eq!(p.regime(), "near-linear");
+    }
+
+    #[test]
+    fn amdahl_asymptote() {
+        let p = UslParams::new(0.1, 0.0, 1.0);
+        // speedup bounded by 1/σ = 10
+        assert!(p.speedup(1e6) < 10.0);
+        assert!(p.speedup(1e6) > 9.9);
+        assert_eq!(p.regime(), "contention-limited (Amdahl)");
+    }
+
+    #[test]
+    fn retrograde_peak() {
+        let p = UslParams::new(0.1, 0.01, 1.0);
+        let n_star = p.peak_n().unwrap();
+        assert!((n_star - (0.9f64 / 0.01).sqrt()).abs() < 1e-9); // ≈ 9.49
+        // throughput falls past the peak
+        assert!(p.throughput(n_star) > p.throughput(n_star * 2.0));
+        assert!(p.throughput(n_star) > p.throughput(1.0));
+        assert_eq!(p.regime(), "retrograde (contention + coherency)");
+    }
+
+    #[test]
+    fn paper_dask_regime_peaks_at_one() {
+        // Dask on Lustre: σ∈[0.6,1], κ>0 → "peak scalability ... already
+        // reached with a single partition"
+        let p = UslParams::new(0.8, 0.2, 5.0);
+        let n_star = p.peak_n().unwrap();
+        assert!(n_star <= 1.01, "n*={n_star}");
+        assert!(p.throughput(1.0) >= p.throughput(2.0));
+    }
+
+    #[test]
+    fn negative_inputs_clamped() {
+        let p = UslParams::new(-0.5, -1.0, 2.0);
+        assert_eq!(p.sigma, 0.0);
+        assert_eq!(p.kappa, 0.0);
+    }
+
+    #[test]
+    fn throughput_at_one_is_lambda() {
+        for (s, k) in [(0.0, 0.0), (0.5, 0.1), (0.9, 0.0)] {
+            let p = UslParams::new(s, k, 3.5);
+            assert!((p.throughput(1.0) - 3.5).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! Small command-line argument parser (no `clap` in the offline env).
+//!
+//! Model: `binary <subcommand> [--flag] [--key value]... [positional]...`.
+//! Flags may be declared with defaults and help text; `--help` renders an
+//! auto-generated usage page.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Declarative description of one subcommand.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// Option taking a value, with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Option taking a value, required (no default).
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+}
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Args {
+    pub values: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, CliError> {
+        let s = self
+            .get(key)
+            .ok_or_else(|| CliError::Missing(key.to_string()))?;
+        s.parse()
+            .map_err(|_| CliError::BadValue(key.to_string(), s.to_string()))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, CliError> {
+        let s = self
+            .get(key)
+            .ok_or_else(|| CliError::Missing(key.to_string()))?;
+        s.parse()
+            .map_err(|_| CliError::BadValue(key.to_string(), s.to_string()))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, CliError> {
+        let s = self
+            .get(key)
+            .ok_or_else(|| CliError::Missing(key.to_string()))?;
+        s.parse()
+            .map_err(|_| CliError::BadValue(key.to_string(), s.to_string()))
+    }
+
+    /// Parse a comma-separated list of usizes, e.g. "1,2,4,8".
+    pub fn get_usize_list(&self, key: &str) -> Result<Vec<usize>, CliError> {
+        let s = self
+            .get(key)
+            .ok_or_else(|| CliError::Missing(key.to_string()))?;
+        s.split(',')
+            .map(|p| {
+                p.trim()
+                    .parse()
+                    .map_err(|_| CliError::BadValue(key.to_string(), s.to_string()))
+            })
+            .collect()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    #[error("unknown subcommand {0:?}; try --help")]
+    UnknownCommand(String),
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("invalid value for --{0}: {1:?}")]
+    BadValue(String, String),
+    #[error("no subcommand given; try --help")]
+    NoCommand,
+    #[error("help requested")]
+    Help,
+}
+
+/// A multi-command CLI application.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, spec: CommandSpec) -> Self {
+        self.commands.push(spec);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "USAGE: {} <command> [options]\n", self.name);
+        let _ = writeln!(s, "COMMANDS:");
+        for c in &self.commands {
+            let _ = writeln!(s, "  {:<18} {}", c.name, c.about);
+        }
+        let _ = writeln!(s, "\nRun '{} <command> --help' for options.", self.name);
+        s
+    }
+
+    pub fn command_usage(&self, spec: &CommandSpec) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} {} — {}\n", self.name, spec.name, spec.about);
+        let _ = writeln!(s, "OPTIONS:");
+        for o in &spec.opts {
+            let kind = if o.is_flag {
+                String::new()
+            } else if let Some(d) = &o.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            let _ = writeln!(s, "  --{:<22} {}{}", o.name, o.help, kind);
+        }
+        s
+    }
+
+    /// Parse argv (excluding the binary name). Returns (command, args).
+    pub fn parse(&self, argv: &[String]) -> Result<(String, Args), CliError> {
+        if argv.is_empty() {
+            return Err(CliError::NoCommand);
+        }
+        if argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Err(CliError::Help);
+        }
+        let cmd_name = &argv[0];
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError::UnknownCommand(cmd_name.clone()))?;
+
+        let mut args = Args::default();
+        // seed defaults
+        for o in &spec.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(name) = tok.strip_prefix("--") {
+                // allow --key=value
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let o = spec
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::UnknownOption(name.to_string()))?;
+                if o.is_flag {
+                    args.flags.push(name.to_string());
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.to_string()))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // required options present?
+        for o in &spec.opts {
+            if !o.is_flag && o.default.is_none() && !args.values.contains_key(o.name) {
+                return Err(CliError::Missing(o.name.to_string()));
+            }
+        }
+        Ok((cmd_name.clone(), args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("ps", "test app").command(
+            CommandSpec::new("run", "run something")
+                .opt("partitions", "4", "partition count")
+                .req("platform", "target platform")
+                .flag("verbose", "chatty"),
+        )
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_defaults_and_required() {
+        let (cmd, args) = app()
+            .parse(&sv(&["run", "--platform", "lambda"]))
+            .unwrap();
+        assert_eq!(cmd, "run");
+        assert_eq!(args.get("partitions"), Some("4"));
+        assert_eq!(args.get("platform"), Some("lambda"));
+        assert!(!args.has_flag("verbose"));
+    }
+
+    #[test]
+    fn parse_flags_and_overrides() {
+        let (_, args) = app()
+            .parse(&sv(&["run", "--platform=dask", "--partitions", "16", "--verbose"]))
+            .unwrap();
+        assert_eq!(args.get_usize("partitions").unwrap(), 16);
+        assert_eq!(args.get("platform"), Some("dask"));
+        assert!(args.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required() {
+        assert_eq!(
+            app().parse(&sv(&["run"])),
+            Err(CliError::Missing("platform".into()))
+        );
+    }
+
+    #[test]
+    fn unknown_bits() {
+        assert!(matches!(
+            app().parse(&sv(&["nope"])),
+            Err(CliError::UnknownCommand(_))
+        ));
+        assert!(matches!(
+            app().parse(&sv(&["run", "--platform", "x", "--zap"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn positional_and_lists() {
+        let (_, args) = app()
+            .parse(&sv(&["run", "--platform", "x", "pos1", "--partitions", "1,2,4"]))
+            .unwrap();
+        assert_eq!(args.positional, vec!["pos1"]);
+        assert_eq!(args.get_usize_list("partitions").unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn help() {
+        assert_eq!(app().parse(&sv(&["--help"])), Err(CliError::Help));
+        assert_eq!(
+            app().parse(&sv(&["run", "--help"])),
+            Err(CliError::Help)
+        );
+        assert!(app().usage().contains("run"));
+    }
+}

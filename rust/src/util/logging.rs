@@ -1,0 +1,67 @@
+//! Tiny `log`-facade backend writing to stderr with a level filter.
+//! (The offline environment has the `log` crate but no `env_logger`.)
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+static INIT: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Initialize logging once; level from `PS_LOG` env (error|warn|info|debug|trace),
+/// default `info`. Safe to call multiple times.
+pub fn init() {
+    if INIT.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("PS_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    let logger = Box::new(StderrLogger {
+        start: Instant::now(),
+    });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

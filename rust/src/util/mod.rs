@@ -1,0 +1,11 @@
+//! Utility substrates built in-repo because the offline environment lacks
+//! the usual crates (`rand`, `serde`, `clap`, `criterion`, `toml`):
+//! deterministic RNG, JSON, TOML-subset config parsing, CLI parsing,
+//! statistics, and logging.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod tomlmini;

@@ -1,0 +1,258 @@
+//! Statistics helpers shared by the metrics, USL-fitting, and insight layers:
+//! summary statistics, percentiles, and ordinary/weighted least squares.
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / if n > 1 { (n - 1) as f64 } else { 1.0 };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        })
+    }
+
+    /// Coefficient of variation (std/mean); the paper uses runtime
+    /// fluctuation as a predictability signal (Fig 3).
+    pub fn cv(&self) -> f64 {
+        if self.mean.abs() < f64::EPSILON {
+            0.0
+        } else {
+            self.std / self.mean
+        }
+    }
+}
+
+/// Percentile by linear interpolation on a pre-sorted slice; q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Percentile of an unsorted slice.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Root mean squared error between predictions and observations.
+pub fn rmse(pred: &[f64], obs: &[f64]) -> f64 {
+    assert_eq!(pred.len(), obs.len());
+    assert!(!pred.is_empty());
+    let sse: f64 = pred
+        .iter()
+        .zip(obs)
+        .map(|(p, o)| (p - o) * (p - o))
+        .sum();
+    (sse / pred.len() as f64).sqrt()
+}
+
+/// Coefficient of determination R² of predictions vs observations.
+pub fn r_squared(pred: &[f64], obs: &[f64]) -> f64 {
+    assert_eq!(pred.len(), obs.len());
+    let m = mean(obs);
+    let ss_tot: f64 = obs.iter().map(|o| (o - m) * (o - m)).sum();
+    let ss_res: f64 = pred
+        .iter()
+        .zip(obs)
+        .map(|(p, o)| (o - p) * (o - p))
+        .sum();
+    if ss_tot <= f64::EPSILON {
+        if ss_res <= f64::EPSILON {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Ordinary least squares for y = a + b*x. Returns (a, b).
+pub fn linreg(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let sx: f64 = x.iter().sum();
+    let sy: f64 = y.iter().sum();
+    let sxx: f64 = x.iter().map(|v| v * v).sum();
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (mean(y), 0.0);
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Least squares for y = b1*x1 + b2*x2 (no intercept), the design used by
+/// the linearized USL fit. Returns (b1, b2).
+pub fn lsq2(x1: &[f64], x2: &[f64], y: &[f64]) -> (f64, f64) {
+    assert!(x1.len() == x2.len() && x2.len() == y.len());
+    // normal equations for 2x2 system
+    let s11: f64 = x1.iter().map(|v| v * v).sum();
+    let s12: f64 = x1.iter().zip(x2).map(|(a, b)| a * b).sum();
+    let s22: f64 = x2.iter().map(|v| v * v).sum();
+    let sy1: f64 = x1.iter().zip(y).map(|(a, b)| a * b).sum();
+    let sy2: f64 = x2.iter().zip(y).map(|(a, b)| a * b).sum();
+    let det = s11 * s22 - s12 * s12;
+    if det.abs() < 1e-12 {
+        // degenerate: fall back to single-regressor solutions
+        let b1 = if s11 > 1e-12 { sy1 / s11 } else { 0.0 };
+        return (b1, 0.0);
+    }
+    let b1 = (sy1 * s22 - sy2 * s12) / det;
+    let b2 = (sy2 * s11 - sy1 * s12) / det;
+    (b1, b2)
+}
+
+/// Exponentially-weighted moving average helper.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.std - 1.5811388).abs() < 1e-6);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+    }
+
+    #[test]
+    fn rmse_zero_for_perfect() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean_model() {
+        let obs = [1.0, 2.0, 3.0];
+        assert!((r_squared(&obs, &obs) - 1.0).abs() < 1e-12);
+        let pred = [2.0, 2.0, 2.0]; // the mean model has R² = 0
+        assert!(r_squared(&pred, &obs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 + 2.0 * v).collect();
+        let (a, b) = linreg(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lsq2_recovers_plane() {
+        let x1: Vec<f64> = (1..40).map(|i| i as f64).collect();
+        let x2: Vec<f64> = x1.iter().map(|v| v * v).collect();
+        let y: Vec<f64> = x1
+            .iter()
+            .zip(&x2)
+            .map(|(a, b)| 0.7 * a + 0.01 * b)
+            .collect();
+        let (b1, b2) = lsq2(&x1, &x2, &y);
+        assert!((b1 - 0.7).abs() < 1e-8, "b1={b1}");
+        assert!((b2 - 0.01).abs() < 1e-8, "b2={b2}");
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..32 {
+            e.observe(10.0);
+        }
+        assert!((e.value().unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cv_of_constant_is_zero() {
+        let s = Summary::of(&[5.0, 5.0, 5.0]).unwrap();
+        assert_eq!(s.cv(), 0.0);
+    }
+}

@@ -1,0 +1,250 @@
+//! TOML-subset parser for configuration files.
+//!
+//! Supports the subset the config system needs (no `toml` crate offline):
+//! `[table]` and `[table.sub]` headers, `key = value` with strings, ints,
+//! floats, booleans, and homogeneous inline arrays, `#` comments, and bare
+//! or quoted keys.  Unsupported: dates, multi-line strings, inline tables,
+//! arrays-of-tables.  Values land in the same [`Json`] value model the rest
+//! of the stack uses, nested by table path.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum TomlError {
+    #[error("line {0}: invalid table header")]
+    BadHeader(usize),
+    #[error("line {0}: expected key = value")]
+    BadKeyValue(usize),
+    #[error("line {0}: invalid value {1:?}")]
+    BadValue(usize, String),
+    #[error("line {0}: duplicate key {1:?}")]
+    DuplicateKey(usize, String),
+}
+
+/// Parse TOML-subset text into a nested JSON object.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .ok_or(TomlError::BadHeader(lineno))?
+                .trim();
+            if header.is_empty() || header.starts_with('[') {
+                return Err(TomlError::BadHeader(lineno));
+            }
+            path = header.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return Err(TomlError::BadHeader(lineno));
+            }
+            // materialize the table so empty tables exist
+            ensure_table(&mut root, &path, lineno)?;
+            continue;
+        }
+        let eq = line.find('=').ok_or(TomlError::BadKeyValue(lineno))?;
+        let key = unquote_key(line[..eq].trim()).ok_or(TomlError::BadKeyValue(lineno))?;
+        let val_src = line[eq + 1..].trim();
+        let val = parse_value(val_src, lineno)?;
+        let table = ensure_table(&mut root, &path, lineno)?;
+        if table.contains_key(&key) {
+            return Err(TomlError::DuplicateKey(lineno, key));
+        }
+        table.insert(key, val);
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // honour '#' only outside quoted strings
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' if !prev_escape => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_escape = ch == '\\' && !prev_escape;
+    }
+    line
+}
+
+fn unquote_key(k: &str) -> Option<String> {
+    if let Some(inner) = k.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Some(inner.to_string());
+    }
+    if !k.is_empty()
+        && k.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    {
+        return Some(k.to_string());
+    }
+    None
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Json>, TomlError> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(m) => cur = m,
+            _ => return Err(TomlError::DuplicateKey(lineno, seg.clone())),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(src: &str, lineno: usize) -> Result<Json, TomlError> {
+    let bad = || TomlError::BadValue(lineno, src.to_string());
+    if src.is_empty() {
+        return Err(bad());
+    }
+    if let Some(inner) = src.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(bad)?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('r') => out.push('\r'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    _ => return Err(bad()),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Json::Str(out));
+    }
+    if src == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if src == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = src.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(bad)?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part, lineno)?);
+        }
+        return Ok(Json::Arr(items));
+    }
+    // numbers: allow underscores as separators
+    let cleaned: String = src.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Json::Num(i as f64));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Json::Num(f));
+    }
+    Err(bad())
+}
+
+/// Split on commas that are not inside nested brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_kv() {
+        let v = parse("a = 1\nb = \"x\"\nc = true\nd = 2.5\n").unwrap();
+        assert_eq!(v.get("a").as_i64(), Some(1));
+        assert_eq!(v.get("b").as_str(), Some("x"));
+        assert_eq!(v.get("c").as_bool(), Some(true));
+        assert_eq!(v.get("d").as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn tables_and_nesting() {
+        let v = parse("[broker]\nshards = 4\n[broker.kafka]\nlog_dir = \"/tmp\"\n").unwrap();
+        assert_eq!(v.get("broker").get("shards").as_i64(), Some(4));
+        assert_eq!(
+            v.get("broker").get("kafka").get("log_dir").as_str(),
+            Some("/tmp")
+        );
+    }
+
+    #[test]
+    fn arrays() {
+        let v = parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nnested = [[1,2],[3]]\n").unwrap();
+        assert_eq!(v.get("xs").as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("ys").as_arr().unwrap()[1].as_str(), Some("b"));
+        assert_eq!(v.get("nested").as_arr().unwrap()[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let v = parse("# header\n\na = 1 # trailing\ns = \"has # inside\"\n").unwrap();
+        assert_eq!(v.get("a").as_i64(), Some(1));
+        assert_eq!(v.get("s").as_str(), Some("has # inside"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let v = parse("n = 8_000\n").unwrap();
+        assert_eq!(v.get("n").as_i64(), Some(8000));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue =\n").is_err());
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("a = nope\n").is_err());
+    }
+
+    #[test]
+    fn quoted_keys() {
+        let v = parse("\"weird key\" = 3\n").unwrap();
+        assert_eq!(v.get("weird key").as_i64(), Some(3));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse("s = \"line1\\nline2\\t\\\"q\\\"\"\n").unwrap();
+        assert_eq!(v.get("s").as_str(), Some("line1\nline2\t\"q\""));
+    }
+}

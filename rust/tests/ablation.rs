@@ -1,0 +1,261 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//! linearized-vs-LM USL fitting, backoff policy variants, event-source
+//! batch sizes, store backends, and engine interchangeability.
+
+use pilot_streaming::broker::BackoffController;
+use pilot_streaming::engine::{CalibratedEngine, StepEngine};
+use pilot_streaming::insight::figures::{default_calibration, engine_factory};
+use pilot_streaming::insight::{group_observations, run_sweep, ExperimentSpec};
+use pilot_streaming::kmeans::NativeEngine;
+use pilot_streaming::miniapp::{run_sim, PlatformKind, Scenario};
+use pilot_streaming::sim::Dist;
+use pilot_streaming::store::{ModelState, ModelStore, ObjectStore, SharedFsStore};
+use pilot_streaming::usl::{fit_linearized, fit_lm, UslParams};
+use pilot_streaming::util::rng::Pcg32;
+use std::sync::Arc;
+
+#[test]
+fn ablation_lm_refinement_reduces_throughput_space_error() {
+    // quantifies what the LM stage buys over Gunther's linearized fit
+    let mut rng = Pcg32::seeded(5);
+    let truth = UslParams::new(0.5, 0.02, 25.0);
+    let mut lin_rmse = 0.0;
+    let mut lm_rmse = 0.0;
+    let trials = 20;
+    for _ in 0..trials {
+        let obs: Vec<_> = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0]
+            .iter()
+            .map(|&n| {
+                pilot_streaming::usl::Obs::new(
+                    n,
+                    truth.throughput(n) * rng.normal_with(1.0, 0.06).max(0.5),
+                )
+            })
+            .collect();
+        lin_rmse += fit_linearized(&obs).unwrap().rmse;
+        lm_rmse += fit_lm(&obs).unwrap().rmse;
+    }
+    assert!(
+        lm_rmse <= lin_rmse,
+        "LM refinement should not hurt: lm {lm_rmse} vs lin {lin_rmse}"
+    );
+    assert!(
+        lm_rmse < lin_rmse * 0.98,
+        "LM should measurably improve under noise: lm {lm_rmse} vs lin {lin_rmse}"
+    );
+}
+
+#[test]
+fn ablation_backoff_aggressiveness() {
+    // milder multiplicative decrease converges to a higher (but still
+    // stable) operating rate against a fixed-capacity consumer
+    let run = |decrease: f64| {
+        let mut b = BackoffController::new(100.0);
+        b.decrease = decrease;
+        let mut backlog = 0.0f64;
+        let capacity = 60.0f64;
+        let mut delivered = 0.0;
+        for _ in 0..300 {
+            let sent = b.rate();
+            let processed = f64::min(capacity, backlog + sent);
+            delivered += processed;
+            backlog = (backlog + sent - processed).max(0.0);
+            b.on_lag_sample(backlog as u64);
+        }
+        delivered
+    };
+    let harsh = run(0.25);
+    let mild = run(0.75);
+    assert!(
+        mild > harsh,
+        "milder backoff should deliver more at steady capacity: mild {mild} vs harsh {harsh}"
+    );
+}
+
+#[test]
+fn ablation_event_source_batch_size() {
+    // larger invocation batches amortize per-invocation overhead: fewer
+    // total invocations for the same message count (sim driver uses batch=1;
+    // this isolates the ESM mechanism itself)
+    use pilot_streaming::broker::{Broker as _, KafkaTopic, Message};
+    use pilot_streaming::serverless::EventSourceMapping;
+    use pilot_streaming::sim::SimClock;
+    let count_invocations = |batch: usize| {
+        let clock = Arc::new(SimClock::new());
+        let topic = Arc::new(KafkaTopic::isolated("t", 1, clock.clone()));
+        for i in 0..64u64 {
+            topic
+                .put(Message::new(1, i, Arc::new(vec![0.0; 8]), 2, 0.0))
+                .unwrap();
+        }
+        clock.advance_to(100.0);
+        let esm = EventSourceMapping::new(
+            topic as Arc<dyn pilot_streaming::broker::Broker>,
+            batch,
+        );
+        let mut invocations = 0;
+        while let Some(lease) = esm.poll(0, 100.0) {
+            invocations += 1;
+            esm.commit(lease);
+        }
+        assert_eq!(esm.processed(), 64);
+        invocations
+    };
+    assert_eq!(count_invocations(1), 64);
+    assert_eq!(count_invocations(8), 8);
+    assert_eq!(count_invocations(64), 1);
+}
+
+#[test]
+fn ablation_store_backend_swap() {
+    // same workload, same engine — only the store differs; the isolated
+    // object store must never inflate with concurrency while the shared FS
+    // must (this is the paper's entire causal story in one test)
+    use pilot_streaming::sim::{ContentionParams, SharedResource};
+    use pilot_streaming::store::shared_fs::SharedFsParams;
+    let object = ObjectStore::default();
+    let fs = SharedResource::new("lustre", ContentionParams::new(0.9, 0.05));
+    let shared = SharedFsStore::new(SharedFsParams::default(), Arc::clone(&fs));
+    let m = ModelState::new_random(1024, 8, 1);
+    object.put("m", m.clone()).unwrap();
+    shared.put("m", m).unwrap();
+
+    let (_, obj_quiet) = object.get("m").unwrap();
+    let (_, shr_quiet) = shared.get("m").unwrap();
+    let guards: Vec<_> = (0..12).map(|_| fs.enter()).collect();
+    let (_, obj_busy) = object.get("m").unwrap();
+    let (_, shr_busy) = shared.get("m").unwrap();
+    drop(guards);
+    assert!((obj_busy.seconds - obj_quiet.seconds).abs() < 1e-12, "S3 isolated");
+    assert!(
+        shr_busy.seconds > shr_quiet.seconds * 5.0,
+        "Lustre contended: {} vs {}",
+        shr_quiet.seconds,
+        shr_busy.seconds
+    );
+}
+
+#[test]
+fn ablation_engine_interchangeability() {
+    // the sim pipeline is engine-agnostic: swapping the calibrated engine
+    // for the real native engine changes numbers, not behaviourally-checked
+    // structure (all messages processed, positive throughput)
+    let sc = Scenario {
+        platform: PlatformKind::Lambda,
+        partitions: 2,
+        points_per_message: 256,
+        centroids: 16,
+        messages: 16,
+        ..Default::default()
+    };
+    let mut cal = CalibratedEngine::new(3);
+    cal.insert((256, 16), Dist::Const(0.002));
+    for engine in [
+        Arc::new(cal) as Arc<dyn StepEngine>,
+        Arc::new(NativeEngine) as Arc<dyn StepEngine>,
+    ] {
+        let r = run_sim(&sc, engine).unwrap();
+        assert_eq!(r.summary.messages, 16);
+        assert!(r.summary.throughput > 0.0);
+    }
+}
+
+#[test]
+fn ablation_contention_coefficients_drive_fitted_sigma() {
+    // dose-response: stronger configured alpha ⇒ larger fitted sigma.
+    // This ties the USL surface observation to the mechanism knob.
+    use pilot_streaming::insight::analyze;
+    use pilot_streaming::sim::ContentionParams;
+    let sigma_for = |alpha: f64| {
+        let mut spec = ExperimentSpec::paper_grid(32, 17);
+        spec.platforms = vec![PlatformKind::DaskWrangler];
+        spec.message_sizes = vec![16_000];
+        spec.centroids = vec![1_024];
+        spec.partitions = vec![1, 2, 4, 8, 16];
+        spec.lustre = ContentionParams::new(alpha, 0.02);
+        let rows = run_sweep(&spec, engine_factory(default_calibration()));
+        analyze(&rows)[0].fit.params.sigma
+    };
+    let weak = sigma_for(0.1);
+    let strong = sigma_for(1.2);
+    assert!(
+        strong > weak + 0.1,
+        "sigma must track the contention knob: weak {weak} strong {strong}"
+    );
+}
+
+#[test]
+fn ablation_memory_knob_only_affects_lambda_compute() {
+    // Lambda memory scales compute; Dask ignores it entirely
+    let run = |platform: PlatformKind, memory: u32| {
+        let sc = Scenario {
+            platform,
+            partitions: 2,
+            points_per_message: 8_000,
+            centroids: 1_024,
+            memory_mb: memory,
+            messages: 24,
+            ..Default::default()
+        };
+        run_sim(&sc, engine_factory(default_calibration())(&sc))
+            .unwrap()
+            .summary
+            .compute_mean
+    };
+    let lam_small = run(PlatformKind::Lambda, 512);
+    let lam_big = run(PlatformKind::Lambda, 3008);
+    assert!(lam_small > lam_big * 2.0, "{lam_small} vs {lam_big}");
+    let dask_small = run(PlatformKind::DaskWrangler, 512);
+    let dask_big = run(PlatformKind::DaskWrangler, 3008);
+    assert!(
+        (dask_small - dask_big).abs() / dask_big < 0.2,
+        "dask must ignore the lambda memory knob: {dask_small} vs {dask_big}"
+    );
+}
+
+#[test]
+fn ablation_knl_vs_wrangler_machines() {
+    // per-core speed difference shows up as longer compute on Stampede2
+    let run = |platform: PlatformKind| {
+        let sc = Scenario {
+            platform,
+            partitions: 4,
+            points_per_message: 16_000,
+            centroids: 1_024,
+            messages: 24,
+            ..Default::default()
+        };
+        run_sim(&sc, engine_factory(default_calibration())(&sc))
+            .unwrap()
+            .summary
+            .compute_mean
+    };
+    let wrangler = run(PlatformKind::DaskWrangler);
+    let knl = run(PlatformKind::DaskStampede2);
+    assert!(
+        knl > wrangler * 1.4,
+        "KNL cores are slower: knl {knl} vs wrangler {wrangler}"
+    );
+}
+
+#[test]
+fn ablation_observations_match_fitted_curve() {
+    // consistency: the throughput observations a sweep produces are well
+    // explained by its own fitted params across partitions (R2 check per
+    // group lives in usl_repro; here we verify point-wise relative error)
+    // enough messages per shard that one-off cold starts don't distort
+    // the per-partition operating point
+    let mut spec = ExperimentSpec::paper_grid(240, 31);
+    spec.platforms = vec![PlatformKind::Lambda];
+    spec.message_sizes = vec![8_000];
+    spec.centroids = vec![1_024];
+    spec.partitions = vec![1, 2, 4, 8];
+    let rows = run_sweep(&spec, engine_factory(default_calibration()));
+    let obs = group_observations(&rows, (PlatformKind::Lambda, 8_000, 1_024, 3_008));
+    let f = pilot_streaming::usl::fit(&obs).unwrap();
+    for o in &obs {
+        let pred = f.params.throughput(o.n);
+        let rel = (pred - o.t).abs() / o.t;
+        assert!(rel < 0.25, "N={}: pred {pred} vs obs {} (rel {rel})", o.n, o.t);
+    }
+}

@@ -1,0 +1,92 @@
+//! Live pipeline integration: broker → event-source mapping → platform →
+//! PJRT, with real artifact execution on every message.
+//! Skipped (loudly) when `make artifacts` hasn't run.
+
+use pilot_streaming::engine::StepEngine;
+use pilot_streaming::kmeans::NativeEngine;
+use pilot_streaming::miniapp::{run_live, PlatformKind, Scenario};
+use pilot_streaming::runtime::{calibrate, Manifest, PjrtEngine};
+use std::sync::Arc;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return None;
+    }
+    Some(Manifest::load(&dir).unwrap())
+}
+
+fn tiny(platform: PlatformKind) -> Scenario {
+    Scenario {
+        platform,
+        partitions: 2,
+        points_per_message: 256,
+        centroids: 16,
+        messages: 16,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn live_lambda_pipeline_with_pjrt() {
+    let Some(man) = manifest() else { return };
+    let engine: Arc<dyn StepEngine> = Arc::new(PjrtEngine::new(man, 2));
+    let r = run_live(&tiny(PlatformKind::Lambda), engine, 200.0).unwrap();
+    assert!(r.summary.messages >= 16);
+    assert!(r.summary.throughput > 0.0);
+    // compute_mean is real PJRT exec time scaled by the container CPU factor
+    assert!(r.summary.compute_mean > 0.0);
+    // broker latency is the modeled Kinesis put latency (~15 ms)
+    assert!(r.summary.broker.mean > 0.005);
+}
+
+#[test]
+fn live_dask_pipeline_with_pjrt() {
+    let Some(man) = manifest() else { return };
+    let engine: Arc<dyn StepEngine> = Arc::new(PjrtEngine::new(man, 2));
+    let r = run_live(&tiny(PlatformKind::DaskWrangler), engine, 200.0).unwrap();
+    assert!(r.summary.messages >= 16);
+    assert!(r.summary.io_mean > 0.0, "lustre model sync must be charged");
+}
+
+#[test]
+fn pjrt_and_native_produce_comparable_live_metrics() {
+    // the engines implement the same math; live service-time means should
+    // be on the same order (native is O(n*c) scalar loops vs XLA vectorized,
+    // so allow a wide but bounded ratio)
+    let Some(man) = manifest() else { return };
+    let pjrt: Arc<dyn StepEngine> = Arc::new(PjrtEngine::new(man, 1));
+    let native: Arc<dyn StepEngine> = Arc::new(NativeEngine);
+    let rp = run_live(&tiny(PlatformKind::Lambda), pjrt, 500.0).unwrap();
+    let rn = run_live(&tiny(PlatformKind::Lambda), native, 500.0).unwrap();
+    let ratio = rn.summary.compute_mean / rp.summary.compute_mean.max(1e-9);
+    assert!(
+        (0.02..=100.0).contains(&ratio),
+        "native/pjrt compute ratio {ratio} out of sanity range"
+    );
+}
+
+#[test]
+fn calibration_feeds_simulation_consistently() {
+    // sim throughput with a calibrated engine should be within a sane
+    // factor of the live measurement for the same scenario
+    let Some(man) = manifest() else { return };
+    let engine = PjrtEngine::new(man.clone(), 1);
+    let rows = calibrate::calibrate(&engine, 2, 7);
+    assert!(rows.iter().any(|r| r.key == (256, 16)));
+    let sim_engine: Arc<dyn StepEngine> = Arc::new(calibrate::calibrated_engine(&rows, 7));
+    let sc = tiny(PlatformKind::Lambda);
+    let sim = pilot_streaming::miniapp::run_sim(&sc, sim_engine).unwrap();
+    let live_engine: Arc<dyn StepEngine> = Arc::new(PjrtEngine::new(man, 2));
+    let live = run_live(&sc, live_engine, 500.0).unwrap();
+    // live includes thread scheduling + polling overheads; sim is the
+    // idealized closed loop. Allow an order of magnitude.
+    let ratio = sim.summary.throughput / live.summary.throughput.max(1e-9);
+    assert!(
+        (0.1..=10.0).contains(&ratio),
+        "sim {} vs live {} msg/s (ratio {ratio})",
+        sim.summary.throughput,
+        live.summary.throughput
+    );
+}

@@ -1,0 +1,248 @@
+//! Property-based tests over the coordinator's invariants (the offline
+//! environment has no proptest; `cases` below is a minimal seeded-case
+//! runner — every failure prints the seed that reproduces it).
+//!
+//! Covered invariants: broker ordering/no-loss, event-source-mapping
+//! exactly-once accounting, USL fit equivariance, backoff bounds,
+//! histogram quantile monotonicity, native k-means conservation laws.
+
+use pilot_streaming::broker::{partition_for_key, Broker, KafkaTopic, Message};
+use pilot_streaming::kmeans::minibatch_step;
+use pilot_streaming::metrics::Histogram;
+use pilot_streaming::serverless::EventSourceMapping;
+use pilot_streaming::sim::SimClock;
+use pilot_streaming::usl::{fit, Obs, UslParams};
+use pilot_streaming::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// Run `n` randomized cases; on failure, panic with the offending seed.
+fn cases(n: u64, f: impl Fn(&mut Pcg32)) {
+    for seed in 0..n {
+        let mut rng = Pcg32::seeded(0xC0FFEE ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at case seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn msg(rng: &mut Pcg32, t: f64) -> Message {
+    let n = 1 + rng.gen_range(16) as usize;
+    Message::new(1, rng.next_u64(), Arc::new(vec![0.0; n * 4]), 4, t)
+}
+
+#[test]
+fn prop_broker_preserves_order_and_loses_nothing() {
+    cases(25, |rng| {
+        let clock = Arc::new(SimClock::new());
+        let partitions = 1 + rng.gen_range(8) as usize;
+        let topic = KafkaTopic::isolated("t", partitions, clock.clone());
+        let total = 20 + rng.gen_range(100) as usize;
+        let mut per_partition_ids: Vec<Vec<u64>> = vec![Vec::new(); partitions];
+        for _ in 0..total {
+            let m = msg(rng, 0.0);
+            let id = m.id;
+            let r = topic.put(m).unwrap();
+            per_partition_ids[r.partition].push(id);
+        }
+        clock.advance_to(1e6);
+        let mut fetched_total = 0;
+        for p in 0..partitions {
+            let recs = topic.fetch(p, 0, total + 1, 1e6).unwrap();
+            fetched_total += recs.len();
+            // offsets strictly increasing, ids in append order
+            for w in recs.windows(2) {
+                assert!(w[0].offset < w[1].offset);
+            }
+            let ids: Vec<u64> = recs.iter().map(|r| r.message.id).collect();
+            assert_eq!(ids, per_partition_ids[p], "partition {p} order");
+        }
+        assert_eq!(fetched_total, total, "no loss, no duplication");
+    });
+}
+
+#[test]
+fn prop_partitioning_is_stable_and_in_range() {
+    cases(50, |rng| {
+        let parts = 1 + rng.gen_range(32) as usize;
+        let key = rng.next_u64();
+        let a = partition_for_key(key, parts);
+        assert!(a < parts);
+        assert_eq!(a, partition_for_key(key, parts));
+    });
+}
+
+#[test]
+fn prop_esm_accounting_is_exact() {
+    // processed + lag == total appended, under random poll/commit/abort
+    cases(20, |rng| {
+        let clock = Arc::new(SimClock::new());
+        let partitions = 1 + rng.gen_range(4) as usize;
+        let topic = Arc::new(KafkaTopic::isolated("t", partitions, clock.clone()));
+        let esm = EventSourceMapping::new(topic.clone() as Arc<dyn Broker>, 1 + rng.gen_range(3) as usize);
+        let total = 30 + rng.gen_range(60) as usize;
+        for _ in 0..total {
+            topic.put(msg(rng, 0.0)).unwrap();
+        }
+        clock.advance_to(1e6);
+        // random interleaving of polls/commits/aborts until drained
+        let mut stall = 0;
+        while esm.processed() < total as u64 && stall < 10_000 {
+            let shard = rng.gen_range(partitions as u64) as usize;
+            match esm.poll(shard, 1e6) {
+                Some(lease) => {
+                    if rng.next_f64() < 0.2 {
+                        esm.abort(lease); // retried later
+                    } else {
+                        esm.commit(lease);
+                    }
+                }
+                None => stall += 1,
+            }
+            assert_eq!(
+                esm.processed() + esm.lag(),
+                total as u64,
+                "conservation violated"
+            );
+        }
+        assert_eq!(esm.processed(), total as u64, "drained");
+    });
+}
+
+#[test]
+fn prop_usl_fit_is_scale_equivariant() {
+    // scaling all throughputs by c scales lambda by c and leaves sigma,
+    // kappa unchanged — fitting must not depend on units
+    cases(20, |rng| {
+        let truth = UslParams::new(
+            rng.uniform(0.0, 0.8),
+            rng.uniform(0.0, 0.05),
+            rng.uniform(1.0, 100.0),
+        );
+        let obs: Vec<Obs> = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0]
+            .iter()
+            .map(|&n| Obs::new(n, truth.throughput(n)))
+            .collect();
+        let c = rng.uniform(0.5, 50.0);
+        let scaled: Vec<Obs> = obs.iter().map(|o| Obs::new(o.n, o.t * c)).collect();
+        let f1 = fit(&obs).unwrap();
+        let f2 = fit(&scaled).unwrap();
+        assert!((f1.params.sigma - f2.params.sigma).abs() < 1e-4);
+        assert!((f1.params.kappa - f2.params.kappa).abs() < 1e-5);
+        assert!((f2.params.lambda / f1.params.lambda - c).abs() / c < 1e-3);
+    });
+}
+
+#[test]
+fn prop_usl_prediction_monotone_below_peak() {
+    cases(30, |rng| {
+        let p = UslParams::new(
+            rng.uniform(0.0, 0.9),
+            rng.uniform(1e-5, 0.05),
+            rng.uniform(0.5, 20.0),
+        );
+        if let Some(peak) = p.peak_n() {
+            let mut prev = 0.0;
+            let mut n = 1.0;
+            while n <= peak {
+                let t = p.throughput(n);
+                assert!(t >= prev, "T must rise up to the peak");
+                prev = t;
+                n += 1.0;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_backoff_rate_always_bounded() {
+    use pilot_streaming::broker::BackoffController;
+    cases(20, |rng| {
+        let mut b = BackoffController::new(rng.uniform(1.0, 1000.0));
+        let (min, max) = (b.min_rate, b.max_rate);
+        for _ in 0..500 {
+            if rng.next_f64() < 0.3 {
+                b.on_throttle();
+            } else {
+                b.on_lag_sample(rng.gen_range(100));
+            }
+            assert!(b.rate() >= min && b.rate() <= max);
+            assert!(b.interval().is_finite() && b.interval() > 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_monotone_and_bounded() {
+    cases(20, |rng| {
+        let mut h = Histogram::new();
+        let n = 100 + rng.gen_range(5_000) as usize;
+        let mut min = f64::INFINITY;
+        let mut max: f64 = 0.0;
+        for _ in 0..n {
+            let v = rng.lognormal(-5.0, 2.0);
+            min = min.min(v);
+            max = max.max(v);
+            h.record(v);
+        }
+        assert_eq!(h.count(), n as u64);
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = h.quantile(q);
+            assert!(v >= prev - 1e-12, "quantile must be monotone in q");
+            prev = v;
+        }
+        // histogram resolution is 1e-6 absolute (underflow bucket) and ~5%
+        // relative; q=0/1 must land within that of the true extremes
+        assert!(h.quantile(0.0) <= h.min() * 1.10 + 1e-6);
+        assert!(h.quantile(1.0) >= h.max() * 0.90);
+    });
+}
+
+#[test]
+fn prop_kmeans_step_conservation_laws() {
+    cases(15, |rng| {
+        let n = 1 + rng.gen_range(300) as usize;
+        let c = 1 + rng.gen_range(32) as usize;
+        let d = 1 + rng.gen_range(8) as usize;
+        let pts: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let cen: Vec<f32> = (0..c * d).map(|_| rng.normal() as f32).collect();
+        let counts: Vec<f32> = (0..c).map(|_| rng.gen_range(100) as f32).collect();
+        let before: f32 = counts.iter().sum();
+        let (new_cen, new_counts, inertia) = minibatch_step(&pts, d, &cen, &counts);
+        // counts conserve batch size
+        let after: f32 = new_counts.iter().sum();
+        assert!((after - before - n as f32).abs() < 1e-2);
+        // inertia non-negative and finite
+        assert!(inertia >= 0.0 && inertia.is_finite());
+        // new centroids finite
+        assert!(new_cen.iter().all(|v| v.is_finite()));
+        // centroids with no new points and no history are unchanged
+        for j in 0..c {
+            if new_counts[j] == counts[j] {
+                assert_eq!(
+                    &new_cen[j * d..(j + 1) * d],
+                    &cen[j * d..(j + 1) * d],
+                    "untouched centroid moved"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_contention_inflation_monotone_in_users() {
+    use pilot_streaming::sim::ContentionParams;
+    cases(30, |rng| {
+        let p = ContentionParams::new(rng.uniform(0.0, 2.0), rng.uniform(0.0, 0.5));
+        let mut prev = 0.0;
+        for n in 1..64 {
+            let i = p.inflation(n);
+            assert!(i >= prev, "inflation must be monotone");
+            assert!(i >= 1.0);
+            prev = i;
+        }
+    });
+}

@@ -1,0 +1,157 @@
+//! Integration: the AOT-lowered HLO artifact, loaded and executed via PJRT
+//! from Rust, must numerically match the pure-Rust MiniBatch K-Means step
+//! (which itself is pytest-validated against the jax reference).
+//!
+//! Requires `make artifacts` to have run; tests are skipped (with a loud
+//! message) when the artifacts directory is absent.
+
+use pilot_streaming::engine::StepEngine;
+use pilot_streaming::kmeans::{minibatch_step, NativeEngine};
+use pilot_streaming::runtime::{Manifest, PjrtEngine};
+use pilot_streaming::store::ModelState;
+use pilot_streaming::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts`");
+        return None;
+    }
+    Some(Manifest::load(&dir).expect("manifest parses"))
+}
+
+fn random_model(centroids: usize, dim: usize, seed: u64) -> ModelState {
+    ModelState::new_random(centroids, dim, seed)
+}
+
+fn random_points(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n * dim).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn pjrt_matches_native_on_tiny_variant() {
+    let Some(man) = manifest() else { return };
+    let v = man.find(256, 16).expect("tiny variant in manifest");
+    let engine = PjrtEngine::new(man.clone(), 1);
+    let native = NativeEngine;
+
+    let model = random_model(v.centroids, v.dim, 7);
+    let pts = random_points(v.points, v.dim, 8);
+
+    let got = engine.execute_step(&pts, v.dim, &model).expect("pjrt step");
+    let want = native.execute_step(&pts, v.dim, &model).expect("native step");
+
+    assert!(
+        (got.inertia - want.inertia).abs() / want.inertia.max(1.0) < 1e-3,
+        "inertia: pjrt={} native={}",
+        got.inertia,
+        want.inertia
+    );
+    let max_dc = got
+        .model
+        .centroids
+        .iter()
+        .zip(want.model.centroids.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dc < 1e-3, "max centroid delta {max_dc}");
+    let count_delta: f32 = got
+        .model
+        .counts
+        .iter()
+        .zip(want.model.counts.iter())
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(count_delta < 1e-3, "count delta {count_delta}");
+}
+
+#[test]
+fn pjrt_runs_paper_scale_variant() {
+    let Some(man) = manifest() else { return };
+    let v = man.find(8_000, 1_024).expect("8000x1024 variant (Fig 3 config)");
+    let engine = PjrtEngine::new(man.clone(), 1);
+    let model = random_model(v.centroids, v.dim, 1);
+    let pts = random_points(v.points, v.dim, 2);
+    let r = engine.execute_step(&pts, v.dim, &model).expect("step");
+    assert!(r.cpu_seconds > 0.0);
+    assert!(r.inertia.is_finite() && r.inertia > 0.0);
+    // all 8000 points folded into counts
+    let total: f32 = r.model.counts.iter().sum();
+    assert!((total - 8_000.0).abs() < 1.0, "counts total {total}");
+}
+
+#[test]
+fn streaming_convergence_through_pjrt() {
+    // stream 10 messages of blob data; per-point inertia must drop
+    let Some(man) = manifest() else { return };
+    let v = man.find(256, 16).unwrap();
+    let engine = PjrtEngine::new(man.clone(), 1);
+    let mut rng = Pcg32::seeded(3);
+    let blob_centers: Vec<f32> = (0..16 * v.dim).map(|_| rng.normal() as f32 * 15.0).collect();
+    let mut model = ModelState {
+        centroids: Arc::new(
+            blob_centers
+                .iter()
+                .map(|c| c + rng.normal() as f32 * 3.0)
+                .collect(),
+        ),
+        counts: Arc::new(vec![0.0; 16]),
+        dim: v.dim,
+        version: 0,
+    };
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..10 {
+        let pts: Vec<f32> = (0..v.points)
+            .flat_map(|_| {
+                let b = rng.gen_range(16) as usize;
+                (0..v.dim)
+                    .map(|k| blob_centers[b * v.dim + k] + rng.normal() as f32 * 0.2)
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let r = engine.execute_step(&pts, v.dim, &model).unwrap();
+        model = r.model;
+        let per_point = r.inertia / v.points as f64;
+        first.get_or_insert(per_point);
+        last = per_point;
+    }
+    assert!(
+        last < first.unwrap() * 0.5,
+        "inertia did not fall: first={first:?} last={last}"
+    );
+}
+
+#[test]
+fn engine_reports_no_variant_for_unknown_shape() {
+    let Some(man) = manifest() else { return };
+    let engine = PjrtEngine::new(man, 1);
+    let model = random_model(17, 8, 1); // no 17-centroid artifact
+    let err = engine.execute_step(&vec![0.0; 256 * 8], 8, &model);
+    assert!(err.is_err());
+}
+
+#[test]
+fn pool_of_two_threads_serves_concurrent_steps() {
+    let Some(man) = manifest() else { return };
+    let v = man.find(256, 16).unwrap().clone();
+    let engine = Arc::new(PjrtEngine::new(man, 2));
+    let model = random_model(v.centroids, v.dim, 5);
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let engine = Arc::clone(&engine);
+        let model = model.clone();
+        let dim = v.dim;
+        let n = v.points;
+        handles.push(std::thread::spawn(move || {
+            let pts = random_points(n, dim, 100 + t);
+            engine.execute_step(&pts, dim, &model).expect("step")
+        }));
+    }
+    for h in handles {
+        let r = h.join().unwrap();
+        assert!(r.inertia.is_finite());
+    }
+}
