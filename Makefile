@@ -1,0 +1,37 @@
+# Pilot-Streaming + StreamInsight — top-level build entry points.
+#
+# Tier-1 verification (what CI gates on):
+#   make            == cargo build --release && cargo test -q
+#
+# The optional PJRT path needs the AOT artifacts first:
+#   make artifacts  (requires python + jax; see python/compile/aot.py)
+
+.PHONY: all build test clippy bench python-test artifacts clean
+
+all: build test
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+bench:
+	cargo bench
+
+python-test:
+	cd python && python -m pytest tests -q
+
+# AOT-lower the JAX K-Means step to HLO text artifacts for the Rust
+# runtime.  Written into rust/artifacts (where the integration tests look)
+# and symlinked at the repo root (where the CLI's default dir resolves).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../rust/artifacts
+	ln -sfn rust/artifacts artifacts
+
+clean:
+	cargo clean
+	rm -rf rust/artifacts artifacts

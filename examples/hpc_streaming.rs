@@ -23,11 +23,11 @@ fn main() {
         Arc::new(CalibratedEngine::new(7)),
     );
     let kafka = service
-        .submit_pilot(PilotDescription::new(Platform::Kafka).with_parallelism(12))
+        .submit_pilot(PilotDescription::new(Platform::KAFKA).with_parallelism(12))
         .expect("kafka pilot");
     let dask = service
         .submit_pilot(
-            PilotDescription::new(Platform::Dask)
+            PilotDescription::new(Platform::DASK)
                 .with_parallelism(12)
                 .with_machine(MachineKind::Wrangler),
         )

@@ -18,8 +18,9 @@ fn main() {
         Arc::new(CalibratedEngine::new(42)),
     );
 
-    // 2. describe the resources you want — platform-agnostic
-    let description = PilotDescription::new(Platform::Local).with_parallelism(4);
+    // 2. describe the resources you want — platform-agnostic; the service
+    //    resolves the platform name against its plugin registry
+    let description = PilotDescription::new(Platform::LOCAL).with_parallelism(4);
     let pilot = service.submit_pilot(description).expect("provision pilot");
     println!("pilot {} is {}", pilot.id, pilot.state());
 

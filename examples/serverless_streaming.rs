@@ -31,7 +31,7 @@ fn main() {
     // the broker, described with the same attribute a Kafka pilot would use.
     let service = PilotComputeService::new(Arc::new(WallClock::new()), Arc::clone(&engine));
     let kinesis = service
-        .submit_pilot(PilotDescription::new(Platform::Kinesis).with_parallelism(4))
+        .submit_pilot(PilotDescription::new(Platform::KINESIS).with_parallelism(4))
         .expect("kinesis pilot");
     println!(
         "kinesis pilot up: {} shards",
@@ -41,12 +41,29 @@ fn main() {
     // Step 2 (paper Fig 2 2a/b): the Function pilot (Lambda fleet).
     let lambda = service
         .submit_pilot(
-            PilotDescription::new(Platform::Lambda)
+            PilotDescription::new(Platform::LAMBDA)
                 .with_parallelism(4)
                 .with_memory_mb(3008),
         )
         .expect("lambda pilot");
     println!("lambda pilot up ({} engine)", kind);
+
+    // The same API reaches the edge (paper §V): the edge plugin registered
+    // its platform with the registry, so provisioning a Greengrass-class
+    // pilot — co-located LAN broker + constrained fleet — is one more
+    // submit_pilot call, with zero service changes.
+    let edge = service
+        .submit_pilot(
+            PilotDescription::new(Platform::EDGE)
+                .with_parallelism(4)
+                .with_memory_mb(1024),
+        )
+        .expect("edge pilot");
+    println!(
+        "edge pilot up: {} local shards (LAN broker)",
+        edge.broker().unwrap().num_partitions()
+    );
+    edge.cancel();
 
     // Stream a live workload: 256-point messages, 16 centroids (the tiny
     // artifact variant), 4 shards, one container per shard.

@@ -149,6 +149,16 @@ beta = 0.1
     }
 
     #[test]
+    fn edge_platform_parses_in_configs() {
+        // the edge scenario axis is reachable declaratively, too
+        let spec = spec_from_toml("platforms = [\"edge\", \"lambda\"]\n").unwrap();
+        assert_eq!(
+            spec.platforms,
+            vec![PlatformKind::Edge, PlatformKind::Lambda]
+        );
+    }
+
+    #[test]
     fn defaults_fill_missing_fields() {
         let spec = spec_from_toml("messages = 16\n").unwrap();
         assert_eq!(spec.messages, 16);

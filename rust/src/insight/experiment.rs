@@ -47,6 +47,24 @@ impl ExperimentSpec {
         }
     }
 
+    /// The edge extension grid (paper §V): cloud Lambda vs Greengrass-class
+    /// edge at the same memory point, sweeping partitions past the edge
+    /// device's container capacity so the USL fit captures its saturation.
+    /// Memory sits inside the edge envelope so the axis is shared.
+    pub fn edge_grid(messages: usize, seed: u64) -> Self {
+        Self {
+            name: "edge-grid".into(),
+            platforms: vec![PlatformKind::Lambda, PlatformKind::Edge],
+            partitions: vec![1, 2, 4, 8, 16],
+            message_sizes: vec![8_000],
+            centroids: vec![128, 1_024],
+            memory_mb: vec![1_024],
+            messages,
+            seed,
+            lustre: ContentionParams::ISOLATED,
+        }
+    }
+
     /// Fig 3's memory sweep: Lambda, 8,000 points, 1,024 centroids.
     pub fn lambda_memory_sweep(messages: usize, seed: u64) -> Self {
         Self {
@@ -131,6 +149,20 @@ mod tests {
         // 2 platforms x 5 partitions x 3 MS x 3 WC x 1 memory = 90
         assert_eq!(spec.size(), 90);
         assert_eq!(spec.scenarios().len(), 90);
+    }
+
+    #[test]
+    fn edge_grid_dimensions() {
+        let spec = ExperimentSpec::edge_grid(16, 1);
+        // 2 platforms x 5 partitions x 1 MS x 2 WC x 1 memory = 20
+        assert_eq!(spec.size(), 20);
+        assert!(spec.platforms.contains(&PlatformKind::Edge));
+        for s in spec.scenarios() {
+            assert!(
+                s.memory_mb <= crate::serverless::edge::EDGE_MAX_MEMORY_MB,
+                "edge grid stays inside the device envelope"
+            );
+        }
     }
 
     #[test]

@@ -372,7 +372,7 @@ pub fn fig6(messages: usize, seed: u64) -> FigureResult {
                 dask_peak_small,
             ),
             (
-                format!("training R^2 in the paper's 0.85-0.98 band (all groups)"),
+                "training R^2 in the paper's 0.85-0.98 band (all groups)".into(),
                 r2_ok,
             ),
         ],

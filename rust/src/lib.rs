@@ -4,19 +4,31 @@
 //! Serverless and HPC Streaming Applications"* (Luckow & Jha, 2019) as a
 //! three-layer Rust + JAX + Pallas system:
 //!
-//! - **Layer 3 (this crate)** — the paper's systems: the *pilot abstraction*
-//!   for unified resource management across serverless/HPC ([`pilot`]), the
-//!   platform substrates it manages ([`broker`], [`serverless`], [`hpc`],
-//!   [`store`]), the *Streaming Mini-App* measurement harness ([`miniapp`]),
-//!   and the *StreamInsight* USL-based performance modeling stack ([`usl`],
-//!   [`insight`]).
+//! - **Layer 3 (this crate)** — the paper's systems: the *pilot
+//!   abstraction* for unified resource management ([`pilot`]), built
+//!   around a **plugin registry** — each platform (Kinesis, Kafka, Lambda,
+//!   Dask, local, edge/Greengrass) is a
+//!   [`PlatformPlugin`](pilot::PlatformPlugin) owning its naming,
+//!   description validation, and provisioning, so
+//!   [`PilotComputeService`](pilot::PilotComputeService) contains no
+//!   platform-specific code and new platforms register without touching
+//!   the service or drivers.  The platform substrates ([`broker`],
+//!   [`serverless`] including the edge-site model, [`hpc`], [`store`]) are
+//!   constructed *only* inside `pilot::plugins`.  The *Streaming Mini-App*
+//!   measurement harness ([`miniapp`]) provisions its scenarios through
+//!   the same Pilot-API, and the *StreamInsight* USL modeling stack
+//!   ([`usl`], [`insight`]) characterizes every registered platform —
+//!   including the paper's §V edge future work as a first-class scenario
+//!   axis.
 //! - **Layer 2** — a JAX MiniBatch K-Means step (`python/compile/model.py`),
 //!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
 //! - **Layer 1** — the Pallas assignment kernel
 //!   (`python/compile/kernels/kmeans.py`), the O(n·c) hot spot.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the model
-//! once; the Rust binary executes it via PJRT ([`runtime`]).
+//! once; the Rust binary executes it via PJRT ([`runtime`]) when built with
+//! the `pjrt` feature (without it, live execution is stubbed and the
+//! calibrated simulator drives everything).
 
 pub mod broker;
 pub mod engine;

@@ -24,7 +24,7 @@ fn app() -> App {
     )
     .command(
         CommandSpec::new("run", "run one scenario and print its summary")
-            .opt("platform", "lambda", "lambda | dask | stampede2")
+            .opt("platform", "lambda", "lambda | dask | stampede2 | edge")
             .opt("partitions", "4", "N^px(p)")
             .opt("points", "8000", "points per message (MS)")
             .opt("centroids", "1024", "centroids (WC)")
@@ -34,11 +34,12 @@ fn app() -> App {
             .flag("live", "run live (threads + real PJRT) instead of simulated time"),
     )
     .command(
-        CommandSpec::new("sweep", "run the paper grid sweep, fit USL, print analysis")
+        CommandSpec::new("sweep", "run an experiment grid sweep, fit USL, print analysis")
             .opt("messages", "64", "messages per configuration")
             .opt("seed", "42", "rng seed")
+            .opt("grid", "paper", "preset grid: paper | edge")
             .opt("csv", "", "write per-config CSV to this path")
-            .opt("config", "", "TOML experiment file (overrides the paper grid)"),
+            .opt("config", "", "TOML experiment file (overrides the preset grid)"),
     )
     .command(
         CommandSpec::new("autoscale", "replay a rate trace against the USL-driven predictive autoscaler")
@@ -155,7 +156,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let seed = args.get_u64("seed").map_err(|e| e.to_string())?;
     let spec = match args.get("config").filter(|s| !s.is_empty()) {
         Some(path) => insight::spec_from_file(path).map_err(|e| e.to_string())?,
-        None => ExperimentSpec::paper_grid(messages, seed),
+        None => match args.get_or("grid", "paper") {
+            "paper" => ExperimentSpec::paper_grid(messages, seed),
+            "edge" => ExperimentSpec::edge_grid(messages, seed),
+            other => return Err(format!("unknown grid {other:?} (paper | edge)")),
+        },
     };
     eprintln!("running {} configurations (simulated time)...", spec.size());
     let rows = insight::run_sweep(&spec, figures::engine_factory(figures::default_calibration()));

@@ -3,6 +3,11 @@
 //! completion in simulated time ([`sim_driver`], large sweeps) or live
 //! wall-clock time with real PJRT execution ([`live_driver`], e2e +
 //! calibration).
+//!
+//! Scenarios provision through the Pilot-API: a [`Scenario`] expands into
+//! pilot descriptions and one `PilotComputeService` builds the platform
+//! under test from registered plugins — Kinesis/Lambda, Kafka/Dask, or the
+//! edge/Greengrass stack — with no platform-specific construction here.
 
 pub mod generator;
 pub mod live_driver;

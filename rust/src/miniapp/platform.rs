@@ -1,18 +1,23 @@
 //! The platform-under-test: one object bundling broker + processing
 //! system for a benchmark scenario, so the sim and live drivers can treat
-//! Kinesis/Lambda and Kafka/Dask uniformly.
+//! Kinesis/Lambda, Kafka/Dask, and edge/Greengrass uniformly.
+//!
+//! Provisioning goes through the **Pilot-API**: a [`Scenario`] expands into
+//! [`PilotDescription`]s ([`Scenario::pilot_descriptions`]) and one
+//! [`PilotComputeService`] provisions them via the plugin registry.  The
+//! mini-app holds only the resulting capability handles — the broker and
+//! the [`StreamProcessor`] — and contains no platform-specific
+//! construction code (that lives in `pilot::plugins`).
 
-use crate::broker::kafka::KafkaConfig;
-use crate::broker::kinesis::ShardLimits;
-use crate::broker::{Broker, KafkaTopic, KinesisStream};
+use crate::broker::Broker;
 use crate::engine::StepEngine;
-use crate::hpc::DaskPool;
-use crate::pilot::MachineKind;
-use crate::serverless::{FunctionConfig, LambdaFleet};
+use crate::pilot::processor::StreamProcessor;
+use crate::pilot::{PilotComputeService, PilotDescription, PilotJob, Platform};
 use crate::sim::{ContentionParams, SharedClock, SharedResource};
-use crate::store::shared_fs::{SharedFsParams, SharedFsStore};
-use crate::store::ObjectStore;
 use std::sync::Arc;
+
+// Re-exported through `miniapp` for driver/backwards compatibility.
+pub use crate::pilot::processor::ProcessCost;
 
 /// Which stack a scenario runs on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -23,6 +28,9 @@ pub enum PlatformKind {
     DaskWrangler,
     /// Kafka broker + Dask processing on Stampede2 KNL.
     DaskStampede2,
+    /// Greengrass-class edge site: co-located local broker + constrained
+    /// Lambda-compatible fleet (paper §V future work).
+    Edge,
 }
 
 impl PlatformKind {
@@ -31,6 +39,7 @@ impl PlatformKind {
             Self::Lambda => "kinesis/lambda",
             Self::DaskWrangler => "kafka/dask(wrangler)",
             Self::DaskStampede2 => "kafka/dask(stampede2)",
+            Self::Edge => "edge/greengrass",
         }
     }
 
@@ -39,12 +48,13 @@ impl PlatformKind {
             "lambda" | "kinesis/lambda" | "serverless" => Some(Self::Lambda),
             "dask" | "wrangler" | "kafka/dask" => Some(Self::DaskWrangler),
             "stampede2" | "knl" => Some(Self::DaskStampede2),
+            "edge" | "greengrass" | "edge/greengrass" => Some(Self::Edge),
             _ => None,
         }
     }
 
     pub fn is_serverless(self) -> bool {
-        matches!(self, Self::Lambda)
+        matches!(self, Self::Lambda | Self::Edge)
     }
 }
 
@@ -58,7 +68,8 @@ pub struct Scenario {
     pub points_per_message: usize,
     /// WC axis: number of centroids.
     pub centroids: usize,
-    /// Lambda container memory (ignored on Dask).
+    /// Lambda container memory (ignored on Dask; clamped to the device
+    /// envelope on the edge so the axis stays shared across platforms).
     pub memory_mb: u32,
     /// Messages to process in the measurement window.
     pub messages: usize,
@@ -85,104 +96,96 @@ impl Default for Scenario {
     }
 }
 
-/// The instantiated platform: broker + processor.
-pub enum PlatformUnderTest {
-    Lambda {
-        stream: Arc<KinesisStream>,
-        fleet: Arc<LambdaFleet>,
-    },
-    Dask {
-        topic: Arc<KafkaTopic>,
-        pool: Arc<DaskPool>,
-    },
-}
-
-/// Breakdown of one processed message.
-#[derive(Debug, Clone, Copy)]
-pub struct ProcessCost {
-    pub compute: f64,
-    pub io: f64,
-    pub overhead: f64,
-}
-
-impl ProcessCost {
-    pub fn total(&self) -> f64 {
-        self.compute + self.io + self.overhead
+impl Scenario {
+    /// Expand into the pilot descriptions this scenario provisions:
+    /// broker + processing pilots for the cloud/HPC stacks, one co-located
+    /// pilot for the edge (its broker lives on the device).
+    pub fn pilot_descriptions(&self) -> Vec<PilotDescription> {
+        match self.platform {
+            PlatformKind::Lambda => vec![
+                PilotDescription::new(Platform::KINESIS)
+                    .with_parallelism(self.partitions)
+                    .with_seed(self.seed),
+                // AWS never runs more containers than shards; the paper
+                // additionally observed at most 30 concurrent containers
+                PilotDescription::new(Platform::LAMBDA)
+                    .with_parallelism(self.partitions.min(30))
+                    .with_memory_mb(self.memory_mb)
+                    .with_seed(self.seed),
+            ],
+            PlatformKind::DaskWrangler | PlatformKind::DaskStampede2 => {
+                let machine = match self.platform {
+                    PlatformKind::DaskStampede2 => crate::pilot::MachineKind::Stampede2,
+                    _ => crate::pilot::MachineKind::Wrangler,
+                };
+                vec![
+                    PilotDescription::new(Platform::KAFKA)
+                        .with_parallelism(self.partitions)
+                        .with_seed(self.seed),
+                    PilotDescription::new(Platform::DASK)
+                        .with_parallelism(self.partitions)
+                        .with_machine(machine)
+                        .with_max_nodes(64)
+                        .with_seed(self.seed),
+                ]
+            }
+            PlatformKind::Edge => vec![
+                // shared memory axis: the edge plugin normalizes memory
+                // into the device envelope and clamps concurrency itself
+                PilotDescription::new(Platform::EDGE)
+                    .with_parallelism(self.partitions)
+                    .with_memory_mb(self.memory_mb)
+                    .with_seed(self.seed),
+            ],
+        }
     }
 }
 
+/// The instantiated platform: the service that provisioned it plus the
+/// two capability handles the drivers pump messages through.
+pub struct PlatformUnderTest {
+    service: PilotComputeService,
+    broker: Arc<dyn Broker>,
+    processor: Arc<dyn StreamProcessor>,
+}
+
 impl PlatformUnderTest {
-    /// Build the platform for `scenario` on `clock` with `engine`.
+    /// Provision the platform for `scenario` through the Pilot-API on
+    /// `clock` with `engine`.
     pub fn build(
         scenario: &Scenario,
         engine: Arc<dyn StepEngine>,
         clock: SharedClock,
     ) -> Result<Self, String> {
-        match scenario.platform {
-            PlatformKind::Lambda => {
-                let stream = Arc::new(KinesisStream::new(
-                    "mini-app",
-                    scenario.partitions,
-                    ShardLimits::default(),
-                    Arc::clone(&clock),
-                ));
-                let config = FunctionConfig {
-                    memory_mb: scenario.memory_mb,
-                    timeout_s: crate::serverless::MAX_WALLTIME_S,
-                    package_mb: 50.0,
-                    // AWS never runs more containers than shards; the paper
-                    // additionally observed at most 30 concurrent containers
-                    max_concurrency: scenario.partitions.min(30),
-                };
-                let fleet = Arc::new(LambdaFleet::new(
-                    config,
-                    engine,
-                    Arc::new(ObjectStore::default()),
-                    clock,
-                    scenario.seed,
-                )?);
-                Ok(Self::Lambda { stream, fleet })
+        // the broker log and the model store share the same Lustre on the
+        // HPC stacks; serverless pilots simply never touch it
+        let service = PilotComputeService::new(clock, engine)
+            .with_shared_fs(SharedResource::new("lustre", scenario.lustre));
+        let mut broker: Option<Arc<dyn Broker>> = None;
+        let mut processor: Option<Arc<dyn StreamProcessor>> = None;
+        for desc in scenario.pilot_descriptions() {
+            let job = service.submit_pilot(desc).map_err(|e| e.to_string())?;
+            if broker.is_none() {
+                broker = job.broker();
             }
-            PlatformKind::DaskWrangler | PlatformKind::DaskStampede2 => {
-                let machine = match scenario.platform {
-                    PlatformKind::DaskStampede2 => MachineKind::Stampede2,
-                    _ => MachineKind::Wrangler,
-                }
-                .machine(64);
-                if scenario.partitions > machine.max_workers() {
-                    return Err(format!(
-                        "{} workers exceed machine capacity {}",
-                        scenario.partitions,
-                        machine.max_workers()
-                    ));
-                }
-                // the broker log and the model store share the same Lustre
-                let fs = SharedResource::new("lustre", scenario.lustre);
-                let topic = Arc::new(KafkaTopic::new(
-                    "mini-app",
-                    scenario.partitions,
-                    KafkaConfig::default(),
-                    clock,
-                    Arc::clone(&fs),
-                ));
-                let store = Arc::new(SharedFsStore::new(SharedFsParams::default(), fs));
-                let pool = Arc::new(DaskPool::new(
-                    machine,
-                    scenario.partitions,
-                    engine,
-                    store,
-                    scenario.seed,
-                ));
-                Ok(Self::Dask { topic, pool })
+            if processor.is_none() {
+                processor = job.processor();
             }
         }
+        Ok(Self {
+            service,
+            broker: broker.ok_or("scenario provisioned no broker pilot")?,
+            processor: processor.ok_or("scenario provisioned no processing pilot")?,
+        })
     }
 
     pub fn broker(&self) -> Arc<dyn Broker> {
-        match self {
-            Self::Lambda { stream, .. } => Arc::clone(stream) as Arc<dyn Broker>,
-            Self::Dask { topic, .. } => Arc::clone(topic) as Arc<dyn Broker>,
-        }
+        Arc::clone(&self.broker)
+    }
+
+    /// The pilots backing this platform (diagnostics, teardown).
+    pub fn pilots(&self) -> Vec<PilotJob> {
+        self.service.pilots()
     }
 
     /// Process one message's points on `partition`; returns the modeled
@@ -195,35 +198,12 @@ impl PlatformUnderTest {
         model_key: &str,
         centroids: usize,
     ) -> Result<ProcessCost, String> {
-        match self {
-            Self::Lambda { fleet, .. } => {
-                let r = fleet
-                    .invoke(points, dim, model_key, centroids)
-                    .map_err(|e| e.to_string())?;
-                Ok(ProcessCost {
-                    compute: r.compute,
-                    io: r.io_get + r.io_put,
-                    overhead: r.cold_start,
-                })
-            }
-            Self::Dask { pool, .. } => {
-                let r = pool
-                    .process(partition, points, dim, model_key, centroids)
-                    .map_err(|e| e.to_string())?;
-                Ok(ProcessCost {
-                    compute: r.compute,
-                    io: r.io_get + r.io_put,
-                    overhead: r.sync,
-                })
-            }
-        }
+        self.processor
+            .process(partition, points, dim, model_key, centroids)
     }
 
     pub fn label(&self) -> &'static str {
-        match self {
-            Self::Lambda { .. } => "kinesis/lambda",
-            Self::Dask { .. } => "kafka/dask",
-        }
+        self.processor.label()
     }
 }
 
@@ -238,24 +218,38 @@ mod tests {
     }
 
     #[test]
-    fn builds_both_platforms() {
+    fn builds_all_platforms_through_the_pilot_api() {
         let clock = Arc::new(SimClock::new()) as SharedClock;
         let s = Scenario::default();
         let lambda = PlatformUnderTest::build(&s, engine(), Arc::clone(&clock)).unwrap();
         assert_eq!(lambda.broker().kind(), "kinesis");
+        assert_eq!(lambda.label(), "lambda");
+        assert_eq!(lambda.pilots().len(), 2, "broker + processing pilot");
         let s2 = Scenario {
             platform: PlatformKind::DaskWrangler,
+            ..s.clone()
+        };
+        let dask = PlatformUnderTest::build(&s2, engine(), Arc::clone(&clock)).unwrap();
+        assert_eq!(dask.broker().kind(), "kafka");
+        assert_eq!(dask.label(), "dask");
+        let s3 = Scenario {
+            platform: PlatformKind::Edge,
             ..s
         };
-        let dask = PlatformUnderTest::build(&s2, engine(), clock).unwrap();
-        assert_eq!(dask.broker().kind(), "kafka");
+        let edge = PlatformUnderTest::build(&s3, engine(), clock).unwrap();
+        assert_eq!(edge.label(), "edge");
+        assert_eq!(edge.pilots().len(), 1, "co-located broker + fleet");
     }
 
     #[test]
-    fn process_works_on_both() {
+    fn process_works_on_all_platforms() {
         let clock = Arc::new(SimClock::new()) as SharedClock;
         let pts = vec![0.1f32; 100 * 8];
-        for platform in [PlatformKind::Lambda, PlatformKind::DaskWrangler] {
+        for platform in [
+            PlatformKind::Lambda,
+            PlatformKind::DaskWrangler,
+            PlatformKind::Edge,
+        ] {
             let s = Scenario {
                 platform,
                 centroids: 16,
@@ -275,7 +269,10 @@ mod tests {
             PlatformKind::parse("stampede2"),
             Some(PlatformKind::DaskStampede2)
         );
+        assert_eq!(PlatformKind::parse("edge"), Some(PlatformKind::Edge));
+        assert_eq!(PlatformKind::parse("greengrass"), Some(PlatformKind::Edge));
         assert_eq!(PlatformKind::parse("flink"), None);
+        assert!(PlatformKind::Edge.is_serverless());
     }
 
     #[test]
@@ -287,5 +284,23 @@ mod tests {
             ..Default::default()
         };
         assert!(PlatformUnderTest::build(&s, engine(), clock).is_err());
+    }
+
+    #[test]
+    fn edge_memory_is_clamped_into_the_device_envelope() {
+        // the default 3,008 MB cloud memory exceeds the 1,536 MB device;
+        // the edge plugin's normalize keeps the shared memory axis usable,
+        // and the provisioned pilot carries the normalized description
+        let clock = Arc::new(SimClock::new()) as SharedClock;
+        let s = Scenario {
+            platform: PlatformKind::Edge,
+            ..Default::default()
+        };
+        assert_eq!(s.memory_mb, 3_008, "cloud default flows through as-is");
+        let p = PlatformUnderTest::build(&s, engine(), clock).unwrap();
+        assert_eq!(
+            p.pilots()[0].description.memory_mb,
+            crate::serverless::edge::EDGE_MAX_MEMORY_MB
+        );
     }
 }

@@ -263,6 +263,43 @@ mod tests {
     }
 
     #[test]
+    fn edge_sim_has_local_broker_latency() {
+        // the edge's whole advantage: the broker hop is LAN (~2 ms), not
+        // the Kinesis WAN put (~15 ms)
+        let s = scenario(PlatformKind::Edge, 2);
+        let r = run_sim(&s, engine_with((256, 16), 0.05)).unwrap();
+        assert_eq!(r.summary.messages, 32);
+        assert!(
+            r.summary.broker.mean < 0.005,
+            "L^br mean {}",
+            r.summary.broker.mean
+        );
+    }
+
+    #[test]
+    fn edge_throughput_saturates_at_device_capacity() {
+        // only EDGE_MAX_CONCURRENCY containers fit on the box; saturated
+        // invocations queue, so every message still completes but
+        // throughput flattens past 4 partitions — the USL signature the
+        // edge scenario axis contributes
+        let t = |p: usize| {
+            let s = Scenario {
+                messages: 240,
+                ..scenario(PlatformKind::Edge, p)
+            };
+            run_sim(&s, engine_with((256, 16), 0.1))
+                .unwrap()
+                .summary
+                .throughput
+        };
+        let t1 = t(1);
+        let t4 = t(4);
+        let t8 = t(8);
+        assert!(t4 > t1 * 2.5, "scales to the container cap: t1={t1} t4={t4}");
+        assert!(t8 < t4 * 1.25, "no gain past 4 containers: t4={t4} t8={t8}");
+    }
+
+    #[test]
     fn deterministic_across_runs() {
         let s = scenario(PlatformKind::Lambda, 2);
         let a = run_sim(&s, engine_with((256, 16), 0.05)).unwrap();

@@ -6,48 +6,70 @@
 //! same attribute" — and likewise parallelism/memory for the processing
 //! platform, "while allowing the support for infrastructure-specific
 //! capabilities, such as layers or memory limits on Lambda."
+//!
+//! Platform-specific constraints (Lambda memory range, Dask machine
+//! capacity, edge device envelopes) are *not* encoded here: each
+//! [`PlatformPlugin`](super::registry::PlatformPlugin) owns the checks for
+//! its platform via `PlatformPlugin::validate`, so a new platform never
+//! requires touching this file.  [`PilotDescription::validate`] covers only
+//! the platform-independent invariants.
 
 use crate::util::json::Json;
 
-/// Target platform for a pilot.
+/// A platform identifier: the interned name under which a
+/// [`PlatformPlugin`](super::registry::PlatformPlugin) is registered.
+///
+/// This is deliberately *not* an enum — the set of platforms is owned by
+/// the [`PluginRegistry`](super::registry::PluginRegistry), so third-party
+/// plugins introduce new platforms without editing the pilot layer.  The
+/// associated constants below name the built-in plugins' platforms.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Platform {
-    /// Kinesis-like broker (serverless).
-    Kinesis,
-    /// Kafka-like broker (HPC / cloud nodes).
-    Kafka,
-    /// Lambda-like FaaS processing.
-    Lambda,
-    /// Dask-like processing on HPC nodes.
-    Dask,
-    /// In-process thread pool (testing, bag-of-tasks).
-    Local,
-}
+pub struct Platform(&'static str);
 
 impl Platform {
+    /// Kinesis-like broker (serverless).
+    pub const KINESIS: Platform = Platform("kinesis");
+    /// Kafka-like broker (HPC / cloud nodes).
+    pub const KAFKA: Platform = Platform("kafka");
+    /// Lambda-like FaaS processing.
+    pub const LAMBDA: Platform = Platform("lambda");
+    /// Dask-like processing on HPC nodes.
+    pub const DASK: Platform = Platform("dask");
+    /// In-process thread pool (testing, bag-of-tasks).
+    pub const LOCAL: Platform = Platform("local");
+    /// Greengrass-class edge site: co-located local broker + constrained
+    /// function fleet (paper §V future work).
+    pub const EDGE: Platform = Platform("edge");
+
+    /// Identifier for a plugin-owned platform name.  Equality is by name,
+    /// so `Platform::from_static("lambda") == Platform::LAMBDA`.
+    pub const fn from_static(name: &'static str) -> Platform {
+        Platform(name)
+    }
+
+    /// Resolve a user-facing name or alias against the default plugin
+    /// registry (plugins own their naming — see
+    /// [`PluginRegistry::parse`](super::registry::PluginRegistry::parse)).
     pub fn parse(s: &str) -> Option<Platform> {
-        match s.to_ascii_lowercase().as_str() {
-            "kinesis" => Some(Self::Kinesis),
-            "kafka" => Some(Self::Kafka),
-            "lambda" => Some(Self::Lambda),
-            "dask" => Some(Self::Dask),
-            "local" => Some(Self::Local),
-            _ => None,
-        }
+        super::registry::default_registry().parse(s)
     }
 
     pub fn name(self) -> &'static str {
-        match self {
-            Self::Kinesis => "kinesis",
-            Self::Kafka => "kafka",
-            Self::Lambda => "lambda",
-            Self::Dask => "dask",
-            Self::Local => "local",
-        }
+        self.0
     }
 
+    /// Whether the default registry's plugin for this platform provisions
+    /// a broker.
     pub fn is_broker(self) -> bool {
-        matches!(self, Self::Kinesis | Self::Kafka)
+        super::registry::default_registry()
+            .get(self)
+            .is_some_and(|p| p.provisions_broker())
+    }
+}
+
+impl std::fmt::Display for Platform {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.0)
     }
 }
 
@@ -64,6 +86,13 @@ impl MachineKind {
             "wrangler" => Some(Self::Wrangler),
             "stampede2" | "stampede2-knl" => Some(Self::Stampede2),
             _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Wrangler => "wrangler",
+            Self::Stampede2 => "stampede2",
         }
     }
 
@@ -102,7 +131,7 @@ pub struct PilotDescription {
 impl Default for PilotDescription {
     fn default() -> Self {
         Self {
-            platform: Platform::Local,
+            platform: Platform::LOCAL,
             parallelism: 4,
             memory_mb: 3008,
             walltime_s: 900.0,
@@ -124,6 +153,16 @@ pub enum DescriptionError {
     },
     #[error("unknown platform {0:?}")]
     UnknownPlatform(String),
+}
+
+impl DescriptionError {
+    /// Convenience constructor plugins use for their platform checks.
+    pub fn invalid(field: &'static str, reason: impl Into<String>) -> Self {
+        Self::Invalid {
+            field,
+            reason: reason.into(),
+        }
+    }
 }
 
 impl PilotDescription {
@@ -149,63 +188,54 @@ impl PilotDescription {
         self
     }
 
+    pub fn with_max_nodes(mut self, n: usize) -> Self {
+        self.max_nodes = n;
+        self
+    }
+
     pub fn with_seed(mut self, s: u64) -> Self {
         self.seed = s;
         self
     }
 
+    /// Platform-independent invariants only.  Platform-specific constraints
+    /// live in each plugin's `validate` — use
+    /// [`PluginRegistry::validate`](super::registry::PluginRegistry::validate)
+    /// for the full check.
     pub fn validate(&self) -> Result<(), DescriptionError> {
-        let inv = |field: &'static str, reason: String| DescriptionError::Invalid { field, reason };
         if self.parallelism == 0 {
-            return Err(inv("parallelism", "must be > 0".into()));
-        }
-        if self.platform == Platform::Lambda {
-            if !(crate::serverless::MIN_MEMORY_MB..=crate::serverless::MAX_MEMORY_MB)
-                .contains(&self.memory_mb)
-            {
-                return Err(inv(
-                    "memory_mb",
-                    format!(
-                        "{} outside Lambda range [{}, {}]",
-                        self.memory_mb,
-                        crate::serverless::MIN_MEMORY_MB,
-                        crate::serverless::MAX_MEMORY_MB
-                    ),
-                ));
-            }
-            if self.walltime_s > crate::serverless::MAX_WALLTIME_S {
-                return Err(inv(
-                    "walltime_s",
-                    format!("{} exceeds Lambda 15-minute cap", self.walltime_s),
-                ));
-            }
-        }
-        if self.platform == Platform::Dask {
-            let machine = self.machine.machine(self.max_nodes);
-            if self.parallelism > machine.max_workers() {
-                return Err(inv(
-                    "parallelism",
-                    format!(
-                        "{} workers exceed {} ({} nodes x {}/node)",
-                        self.parallelism,
-                        machine.max_workers(),
-                        self.max_nodes,
-                        machine.workers_per_node
-                    ),
-                ));
-            }
+            return Err(DescriptionError::invalid("parallelism", "must be > 0"));
         }
         if self.batch_size == 0 {
-            return Err(inv("batch_size", "must be > 0".into()));
+            return Err(DescriptionError::invalid("batch_size", "must be > 0"));
+        }
+        if !self.walltime_s.is_finite() || self.walltime_s <= 0.0 {
+            return Err(DescriptionError::invalid("walltime_s", "must be > 0"));
+        }
+        if !self.package_mb.is_finite() || self.package_mb < 0.0 {
+            return Err(DescriptionError::invalid("package_mb", "must be >= 0"));
         }
         Ok(())
     }
 
-    /// Parse from a config JSON/TOML object (see `util::tomlmini`).
+    /// Parse from a config JSON/TOML object (see `util::tomlmini`) against
+    /// the default plugin registry.  Custom registries (third-party
+    /// plugins) use [`PilotDescription::from_json_with`].
     pub fn from_json(v: &Json) -> Result<Self, DescriptionError> {
+        Self::from_json_with(v, &super::registry::default_registry())
+    }
+
+    /// Parse against an explicit registry: platform naming and the full
+    /// validation (generic + plugin) both consult `registry`, so configs
+    /// naming third-party platforms load once their plugin is registered.
+    pub fn from_json_with(
+        v: &Json,
+        registry: &super::registry::PluginRegistry,
+    ) -> Result<Self, DescriptionError> {
         let mut d = PilotDescription::default();
         if let Some(p) = v.get("platform").as_str() {
-            d.platform = Platform::parse(p)
+            d.platform = registry
+                .parse(p)
                 .ok_or_else(|| DescriptionError::UnknownPlatform(p.to_string()))?;
         }
         if let Some(x) = v.get("parallelism").as_usize() {
@@ -235,18 +265,23 @@ impl PilotDescription {
         if let Some(x) = v.get("seed").as_i64() {
             d.seed = x as u64;
         }
-        d.validate()?;
+        registry.validate(&d)?;
         Ok(d)
     }
 
+    /// Full round-trip export: every field `from_json` reads is written, so
+    /// a description survives serialization unchanged (a Dask description
+    /// keeps its HPC machine; a Lambda description its package size).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("platform", Json::from(self.platform.name())),
             ("parallelism", Json::from(self.parallelism)),
             ("memory_mb", Json::from(self.memory_mb as usize)),
             ("walltime_s", Json::from(self.walltime_s)),
+            ("machine", Json::from(self.machine.name())),
             ("max_nodes", Json::from(self.max_nodes)),
             ("batch_size", Json::from(self.batch_size)),
+            ("package_mb", Json::from(self.package_mb)),
             ("seed", Json::from(self.seed as i64)),
         ])
     }
@@ -255,51 +290,70 @@ impl PilotDescription {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pilot::registry::default_registry;
 
     #[test]
     fn platform_parse_roundtrip() {
         for p in [
-            Platform::Kinesis,
-            Platform::Kafka,
-            Platform::Lambda,
-            Platform::Dask,
-            Platform::Local,
+            Platform::KINESIS,
+            Platform::KAFKA,
+            Platform::LAMBDA,
+            Platform::DASK,
+            Platform::LOCAL,
+            Platform::EDGE,
         ] {
             assert_eq!(Platform::parse(p.name()), Some(p));
         }
         assert_eq!(Platform::parse("spark"), None);
-        assert!(Platform::Kinesis.is_broker());
-        assert!(!Platform::Lambda.is_broker());
+        assert!(Platform::KINESIS.is_broker());
+        assert!(!Platform::LAMBDA.is_broker());
+        // interned names are compared by value
+        assert_eq!(Platform::from_static("lambda"), Platform::LAMBDA);
     }
 
     #[test]
-    fn lambda_constraints() {
-        let mut d = PilotDescription::new(Platform::Lambda);
+    fn generic_validation() {
+        let mut d = PilotDescription::new(Platform::LAMBDA);
         assert!(d.validate().is_ok());
-        d.memory_mb = 64;
+        d.parallelism = 0;
         assert!(d.validate().is_err());
+        d.parallelism = 1;
+        d.batch_size = 0;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn lambda_constraints_enforced_by_plugin() {
+        // the Lambda-specific checks moved out of PilotDescription::validate
+        // into the serverless plugin; the registry composes both
+        let mut d = PilotDescription::new(Platform::LAMBDA);
+        assert!(default_registry().validate(&d).is_ok());
+        d.memory_mb = 64;
+        assert!(d.validate().is_ok(), "generic validation knows no platform");
+        assert!(default_registry().validate(&d).is_err());
         d.memory_mb = 1024;
         d.walltime_s = 2000.0;
-        assert!(d.validate().is_err());
+        assert!(default_registry().validate(&d).is_err());
     }
 
     #[test]
-    fn dask_capacity_constraint() {
-        let mut d = PilotDescription::new(Platform::Dask);
+    fn dask_capacity_constraint_enforced_by_plugin() {
+        let mut d = PilotDescription::new(Platform::DASK);
         d.max_nodes = 1; // 12 workers max
         d.parallelism = 12;
-        assert!(d.validate().is_ok());
+        assert!(default_registry().validate(&d).is_ok());
         d.parallelism = 13;
-        assert!(d.validate().is_err());
+        assert!(default_registry().validate(&d).is_err());
     }
 
     #[test]
     fn same_attribute_for_both_brokers() {
         // the paper's normative claim: one attribute, two brokers
-        let k = PilotDescription::new(Platform::Kinesis).with_parallelism(8);
-        let q = PilotDescription::new(Platform::Kafka).with_parallelism(8);
+        let k = PilotDescription::new(Platform::KINESIS).with_parallelism(8);
+        let q = PilotDescription::new(Platform::KAFKA).with_parallelism(8);
         assert_eq!(k.parallelism, q.parallelism);
-        assert!(k.validate().is_ok() && q.validate().is_ok());
+        assert!(default_registry().validate(&k).is_ok());
+        assert!(default_registry().validate(&q).is_ok());
     }
 
     #[test]
@@ -310,11 +364,22 @@ mod tests {
         )
         .unwrap();
         let d = PilotDescription::from_json(&v).unwrap();
-        assert_eq!(d.platform, Platform::Lambda);
+        assert_eq!(d.platform, Platform::LAMBDA);
         assert_eq!(d.parallelism, 16);
         assert_eq!(d.memory_mb, 1792);
         assert_eq!(d.batch_size, 2);
         assert_eq!(d.seed, 7);
+    }
+
+    #[test]
+    fn from_json_with_respects_the_registry() {
+        // the declarative path is not hard-wired to the default registry
+        let v = crate::util::json::parse(r#"{"platform": "lambda"}"#).unwrap();
+        let empty = crate::pilot::registry::PluginRegistry::empty();
+        assert!(matches!(
+            PilotDescription::from_json_with(&v, &empty),
+            Err(DescriptionError::UnknownPlatform(_))
+        ));
     }
 
     #[test]
@@ -329,11 +394,27 @@ mod tests {
     }
 
     #[test]
-    fn json_roundtrip() {
-        let d = PilotDescription::new(Platform::Dask).with_parallelism(24);
-        let j = d.to_json();
-        let d2 = PilotDescription::from_json(&j).unwrap();
-        assert_eq!(d2.platform, Platform::Dask);
-        assert_eq!(d2.parallelism, 24);
+    fn json_roundtrip_preserves_every_field() {
+        // regression: to_json used to drop `machine` and `package_mb`, so a
+        // Dask description round-tripped onto the wrong HPC machine
+        let mut d = PilotDescription::new(Platform::DASK)
+            .with_parallelism(24)
+            .with_machine(MachineKind::Stampede2)
+            .with_max_nodes(32)
+            .with_seed(9);
+        d.memory_mb = 2048;
+        d.walltime_s = 600.0;
+        d.batch_size = 3;
+        d.package_mb = 120.0;
+        let d2 = PilotDescription::from_json(&d.to_json()).unwrap();
+        assert_eq!(d2.platform, d.platform);
+        assert_eq!(d2.parallelism, d.parallelism);
+        assert_eq!(d2.memory_mb, d.memory_mb);
+        assert_eq!(d2.walltime_s, d.walltime_s);
+        assert_eq!(d2.machine, d.machine);
+        assert_eq!(d2.max_nodes, d.max_nodes);
+        assert_eq!(d2.batch_size, d.batch_size);
+        assert_eq!(d2.package_mb, d.package_mb);
+        assert_eq!(d2.seed, d.seed);
     }
 }

@@ -16,6 +16,8 @@ pub enum PilotError {
     NotRunning(super::state::PilotState),
     #[error("platform {0} does not accept compute units")]
     NoCompute(&'static str),
+    #[error("no plugin registered for platform {0:?}")]
+    NoPlugin(String),
     #[error("provisioning failed: {0}")]
     Provision(String),
     #[error(transparent)]
@@ -32,6 +34,12 @@ pub trait PilotBackend: Send + Sync {
 
     /// The broker this pilot provisioned, if it is a broker pilot.
     fn broker(&self) -> Option<Arc<dyn Broker>> {
+        None
+    }
+
+    /// The synchronous message-processing interface, if this is a
+    /// processing pilot (what the mini-app drivers pump records through).
+    fn processor(&self) -> Option<Arc<dyn super::processor::StreamProcessor>> {
         None
     }
 
@@ -118,6 +126,11 @@ impl PilotJob {
     /// The broker this pilot stood up (broker pilots only).
     pub fn broker(&self) -> Option<Arc<dyn Broker>> {
         self.backend.broker()
+    }
+
+    /// The message-processing interface (processing pilots only).
+    pub fn processor(&self) -> Option<Arc<dyn super::processor::StreamProcessor>> {
+        self.backend.processor()
     }
 
     /// All compute units submitted so far.

@@ -1,25 +1,52 @@
 //! The pilot abstraction (paper §III): unified resource management across
-//! serverless, cloud, and HPC.
+//! serverless, cloud, HPC — and, via the plugin registry, any platform a
+//! plugin describes.
 //!
-//! - [`PilotDescription`] — normative resource spec (one `parallelism`
-//!   attribute covers Kinesis shards, Kafka partitions, Lambda concurrency
-//!   and Dask workers)
-//! - [`PilotComputeService`] — the Pilot-API: `submit_pilot(description)`
+//! # Architecture: one Pilot-API, pluggable platforms
+//!
+//! The paper's claim is that Pilot-Streaming "allocates resource containers
+//! independent of the application workload, removing the need to write
+//! resource-specific code".  This layer enforces that structurally:
+//!
+//! - [`PilotDescription`] — the normative resource spec (one `parallelism`
+//!   attribute covers Kinesis shards, Kafka partitions, Lambda concurrency,
+//!   Dask workers, and edge containers).  Only platform-*independent*
+//!   invariants are validated here.
+//! - [`Platform`] — an interned platform *name*, not an enum: the set of
+//!   platforms is owned by the registry, so new platforms never touch this
+//!   module.
+//! - [`PluginRegistry`] / [`PlatformPlugin`] — each plugin owns its
+//!   platform's naming/parsing, description validation, and backend
+//!   provisioning ([`plugins`] holds the built-ins: local, lambda, dask,
+//!   kinesis, kafka, edge).  Registering a plugin is the *only* step to add
+//!   a platform — the service and the drivers resolve by name.
+//! - [`PilotComputeService`] — the Pilot-API facade:
+//!   `submit_pilot(description)` resolves the plugin and provisions.
 //! - [`PilotJob`] — an allocated resource container:
-//!   `submit_compute_unit(task)`
-//! - [`ComputeUnit`] — the task handle: `wait()`, `outcome()`
-//! - [`plugins`] — per-platform provisioning (Fig 2's plugin architecture)
+//!   `submit_compute_unit(task)`, plus the capability accessors
+//!   [`PilotJob::broker`] (broker pilots) and [`PilotJob::processor`]
+//!   (processing pilots — what the mini-app drivers pump messages through).
+//! - [`ComputeUnit`] — the task handle: `wait()`, `outcome()`.
+//!
+//! The mini-app's `PlatformUnderTest` is itself built on this API: a
+//! benchmark scenario expands into pilot descriptions and provisions
+//! through one service — no platform-specific construction outside
+//! [`plugins`].
 
 pub mod compute_unit;
 pub mod description;
 pub mod job;
 pub mod plugins;
+pub mod processor;
+pub mod registry;
 pub mod service;
 pub mod state;
 pub mod workers;
 
 pub use compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
-pub use description::{MachineKind, PilotDescription, Platform};
+pub use description::{DescriptionError, MachineKind, PilotDescription, Platform};
 pub use job::{PilotBackend, PilotError, PilotJob};
+pub use processor::{ProcessCost, StreamProcessor};
+pub use registry::{default_registry, PlatformPlugin, PluginRegistry, ProvisionContext};
 pub use service::PilotComputeService;
 pub use state::{CuState, PilotState};

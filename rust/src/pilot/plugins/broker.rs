@@ -8,6 +8,7 @@ use crate::broker::Broker;
 use crate::pilot::compute_unit::{ComputeUnit, TaskSpec};
 use crate::pilot::description::{PilotDescription, Platform};
 use crate::pilot::job::{PilotBackend, PilotError};
+use crate::pilot::registry::{PlatformPlugin, ProvisionContext};
 use crate::sim::{SharedClock, SharedResource};
 use std::sync::Arc;
 
@@ -18,7 +19,6 @@ pub struct KinesisBrokerBackend {
 
 impl KinesisBrokerBackend {
     pub fn provision(desc: &PilotDescription, clock: SharedClock) -> Result<Self, PilotError> {
-        desc.validate()?;
         Ok(Self {
             stream: Arc::new(KinesisStream::new(
                 "pilot-stream",
@@ -36,7 +36,7 @@ impl KinesisBrokerBackend {
 
 impl PilotBackend for KinesisBrokerBackend {
     fn platform(&self) -> Platform {
-        Platform::Kinesis
+        Platform::KINESIS
     }
 
     fn submit(&self, cu: ComputeUnit, _spec: TaskSpec) -> Result<(), PilotError> {
@@ -68,7 +68,6 @@ impl KafkaBrokerBackend {
         clock: SharedClock,
         shared_fs: Arc<SharedResource>,
     ) -> Result<Self, PilotError> {
-        desc.validate()?;
         Ok(Self {
             topic: Arc::new(KafkaTopic::new(
                 "pilot-topic",
@@ -87,7 +86,7 @@ impl KafkaBrokerBackend {
 
 impl PilotBackend for KafkaBrokerBackend {
     fn platform(&self) -> Platform {
-        Platform::Kafka
+        Platform::KAFKA
     }
 
     fn submit(&self, cu: ComputeUnit, _spec: TaskSpec) -> Result<(), PilotError> {
@@ -106,6 +105,64 @@ impl PilotBackend for KafkaBrokerBackend {
     }
 }
 
+/// The Kinesis broker plugin: pure broker, no compute units.
+pub struct KinesisPlugin;
+
+impl PlatformPlugin for KinesisPlugin {
+    fn platform(&self) -> Platform {
+        Platform::KINESIS
+    }
+
+    fn provisions_broker(&self) -> bool {
+        true
+    }
+
+    fn accepts_compute(&self) -> bool {
+        false
+    }
+
+    fn provision(
+        &self,
+        description: &PilotDescription,
+        ctx: &ProvisionContext,
+    ) -> Result<Arc<dyn PilotBackend>, PilotError> {
+        Ok(Arc::new(KinesisBrokerBackend::provision(
+            description,
+            Arc::clone(&ctx.clock),
+        )?))
+    }
+}
+
+/// The Kafka broker plugin: pure broker whose log rides the service's
+/// shared filesystem (HPC co-deployment).
+pub struct KafkaPlugin;
+
+impl PlatformPlugin for KafkaPlugin {
+    fn platform(&self) -> Platform {
+        Platform::KAFKA
+    }
+
+    fn provisions_broker(&self) -> bool {
+        true
+    }
+
+    fn accepts_compute(&self) -> bool {
+        false
+    }
+
+    fn provision(
+        &self,
+        description: &PilotDescription,
+        ctx: &ProvisionContext,
+    ) -> Result<Arc<dyn PilotBackend>, PilotError> {
+        Ok(Arc::new(KafkaBrokerBackend::provision(
+            description,
+            Arc::clone(&ctx.clock),
+            Arc::clone(&ctx.shared_fs),
+        )?))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,7 +171,7 @@ mod tests {
 
     #[test]
     fn kinesis_pilot_provisions_shards() {
-        let desc = PilotDescription::new(Platform::Kinesis).with_parallelism(8);
+        let desc = PilotDescription::new(Platform::KINESIS).with_parallelism(8);
         let b = KinesisBrokerBackend::provision(&desc, Arc::new(WallClock::new())).unwrap();
         let broker = b.broker().unwrap();
         assert_eq!(broker.num_partitions(), 8);
@@ -126,7 +183,7 @@ mod tests {
 
     #[test]
     fn kafka_pilot_provisions_partitions() {
-        let desc = PilotDescription::new(Platform::Kafka).with_parallelism(4);
+        let desc = PilotDescription::new(Platform::KAFKA).with_parallelism(4);
         let fs = SharedResource::new("fs", ContentionParams::ISOLATED);
         let b =
             KafkaBrokerBackend::provision(&desc, Arc::new(WallClock::new()), fs).unwrap();
@@ -135,7 +192,7 @@ mod tests {
 
     #[test]
     fn broker_pilots_reject_compute() {
-        let desc = PilotDescription::new(Platform::Kinesis);
+        let desc = PilotDescription::new(Platform::KINESIS);
         let b = KinesisBrokerBackend::provision(&desc, Arc::new(WallClock::new())).unwrap();
         let cu = ComputeUnit::new();
         cu.transition(crate::pilot::state::CuState::Queued);

@@ -1,0 +1,275 @@
+//! Edge plugin (paper §V future work): a Greengrass-class [`EdgeSite`]
+//! provisioned **purely through the plugin API** — the service and the
+//! drivers were not touched to add this platform.
+//!
+//! One edge pilot is a *co-located* broker + processing pair, because the
+//! whole point of the edge is that the broker lives on the same box as the
+//! functions: `broker()` returns a site-local Kinesis-like stream with
+//! LAN put latency (~2 ms vs ~15 ms WAN), and `processor()` a Lambda-
+//! compatible fleet under the device envelope — capped memory, 0.35× CPU,
+//! a handful of containers that *queue* (not throttle) when saturated.
+//! Throughput therefore saturates at the device's container count: the
+//! USL story sweeps and fits pick up as a first-class scenario axis.
+
+use super::serverless::{FleetExecutor, FleetProcessor};
+use crate::broker::kinesis::{KinesisStream, ShardLimits};
+use crate::broker::Broker;
+use crate::pilot::compute_unit::{ComputeUnit, TaskSpec};
+use crate::pilot::description::{DescriptionError, PilotDescription, Platform};
+use crate::pilot::job::{PilotBackend, PilotError};
+use crate::pilot::processor::StreamProcessor;
+use crate::pilot::registry::{PlatformPlugin, ProvisionContext};
+use crate::pilot::workers::LazyWorkerPool;
+use crate::serverless::edge::EDGE_MAX_MEMORY_MB;
+use crate::serverless::{EdgeSite, FunctionConfig, LambdaFleet};
+use crate::store::ObjectStore;
+use std::sync::Arc;
+
+/// The provisioned edge pilot: site-local broker + constrained fleet.
+pub struct EdgeBackend {
+    site: EdgeSite,
+    stream: Arc<KinesisStream>,
+    fleet: Arc<LambdaFleet>,
+    pool: LazyWorkerPool,
+}
+
+impl EdgeBackend {
+    pub fn provision(desc: &PilotDescription, ctx: &ProvisionContext) -> Result<Self, PilotError> {
+        let site = EdgeSite::default();
+        // admit() clamps concurrency to the device and rejects over-memory
+        let config = site
+            .admit(FunctionConfig {
+                memory_mb: desc.memory_mb,
+                timeout_s: desc.walltime_s,
+                package_mb: desc.package_mb,
+                max_concurrency: desc.parallelism,
+                cpu_efficiency: site.cpu_efficiency,
+                queue_when_saturated: true,
+            })
+            .map_err(PilotError::Provision)?;
+        let stream = Arc::new(KinesisStream::new(
+            "edge-stream",
+            desc.parallelism,
+            ShardLimits {
+                put_latency: site.broker_latency,
+                ..Default::default()
+            },
+            Arc::clone(&ctx.clock),
+        ));
+        let fleet = Arc::new(
+            LambdaFleet::new(
+                config,
+                Arc::clone(&ctx.engine),
+                Arc::new(ObjectStore::default()),
+                Arc::clone(&ctx.clock),
+                desc.seed,
+            )
+            .map_err(PilotError::Provision)?,
+        );
+        let pool = LazyWorkerPool::new(
+            desc.parallelism.min(site.max_concurrency),
+            Arc::new(FleetExecutor {
+                fleet: Arc::clone(&fleet),
+                label: "edge",
+            }),
+        );
+        Ok(Self {
+            site,
+            stream,
+            fleet,
+            pool,
+        })
+    }
+
+    pub fn site(&self) -> &EdgeSite {
+        &self.site
+    }
+
+    pub fn fleet(&self) -> Arc<LambdaFleet> {
+        Arc::clone(&self.fleet)
+    }
+}
+
+impl PilotBackend for EdgeBackend {
+    fn platform(&self) -> Platform {
+        Platform::EDGE
+    }
+
+    fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), PilotError> {
+        self.pool.submit(cu, spec).map_err(PilotError::Provision)
+    }
+
+    fn broker(&self) -> Option<Arc<dyn Broker>> {
+        Some(Arc::clone(&self.stream) as Arc<dyn Broker>)
+    }
+
+    fn processor(&self) -> Option<Arc<dyn StreamProcessor>> {
+        Some(Arc::new(FleetProcessor {
+            fleet: Arc::clone(&self.fleet),
+            label: "edge",
+        }))
+    }
+
+    fn shutdown(&self) {
+        self.pool.shutdown();
+    }
+
+    fn completed(&self) -> u64 {
+        self.pool.completed()
+    }
+}
+
+/// The edge platform plugin: owns the "edge" name and the device envelope.
+pub struct EdgePlugin;
+
+impl PlatformPlugin for EdgePlugin {
+    fn platform(&self) -> Platform {
+        Platform::EDGE
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["greengrass"]
+    }
+
+    fn provisions_broker(&self) -> bool {
+        true
+    }
+
+    /// Clamp container memory into the device envelope, so the cloud
+    /// defaults every other platform accepts provision cleanly on the
+    /// edge (the device simply deploys at its maximum — the same policy
+    /// `EdgeSite::admit` applies to concurrency).
+    fn normalize(&self, mut d: PilotDescription) -> PilotDescription {
+        d.memory_mb = d.memory_mb.min(EDGE_MAX_MEMORY_MB);
+        d
+    }
+
+    fn validate(&self, d: &PilotDescription) -> Result<(), DescriptionError> {
+        if !(crate::serverless::MIN_MEMORY_MB..=EDGE_MAX_MEMORY_MB).contains(&d.memory_mb) {
+            return Err(DescriptionError::invalid(
+                "memory_mb",
+                format!(
+                    "{} outside edge device range [{}, {EDGE_MAX_MEMORY_MB}]",
+                    d.memory_mb,
+                    crate::serverless::MIN_MEMORY_MB
+                ),
+            ));
+        }
+        if d.walltime_s > crate::serverless::MAX_WALLTIME_S {
+            return Err(DescriptionError::invalid(
+                "walltime_s",
+                format!("{} exceeds the 15-minute function cap", d.walltime_s),
+            ));
+        }
+        Ok(())
+    }
+
+    fn provision(
+        &self,
+        description: &PilotDescription,
+        ctx: &ProvisionContext,
+    ) -> Result<Arc<dyn PilotBackend>, PilotError> {
+        Ok(Arc::new(EdgeBackend::provision(description, ctx)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CalibratedEngine;
+    use crate::pilot::state::CuState;
+    use crate::serverless::edge::{EDGE_BROKER_LATENCY, EDGE_MAX_CONCURRENCY};
+    use crate::sim::{ContentionParams, SharedResource, SimClock, WallClock};
+
+    fn ctx() -> ProvisionContext {
+        ProvisionContext {
+            engine: Arc::new(CalibratedEngine::new(1)),
+            clock: Arc::new(WallClock::new()),
+            shared_fs: SharedResource::new("fs", ContentionParams::ISOLATED),
+        }
+    }
+
+    fn desc() -> PilotDescription {
+        PilotDescription::new(Platform::EDGE)
+            .with_parallelism(2)
+            .with_memory_mb(1024)
+    }
+
+    #[test]
+    fn provisions_colocated_broker_and_fleet() {
+        let b = EdgeBackend::provision(&desc(), &ctx()).unwrap();
+        let broker = b.broker().expect("site-local broker");
+        assert_eq!(broker.num_partitions(), 2);
+        let p = b.processor().expect("edge fleet");
+        assert_eq!(p.label(), "edge");
+        assert!(b.site().cpu_efficiency < 1.0);
+    }
+
+    #[test]
+    fn local_broker_has_lan_latency() {
+        let clock = Arc::new(SimClock::new());
+        let ctx = ProvisionContext {
+            engine: Arc::new(CalibratedEngine::new(1)),
+            clock: clock.clone(),
+            shared_fs: SharedResource::new("fs", ContentionParams::ISOLATED),
+        };
+        let b = EdgeBackend::provision(&desc(), &ctx).unwrap();
+        let r = b
+            .broker()
+            .unwrap()
+            .put(crate::broker::Message::new(
+                1,
+                0,
+                Arc::new(vec![0.0; 16]),
+                8,
+                0.0,
+            ))
+            .unwrap();
+        assert!(
+            (r.broker_latency - EDGE_BROKER_LATENCY).abs() < 1e-9,
+            "LAN hop, not WAN: {}",
+            r.broker_latency
+        );
+    }
+
+    #[test]
+    fn compute_units_run_on_the_edge_fleet() {
+        let b = EdgeBackend::provision(&desc(), &ctx()).unwrap();
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        b.submit(
+            cu.clone(),
+            TaskSpec::KMeansStep {
+                points: Arc::new(vec![0.1; 160]),
+                dim: 8,
+                model_key: "m".into(),
+                centroids: 8,
+            },
+        )
+        .unwrap();
+        assert_eq!(cu.wait(), CuState::Done);
+        assert!(cu.outcome().unwrap().executor.starts_with("edge-"));
+        assert_eq!(b.fleet().invocation_count(), 1);
+    }
+
+    #[test]
+    fn device_envelope_enforced() {
+        let plugin = EdgePlugin;
+        let mut d = desc();
+        d.memory_mb = 3008; // cloud default exceeds the device...
+        assert!(plugin.validate(&d).is_err());
+        // ...but normalize clamps it, so the service-side
+        // normalize-then-validate pipeline accepts cloud defaults
+        assert_eq!(plugin.normalize(d.clone()).memory_mb, EDGE_MAX_MEMORY_MB);
+        assert!(plugin.validate(&plugin.normalize(d.clone())).is_ok());
+        d.memory_mb = 1024;
+        assert!(plugin.validate(&d).is_ok());
+        // concurrency is clamped, not rejected
+        let b = EdgeBackend::provision(&d.with_parallelism(64), &ctx()).unwrap();
+        assert_eq!(
+            b.fleet().config().max_concurrency,
+            EDGE_MAX_CONCURRENCY,
+            "device cap"
+        );
+    }
+}

@@ -5,9 +5,11 @@
 use crate::engine::StepEngine;
 use crate::hpc::{Cluster, DaskPool};
 use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
-use crate::pilot::description::{PilotDescription, Platform};
+use crate::pilot::description::{DescriptionError, PilotDescription, Platform};
 use crate::pilot::job::{PilotBackend, PilotError};
-use crate::pilot::workers::{TaskExecutor, WorkerPool};
+use crate::pilot::processor::{ProcessCost, StreamProcessor};
+use crate::pilot::registry::{PlatformPlugin, ProvisionContext};
+use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
 use crate::sim::{ContentionParams, SharedResource};
 use crate::store::shared_fs::{SharedFsParams, SharedFsStore};
 use std::sync::Arc;
@@ -60,12 +62,49 @@ impl TaskExecutor for DaskExecutor {
     }
 }
 
+/// Streams messages through the Dask pool, partition-addressed (worker i
+/// owns partition i — the co-deployment the paper measures).
+struct DaskProcessor {
+    pool: Arc<DaskPool>,
+}
+
+impl StreamProcessor for DaskProcessor {
+    fn label(&self) -> &'static str {
+        "dask"
+    }
+
+    fn process(
+        &self,
+        partition: usize,
+        points: &[f32],
+        dim: usize,
+        model_key: &str,
+        centroids: usize,
+    ) -> Result<ProcessCost, String> {
+        let r = self
+            .pool
+            .process(
+                partition % self.pool.workers(),
+                points,
+                dim,
+                model_key,
+                centroids,
+            )
+            .map_err(|e| e.to_string())?;
+        Ok(ProcessCost {
+            compute: r.compute,
+            io: r.io_get + r.io_put,
+            overhead: r.sync,
+        })
+    }
+}
+
 /// The HPC processing backend.
 pub struct HpcBackend {
     dask: Arc<DaskPool>,
     cluster: Arc<Cluster>,
     allocation_id: u64,
-    pool: WorkerPool,
+    pool: LazyWorkerPool,
 }
 
 impl HpcBackend {
@@ -74,7 +113,6 @@ impl HpcBackend {
         engine: Arc<dyn StepEngine>,
         shared_fs: Option<Arc<SharedResource>>,
     ) -> Result<Self, PilotError> {
-        desc.validate()?;
         let machine = desc.machine.machine(desc.max_nodes);
         let cluster = Arc::new(Cluster::new(machine.clone(), desc.seed));
         let nodes = machine.nodes_for(desc.parallelism);
@@ -102,7 +140,7 @@ impl HpcBackend {
             store,
             desc.seed,
         ));
-        let pool = WorkerPool::new(
+        let pool = LazyWorkerPool::new(
             desc.parallelism,
             Arc::new(DaskExecutor {
                 pool: Arc::clone(&dask),
@@ -123,11 +161,17 @@ impl HpcBackend {
 
 impl PilotBackend for HpcBackend {
     fn platform(&self) -> Platform {
-        Platform::Dask
+        Platform::DASK
     }
 
     fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), PilotError> {
         self.pool.submit(cu, spec).map_err(PilotError::Provision)
+    }
+
+    fn processor(&self) -> Option<Arc<dyn StreamProcessor>> {
+        Some(Arc::new(DaskProcessor {
+            pool: Arc::clone(&self.dask),
+        }))
     }
 
     fn shutdown(&self) {
@@ -140,6 +184,49 @@ impl PilotBackend for HpcBackend {
     }
 }
 
+/// The Dask/HPC platform plugin: owns the "dask" name, the machine-capacity
+/// constraint, and HPC provisioning on the service's shared filesystem.
+pub struct HpcPlugin;
+
+impl PlatformPlugin for HpcPlugin {
+    fn platform(&self) -> Platform {
+        Platform::DASK
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["hpc"]
+    }
+
+    fn validate(&self, d: &PilotDescription) -> Result<(), DescriptionError> {
+        let machine = d.machine.machine(d.max_nodes);
+        if d.parallelism > machine.max_workers() {
+            return Err(DescriptionError::invalid(
+                "parallelism",
+                format!(
+                    "{} workers exceed {} ({} nodes x {}/node)",
+                    d.parallelism,
+                    machine.max_workers(),
+                    d.max_nodes,
+                    machine.workers_per_node
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    fn provision(
+        &self,
+        description: &PilotDescription,
+        ctx: &ProvisionContext,
+    ) -> Result<Arc<dyn PilotBackend>, PilotError> {
+        Ok(Arc::new(HpcBackend::provision(
+            description,
+            Arc::clone(&ctx.engine),
+            Some(Arc::clone(&ctx.shared_fs)),
+        )?))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,7 +236,7 @@ mod tests {
 
     #[test]
     fn provision_and_run_task() {
-        let desc = PilotDescription::new(Platform::Dask)
+        let desc = PilotDescription::new(Platform::DASK)
             .with_parallelism(4)
             .with_machine(MachineKind::Wrangler);
         let backend =
@@ -176,7 +263,7 @@ mod tests {
 
     #[test]
     fn releases_allocation_on_shutdown() {
-        let desc = PilotDescription::new(Platform::Dask).with_parallelism(2);
+        let desc = PilotDescription::new(Platform::DASK).with_parallelism(2);
         let backend =
             HpcBackend::provision(&desc, Arc::new(CalibratedEngine::new(1)), None).unwrap();
         let nodes_before = backend.cluster.allocated_nodes();

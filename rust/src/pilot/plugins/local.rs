@@ -4,9 +4,10 @@
 
 use crate::engine::StepEngine;
 use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
-use crate::pilot::description::Platform;
+use crate::pilot::description::{PilotDescription, Platform};
 use crate::pilot::job::{PilotBackend, PilotError};
-use crate::pilot::workers::{TaskExecutor, WorkerPool};
+use crate::pilot::registry::{PlatformPlugin, ProvisionContext};
+use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
 use crate::store::{ModelState, ModelStore, ObjectStore};
 use std::sync::Arc;
 
@@ -68,13 +69,13 @@ impl TaskExecutor for LocalExecutor {
 
 /// The local backend.
 pub struct LocalBackend {
-    pool: WorkerPool,
+    pool: LazyWorkerPool,
 }
 
 impl LocalBackend {
     pub fn new(workers: usize, engine: Arc<dyn StepEngine>) -> Self {
         Self {
-            pool: WorkerPool::new(
+            pool: LazyWorkerPool::new(
                 workers,
                 Arc::new(LocalExecutor {
                     engine,
@@ -87,7 +88,7 @@ impl LocalBackend {
 
 impl PilotBackend for LocalBackend {
     fn platform(&self) -> Platform {
-        Platform::Local
+        Platform::LOCAL
     }
 
     fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), PilotError> {
@@ -102,6 +103,30 @@ impl PilotBackend for LocalBackend {
 
     fn completed(&self) -> u64 {
         self.pool.completed()
+    }
+}
+
+/// The local platform plugin: in-process threads, accepts every task kind.
+pub struct LocalPlugin;
+
+impl PlatformPlugin for LocalPlugin {
+    fn platform(&self) -> Platform {
+        Platform::LOCAL
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["threads"]
+    }
+
+    fn provision(
+        &self,
+        description: &PilotDescription,
+        ctx: &ProvisionContext,
+    ) -> Result<Arc<dyn PilotBackend>, PilotError> {
+        Ok(Arc::new(LocalBackend::new(
+            description.parallelism,
+            Arc::clone(&ctx.engine),
+        )))
     }
 }
 

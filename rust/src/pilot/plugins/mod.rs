@@ -1,12 +1,19 @@
-//! Platform plugins: provision a [`PilotBackend`](super::job::PilotBackend)
-//! for each supported platform (paper Fig 2's plugin architecture).
+//! Built-in platform plugins (paper Fig 2's plugin architecture).
+//!
+//! Each module pairs a [`PlatformPlugin`](super::registry::PlatformPlugin)
+//! — naming, description validation, provisioning — with the backend it
+//! provisions.  All substrate construction (`KinesisStream`, `LambdaFleet`,
+//! `KafkaTopic`, `DaskPool`, edge fleets) lives *only* here: the service,
+//! the mini-app, and the drivers provision through the registry.
 
 pub mod broker;
+pub mod edge;
 pub mod hpc;
 pub mod local;
 pub mod serverless;
 
-pub use broker::{KafkaBrokerBackend, KinesisBrokerBackend};
-pub use hpc::HpcBackend;
-pub use local::LocalBackend;
-pub use serverless::ServerlessBackend;
+pub use broker::{KafkaBrokerBackend, KafkaPlugin, KinesisBrokerBackend, KinesisPlugin};
+pub use edge::{EdgeBackend, EdgePlugin};
+pub use hpc::{HpcBackend, HpcPlugin};
+pub use local::{LocalBackend, LocalPlugin};
+pub use serverless::{ServerlessBackend, ServerlessPlugin};

@@ -1,22 +1,30 @@
 //! Serverless plugin: provisions a [`LambdaFleet`] ("Function Pilot",
 //! paper Fig 2 step 2a/b) and executes compute-units as function
 //! invocations against the S3-like model store.
+//!
+//! [`FleetExecutor`] and [`FleetProcessor`] are shared with the edge
+//! plugin, whose pilots run the same fleet substrate under a constrained
+//! device envelope.
 
 use crate::engine::StepEngine;
 use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
-use crate::pilot::description::{PilotDescription, Platform};
+use crate::pilot::description::{DescriptionError, PilotDescription, Platform};
 use crate::pilot::job::{PilotBackend, PilotError};
-use crate::pilot::workers::{TaskExecutor, WorkerPool};
+use crate::pilot::processor::{ProcessCost, StreamProcessor};
+use crate::pilot::registry::{PlatformPlugin, ProvisionContext};
+use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
 use crate::serverless::{FunctionConfig, LambdaFleet};
 use crate::sim::SharedClock;
 use crate::store::ObjectStore;
 use std::sync::Arc;
 
-struct LambdaExecutor {
-    fleet: Arc<LambdaFleet>,
+/// Runs compute-units as fleet invocations (serverless and edge pilots).
+pub(crate) struct FleetExecutor {
+    pub(crate) fleet: Arc<LambdaFleet>,
+    pub(crate) label: &'static str,
 }
 
-impl TaskExecutor for LambdaExecutor {
+impl TaskExecutor for FleetExecutor {
     fn execute(&self, _worker: usize, spec: TaskSpec) -> Result<CuOutcome, String> {
         match spec {
             TaskSpec::KMeansStep {
@@ -33,8 +41,8 @@ impl TaskExecutor for LambdaExecutor {
                     value: report.inertia,
                     compute_seconds: report.compute,
                     io_seconds: report.io_get + report.io_put,
-                    overhead_seconds: report.cold_start,
-                    executor: format!("lambda-{}", report.container_id),
+                    overhead_seconds: report.cold_start + report.queue_wait,
+                    executor: format!("{}-{}", self.label, report.container_id),
                 })
             }
             TaskSpec::Sleep(s) => Ok(CuOutcome {
@@ -42,7 +50,7 @@ impl TaskExecutor for LambdaExecutor {
                 compute_seconds: s,
                 io_seconds: 0.0,
                 overhead_seconds: 0.0,
-                executor: "lambda".into(),
+                executor: self.label.into(),
             }),
             TaskSpec::Custom(_) => {
                 Err("serverless backend runs packaged functions, not closures".into())
@@ -51,10 +59,41 @@ impl TaskExecutor for LambdaExecutor {
     }
 }
 
+/// Streams messages through a fleet (serverless and edge pilots).
+pub(crate) struct FleetProcessor {
+    pub(crate) fleet: Arc<LambdaFleet>,
+    pub(crate) label: &'static str,
+}
+
+impl StreamProcessor for FleetProcessor {
+    fn label(&self) -> &'static str {
+        self.label
+    }
+
+    fn process(
+        &self,
+        _partition: usize,
+        points: &[f32],
+        dim: usize,
+        model_key: &str,
+        centroids: usize,
+    ) -> Result<ProcessCost, String> {
+        let r = self
+            .fleet
+            .invoke(points, dim, model_key, centroids)
+            .map_err(|e| e.to_string())?;
+        Ok(ProcessCost {
+            compute: r.compute,
+            io: r.io_get + r.io_put,
+            overhead: r.cold_start + r.queue_wait,
+        })
+    }
+}
+
 /// The serverless processing backend.
 pub struct ServerlessBackend {
     fleet: Arc<LambdaFleet>,
-    pool: WorkerPool,
+    pool: LazyWorkerPool,
 }
 
 impl ServerlessBackend {
@@ -63,12 +102,12 @@ impl ServerlessBackend {
         engine: Arc<dyn StepEngine>,
         clock: SharedClock,
     ) -> Result<Self, PilotError> {
-        desc.validate()?;
         let config = FunctionConfig {
             memory_mb: desc.memory_mb,
             timeout_s: desc.walltime_s,
             package_mb: desc.package_mb,
             max_concurrency: desc.parallelism,
+            ..Default::default()
         };
         let fleet = Arc::new(
             LambdaFleet::new(
@@ -81,10 +120,11 @@ impl ServerlessBackend {
             .map_err(PilotError::Provision)?,
         );
         // dispatch parallelism mirrors the concurrency cap
-        let pool = WorkerPool::new(
+        let pool = LazyWorkerPool::new(
             desc.parallelism,
-            Arc::new(LambdaExecutor {
+            Arc::new(FleetExecutor {
                 fleet: Arc::clone(&fleet),
+                label: "lambda",
             }),
         );
         Ok(Self { fleet, pool })
@@ -97,11 +137,18 @@ impl ServerlessBackend {
 
 impl PilotBackend for ServerlessBackend {
     fn platform(&self) -> Platform {
-        Platform::Lambda
+        Platform::LAMBDA
     }
 
     fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), PilotError> {
         self.pool.submit(cu, spec).map_err(PilotError::Provision)
+    }
+
+    fn processor(&self) -> Option<Arc<dyn StreamProcessor>> {
+        Some(Arc::new(FleetProcessor {
+            fleet: Arc::clone(&self.fleet),
+            label: "lambda",
+        }))
     }
 
     fn shutdown(&self) {
@@ -110,6 +157,55 @@ impl PilotBackend for ServerlessBackend {
 
     fn completed(&self) -> u64 {
         self.pool.completed()
+    }
+}
+
+/// The Lambda platform plugin: owns the "lambda" name, the Lambda-specific
+/// description constraints, and serverless provisioning.
+pub struct ServerlessPlugin;
+
+impl PlatformPlugin for ServerlessPlugin {
+    fn platform(&self) -> Platform {
+        Platform::LAMBDA
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["serverless", "faas"]
+    }
+
+    fn validate(&self, d: &PilotDescription) -> Result<(), DescriptionError> {
+        if !(crate::serverless::MIN_MEMORY_MB..=crate::serverless::MAX_MEMORY_MB)
+            .contains(&d.memory_mb)
+        {
+            return Err(DescriptionError::invalid(
+                "memory_mb",
+                format!(
+                    "{} outside Lambda range [{}, {}]",
+                    d.memory_mb,
+                    crate::serverless::MIN_MEMORY_MB,
+                    crate::serverless::MAX_MEMORY_MB
+                ),
+            ));
+        }
+        if d.walltime_s > crate::serverless::MAX_WALLTIME_S {
+            return Err(DescriptionError::invalid(
+                "walltime_s",
+                format!("{} exceeds Lambda 15-minute cap", d.walltime_s),
+            ));
+        }
+        Ok(())
+    }
+
+    fn provision(
+        &self,
+        description: &PilotDescription,
+        ctx: &ProvisionContext,
+    ) -> Result<Arc<dyn PilotBackend>, PilotError> {
+        Ok(Arc::new(ServerlessBackend::provision(
+            description,
+            Arc::clone(&ctx.engine),
+            Arc::clone(&ctx.clock),
+        )?))
     }
 }
 
@@ -122,7 +218,7 @@ mod tests {
 
     #[test]
     fn provision_and_invoke() {
-        let desc = PilotDescription::new(Platform::Lambda).with_parallelism(2);
+        let desc = PilotDescription::new(Platform::LAMBDA).with_parallelism(2);
         let backend = ServerlessBackend::provision(
             &desc,
             Arc::new(CalibratedEngine::new(1)),
@@ -151,7 +247,7 @@ mod tests {
 
     #[test]
     fn custom_closures_rejected() {
-        let desc = PilotDescription::new(Platform::Lambda);
+        let desc = PilotDescription::new(Platform::LAMBDA);
         let backend = ServerlessBackend::provision(
             &desc,
             Arc::new(CalibratedEngine::new(1)),
@@ -167,14 +263,36 @@ mod tests {
     }
 
     #[test]
-    fn invalid_description_rejected() {
-        let mut desc = PilotDescription::new(Platform::Lambda);
+    fn plugin_rejects_invalid_description() {
+        let mut desc = PilotDescription::new(Platform::LAMBDA);
         desc.memory_mb = 10;
-        assert!(ServerlessBackend::provision(
+        let plugin = ServerlessPlugin;
+        assert!(plugin.validate(&desc).is_err());
+        let ctx = ProvisionContext {
+            engine: Arc::new(CalibratedEngine::new(1)),
+            clock: Arc::new(WallClock::new()),
+            shared_fs: crate::sim::SharedResource::new(
+                "fs",
+                crate::sim::ContentionParams::ISOLATED,
+            ),
+        };
+        assert!(plugin.provision(&desc, &ctx).is_err());
+    }
+
+    #[test]
+    fn backend_exposes_a_processor() {
+        let desc = PilotDescription::new(Platform::LAMBDA).with_parallelism(2);
+        let backend = ServerlessBackend::provision(
             &desc,
             Arc::new(CalibratedEngine::new(1)),
             Arc::new(WallClock::new()),
         )
-        .is_err());
+        .unwrap();
+        let p = backend.processor().expect("processing pilot");
+        assert_eq!(p.label(), "lambda");
+        let pts = vec![0.1; 160];
+        let cost = p.process(0, &pts, 8, "m", 8).unwrap();
+        assert!(cost.total() > 0.0);
+        assert!(cost.overhead > 0.0, "cold start charged to overhead");
     }
 }

@@ -1,0 +1,61 @@
+//! [`StreamProcessor`] — the synchronous, partition-addressed message
+//! processing interface processing pilots expose.
+//!
+//! The mini-app drivers (sim and live) pump broker records through this
+//! interface; backends implement it over their platform substrate
+//! (Lambda fleet, Dask pool, edge fleet).  Keeping it synchronous and
+//! partition-addressed preserves the deterministic DES semantics the
+//! simulated-time driver depends on, while provisioning still flows
+//! through the one Pilot-API.
+
+/// Modeled cost breakdown of processing one message.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProcessCost {
+    /// CPU time of the K-Means step (platform-scaled).
+    pub compute: f64,
+    /// Model store get + put.
+    pub io: f64,
+    /// Platform overhead: cold starts, coherency sync, queueing on a
+    /// saturated edge device.
+    pub overhead: f64,
+}
+
+impl ProcessCost {
+    pub fn total(&self) -> f64 {
+        self.compute + self.io + self.overhead
+    }
+}
+
+/// Message processing exposed by a processing pilot (see
+/// [`PilotBackend::processor`](super::job::PilotBackend::processor)).
+pub trait StreamProcessor: Send + Sync {
+    /// Short label for traces ("lambda", "dask", "edge").
+    fn label(&self) -> &'static str;
+
+    /// Process one message's points on `partition`; returns the modeled
+    /// cost breakdown.
+    fn process(
+        &self,
+        partition: usize,
+        points: &[f32],
+        dim: usize,
+        model_key: &str,
+        centroids: usize,
+    ) -> Result<ProcessCost, String>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_totals() {
+        let c = ProcessCost {
+            compute: 0.1,
+            io: 0.02,
+            overhead: 0.005,
+        };
+        assert!((c.total() - 0.125).abs() < 1e-12);
+        assert_eq!(ProcessCost::default().total(), 0.0);
+    }
+}

@@ -1,0 +1,293 @@
+//! The platform plugin registry (paper Fig 2's plugin architecture, made
+//! real): `PilotComputeService` resolves a [`PlatformPlugin`] by the
+//! description's platform name instead of matching on an enum, so adding a
+//! platform — cloud, HPC, or edge — is *only* a plugin registration, with
+//! zero edits to the service or the drivers.
+//!
+//! A plugin owns three things for its platform:
+//!
+//! 1. **Naming/parsing** — the canonical [`Platform`] name plus aliases
+//!    ([`PluginRegistry::parse`] consults the plugins, nobody else).
+//! 2. **Description validation** — platform-specific constraints
+//!    (Lambda's memory range, Dask's machine capacity, the edge device
+//!    envelope) via [`PlatformPlugin::validate`].
+//! 3. **Provisioning** — building the [`PilotBackend`] from a validated
+//!    [`PilotDescription`] and the service's [`ProvisionContext`].
+
+use super::description::{DescriptionError, PilotDescription, Platform};
+use super::job::{PilotBackend, PilotError};
+use crate::engine::StepEngine;
+use crate::sim::{SharedClock, SharedResource};
+use std::sync::{Arc, OnceLock};
+
+/// Service-owned resources a plugin may wire into its backend.
+pub struct ProvisionContext {
+    /// The step engine executing K-Means workloads (calibrated sim or PJRT).
+    pub engine: Arc<dyn StepEngine>,
+    /// The service's clock (simulated or wall time).
+    pub clock: SharedClock,
+    /// The shared filesystem of the "HPC machine" the service fronts;
+    /// plugins that co-deploy on it (Kafka, Dask) contend here together.
+    pub shared_fs: Arc<SharedResource>,
+}
+
+/// One platform's provisioning plugin.
+pub trait PlatformPlugin: Send + Sync {
+    /// The canonical platform identifier this plugin registers.
+    fn platform(&self) -> Platform;
+
+    /// Additional names `parse` accepts for this platform.
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// Pilots of this platform expose a [`Broker`](crate::broker::Broker).
+    fn provisions_broker(&self) -> bool {
+        false
+    }
+
+    /// Pilots of this platform execute compute units.
+    fn accepts_compute(&self) -> bool {
+        true
+    }
+
+    /// Platform-appropriate normalization, applied by the service (and by
+    /// [`PluginRegistry::validate`]) *before* validation.  The default is
+    /// identity; the edge plugin, for example, clamps container memory
+    /// into its device envelope so the description shape every other
+    /// platform accepts (cloud defaults included) provisions cleanly —
+    /// mirroring how `EdgeSite::admit` clamps concurrency.
+    fn normalize(&self, description: PilotDescription) -> PilotDescription {
+        description
+    }
+
+    /// Platform-specific description constraints (the generic invariants
+    /// are [`PilotDescription::validate`]'s job).  Runs on the
+    /// [`PlatformPlugin::normalize`]d description.
+    fn validate(&self, _description: &PilotDescription) -> Result<(), DescriptionError> {
+        Ok(())
+    }
+
+    /// Provision a backend for a description.
+    ///
+    /// Contract: the service runs [`PilotDescription::validate`] and this
+    /// plugin's [`PlatformPlugin::validate`] *before* calling `provision`,
+    /// so implementations may assume a validated description and must not
+    /// re-validate.  Callers invoking a plugin directly (tests, tools)
+    /// are responsible for running `validate` first — though backends
+    /// still fail closed on substrate-level constraint violations.
+    fn provision(
+        &self,
+        description: &PilotDescription,
+        ctx: &ProvisionContext,
+    ) -> Result<Arc<dyn PilotBackend>, PilotError>;
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RegistryError {
+    #[error("platform {platform:?} conflicts with registered plugin {with:?}")]
+    Conflict { platform: String, with: String },
+}
+
+/// An ordered set of plugins; registration order is the iteration order.
+#[derive(Default)]
+pub struct PluginRegistry {
+    plugins: Vec<Arc<dyn PlatformPlugin>>,
+}
+
+impl PluginRegistry {
+    /// A registry with no plugins (compose your own platform set).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// All built-in plugins: local, lambda, dask, kinesis, kafka, edge.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        let builtins: Vec<Arc<dyn PlatformPlugin>> = vec![
+            Arc::new(super::plugins::LocalPlugin),
+            Arc::new(super::plugins::ServerlessPlugin),
+            Arc::new(super::plugins::HpcPlugin),
+            Arc::new(super::plugins::KinesisPlugin),
+            Arc::new(super::plugins::KafkaPlugin),
+            Arc::new(super::plugins::EdgePlugin),
+        ];
+        for p in builtins {
+            r.register(p).expect("builtin plugins have unique names");
+        }
+        r
+    }
+
+    /// Register a plugin; every name and alias must be new.
+    pub fn register(&mut self, plugin: Arc<dyn PlatformPlugin>) -> Result<(), RegistryError> {
+        let mut names: Vec<&'static str> = vec![plugin.platform().name()];
+        names.extend_from_slice(plugin.aliases());
+        for existing in &self.plugins {
+            let mut taken: Vec<&'static str> = vec![existing.platform().name()];
+            taken.extend_from_slice(existing.aliases());
+            if names
+                .iter()
+                .any(|n| taken.iter().any(|t| t.eq_ignore_ascii_case(n)))
+            {
+                return Err(RegistryError::Conflict {
+                    platform: plugin.platform().name().to_string(),
+                    with: existing.platform().name().to_string(),
+                });
+            }
+        }
+        self.plugins.push(plugin);
+        Ok(())
+    }
+
+    /// The plugin registered for `platform`.  Matching is by name,
+    /// case-insensitively — the same identity rule `register` and `parse`
+    /// use, so every lookup path agrees on what a platform is.
+    pub fn get(&self, platform: Platform) -> Option<Arc<dyn PlatformPlugin>> {
+        self.plugins
+            .iter()
+            .find(|p| p.platform().name().eq_ignore_ascii_case(platform.name()))
+            .cloned()
+    }
+
+    /// Resolve a user-supplied name or alias (case-insensitive).
+    pub fn parse(&self, s: &str) -> Option<Platform> {
+        self.plugins
+            .iter()
+            .find(|p| {
+                p.platform().name().eq_ignore_ascii_case(s)
+                    || p.aliases().iter().any(|a| a.eq_ignore_ascii_case(s))
+            })
+            .map(|p| p.platform())
+    }
+
+    /// Registered platforms, in registration order.
+    pub fn platforms(&self) -> Vec<Platform> {
+        self.plugins.iter().map(|p| p.platform()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.plugins.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plugins.is_empty()
+    }
+
+    /// Full description validation: the generic invariants plus the
+    /// owning plugin's platform-specific checks, applied to the plugin's
+    /// normalized form of the description (what the service provisions).
+    pub fn validate(&self, description: &PilotDescription) -> Result<(), DescriptionError> {
+        description.validate()?;
+        let plugin = self.get(description.platform).ok_or_else(|| {
+            DescriptionError::UnknownPlatform(description.platform.name().to_string())
+        })?;
+        plugin.validate(&plugin.normalize(description.clone()))
+    }
+}
+
+/// The process-wide registry of built-in plugins.  Services use it unless
+/// given a custom registry via
+/// [`PilotComputeService::with_registry`](super::service::PilotComputeService::with_registry).
+pub fn default_registry() -> Arc<PluginRegistry> {
+    static DEFAULT: OnceLock<Arc<PluginRegistry>> = OnceLock::new();
+    Arc::clone(DEFAULT.get_or_init(|| Arc::new(PluginRegistry::builtin())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct FakePlugin(&'static str, &'static [&'static str]);
+
+    impl PlatformPlugin for FakePlugin {
+        fn platform(&self) -> Platform {
+            Platform::from_static(self.0)
+        }
+
+        fn aliases(&self) -> &'static [&'static str] {
+            self.1
+        }
+
+        fn provision(
+            &self,
+            description: &PilotDescription,
+            ctx: &ProvisionContext,
+        ) -> Result<Arc<dyn PilotBackend>, PilotError> {
+            Ok(Arc::new(super::super::plugins::LocalBackend::new(
+                description.parallelism,
+                Arc::clone(&ctx.engine),
+            )))
+        }
+    }
+
+    #[test]
+    fn builtin_registry_has_all_platforms() {
+        let r = PluginRegistry::builtin();
+        assert_eq!(r.len(), 6);
+        for p in [
+            Platform::LOCAL,
+            Platform::LAMBDA,
+            Platform::DASK,
+            Platform::KINESIS,
+            Platform::KAFKA,
+            Platform::EDGE,
+        ] {
+            assert!(r.get(p).is_some(), "{p} missing");
+            assert_eq!(r.parse(p.name()), Some(p));
+        }
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn parse_accepts_aliases_case_insensitively() {
+        let r = PluginRegistry::builtin();
+        assert_eq!(r.parse("SERVERLESS"), Some(Platform::LAMBDA));
+        assert_eq!(r.parse("greengrass"), Some(Platform::EDGE));
+        assert_eq!(r.parse("hpc"), Some(Platform::DASK));
+        assert_eq!(r.parse("flink"), None);
+    }
+
+    #[test]
+    fn get_uses_the_same_identity_rule_as_parse() {
+        // a Platform differing only in case still resolves its plugin, so
+        // parse/register/get never disagree about platform identity
+        let r = PluginRegistry::builtin();
+        assert!(r.get(Platform::from_static("LAMBDA")).is_some());
+        assert!(r.get(Platform::from_static("Edge")).is_some());
+        assert!(r.get(Platform::from_static("spark")).is_none());
+    }
+
+    #[test]
+    fn duplicate_names_and_aliases_rejected() {
+        let mut r = PluginRegistry::builtin();
+        assert!(matches!(
+            r.register(Arc::new(FakePlugin("lambda", &[]))),
+            Err(RegistryError::Conflict { .. })
+        ));
+        // alias colliding with a registered canonical name
+        assert!(r
+            .register(Arc::new(FakePlugin("mybroker", &["kafka"])))
+            .is_err());
+        // fresh names are fine
+        assert!(r.register(Arc::new(FakePlugin("flink", &["beam"]))).is_ok());
+        assert_eq!(r.parse("beam"), Some(Platform::from_static("flink")));
+    }
+
+    #[test]
+    fn validate_requires_a_plugin() {
+        let r = PluginRegistry::builtin();
+        let d = PilotDescription::new(Platform::from_static("nonesuch"));
+        assert!(matches!(
+            r.validate(&d),
+            Err(DescriptionError::UnknownPlatform(_))
+        ));
+    }
+
+    #[test]
+    fn empty_registry_knows_nothing() {
+        let r = PluginRegistry::empty();
+        assert!(r.is_empty());
+        assert_eq!(r.parse("lambda"), None);
+        assert!(r.get(Platform::LAMBDA).is_none());
+    }
+}

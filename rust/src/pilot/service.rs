@@ -1,12 +1,12 @@
 //! `PilotComputeService` — the Pilot-API facade (paper Fig 2's
-//! Pilot-Manager): one entry point that provisions pilots on any supported
-//! platform from a [`PilotDescription`] and hands back [`PilotJob`]s.
+//! Pilot-Manager): one entry point that provisions pilots on any platform
+//! a [`PluginRegistry`] knows, from a [`PilotDescription`], handing back
+//! [`PilotJob`]s.  The service contains **no platform-specific code**: it
+//! resolves the description's platform to a plugin and delegates.
 
-use super::description::{PilotDescription, Platform};
+use super::description::PilotDescription;
 use super::job::{PilotError, PilotJob};
-use super::plugins::{
-    HpcBackend, KafkaBrokerBackend, KinesisBrokerBackend, LocalBackend, ServerlessBackend,
-};
+use super::registry::{default_registry, PluginRegistry, ProvisionContext};
 use crate::engine::StepEngine;
 use crate::sim::{ContentionParams, SharedClock, SharedResource};
 use std::sync::{Arc, Mutex};
@@ -19,10 +19,12 @@ pub struct PilotComputeService {
     /// Kafka pilots and Dask pilots created here contend on it together,
     /// mirroring the paper's co-deployment.
     shared_fs: Arc<SharedResource>,
+    registry: Arc<PluginRegistry>,
     pilots: Mutex<Vec<PilotJob>>,
 }
 
 impl PilotComputeService {
+    /// A service over the default (built-in) plugin registry.
     pub fn new(clock: SharedClock, engine: Arc<dyn StepEngine>) -> Self {
         Self {
             clock,
@@ -34,8 +36,15 @@ impl PilotComputeService {
                     super::plugins::hpc::DEFAULT_LUSTRE_BETA,
                 ),
             ),
+            registry: default_registry(),
             pilots: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Swap in a custom plugin registry (third-party platforms, tests).
+    pub fn with_registry(mut self, registry: Arc<PluginRegistry>) -> Self {
+        self.registry = registry;
+        self
     }
 
     /// Override the shared-FS contention model (ablations; isolated FS).
@@ -52,34 +61,27 @@ impl PilotComputeService {
         Arc::clone(&self.clock)
     }
 
-    /// Provision a pilot for `description` (paper: `submit_pilot`).
+    pub fn registry(&self) -> Arc<PluginRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Provision a pilot for `description` (paper: `submit_pilot`): resolve
+    /// the plugin, normalize, run generic + plugin validation, provision
+    /// the backend.
     pub fn submit_pilot(&self, description: PilotDescription) -> Result<PilotJob, PilotError> {
+        let plugin = self
+            .registry
+            .get(description.platform)
+            .ok_or_else(|| PilotError::NoPlugin(description.platform.name().to_string()))?;
+        let description = plugin.normalize(description);
         description.validate()?;
-        let backend: Arc<dyn super::job::PilotBackend> = match description.platform {
-            Platform::Local => Arc::new(LocalBackend::new(
-                description.parallelism,
-                Arc::clone(&self.engine),
-            )),
-            Platform::Lambda => Arc::new(ServerlessBackend::provision(
-                &description,
-                Arc::clone(&self.engine),
-                Arc::clone(&self.clock),
-            )?),
-            Platform::Dask => Arc::new(HpcBackend::provision(
-                &description,
-                Arc::clone(&self.engine),
-                Some(Arc::clone(&self.shared_fs)),
-            )?),
-            Platform::Kinesis => Arc::new(KinesisBrokerBackend::provision(
-                &description,
-                Arc::clone(&self.clock),
-            )?),
-            Platform::Kafka => Arc::new(KafkaBrokerBackend::provision(
-                &description,
-                Arc::clone(&self.clock),
-                Arc::clone(&self.shared_fs),
-            )?),
+        plugin.validate(&description)?;
+        let ctx = ProvisionContext {
+            engine: Arc::clone(&self.engine),
+            clock: Arc::clone(&self.clock),
+            shared_fs: Arc::clone(&self.shared_fs),
         };
+        let backend = plugin.provision(&description, &ctx)?;
         let job = PilotJob::new(description, backend);
         self.pilots.lock().unwrap().push(job.clone());
         Ok(job)
@@ -103,6 +105,9 @@ mod tests {
     use super::*;
     use crate::engine::CalibratedEngine;
     use crate::pilot::compute_unit::TaskSpec;
+    use crate::pilot::description::Platform;
+    use crate::pilot::job::PilotBackend;
+    use crate::pilot::registry::PlatformPlugin;
     use crate::pilot::state::PilotState;
     use crate::sim::WallClock;
 
@@ -113,35 +118,40 @@ mod tests {
         )
     }
 
+    /// A description valid on every built-in platform (memory within the
+    /// edge envelope; parallelism within every capacity bound).
+    fn universal(platform: Platform) -> PilotDescription {
+        PilotDescription::new(platform)
+            .with_parallelism(2)
+            .with_memory_mb(1024)
+    }
+
     #[test]
-    fn submits_pilots_on_every_platform() {
+    fn submits_pilots_on_every_registered_platform() {
         let svc = service();
-        for platform in [
-            Platform::Local,
-            Platform::Lambda,
-            Platform::Dask,
-            Platform::Kinesis,
-            Platform::Kafka,
-        ] {
-            let job = svc
-                .submit_pilot(PilotDescription::new(platform).with_parallelism(2))
-                .unwrap();
-            assert_eq!(job.state(), PilotState::Running, "{platform:?}");
+        let platforms = svc.registry().platforms();
+        assert_eq!(platforms.len(), 6, "local/lambda/dask/kinesis/kafka/edge");
+        for platform in platforms {
+            let job = svc.submit_pilot(universal(platform)).unwrap();
+            assert_eq!(job.state(), PilotState::Running, "{platform}");
             assert_eq!(job.platform(), platform);
         }
-        assert_eq!(svc.pilots().len(), 5);
+        assert_eq!(svc.pilots().len(), 6);
         svc.shutdown();
     }
 
     #[test]
     fn unified_interface_runs_same_workload_everywhere() {
         // the paper's interoperability claim: identical submission code on
-        // serverless and HPC
+        // serverless, HPC, and the edge
         let svc = service();
-        for platform in [Platform::Local, Platform::Lambda, Platform::Dask] {
-            let job = svc
-                .submit_pilot(PilotDescription::new(platform).with_parallelism(2))
-                .unwrap();
+        for platform in [
+            Platform::LOCAL,
+            Platform::LAMBDA,
+            Platform::DASK,
+            Platform::EDGE,
+        ] {
+            let job = svc.submit_pilot(universal(platform)).unwrap();
             let cu = job
                 .submit_compute_unit(TaskSpec::KMeansStep {
                     points: Arc::new(vec![0.1; 160]),
@@ -150,7 +160,7 @@ mod tests {
                     centroids: 8,
                 })
                 .unwrap();
-            assert_eq!(cu.wait(), crate::pilot::state::CuState::Done, "{platform:?}");
+            assert_eq!(cu.wait(), crate::pilot::state::CuState::Done, "{platform}");
             job.finish();
             assert_eq!(job.state(), PilotState::Done);
         }
@@ -161,7 +171,7 @@ mod tests {
         let svc = service();
         let fs_before = svc.shared_fs();
         let kafka = svc
-            .submit_pilot(PilotDescription::new(Platform::Kafka).with_parallelism(2))
+            .submit_pilot(PilotDescription::new(Platform::KAFKA).with_parallelism(2))
             .unwrap();
         let _broker = kafka.broker().unwrap();
         // the broker's appends enter the same resource the service owns
@@ -175,7 +185,7 @@ mod tests {
     fn submit_to_finished_pilot_fails() {
         let svc = service();
         let job = svc
-            .submit_pilot(PilotDescription::new(Platform::Local))
+            .submit_pilot(PilotDescription::new(Platform::LOCAL))
             .unwrap();
         job.finish();
         assert!(matches!(
@@ -185,12 +195,21 @@ mod tests {
     }
 
     #[test]
+    fn unknown_platform_is_a_clean_error() {
+        let svc = service();
+        let err = svc
+            .submit_pilot(PilotDescription::new(Platform::from_static("spark")))
+            .unwrap_err();
+        assert!(matches!(err, PilotError::NoPlugin(_)), "{err}");
+    }
+
+    #[test]
     fn dag_of_dependent_tasks() {
         // "the pilot abstraction can be used to ... compose complex DAGs":
         // stage 2 consumes stage 1 results.
         let svc = service();
         let job = svc
-            .submit_pilot(PilotDescription::new(Platform::Local).with_parallelism(4))
+            .submit_pilot(PilotDescription::new(Platform::LOCAL).with_parallelism(4))
             .unwrap();
         let stage1: Vec<_> = (0..4)
             .map(|i| {
@@ -210,6 +229,43 @@ mod tests {
             .unwrap();
         stage2.wait();
         assert_eq!(stage2.outcome().unwrap().value, 60.0);
+        job.finish();
+    }
+
+    /// The redesign's extensibility proof: a third-party platform becomes
+    /// submittable by registering a plugin — zero service edits.
+    struct FlinkPlugin;
+
+    impl PlatformPlugin for FlinkPlugin {
+        fn platform(&self) -> Platform {
+            Platform::from_static("flink")
+        }
+
+        fn provision(
+            &self,
+            description: &PilotDescription,
+            ctx: &crate::pilot::registry::ProvisionContext,
+        ) -> Result<Arc<dyn PilotBackend>, PilotError> {
+            Ok(Arc::new(crate::pilot::plugins::LocalBackend::new(
+                description.parallelism,
+                Arc::clone(&ctx.engine),
+            )))
+        }
+    }
+
+    #[test]
+    fn third_party_plugin_needs_no_service_changes() {
+        let mut registry = PluginRegistry::builtin();
+        registry.register(Arc::new(FlinkPlugin)).unwrap();
+        let svc = service().with_registry(Arc::new(registry));
+        let job = svc
+            .submit_pilot(PilotDescription::new(Platform::from_static("flink")))
+            .unwrap();
+        let cu = job
+            .submit_compute_unit(TaskSpec::Custom(Box::new(|| Ok(3.0))))
+            .unwrap();
+        cu.wait();
+        assert_eq!(cu.outcome().unwrap().value, 3.0);
         job.finish();
     }
 }

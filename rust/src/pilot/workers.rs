@@ -92,6 +92,71 @@ impl Drop for WorkerPool {
     }
 }
 
+/// A [`WorkerPool`] that spawns its threads on first submit.
+///
+/// Pilots always carry a compute path, but many (e.g. every pilot a
+/// mini-app sweep provisions) only ever serve broker/processor traffic —
+/// eager pools would spawn thousands of idle threads across a 90-config
+/// sweep for nothing.  One mutex guards the idle/running/closed state as
+/// a unit, so a submit racing a shutdown can never resurrect the pool.
+pub struct LazyWorkerPool {
+    workers: usize,
+    executor: Arc<dyn TaskExecutor>,
+    state: Mutex<LazyState>,
+}
+
+enum LazyState {
+    Idle,
+    Running(WorkerPool),
+    /// Shut down; carries the final completed-task count.
+    Closed(u64),
+}
+
+impl LazyWorkerPool {
+    pub fn new(workers: usize, executor: Arc<dyn TaskExecutor>) -> Self {
+        assert!(workers > 0);
+        Self {
+            workers,
+            executor,
+            state: Mutex::new(LazyState::Idle),
+        }
+    }
+
+    pub fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), String> {
+        let mut state = self.state.lock().unwrap();
+        if let LazyState::Idle = *state {
+            *state = LazyState::Running(WorkerPool::new(self.workers, Arc::clone(&self.executor)));
+        }
+        match &*state {
+            LazyState::Running(pool) => pool.submit(cu, spec),
+            LazyState::Closed(_) => Err("pool stopped".to_string()),
+            LazyState::Idle => unreachable!("initialized above"),
+        }
+    }
+
+    pub fn completed(&self) -> u64 {
+        match &*self.state.lock().unwrap() {
+            LazyState::Idle => 0,
+            LazyState::Running(pool) => pool.completed(),
+            LazyState::Closed(count) => *count,
+        }
+    }
+
+    /// Drain and join, if threads were ever spawned; further submits fail.
+    pub fn shutdown(&self) {
+        let mut state = self.state.lock().unwrap();
+        let final_count = match &*state {
+            LazyState::Running(pool) => {
+                pool.shutdown();
+                pool.completed()
+            }
+            LazyState::Idle => 0,
+            LazyState::Closed(count) => *count,
+        };
+        *state = LazyState::Closed(final_count);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +234,26 @@ mod tests {
         let cu = ComputeUnit::new();
         cu.transition(CuState::Queued);
         assert!(pool.submit(cu, TaskSpec::Sleep(0.0)).is_err());
+    }
+
+    #[test]
+    fn lazy_pool_spawns_on_first_submit_only() {
+        let pool = LazyWorkerPool::new(2, Arc::new(Doubler));
+        assert_eq!(pool.completed(), 0);
+        pool.shutdown(); // never spawned: nothing to join...
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        // ...and a closed pool refuses late submissions instead of
+        // resurrecting threads
+        assert!(pool.submit(cu, TaskSpec::Sleep(0.0)).is_err());
+
+        let pool = LazyWorkerPool::new(2, Arc::new(Doubler));
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        pool.submit(cu.clone(), TaskSpec::Sleep(0.0)).unwrap();
+        assert_eq!(cu.wait(), CuState::Done);
+        assert_eq!(pool.completed(), 1);
+        pool.shutdown();
     }
 
     #[test]

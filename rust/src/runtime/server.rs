@@ -6,10 +6,12 @@
 //! channels.  One request = one K-Means step on one message.
 
 use super::artifact::{Manifest, VariantMeta};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
 /// A step-execution request.
@@ -67,6 +69,21 @@ impl Drop for RuntimeThread {
     }
 }
 
+/// Without the `pjrt` cargo feature (which binds the `xla` crate), the
+/// runtime thread drains requests with a clear error: tests and examples
+/// that need artifacts skip themselves, and the calibrated simulator
+/// covers everything else.
+#[cfg(not(feature = "pjrt"))]
+fn runtime_main(_manifest: Manifest, rx: mpsc::Receiver<ExecRequest>) {
+    log::warn!("built without the `pjrt` feature; live artifact execution unavailable");
+    for req in rx {
+        let _ = req
+            .reply
+            .send(Err("built without the `pjrt` cargo feature".into()));
+    }
+}
+
+#[cfg(feature = "pjrt")]
 fn runtime_main(manifest: Manifest, rx: mpsc::Receiver<ExecRequest>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
@@ -92,6 +109,7 @@ fn runtime_main(manifest: Manifest, rx: mpsc::Receiver<ExecRequest>) {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn serve_one(
     client: &xla::PjRtClient,
     cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,

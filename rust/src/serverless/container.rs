@@ -28,6 +28,12 @@ pub struct FunctionConfig {
     pub package_mb: f64,
     /// Hard cap on concurrent containers (paper observed at most 30).
     pub max_concurrency: usize,
+    /// Per-core speed of the hosting silicon vs a dedicated HPC core.
+    /// Cloud Lambda: [`LAMBDA_CPU_EFFICIENCY`]; edge devices lower still.
+    pub cpu_efficiency: f64,
+    /// Saturated-fleet policy: cloud Lambda throttles the caller (error);
+    /// a fixed edge box queues the invocation on the first free container.
+    pub queue_when_saturated: bool,
 }
 
 impl Default for FunctionConfig {
@@ -37,6 +43,8 @@ impl Default for FunctionConfig {
             timeout_s: MAX_WALLTIME_S,
             package_mb: 50.0,
             max_concurrency: 30,
+            cpu_efficiency: LAMBDA_CPU_EFFICIENCY,
+            queue_when_saturated: false,
         }
     }
 }
@@ -57,6 +65,9 @@ impl FunctionConfig {
         }
         if self.max_concurrency == 0 {
             return Err("max_concurrency must be > 0".into());
+        }
+        if self.cpu_efficiency <= 0.0 {
+            return Err("cpu_efficiency must be > 0".into());
         }
         Ok(())
     }

@@ -34,6 +34,9 @@ pub enum InvokeError {
 #[derive(Debug, Clone)]
 pub struct InvocationReport {
     pub container_id: u64,
+    /// Time spent waiting for a container to free up (only nonzero on
+    /// fleets configured with `queue_when_saturated`, e.g. edge boxes).
+    pub queue_wait: f64,
     pub cold_start: f64,
     pub io_get: f64,
     pub compute: f64,
@@ -106,13 +109,25 @@ impl LambdaFleet {
         self.containers.lock().unwrap().len()
     }
 
-    /// Acquire a container at time `now`: reuse a warm idle one, or create
-    /// a new one if under the concurrency cap.  Returns (container id,
-    /// cold-start seconds, was_cold).
-    fn acquire(&self, now: f64) -> Result<(u64, f64, bool), InvokeError> {
+    /// Book a container for `work` modeled seconds of (cold-start-free)
+    /// function runtime starting at `now`: reuse a warm idle one, create a
+    /// new one under the concurrency cap, and at the cap either throttle
+    /// (cloud) or queue on the first container to free up (edge).
+    ///
+    /// The busy window is settled here, atomically under the pool lock —
+    /// the caller has already computed `work`, so a booking never exists
+    /// in a half-open state.  Concurrent invokes (threaded live driver)
+    /// therefore serialize exactly like the single-threaded DES: a second
+    /// queuer sees the first queuer's extended window and waits behind it,
+    /// keeping modeled concurrency capped at `max_concurrency`.
+    ///
+    /// Returns (container id, queue-wait s, cold-start s, was_cold).
+    fn book(&self, now: f64, work: f64) -> Result<(u64, f64, f64, bool), InvokeError> {
         let mut pool = self.containers.lock().unwrap();
         // expire stale sandboxes
         pool.retain(|c| c.busy_until > now || c.is_warm(now, self.keep_alive_s));
+        // the busy window never exceeds the walltime (Lambda kills the run)
+        let occupy = |cold: f64| (cold + work).min(self.config.timeout_s);
         // a warm, idle container?
         if let Some(c) = pool
             .iter_mut()
@@ -120,10 +135,25 @@ impl LambdaFleet {
             .min_by(|a, b| b.last_used.partial_cmp(&a.last_used).unwrap())
         {
             c.invocations += 1;
-            return Ok((c.id, 0.0, false));
+            c.busy_until = now + occupy(0.0);
+            c.last_used = c.busy_until;
+            return Ok((c.id, 0.0, 0.0, false));
         }
         if pool.len() >= self.config.max_concurrency {
-            return Err(InvokeError::ConcurrencyLimit(self.config.max_concurrency));
+            if !self.config.queue_when_saturated {
+                return Err(InvokeError::ConcurrencyLimit(self.config.max_concurrency));
+            }
+            // every remaining container is busy (idle+warm ones were caught
+            // above, stale ones expired): queue on the earliest to free up
+            let c = pool
+                .iter_mut()
+                .min_by(|a, b| a.busy_until.partial_cmp(&b.busy_until).unwrap())
+                .expect("max_concurrency > 0");
+            let wait = (c.busy_until - now).max(0.0);
+            c.invocations += 1;
+            c.busy_until = (now + wait) + occupy(0.0);
+            c.last_used = c.busy_until;
+            return Ok((c.id, wait, 0.0, false));
         }
         let id = self.next_container_id.fetch_add(1, Ordering::Relaxed);
         let cold = {
@@ -132,22 +162,12 @@ impl LambdaFleet {
         };
         pool.push(Container {
             id,
-            busy_until: now, // caller marks busy via finish()
-            last_used: now,
+            busy_until: now + occupy(cold),
+            last_used: now + occupy(cold),
             invocations: 1,
         });
         self.cold_starts.fetch_add(1, Ordering::Relaxed);
-        Ok((id, cold, true))
-    }
-
-    /// Mark a container's work interval (so later acquires see it busy
-    /// until `until` in simulated time).
-    fn finish(&self, id: u64, until: f64) {
-        let mut pool = self.containers.lock().unwrap();
-        if let Some(c) = pool.iter_mut().find(|c| c.id == id) {
-            c.busy_until = until;
-            c.last_used = until;
-        }
+        Ok((id, 0.0, cold, true))
     }
 
     /// Invoke the function on one message's points.
@@ -162,10 +182,9 @@ impl LambdaFleet {
         model_key: &str,
         centroids: usize,
     ) -> Result<InvocationReport, InvokeError> {
-        let now = self.clock.now();
-        let (container_id, cold_start, was_cold) = self.acquire(now)?;
-        self.invocations.fetch_add(1, Ordering::Relaxed);
-
+        // model the function's own work first — it does not depend on
+        // container placement — so book() can settle the busy window in
+        // one atomic step
         if !self.store.contains(model_key) {
             let init = crate::store::ModelState::new_random(centroids, dim, 42);
             let _ = self.store.put(model_key, init);
@@ -178,20 +197,25 @@ impl LambdaFleet {
             let mut rng = self.rng.lock().unwrap();
             rng.normal_with(1.0, self.config.jitter_cv()).max(0.3)
         };
-        let compute = step.cpu_seconds
-            / (self.config.cpu_factor() * super::container::LAMBDA_CPU_EFFICIENCY)
-            * noise;
+        let compute =
+            step.cpu_seconds / (self.config.cpu_factor() * self.config.cpu_efficiency) * noise;
 
         let (_, io_put) = self.store.put(model_key, step.model)?;
+        let work = io_get.seconds + compute + io_put.seconds;
 
-        let duration = cold_start + io_get.seconds + compute + io_put.seconds;
+        let now = self.clock.now();
+        let (container_id, queue_wait, cold_start, was_cold) = self.book(now, work)?;
+        self.invocations.fetch_add(1, Ordering::Relaxed);
+
+        // the function's own runtime; queueing happens before it starts and
+        // is neither billed nor counted against the walltime
+        let duration = cold_start + work;
         if duration > self.config.timeout_s {
-            self.finish(container_id, now + self.config.timeout_s);
             return Err(InvokeError::TimedOut(self.config.timeout_s));
         }
-        self.finish(container_id, now + duration);
         Ok(InvocationReport {
             container_id,
+            queue_wait,
             cold_start,
             io_get: io_get.seconds,
             compute,
@@ -297,6 +321,69 @@ mod tests {
         f.invoke(&pts(), 8, "m", 16).unwrap();
         let err = f.invoke(&pts(), 8, "m", 16).unwrap_err();
         assert!(matches!(err, InvokeError::ConcurrencyLimit(2)));
+    }
+
+    #[test]
+    fn saturated_fleet_queues_when_configured() {
+        // the edge policy: a full device queues invocations instead of
+        // throttling the caller, charging the wait to the report
+        let clock = Arc::new(SimClock::new());
+        let mut eng = CalibratedEngine::new(1);
+        eng.insert((100, 16), Dist::Const(0.1));
+        let cfg = FunctionConfig {
+            max_concurrency: 2,
+            queue_when_saturated: true,
+            ..Default::default()
+        };
+        let f = LambdaFleet::new(
+            cfg,
+            Arc::new(eng),
+            Arc::new(ObjectStore::default()),
+            clock as SharedClock,
+            3,
+        )
+        .unwrap();
+        let r1 = f.invoke(&pts(), 8, "m", 16).unwrap();
+        let r2 = f.invoke(&pts(), 8, "m", 16).unwrap();
+        assert_eq!(r1.queue_wait, 0.0);
+        assert_eq!(r2.queue_wait, 0.0);
+        let r3 = f.invoke(&pts(), 8, "m", 16).unwrap();
+        assert!(
+            r3.queue_wait > 0.0,
+            "third concurrent invocation must wait for a container"
+        );
+        assert!(!r3.was_cold);
+        assert_eq!(f.container_count(), 2, "no container beyond the cap");
+    }
+
+    #[test]
+    fn cpu_efficiency_scales_compute() {
+        let run = |eff: f64| {
+            let clock = Arc::new(SimClock::new());
+            let mut eng = CalibratedEngine::new(5);
+            eng.insert((100, 16), Dist::Const(0.1));
+            let cfg = FunctionConfig {
+                cpu_efficiency: eff,
+                ..Default::default()
+            };
+            let f = LambdaFleet::new(
+                cfg,
+                Arc::new(eng),
+                Arc::new(ObjectStore::default()),
+                clock as SharedClock,
+                11,
+            )
+            .unwrap();
+            f.invoke(&pts(), 8, "m", 16).unwrap().compute
+        };
+        let cloud = run(super::super::container::LAMBDA_CPU_EFFICIENCY);
+        let edge = run(crate::serverless::edge::EDGE_CPU_EFFICIENCY);
+        // identical seed and jitter stream: the ratio is exactly the
+        // efficiency ratio
+        assert!(
+            edge > cloud * 1.3,
+            "edge silicon must run slower: cloud {cloud} edge {edge}"
+        );
     }
 
     #[test]

@@ -1,0 +1,115 @@
+//! Plugin conformance: every plugin in the registry — current and future —
+//! must serve the *identical* Pilot-API workflow (the paper's
+//! interoperability claim).  The test iterates the registry rather than a
+//! hard-coded platform list, so registering a new plugin automatically
+//! extends the conformance surface; the edge plugin (paper §V) is asserted
+//! present explicitly.
+
+use pilot_streaming::broker::Message;
+use pilot_streaming::engine::CalibratedEngine;
+use pilot_streaming::pilot::{
+    default_registry, CuState, PilotComputeService, PilotDescription, PilotError, PilotState,
+    Platform, TaskSpec,
+};
+use pilot_streaming::sim::WallClock;
+use std::sync::Arc;
+
+fn service() -> PilotComputeService {
+    PilotComputeService::new(
+        Arc::new(WallClock::new()),
+        Arc::new(CalibratedEngine::new(7)),
+    )
+}
+
+/// A description valid on every registered platform: parallelism within
+/// every capacity bound, memory within the edge device envelope.
+fn universal(platform: Platform) -> PilotDescription {
+    PilotDescription::new(platform)
+        .with_parallelism(2)
+        .with_memory_mb(1024)
+}
+
+#[test]
+fn every_registered_plugin_serves_the_same_workflow() {
+    let registry = default_registry();
+    let platforms = registry.platforms();
+    assert!(
+        platforms.contains(&Platform::EDGE),
+        "the edge plugin must be registered"
+    );
+    assert!(platforms.len() >= 6, "builtin platform set shrank");
+
+    let svc = service();
+    for platform in platforms {
+        let plugin = registry.get(platform).expect("listed platform resolves");
+
+        // identical submission path on every platform
+        let job = svc
+            .submit_pilot(universal(platform))
+            .unwrap_or_else(|e| panic!("{platform}: submit_pilot failed: {e}"));
+        assert_eq!(job.state(), PilotState::Running, "{platform}");
+        assert_eq!(job.platform(), platform);
+
+        // broker plugins hand out a working broker
+        if plugin.provisions_broker() {
+            let broker = job
+                .broker()
+                .unwrap_or_else(|| panic!("{platform}: advertised a broker, exposed none"));
+            assert_eq!(broker.num_partitions(), 2, "{platform}");
+            broker
+                .put(Message::new(1, 0, Arc::new(vec![0.0; 16]), 8, 0.0))
+                .unwrap_or_else(|e| panic!("{platform}: broker put failed: {e}"));
+        }
+
+        // compute plugins run the identical submit -> compute-unit -> wait
+        // workflow; pure brokers fail it cleanly
+        if plugin.accepts_compute() {
+            let cu = job
+                .submit_compute_unit(TaskSpec::KMeansStep {
+                    points: Arc::new(vec![0.1; 160]),
+                    dim: 8,
+                    model_key: format!("conformance-{}", platform.name()),
+                    centroids: 8,
+                })
+                .unwrap_or_else(|e| panic!("{platform}: submit failed: {e}"));
+            assert_eq!(cu.wait(), CuState::Done, "{platform}");
+            let outcome = cu.outcome().expect("outcome present");
+            assert!(outcome.compute_seconds > 0.0, "{platform}");
+            assert_eq!(job.completed(), 1, "{platform}");
+        } else {
+            assert!(
+                matches!(
+                    job.submit_compute_unit(TaskSpec::Sleep(0.0)),
+                    Err(PilotError::NoCompute(_))
+                ),
+                "{platform}: pure broker must reject compute units"
+            );
+        }
+
+        job.finish();
+        assert_eq!(job.state(), PilotState::Done, "{platform}");
+    }
+}
+
+#[test]
+fn processing_plugins_expose_stream_processors() {
+    // the mini-app contract: every compute-capable pilot can pump messages
+    let registry = default_registry();
+    let svc = service();
+    let pts = vec![0.2f32; 100 * 8];
+    for platform in registry.platforms() {
+        let plugin = registry.get(platform).unwrap();
+        if !plugin.accepts_compute() || platform == Platform::LOCAL {
+            continue; // local pilots run bags-of-tasks, not message streams
+        }
+        let job = svc.submit_pilot(universal(platform)).unwrap();
+        let processor = job
+            .processor()
+            .unwrap_or_else(|| panic!("{platform}: no stream processor"));
+        let cost = processor
+            .process(0, &pts, 8, "proc-conformance", 16)
+            .unwrap_or_else(|e| panic!("{platform}: process failed: {e}"));
+        assert!(cost.total() > 0.0, "{platform}");
+        job.cancel();
+    }
+}
