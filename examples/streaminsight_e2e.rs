@@ -16,7 +16,9 @@
 //!
 //! Run: `make artifacts && cargo run --release --example streaminsight_e2e`
 
-use pilot_streaming::insight::{analyze, table, ExperimentSpec, Predictor};
+use pilot_streaming::insight::{
+    analyze, table, ExperimentSpec, Predictor, AXIS_MESSAGE_SIZE, AXIS_PARTITIONS,
+};
 use pilot_streaming::miniapp::{run_live, PlatformKind, Scenario};
 use pilot_streaming::runtime::{calibrate, Manifest, PjrtEngine};
 use pilot_streaming::usl::rmse_vs_train_size;
@@ -77,8 +79,8 @@ fn main() {
     // ---- 3. characterize: both platforms, partitions sweep (sim time) ----
     println!("\n[3/4] characterization sweep (simulated time, calibrated engine)...");
     let mut spec = ExperimentSpec::paper_grid(64, 42);
-    spec.message_sizes = vec![16_000];
-    spec.partitions = vec![1, 2, 4, 8, 16];
+    spec.set_ints(AXIS_MESSAGE_SIZE, [16_000]);
+    spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8, 16]);
     let factory = pilot_streaming::insight::figures::engine_factory(rows.clone());
     let sweep = pilot_streaming::insight::run_sweep(&spec, factory);
     let analysis = analyze(&sweep);
@@ -88,11 +90,11 @@ fn main() {
     println!("[4/4] USL verdict:");
     let lam: Vec<_> = analysis
         .iter()
-        .filter(|a| a.platform == PlatformKind::Lambda)
+        .filter(|a| a.platform() == Some(PlatformKind::Lambda))
         .collect();
     let dask: Vec<_> = analysis
         .iter()
-        .filter(|a| a.platform == PlatformKind::DaskWrangler)
+        .filter(|a| a.platform() == Some(PlatformKind::DaskWrangler))
         .collect();
     let lam_sigma = mean(&lam.iter().map(|a| a.fit.params.sigma).collect::<Vec<_>>());
     let dask_sigma = mean(&dask.iter().map(|a| a.fit.params.sigma).collect::<Vec<_>>());
@@ -109,20 +111,13 @@ fn main() {
 
     // prediction quality on held-out configurations (Fig 7's question)
     if let Some(first_dask) = dask.first() {
-        let obs = pilot_streaming::insight::group_observations(
-            &sweep,
-            (
-                first_dask.platform,
-                first_dask.message_size,
-                first_dask.centroids,
-                first_dask.memory_mb,
-            ),
-        );
+        // an AnalysisRow's key is the group key — query the sweep directly
+        let obs = pilot_streaming::insight::group_observations(&sweep, &first_dask.key);
         if let Ok(eval) = rmse_vs_train_size(&obs, &[3], 20, 42) {
             let mean_t = mean(&obs.iter().map(|o| o.t).collect::<Vec<_>>());
             println!(
                 "   3-config prediction RMSE (dask, WC={}): {:.1}% of mean throughput",
-                first_dask.centroids,
+                first_dask.axis_int("centroids").unwrap_or(0),
                 eval[0].rmse_mean / mean_t * 100.0
             );
         }

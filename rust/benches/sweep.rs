@@ -1,0 +1,76 @@
+//! Campaign-engine wall-clock benchmark: the paper grid swept
+//! sequentially vs across all cores, with the determinism contract
+//! asserted on the way (`jobs = N` CSV must equal `jobs = 1`).
+//!
+//! Emits `BENCH_sweep.json` (override the path with `PS_BENCH_SWEEP_OUT`).
+//! Determinism is always asserted; the ≥2x-speedup-on-≥4-cores bar exits
+//! nonzero only under `PS_BENCH_STRICT=1` — wall-clock ratios on shared
+//! CI runners are too noisy to gate every push on.
+//! Run: `cargo bench --bench sweep`.
+
+#[path = "common.rs"]
+#[allow(dead_code)]
+mod common;
+
+use pilot_streaming::insight::figures::{default_calibration, engine_factory};
+use pilot_streaming::insight::{run_sweep_jobs, to_csv, ExperimentSpec};
+use pilot_streaming::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let messages = common::bench_messages();
+    let spec = ExperimentSpec::paper_grid(messages, 42);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let factory = engine_factory(default_calibration());
+    eprintln!(
+        "[bench] sweep: {} configs x {} messages, {} core(s)",
+        spec.size(),
+        messages,
+        cores
+    );
+
+    let t0 = Instant::now();
+    let seq = run_sweep_jobs(&spec, &factory, 1, |_| {});
+    let seq_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let par = run_sweep_jobs(&spec, &factory, cores, |_| {});
+    let par_s = t1.elapsed().as_secs_f64();
+
+    assert_eq!(seq.len(), spec.size(), "sequential sweep dropped configs");
+    assert_eq!(
+        to_csv(&seq),
+        to_csv(&par),
+        "parallel sweep must be byte-identical to sequential"
+    );
+    let speedup = seq_s / par_s.max(1e-9);
+    println!(
+        "sequential {seq_s:.2}s | parallel({cores}) {par_s:.2}s | speedup {speedup:.2}x | deterministic: yes"
+    );
+
+    let out =
+        std::env::var("PS_BENCH_SWEEP_OUT").unwrap_or_else(|_| "BENCH_sweep.json".to_string());
+    let json = Json::obj(vec![
+        ("grid", Json::from("paper")),
+        ("configs", Json::from(spec.size())),
+        ("messages_per_config", Json::from(messages)),
+        ("cores", Json::from(cores)),
+        ("jobs", Json::from(cores)),
+        ("sequential_seconds", Json::from(seq_s)),
+        ("parallel_seconds", Json::from(par_s)),
+        ("speedup", Json::from(speedup)),
+        ("deterministic", Json::from(true)),
+    ]);
+    std::fs::write(&out, json.pretty()).expect("write sweep bench report");
+    println!("wrote {out}");
+
+    let strict = std::env::var("PS_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
+    if cores >= 4 && speedup < 2.0 {
+        eprintln!("[bench] sweep: speedup {speedup:.2}x below the 2x bar on {cores} cores");
+        if strict {
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,44 +1,73 @@
 //! Analysis: fit USL per sweep group and build the Fig 6-style report
 //! (σ, κ, λ, R², peak N per scenario).
+//!
+//! Groups are identified by [`GroupKey`] — derived from the spec's axes —
+//! so new sweep dimensions flow through fitting, tables, and JSON export
+//! without any changes here.  [`IncrementalAnalysis`] produces the same
+//! fits *while* a parallel sweep is still running: feed it rows as they
+//! complete and each group's fit pops out the moment its last scale level
+//! lands.
 
-use super::sweep::{group_keys, group_observations, SweepRow};
+use super::experiment::ExperimentSpec;
+use super::sweep::{group_keys, group_observations, GroupKey, SweepRow};
 use crate::miniapp::PlatformKind;
-use crate::usl::{fit, UslFit};
+use crate::usl::{fit, Obs, UslFit};
 use crate::util::json::Json;
 
 /// One analyzed scenario group.
 #[derive(Debug, Clone)]
 pub struct AnalysisRow {
-    pub platform: PlatformKind,
-    pub message_size: usize,
-    pub centroids: usize,
-    pub memory_mb: u32,
+    pub key: GroupKey,
     pub fit: UslFit,
     pub observations: usize,
 }
 
 impl AnalysisRow {
+    pub fn platform(&self) -> Option<PlatformKind> {
+        self.key.platform()
+    }
+
+    /// This group's level on a named axis.
+    pub fn axis_int(&self, name: &str) -> Option<u64> {
+        self.key.int(name)
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("platform", Json::from(self.platform.label())),
-            ("message_size", Json::from(self.message_size)),
-            ("centroids", Json::from(self.centroids)),
-            ("memory_mb", Json::from(self.memory_mb as usize)),
-            ("sigma", Json::from(self.fit.params.sigma)),
-            ("kappa", Json::from(self.fit.params.kappa)),
-            ("lambda", Json::from(self.fit.params.lambda)),
-            ("r2", Json::from(self.fit.r2)),
-            ("rmse", Json::from(self.fit.rmse)),
-            (
-                "peak_n",
-                self.fit
-                    .params
-                    .peak_n()
-                    .map(Json::from)
-                    .unwrap_or(Json::Null),
-            ),
-            ("regime", Json::from(self.fit.params.regime())),
-        ])
+        let mut pairs: Vec<(&str, Json)> = self
+            .key
+            .pairs()
+            .iter()
+            .map(|(n, v)| (n.as_str(), v.to_json()))
+            .collect();
+        pairs.push(("sigma", Json::from(self.fit.params.sigma)));
+        pairs.push(("kappa", Json::from(self.fit.params.kappa)));
+        pairs.push(("lambda", Json::from(self.fit.params.lambda)));
+        pairs.push(("r2", Json::from(self.fit.r2)));
+        pairs.push(("rmse", Json::from(self.fit.rmse)));
+        pairs.push((
+            "peak_n",
+            self.fit
+                .params
+                .peak_n()
+                .map(Json::from)
+                .unwrap_or(Json::Null),
+        ));
+        pairs.push(("regime", Json::from(self.fit.params.regime())));
+        Json::obj(pairs)
+    }
+}
+
+fn fit_group(key: GroupKey, obs: &[Obs]) -> Option<AnalysisRow> {
+    match fit(obs) {
+        Ok(f) => Some(AnalysisRow {
+            key,
+            fit: f,
+            observations: obs.len(),
+        }),
+        Err(e) => {
+            log::warn!("USL fit failed for {}: {e}", key.label());
+            None
+        }
     }
 }
 
@@ -46,17 +75,9 @@ impl AnalysisRow {
 pub fn analyze(rows: &[SweepRow]) -> Vec<AnalysisRow> {
     let mut out = Vec::new();
     for key in group_keys(rows) {
-        let obs = group_observations(rows, key);
-        match fit(&obs) {
-            Ok(f) => out.push(AnalysisRow {
-                platform: key.0,
-                message_size: key.1,
-                centroids: key.2,
-                memory_mb: key.3,
-                fit: f,
-                observations: obs.len(),
-            }),
-            Err(e) => log::warn!("USL fit failed for {key:?}: {e}"),
+        let obs = group_observations(rows, &key);
+        if let Some(row) = fit_group(key, &obs) {
+            out.push(row);
         }
     }
     out
@@ -66,17 +87,15 @@ pub fn analyze(rows: &[SweepRow]) -> Vec<AnalysisRow> {
 pub fn table(rows: &[AnalysisRow]) -> String {
     let mut s = String::new();
     s.push_str(&format!(
-        "{:<22} {:>7} {:>6} {:>8} {:>8} {:>9} {:>6} {:>7}  {}\n",
-        "platform", "MS", "WC", "sigma", "kappa", "lambda", "R2", "peakN", "regime"
+        "{:<56} {:>8} {:>8} {:>9} {:>6} {:>7}  {}\n",
+        "group", "sigma", "kappa", "lambda", "R2", "peakN", "regime"
     ));
-    s.push_str(&"-".repeat(100));
+    s.push_str(&"-".repeat(108));
     s.push('\n');
     for r in rows {
         s.push_str(&format!(
-            "{:<22} {:>7} {:>6} {:>8.4} {:>8.5} {:>9.2} {:>6.3} {:>7}  {}\n",
-            r.platform.label(),
-            r.message_size,
-            r.centroids,
+            "{:<56} {:>8.4} {:>8.5} {:>9.2} {:>6.3} {:>7}  {}\n",
+            r.key.label(),
             r.fit.params.sigma,
             r.fit.params.kappa,
             r.fit.params.lambda,
@@ -92,20 +111,56 @@ pub fn table(rows: &[AnalysisRow]) -> String {
     s
 }
 
+/// Streaming USL fitting for in-flight sweeps: rows arrive in completion
+/// order (any worker, any order); a group's fit is returned the moment
+/// all of its scale levels have been observed.
+pub struct IncrementalAnalysis {
+    expected: usize,
+    partial: Vec<(GroupKey, Vec<Obs>)>,
+}
+
+impl IncrementalAnalysis {
+    pub fn new(spec: &ExperimentSpec) -> Self {
+        Self {
+            expected: spec.scale_levels().max(1),
+            partial: Vec::new(),
+        }
+    }
+
+    /// Feed one completed row; returns the group's fit when this row was
+    /// its final observation.
+    pub fn observe(&mut self, row: &SweepRow) -> Option<AnalysisRow> {
+        let idx = match self.partial.iter().position(|(k, _)| *k == row.key) {
+            Some(i) => i,
+            None => {
+                self.partial.push((row.key.clone(), Vec::new()));
+                self.partial.len() - 1
+            }
+        };
+        let entry = &mut self.partial[idx].1;
+        entry.push(Obs::new(row.scale as f64, row.throughput));
+        if entry.len() == self.expected {
+            let mut obs = entry.clone();
+            obs.sort_by(|a, b| a.n.partial_cmp(&b.n).unwrap());
+            return fit_group(row.key.clone(), &obs);
+        }
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::insight::sweep::paper_key;
     use crate::usl::UslParams;
 
     fn synth_rows(platform: PlatformKind, params: UslParams) -> Vec<SweepRow> {
         [1, 2, 4, 8, 16]
             .iter()
             .map(|&p| SweepRow {
-                platform,
-                partitions: p,
-                message_size: 16_000,
-                centroids: 1_024,
-                memory_mb: 3_008,
+                key: paper_key(platform, 16_000, 1_024, 3_008),
+                scale_axis: "partitions".to_string(),
+                scale: p,
                 throughput: params.throughput(p as f64),
                 service_mean: 0.1,
                 service_p95: 0.12,
@@ -144,6 +199,27 @@ mod tests {
         let rows = synth_rows(PlatformKind::Lambda, UslParams::new(0.1, 0.001, 5.0));
         let j = analyze(&rows)[0].to_json();
         assert!(j.get("sigma").as_f64().unwrap() > 0.0);
+        // axis pairs are exported generically, one field per axis
         assert_eq!(j.get("platform").as_str(), Some("kinesis/lambda"));
+        assert_eq!(j.get("centroids").as_usize(), Some(1_024));
+        assert_eq!(j.get("memory_mb").as_usize(), Some(3_008));
+    }
+
+    #[test]
+    fn incremental_fit_completes_exactly_once_per_group() {
+        let mut spec = ExperimentSpec::paper_grid(8, 3);
+        spec.set_ints("partitions", [1, 2, 4, 8, 16]);
+        let mut inc = IncrementalAnalysis::new(&spec);
+        let rows = synth_rows(PlatformKind::DaskWrangler, UslParams::new(0.6, 0.03, 9.0));
+        // out-of-completion-order arrival, as a parallel sweep produces
+        let mut fits = Vec::new();
+        for r in rows.iter().rev() {
+            if let Some(a) = inc.observe(r) {
+                fits.push(a);
+            }
+        }
+        assert_eq!(fits.len(), 1, "one fit, on the group's final row");
+        assert!((fits[0].fit.params.sigma - 0.6).abs() < 0.05);
+        assert_eq!(fits[0].observations, 5);
     }
 }

@@ -14,9 +14,16 @@
 //! [lustre]
 //! alpha = 0.9
 //! beta = 0.05
+//!
+//! # extension axes compose declaratively, too: each entry becomes a
+//! # custom sweep dimension bound into Scenario::extra by name
+//! [axes]
+//! edge_sites = [1, 2, 4]
 //! ```
 
-use super::experiment::ExperimentSpec;
+use super::experiment::{
+    Axis, ExperimentSpec, AXIS_CENTROIDS, AXIS_MEMORY_MB, AXIS_MESSAGE_SIZE, AXIS_PARTITIONS,
+};
 use crate::miniapp::PlatformKind;
 use crate::sim::ContentionParams;
 use crate::util::json::Json;
@@ -48,7 +55,7 @@ fn usize_list(v: &Json, key: &str) -> Result<Option<Vec<usize>>, ConfigError> {
 }
 
 /// Parse an ExperimentSpec from TOML text. Unspecified fields keep the
-/// paper-grid defaults.
+/// paper-grid defaults; `[axes]` entries append custom sweep dimensions.
 pub fn spec_from_toml(text: &str) -> Result<ExperimentSpec, ConfigError> {
     let v = tomlmini::parse(text)?;
     let mut spec = ExperimentSpec::paper_grid(64, 42);
@@ -69,19 +76,18 @@ pub fn spec_from_toml(text: &str) -> Result<ExperimentSpec, ConfigError> {
         if parsed.is_empty() {
             return Err(ConfigError::Invalid("platforms: empty".into()));
         }
-        spec.platforms = parsed;
+        spec.set_platforms(&parsed);
     }
-    if let Some(xs) = usize_list(&v, "partitions")? {
-        spec.partitions = xs;
-    }
-    if let Some(xs) = usize_list(&v, "message_sizes")? {
-        spec.message_sizes = xs;
-    }
-    if let Some(xs) = usize_list(&v, "centroids")? {
-        spec.centroids = xs;
-    }
-    if let Some(xs) = usize_list(&v, "memory_mb")? {
-        spec.memory_mb = xs.into_iter().map(|x| x as u32).collect();
+    // plural TOML keys map onto the canonical singular axis names
+    for (key, axis) in [
+        ("partitions", AXIS_PARTITIONS),
+        ("message_sizes", AXIS_MESSAGE_SIZE),
+        ("centroids", AXIS_CENTROIDS),
+        ("memory_mb", AXIS_MEMORY_MB),
+    ] {
+        if let Some(xs) = usize_list(&v, key)? {
+            spec.set_ints(axis, xs.into_iter().map(|x| x as u64));
+        }
     }
     if let Some(m) = v.get("messages").as_usize() {
         spec.messages = m;
@@ -98,10 +104,30 @@ pub fn spec_from_toml(text: &str) -> Result<ExperimentSpec, ConfigError> {
         }
         spec.lustre = ContentionParams::new(alpha, beta);
     }
-    if spec.partitions.is_empty() || spec.messages == 0 {
-        return Err(ConfigError::Invalid(
-            "partitions and messages must be non-empty/non-zero".into(),
-        ));
+    let axes = v.get("axes");
+    if let Some(table) = axes.as_obj() {
+        for name in table.keys() {
+            let xs = usize_list(axes, name)?
+                .ok_or_else(|| ConfigError::Invalid(format!("axes.{name}: expected an array")))?;
+            spec.set_axis(Axis::ints(name.as_str(), xs.into_iter().map(|x| x as u64)));
+        }
+    }
+    if spec.messages == 0 {
+        return Err(ConfigError::Invalid("messages must be non-zero".into()));
+    }
+    for axis in &spec.axes {
+        if axis.levels.is_empty() {
+            return Err(ConfigError::Invalid(format!(
+                "axis {:?}: no levels",
+                axis.name
+            )));
+        }
+    }
+    if spec.axis(&spec.scale_axis).is_none() {
+        return Err(ConfigError::Invalid(format!(
+            "missing scale axis {:?}",
+            spec.scale_axis
+        )));
     }
     Ok(spec)
 }
@@ -136,34 +162,54 @@ beta = 0.1
         )
         .unwrap();
         assert_eq!(spec.name, "custom");
+        let platform_levels = &spec.axis("platform").unwrap().levels;
+        assert_eq!(platform_levels.len(), 2);
         assert_eq!(
-            spec.platforms,
-            vec![PlatformKind::Lambda, PlatformKind::DaskStampede2]
+            platform_levels[1].as_platform(),
+            Some(PlatformKind::DaskStampede2)
         );
-        assert_eq!(spec.partitions, vec![1, 2, 4]);
-        assert_eq!(spec.centroids, vec![128, 1024]);
+        assert_eq!(
+            spec.axis(AXIS_PARTITIONS).unwrap().levels.len(),
+            3
+        );
+        assert_eq!(spec.axis(AXIS_CENTROIDS).unwrap().levels.len(), 2);
         assert_eq!(spec.messages, 32);
         assert_eq!(spec.seed, 7);
         assert!((spec.lustre.alpha - 1.2).abs() < 1e-12);
-        assert_eq!(spec.size(), 2 * 3 * 1 * 2);
+        assert_eq!(spec.size(), 12); // 2 platforms x 1 MS x 2 WC x 1 mem x 3 P
     }
 
     #[test]
     fn edge_platform_parses_in_configs() {
         // the edge scenario axis is reachable declaratively, too
         let spec = spec_from_toml("platforms = [\"edge\", \"lambda\"]\n").unwrap();
-        assert_eq!(
-            spec.platforms,
-            vec![PlatformKind::Edge, PlatformKind::Lambda]
-        );
+        let levels = &spec.axis("platform").unwrap().levels;
+        assert_eq!(levels[0].as_platform(), Some(PlatformKind::Edge));
+        assert_eq!(levels[1].as_platform(), Some(PlatformKind::Lambda));
+    }
+
+    #[test]
+    fn custom_axes_compose_declaratively() {
+        let spec = spec_from_toml(
+            "messages = 8\n\n[axes]\nedge_sites = [1, 2, 4]\n",
+        )
+        .unwrap();
+        let axis = spec.axis("edge_sites").unwrap();
+        assert_eq!(axis.levels.len(), 3);
+        assert_eq!(spec.size(), 90 * 3);
+        assert!(spec
+            .scenarios()
+            .iter()
+            .all(|sc| sc.extra_param("edge_sites").is_some()));
     }
 
     #[test]
     fn defaults_fill_missing_fields() {
         let spec = spec_from_toml("messages = 16\n").unwrap();
         assert_eq!(spec.messages, 16);
-        assert_eq!(spec.platforms.len(), 2); // paper grid default
-        assert_eq!(spec.message_sizes, vec![8_000, 16_000, 26_000]);
+        assert_eq!(spec.axis("platform").unwrap().levels.len(), 2); // paper grid default
+        let ms = spec.axis(AXIS_MESSAGE_SIZE).unwrap();
+        assert_eq!(ms.levels.len(), 3);
     }
 
     #[test]
@@ -172,6 +218,7 @@ beta = 0.1
         assert!(spec_from_toml("partitions = [\"x\"]\n").is_err());
         assert!(spec_from_toml("partitions = []\n").is_err());
         assert!(spec_from_toml("[lustre]\nalpha = -1\n").is_err());
+        assert!(spec_from_toml("[axes]\nedge_sites = []\n").is_err());
     }
 
     #[test]

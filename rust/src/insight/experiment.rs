@@ -1,25 +1,197 @@
-//! Experiment specification: the full factorial parameter space of a
+//! Experiment specification: the combinatorial parameter space of a
 //! characterization campaign (paper: "the combinatorial space of parameters
 //! is ample, and thus, a careful selection of the most significant factors
 //! to investigate is critical").
+//!
+//! The space is described by composable **axes** — a name plus typed
+//! levels — instead of a fixed set of struct fields.  An
+//! [`ExperimentSpec`] is an ordered list of [`Axis`] values that expands
+//! into concrete [`Scenario`]s through one row-major cartesian-product
+//! iterator ([`ScenarioIter`]).  Canonical axis names bind to `Scenario`'s
+//! typed fields; any other name flows into `Scenario::extra`, so a new
+//! sweep dimension (edge site count, micro-batch interval, …) registers
+//! like a pilot plugin did in PR 1: build the axis, add it to the spec,
+//! and the sweep executor, grouping, USL analysis, and CSV export all pick
+//! it up without code changes.
 
 use crate::miniapp::{PlatformKind, Scenario};
 use crate::sim::ContentionParams;
 use crate::util::json::Json;
+use std::fmt;
 
-/// A sweep specification, expanded into concrete [`Scenario`]s.
-#[derive(Debug, Clone)]
+/// Canonical axis names bound to [`Scenario`]'s typed fields.  Any other
+/// axis name becomes an extension parameter (`Scenario::extra`).
+pub const AXIS_PLATFORM: &str = "platform";
+pub const AXIS_MESSAGE_SIZE: &str = "message_size";
+pub const AXIS_CENTROIDS: &str = "centroids";
+pub const AXIS_MEMORY_MB: &str = "memory_mb";
+pub const AXIS_PARTITIONS: &str = "partitions";
+
+/// One typed level of an [`Axis`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AxisValue {
+    Platform(PlatformKind),
+    Int(u64),
+}
+
+impl AxisValue {
+    pub fn as_platform(self) -> Option<PlatformKind> {
+        match self {
+            AxisValue::Platform(p) => Some(p),
+            AxisValue::Int(_) => None,
+        }
+    }
+
+    pub fn as_int(self) -> Option<u64> {
+        match self {
+            AxisValue::Int(n) => Some(n),
+            AxisValue::Platform(_) => None,
+        }
+    }
+
+    pub fn to_json(self) -> Json {
+        match self {
+            AxisValue::Platform(p) => Json::from(p.label()),
+            AxisValue::Int(n) => Json::from(n as usize),
+        }
+    }
+}
+
+impl fmt::Display for AxisValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AxisValue::Platform(p) => write!(f, "{}", p.label()),
+            AxisValue::Int(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+impl From<PlatformKind> for AxisValue {
+    fn from(p: PlatformKind) -> Self {
+        AxisValue::Platform(p)
+    }
+}
+impl From<u64> for AxisValue {
+    fn from(n: u64) -> Self {
+        AxisValue::Int(n)
+    }
+}
+impl From<usize> for AxisValue {
+    fn from(n: usize) -> Self {
+        AxisValue::Int(n as u64)
+    }
+}
+impl From<u32> for AxisValue {
+    fn from(n: u32) -> Self {
+        AxisValue::Int(n as u64)
+    }
+}
+
+/// One sweep dimension: a name plus its typed levels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Axis {
+    pub name: String,
+    pub levels: Vec<AxisValue>,
+}
+
+impl Axis {
+    pub fn new(name: impl Into<String>, levels: Vec<AxisValue>) -> Self {
+        Self {
+            name: name.into(),
+            levels,
+        }
+    }
+
+    /// The platform axis (name [`AXIS_PLATFORM`]).
+    pub fn platforms(levels: &[PlatformKind]) -> Self {
+        Self::new(
+            AXIS_PLATFORM,
+            levels.iter().map(|&p| AxisValue::Platform(p)).collect(),
+        )
+    }
+
+    /// An integer-valued axis (canonical or extension).
+    pub fn ints(name: impl Into<String>, levels: impl IntoIterator<Item = u64>) -> Self {
+        Self::new(name, levels.into_iter().map(AxisValue::Int).collect())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            (
+                "levels",
+                Json::Arr(self.levels.iter().map(|v| v.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let name = v
+            .get("name")
+            .as_str()
+            .ok_or_else(|| "axis: missing name".to_string())?
+            .to_string();
+        let raw = v
+            .get("levels")
+            .as_arr()
+            .ok_or_else(|| format!("axis {name:?}: missing levels"))?;
+        let mut levels = Vec::with_capacity(raw.len());
+        for l in raw {
+            levels.push(match l {
+                Json::Str(s) => AxisValue::Platform(
+                    PlatformKind::parse(s).ok_or_else(|| format!("unknown platform {s:?}"))?,
+                ),
+                other => AxisValue::Int(
+                    other
+                        .as_i64()
+                        .ok_or_else(|| format!("axis {name:?}: non-integer level"))?
+                        as u64,
+                ),
+            });
+        }
+        Ok(Self { name, levels })
+    }
+}
+
+/// Bind one axis level into a scenario.  Canonical names hit the typed
+/// fields; everything else lands in the scenario's extension bag.
+fn bind(sc: &mut Scenario, name: &str, value: AxisValue) {
+    match (name, value) {
+        (AXIS_PLATFORM, AxisValue::Platform(p)) => sc.platform = p,
+        (AXIS_PARTITIONS, AxisValue::Int(n)) => sc.partitions = n as usize,
+        (AXIS_MESSAGE_SIZE, AxisValue::Int(n)) => sc.points_per_message = n as usize,
+        (AXIS_CENTROIDS, AxisValue::Int(n)) => sc.centroids = n as usize,
+        (AXIS_MEMORY_MB, AxisValue::Int(n)) => sc.memory_mb = n as u32,
+        (other, AxisValue::Int(n)) => sc.set_extra(other, n),
+        (other, AxisValue::Platform(_)) => {
+            log::warn!("ignoring platform-typed level on non-platform axis {other:?}")
+        }
+    }
+}
+
+/// Read a scenario's level back for a named axis — the inverse of the
+/// binding [`ScenarioIter`] performs (used to derive sweep group keys).
+pub fn axis_value_of(sc: &Scenario, name: &str) -> Option<AxisValue> {
+    match name {
+        AXIS_PLATFORM => Some(AxisValue::Platform(sc.platform)),
+        AXIS_PARTITIONS => Some(AxisValue::Int(sc.partitions as u64)),
+        AXIS_MESSAGE_SIZE => Some(AxisValue::Int(sc.points_per_message as u64)),
+        AXIS_CENTROIDS => Some(AxisValue::Int(sc.centroids as u64)),
+        AXIS_MEMORY_MB => Some(AxisValue::Int(sc.memory_mb as u64)),
+        other => sc.extra_param(other).map(AxisValue::Int),
+    }
+}
+
+/// A sweep specification: ordered axes expanded into concrete
+/// [`Scenario`]s (last axis varies fastest).
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentSpec {
     pub name: String,
-    pub platforms: Vec<PlatformKind>,
-    /// N^px(p) values to sweep.
-    pub partitions: Vec<usize>,
-    /// MS axis (points per message).
-    pub message_sizes: Vec<usize>,
-    /// WC axis (centroids).
-    pub centroids: Vec<usize>,
-    /// Lambda memory sizes (Fig 3 axis; single value for other figures).
-    pub memory_mb: Vec<u32>,
+    /// Sweep dimensions, outermost first.
+    pub axes: Vec<Axis>,
+    /// The axis the USL treats as parallelism N; one throughput curve is
+    /// fitted per combination of the remaining axes.
+    pub scale_axis: String,
     /// Messages per configuration.
     pub messages: usize,
     pub seed: u64,
@@ -28,23 +200,32 @@ pub struct ExperimentSpec {
 }
 
 impl ExperimentSpec {
+    /// An empty spec (no axes → exactly the base scenario).
+    pub fn new(name: impl Into<String>, messages: usize, seed: u64) -> Self {
+        Self {
+            name: name.into(),
+            axes: Vec::new(),
+            scale_axis: AXIS_PARTITIONS.to_string(),
+            messages,
+            seed,
+            lustre: ContentionParams::ISOLATED,
+        }
+    }
+
     /// The paper's main grid (Figs 4-6): both platforms, partitions 1..16,
     /// all three message sizes, three model sizes.
     pub fn paper_grid(messages: usize, seed: u64) -> Self {
-        Self {
-            name: "paper-grid".into(),
-            platforms: vec![PlatformKind::Lambda, PlatformKind::DaskWrangler],
-            partitions: vec![1, 2, 4, 8, 16],
-            message_sizes: vec![8_000, 16_000, 26_000],
-            centroids: vec![128, 1_024, 8_192],
-            memory_mb: vec![3_008],
-            messages,
-            seed,
-            lustre: ContentionParams::new(
-                crate::pilot::plugins::hpc::DEFAULT_LUSTRE_ALPHA,
-                crate::pilot::plugins::hpc::DEFAULT_LUSTRE_BETA,
-            ),
-        }
+        let mut spec = Self::new("paper-grid", messages, seed);
+        spec.lustre = ContentionParams::new(
+            crate::pilot::plugins::hpc::DEFAULT_LUSTRE_ALPHA,
+            crate::pilot::plugins::hpc::DEFAULT_LUSTRE_BETA,
+        );
+        spec.set_platforms(&[PlatformKind::Lambda, PlatformKind::DaskWrangler]);
+        spec.set_ints(AXIS_MESSAGE_SIZE, [8_000, 16_000, 26_000]);
+        spec.set_ints(AXIS_CENTROIDS, [128, 1_024, 8_192]);
+        spec.set_ints(AXIS_MEMORY_MB, [3_008]);
+        spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8, 16]);
+        spec
     }
 
     /// The edge extension grid (paper §V): cloud Lambda vs Greengrass-class
@@ -52,90 +233,186 @@ impl ExperimentSpec {
     /// device's container capacity so the USL fit captures its saturation.
     /// Memory sits inside the edge envelope so the axis is shared.
     pub fn edge_grid(messages: usize, seed: u64) -> Self {
-        Self {
-            name: "edge-grid".into(),
-            platforms: vec![PlatformKind::Lambda, PlatformKind::Edge],
-            partitions: vec![1, 2, 4, 8, 16],
-            message_sizes: vec![8_000],
-            centroids: vec![128, 1_024],
-            memory_mb: vec![1_024],
-            messages,
-            seed,
-            lustre: ContentionParams::ISOLATED,
-        }
+        let mut spec = Self::new("edge-grid", messages, seed);
+        spec.set_platforms(&[PlatformKind::Lambda, PlatformKind::Edge]);
+        spec.set_ints(AXIS_MESSAGE_SIZE, [8_000]);
+        spec.set_ints(AXIS_CENTROIDS, [128, 1_024]);
+        spec.set_ints(AXIS_MEMORY_MB, [1_024]);
+        spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8, 16]);
+        spec
     }
 
     /// Fig 3's memory sweep: Lambda, 8,000 points, 1,024 centroids.
     pub fn lambda_memory_sweep(messages: usize, seed: u64) -> Self {
-        Self {
-            name: "lambda-memory".into(),
-            platforms: vec![PlatformKind::Lambda],
-            partitions: vec![8],
-            message_sizes: vec![8_000],
-            centroids: vec![1_024],
-            memory_mb: vec![256, 512, 1_024, 1_792, 2_240, 3_008],
-            messages,
-            seed,
-            lustre: ContentionParams::ISOLATED,
+        let mut spec = Self::new("lambda-memory", messages, seed);
+        spec.set_platforms(&[PlatformKind::Lambda]);
+        spec.set_ints(AXIS_MESSAGE_SIZE, [8_000]);
+        spec.set_ints(AXIS_CENTROIDS, [1_024]);
+        spec.set_ints(AXIS_MEMORY_MB, [256, 512, 1_024, 1_792, 2_240, 3_008]);
+        spec.set_ints(AXIS_PARTITIONS, [8]);
+        spec
+    }
+
+    /// A minimal smoke grid (CI, determinism tests): both cloud platforms,
+    /// one light workload point, three partition levels.
+    pub fn tiny_grid(messages: usize, seed: u64) -> Self {
+        let mut spec = Self::new("tiny-grid", messages, seed);
+        spec.lustre = ContentionParams::new(
+            crate::pilot::plugins::hpc::DEFAULT_LUSTRE_ALPHA,
+            crate::pilot::plugins::hpc::DEFAULT_LUSTRE_BETA,
+        );
+        spec.set_platforms(&[PlatformKind::Lambda, PlatformKind::DaskWrangler]);
+        spec.set_ints(AXIS_MESSAGE_SIZE, [256]);
+        spec.set_ints(AXIS_CENTROIDS, [16]);
+        spec.set_ints(AXIS_MEMORY_MB, [3_008]);
+        spec.set_ints(AXIS_PARTITIONS, [1, 2, 4]);
+        spec
+    }
+
+    /// Replace the axis with `axis.name` in place, or append it.
+    pub fn set_axis(&mut self, axis: Axis) {
+        match self.axes.iter_mut().find(|a| a.name == axis.name) {
+            Some(slot) => *slot = axis,
+            None => self.axes.push(axis),
         }
+    }
+
+    /// Builder form of [`set_axis`](Self::set_axis).
+    pub fn with_axis(mut self, axis: Axis) -> Self {
+        self.set_axis(axis);
+        self
+    }
+
+    /// Replace an integer axis's levels (append the axis if new).
+    pub fn set_ints(&mut self, name: &str, levels: impl IntoIterator<Item = u64>) {
+        self.set_axis(Axis::ints(name, levels));
+    }
+
+    /// Replace the platform axis's levels.
+    pub fn set_platforms(&mut self, platforms: &[PlatformKind]) {
+        self.set_axis(Axis::platforms(platforms));
+    }
+
+    pub fn axis(&self, name: &str) -> Option<&Axis> {
+        self.axes.iter().find(|a| a.name == name)
+    }
+
+    /// Number of levels on the scale axis (observations per USL curve).
+    pub fn scale_levels(&self) -> usize {
+        self.axis(&self.scale_axis).map_or(1, |a| a.levels.len())
     }
 
     /// Number of concrete scenarios this spec expands to.
     pub fn size(&self) -> usize {
-        self.platforms.len()
-            * self.partitions.len()
-            * self.message_sizes.len()
-            * self.centroids.len()
-            * self.memory_mb.len()
+        self.axes.iter().map(|a| a.levels.len()).product()
+    }
+
+    fn base_scenario(&self) -> Scenario {
+        Scenario {
+            messages: self.messages,
+            seed: self.seed,
+            lustre: self.lustre,
+            ..Scenario::default()
+        }
+    }
+
+    /// Row-major cartesian-product expansion (deterministic order; the
+    /// last axis varies fastest).
+    pub fn iter(&self) -> ScenarioIter<'_> {
+        ScenarioIter {
+            spec: self,
+            odometer: vec![0; self.axes.len()],
+            exhausted: self.axes.iter().any(|a| a.levels.is_empty()),
+        }
     }
 
     /// Expand to concrete scenarios (deterministic order).
     pub fn scenarios(&self) -> Vec<Scenario> {
-        let mut out = Vec::with_capacity(self.size());
-        for &platform in &self.platforms {
-            for &ms in &self.message_sizes {
-                for &wc in &self.centroids {
-                    for &mem in &self.memory_mb {
-                        for &p in &self.partitions {
-                            out.push(Scenario {
-                                platform,
-                                partitions: p,
-                                points_per_message: ms,
-                                centroids: wc,
-                                memory_mb: mem,
-                                messages: self.messages,
-                                lustre: self.lustre,
-                                seed: self.seed,
-                            });
-                        }
-                    }
-                }
-            }
-        }
-        out
+        self.iter().collect()
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::from(self.name.as_str())),
             (
-                "platforms",
-                Json::Arr(
-                    self.platforms
-                        .iter()
-                        .map(|p| Json::from(p.label()))
-                        .collect(),
-                ),
+                "axes",
+                Json::Arr(self.axes.iter().map(Axis::to_json).collect()),
             ),
-            (
-                "partitions",
-                Json::from(self.partitions.clone()),
-            ),
-            ("message_sizes", Json::from(self.message_sizes.clone())),
-            ("centroids", Json::from(self.centroids.clone())),
+            ("scale_axis", Json::from(self.scale_axis.as_str())),
             ("messages", Json::from(self.messages)),
+            ("seed", Json::from(self.seed as i64)),
+            (
+                "lustre",
+                Json::obj(vec![
+                    ("alpha", Json::from(self.lustre.alpha)),
+                    ("beta", Json::from(self.lustre.beta)),
+                ]),
+            ),
             ("size", Json::from(self.size())),
         ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let mut spec = ExperimentSpec::new(
+            v.get("name").as_str().unwrap_or("spec"),
+            v.get("messages")
+                .as_usize()
+                .ok_or_else(|| "messages: expected integer".to_string())?,
+            v.get("seed")
+                .as_i64()
+                .ok_or_else(|| "seed: expected integer".to_string())? as u64,
+        );
+        if let Some(s) = v.get("scale_axis").as_str() {
+            spec.scale_axis = s.to_string();
+        }
+        let axes = v
+            .get("axes")
+            .as_arr()
+            .ok_or_else(|| "axes: expected array".to_string())?;
+        for a in axes {
+            let axis = Axis::from_json(a)?;
+            spec.axes.push(axis);
+        }
+        let lustre = v.get("lustre");
+        if lustre.as_obj().is_some() {
+            spec.lustre = ContentionParams::new(
+                lustre.get("alpha").as_f64().unwrap_or(0.0),
+                lustre.get("beta").as_f64().unwrap_or(0.0),
+            );
+        }
+        Ok(spec)
+    }
+}
+
+/// Iterator over a spec's cartesian product of axis levels.
+pub struct ScenarioIter<'a> {
+    spec: &'a ExperimentSpec,
+    odometer: Vec<usize>,
+    exhausted: bool,
+}
+
+impl Iterator for ScenarioIter<'_> {
+    type Item = Scenario;
+
+    fn next(&mut self) -> Option<Scenario> {
+        if self.exhausted {
+            return None;
+        }
+        let mut sc = self.spec.base_scenario();
+        for (axis, &i) in self.spec.axes.iter().zip(&self.odometer) {
+            bind(&mut sc, &axis.name, axis.levels[i]);
+        }
+        // advance the odometer (last axis fastest)
+        self.exhausted = true;
+        for pos in (0..self.odometer.len()).rev() {
+            self.odometer[pos] += 1;
+            if self.odometer[pos] < self.spec.axes[pos].levels.len() {
+                self.exhausted = false;
+                break;
+            }
+            self.odometer[pos] = 0;
+        }
+        Some(sc)
     }
 }
 
@@ -146,17 +423,25 @@ mod tests {
     #[test]
     fn paper_grid_dimensions() {
         let spec = ExperimentSpec::paper_grid(32, 1);
-        // 2 platforms x 5 partitions x 3 MS x 3 WC x 1 memory = 90
+        // 2 platforms x 3 MS x 3 WC x 1 memory x 5 partitions = 90
         assert_eq!(spec.size(), 90);
-        assert_eq!(spec.scenarios().len(), 90);
+        let scenarios = spec.scenarios();
+        assert_eq!(scenarios.len(), 90);
+        // the scale axis varies fastest (row-major expansion)
+        assert_eq!(scenarios[0].partitions, 1);
+        assert_eq!(scenarios[1].partitions, 2);
+        assert_eq!(scenarios[0].platform, PlatformKind::Lambda);
     }
 
     #[test]
     fn edge_grid_dimensions() {
         let spec = ExperimentSpec::edge_grid(16, 1);
-        // 2 platforms x 5 partitions x 1 MS x 2 WC x 1 memory = 20
+        // 2 platforms x 1 MS x 2 WC x 1 memory x 5 partitions = 20
         assert_eq!(spec.size(), 20);
-        assert!(spec.platforms.contains(&PlatformKind::Edge));
+        let platform_axis = spec.axis(AXIS_PLATFORM).unwrap();
+        assert!(platform_axis
+            .levels
+            .contains(&AxisValue::Platform(PlatformKind::Edge)));
         for s in spec.scenarios() {
             assert!(
                 s.memory_mb <= crate::serverless::edge::EDGE_MAX_MEMORY_MB,
@@ -187,8 +472,64 @@ mod tests {
     }
 
     #[test]
-    fn json_export() {
-        let j = ExperimentSpec::paper_grid(8, 3).to_json();
-        assert_eq!(j.get("size").as_usize(), Some(90));
+    fn set_ints_replaces_in_place() {
+        let mut spec = ExperimentSpec::paper_grid(8, 3);
+        let names: Vec<String> = spec.axes.iter().map(|a| a.name.clone()).collect();
+        spec.set_ints(AXIS_MESSAGE_SIZE, [16_000]);
+        let after: Vec<String> = spec.axes.iter().map(|a| a.name.clone()).collect();
+        assert_eq!(names, after, "axis order preserved");
+        assert_eq!(spec.axis(AXIS_MESSAGE_SIZE).unwrap().levels.len(), 1);
+        assert_eq!(spec.size(), 30);
+    }
+
+    #[test]
+    fn custom_axis_flows_into_scenarios() {
+        let spec = ExperimentSpec::tiny_grid(8, 3).with_axis(Axis::ints("edge_sites", [1, 2]));
+        assert_eq!(spec.size(), 12); // tiny grid (6) x 2 site levels
+        let mut seen = Vec::new();
+        for sc in spec.scenarios() {
+            let sites = sc.extra_param("edge_sites").unwrap();
+            assert_eq!(axis_value_of(&sc, "edge_sites"), Some(AxisValue::Int(sites)));
+            seen.push(sites);
+        }
+        assert!(seen.contains(&1) && seen.contains(&2));
+    }
+
+    #[test]
+    fn empty_axis_expands_to_nothing() {
+        let spec =
+            ExperimentSpec::tiny_grid(8, 3).with_axis(Axis::new("dead", Vec::new()));
+        assert_eq!(spec.size(), 0);
+        assert!(spec.scenarios().is_empty());
+    }
+
+    #[test]
+    fn json_round_trip_preserves_every_field() {
+        let spec = ExperimentSpec::paper_grid(8, 3)
+            .with_axis(Axis::ints("edge_sites", [1, 2, 4]));
+        let j = spec.to_json();
+        assert_eq!(j.get("size").as_usize(), Some(270));
+        // the fields the old export silently dropped
+        assert_eq!(j.get("seed").as_i64(), Some(3));
+        assert!(j.get("lustre").get("alpha").as_f64().unwrap() > 0.0);
+        let memory = spec.axis(AXIS_MEMORY_MB).unwrap();
+        assert_eq!(memory.levels, vec![AxisValue::Int(3_008)]);
+        let back = ExperimentSpec::from_json(&j).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn json_round_trip_all_platform_labels() {
+        for platform in [
+            PlatformKind::Lambda,
+            PlatformKind::DaskWrangler,
+            PlatformKind::DaskStampede2,
+            PlatformKind::Edge,
+        ] {
+            let mut spec = ExperimentSpec::tiny_grid(8, 1);
+            spec.set_platforms(&[platform]);
+            let back = ExperimentSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec, "{platform:?}");
+        }
     }
 }

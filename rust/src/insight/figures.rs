@@ -10,12 +10,13 @@
 //! our substrate is a simulator calibrated to this machine's PJRT).
 
 use super::analysis::{analyze, AnalysisRow};
-use super::experiment::ExperimentSpec;
-use super::sweep::{group_observations, run_sweep};
+use super::experiment::{ExperimentSpec, AXIS_CENTROIDS, AXIS_MESSAGE_SIZE, AXIS_PARTITIONS};
+use super::sweep::{group_observations, paper_key, run_sweep};
 use crate::engine::{CalibratedEngine, StepEngine};
 use crate::miniapp::{PlatformKind, Scenario};
 use crate::runtime::calibrate::{calibrated_engine, load_or_fallback, CalibrationRow};
 use crate::usl::{rmse_vs_train_size, Obs};
+use crate::util::rng::SplitMix64;
 use crate::util::stats::mean;
 use std::fmt::Write as _;
 use std::sync::Arc;
@@ -56,10 +57,19 @@ pub fn default_calibration() -> Vec<CalibrationRow> {
 pub fn engine_factory(rows: Vec<CalibrationRow>) -> impl Fn(&Scenario) -> Arc<dyn StepEngine> {
     move |sc: &Scenario| {
         // derive a per-config seed so configs don't share RNG streams
-        let seed = sc.seed ^ (sc.partitions as u64)
+        let mut seed = sc.seed ^ (sc.partitions as u64)
             | ((sc.centroids as u64) << 20)
             | ((sc.points_per_message as u64) << 40)
             ^ ((sc.memory_mb as u64) << 8);
+        // extension axes perturb the stream too, so every level of a
+        // custom axis gets an independent (still deterministic) stream
+        for (name, value) in &sc.extra {
+            let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a over the axis name
+            for b in name.bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            seed ^= SplitMix64::new(h ^ *value).next_u64();
+        }
         let eng: CalibratedEngine = calibrated_engine(&rows, seed);
         Arc::new(eng)
     }
@@ -79,7 +89,9 @@ pub fn fig3(messages: usize, seed: u64) -> FigureResult {
         let _ = writeln!(
             table,
             "{:>9}  {:>14.3}  {:>10.3}",
-            r.memory_mb, r.warm_mean, r.warm_cv
+            r.axis_int("memory_mb").unwrap_or(0),
+            r.warm_mean,
+            r.warm_cv
         );
     }
     let first = rows.first();
@@ -104,7 +116,10 @@ pub fn fig3(messages: usize, seed: u64) -> FigureResult {
             (
                 format!(
                     "larger memory → shorter runtime ({}MB {:.2}s vs {}MB {:.2}s)",
-                    lo.memory_mb, lo.warm_mean, hi.memory_mb, hi.warm_mean
+                    lo.axis_int("memory_mb").unwrap_or(0),
+                    lo.warm_mean,
+                    hi.axis_int("memory_mb").unwrap_or(0),
+                    hi.warm_mean
                 ),
                 lo.warm_mean > hi.warm_mean * 1.5,
             ),
@@ -133,10 +148,10 @@ pub fn fig4(messages: usize, seed: u64) -> FigureResult {
         let _ = writeln!(
             table,
             "{:<22} {:>6} {:>6} {:>6}  {:>13.3}",
-            r.platform.label(),
-            r.message_size,
-            r.centroids,
-            r.partitions,
+            r.platform().map(|p| p.label()).unwrap_or("?"),
+            r.axis_int(AXIS_MESSAGE_SIZE).unwrap_or(0),
+            r.axis_int(AXIS_CENTROIDS).unwrap_or(0),
+            r.scale,
             r.service_mean
         );
     }
@@ -144,7 +159,7 @@ pub fn fig4(messages: usize, seed: u64) -> FigureResult {
         mean(
             &rows
                 .iter()
-                .filter(|r| r.platform == pf && r.partitions == p)
+                .filter(|r| r.platform() == Some(pf) && r.scale == p)
                 .map(|r| r.service_mean)
                 .collect::<Vec<_>>(),
         )
@@ -161,10 +176,10 @@ pub fn fig4(messages: usize, seed: u64) -> FigureResult {
                 &rows
                     .iter()
                     .filter(|r| {
-                        r.platform == pf
-                            && r.partitions == 1
-                            && r.message_size == ms
-                            && r.centroids == wc
+                        r.platform() == Some(pf)
+                            && r.scale == 1
+                            && r.axis_int(AXIS_MESSAGE_SIZE) == Some(ms as u64)
+                            && r.axis_int(AXIS_CENTROIDS) == Some(wc as u64)
                     })
                     .map(|r| r.service_mean)
                     .collect::<Vec<_>>(),
@@ -212,15 +227,15 @@ pub fn fig5(messages: usize, seed: u64) -> FigureResult {
     );
     let mut checks: Vec<(String, bool)> = Vec::new();
     for key in super::sweep::group_keys(&rows) {
-        let obs = group_observations(&rows, key);
+        let obs = group_observations(&rows, &key);
         let t1 = obs.first().map(|o| o.t).unwrap_or(1.0);
         for o in &obs {
             let _ = writeln!(
                 table,
                 "{:<22} {:>6} {:>6} {:>6}  {:>10.3} {:>9.2}",
-                key.0.label(),
-                key.1,
-                key.2,
+                key.platform().map(|p| p.label()).unwrap_or("?"),
+                key.int(AXIS_MESSAGE_SIZE).unwrap_or(0),
+                key.int(AXIS_CENTROIDS).unwrap_or(0),
                 o.n as usize,
                 o.t,
                 o.t / t1
@@ -230,9 +245,9 @@ pub fn fig5(messages: usize, seed: u64) -> FigureResult {
     // Lambda throughput increases with partitions (all groups)
     let lambda_ok = super::sweep::group_keys(&rows)
         .into_iter()
-        .filter(|k| k.0 == PlatformKind::Lambda)
+        .filter(|k| k.platform() == Some(PlatformKind::Lambda))
         .all(|k| {
-            let obs = group_observations(&rows, k);
+            let obs = group_observations(&rows, &k);
             obs.last().unwrap().t > obs.first().unwrap().t * 3.0
         });
     checks.push((
@@ -243,7 +258,7 @@ pub fn fig5(messages: usize, seed: u64) -> FigureResult {
     // degradation for larger P
     let dask_heavy = group_observations(
         &rows,
-        (PlatformKind::DaskWrangler, 16_000, 8_192, 3_008),
+        &paper_key(PlatformKind::DaskWrangler, 16_000, 8_192, 3_008),
     );
     if !dask_heavy.is_empty() {
         let t1 = dask_heavy[0].t;
@@ -275,7 +290,7 @@ pub fn fig5(messages: usize, seed: u64) -> FigureResult {
         for wc in [128usize, 1_024] {
             let obs = group_observations(
                 &rows,
-                (PlatformKind::DaskWrangler, 16_000, wc, 3_008),
+                &paper_key(PlatformKind::DaskWrangler, 16_000, wc, 3_008),
             );
             if obs.is_empty() {
                 continue;
@@ -289,8 +304,10 @@ pub fn fig5(messages: usize, seed: u64) -> FigureResult {
         }
     }
     // Lambda vs Dask absolute: HPC wins at P=1 for compute-heavy workloads
-    let lam_heavy =
-        group_observations(&rows, (PlatformKind::Lambda, 16_000, 8_192, 3_008));
+    let lam_heavy = group_observations(
+        &rows,
+        &paper_key(PlatformKind::Lambda, 16_000, 8_192, 3_008),
+    );
     if let (Some(d1), Some(l1)) = (dask_heavy.first(), lam_heavy.first()) {
         checks.push((
             format!(
@@ -313,19 +330,19 @@ pub fn fig5(messages: usize, seed: u64) -> FigureResult {
 /// Fig 6: USL fit per scenario at MS = 16,000 points.
 pub fn fig6(messages: usize, seed: u64) -> FigureResult {
     let mut spec = ExperimentSpec::paper_grid(messages, seed);
-    spec.message_sizes = vec![16_000]; // the figure's fixed MS
+    spec.set_ints(AXIS_MESSAGE_SIZE, [16_000]); // the figure's fixed MS
     // stay within the 30-container Lambda cap (the paper's Fig 6 x-range)
-    spec.partitions = vec![1, 2, 4, 8, 16];
+    spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8, 16]);
     let rows = run_sweep(&spec, engine_factory(default_calibration()));
     let analysis = analyze(&rows);
     let table = super::analysis::table(&analysis);
     let lambda_rows: Vec<&AnalysisRow> = analysis
         .iter()
-        .filter(|a| a.platform == PlatformKind::Lambda)
+        .filter(|a| a.platform() == Some(PlatformKind::Lambda))
         .collect();
     let dask_rows: Vec<&AnalysisRow> = analysis
         .iter()
-        .filter(|a| a.platform == PlatformKind::DaskWrangler)
+        .filter(|a| a.platform() == Some(PlatformKind::DaskWrangler))
         .collect();
     let lam_sigma = mean(&lambda_rows.iter().map(|a| a.fit.params.sigma).collect::<Vec<_>>());
     let lam_kappa = mean(&lambda_rows.iter().map(|a| a.fit.params.kappa).collect::<Vec<_>>());
@@ -341,7 +358,7 @@ pub fn fig6(messages: usize, seed: u64) -> FigureResult {
         let Some(peak) = a.fit.params.peak_n() else {
             return false;
         };
-        if a.centroids <= 128 {
+        if a.axis_int(AXIS_CENTROIDS).unwrap_or(0) <= 128 {
             peak <= 5.0
         } else {
             let max_speedup = a.fit.params.speedup(peak.max(1.0));
@@ -384,11 +401,11 @@ pub fn fig6(messages: usize, seed: u64) -> FigureResult {
 /// Fig 7: prediction RMSE vs number of training configurations.
 pub fn fig7(messages: usize, seed: u64) -> FigureResult {
     let mut spec = ExperimentSpec::paper_grid(messages, seed);
-    spec.message_sizes = vec![16_000];
-    spec.centroids = vec![128, 8_192];
+    spec.set_ints(AXIS_MESSAGE_SIZE, [16_000]);
+    spec.set_ints(AXIS_CENTROIDS, [128, 8_192]);
     // the paper's x-range (its figures stop at 12-16 partitions); beyond
     // ~24 the 30-container Lambda cap introduces a kink USL cannot model
-    spec.partitions = vec![1, 2, 3, 4, 6, 8, 10, 12, 16];
+    spec.set_ints(AXIS_PARTITIONS, [1, 2, 3, 4, 6, 8, 10, 12, 16]);
     // steady-state windows: at P=16 each shard must still amortize its
     // one-off cold start, or the tail configurations bias the fit
     spec.messages = spec.messages.max(12 * 16);
@@ -401,7 +418,7 @@ pub fn fig7(messages: usize, seed: u64) -> FigureResult {
     let mut lambda_norm = Vec::new();
     let mut dask_norm = Vec::new();
     for key in super::sweep::group_keys(&rows) {
-        let obs: Vec<Obs> = group_observations(&rows, key);
+        let obs: Vec<Obs> = group_observations(&rows, &key);
         let Ok(points) = rmse_vs_train_size(&obs, &train_sizes, 30, seed) else {
             continue;
         };
@@ -411,12 +428,12 @@ pub fn fig7(messages: usize, seed: u64) -> FigureResult {
             let _ = writeln!(
                 table,
                 "{:<22} {:>6} {:>13} {:>10.4}",
-                key.0.label(),
-                key.2,
+                key.platform().map(|pf| pf.label()).unwrap_or("?"),
+                key.int(AXIS_CENTROIDS).unwrap_or(0),
                 p.train_size,
                 norm
             );
-            if key.0 == PlatformKind::Lambda {
+            if key.platform() == Some(PlatformKind::Lambda) {
                 lambda_norm.push(norm);
             } else {
                 dask_norm.push(norm);
@@ -485,5 +502,28 @@ mod tests {
     #[test]
     fn table1_renders() {
         assert!(table1().all_pass());
+    }
+
+    #[test]
+    fn engine_seed_distinguishes_extension_axis_levels() {
+        // two scenarios differing only in a custom axis level must draw
+        // from different (but individually deterministic) RNG streams
+        let factory = engine_factory(default_calibration());
+        let mut a = Scenario::default();
+        a.set_extra("edge_sites", 1);
+        let mut b = Scenario::default();
+        b.set_extra("edge_sites", 2);
+        let model = crate::store::ModelState::new_random(16, 8, 1);
+        let pts = vec![0.0f32; 800];
+        let cost = |sc: &Scenario| {
+            factory(sc)
+                .execute_step(&pts, 8, &model)
+                .unwrap()
+                .cpu_seconds
+        };
+        assert_ne!(cost(&a), cost(&b), "streams must differ across levels");
+        let c1 = cost(&a);
+        let c2 = cost(&a);
+        assert_eq!(c1, c2, "same level, same stream");
     }
 }

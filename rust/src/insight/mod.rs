@@ -1,23 +1,52 @@
-//! StreamInsight (paper §IV): end-to-end performance experimentation —
-//! experiment design ([`experiment`]), automated sweeps ([`sweep`]), USL
-//! analysis ([`analysis`]), prediction ([`predict`]), predictive
-//! autoscaling ([`autoscale`]), and the Table I variable glossary
-//! ([`vars`]).
+//! StreamInsight (paper §IV): the **campaign engine** — end-to-end
+//! performance experimentation over a composable parameter space.
+//!
+//! # Architecture: axes → scenarios → parallel sweep → incremental fits
+//!
+//! A characterization *campaign* is described by an [`ExperimentSpec`]:
+//! an ordered list of [`Axis`] values (name + typed levels) expanded into
+//! concrete scenarios by one cartesian-product iterator
+//! ([`experiment::ScenarioIter`]).  Canonical names (`platform`,
+//! `message_size`, `centroids`, `memory_mb`, `partitions`) bind to
+//! `Scenario`'s typed fields; any other name flows into
+//! `Scenario::extra`, so a new sweep dimension — edge site count,
+//! micro-batch interval — registers like a pilot plugin did in PR 1:
+//! construct the axis, attach it to the spec, and *nothing else changes*:
+//!
+//! - [`sweep::run_sweep_jobs`] executes the grid on a scoped worker pool
+//!   (scenarios are independent; RNG is seeded per configuration), streams
+//!   [`SweepRow`]s back in completion order for progress reporting, and
+//!   reassembles deterministic spec order — `--jobs N` output is
+//!   byte-identical to `--jobs 1`.
+//! - Rows group into USL curves by [`GroupKey`], the row's assignment on
+//!   every non-scale axis, derived from the axes themselves.
+//! - [`analysis::analyze`] fits USL per group;
+//!   [`analysis::IncrementalAnalysis`] produces the same fits while the
+//!   sweep is still running, as each group's last scale level lands.
+//! - [`config`] loads specs declaratively from TOML (including custom
+//!   `[axes]`), [`figures`] regenerates the paper's tables/figures,
+//!   [`predict`] and [`autoscale`] consume the fitted models, and
+//!   [`vars`] renders the Table I variable glossary.
 
 pub mod analysis;
+pub mod autoscale;
 pub mod autoscale_sim;
 pub mod config;
-pub mod autoscale;
 pub mod experiment;
 pub mod figures;
 pub mod predict;
 pub mod sweep;
 pub mod vars;
 
-pub use analysis::{analyze, table, AnalysisRow};
+pub use analysis::{analyze, table, AnalysisRow, IncrementalAnalysis};
 pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
 pub use autoscale_sim::{replay, trace_burst, trace_diurnal, AutoscaleReport};
 pub use config::{spec_from_file, spec_from_toml};
-pub use experiment::ExperimentSpec;
-pub use predict::Predictor;
-pub use sweep::{group_keys, group_observations, run_sweep, to_csv, SweepRow};
+pub use experiment::{
+    axis_value_of, Axis, AxisValue, ExperimentSpec, AXIS_CENTROIDS, AXIS_MEMORY_MB,
+    AXIS_MESSAGE_SIZE, AXIS_PARTITIONS, AXIS_PLATFORM,
+};
+pub use sweep::{
+    group_keys, group_observations, paper_key, run_sweep, run_sweep_jobs, to_csv, GroupKey,
+    SweepProgress, SweepRow,
+};

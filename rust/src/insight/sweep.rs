@@ -1,20 +1,110 @@
-//! Sweep execution: run every scenario of an [`ExperimentSpec`] through the
-//! simulated-time driver and collect one row per configuration.
+//! Sweep execution: expand an [`ExperimentSpec`] into scenarios, run each
+//! through the simulated-time driver — across cores when asked — and
+//! collect one [`SweepRow`] per configuration.
+//!
+//! Scenarios are independent (each `run_sim` owns its DES, stores, and
+//! per-config RNG streams), so [`run_sweep_jobs`] farms them out to a
+//! scoped worker pool ([`parallel_indexed_map`]) and streams rows back in
+//! completion order for progress reporting and incremental USL fits, while
+//! the returned vector is reassembled in spec order: `jobs = N` produces
+//! output byte-identical to `jobs = 1`.
+//!
+//! Rows are grouped for USL fitting by [`GroupKey`] — the row's assignment
+//! on every axis *except* the spec's scale axis — derived from the axes
+//! themselves, so new sweep dimensions change grouping, analysis, and CSV
+//! export without any code edits here.
 
-use super::experiment::ExperimentSpec;
+use super::experiment::{axis_value_of, AxisValue, ExperimentSpec};
+use super::experiment::{AXIS_CENTROIDS, AXIS_MEMORY_MB, AXIS_MESSAGE_SIZE, AXIS_PLATFORM};
 use crate::engine::StepEngine;
 use crate::miniapp::{run_sim, PlatformKind, Scenario};
+use crate::pilot::workers::parallel_indexed_map;
 use crate::usl::Obs;
+use std::collections::HashSet;
 use std::sync::Arc;
 
+/// A sweep group: the (axis name, level) pairs shared by every row of one
+/// throughput curve, in spec axis order.  Also usable as a *query*: a key
+/// holding a subset of the axes selects every group containing those
+/// pairs (see [`GroupKey::selects`]).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GroupKey(Vec<(String, AxisValue)>);
+
+impl GroupKey {
+    pub fn new(pairs: Vec<(String, AxisValue)>) -> Self {
+        Self(pairs)
+    }
+
+    pub fn pairs(&self) -> &[(String, AxisValue)] {
+        &self.0
+    }
+
+    pub fn get(&self, name: &str) -> Option<AxisValue> {
+        self.0.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn platform(&self) -> Option<PlatformKind> {
+        self.get(AXIS_PLATFORM).and_then(AxisValue::as_platform)
+    }
+
+    pub fn int(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(AxisValue::as_int)
+    }
+
+    /// True when every pair of `self` appears in `other` — query keys
+    /// select row groups by any axis subset.
+    pub fn selects(&self, other: &GroupKey) -> bool {
+        self.0.iter().all(|(n, v)| other.get(n) == Some(*v))
+    }
+
+    /// Human-readable label: the platform level bare, every other axis as
+    /// `name=value`, in axis order.
+    pub fn label(&self) -> String {
+        self.0
+            .iter()
+            .map(|(n, v)| {
+                if n == AXIS_PLATFORM {
+                    v.to_string()
+                } else {
+                    format!("{n}={v}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Query key over the canonical paper axes (platform, MS, WC, memory).
+/// Selection is subset-based: on grids with *additional* multi-level
+/// axes this matches every group sharing these four coordinates (and
+/// [`group_observations`] warns about the blend) — pass a full key from
+/// [`group_keys`] to pin one curve on such grids.
+pub fn paper_key(
+    platform: PlatformKind,
+    message_size: usize,
+    centroids: usize,
+    memory_mb: u32,
+) -> GroupKey {
+    GroupKey::new(vec![
+        (AXIS_PLATFORM.to_string(), AxisValue::Platform(platform)),
+        (
+            AXIS_MESSAGE_SIZE.to_string(),
+            AxisValue::Int(message_size as u64),
+        ),
+        (AXIS_CENTROIDS.to_string(), AxisValue::Int(centroids as u64)),
+        (AXIS_MEMORY_MB.to_string(), AxisValue::Int(memory_mb as u64)),
+    ])
+}
+
 /// One measured configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SweepRow {
-    pub platform: PlatformKind,
-    pub partitions: usize,
-    pub message_size: usize,
-    pub centroids: usize,
-    pub memory_mb: u32,
+    /// Non-scale axis assignment — one USL curve per distinct key.
+    pub key: GroupKey,
+    /// Name of the axis `scale` belongs to (usually `partitions`).
+    pub scale_axis: String,
+    /// Scale-axis level: N^px(p).
+    pub scale: usize,
     /// T^px (messages/second).
     pub throughput: f64,
     /// Mean service time per message (Fig 4).
@@ -30,104 +120,199 @@ pub struct SweepRow {
 }
 
 impl SweepRow {
-    /// Group key for USL fitting: one throughput curve per
-    /// (platform, MS, WC, memory).
-    pub fn group_key(&self) -> (PlatformKind, usize, usize, u32) {
-        (
-            self.platform,
-            self.message_size,
-            self.centroids,
-            self.memory_mb,
-        )
+    /// Group key for USL fitting, derived from the spec's axes.
+    pub fn group_key(&self) -> &GroupKey {
+        &self.key
+    }
+
+    pub fn platform(&self) -> Option<PlatformKind> {
+        self.key.platform()
+    }
+
+    /// This row's level on a non-scale axis.
+    pub fn axis_int(&self, name: &str) -> Option<u64> {
+        self.key.int(name)
+    }
+
+    /// The scale-axis level (partition count on the canonical grids).
+    pub fn partitions(&self) -> usize {
+        self.scale
     }
 }
 
-/// Run the full sweep (simulated time).  `engine_factory` builds a fresh
-/// engine per scenario so RNG streams don't interleave across configs.
-pub fn run_sweep<F>(spec: &ExperimentSpec, engine_factory: F) -> Vec<SweepRow>
+/// Progress event streamed by [`run_sweep_jobs`]: rows arrive in
+/// completion order on the caller's thread.
+pub struct SweepProgress<'a> {
+    /// Configurations finished so far (including this one).
+    pub done: usize,
+    pub total: usize,
+    pub row: &'a SweepRow,
+}
+
+fn measure<F>(spec: &ExperimentSpec, sc: &Scenario, engine_factory: &F) -> Result<SweepRow, String>
 where
     F: Fn(&Scenario) -> Arc<dyn StepEngine>,
 {
-    let scenarios = spec.scenarios();
-    let mut rows = Vec::with_capacity(scenarios.len());
-    for (i, sc) in scenarios.iter().enumerate() {
-        match run_sim(sc, engine_factory(sc)) {
-            Ok(r) => {
-                log::debug!(
-                    "sweep {}/{}: {} p={} ms={} wc={} -> T={:.2} msg/s",
-                    i + 1,
-                    scenarios.len(),
-                    sc.platform.label(),
-                    sc.partitions,
-                    sc.points_per_message,
-                    sc.centroids,
-                    r.summary.throughput
-                );
-                rows.push(SweepRow {
-                    platform: sc.platform,
-                    partitions: sc.partitions,
-                    message_size: sc.points_per_message,
-                    centroids: sc.centroids,
-                    memory_mb: sc.memory_mb,
-                    throughput: r.summary.throughput,
-                    service_mean: r.summary.service.mean,
-                    service_p95: r.summary.service.p95,
-                    service_cv: r.summary.service.cv(),
-                    warm_mean: r.summary.service_warm.mean,
-                    warm_cv: r.summary.service_warm.cv(),
-                    broker_mean: r.summary.broker.mean,
-                    messages: r.summary.messages,
-                });
-            }
-            Err(e) => log::error!("sweep config failed ({sc:?}): {e}"),
-        }
-    }
-    rows
+    let r = run_sim(sc, engine_factory(sc))?;
+    let key = GroupKey::new(
+        spec.axes
+            .iter()
+            .filter(|a| a.name != spec.scale_axis)
+            .map(|a| {
+                let v = axis_value_of(sc, &a.name).unwrap_or(AxisValue::Int(0));
+                (a.name.clone(), v)
+            })
+            .collect(),
+    );
+    let scale = match axis_value_of(sc, &spec.scale_axis) {
+        Some(AxisValue::Int(n)) => n as usize,
+        _ => sc.partitions,
+    };
+    Ok(SweepRow {
+        key,
+        scale_axis: spec.scale_axis.clone(),
+        scale,
+        throughput: r.summary.throughput,
+        service_mean: r.summary.service.mean,
+        service_p95: r.summary.service.p95,
+        service_cv: r.summary.service.cv(),
+        warm_mean: r.summary.service_warm.mean,
+        warm_cv: r.summary.service_warm.cv(),
+        broker_mean: r.summary.broker.mean,
+        messages: r.summary.messages,
+    })
 }
 
-/// Extract the (N, T) observations of one group, sorted by N.
-pub fn group_observations(
-    rows: &[SweepRow],
-    key: (PlatformKind, usize, usize, u32),
-) -> Vec<Obs> {
-    let mut obs: Vec<Obs> = rows
+/// Run the full sweep sequentially (simulated time).  `engine_factory`
+/// builds a fresh engine per scenario so RNG streams don't interleave
+/// across configs.
+pub fn run_sweep<F>(spec: &ExperimentSpec, engine_factory: F) -> Vec<SweepRow>
+where
+    F: Fn(&Scenario) -> Arc<dyn StepEngine> + Sync,
+{
+    run_sweep_jobs(spec, engine_factory, 1, |_| {})
+}
+
+/// Run the sweep on `jobs` worker threads.  Independent scenarios run
+/// concurrently with per-config seeded RNG; `progress` observes rows in
+/// completion order (progress bars, incremental fits), and the returned
+/// vector is reassembled in deterministic spec order — the output is
+/// byte-identical for every `jobs` value.
+pub fn run_sweep_jobs<F, C>(
+    spec: &ExperimentSpec,
+    engine_factory: F,
+    jobs: usize,
+    mut progress: C,
+) -> Vec<SweepRow>
+where
+    F: Fn(&Scenario) -> Arc<dyn StepEngine> + Sync,
+    C: FnMut(SweepProgress<'_>),
+{
+    let scenarios = spec.scenarios();
+    let total = scenarios.len();
+    let mut slots: Vec<Option<SweepRow>> = Vec::with_capacity(total);
+    slots.resize_with(total, || None);
+    let mut done = 0usize;
+    let scenarios_ref = &scenarios;
+    let factory_ref = &engine_factory;
+    parallel_indexed_map(
+        jobs.max(1),
+        total,
+        move |_worker, i| measure(spec, &scenarios_ref[i], factory_ref),
+        |i, outcome| match outcome {
+            Ok(row) => {
+                done += 1;
+                log::debug!(
+                    "sweep {done}/{total}: {} {}={} -> T={:.2} msg/s",
+                    row.key.label(),
+                    row.scale_axis,
+                    row.scale,
+                    row.throughput
+                );
+                progress(SweepProgress {
+                    done,
+                    total,
+                    row: &row,
+                });
+                slots[i] = Some(row);
+            }
+            Err(e) => log::error!("sweep config failed ({:?}): {e}", scenarios[i]),
+        },
+    );
+    slots.into_iter().flatten().collect()
+}
+
+/// Extract the (N, T) observations of the groups `query` selects,
+/// sorted by N.
+///
+/// A query naming a strict subset of the axes can match *several* groups;
+/// feeding such a blend to `usl::fit` is almost never intended, so
+/// spanning more than one distinct group logs a warning.  Pass a full key
+/// (e.g. one returned by [`group_keys`]) to select exactly one curve.
+pub fn group_observations(rows: &[SweepRow], query: &GroupKey) -> Vec<Obs> {
+    let selected: Vec<&SweepRow> = rows.iter().filter(|r| query.selects(&r.key)).collect();
+    let distinct: HashSet<&GroupKey> = selected.iter().map(|r| &r.key).collect();
+    if distinct.len() > 1 {
+        log::warn!(
+            "query {} selects {} distinct sweep groups — the observations blend multiple curves",
+            query.label(),
+            distinct.len()
+        );
+    }
+    let mut obs: Vec<Obs> = selected
         .iter()
-        .filter(|r| r.group_key() == key)
-        .map(|r| Obs::new(r.partitions as f64, r.throughput))
+        .map(|r| Obs::new(r.scale as f64, r.throughput))
         .collect();
     obs.sort_by(|a, b| a.n.partial_cmp(&b.n).unwrap());
     obs
 }
 
-/// All distinct group keys in sweep order.
-pub fn group_keys(rows: &[SweepRow]) -> Vec<(PlatformKind, usize, usize, u32)> {
+/// All distinct group keys in sweep order (order-preserving set — the
+/// scan is O(n), not O(n²)).
+pub fn group_keys(rows: &[SweepRow]) -> Vec<GroupKey> {
+    let mut seen: HashSet<&GroupKey> = HashSet::with_capacity(rows.len().min(1024));
     let mut keys = Vec::new();
     for r in rows {
-        let k = r.group_key();
-        if !keys.contains(&k) {
-            keys.push(k);
+        if seen.insert(&r.key) {
+            keys.push(r.key.clone());
         }
     }
     keys
 }
 
-/// CSV export (one row per configuration) for external plotting.
+/// CSV export (one row per configuration) for external plotting.  Columns
+/// derive from the axes: one per group axis, then the scale axis, then
+/// every measured quantity `SweepRow` carries — including the warm-path
+/// stats Fig 3 plots.
 pub fn to_csv(rows: &[SweepRow]) -> String {
-    let mut s = String::from(
-        "platform,partitions,message_size,centroids,memory_mb,throughput,service_mean,service_p95,service_cv,broker_mean,messages\n",
-    );
+    const METRICS: &str =
+        "throughput,service_mean,service_p95,service_cv,warm_mean,warm_cv,broker_mean,messages";
+    let Some(first) = rows.first() else {
+        return format!("{METRICS}\n");
+    };
+    let mut s = String::new();
+    for (name, _) in first.key.pairs() {
+        s.push_str(name);
+        s.push(',');
+    }
+    s.push_str(&first.scale_axis);
+    s.push(',');
+    s.push_str(METRICS);
+    s.push('\n');
     for r in rows {
+        for (_, v) in r.key.pairs() {
+            s.push_str(&v.to_string());
+            s.push(',');
+        }
         s.push_str(&format!(
-            "{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{}\n",
-            r.platform.label(),
-            r.partitions,
-            r.message_size,
-            r.centroids,
-            r.memory_mb,
+            "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{}\n",
+            r.scale,
             r.throughput,
             r.service_mean,
             r.service_p95,
             r.service_cv,
+            r.warm_mean,
+            r.warm_cv,
             r.broker_mean,
             r.messages
         ));
@@ -142,17 +327,9 @@ mod tests {
     use crate::sim::{ContentionParams, Dist};
 
     fn tiny_spec() -> ExperimentSpec {
-        ExperimentSpec {
-            name: "tiny".into(),
-            platforms: vec![PlatformKind::Lambda, PlatformKind::DaskWrangler],
-            partitions: vec![1, 2, 4],
-            message_sizes: vec![256],
-            centroids: vec![16],
-            memory_mb: vec![3_008],
-            messages: 24,
-            seed: 5,
-            lustre: ContentionParams::new(0.5, 0.03),
-        }
+        let mut spec = ExperimentSpec::tiny_grid(24, 5);
+        spec.lustre = ContentionParams::new(0.5, 0.03);
+        spec
     }
 
     fn factory(sc: &crate::miniapp::Scenario) -> Arc<dyn StepEngine> {
@@ -169,7 +346,7 @@ mod tests {
         let keys = group_keys(&rows);
         assert_eq!(keys.len(), 2); // one per platform
         for k in keys {
-            let obs = group_observations(&rows, k);
+            let obs = group_observations(&rows, &k);
             assert_eq!(obs.len(), 3);
             assert!(obs.windows(2).all(|w| w[0].n < w[1].n));
         }
@@ -178,8 +355,9 @@ mod tests {
     #[test]
     fn lambda_scales_dask_does_not() {
         let rows = run_sweep(&tiny_spec(), factory);
-        let lam = group_observations(&rows, (PlatformKind::Lambda, 256, 16, 3_008));
-        let dask = group_observations(&rows, (PlatformKind::DaskWrangler, 256, 16, 3_008));
+        let lam = group_observations(&rows, &paper_key(PlatformKind::Lambda, 256, 16, 3_008));
+        let dask =
+            group_observations(&rows, &paper_key(PlatformKind::DaskWrangler, 256, 16, 3_008));
         let lam_speedup = lam.last().unwrap().t / lam[0].t;
         let dask_speedup = dask.last().unwrap().t / dask[0].t;
         assert!(
@@ -189,11 +367,66 @@ mod tests {
     }
 
     #[test]
-    fn csv_has_all_rows() {
+    fn csv_has_all_rows_and_warm_columns() {
         let rows = run_sweep(&tiny_spec(), factory);
         let csv = to_csv(&rows);
         assert_eq!(csv.lines().count(), rows.len() + 1);
+        let header = csv.lines().next().unwrap();
+        // axis-derived columns, group axes first, scale axis last
+        assert_eq!(
+            header,
+            "platform,message_size,centroids,memory_mb,partitions,throughput,service_mean,service_p95,service_cv,warm_mean,warm_cv,broker_mean,messages"
+        );
         assert!(csv.contains("kinesis/lambda"));
-        assert!(csv.contains("kafka/dask"));
+        assert!(csv.contains("kafka/dask(wrangler)"));
+    }
+
+    #[test]
+    fn parallel_jobs_match_sequential_exactly() {
+        let spec = tiny_spec();
+        let seq = run_sweep(&spec, factory);
+        let mut events = 0usize;
+        let par = run_sweep_jobs(&spec, factory, 4, |p| {
+            events += 1;
+            assert_eq!(p.done, events);
+            assert_eq!(p.total, spec.size());
+        });
+        assert_eq!(events, seq.len());
+        assert_eq!(seq, par, "rows identical in value and order");
+        assert_eq!(to_csv(&seq), to_csv(&par), "byte-identical CSV");
+    }
+
+    #[test]
+    fn query_keys_select_subsets() {
+        let rows = run_sweep(&tiny_spec(), factory);
+        let by_platform = GroupKey::new(vec![(
+            "platform".to_string(),
+            AxisValue::Platform(PlatformKind::Lambda),
+        )]);
+        let obs = group_observations(&rows, &by_platform);
+        assert_eq!(obs.len(), 3, "subset query selects the whole lambda curve");
+    }
+
+    #[test]
+    fn group_keys_dedup_is_order_preserving_on_large_sweeps() {
+        // synthetic sweep: 5,000 rows over 250 interleaved groups
+        let template = run_sweep(&tiny_spec(), factory).remove(0);
+        let rows: Vec<SweepRow> = (0..5_000)
+            .map(|i| {
+                let mut r = template.clone();
+                r.key = GroupKey::new(vec![(
+                    "centroids".to_string(),
+                    AxisValue::Int((i % 250) as u64),
+                )]);
+                r.scale = i / 250 + 1;
+                r
+            })
+            .collect();
+        let keys = group_keys(&rows);
+        assert_eq!(keys.len(), 250);
+        // first-appearance order: group i appeared at row i
+        for (i, k) in keys.iter().enumerate() {
+            assert_eq!(k.int("centroids"), Some(i as u64));
+        }
     }
 }

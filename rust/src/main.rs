@@ -37,7 +37,8 @@ fn app() -> App {
         CommandSpec::new("sweep", "run an experiment grid sweep, fit USL, print analysis")
             .opt("messages", "64", "messages per configuration")
             .opt("seed", "42", "rng seed")
-            .opt("grid", "paper", "preset grid: paper | edge")
+            .opt("grid", "paper", "preset grid: paper | edge | memory | tiny")
+            .opt("jobs", "0", "parallel sweep workers (0 = one per core)")
             .opt("csv", "", "write per-config CSV to this path")
             .opt("config", "", "TOML experiment file (overrides the preset grid)"),
     )
@@ -159,11 +160,58 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         None => match args.get_or("grid", "paper") {
             "paper" => ExperimentSpec::paper_grid(messages, seed),
             "edge" => ExperimentSpec::edge_grid(messages, seed),
-            other => return Err(format!("unknown grid {other:?} (paper | edge)")),
+            "memory" => ExperimentSpec::lambda_memory_sweep(messages, seed),
+            "tiny" => ExperimentSpec::tiny_grid(messages, seed),
+            other => {
+                return Err(format!(
+                    "unknown grid {other:?} (paper | edge | memory | tiny)"
+                ))
+            }
         },
     };
-    eprintln!("running {} configurations (simulated time)...", spec.size());
-    let rows = insight::run_sweep(&spec, figures::engine_factory(figures::default_calibration()));
+    let jobs = match args.get_usize("jobs").map_err(|e| e.to_string())? {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    };
+    eprintln!(
+        "running {} configurations on {jobs} worker(s) (simulated time)...",
+        spec.size()
+    );
+    // progress and incremental fits stream to stderr in completion order;
+    // the final table/CSV below are reassembled in spec order and are
+    // byte-identical for every --jobs value
+    let mut inc = insight::IncrementalAnalysis::new(&spec);
+    let rows = insight::run_sweep_jobs(
+        &spec,
+        figures::engine_factory(figures::default_calibration()),
+        jobs,
+        |p| {
+            eprintln!(
+                "[{}/{}] {} {}={} -> {:.2} msg/s",
+                p.done,
+                p.total,
+                p.row.key.label(),
+                p.row.scale_axis,
+                p.row.scale,
+                p.row.throughput
+            );
+            if let Some(a) = inc.observe(p.row) {
+                eprintln!(
+                    "  fit {}: sigma {:.4} kappa {:.5} lambda {:.2} R2 {:.3}",
+                    a.key.label(),
+                    a.fit.params.sigma,
+                    a.fit.params.kappa,
+                    a.fit.params.lambda,
+                    a.fit.r2
+                );
+            }
+        },
+    );
+    if rows.is_empty() {
+        return Err("sweep produced no rows (every configuration failed)".into());
+    }
     let analysis = insight::analyze(&rows);
     println!("{}", insight::table(&analysis));
     if let Some(path) = args.get("csv").filter(|s| !s.is_empty()) {

@@ -46,8 +46,10 @@ impl PlatformKind {
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "lambda" | "kinesis/lambda" | "serverless" => Some(Self::Lambda),
-            "dask" | "wrangler" | "kafka/dask" => Some(Self::DaskWrangler),
-            "stampede2" | "knl" => Some(Self::DaskStampede2),
+            "dask" | "wrangler" | "kafka/dask" | "kafka/dask(wrangler)" => {
+                Some(Self::DaskWrangler)
+            }
+            "stampede2" | "knl" | "kafka/dask(stampede2)" => Some(Self::DaskStampede2),
             "edge" | "greengrass" | "edge/greengrass" => Some(Self::Edge),
             _ => None,
         }
@@ -76,6 +78,10 @@ pub struct Scenario {
     /// Lustre contention (Dask only; Lambda is isolated by construction).
     pub lustre: ContentionParams,
     pub seed: u64,
+    /// Extension parameters bound by non-canonical sweep axes (see
+    /// `insight::experiment`).  Platform plugins and custom analyses look
+    /// their axis up by name; the core fields above stay typed.
+    pub extra: Vec<(String, u64)>,
 }
 
 impl Default for Scenario {
@@ -92,11 +98,25 @@ impl Default for Scenario {
                 crate::pilot::plugins::hpc::DEFAULT_LUSTRE_BETA,
             ),
             seed: 42,
+            extra: Vec::new(),
         }
     }
 }
 
 impl Scenario {
+    /// Look up an extension parameter bound by a non-canonical sweep axis.
+    pub fn extra_param(&self, name: &str) -> Option<u64> {
+        self.extra.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// Set (or replace) an extension parameter.
+    pub fn set_extra(&mut self, name: &str, value: u64) {
+        match self.extra.iter_mut().find(|(n, _)| n == name) {
+            Some(slot) => slot.1 = value,
+            None => self.extra.push((name.to_string(), value)),
+        }
+    }
+
     /// Expand into the pilot descriptions this scenario provisions:
     /// broker + processing pilots for the cloud/HPC stacks, one co-located
     /// pilot for the edge (its broker lives on the device).
@@ -273,6 +293,29 @@ mod tests {
         assert_eq!(PlatformKind::parse("greengrass"), Some(PlatformKind::Edge));
         assert_eq!(PlatformKind::parse("flink"), None);
         assert!(PlatformKind::Edge.is_serverless());
+    }
+
+    #[test]
+    fn platform_labels_parse_back() {
+        // spec JSON round-trips serialize platforms by label
+        for kind in [
+            PlatformKind::Lambda,
+            PlatformKind::DaskWrangler,
+            PlatformKind::DaskStampede2,
+            PlatformKind::Edge,
+        ] {
+            assert_eq!(PlatformKind::parse(kind.label()), Some(kind), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn scenario_extension_params() {
+        let mut s = Scenario::default();
+        assert_eq!(s.extra_param("edge_sites"), None);
+        s.set_extra("edge_sites", 4);
+        s.set_extra("edge_sites", 8);
+        assert_eq!(s.extra_param("edge_sites"), Some(8));
+        assert_eq!(s.extra.len(), 1, "set_extra replaces in place");
     }
 
     #[test]

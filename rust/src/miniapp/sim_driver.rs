@@ -10,6 +10,13 @@
 //!   produce → (throttled? retry after backoff) → available → process
 //!   (platform cost model; compute calibrated from live PJRT runs) →
 //!   commit → produce next …
+//!
+//! [`run_sim`] is **safely spawnable per worker thread**: every call owns
+//! its DES, clock, generator, stores, and engine (the caller's factory
+//! builds a fresh one per scenario), and the only cross-run state is the
+//! atomic run-id counter — which stamps traces but never feeds a cost
+//! model.  The insight campaign engine relies on this to run independent
+//! sweep configurations concurrently with bit-identical results.
 
 use super::generator::{DataGenerator, GeneratorConfig};
 use super::platform::{PlatformUnderTest, Scenario};
@@ -306,6 +313,28 @@ mod tests {
         let b = run_sim(&s, engine_with((256, 16), 0.05)).unwrap();
         assert!((a.summary.throughput - b.summary.throughput).abs() < 1e-9);
         assert!((a.summary.service.mean - b.summary.service.mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_runs_match_the_sequential_result() {
+        // the campaign engine spawns run_sim per worker; interleaving with
+        // other runs (and the resulting run-id shuffle) must not move a
+        // single measured number
+        let s = scenario(PlatformKind::Lambda, 2);
+        let base = run_sim(&s, engine_with((256, 16), 0.05)).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let s = s.clone();
+                std::thread::spawn(move || run_sim(&s, engine_with((256, 16), 0.05)).unwrap())
+            })
+            .collect();
+        for h in handles {
+            let r = h.join().unwrap();
+            assert_eq!(r.summary.messages, base.summary.messages);
+            assert!((r.summary.throughput - base.summary.throughput).abs() < 1e-12);
+            assert!((r.summary.service.mean - base.summary.service.mean).abs() < 1e-12);
+            assert!((r.summary.broker.mean - base.summary.broker.mean).abs() < 1e-12);
+        }
     }
 
     #[test]

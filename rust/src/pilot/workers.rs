@@ -1,10 +1,11 @@
-//! Shared worker-pool plumbing for pilot backends: N threads pulling
-//! (ComputeUnit, TaskSpec) pairs from a channel and running a
-//! backend-provided executor function.
+//! Shared worker-pool plumbing: N threads pulling (ComputeUnit, TaskSpec)
+//! pairs from a channel for pilot backends, plus the scoped
+//! [`parallel_indexed_map`] primitive the insight campaign engine uses to
+//! run independent sweep configurations across cores.
 
 use super::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
 use super::state::CuState;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -157,6 +158,50 @@ impl LazyWorkerPool {
     }
 }
 
+/// Scoped data-parallel map — the campaign engine's sweep executor.
+///
+/// `jobs` scoped workers claim indices `0..n` from a shared counter
+/// (dynamic load balancing: configurations differ wildly in cost), run
+/// `work(worker, index)`, and stream `(index, value)` pairs back to
+/// `consume` **on the calling thread** in completion order.  The caller
+/// reassembles deterministic order from the indices; with `jobs == 1` no
+/// threads are spawned and indices arrive strictly in order.
+pub fn parallel_indexed_map<T, W, C>(jobs: usize, n: usize, work: W, mut consume: C)
+where
+    T: Send,
+    W: Fn(usize, usize) -> T + Sync,
+    C: FnMut(usize, T),
+{
+    assert!(jobs > 0, "parallel_indexed_map needs at least one job");
+    if jobs == 1 || n <= 1 {
+        for i in 0..n {
+            consume(i, work(0, i));
+        }
+        return;
+    }
+    // declared before the scope so the spawned threads' borrows of the
+    // counter (and the moved sender clones) outlive `'scope`
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|scope| {
+        for worker in 0..jobs.min(n) {
+            let tx = tx.clone();
+            let next = &next;
+            let work = &work;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n || tx.send((i, work(worker, i))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, value) in rx {
+            consume(i, value);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,6 +299,37 @@ mod tests {
         assert_eq!(cu.wait(), CuState::Done);
         assert_eq!(pool.completed(), 1);
         pool.shutdown();
+    }
+
+    #[test]
+    fn parallel_indexed_map_reassembles_by_index() {
+        let mut out = vec![0usize; 64];
+        parallel_indexed_map(4, 64, |_worker, i| i * 3, |i, v| out[i] = v);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 3);
+        }
+    }
+
+    #[test]
+    fn parallel_indexed_map_single_job_runs_inline_in_order() {
+        let mut order = Vec::new();
+        parallel_indexed_map(1, 16, |worker, i| {
+            assert_eq!(worker, 0);
+            i
+        }, |i, v| {
+            assert_eq!(i, v);
+            order.push(i);
+        });
+        assert_eq!(order, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_indexed_map_handles_empty_and_tiny_inputs() {
+        let mut hits = 0;
+        parallel_indexed_map(8, 0, |_, i| i, |_, _| hits += 1);
+        assert_eq!(hits, 0);
+        parallel_indexed_map(8, 1, |_, i| i, |_, _| hits += 1);
+        assert_eq!(hits, 1);
     }
 
     #[test]

@@ -5,7 +5,10 @@
 use pilot_streaming::broker::BackoffController;
 use pilot_streaming::engine::{CalibratedEngine, StepEngine};
 use pilot_streaming::insight::figures::{default_calibration, engine_factory};
-use pilot_streaming::insight::{group_observations, run_sweep, ExperimentSpec};
+use pilot_streaming::insight::{
+    group_observations, paper_key, run_sweep, ExperimentSpec, AXIS_CENTROIDS, AXIS_MESSAGE_SIZE,
+    AXIS_PARTITIONS,
+};
 use pilot_streaming::kmeans::NativeEngine;
 use pilot_streaming::miniapp::{run_sim, PlatformKind, Scenario};
 use pilot_streaming::sim::Dist;
@@ -168,10 +171,10 @@ fn ablation_contention_coefficients_drive_fitted_sigma() {
     use pilot_streaming::sim::ContentionParams;
     let sigma_for = |alpha: f64| {
         let mut spec = ExperimentSpec::paper_grid(32, 17);
-        spec.platforms = vec![PlatformKind::DaskWrangler];
-        spec.message_sizes = vec![16_000];
-        spec.centroids = vec![1_024];
-        spec.partitions = vec![1, 2, 4, 8, 16];
+        spec.set_platforms(&[PlatformKind::DaskWrangler]);
+        spec.set_ints(AXIS_MESSAGE_SIZE, [16_000]);
+        spec.set_ints(AXIS_CENTROIDS, [1_024]);
+        spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8, 16]);
         spec.lustre = ContentionParams::new(alpha, 0.02);
         let rows = run_sweep(&spec, engine_factory(default_calibration()));
         analyze(&rows)[0].fit.params.sigma
@@ -246,12 +249,12 @@ fn ablation_observations_match_fitted_curve() {
     // enough messages per shard that one-off cold starts don't distort
     // the per-partition operating point
     let mut spec = ExperimentSpec::paper_grid(240, 31);
-    spec.platforms = vec![PlatformKind::Lambda];
-    spec.message_sizes = vec![8_000];
-    spec.centroids = vec![1_024];
-    spec.partitions = vec![1, 2, 4, 8];
+    spec.set_platforms(&[PlatformKind::Lambda]);
+    spec.set_ints(AXIS_MESSAGE_SIZE, [8_000]);
+    spec.set_ints(AXIS_CENTROIDS, [1_024]);
+    spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8]);
     let rows = run_sweep(&spec, engine_factory(default_calibration()));
-    let obs = group_observations(&rows, (PlatformKind::Lambda, 8_000, 1_024, 3_008));
+    let obs = group_observations(&rows, &paper_key(PlatformKind::Lambda, 8_000, 1_024, 3_008));
     let f = pilot_streaming::usl::fit(&obs).unwrap();
     for o in &obs {
         let pred = f.params.throughput(o.n);

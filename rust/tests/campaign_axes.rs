@@ -1,0 +1,132 @@
+//! Campaign-engine integration tests: axis composition and deterministic
+//! parallel sweeps.
+//!
+//! The two acceptance properties of the campaign refactor:
+//!
+//! 1. A *new* sweep axis (here: edge site count) composes into specs,
+//!    scenarios, grouping, USL analysis, and CSV export with **zero
+//!    changes** to `run_sweep`, `analysis.rs`, or `figures.rs` — this
+//!    file only constructs an [`Axis`] and attaches it.
+//! 2. `run_sweep_jobs(spec, k)` equals `jobs = 1` row-for-row (same
+//!    seeds, same order, byte-identical CSV and fits) for k in {2, 8}.
+
+use pilot_streaming::insight::figures::{default_calibration, engine_factory};
+use pilot_streaming::insight::{
+    analyze, group_keys, run_sweep, run_sweep_jobs, to_csv, Axis, ExperimentSpec,
+    AXIS_CENTROIDS, AXIS_MESSAGE_SIZE, AXIS_PARTITIONS,
+};
+use pilot_streaming::miniapp::PlatformKind;
+
+fn edge_sites_spec() -> ExperimentSpec {
+    let mut spec = ExperimentSpec::new("edge-sites", 12, 9);
+    spec.set_platforms(&[PlatformKind::Edge]);
+    spec.set_ints(AXIS_MESSAGE_SIZE, [256]);
+    spec.set_ints(AXIS_CENTROIDS, [16]);
+    spec.set_ints(AXIS_PARTITIONS, [1, 2, 4]);
+    // the new dimension: a fleet-size axis nothing in the engine knows about
+    spec.with_axis(Axis::ints("edge_sites", [1, 2]))
+}
+
+#[test]
+fn new_axis_composes_without_engine_changes() {
+    let spec = edge_sites_spec();
+    assert_eq!(spec.size(), 6, "platform x MS x WC x 3 partitions x 2 sites");
+    // the custom axis reaches every scenario as an extension parameter
+    for sc in spec.scenarios() {
+        assert!(matches!(sc.extra_param("edge_sites"), Some(1) | Some(2)));
+    }
+    let rows = run_sweep(&spec, engine_factory(default_calibration()));
+    assert_eq!(rows.len(), 6);
+    // grouping derives from the axes: one USL curve per edge_sites level
+    let keys = group_keys(&rows);
+    assert_eq!(keys.len(), 2);
+    for k in &keys {
+        assert!(matches!(k.int("edge_sites"), Some(1) | Some(2)));
+        assert_eq!(k.platform(), Some(PlatformKind::Edge));
+    }
+    // analysis fits each group untouched
+    let analysis = analyze(&rows);
+    assert_eq!(analysis.len(), 2);
+    for a in &analysis {
+        assert_eq!(a.observations, 3);
+        assert!(a.axis_int("edge_sites").is_some());
+        // the generic JSON export carries the axis too
+        assert!(a.to_json().get("edge_sites").as_usize().is_some());
+    }
+    // CSV export grows the axis column automatically
+    let csv = to_csv(&rows);
+    let header = csv.lines().next().unwrap();
+    assert!(header.contains("edge_sites"), "header: {header}");
+    assert!(header.contains("warm_mean") && header.contains("warm_cv"));
+}
+
+#[test]
+fn parallel_sweep_is_deterministic() {
+    // property: across seeds and worker counts, the parallel sweep is
+    // indistinguishable from the sequential one
+    for seed in [5u64, 23] {
+        let spec = ExperimentSpec::tiny_grid(24, seed);
+        let baseline = run_sweep_jobs(&spec, engine_factory(default_calibration()), 1, |_| {});
+        assert_eq!(baseline.len(), spec.size());
+        let base_csv = to_csv(&baseline);
+        let base_fits = analyze(&baseline);
+        for jobs in [2usize, 8] {
+            let rows =
+                run_sweep_jobs(&spec, engine_factory(default_calibration()), jobs, |_| {});
+            assert_eq!(rows.len(), baseline.len(), "seed={seed} jobs={jobs}");
+            for (i, (a, b)) in baseline.iter().zip(&rows).enumerate() {
+                assert_eq!(a, b, "row {i} differs at seed={seed} jobs={jobs}");
+            }
+            assert_eq!(
+                to_csv(&rows),
+                base_csv,
+                "CSV must be byte-identical (seed={seed} jobs={jobs})"
+            );
+            let fits = analyze(&rows);
+            assert_eq!(fits.len(), base_fits.len());
+            for (a, b) in base_fits.iter().zip(&fits) {
+                assert_eq!(a.key, b.key);
+                assert_eq!(
+                    a.fit.params.sigma.to_bits(),
+                    b.fit.params.sigma.to_bits(),
+                    "sigma must match bit-for-bit (seed={seed} jobs={jobs})"
+                );
+                assert_eq!(a.fit.params.kappa.to_bits(), b.fit.params.kappa.to_bits());
+                assert_eq!(a.fit.params.lambda.to_bits(), b.fit.params.lambda.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn progress_streams_every_row_once() {
+    let spec = ExperimentSpec::tiny_grid(16, 3);
+    let mut seen = 0usize;
+    let rows = run_sweep_jobs(&spec, engine_factory(default_calibration()), 4, |p| {
+        seen += 1;
+        assert_eq!(p.done, seen, "done counts completion order");
+        assert_eq!(p.total, spec.size());
+        assert!(p.row.throughput > 0.0);
+    });
+    assert_eq!(seen, rows.len());
+}
+
+#[test]
+fn incremental_fits_match_the_final_analysis() {
+    use pilot_streaming::insight::IncrementalAnalysis;
+    let spec = ExperimentSpec::tiny_grid(24, 7);
+    let mut inc = IncrementalAnalysis::new(&spec);
+    let mut streamed = Vec::new();
+    let rows = run_sweep_jobs(&spec, engine_factory(default_calibration()), 4, |p| {
+        if let Some(a) = inc.observe(p.row) {
+            streamed.push(a);
+        }
+    });
+    let fin = analyze(&rows);
+    assert_eq!(streamed.len(), fin.len(), "every group fit exactly once");
+    for s in &streamed {
+        let f = fin.iter().find(|f| f.key == s.key).unwrap();
+        assert_eq!(s.fit.params.sigma.to_bits(), f.fit.params.sigma.to_bits());
+        assert_eq!(s.fit.params.lambda.to_bits(), f.fit.params.lambda.to_bits());
+    }
+}

@@ -6,7 +6,10 @@
 //! paper's.
 
 use pilot_streaming::insight::figures::{default_calibration, engine_factory};
-use pilot_streaming::insight::{analyze, group_observations, run_sweep, ExperimentSpec};
+use pilot_streaming::insight::{
+    analyze, group_observations, paper_key, run_sweep, ExperimentSpec, AXIS_CENTROIDS,
+    AXIS_MESSAGE_SIZE, AXIS_PARTITIONS,
+};
 use pilot_streaming::miniapp::PlatformKind;
 use pilot_streaming::usl::{fit, fit_amdahl, rmse_vs_train_size, Obs};
 use pilot_streaming::util::stats::mean;
@@ -15,8 +18,8 @@ fn sweep_16k() -> Vec<pilot_streaming::insight::SweepRow> {
     // enough messages per shard at P=16 that one-off cold starts do not
     // distort the steady-state operating point
     let mut spec = ExperimentSpec::paper_grid(160, 99);
-    spec.message_sizes = vec![16_000];
-    spec.partitions = vec![1, 2, 4, 8, 16];
+    spec.set_ints(AXIS_MESSAGE_SIZE, [16_000]);
+    spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8, 16]);
     run_sweep(&spec, engine_factory(default_calibration()))
 }
 
@@ -27,8 +30,8 @@ fn fig6_sigma_kappa_contrast() {
     assert_eq!(analysis.len(), 6, "2 platforms x 3 WC");
     for a in &analysis {
         assert!(a.fit.r2 > 0.85, "paper's R2 band: {a:?}");
-        match a.platform {
-            PlatformKind::Lambda => {
+        match a.platform() {
+            Some(PlatformKind::Lambda) => {
                 assert!(
                     a.fit.params.sigma < 0.1,
                     "Lambda sigma {} should be ~0",
@@ -43,9 +46,9 @@ fn fig6_sigma_kappa_contrast() {
             _ => {
                 assert!(
                     a.fit.params.sigma > 0.1,
-                    "Dask sigma {} should be substantial (WC={})",
+                    "Dask sigma {} should be substantial (WC={:?})",
                     a.fit.params.sigma,
-                    a.centroids
+                    a.axis_int(AXIS_CENTROIDS)
                 );
                 assert!(a.fit.params.kappa > 0.001, "Dask kappa {} > 0", a.fit.params.kappa);
             }
@@ -54,7 +57,10 @@ fn fig6_sigma_kappa_contrast() {
     // light-WC Dask groups land in the paper's sigma in [0.4, 1]
     let light: Vec<f64> = analysis
         .iter()
-        .filter(|a| a.platform == PlatformKind::DaskWrangler && a.centroids <= 1_024)
+        .filter(|a| {
+            a.platform() == Some(PlatformKind::DaskWrangler)
+                && a.axis_int(AXIS_CENTROIDS).unwrap_or(0) <= 1_024
+        })
         .map(|a| a.fit.params.sigma)
         .collect();
     let m = mean(&light);
@@ -66,7 +72,7 @@ fn fig5_speedup_shapes() {
     let rows = sweep_16k();
     // Lambda: monotone throughput growth
     for wc in [128usize, 1_024, 8_192] {
-        let obs = group_observations(&rows, (PlatformKind::Lambda, 16_000, wc, 3_008));
+        let obs = group_observations(&rows, &paper_key(PlatformKind::Lambda, 16_000, wc, 3_008));
         for w in obs.windows(2) {
             assert!(
                 w[1].t > w[0].t * 0.95,
@@ -77,7 +83,8 @@ fn fig5_speedup_shapes() {
     }
     // Dask: retrogrades by P=16 in every group
     for wc in [128usize, 1_024, 8_192] {
-        let obs = group_observations(&rows, (PlatformKind::DaskWrangler, 16_000, wc, 3_008));
+        let obs =
+            group_observations(&rows, &paper_key(PlatformKind::DaskWrangler, 16_000, wc, 3_008));
         let peak = obs.iter().map(|o| o.t).fold(0.0f64, f64::max);
         let last = obs.last().unwrap().t;
         assert!(
@@ -86,7 +93,8 @@ fn fig5_speedup_shapes() {
         );
     }
     // compute-heavy Dask shows a modest early speedup (paper: ~1.2x by P<=4)
-    let heavy = group_observations(&rows, (PlatformKind::DaskWrangler, 16_000, 8_192, 3_008));
+    let heavy =
+        group_observations(&rows, &paper_key(PlatformKind::DaskWrangler, 16_000, 8_192, 3_008));
     let t1 = heavy[0].t;
     let early = heavy
         .iter()
@@ -102,12 +110,12 @@ fn fig5_speedup_shapes() {
 #[test]
 fn fig7_small_training_sets_suffice() {
     let mut spec = ExperimentSpec::paper_grid(160, 7);
-    spec.message_sizes = vec![16_000];
-    spec.centroids = vec![1_024];
-    spec.partitions = vec![1, 2, 3, 4, 6, 8, 12, 16];
+    spec.set_ints(AXIS_MESSAGE_SIZE, [16_000]);
+    spec.set_ints(AXIS_CENTROIDS, [1_024]);
+    spec.set_ints(AXIS_PARTITIONS, [1, 2, 3, 4, 6, 8, 12, 16]);
     let rows = run_sweep(&spec, engine_factory(default_calibration()));
     for platform in [PlatformKind::Lambda, PlatformKind::DaskWrangler] {
-        let obs: Vec<Obs> = group_observations(&rows, (platform, 16_000, 1_024, 3_008));
+        let obs: Vec<Obs> = group_observations(&rows, &paper_key(platform, 16_000, 1_024, 3_008));
         let eval = rmse_vs_train_size(&obs, &[3, 5], 30, 11).unwrap();
         let mean_t = mean(&obs.iter().map(|o| o.t).collect::<Vec<_>>());
         let norm3 = eval[0].rmse_mean / mean_t;
@@ -122,7 +130,8 @@ fn fig7_small_training_sets_suffice() {
 fn usl_explains_dask_better_than_amdahl() {
     // the model-selection claim behind choosing USL at all
     let rows = sweep_16k();
-    let obs = group_observations(&rows, (PlatformKind::DaskWrangler, 16_000, 128, 3_008));
+    let obs =
+        group_observations(&rows, &paper_key(PlatformKind::DaskWrangler, 16_000, 128, 3_008));
     let usl = fit(&obs).unwrap();
     let amdahl = fit_amdahl(&obs).unwrap();
     assert!(
@@ -140,10 +149,10 @@ fn isolated_filesystem_ablation_restores_dask_scaling() {
     // some other accident of the pipeline
     use pilot_streaming::sim::ContentionParams;
     let mut spec = ExperimentSpec::paper_grid(160, 21);
-    spec.platforms = vec![PlatformKind::DaskWrangler];
-    spec.message_sizes = vec![16_000];
-    spec.centroids = vec![1_024];
-    spec.partitions = vec![1, 2, 4, 8, 16];
+    spec.set_platforms(&[PlatformKind::DaskWrangler]);
+    spec.set_ints(AXIS_MESSAGE_SIZE, [16_000]);
+    spec.set_ints(AXIS_CENTROIDS, [1_024]);
+    spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8, 16]);
     spec.lustre = ContentionParams::ISOLATED;
     let rows = run_sweep(&spec, engine_factory(default_calibration()));
     let analysis = analyze(&rows);
