@@ -1,0 +1,111 @@
+//! Autoscale control-loop benchmark: the USL-model replay vs the live
+//! closed loop (real pilot, real `resize_pilot` transitions) on the same
+//! burst trace — wall-clock cost and goodput side by side, plus the
+//! fixed-parallelism baseline the loop must beat.
+//!
+//! Emits `BENCH_autoscale.json` (override the path with
+//! `PS_BENCH_AUTOSCALE_OUT`; shrink the trace with
+//! `PS_BENCH_AUTOSCALE_INTERVALS`).  Run: `cargo bench --bench autoscale`.
+
+use pilot_streaming::engine::{CalibratedEngine, StepEngine};
+use pilot_streaming::insight::{
+    replay, run_fixed, trace_burst, AutoscaleConfig, Autoscaler, ControlLoop, PilotTarget,
+    Predictor,
+};
+use pilot_streaming::miniapp::{LivePilot, PlatformKind, Scenario};
+use pilot_streaming::sim::Dist;
+use pilot_streaming::usl::UslParams;
+use pilot_streaming::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn engine() -> Arc<dyn StepEngine> {
+    let mut e = CalibratedEngine::new(11);
+    e.insert((64, 8), Dist::Const(0.05));
+    Arc::new(e)
+}
+
+fn main() {
+    let intervals: usize = std::env::var("PS_BENCH_AUTOSCALE_INTERVALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120);
+    let trace = trace_burst(intervals, 20.0, 200.0, intervals / 4);
+    let predictor = Predictor {
+        params: UslParams::new(0.02, 0.0001, 18.0),
+    };
+    eprintln!("[bench] autoscale: {} control intervals, burst 20 -> 200 msg/s", intervals);
+
+    // model replay (instant transitions, analytic capacity)
+    let t0 = Instant::now();
+    let model = replay(
+        predictor.clone(),
+        AutoscaleConfig::default(),
+        &trace,
+        1.0,
+        2,
+    );
+    let replay_s = t0.elapsed().as_secs_f64();
+
+    // live closed loop: decisions actuate resize_pilot on a real pilot
+    let scenario = Scenario {
+        platform: PlatformKind::Lambda,
+        partitions: 2,
+        points_per_message: 64,
+        centroids: 8,
+        ..Default::default()
+    };
+    let t1 = Instant::now();
+    let scaler = Autoscaler::new(
+        predictor,
+        AutoscaleConfig {
+            max_parallelism: 16,
+            ..Default::default()
+        },
+        2,
+    );
+    let mut live = PilotTarget::new(LivePilot::provision(&scenario, engine()).expect("provision"));
+    let live_report = ControlLoop::new(scaler, 1.0)
+        .run(&mut live, &trace)
+        .expect("live loop");
+    live.shutdown();
+    let live_s = t1.elapsed().as_secs_f64();
+
+    // fixed-parallelism baseline on an identical fresh pilot
+    let mut fixed = PilotTarget::new(LivePilot::provision(&scenario, engine()).expect("provision"));
+    let fixed_report = run_fixed(&mut fixed, &trace, 1.0).expect("baseline");
+    fixed.shutdown();
+
+    assert!(
+        live_report.goodput() > fixed_report.goodput(),
+        "the closed loop must beat the fixed baseline under a burst: {} vs {}",
+        live_report.goodput(),
+        fixed_report.goodput()
+    );
+    println!(
+        "replay {replay_s:.3}s (goodput {:.3}) | live {live_s:.3}s (goodput {:.3}, {} resizes) | fixed baseline goodput {:.3}",
+        model.goodput(),
+        live_report.goodput(),
+        live_report.resizes.len(),
+        fixed_report.goodput()
+    );
+
+    let out = std::env::var("PS_BENCH_AUTOSCALE_OUT")
+        .unwrap_or_else(|_| "BENCH_autoscale.json".to_string());
+    let json = Json::obj(vec![
+        ("intervals", Json::from(intervals)),
+        ("replay_seconds", Json::from(replay_s)),
+        ("replay_goodput", Json::from(model.goodput())),
+        ("live_seconds", Json::from(live_s)),
+        ("live_goodput", Json::from(live_report.goodput())),
+        ("live_scale_events", Json::from(live_report.scale_events as usize)),
+        ("live_resizes", Json::from(live_report.resizes.len())),
+        ("fixed_goodput", Json::from(fixed_report.goodput())),
+        (
+            "goodput_gain_pts",
+            Json::from((live_report.goodput() - fixed_report.goodput()) * 100.0),
+        ),
+    ]);
+    std::fs::write(&out, json.pretty()).expect("write autoscale bench report");
+    println!("wrote {out}");
+}

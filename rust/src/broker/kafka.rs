@@ -8,7 +8,7 @@ use super::shard::Shard;
 use super::{partition_for_key, Broker, BrokerError, PutResult};
 use crate::sim::{ContentionParams, SharedClock, SharedResource};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 /// Kafka broker configuration.
 #[derive(Debug, Clone)]
@@ -31,10 +31,12 @@ impl Default for KafkaConfig {
     }
 }
 
-/// The Kafka-like topic.
+/// The Kafka-like topic.  Partitions live behind a `RwLock` so the
+/// elastic control plane can repartition a live topic
+/// ([`KafkaTopic::set_partitions`]).
 pub struct KafkaTopic {
     name: String,
-    partitions: Vec<Shard>,
+    partitions: RwLock<Vec<Shard>>,
     config: KafkaConfig,
     clock: SharedClock,
     /// The shared filesystem the log is flushed to.  On the paper's HPC
@@ -55,14 +57,29 @@ impl KafkaTopic {
         assert!(num_partitions > 0);
         Self {
             name: name.to_string(),
-            partitions: (0..num_partitions)
-                .map(|_| Shard::new(config.retention))
-                .collect(),
+            partitions: RwLock::new(
+                (0..num_partitions)
+                    .map(|_| Shard::new(config.retention))
+                    .collect(),
+            ),
             config,
             clock,
             shared_fs,
             appends: AtomicU64::new(0),
         }
+    }
+
+    /// Live repartition to `n` partitions — the broker resize primitive.
+    /// Kafka only ever *adds* partitions in production; shrinking here
+    /// drops the tail partitions (with their unconsumed records), which
+    /// models a topic rebuild.
+    pub fn set_partitions(&self, n: usize) {
+        assert!(n > 0, "topic needs at least one partition");
+        let mut parts = self.partitions.write().unwrap();
+        while parts.len() < n {
+            parts.push(Shard::new(self.config.retention));
+        }
+        parts.truncate(n);
     }
 
     /// Convenience: topic on an isolated (uncontended) filesystem.
@@ -102,16 +119,17 @@ impl Broker for KafkaTopic {
     }
 
     fn num_partitions(&self) -> usize {
-        self.partitions.len()
+        self.partitions.read().unwrap().len()
     }
 
     fn put(&self, message: Message) -> Result<PutResult, BrokerError> {
-        let partition = partition_for_key(message.key, self.partitions.len());
+        let parts = self.partitions.read().unwrap();
+        let partition = partition_for_key(message.key, parts.len());
         let now = self.clock.now();
         let cost = self.append_cost(message.wire_bytes() as f64);
         let produced_at = message.produced_at;
         let available_at = now + cost;
-        let offset = self.partitions[partition].append(message, available_at);
+        let offset = parts[partition].append(message, available_at);
         self.appends.fetch_add(1, Ordering::Relaxed);
         Ok(PutResult {
             partition,
@@ -128,6 +146,8 @@ impl Broker for KafkaTopic {
         now: f64,
     ) -> Result<Vec<StoredRecord>, BrokerError> {
         self.partitions
+            .read()
+            .unwrap()
             .get(partition)
             .map(|s| s.fetch(offset, max, now))
             .ok_or(BrokerError::UnknownPartition(partition))
@@ -135,6 +155,8 @@ impl Broker for KafkaTopic {
 
     fn latest_offset(&self, partition: usize) -> Result<u64, BrokerError> {
         self.partitions
+            .read()
+            .unwrap()
             .get(partition)
             .map(|s| s.latest_offset())
             .ok_or(BrokerError::UnknownPartition(partition))

@@ -6,7 +6,7 @@ use super::message::{Message, StoredRecord};
 use super::shard::Shard;
 use super::{partition_for_key, Broker, BrokerError, PutResult};
 use crate::sim::SharedClock;
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 
 /// Per-shard ingest limits (real Kinesis: 1 MB/s and 1,000 records/s).
 #[derive(Debug, Clone, Copy)]
@@ -69,11 +69,39 @@ struct ShardState {
     puts: u64,
 }
 
-/// The Kinesis-like stream.
+impl ShardState {
+    fn new(limits: &ShardLimits) -> Self {
+        Self {
+            bytes: TokenBucket::new(limits.bytes_per_sec, limits.bytes_per_sec),
+            records: TokenBucket::new(limits.records_per_sec, limits.records_per_sec),
+            throttles: 0,
+            puts: 0,
+        }
+    }
+}
+
+/// One shard with its rate-limit state; the stream's resharding unit.
+struct ShardSlot {
+    log: Shard,
+    state: Mutex<ShardState>,
+}
+
+impl ShardSlot {
+    fn new(limits: &ShardLimits) -> Self {
+        Self {
+            log: Shard::new(0),
+            state: Mutex::new(ShardState::new(limits)),
+        }
+    }
+}
+
+/// The Kinesis-like stream.  The shard set lives behind a `RwLock` so the
+/// elastic control plane can reshard a live stream
+/// ([`KinesisStream::set_shards`]) while producers and consumers keep
+/// running.
 pub struct KinesisStream {
     name: String,
-    shards: Vec<Shard>,
-    states: Vec<Mutex<ShardState>>,
+    shards: RwLock<Vec<ShardSlot>>,
     limits: ShardLimits,
     clock: SharedClock,
 }
@@ -83,20 +111,7 @@ impl KinesisStream {
         assert!(num_shards > 0);
         Self {
             name: name.to_string(),
-            shards: (0..num_shards).map(|_| Shard::new(0)).collect(),
-            states: (0..num_shards)
-                .map(|_| {
-                    Mutex::new(ShardState {
-                        bytes: TokenBucket::new(limits.bytes_per_sec, limits.bytes_per_sec),
-                        records: TokenBucket::new(
-                            limits.records_per_sec,
-                            limits.records_per_sec,
-                        ),
-                        throttles: 0,
-                        puts: 0,
-                    })
-                })
-                .collect(),
+            shards: RwLock::new((0..num_shards).map(|_| ShardSlot::new(&limits)).collect()),
             limits,
             clock,
         }
@@ -106,13 +121,36 @@ impl KinesisStream {
         &self.name
     }
 
-    /// Throttling events observed on a shard (for backoff diagnostics).
-    pub fn throttle_count(&self, shard: usize) -> u64 {
-        self.states[shard].lock().unwrap().throttles
+    /// Live reshard (split/merge) to `n` shards — the broker resize
+    /// primitive.  Splits add fresh shards (keys re-hash across the new
+    /// layout); merges drop the tail shards, discarding their unconsumed
+    /// records the way a merge folds child iterators into the survivor.
+    pub fn set_shards(&self, n: usize) {
+        assert!(n > 0, "stream needs at least one shard");
+        let mut shards = self.shards.write().unwrap();
+        while shards.len() < n {
+            shards.push(ShardSlot::new(&self.limits));
+        }
+        shards.truncate(n);
     }
 
+    /// Throttling events observed on a shard (for backoff diagnostics).
+    /// Shards merged away by [`KinesisStream::set_shards`] report 0.
+    pub fn throttle_count(&self, shard: usize) -> u64 {
+        self.shards
+            .read()
+            .unwrap()
+            .get(shard)
+            .map_or(0, |s| s.state.lock().unwrap().throttles)
+    }
+
+    /// Puts accepted on a shard; 0 for shards merged away.
     pub fn put_count(&self, shard: usize) -> u64 {
-        self.states[shard].lock().unwrap().puts
+        self.shards
+            .read()
+            .unwrap()
+            .get(shard)
+            .map_or(0, |s| s.state.lock().unwrap().puts)
     }
 }
 
@@ -122,15 +160,16 @@ impl Broker for KinesisStream {
     }
 
     fn num_partitions(&self) -> usize {
-        self.shards.len()
+        self.shards.read().unwrap().len()
     }
 
     fn put(&self, message: Message) -> Result<PutResult, BrokerError> {
-        let partition = partition_for_key(message.key, self.shards.len());
+        let shards = self.shards.read().unwrap();
+        let partition = partition_for_key(message.key, shards.len());
         let now = self.clock.now();
         let wire = message.wire_bytes() as f64;
         {
-            let mut st = self.states[partition].lock().unwrap();
+            let mut st = shards[partition].state.lock().unwrap();
             let need_bytes = st.bytes.try_take(wire, now);
             let need_recs = st.records.try_take(1.0, now);
             match (need_bytes, need_recs) {
@@ -149,7 +188,7 @@ impl Broker for KinesisStream {
         }
         let produced_at = message.produced_at;
         let available_at = now + self.limits.put_latency;
-        let offset = self.shards[partition].append(message, available_at);
+        let offset = shards[partition].log.append(message, available_at);
         Ok(PutResult {
             partition,
             offset,
@@ -165,15 +204,19 @@ impl Broker for KinesisStream {
         now: f64,
     ) -> Result<Vec<StoredRecord>, BrokerError> {
         self.shards
+            .read()
+            .unwrap()
             .get(partition)
-            .map(|s| s.fetch(offset, max, now))
+            .map(|s| s.log.fetch(offset, max, now))
             .ok_or(BrokerError::UnknownPartition(partition))
     }
 
     fn latest_offset(&self, partition: usize) -> Result<u64, BrokerError> {
         self.shards
+            .read()
+            .unwrap()
             .get(partition)
-            .map(|s| s.latest_offset())
+            .map(|s| s.log.latest_offset())
             .ok_or(BrokerError::UnknownPartition(partition))
     }
 }
@@ -197,6 +240,35 @@ mod tests {
 
     fn msg(key: u64, n: usize, t: f64) -> Message {
         Message::new(7, key, Arc::new(vec![0.0; n * 8]), 8, t)
+    }
+
+    #[test]
+    fn live_resharding_splits_and_merges() {
+        let (s, clock) = mk(2);
+        clock.advance_to(1.0);
+        assert_eq!(s.num_partitions(), 2);
+        s.put(msg(1, 10, 1.0)).unwrap();
+        // split: keys immediately re-hash across the wider layout
+        s.set_shards(6);
+        assert_eq!(s.num_partitions(), 6);
+        for k in 0..32 {
+            s.put(msg(k, 1, 1.0)).unwrap();
+        }
+        let spread = (0..6)
+            .filter(|&p| s.latest_offset(p).unwrap() > 0)
+            .count();
+        assert!(spread > 2, "keys must spread across the split: {spread}");
+        // merge: tail shards fold away and are no longer addressable
+        s.set_shards(1);
+        assert_eq!(s.num_partitions(), 1);
+        assert!(matches!(
+            s.fetch(3, 0, 10, 2.0),
+            Err(BrokerError::UnknownPartition(3))
+        ));
+        // diagnostics on merged-away shards degrade gracefully
+        assert_eq!(s.throttle_count(5), 0);
+        assert_eq!(s.put_count(5), 0);
+        s.put(msg(9, 1, 1.0)).unwrap();
     }
 
     #[test]

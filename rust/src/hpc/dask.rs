@@ -48,7 +48,9 @@ impl TaskReport {
 /// The Dask-like pool: P workers sharing one filesystem.
 pub struct DaskPool {
     machine: Machine,
-    workers: usize,
+    /// Live worker count; moved at runtime by the elastic control plane
+    /// via [`DaskPool::set_workers`].
+    workers: AtomicUsize,
     engine: Arc<dyn StepEngine>,
     store: Arc<SharedFsStore>,
     rng: Mutex<Pcg32>,
@@ -76,7 +78,7 @@ impl DaskPool {
         assert!(workers > 0 && workers <= machine.max_workers());
         Self {
             machine,
-            workers,
+            workers: AtomicUsize::new(workers),
             engine,
             store,
             rng: Mutex::new(Pcg32::seeded(seed)),
@@ -88,11 +90,24 @@ impl DaskPool {
     }
 
     pub fn workers(&self) -> usize {
-        self.workers
+        self.workers.load(Ordering::Relaxed)
+    }
+
+    /// Change the live worker count (bounded by the machine).  The pool's
+    /// coherency and FS-concurrency terms follow immediately — P peers
+    /// become `n` peers — which is exactly the capacity/contention
+    /// trade-off the USL curves measure.
+    pub fn set_workers(&self, n: usize) {
+        assert!(
+            n > 0 && n <= self.machine.max_workers(),
+            "workers {n} outside machine capacity {}",
+            self.machine.max_workers()
+        );
+        self.workers.store(n, Ordering::Relaxed);
     }
 
     pub fn nodes(&self) -> usize {
-        self.machine.nodes_for(self.workers)
+        self.machine.nodes_for(self.workers())
     }
 
     pub fn machine(&self) -> &Machine {
@@ -113,7 +128,7 @@ impl DaskPool {
     fn fs_concurrency(&self) -> usize {
         // saturated steady state: every worker does model I/O around its
         // compute, and Kafka adds roughly one more concurrent writer.
-        self.workers + 1
+        self.workers() + 1
     }
 
     /// Process one message's points on `worker`.
@@ -131,8 +146,9 @@ impl DaskPool {
         model_key: &str,
         centroids: usize,
     ) -> Result<TaskReport, DaskError> {
-        if worker >= self.workers {
-            return Err(DaskError::BadWorker(worker, self.workers));
+        let workers = self.workers();
+        if worker >= workers {
+            return Err(DaskError::BadWorker(worker, workers));
         }
         self.active.fetch_add(1, Ordering::SeqCst);
         let result = self.process_inner(worker, points, dim, model_key, centroids);
@@ -180,10 +196,10 @@ impl DaskPool {
 
         // coherency: every peer re-reads this update before its next step;
         // charge this task its amortized share of that all-to-all traffic.
-        let peers = self.workers.saturating_sub(1) as f64;
+        let workers = self.workers();
+        let peers = workers.saturating_sub(1) as f64;
         let sync = if peers > 0.0 {
-            self.store.io_at(model_bytes, conc).seconds * io_noise * peers
-                / self.workers as f64
+            self.store.io_at(model_bytes, conc).seconds * io_noise * peers / workers as f64
         } else {
             0.0
         };
@@ -286,6 +302,24 @@ mod tests {
         let r = knl.process(0, &pts(), 8, "m", 16).unwrap();
         // 0.05 s of reference CPU on a 0.55-speed core ≈ 0.09 s
         assert!(r.compute > 0.07, "compute={}", r.compute);
+    }
+
+    #[test]
+    fn worker_count_moves_at_runtime() {
+        let p = pool(2, 0.4, 0.03);
+        assert_eq!(p.workers(), 2);
+        assert!(p.process(3, &pts(), 8, "m", 16).is_err());
+        // scale up: the new worker is addressable and the shared-FS
+        // concurrency (and thus contention) follows
+        p.set_workers(8);
+        let r = p.process(3, &pts(), 8, "m", 16).unwrap();
+        assert_eq!(r.observed_concurrency, 9);
+        // scale down: retired workers are no longer addressable
+        p.set_workers(1);
+        assert!(matches!(
+            p.process(3, &pts(), 8, "m", 16),
+            Err(DaskError::BadWorker(3, 1))
+        ));
     }
 
     #[test]

@@ -73,15 +73,40 @@ impl Autoscaler {
         self.current
     }
 
+    /// Clamp the autoscaler's belief of current parallelism to what the
+    /// platform actually realized.  The control loop calls this after
+    /// actuation so device caps (the edge envelope) and clamped
+    /// transitions feed back into the next decision instead of letting
+    /// belief and reality drift.
+    pub fn set_parallelism(&mut self, n: usize) {
+        self.current = n.max(1);
+    }
+
+    /// Tighten the search cap to what the platform proved reachable (a
+    /// clamped resize plan).  Once the cap equals the platform's real
+    /// envelope, unreachable rates resolve to [`ScaleDecision::Throttle`]
+    /// instead of a futile scale-up every interval.
+    pub fn limit_max_parallelism(&mut self, cap: usize) {
+        self.config.max_parallelism = self.config.max_parallelism.min(cap.max(1));
+    }
+
     pub fn scale_events(&self) -> u64 {
         self.scale_events
+    }
+
+    /// Feed one rate observation into the EWMA *without* deciding — used
+    /// by the control loop while a resize transition is in flight, so the
+    /// smoothed rate stays warm but no phantom scale decisions (or
+    /// `scale_events`) accrue against a pilot that cannot actuate them.
+    pub fn observe_rate(&mut self, incoming_rate: f64) -> f64 {
+        self.rate.observe(incoming_rate.max(0.0))
     }
 
     /// Feed one control-interval observation of the incoming rate (msg/s)
     /// and get a decision.
     pub fn observe(&mut self, incoming_rate: f64) -> ScaleDecision {
         self.decisions += 1;
-        let smoothed = self.rate.observe(incoming_rate.max(0.0));
+        let smoothed = self.observe_rate(incoming_rate);
         let target =
             self.predictor
                 .required_parallelism(smoothed, self.config.headroom, self.config.max_parallelism);

@@ -1,10 +1,15 @@
-//! Closed-loop autoscaling simulation: replay a time-varying ingest-rate
+//! Closed-loop autoscaling *simulation*: replay a time-varying ingest-rate
 //! trace against the USL-driven [`Autoscaler`] and account for processed,
-//! backlogged and throttled messages per control interval — the
-//! "predictive scaling" capability the paper's conclusion calls for,
-//! exercised end to end.
+//! backlogged and throttled messages per control interval.
+//!
+//! Since the elastic control plane landed, [`replay`] is a thin wrapper
+//! over [`ControlLoop`](super::control::ControlLoop) with a
+//! [`ModelTarget`](super::control::ModelTarget): the same loop that
+//! re-provisions a *live* pilot (`autoscale --live`) runs here against the
+//! USL model — one decision path, two actuation seams.
 
 use super::autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
+use super::control::{ControlLoop, ModelTarget, ResizeEvent};
 use super::predict::Predictor;
 use crate::util::rng::Pcg32;
 
@@ -20,7 +25,7 @@ pub struct Tick {
     pub decision: ScaleDecision,
 }
 
-/// Aggregate outcome of a trace replay.
+/// Aggregate outcome of a control-loop run (model replay or live).
 #[derive(Debug, Clone)]
 pub struct AutoscaleReport {
     pub ticks: Vec<Tick>,
@@ -29,6 +34,9 @@ pub struct AutoscaleReport {
     pub throttled_total: f64,
     pub scale_events: u64,
     pub max_backlog: f64,
+    /// Committed live-resize transitions (empty for model replays, whose
+    /// transitions are instantaneous).
+    pub resizes: Vec<ResizeEvent>,
 }
 
 impl AutoscaleReport {
@@ -66,7 +74,8 @@ pub fn trace_burst(intervals: usize, base: f64, burst: f64, burst_at: usize) -> 
 }
 
 /// Replay `trace` (msg/s per control interval of `dt` seconds) against an
-/// autoscaler built on `predictor`.
+/// autoscaler built on `predictor` — [`ControlLoop`] with the USL model as
+/// its [`ScalingTarget`](super::control::ScalingTarget).
 pub fn replay(
     predictor: Predictor,
     config: AutoscaleConfig,
@@ -74,49 +83,11 @@ pub fn replay(
     dt: f64,
     initial_parallelism: usize,
 ) -> AutoscaleReport {
-    let mut scaler = Autoscaler::new(predictor.clone(), config, initial_parallelism);
-    let mut backlog = 0.0f64;
-    let mut ticks = Vec::with_capacity(trace.len());
-    let mut offered_total = 0.0;
-    let mut processed_total = 0.0;
-    let mut throttled_total = 0.0;
-    let mut max_backlog = 0.0f64;
-
-    for (i, &rate) in trace.iter().enumerate() {
-        let decision = scaler.observe(rate);
-        let parallelism = scaler.current_parallelism();
-        let capacity = predictor.throughput(parallelism);
-        // throttle admission when the decision says the source must slow
-        let admitted_rate = match &decision {
-            ScaleDecision::Throttle { max_rate, .. } => rate.min(*max_rate),
-            _ => rate,
-        };
-        let offered = rate * dt;
-        let admitted = admitted_rate * dt;
-        let processed = (backlog + admitted).min(capacity * dt);
-        backlog = (backlog + admitted - processed).max(0.0);
-        offered_total += offered;
-        processed_total += processed;
-        throttled_total += offered - admitted;
-        max_backlog = max_backlog.max(backlog);
-        ticks.push(Tick {
-            t: i as f64 * dt,
-            offered_rate: rate,
-            parallelism,
-            capacity,
-            backlog,
-            throttled: offered - admitted,
-            decision,
-        });
-    }
-    AutoscaleReport {
-        ticks,
-        offered_total,
-        processed_total,
-        throttled_total,
-        scale_events: scaler.scale_events(),
-        max_backlog,
-    }
+    let scaler = Autoscaler::new(predictor.clone(), config, initial_parallelism);
+    let mut target = ModelTarget::new(predictor, initial_parallelism);
+    ControlLoop::new(scaler, dt)
+        .run(&mut target, trace)
+        .expect("the model target cannot fail")
 }
 
 #[cfg(test)]
@@ -178,5 +149,68 @@ mod tests {
         let t1 = trace_diurnal(50, 5.0, 50.0, 9);
         let t2 = trace_diurnal(50, 5.0, 50.0, 9);
         assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn diurnal_trace_shape() {
+        let (base, peak) = (10.0, 200.0);
+        let trace = trace_diurnal(200, base, peak, 7);
+        assert_eq!(trace.len(), 200);
+        assert!(trace.iter().all(|&r| r >= 0.0));
+        // the cosine phase puts the trough at the ends, the crest mid-way;
+        // 5% multiplicative noise cannot move them far
+        let ends = (trace[0] + trace[199]) / 2.0;
+        let mid = trace[100];
+        assert!(ends < base * 1.3, "trough near base: {ends}");
+        assert!(mid > peak * 0.8, "crest near peak: {mid}");
+        let max = trace.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max <= peak * 1.3, "noise stays bounded: {max}");
+    }
+
+    #[test]
+    fn burst_trace_shape() {
+        let trace = trace_burst(100, 20.0, 150.0, 40);
+        assert_eq!(trace.len(), 100);
+        // exactly intervals/10 burst ticks, exactly at [burst_at, burst_at+10)
+        for (i, &r) in trace.iter().enumerate() {
+            if (40..50).contains(&i) {
+                assert_eq!(r, 150.0, "tick {i}");
+            } else {
+                assert_eq!(r, 20.0, "tick {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_throttle_accounting_is_conservative() {
+        // heavily retrograde platform: every decision is a Throttle, so
+        // offered = processed + throttled + final backlog must balance
+        let p = Predictor {
+            params: UslParams::new(0.9, 0.1, 5.0),
+        };
+        let trace = vec![80.0; 40];
+        let report = replay(p, AutoscaleConfig::default(), &trace, 1.0, 1);
+        assert!(
+            report
+                .ticks
+                .iter()
+                .skip(3) // EWMA warm-up
+                .all(|t| matches!(t.decision, ScaleDecision::Throttle { .. })),
+            "an 80 msg/s load on a ~5 msg/s platform must throttle"
+        );
+        assert!(report.throttled_total > 0.0);
+        assert!(report.goodput() < 0.2, "goodput {}", report.goodput());
+        let final_backlog = report.ticks.last().unwrap().backlog;
+        let accounted = report.processed_total + report.throttled_total + final_backlog;
+        assert!(
+            (accounted - report.offered_total).abs() < 1e-6,
+            "conservation: {accounted} vs {}",
+            report.offered_total
+        );
+        // throttled admission stays processable: backlog bounded by one
+        // interval of admitted load
+        assert!(report.max_backlog < 80.0, "max backlog {}", report.max_backlog);
+        // model replays never commit live transitions
+        assert!(report.resizes.is_empty());
     }
 }

@@ -214,11 +214,24 @@ beta = 0.1
 
     #[test]
     fn bad_configs_rejected() {
-        assert!(spec_from_toml("platforms = [\"flink\"]\n").is_err());
+        assert!(spec_from_toml("platforms = [\"heron\"]\n").is_err());
         assert!(spec_from_toml("partitions = [\"x\"]\n").is_err());
         assert!(spec_from_toml("partitions = []\n").is_err());
         assert!(spec_from_toml("[lustre]\nalpha = -1\n").is_err());
         assert!(spec_from_toml("[axes]\nedge_sites = []\n").is_err());
+    }
+
+    #[test]
+    fn registered_plugins_parse_in_configs_with_no_config_changes() {
+        // the unified-naming payoff, declaratively: the flink plugin
+        // registered itself and is immediately sweepable from TOML
+        let spec = spec_from_toml("platforms = [\"flink\", \"lambda\"]\n").unwrap();
+        let levels = &spec.axis("platform").unwrap().levels;
+        assert_eq!(
+            levels[0].as_platform(),
+            Some(PlatformKind::Plugin(crate::pilot::Platform::FLINK))
+        );
+        assert_eq!(levels[1].as_platform(), Some(PlatformKind::Lambda));
     }
 
     #[test]

@@ -1,0 +1,524 @@
+//! The closed control loop (the paper's stated future work): feed
+//! [`Autoscaler`] decisions back as **live re-provisioning** instead of
+//! only replaying them against the USL model.
+//!
+//! [`ScalingTarget`] is the actuation seam: anything that can report its
+//! parallelism, apply a scale decision, and serve one control interval of
+//! load.  Two implementations close the design:
+//!
+//! - [`ModelTarget`] — the USL predictor itself.  Instant transitions,
+//!   analytic capacity; `autoscale_sim::replay` is now a thin wrapper over
+//!   `ControlLoop::run` with this target, byte-for-byte compatible with
+//!   the old replay arithmetic.
+//! - [`PilotTarget`] — a real pilot behind
+//!   [`LivePilot`](crate::miniapp::LivePilot): decisions actuate
+//!   `PilotComputeService::resize_pilot`, transitions ride the `Resizing`
+//!   state with platform-true costs, and every served message is a real
+//!   `StreamProcessor::process` call — cold starts, Lustre contention and
+//!   micro-batch delays all land in the measured goodput.
+//!
+//! The loop synchronizes belief with reality every tick: whatever the
+//! platform actually realized (edge clamps, in-flight transitions) is
+//! written back into the autoscaler before the next decision.
+
+use super::autoscale::{Autoscaler, ScaleDecision};
+use super::autoscale_sim::{AutoscaleReport, Tick};
+use super::predict::Predictor;
+use crate::miniapp::LivePilot;
+use crate::pilot::{PilotState, ResizePlan, ResizeSemantics};
+
+/// One committed live-resize transition, stamped with its loop time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResizeEvent {
+    pub t: f64,
+    pub plan: ResizePlan,
+}
+
+/// Anything the autoscaler can actuate: the USL model or a live pilot.
+pub trait ScalingTarget {
+    /// Short label for reports ("model", "lambda", "dask", ...).
+    fn label(&self) -> String;
+
+    /// Effective parallelism right now.
+    fn parallelism(&self) -> usize;
+
+    /// Whether a resize transition is currently in flight (the loop
+    /// defers decisions — and their accounting — until it lands).
+    fn is_resizing(&self) -> bool {
+        false
+    }
+
+    /// Apply a scale decision.  Returns the committed plan — including
+    /// no-op plans whose semantics carry platform push-back (a clamped
+    /// edge target) — or `None` when nothing was actuated at all (hold,
+    /// mid-transition).
+    fn actuate(&mut self, decision: &ScaleDecision) -> Result<Option<ResizePlan>, String>;
+
+    /// Serve up to `demand` messages over one `dt`-second interval;
+    /// returns how many were actually served.
+    fn serve(&mut self, demand: f64, dt: f64) -> Result<f64, String>;
+
+    /// Nominal capacity (msg/s) at current parallelism, for reporting.
+    fn capacity(&self) -> f64;
+}
+
+/// The USL model as a scaling target: instant transitions, analytic
+/// capacity — the replay side of the seam.
+pub struct ModelTarget {
+    predictor: Predictor,
+    parallelism: usize,
+}
+
+impl ModelTarget {
+    pub fn new(predictor: Predictor, initial_parallelism: usize) -> Self {
+        Self {
+            predictor,
+            parallelism: initial_parallelism.max(1),
+        }
+    }
+}
+
+impl ScalingTarget for ModelTarget {
+    fn label(&self) -> String {
+        "model".into()
+    }
+
+    fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    fn actuate(&mut self, decision: &ScaleDecision) -> Result<Option<ResizePlan>, String> {
+        self.parallelism = match decision {
+            ScaleDecision::Hold { parallelism } => *parallelism,
+            ScaleDecision::Scale { to, .. } => *to,
+            ScaleDecision::Throttle { parallelism, .. } => *parallelism,
+        }
+        .max(1);
+        Ok(None)
+    }
+
+    fn serve(&mut self, demand: f64, dt: f64) -> Result<f64, String> {
+        Ok(demand.min(self.capacity() * dt))
+    }
+
+    fn capacity(&self) -> f64 {
+        self.predictor.throughput(self.parallelism)
+    }
+}
+
+/// A live pilot as a scaling target: the decisions the USL replay only
+/// simulates become `resize_pilot` calls on a provisioned backend.
+pub struct PilotTarget {
+    pilot: LivePilot,
+}
+
+impl PilotTarget {
+    pub fn new(pilot: LivePilot) -> Self {
+        Self { pilot }
+    }
+
+    /// The wrapped live pilot (status inspection, teardown).
+    pub fn pilot(&self) -> &LivePilot {
+        &self.pilot
+    }
+
+    pub fn shutdown(&self) {
+        self.pilot.shutdown();
+    }
+}
+
+impl ScalingTarget for PilotTarget {
+    fn label(&self) -> String {
+        self.pilot.label().into()
+    }
+
+    fn parallelism(&self) -> usize {
+        self.pilot.parallelism()
+    }
+
+    fn is_resizing(&self) -> bool {
+        self.pilot.status().state == PilotState::Resizing
+    }
+
+    fn actuate(&mut self, decision: &ScaleDecision) -> Result<Option<ResizePlan>, String> {
+        let want = match decision {
+            ScaleDecision::Hold { .. } => return Ok(None),
+            ScaleDecision::Scale { to, .. } => *to,
+            ScaleDecision::Throttle { parallelism, .. } => *parallelism,
+        };
+        if self.pilot.status().state == PilotState::Resizing {
+            return Ok(None); // one transition at a time
+        }
+        if want == self.pilot.parallelism() {
+            return Ok(None);
+        }
+        // no-op plans still flow back: their semantics tell the loop why
+        // the platform refused (e.g. the device cap)
+        Ok(Some(self.pilot.resize(want)?))
+    }
+
+    fn serve(&mut self, demand: f64, dt: f64) -> Result<f64, String> {
+        self.pilot.step(demand, dt)
+    }
+
+    fn capacity(&self) -> f64 {
+        self.pilot.capacity_estimate()
+    }
+}
+
+/// The per-tick conservation arithmetic shared by [`ControlLoop::run`]
+/// and [`run_fixed`]: offered = processed + throttled + backlog, always.
+struct LoopAccounting {
+    backlog: f64,
+    ticks: Vec<Tick>,
+    offered_total: f64,
+    processed_total: f64,
+    throttled_total: f64,
+    max_backlog: f64,
+}
+
+impl LoopAccounting {
+    fn new(intervals: usize) -> Self {
+        Self {
+            backlog: 0.0,
+            ticks: Vec::with_capacity(intervals),
+            offered_total: 0.0,
+            processed_total: 0.0,
+            throttled_total: 0.0,
+            max_backlog: 0.0,
+        }
+    }
+
+    /// Admit one interval's load (throttled to `admitted_rate`), serve it
+    /// from the target, and account the tick.
+    fn tick(
+        &mut self,
+        target: &mut dyn ScalingTarget,
+        t: f64,
+        rate: f64,
+        admitted_rate: f64,
+        decision: ScaleDecision,
+        dt: f64,
+    ) -> Result<(), String> {
+        let offered = rate * dt;
+        let admitted = admitted_rate.min(rate) * dt;
+        let demand = self.backlog + admitted;
+        let served = target.serve(demand, dt)?;
+        self.backlog = (demand - served).max(0.0);
+        self.offered_total += offered;
+        self.processed_total += served;
+        self.throttled_total += offered - admitted;
+        self.max_backlog = self.max_backlog.max(self.backlog);
+        self.ticks.push(Tick {
+            t,
+            offered_rate: rate,
+            parallelism: target.parallelism(),
+            capacity: target.capacity(),
+            backlog: self.backlog,
+            throttled: offered - admitted,
+            decision,
+        });
+        Ok(())
+    }
+
+    fn finish(self, scale_events: u64, resizes: Vec<ResizeEvent>) -> AutoscaleReport {
+        AutoscaleReport {
+            ticks: self.ticks,
+            offered_total: self.offered_total,
+            processed_total: self.processed_total,
+            throttled_total: self.throttled_total,
+            scale_events,
+            max_backlog: self.max_backlog,
+            resizes,
+        }
+    }
+}
+
+/// The closed loop: one autoscaler driving one [`ScalingTarget`] through a
+/// rate trace, one control interval at a time.
+pub struct ControlLoop {
+    autoscaler: Autoscaler,
+    dt: f64,
+}
+
+impl ControlLoop {
+    pub fn new(autoscaler: Autoscaler, dt: f64) -> Self {
+        assert!(dt > 0.0, "control interval must be positive");
+        Self { autoscaler, dt }
+    }
+
+    /// Run the loop over `trace` (offered msg/s per interval).  Each tick:
+    /// observe → decide → actuate → sync belief to the platform's reality
+    /// → admit (throttling if decided) → serve → account.
+    pub fn run(
+        mut self,
+        target: &mut dyn ScalingTarget,
+        trace: &[f64],
+    ) -> Result<AutoscaleReport, String> {
+        let dt = self.dt;
+        let mut acct = LoopAccounting::new(trace.len());
+        let mut resizes = Vec::new();
+        for (i, &rate) in trace.iter().enumerate() {
+            let t = i as f64 * dt;
+            // mid-transition the pilot cannot actuate anything: keep the
+            // EWMA warm but defer decisions (and their scale_events
+            // accounting) until the transition lands
+            let decision = if target.is_resizing() {
+                self.autoscaler.observe_rate(rate);
+                ScaleDecision::Hold {
+                    parallelism: target.parallelism(),
+                }
+            } else {
+                self.autoscaler.observe(rate)
+            };
+            if let Some(plan) = target.actuate(&decision)? {
+                // a clamped plan teaches the autoscaler the platform's
+                // real envelope: future demand beyond it resolves to
+                // source throttling instead of a futile resize per tick
+                if plan.semantics == ResizeSemantics::Throttle {
+                    self.autoscaler.limit_max_parallelism(plan.to);
+                }
+                if plan.is_change() {
+                    resizes.push(ResizeEvent { t, plan });
+                }
+            }
+            // the platform's push-back (device caps, clamped transitions)
+            // becomes the autoscaler's belief for the next decision
+            let parallelism = target.parallelism();
+            if parallelism != self.autoscaler.current_parallelism() {
+                self.autoscaler.set_parallelism(parallelism);
+            }
+            let admitted_rate = match &decision {
+                ScaleDecision::Throttle { max_rate, .. } => rate.min(*max_rate),
+                _ => rate,
+            };
+            acct.tick(target, t, rate, admitted_rate, decision, dt)?;
+        }
+        Ok(acct.finish(self.autoscaler.scale_events(), resizes))
+    }
+}
+
+/// Baseline: the same trace served at fixed parallelism — no autoscaler,
+/// no throttling.  The comparison `autoscale --live` reports against.
+pub fn run_fixed(
+    target: &mut dyn ScalingTarget,
+    trace: &[f64],
+    dt: f64,
+) -> Result<AutoscaleReport, String> {
+    assert!(dt > 0.0, "control interval must be positive");
+    let mut acct = LoopAccounting::new(trace.len());
+    for (i, &rate) in trace.iter().enumerate() {
+        let hold = ScaleDecision::Hold {
+            parallelism: target.parallelism(),
+        };
+        acct.tick(target, i as f64 * dt, rate, rate, hold, dt)?;
+    }
+    Ok(acct.finish(0, Vec::new()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CalibratedEngine;
+    use crate::insight::autoscale::AutoscaleConfig;
+    use crate::insight::autoscale_sim::trace_burst;
+    use crate::miniapp::{PlatformKind, Scenario};
+    use crate::pilot::{Platform, ResizeSemantics};
+    use crate::sim::Dist;
+    use crate::usl::UslParams;
+    use std::sync::Arc;
+
+    fn predictor(sigma: f64, kappa: f64, lambda: f64) -> Predictor {
+        Predictor {
+            params: UslParams::new(sigma, kappa, lambda),
+        }
+    }
+
+    fn live_scenario(platform: PlatformKind) -> Scenario {
+        Scenario {
+            platform,
+            partitions: 2,
+            points_per_message: 64,
+            centroids: 8,
+            messages: 0, // unused by the interval driver
+            ..Default::default()
+        }
+    }
+
+    fn engine() -> Arc<dyn crate::engine::StepEngine> {
+        let mut e = CalibratedEngine::new(11);
+        e.insert((64, 8), Dist::Const(0.05));
+        Arc::new(e)
+    }
+
+    fn live_target(platform: PlatformKind) -> PilotTarget {
+        PilotTarget::new(LivePilot::provision(&live_scenario(platform), engine()).unwrap())
+    }
+
+    /// The loop's autoscaler for a ~0.05 s/message platform: λ≈20 msg/s
+    /// per lane, near-linear.
+    fn autoscaler(initial: usize, max: usize) -> Autoscaler {
+        Autoscaler::new(
+            predictor(0.02, 0.0001, 18.0),
+            AutoscaleConfig {
+                max_parallelism: max,
+                ..Default::default()
+            },
+            initial,
+        )
+    }
+
+    #[test]
+    fn model_target_reproduces_the_replay_arithmetic() {
+        // the pre-control-plane replay loop, kept inline as the executable
+        // specification (replay() itself is now built on ControlLoop, so
+        // comparing against it would be circular)
+        let trace = trace_burst(60, 20.0, 120.0, 20);
+        let p = predictor(0.02, 0.0001, 10.0);
+        let mut scaler = Autoscaler::new(p.clone(), AutoscaleConfig::default(), 2);
+        let mut backlog = 0.0f64;
+        let mut expected = Vec::new(); // (parallelism, backlog) per tick
+        let mut processed_total = 0.0;
+        for &rate in &trace {
+            let decision = scaler.observe(rate);
+            let parallelism = scaler.current_parallelism();
+            let capacity = p.throughput(parallelism);
+            let admitted = match &decision {
+                ScaleDecision::Throttle { max_rate, .. } => rate.min(*max_rate),
+                _ => rate,
+            };
+            let processed = (backlog + admitted).min(capacity);
+            backlog = (backlog + admitted - processed).max(0.0);
+            processed_total += processed;
+            expected.push((parallelism, backlog));
+        }
+
+        let report =
+            crate::insight::autoscale_sim::replay(p, AutoscaleConfig::default(), &trace, 1.0, 2);
+        assert_eq!(report.ticks.len(), expected.len());
+        for (tick, (parallelism, backlog)) in report.ticks.iter().zip(&expected) {
+            assert_eq!(tick.parallelism, *parallelism, "t={}", tick.t);
+            assert!((tick.backlog - backlog).abs() < 1e-9, "t={}", tick.t);
+        }
+        assert!((report.processed_total - processed_total).abs() < 1e-9);
+        assert_eq!(report.scale_events, scaler.scale_events());
+    }
+
+    #[test]
+    fn live_loop_scales_a_real_lambda_pilot() {
+        let mut target = live_target(PlatformKind::Lambda);
+        let trace = trace_burst(40, 20.0, 200.0, 10);
+        let report = ControlLoop::new(autoscaler(2, 16), 1.0)
+            .run(&mut target, &trace)
+            .unwrap();
+        assert!(report.scale_events >= 1, "the burst must trigger scaling");
+        assert!(
+            !report.resizes.is_empty(),
+            "decisions must land as real resize plans"
+        );
+        assert!(report
+            .resizes
+            .iter()
+            .any(|r| r.plan.semantics == ResizeSemantics::ColdStart));
+        // the backend's parallelism actually moved (observable via status)
+        let peak = report.ticks.iter().map(|t| t.parallelism).max().unwrap();
+        assert!(peak > 2, "peak parallelism {peak}");
+        assert_eq!(target.pilot().status().parallelism, target.parallelism());
+        target.shutdown();
+    }
+
+    #[test]
+    fn live_loop_beats_fixed_baseline_under_burst() {
+        let trace = trace_burst(40, 20.0, 200.0, 10);
+        let mut scaled = live_target(PlatformKind::Lambda);
+        let scaled_report = ControlLoop::new(autoscaler(2, 16), 1.0)
+            .run(&mut scaled, &trace)
+            .unwrap();
+        scaled.shutdown();
+        let mut fixed = live_target(PlatformKind::Lambda);
+        let fixed_report = run_fixed(&mut fixed, &trace, 1.0).unwrap();
+        fixed.shutdown();
+        assert!(
+            scaled_report.goodput() > fixed_report.goodput() + 0.05,
+            "autoscaled {} must beat fixed {}",
+            scaled_report.goodput(),
+            fixed_report.goodput()
+        );
+    }
+
+    #[test]
+    fn live_loop_is_deterministic() {
+        let run = || {
+            let trace = trace_burst(30, 20.0, 150.0, 8);
+            let mut target = live_target(PlatformKind::Lambda);
+            let report = ControlLoop::new(autoscaler(2, 16), 1.0)
+                .run(&mut target, &trace)
+                .unwrap();
+            target.shutdown();
+            (
+                report.goodput(),
+                report.scale_events,
+                report.resizes.len(),
+                report.ticks.iter().map(|t| t.parallelism).collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn edge_cap_pushes_back_into_the_loop() {
+        let mut target = live_target(PlatformKind::Edge);
+        let trace = vec![300.0; 20];
+        let report = ControlLoop::new(autoscaler(2, 64), 1.0)
+            .run(&mut target, &trace)
+            .unwrap();
+        let peak = report.ticks.iter().map(|t| t.parallelism).max().unwrap();
+        assert_eq!(
+            peak,
+            crate::serverless::edge::EDGE_MAX_CONCURRENCY,
+            "the device envelope caps the loop"
+        );
+        assert!(report
+            .resizes
+            .iter()
+            .any(|r| r.plan.semantics == ResizeSemantics::Throttle));
+        // the clamped plan taught the autoscaler the real envelope: the
+        // loop settles into source throttling instead of re-issuing a
+        // futile scale-up (and a phantom scale event) every tick
+        assert!(
+            report.throttled_total > 0.0,
+            "unreachable demand must throttle the source"
+        );
+        assert!(
+            report.scale_events < trace.len() as u64 / 2,
+            "scale events must not inflate once the cap is learned: {}",
+            report.scale_events
+        );
+        target.shutdown();
+    }
+
+    #[test]
+    fn every_streaming_platform_closes_the_loop() {
+        // the acceptance sweep: lambda, dask, edge, and the flink plugin
+        // all run the closed loop end to end with real resizes
+        for platform in [
+            PlatformKind::Lambda,
+            PlatformKind::DaskWrangler,
+            PlatformKind::Edge,
+            PlatformKind::Plugin(Platform::FLINK),
+        ] {
+            let mut target = live_target(platform);
+            let trace = trace_burst(25, 15.0, 120.0, 6);
+            let report = ControlLoop::new(autoscaler(2, 12), 1.0)
+                .run(&mut target, &trace)
+                .unwrap();
+            assert_eq!(report.ticks.len(), 25, "{platform:?}");
+            assert!(report.processed_total > 0.0, "{platform:?}");
+            assert!(
+                report.scale_events >= 1,
+                "{platform:?} never scaled under a 8x burst"
+            );
+            target.shutdown();
+        }
+    }
+}

@@ -1,5 +1,7 @@
 //! StreamInsight (paper §IV): the **campaign engine** — end-to-end
-//! performance experimentation over a composable parameter space.
+//! performance experimentation over a composable parameter space — and,
+//! since the elastic-control-plane PR, the **closed scaling loop** the
+//! paper's conclusion calls for.
 //!
 //! # Architecture: axes → scenarios → parallel sweep → incremental fits
 //!
@@ -18,20 +20,36 @@
 //!   [`SweepRow`]s back in completion order for progress reporting, and
 //!   reassembles deterministic spec order — `--jobs N` output is
 //!   byte-identical to `--jobs 1`.
-//! - Rows group into USL curves by [`GroupKey`], the row's assignment on
-//!   every non-scale axis, derived from the axes themselves.
-//! - [`analysis::analyze`] fits USL per group;
-//!   [`analysis::IncrementalAnalysis`] produces the same fits while the
-//!   sweep is still running, as each group's last scale level lands.
-//! - [`config`] loads specs declaratively from TOML (including custom
-//!   `[axes]`), [`figures`] regenerates the paper's tables/figures,
-//!   [`predict`] and [`autoscale`] consume the fitted models, and
-//!   [`vars`] renders the Table I variable glossary.
+//! - Rows group into USL curves by [`GroupKey`]; [`analysis::analyze`]
+//!   fits USL per group, [`analysis::IncrementalAnalysis`] streams the
+//!   same fits mid-sweep, [`config`] loads specs from TOML, [`figures`]
+//!   regenerates the paper's tables/figures, and [`vars`] renders the
+//!   Table I glossary.
+//!
+//! # The control plane: decisions that re-provision live pilots
+//!
+//! [`predict`] turns a USL fit into capacity questions; [`autoscale`]
+//! turns observed rates into [`ScaleDecision`]s.  What happens to a
+//! decision is the [`control::ScalingTarget`] seam:
+//!
+//! - [`control::ModelTarget`] replays decisions against the USL model —
+//!   [`autoscale_sim::replay`] is now a thin wrapper over
+//!   [`control::ControlLoop`] with this target.
+//! - [`control::PilotTarget`] actuates them on a **live pilot** through
+//!   `PilotComputeService::resize_pilot` (via `miniapp::LivePilot`):
+//!   transitions ride the pilot `Resizing` state with platform-true costs
+//!   (cold starts, batch queues, savepoints, device caps), and every
+//!   served message is a real `StreamProcessor::process` call.
+//!
+//! `autoscale --live --platform <p>` runs the closed loop end to end and
+//! reports goodput/backlog/scale-events against a fixed-parallelism
+//! baseline ([`control::run_fixed`]).
 
 pub mod analysis;
 pub mod autoscale;
 pub mod autoscale_sim;
 pub mod config;
+pub mod control;
 pub mod experiment;
 pub mod figures;
 pub mod predict;
@@ -42,10 +60,14 @@ pub use analysis::{analyze, table, AnalysisRow, IncrementalAnalysis};
 pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
 pub use autoscale_sim::{replay, trace_burst, trace_diurnal, AutoscaleReport};
 pub use config::{spec_from_file, spec_from_toml};
+pub use control::{
+    run_fixed, ControlLoop, ModelTarget, PilotTarget, ResizeEvent, ScalingTarget,
+};
 pub use experiment::{
     axis_value_of, Axis, AxisValue, ExperimentSpec, AXIS_CENTROIDS, AXIS_MEMORY_MB,
     AXIS_MESSAGE_SIZE, AXIS_PARTITIONS, AXIS_PLATFORM,
 };
+pub use predict::Predictor;
 pub use sweep::{
     group_keys, group_observations, paper_key, run_sweep, run_sweep_jobs, to_csv, GroupKey,
     SweepProgress, SweepRow,

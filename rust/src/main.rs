@@ -24,7 +24,7 @@ fn app() -> App {
     )
     .command(
         CommandSpec::new("run", "run one scenario and print its summary")
-            .opt("platform", "lambda", "lambda | dask | stampede2 | edge")
+            .opt("platform", "lambda", "lambda | dask | stampede2 | edge | flink | any registered plugin")
             .opt("partitions", "4", "N^px(p)")
             .opt("points", "8000", "points per message (MS)")
             .opt("centroids", "1024", "centroids (WC)")
@@ -43,13 +43,19 @@ fn app() -> App {
             .opt("config", "", "TOML experiment file (overrides the preset grid)"),
     )
     .command(
-        CommandSpec::new("autoscale", "replay a rate trace against the USL-driven predictive autoscaler")
+        CommandSpec::new("autoscale", "run the predictive autoscaler: replay a rate trace against the USL model, or close the loop on a live pilot (--live)")
             .opt("sigma", "0.02", "platform contention coefficient")
             .opt("kappa", "0.0001", "platform coherency coefficient")
             .opt("lambda", "10", "throughput at N=1 (msg/s)")
             .opt("trace", "diurnal", "diurnal | burst")
             .opt("intervals", "120", "control intervals to replay")
-            .opt("peak", "200", "peak offered rate (msg/s)"),
+            .opt("peak", "200", "peak offered rate (msg/s)")
+            .opt("platform", "lambda", "live pilot platform (any registered streaming plugin)")
+            .opt("partitions", "2", "initial parallelism of the live pilot")
+            .opt("points", "8000", "points per message (live)")
+            .opt("centroids", "1024", "centroids (live)")
+            .opt("seed", "42", "rng seed (live)")
+            .flag("live", "actuate decisions on a real pilot via resize_pilot instead of replaying the model"),
     )
     .command(
         CommandSpec::new("figs", "regenerate all tables/figures (fig3..fig7, table1)")
@@ -289,28 +295,11 @@ fn cmd_predict(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_autoscale(args: &Args) -> Result<(), String> {
-    let predictor = insight::Predictor {
-        params: pilot_streaming::usl::UslParams::new(
-            args.get_f64("sigma").map_err(|e| e.to_string())?,
-            args.get_f64("kappa").map_err(|e| e.to_string())?,
-            args.get_f64("lambda").map_err(|e| e.to_string())?,
-        ),
-    };
-    let intervals = args.get_usize("intervals").map_err(|e| e.to_string())?;
-    let peak = args.get_f64("peak").map_err(|e| e.to_string())?;
-    let trace = match args.get_or("trace", "diurnal") {
-        "burst" => insight::trace_burst(intervals, peak * 0.1, peak, intervals / 3),
-        _ => insight::trace_diurnal(intervals, peak * 0.05, peak, 42),
-    };
-    let report = insight::replay(
-        predictor,
-        insight::AutoscaleConfig::default(),
-        &trace,
-        1.0,
-        1,
+fn print_autoscale_ticks(report: &insight::AutoscaleReport, intervals: usize) {
+    println!(
+        "{:>5} {:>10} {:>6} {:>10} {:>10} {:>10}",
+        "t", "rate", "N", "capacity", "backlog", "decision"
     );
-    println!("{:>5} {:>10} {:>6} {:>10} {:>10} {:>10}", "t", "rate", "N", "capacity", "backlog", "decision");
     for tick in report.ticks.iter().step_by((intervals / 24).max(1)) {
         let d = match &tick.decision {
             insight::ScaleDecision::Hold { .. } => "hold".to_string(),
@@ -331,6 +320,106 @@ goodput {:.1}%  scale events {}  max backlog {:.0}  throttled {:.0} msgs",
         report.scale_events,
         report.max_backlog,
         report.throttled_total
+    );
+}
+
+fn cmd_autoscale(args: &Args) -> Result<(), String> {
+    let predictor = insight::Predictor {
+        params: pilot_streaming::usl::UslParams::new(
+            args.get_f64("sigma").map_err(|e| e.to_string())?,
+            args.get_f64("kappa").map_err(|e| e.to_string())?,
+            args.get_f64("lambda").map_err(|e| e.to_string())?,
+        ),
+    };
+    let intervals = args.get_usize("intervals").map_err(|e| e.to_string())?;
+    let peak = args.get_f64("peak").map_err(|e| e.to_string())?;
+    let trace = match args.get_or("trace", "diurnal") {
+        "burst" => insight::trace_burst(intervals, peak * 0.1, peak, intervals / 3),
+        _ => insight::trace_diurnal(intervals, peak * 0.05, peak, 42),
+    };
+    if args.has_flag("live") {
+        return cmd_autoscale_live(args, predictor, &trace, intervals);
+    }
+    let report = insight::replay(
+        predictor,
+        insight::AutoscaleConfig::default(),
+        &trace,
+        1.0,
+        1,
+    );
+    print_autoscale_ticks(&report, intervals);
+    Ok(())
+}
+
+/// The closed loop, end to end: provision a real pilot, let the
+/// autoscaler's decisions actuate `resize_pilot`, and report against a
+/// fixed-parallelism baseline serving the same trace.
+fn cmd_autoscale_live(
+    args: &Args,
+    predictor: insight::Predictor,
+    trace: &[f64],
+    intervals: usize,
+) -> Result<(), String> {
+    let platform = PlatformKind::parse(args.get_or("platform", "lambda"))
+        .ok_or_else(|| format!("unknown platform {:?}", args.get("platform")))?;
+    let scenario = Scenario {
+        platform,
+        partitions: args.get_usize("partitions").map_err(|e| e.to_string())?,
+        points_per_message: args.get_usize("points").map_err(|e| e.to_string())?,
+        centroids: args.get_usize("centroids").map_err(|e| e.to_string())?,
+        seed: args.get_u64("seed").map_err(|e| e.to_string())?,
+        ..Default::default()
+    };
+    // the platform's declared elasticity caps the search space (the edge
+    // device envelope becomes throttling instead of futile scale-ups)
+    let mut config = insight::AutoscaleConfig::default();
+    let processing = platform.processing_platform();
+    if let Some(plugin) = pilot_streaming::pilot::default_registry().get(processing) {
+        if let Some(cap) = plugin.elasticity().max_parallelism {
+            config.max_parallelism = config.max_parallelism.min(cap);
+        }
+    }
+    let factory = figures::engine_factory(figures::default_calibration());
+    let scaler = insight::Autoscaler::new(predictor, config, scenario.partitions);
+
+    eprintln!(
+        "provisioning live {} pilot (N={}) and closing the loop over {} intervals...",
+        platform.label(),
+        scenario.partitions,
+        intervals
+    );
+    let mut live = insight::PilotTarget::new(
+        pilot_streaming::miniapp::LivePilot::provision(&scenario, factory(&scenario))?,
+    );
+    let report = insight::ControlLoop::new(scaler, 1.0).run(&mut live, trace)?;
+    let status = live.pilot().status();
+    live.shutdown();
+
+    let mut fixed = insight::PilotTarget::new(
+        pilot_streaming::miniapp::LivePilot::provision(&scenario, factory(&scenario))?,
+    );
+    let baseline = insight::run_fixed(&mut fixed, trace, 1.0)?;
+    fixed.shutdown();
+
+    println!("-- live {} (closed loop) --", platform.label());
+    print_autoscale_ticks(&report, intervals);
+    println!("\nresize transitions:");
+    for ev in &report.resizes {
+        println!(
+            "  t={:>5.0}  {:>3} -> {:<3} transition {:.2}s  {:?}",
+            ev.t, ev.plan.from, ev.plan.to, ev.plan.transition_s, ev.plan.semantics
+        );
+    }
+    println!(
+        "final pilot_state: {} at N={} after {} resize(s)",
+        status.state, status.parallelism, status.resize_events
+    );
+    println!(
+        "\nlive goodput {:.1}%  vs fixed N={} baseline {:.1}%  ({:+.1} pts)",
+        report.goodput() * 100.0,
+        scenario.partitions,
+        baseline.goodput() * 100.0,
+        (report.goodput() - baseline.goodput()) * 100.0
     );
     Ok(())
 }

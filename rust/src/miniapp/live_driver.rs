@@ -1,19 +1,29 @@
-//! Live (wall-clock, threaded) benchmark driver.
+//! Live benchmark drivers.
 //!
-//! Same pipeline as the sim driver but with real threads and, when wired
-//! with a [`PjrtEngine`](crate::runtime::PjrtEngine), the real AOT K-Means
+//! [`run_live`] is the wall-clock, threaded pipeline: same stages as the
+//! sim driver but with real threads and, when wired with a
+//! [`PjrtEngine`](crate::runtime::PjrtEngine), the real AOT K-Means
 //! artifact executing on PJRT for every message — the path the e2e example
 //! and calibration use.  A producer thread paces itself with the
 //! intelligent-backoff controller; one consumer thread per shard drains
 //! the broker.
+//!
+//! [`LivePilot`] is the *control-plane* driver: a provisioned platform
+//! advanced one control interval at a time on a virtual clock, whose
+//! parallelism the insight `ControlLoop` changes mid-run through the
+//! service's `resize_pilot`.  Every message served is a real
+//! `StreamProcessor::process` call against the pilot's backend, so
+//! cold starts, Lustre contention, micro-batch delays, and resize
+//! transitions all surface in measured capacity — deterministically.
 
 use super::generator::{DataGenerator, GeneratorConfig};
 use super::platform::{PlatformUnderTest, Scenario};
 use super::trace::{next_run_id, MessageTrace, RunSummary, RunTrace};
 use crate::broker::{BackoffController, BrokerError};
 use crate::engine::StepEngine;
+use crate::pilot::{PilotJob, PilotStatus, ResizePlan};
 use crate::serverless::EventSourceMapping;
-use crate::sim::{SharedClock, WallClock};
+use crate::sim::{SharedClock, SimClock, WallClock};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -146,6 +156,173 @@ pub fn run_live(
     })
 }
 
+/// A provisioned platform driven one control interval at a time — the
+/// live actuation side of `insight::control::ControlLoop`.
+///
+/// Capacity is modeled as `parallelism` serving lanes: each served message
+/// runs the pilot's real [`StreamProcessor`](crate::pilot::StreamProcessor)
+/// (advancing the shared [`SimClock`] to the message's start time, so the
+/// backend's own container/worker bookkeeping stays in sync) and occupies
+/// its lane for the *measured* cost.  A resize through the service grows
+/// lanes that only become usable after the plan's transition window —
+/// scale-up capacity arrives late, exactly like the platform it models.
+pub struct LivePilot {
+    platform: Arc<PlatformUnderTest>,
+    clock: Arc<SimClock>,
+    /// Per-lane busy-until time (sim seconds).
+    lanes: Vec<f64>,
+    points: Arc<Vec<f32>>,
+    dim: usize,
+    centroids: usize,
+    model_key: String,
+    now: f64,
+    /// The processing pilot's control handle (resize target).
+    pilot: PilotJob,
+    /// Most recent per-message total cost (capacity estimation).
+    last_cost: f64,
+}
+
+impl LivePilot {
+    /// Provision `scenario` on a fresh virtual clock.
+    pub fn provision(scenario: &Scenario, engine: Arc<dyn StepEngine>) -> Result<Self, String> {
+        let clock = Arc::new(SimClock::new());
+        let platform = Arc::new(PlatformUnderTest::build(
+            scenario,
+            engine,
+            clock.clone() as SharedClock,
+        )?);
+        let mut generator = DataGenerator::new(GeneratorConfig {
+            points_per_message: scenario.points_per_message,
+            seed: scenario.seed,
+            ..Default::default()
+        });
+        let msg = generator.next_message(next_run_id(), 0.0);
+        let pilot = platform.processing_pilot().clone();
+        let parallelism = pilot.parallelism();
+        Ok(Self {
+            platform,
+            clock,
+            lanes: vec![0.0; parallelism.max(1)],
+            points: msg.points,
+            dim: msg.dim,
+            centroids: scenario.centroids,
+            model_key: format!("autoscale-live-{}", scenario.seed),
+            now: 0.0,
+            pilot,
+            last_cost: 0.0,
+        })
+    }
+
+    /// Current sim time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// The processing pilot's effective parallelism.
+    pub fn parallelism(&self) -> usize {
+        self.status().parallelism
+    }
+
+    /// Control-plane read side: the processing pilot's live status.
+    pub fn status(&self) -> PilotStatus {
+        self.pilot.status()
+    }
+
+    /// Short label of the platform under test ("lambda", "dask", ...).
+    pub fn label(&self) -> &'static str {
+        self.platform.label()
+    }
+
+    /// Nominal capacity (msg/s) from the last measured per-message cost.
+    pub fn capacity_estimate(&self) -> f64 {
+        if self.last_cost > 0.0 {
+            self.lanes.len() as f64 / self.last_cost
+        } else {
+            0.0
+        }
+    }
+
+    /// Actuate a resize through the service (the paper's "integrate
+    /// StreamInsight into the resource management algorithm" verb),
+    /// honoring the plan's semantics: under [`ResizeSemantics::Restart`]
+    /// (savepoint + restore) the *whole* job is down for the transition
+    /// window; otherwise new lanes come up busy until the deadline while
+    /// the old capacity keeps serving, and on scale-down the least-busy
+    /// lanes survive (the rest drain away).
+    pub fn resize(&mut self, to: usize) -> Result<ResizePlan, String> {
+        let plan = self.pilot.resize(to).map_err(|e| e.to_string())?;
+        if plan.semantics == crate::pilot::ResizeSemantics::Restart && plan.is_change() {
+            let ready = self.now + plan.transition_s;
+            self.lanes.clear();
+            self.lanes.resize(plan.to, ready);
+        } else if plan.to > self.lanes.len() {
+            let ready = self.now + plan.transition_s;
+            while self.lanes.len() < plan.to {
+                self.lanes.push(ready);
+            }
+        } else if plan.to < self.lanes.len() {
+            self.lanes
+                .sort_by(|a, b| a.partial_cmp(b).expect("lane times are finite"));
+            self.lanes.truncate(plan.to);
+        }
+        Ok(plan)
+    }
+
+    /// Serve up to `demand` whole messages in the interval `[now, now+dt)`,
+    /// advancing the virtual clock to `now + dt`.  Returns the number of
+    /// messages actually started (the rest is the caller's backlog).
+    pub fn step(&mut self, demand: f64, dt: f64) -> Result<f64, String> {
+        let t0 = self.now;
+        let t1 = t0 + dt;
+        let budget = demand.floor() as u64;
+        let mut served = 0u64;
+        while served < budget {
+            let (idx, busy) = self
+                .lanes
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).expect("lane times are finite"))
+                .map(|(i, &b)| (i, b))
+                .expect("at least one lane");
+            let start = busy.max(t0);
+            if start >= t1 {
+                break; // every lane is occupied past this interval
+            }
+            self.clock.advance_to(start);
+            match self.platform.process(
+                idx,
+                &self.points,
+                self.dim,
+                &self.model_key,
+                self.centroids,
+            ) {
+                Ok(cost) => {
+                    self.lanes[idx] = start + cost.total();
+                    self.last_cost = cost.total();
+                    served += 1;
+                }
+                Err(e) => {
+                    let transient = e.contains("throttled") || e.contains("concurrency");
+                    if !transient {
+                        return Err(e);
+                    }
+                    // substrate-level admission pushed back: brief lane
+                    // backoff, then retry within the interval
+                    self.lanes[idx] = start + 0.01;
+                }
+            }
+        }
+        self.clock.advance_to(t1);
+        self.now = t1;
+        Ok(served as f64)
+    }
+
+    /// Tear the platform down.
+    pub fn shutdown(&self) {
+        self.platform.service().shutdown();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +365,57 @@ mod tests {
         )
         .unwrap();
         assert!(r.summary.messages >= 12);
+    }
+
+    fn slow_engine() -> Arc<dyn StepEngine> {
+        let mut e = CalibratedEngine::new(3);
+        e.insert((64, 8), Dist::Const(0.05));
+        Arc::new(e)
+    }
+
+    #[test]
+    fn live_pilot_serves_intervals_and_resizes() {
+        use crate::pilot::PilotState;
+        let mut lp =
+            LivePilot::provision(&tiny_scenario(PlatformKind::Lambda), slow_engine()).unwrap();
+        assert_eq!(lp.parallelism(), 2);
+        let served = lp.step(1000.0, 1.0).unwrap();
+        assert!(served > 0.0, "two lanes serve real messages");
+        assert!(lp.capacity_estimate() > 0.0);
+
+        let plan = lp.resize(6).unwrap();
+        assert_eq!(plan.to, 6);
+        assert_eq!(lp.status().state, PilotState::Resizing);
+        assert_eq!(lp.parallelism(), 6, "target visible immediately");
+        // idle through the transition window; the state machine lands
+        lp.step(0.0, plan.transition_s + 0.1).unwrap();
+        assert_eq!(lp.status().state, PilotState::Running);
+
+        let served_wide = lp.step(1000.0, 1.0).unwrap();
+        assert!(
+            served_wide > served * 1.5,
+            "3x lanes must serve materially more: {served} -> {served_wide}"
+        );
+        lp.shutdown();
+    }
+
+    #[test]
+    fn live_pilot_is_deterministic() {
+        let run = || {
+            let mut lp =
+                LivePilot::provision(&tiny_scenario(PlatformKind::Lambda), slow_engine())
+                    .unwrap();
+            let mut served = Vec::new();
+            for i in 0..5 {
+                if i == 2 {
+                    lp.resize(4).unwrap();
+                }
+                served.push(lp.step(50.0, 1.0).unwrap());
+            }
+            lp.shutdown();
+            served
+        };
+        assert_eq!(run(), run(), "same seed, same trajectory");
     }
 
     #[test]

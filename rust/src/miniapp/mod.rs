@@ -16,7 +16,7 @@ pub mod sim_driver;
 pub mod trace;
 
 pub use generator::{DataGenerator, GeneratorConfig};
-pub use live_driver::{run_live, LiveRunResult};
+pub use live_driver::{run_live, LivePilot, LiveRunResult};
 pub use platform::{PlatformKind, PlatformUnderTest, ProcessCost, Scenario};
 pub use sim_driver::{run_sim, SimRunResult};
 pub use trace::{next_run_id, MessageTrace, RunSummary, RunTrace};

@@ -20,6 +20,13 @@ use std::sync::Arc;
 pub use crate::pilot::processor::ProcessCost;
 
 /// Which stack a scenario runs on.
+///
+/// The four named stacks are the paper's measured deployments; any *other*
+/// registered streaming plugin is addressable through
+/// [`PlatformKind::Plugin`] — naming is owned by the pilot layer's
+/// [`PluginRegistry`](crate::pilot::PluginRegistry) (the single source of
+/// truth [`PlatformKind::parse`] consults), so registering a plugin is all
+/// it takes to reach it from scenarios, sweeps, and TOML configs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PlatformKind {
     /// Kinesis broker + Lambda processing (AWS serverless).
@@ -31,6 +38,10 @@ pub enum PlatformKind {
     /// Greengrass-class edge site: co-located local broker + constrained
     /// Lambda-compatible fleet (paper §V future work).
     Edge,
+    /// Any other registered streaming plugin (e.g. the flink micro-batch
+    /// platform): provisioned as a Kinesis broker + that platform's
+    /// processing pilot.
+    Plugin(Platform),
 }
 
 impl PlatformKind {
@@ -40,18 +51,43 @@ impl PlatformKind {
             Self::DaskWrangler => "kafka/dask(wrangler)",
             Self::DaskStampede2 => "kafka/dask(stampede2)",
             Self::Edge => "edge/greengrass",
+            Self::Plugin(p) => p.name(),
         }
     }
 
+    /// Resolve a user-facing stack name.  Only the composite stack labels
+    /// (and the HPC machine variants) are matched here; *platform* naming
+    /// — canonical names and every alias — delegates to the plugin
+    /// registry, so a newly registered streaming plugin parses with zero
+    /// edits to this module.
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
-            "lambda" | "kinesis/lambda" | "serverless" => Some(Self::Lambda),
-            "dask" | "wrangler" | "kafka/dask" | "kafka/dask(wrangler)" => {
-                Some(Self::DaskWrangler)
+            "kinesis/lambda" => return Some(Self::Lambda),
+            "wrangler" | "kafka/dask" | "kafka/dask(wrangler)" => {
+                return Some(Self::DaskWrangler)
             }
-            "stampede2" | "knl" | "kafka/dask(stampede2)" => Some(Self::DaskStampede2),
-            "edge" | "greengrass" | "edge/greengrass" => Some(Self::Edge),
-            _ => None,
+            "stampede2" | "knl" | "kafka/dask(stampede2)" => return Some(Self::DaskStampede2),
+            "edge/greengrass" => return Some(Self::Edge),
+            _ => {}
+        }
+        let registry = crate::pilot::default_registry();
+        let platform = registry.parse(s)?;
+        Some(match platform {
+            Platform::LAMBDA => Self::Lambda,
+            Platform::DASK => Self::DaskWrangler,
+            Platform::EDGE => Self::Edge,
+            other if registry.get(other).is_some_and(|p| p.streams()) => Self::Plugin(other),
+            _ => return None, // pure brokers / bag-of-tasks pools don't stream
+        })
+    }
+
+    /// The processing platform this stack provisions.
+    pub fn processing_platform(self) -> Platform {
+        match self {
+            Self::Lambda => Platform::LAMBDA,
+            Self::DaskWrangler | Self::DaskStampede2 => Platform::DASK,
+            Self::Edge => Platform::EDGE,
+            Self::Plugin(p) => p,
         }
     }
 
@@ -157,6 +193,15 @@ impl Scenario {
                     .with_memory_mb(self.memory_mb)
                     .with_seed(self.seed),
             ],
+            PlatformKind::Plugin(platform) => vec![
+                PilotDescription::new(Platform::KINESIS)
+                    .with_parallelism(self.partitions)
+                    .with_seed(self.seed),
+                PilotDescription::new(platform)
+                    .with_parallelism(self.partitions)
+                    .with_memory_mb(self.memory_mb)
+                    .with_seed(self.seed),
+            ],
         }
     }
 }
@@ -167,6 +212,9 @@ pub struct PlatformUnderTest {
     service: PilotComputeService,
     broker: Arc<dyn Broker>,
     processor: Arc<dyn StreamProcessor>,
+    /// The pilot whose backend exposed the processor — the control plane's
+    /// resize target.
+    processing: PilotJob,
 }
 
 impl PlatformUnderTest {
@@ -182,25 +230,41 @@ impl PlatformUnderTest {
         let service = PilotComputeService::new(clock, engine)
             .with_shared_fs(SharedResource::new("lustre", scenario.lustre));
         let mut broker: Option<Arc<dyn Broker>> = None;
-        let mut processor: Option<Arc<dyn StreamProcessor>> = None;
+        let mut processing: Option<(PilotJob, Arc<dyn StreamProcessor>)> = None;
         for desc in scenario.pilot_descriptions() {
             let job = service.submit_pilot(desc).map_err(|e| e.to_string())?;
             if broker.is_none() {
                 broker = job.broker();
             }
-            if processor.is_none() {
-                processor = job.processor();
+            if processing.is_none() {
+                if let Some(p) = job.processor() {
+                    processing = Some((job, p));
+                }
             }
         }
+        let (processing, processor) =
+            processing.ok_or("scenario provisioned no processing pilot")?;
         Ok(Self {
             service,
             broker: broker.ok_or("scenario provisioned no broker pilot")?,
-            processor: processor.ok_or("scenario provisioned no processing pilot")?,
+            processor,
+            processing,
         })
     }
 
     pub fn broker(&self) -> Arc<dyn Broker> {
         Arc::clone(&self.broker)
+    }
+
+    /// The service that provisioned this platform — the control plane
+    /// (`resize_pilot` / `pilot_state`) for everything it runs.
+    pub fn service(&self) -> &PilotComputeService {
+        &self.service
+    }
+
+    /// The processing pilot (the autoscaler's resize target).
+    pub fn processing_pilot(&self) -> &PilotJob {
+        &self.processing
     }
 
     /// The pilots backing this platform (diagnostics, teardown).
@@ -290,9 +354,32 @@ mod tests {
             Some(PlatformKind::DaskStampede2)
         );
         assert_eq!(PlatformKind::parse("edge"), Some(PlatformKind::Edge));
-        assert_eq!(PlatformKind::parse("greengrass"), Some(PlatformKind::Edge));
-        assert_eq!(PlatformKind::parse("flink"), None);
+        assert_eq!(PlatformKind::parse("heron"), None);
         assert!(PlatformKind::Edge.is_serverless());
+        assert!(!PlatformKind::Plugin(Platform::FLINK).is_serverless());
+    }
+
+    #[test]
+    fn platform_naming_is_owned_by_the_plugin_registry() {
+        // every registry alias resolves with zero edits here...
+        assert_eq!(PlatformKind::parse("serverless"), Some(PlatformKind::Lambda));
+        assert_eq!(PlatformKind::parse("faas"), Some(PlatformKind::Lambda));
+        assert_eq!(PlatformKind::parse("hpc"), Some(PlatformKind::DaskWrangler));
+        assert_eq!(PlatformKind::parse("greengrass"), Some(PlatformKind::Edge));
+        // ...including platforms this module predates: registering the
+        // flink plugin made it addressable as a scenario stack
+        assert_eq!(
+            PlatformKind::parse("flink"),
+            Some(PlatformKind::Plugin(Platform::FLINK))
+        );
+        assert_eq!(
+            PlatformKind::parse("microbatch"),
+            Some(PlatformKind::Plugin(Platform::FLINK))
+        );
+        // pure brokers and bag-of-tasks pools are not streaming stacks
+        assert_eq!(PlatformKind::parse("kinesis"), None);
+        assert_eq!(PlatformKind::parse("kafka"), None);
+        assert_eq!(PlatformKind::parse("local"), None);
     }
 
     #[test]
@@ -303,9 +390,32 @@ mod tests {
             PlatformKind::DaskWrangler,
             PlatformKind::DaskStampede2,
             PlatformKind::Edge,
+            PlatformKind::Plugin(Platform::FLINK),
         ] {
             assert_eq!(PlatformKind::parse(kind.label()), Some(kind), "{kind:?}");
         }
+    }
+
+    #[test]
+    fn plugin_stack_builds_through_the_pilot_api() {
+        // the unified-naming payoff: a registered plugin platform is a
+        // first-class scenario stack with no mini-app construction code
+        let clock = Arc::new(SimClock::new()) as SharedClock;
+        let s = Scenario {
+            platform: PlatformKind::Plugin(Platform::FLINK),
+            centroids: 16,
+            ..Scenario::default()
+        };
+        let p = PlatformUnderTest::build(&s, engine(), clock).unwrap();
+        assert_eq!(p.broker().kind(), "kinesis");
+        assert_eq!(p.label(), "flink");
+        let pts = vec![0.1f32; 100 * 8];
+        let cost = p.process(0, &pts, 8, "m", 16).unwrap();
+        assert!(
+            cost.overhead > 0.0,
+            "micro-batch scheduling delay must surface"
+        );
+        assert_eq!(p.processing_pilot().platform(), Platform::FLINK);
     }
 
     #[test]

@@ -40,6 +40,10 @@ impl Platform {
     /// Greengrass-class edge site: co-located local broker + constrained
     /// function fleet (paper §V future work).
     pub const EDGE: Platform = Platform("edge");
+    /// Flink/Spark-Streaming-class micro-batch processing (ROADMAP
+    /// follow-on): per-message scheduling-delay overhead, savepoint-based
+    /// rescaling.
+    pub const FLINK: Platform = Platform("flink");
 
     /// Identifier for a plugin-owned platform name.  Equality is by name,
     /// so `Platform::from_static("lambda") == Platform::LAMBDA`.
@@ -301,6 +305,7 @@ mod tests {
             Platform::DASK,
             Platform::LOCAL,
             Platform::EDGE,
+            Platform::FLINK,
         ] {
             assert_eq!(Platform::parse(p.name()), Some(p));
         }

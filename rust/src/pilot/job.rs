@@ -1,10 +1,17 @@
 //! `PilotJob` — a user-visible handle to an allocated resource container —
 //! and the backend interface plugins implement.
+//!
+//! Since the elastic-control-plane redesign a pilot is not fire-and-forget:
+//! [`PilotBackend::resize`] changes a live backend's parallelism with
+//! platform-true transition costs, and [`PilotJob`] tracks the resulting
+//! `Running ↔ Resizing` excursion on the service clock — deterministic
+//! sim-clock durations, observable through [`PilotJob::status`].
 
 use super::compute_unit::{ComputeUnit, TaskSpec};
 use super::description::{PilotDescription, Platform};
 use super::state::PilotState;
 use crate::broker::Broker;
+use crate::sim::SharedClock;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -18,10 +25,73 @@ pub enum PilotError {
     NoCompute(&'static str),
     #[error("no plugin registered for platform {0:?}")]
     NoPlugin(String),
+    #[error("no pilot with id {0}")]
+    NoSuchPilot(u64),
     #[error("provisioning failed: {0}")]
     Provision(String),
+    #[error("platform {0} does not support live resizing")]
+    ResizeUnsupported(&'static str),
+    #[error("a resize transition is already in flight (ready at t={0:.3})")]
+    ResizeInProgress(f64),
+    #[error("invalid resize target: {0}")]
+    BadResize(String),
     #[error(transparent)]
     Description(#[from] super::description::DescriptionError),
+}
+
+/// Platform-true mechanics of one capacity transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResizeSemantics {
+    /// Serverless: added containers cold-start; removed ones vanish
+    /// instantly (the fleet simply stops booking them).
+    ColdStart,
+    /// HPC: new workers ride batch-queue + node-boot delays; removed
+    /// workers drain their in-flight task first.
+    WorkerStartup,
+    /// Broker: shards/partitions are split or merged and the log
+    /// rebalanced across the new layout.
+    Repartition,
+    /// Micro-batch engines: the job snapshots state and restarts at the
+    /// new parallelism (savepoint + restore).
+    Restart,
+    /// The platform's hard cap kept the pilot below the requested target;
+    /// the caller should throttle its source to the capped capacity.
+    Throttle,
+    /// Target equals current parallelism; nothing to do.
+    NoChange,
+}
+
+/// The transition a backend committed to when asked to resize.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResizePlan {
+    /// Parallelism before the transition.
+    pub from: usize,
+    /// Parallelism in effect once the transition completes.  May be below
+    /// the requested target when the platform caps it (see
+    /// [`ResizeSemantics::Throttle`]).
+    pub to: usize,
+    /// Deterministic sim-clock seconds until the new capacity is fully
+    /// effective.  The pilot stays `Resizing` (still serving at the old
+    /// capacity) for this long.
+    pub transition_s: f64,
+    pub semantics: ResizeSemantics,
+}
+
+impl ResizePlan {
+    /// A no-op plan at parallelism `n`.
+    pub fn no_change(n: usize) -> Self {
+        Self {
+            from: n,
+            to: n,
+            transition_s: 0.0,
+            semantics: ResizeSemantics::NoChange,
+        }
+    }
+
+    /// Whether the plan changes parallelism at all.
+    pub fn is_change(&self) -> bool {
+        self.from != self.to
+    }
 }
 
 /// What a platform plugin provides after provisioning.
@@ -31,6 +101,21 @@ pub trait PilotBackend: Send + Sync {
     /// Submit a compute-unit for execution.  The backend must eventually
     /// drive `cu` to a terminal state.
     fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), PilotError>;
+
+    /// Current effective parallelism (containers / workers / shards).
+    fn parallelism(&self) -> usize;
+
+    /// Change the backend's parallelism to `to`, with platform-true
+    /// semantics and cost.  Returns the committed [`ResizePlan`]; the
+    /// backend's capacity model must reflect `plan.to` from now on (the
+    /// job layer keeps the pilot `Resizing` for `plan.transition_s`).
+    ///
+    /// The default declines: platforms are rigid unless their plugin
+    /// implements elasticity.
+    fn resize(&self, to: usize) -> Result<ResizePlan, PilotError> {
+        let _ = to;
+        Err(PilotError::ResizeUnsupported(self.platform().name()))
+    }
 
     /// The broker this pilot provisioned, if it is a broker pilot.
     fn broker(&self) -> Option<Arc<dyn Broker>> {
@@ -50,9 +135,27 @@ pub trait PilotBackend: Send + Sync {
     fn completed(&self) -> u64;
 }
 
+/// A point-in-time observation of a pilot (what
+/// [`PilotComputeService::pilot_state`](super::service::PilotComputeService::pilot_state)
+/// returns): the control plane's read side.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PilotStatus {
+    pub id: u64,
+    pub state: PilotState,
+    /// Effective parallelism the backend reports right now.
+    pub parallelism: usize,
+    /// Completed resize transitions over the pilot's lifetime.
+    pub resize_events: u64,
+    /// When the in-flight transition completes (`Resizing` only).
+    pub ready_at: Option<f64>,
+}
+
 struct PilotShared {
     state: Mutex<PilotState>,
     cond: Condvar,
+    /// Sim-clock deadline of the in-flight resize transition.
+    ready_at: Mutex<Option<f64>>,
+    resize_events: AtomicU64,
 }
 
 /// A resource container handle (cheap to clone).
@@ -62,12 +165,18 @@ pub struct PilotJob {
     pub description: PilotDescription,
     backend: Arc<dyn PilotBackend>,
     shared: Arc<PilotShared>,
+    clock: SharedClock,
     cus: Arc<Mutex<Vec<ComputeUnit>>>,
 }
 
 impl PilotJob {
-    /// Wrap a provisioned backend (called by the service).
-    pub fn new(description: PilotDescription, backend: Arc<dyn PilotBackend>) -> Self {
+    /// Wrap a provisioned backend (called by the service).  `clock` is the
+    /// service clock resize transitions are timed on.
+    pub fn new(
+        description: PilotDescription,
+        backend: Arc<dyn PilotBackend>,
+        clock: SharedClock,
+    ) -> Self {
         let job = Self {
             id: NEXT_PILOT_ID.fetch_add(1, Ordering::Relaxed),
             description,
@@ -75,7 +184,10 @@ impl PilotJob {
             shared: Arc::new(PilotShared {
                 state: Mutex::new(PilotState::New),
                 cond: Condvar::new(),
+                ready_at: Mutex::new(None),
+                resize_events: AtomicU64::new(0),
             }),
+            clock,
             cus: Arc::new(Mutex::new(Vec::new())),
         };
         job.set_state(PilotState::Pending);
@@ -102,10 +214,94 @@ impl PilotJob {
         self.backend.platform()
     }
 
-    /// Submit a task to this pilot's resources.
-    pub fn submit_compute_unit(&self, spec: TaskSpec) -> Result<ComputeUnit, PilotError> {
+    /// Effective parallelism (post-resize target while `Resizing`).
+    pub fn parallelism(&self) -> usize {
+        self.backend.parallelism()
+    }
+
+    /// Completed resize transitions.
+    pub fn resize_events(&self) -> u64 {
+        self.shared.resize_events.load(Ordering::Relaxed)
+    }
+
+    /// Finalize a due resize transition: `Resizing → Running` once the
+    /// clock passes the transition deadline.  Cheap and idempotent — the
+    /// control loop calls this every tick.  (Lock order everywhere:
+    /// `ready_at` before `state`, so concurrent pollers serialize.)
+    pub fn poll(&self) {
+        let mut ready = self.shared.ready_at.lock().unwrap();
+        let due = matches!(*ready, Some(t) if self.clock.now() >= t);
+        if !due {
+            return;
+        }
+        *ready = None;
+        let mut state = self.shared.state.lock().unwrap();
+        if *state == PilotState::Resizing {
+            *state = PilotState::Running;
+            self.shared.cond.notify_all();
+        }
+    }
+
+    /// Live resize: ask the backend for `to` units of parallelism.  The
+    /// pilot enters `Resizing` for the plan's deterministic transition
+    /// window (it keeps serving at the old capacity meanwhile) and returns
+    /// to `Running` once [`PilotJob::poll`] observes the deadline passed.
+    ///
+    /// Concurrent resizes on clones of this handle serialize on the
+    /// transition lock: exactly one commits, the rest get
+    /// [`PilotError::ResizeInProgress`].
+    pub fn resize(&self, to: usize) -> Result<ResizePlan, PilotError> {
+        if to == 0 {
+            return Err(PilotError::BadResize("parallelism must be > 0".into()));
+        }
+        // hold the transition lock across check → backend commit → state
+        // update, so the one-transition-at-a-time contract survives racing
+        // callers (lock order: ready_at before state, as in poll())
+        let mut ready = self.shared.ready_at.lock().unwrap();
+        if matches!(*ready, Some(t) if self.clock.now() >= t) {
+            *ready = None;
+            let mut state = self.shared.state.lock().unwrap();
+            if *state == PilotState::Resizing {
+                *state = PilotState::Running;
+                self.shared.cond.notify_all();
+            }
+        }
+        if let Some(t) = *ready {
+            return Err(PilotError::ResizeInProgress(t));
+        }
         let state = self.state();
         if state != PilotState::Running {
+            return Err(PilotError::NotRunning(state));
+        }
+        let plan = self.backend.resize(to)?;
+        if plan.is_change() {
+            self.shared.resize_events.fetch_add(1, Ordering::Relaxed);
+            if plan.transition_s > 0.0 {
+                *ready = Some(self.clock.now() + plan.transition_s);
+                self.set_state(PilotState::Resizing);
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Point-in-time status (finalizes a due resize first).
+    pub fn status(&self) -> PilotStatus {
+        self.poll();
+        PilotStatus {
+            id: self.id,
+            state: self.state(),
+            parallelism: self.backend.parallelism(),
+            resize_events: self.resize_events(),
+            ready_at: *self.shared.ready_at.lock().unwrap(),
+        }
+    }
+
+    /// Submit a task to this pilot's resources.  A `Resizing` pilot still
+    /// accepts work — the old capacity serves until the transition lands.
+    pub fn submit_compute_unit(&self, spec: TaskSpec) -> Result<ComputeUnit, PilotError> {
+        self.poll();
+        let state = self.state();
+        if !state.is_serving() {
             return Err(PilotError::NotRunning(state));
         }
         let cu = ComputeUnit::new();
@@ -144,7 +340,7 @@ impl PilotJob {
 
     /// Drain workers and mark the pilot done.
     pub fn cancel(&self) {
-        if self.state() == PilotState::Running {
+        if self.state().is_serving() {
             self.backend.shutdown();
             self.set_state(PilotState::Canceled);
         }
@@ -152,7 +348,7 @@ impl PilotJob {
 
     /// Graceful completion: wait for CUs, stop workers.
     pub fn finish(&self) {
-        if self.state() == PilotState::Running {
+        if self.state().is_serving() {
             self.wait_all();
             self.backend.shutdown();
             self.set_state(PilotState::Done);

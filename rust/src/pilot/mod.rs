@@ -1,12 +1,16 @@
 //! The pilot abstraction (paper §III): unified resource management across
 //! serverless, cloud, HPC — and, via the plugin registry, any platform a
-//! plugin describes.
+//! plugin describes.  Since the elastic redesign this layer is a
+//! **control plane**, not a submit-only API: pilots are provisioned,
+//! *live-resized*, observed, and torn down through one service.
 //!
-//! # Architecture: one Pilot-API, pluggable platforms
+//! # Architecture: one elastic Pilot-API, pluggable platforms
 //!
 //! The paper's claim is that Pilot-Streaming "allocates resource containers
 //! independent of the application workload, removing the need to write
-//! resource-specific code".  This layer enforces that structurally:
+//! resource-specific code"; its stated future work is to feed predictive
+//! scaling decisions back into that resource management.  This layer
+//! enforces both structurally:
 //!
 //! - [`PilotDescription`] — the normative resource spec (one `parallelism`
 //!   attribute covers Kinesis shards, Kafka partitions, Lambda concurrency,
@@ -16,22 +20,31 @@
 //!   platforms is owned by the registry, so new platforms never touch this
 //!   module.
 //! - [`PluginRegistry`] / [`PlatformPlugin`] — each plugin owns its
-//!   platform's naming/parsing, description validation, and backend
-//!   provisioning ([`plugins`] holds the built-ins: local, lambda, dask,
-//!   kinesis, kafka, edge).  Registering a plugin is the *only* step to add
-//!   a platform — the service and the drivers resolve by name.
-//! - [`PilotComputeService`] — the Pilot-API facade:
-//!   `submit_pilot(description)` resolves the plugin and provisions.
-//! - [`PilotJob`] — an allocated resource container:
-//!   `submit_compute_unit(task)`, plus the capability accessors
-//!   [`PilotJob::broker`] (broker pilots) and [`PilotJob::processor`]
-//!   (processing pilots — what the mini-app drivers pump messages through).
+//!   platform's naming/parsing, description validation, backend
+//!   provisioning, **and elasticity**: [`PlatformPlugin::elasticity`]
+//!   declares whether live pilots can change parallelism, the per-unit
+//!   transition costs, and any hard capacity cap ([`plugins`] holds the
+//!   built-ins: local, lambda, dask, kinesis, kafka, edge, flink).
+//! - [`PilotComputeService`] — the control-plane facade:
+//!   `submit_pilot(description)` provisions,
+//!   `resize_pilot(id, parallelism)` re-provisions live, and
+//!   `pilot_state(id)` observes ([`PilotStatus`]: state, effective
+//!   parallelism, transition deadline).
+//! - [`PilotJob`] — an allocated resource container.  Its state machine
+//!   gained a `Resizing` state: [`PilotBackend::resize`] commits a
+//!   [`ResizePlan`] with platform-true [`ResizeSemantics`] — serverless
+//!   cold-starts new containers and down-scales instantly; HPC pays batch
+//!   queue + node boot to grow and drains to shrink; brokers repartition;
+//!   micro-batch engines savepoint + restart; the edge clamps at its
+//!   device envelope and signals `Throttle` — and the pilot keeps serving
+//!   at its old capacity for the plan's deterministic sim-clock
+//!   `transition_s`.
 //! - [`ComputeUnit`] — the task handle: `wait()`, `outcome()`.
 //!
-//! The mini-app's `PlatformUnderTest` is itself built on this API: a
-//! benchmark scenario expands into pilot descriptions and provisions
-//! through one service — no platform-specific construction outside
-//! [`plugins`].
+//! The mini-app's `PlatformUnderTest` is itself built on this API, and
+//! `insight::control` closes the loop the paper asked for: autoscaler
+//! decisions actuate `resize_pilot` on a live pilot through the same
+//! `ScalingTarget` seam that replays them against the USL model.
 
 pub mod compute_unit;
 pub mod description;
@@ -45,8 +58,10 @@ pub mod workers;
 
 pub use compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
 pub use description::{DescriptionError, MachineKind, PilotDescription, Platform};
-pub use job::{PilotBackend, PilotError, PilotJob};
+pub use job::{PilotBackend, PilotError, PilotJob, PilotStatus, ResizePlan, ResizeSemantics};
 pub use processor::{ProcessCost, StreamProcessor};
-pub use registry::{default_registry, PlatformPlugin, PluginRegistry, ProvisionContext};
+pub use registry::{
+    default_registry, Elasticity, PlatformPlugin, PluginRegistry, ProvisionContext,
+};
 pub use service::PilotComputeService;
 pub use state::{CuState, PilotState};

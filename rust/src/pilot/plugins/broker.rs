@@ -7,10 +7,26 @@ use crate::broker::kinesis::{KinesisStream, ShardLimits};
 use crate::broker::Broker;
 use crate::pilot::compute_unit::{ComputeUnit, TaskSpec};
 use crate::pilot::description::{PilotDescription, Platform};
-use crate::pilot::job::{PilotBackend, PilotError};
-use crate::pilot::registry::{PlatformPlugin, ProvisionContext};
+use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
+use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
 use crate::sim::{SharedClock, SharedResource};
 use std::sync::Arc;
+
+/// Seconds to split or merge one shard/partition during a live reshard
+/// (Kinesis `UpdateShardCount` and Kafka partition adds both proceed
+/// shard-by-shard).
+pub const REPARTITION_S_PER_SHARD: f64 = 1.5;
+
+/// The repartition plan both broker backends share: cost is linear in the
+/// shard delta, in either direction.
+fn repartition_plan(from: usize, to: usize) -> ResizePlan {
+    ResizePlan {
+        from,
+        to,
+        transition_s: from.abs_diff(to) as f64 * REPARTITION_S_PER_SHARD,
+        semantics: ResizeSemantics::Repartition,
+    }
+}
 
 /// Kinesis broker pilot backend.
 pub struct KinesisBrokerBackend {
@@ -42,6 +58,20 @@ impl PilotBackend for KinesisBrokerBackend {
     fn submit(&self, cu: ComputeUnit, _spec: TaskSpec) -> Result<(), PilotError> {
         cu.fail("broker pilots do not execute compute units".into());
         Err(PilotError::NoCompute("kinesis"))
+    }
+
+    fn parallelism(&self) -> usize {
+        self.stream.num_partitions()
+    }
+
+    /// Broker resize: live reshard, paying the per-shard split/merge cost.
+    fn resize(&self, to: usize) -> Result<ResizePlan, PilotError> {
+        let from = self.stream.num_partitions();
+        if to == from {
+            return Ok(ResizePlan::no_change(from));
+        }
+        self.stream.set_shards(to);
+        Ok(repartition_plan(from, to))
     }
 
     fn broker(&self) -> Option<Arc<dyn Broker>> {
@@ -94,6 +124,20 @@ impl PilotBackend for KafkaBrokerBackend {
         Err(PilotError::NoCompute("kafka"))
     }
 
+    fn parallelism(&self) -> usize {
+        self.topic.num_partitions()
+    }
+
+    /// Broker resize: live repartition, paying the per-partition cost.
+    fn resize(&self, to: usize) -> Result<ResizePlan, PilotError> {
+        let from = self.topic.num_partitions();
+        if to == from {
+            return Ok(ResizePlan::no_change(from));
+        }
+        self.topic.set_partitions(to);
+        Ok(repartition_plan(from, to))
+    }
+
     fn broker(&self) -> Option<Arc<dyn Broker>> {
         Some(self.topic.clone() as Arc<dyn Broker>)
     }
@@ -119,6 +163,12 @@ impl PlatformPlugin for KinesisPlugin {
 
     fn accepts_compute(&self) -> bool {
         false
+    }
+
+    /// Resharding cost is symmetric: splits and merges both proceed
+    /// shard-by-shard.
+    fn elasticity(&self) -> Elasticity {
+        Elasticity::elastic(REPARTITION_S_PER_SHARD, REPARTITION_S_PER_SHARD)
     }
 
     fn provision(
@@ -148,6 +198,11 @@ impl PlatformPlugin for KafkaPlugin {
 
     fn accepts_compute(&self) -> bool {
         false
+    }
+
+    /// Partition adds/rebuilds proceed partition-by-partition.
+    fn elasticity(&self) -> Elasticity {
+        Elasticity::elastic(REPARTITION_S_PER_SHARD, REPARTITION_S_PER_SHARD)
     }
 
     fn provision(
@@ -188,6 +243,26 @@ mod tests {
         let b =
             KafkaBrokerBackend::provision(&desc, Arc::new(WallClock::new()), fs).unwrap();
         assert_eq!(b.broker().unwrap().num_partitions(), 4);
+    }
+
+    #[test]
+    fn broker_resize_is_a_live_repartition() {
+        let desc = PilotDescription::new(Platform::KINESIS).with_parallelism(2);
+        let b = KinesisBrokerBackend::provision(&desc, Arc::new(WallClock::new())).unwrap();
+        let plan = b.resize(6).unwrap();
+        assert_eq!(plan.semantics, ResizeSemantics::Repartition);
+        assert!((plan.transition_s - 4.0 * REPARTITION_S_PER_SHARD).abs() < 1e-9);
+        assert_eq!(b.broker().unwrap().num_partitions(), 6);
+        let plan = b.resize(2).unwrap();
+        assert_eq!(b.parallelism(), 2);
+        assert!((plan.transition_s - 4.0 * REPARTITION_S_PER_SHARD).abs() < 1e-9);
+
+        let fs = SharedResource::new("fs", ContentionParams::ISOLATED);
+        let desc = PilotDescription::new(Platform::KAFKA).with_parallelism(4);
+        let k = KafkaBrokerBackend::provision(&desc, Arc::new(WallClock::new()), fs).unwrap();
+        let plan = k.resize(8).unwrap();
+        assert_eq!(plan.semantics, ResizeSemantics::Repartition);
+        assert_eq!(k.broker().unwrap().num_partitions(), 8);
     }
 
     #[test]

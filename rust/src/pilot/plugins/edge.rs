@@ -16,11 +16,11 @@ use crate::broker::kinesis::{KinesisStream, ShardLimits};
 use crate::broker::Broker;
 use crate::pilot::compute_unit::{ComputeUnit, TaskSpec};
 use crate::pilot::description::{DescriptionError, PilotDescription, Platform};
-use crate::pilot::job::{PilotBackend, PilotError};
+use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
 use crate::pilot::processor::StreamProcessor;
-use crate::pilot::registry::{PlatformPlugin, ProvisionContext};
+use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
 use crate::pilot::workers::LazyWorkerPool;
-use crate::serverless::edge::EDGE_MAX_MEMORY_MB;
+use crate::serverless::edge::{EDGE_MAX_CONCURRENCY, EDGE_MAX_MEMORY_MB};
 use crate::serverless::{EdgeSite, FunctionConfig, LambdaFleet};
 use crate::store::ObjectStore;
 use std::sync::Arc;
@@ -99,6 +99,48 @@ impl PilotBackend for EdgeBackend {
         self.pool.submit(cu, spec).map_err(PilotError::Provision)
     }
 
+    fn parallelism(&self) -> usize {
+        self.fleet.concurrency()
+    }
+
+    /// Edge resize: the device envelope is a hard wall.  Targets above
+    /// the site's container count are *clamped* — the plan lands at the
+    /// cap with [`ResizeSemantics::Throttle`], telling the control loop
+    /// the source must slow down rather than the site scale up.
+    fn resize(&self, to: usize) -> Result<ResizePlan, PilotError> {
+        let cap = self.site.max_concurrency;
+        let from = self.fleet.concurrency();
+        let target = to.min(cap);
+        let semantics = if to > cap {
+            ResizeSemantics::Throttle
+        } else if target == from {
+            ResizeSemantics::NoChange
+        } else {
+            ResizeSemantics::ColdStart
+        };
+        if target == from {
+            return Ok(ResizePlan {
+                from,
+                to: from,
+                transition_s: 0.0,
+                semantics,
+            });
+        }
+        self.fleet.set_concurrency(target);
+        self.pool.resize(target);
+        let transition_s = if target > from {
+            self.fleet.config().cold_start_dist().mean()
+        } else {
+            0.0
+        };
+        Ok(ResizePlan {
+            from,
+            to: target,
+            transition_s,
+            semantics,
+        })
+    }
+
     fn broker(&self) -> Option<Arc<dyn Broker>> {
         Some(Arc::clone(&self.stream) as Arc<dyn Broker>)
     }
@@ -133,6 +175,14 @@ impl PlatformPlugin for EdgePlugin {
 
     fn provisions_broker(&self) -> bool {
         true
+    }
+
+    /// Edge elasticity: containers start locally (one cold start), tear
+    /// down instantly — but the device envelope caps parallelism, so
+    /// scale-ups past it resolve to throttling the source.
+    fn elasticity(&self) -> Elasticity {
+        Elasticity::elastic(FunctionConfig::default().cold_start_dist().mean(), 0.0)
+            .with_cap(EDGE_MAX_CONCURRENCY)
     }
 
     /// Clamp container memory into the device envelope, so the cloud
@@ -250,6 +300,30 @@ mod tests {
         assert_eq!(cu.wait(), CuState::Done);
         assert!(cu.outcome().unwrap().executor.starts_with("edge-"));
         assert_eq!(b.fleet().invocation_count(), 1);
+    }
+
+    #[test]
+    fn resize_clamps_at_the_device_cap() {
+        let b = EdgeBackend::provision(&desc(), &ctx()).unwrap();
+        assert_eq!(b.parallelism(), 2);
+        // within the envelope: ordinary cold-start scale-up
+        let plan = b.resize(4).unwrap();
+        assert_eq!((plan.from, plan.to), (2, 4));
+        assert_eq!(plan.semantics, ResizeSemantics::ColdStart);
+        assert!(plan.transition_s > 0.0);
+        // past the envelope: clamped at the cap, throttle signaled
+        let plan = b.resize(64).unwrap();
+        assert_eq!(plan.to, EDGE_MAX_CONCURRENCY);
+        assert_eq!(plan.semantics, ResizeSemantics::Throttle);
+        assert_eq!(b.parallelism(), EDGE_MAX_CONCURRENCY);
+        // already at the cap: still a throttle signal, but a no-op
+        let plan = b.resize(64).unwrap();
+        assert!(!plan.is_change());
+        assert_eq!(plan.semantics, ResizeSemantics::Throttle);
+        // instant down-scale
+        let plan = b.resize(1).unwrap();
+        assert_eq!(plan.transition_s, 0.0);
+        assert_eq!(b.parallelism(), 1);
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Flink/Spark-Streaming-class micro-batch plugin (the ROADMAP follow-on
+//! to PR 1): records are grouped into fixed micro-batch windows before the
+//! engine sees them, so every message carries a *scheduling-delay*
+//! overhead term on top of its compute and model I/O — the signature that
+//! separates micro-batch engines from the per-record FaaS path in the
+//! paper's latency breakdowns.
+//!
+//! Elasticity is platform-true too: a running job cannot simply add
+//! operators — rescaling snapshots state to a savepoint and restores at
+//! the new parallelism ([`ResizeSemantics::Restart`]), in both directions.
+
+use crate::engine::StepEngine;
+use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
+use crate::pilot::description::{PilotDescription, Platform};
+use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
+use crate::pilot::processor::{kmeans_step, ProcessCost, StreamProcessor};
+use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
+use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
+use crate::store::{ModelStore, ObjectStore};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Micro-batch window length (Spark Streaming's classic default ballpark).
+pub const MICRO_BATCH_INTERVAL_S: f64 = 0.5;
+
+/// Expected per-message scheduling delay: a record arriving uniformly
+/// within a batch window waits half the interval for its batch to fire.
+pub const SCHEDULING_DELAY_S: f64 = MICRO_BATCH_INTERVAL_S / 2.0;
+
+/// Savepoint + restore window a running job pays to rescale.
+pub const SAVEPOINT_RESTORE_S: f64 = 3.0;
+
+/// Shared execution core: one K-Means step against the job's state store.
+struct FlinkCore {
+    engine: Arc<dyn StepEngine>,
+    store: Arc<dyn ModelStore>,
+}
+
+impl FlinkCore {
+    /// Returns (inertia, compute seconds, io seconds) — the shared
+    /// in-process step ([`kmeans_step`]); the micro-batch scheduling
+    /// delay is layered on by the caller as overhead.
+    fn step(
+        &self,
+        points: &[f32],
+        dim: usize,
+        model_key: &str,
+        centroids: usize,
+    ) -> Result<(f64, f64, f64), String> {
+        kmeans_step(
+            self.engine.as_ref(),
+            self.store.as_ref(),
+            points,
+            dim,
+            model_key,
+            centroids,
+        )
+    }
+}
+
+struct FlinkExecutor {
+    core: Arc<FlinkCore>,
+}
+
+impl TaskExecutor for FlinkExecutor {
+    fn execute(&self, worker: usize, spec: TaskSpec) -> Result<CuOutcome, String> {
+        match spec {
+            TaskSpec::KMeansStep {
+                points,
+                dim,
+                model_key,
+                centroids,
+            } => {
+                let (inertia, compute, io) = self.core.step(&points, dim, &model_key, centroids)?;
+                Ok(CuOutcome {
+                    value: inertia,
+                    compute_seconds: compute,
+                    io_seconds: io,
+                    overhead_seconds: SCHEDULING_DELAY_S,
+                    executor: format!("flink-{worker}"),
+                })
+            }
+            TaskSpec::Sleep(s) => Ok(CuOutcome {
+                value: s,
+                compute_seconds: s,
+                io_seconds: 0.0,
+                overhead_seconds: SCHEDULING_DELAY_S,
+                executor: format!("flink-{worker}"),
+            }),
+            TaskSpec::Custom(_) => {
+                Err("micro-batch jobs run staged operators, not closures".into())
+            }
+        }
+    }
+}
+
+/// Streams messages through the micro-batch job: every message pays the
+/// expected batch scheduling delay as overhead.
+struct FlinkProcessor {
+    core: Arc<FlinkCore>,
+}
+
+impl StreamProcessor for FlinkProcessor {
+    fn label(&self) -> &'static str {
+        "flink"
+    }
+
+    fn process(
+        &self,
+        _partition: usize,
+        points: &[f32],
+        dim: usize,
+        model_key: &str,
+        centroids: usize,
+    ) -> Result<ProcessCost, String> {
+        let (_, compute, io) = self.core.step(points, dim, model_key, centroids)?;
+        Ok(ProcessCost {
+            compute,
+            io,
+            overhead: SCHEDULING_DELAY_S,
+        })
+    }
+}
+
+/// The micro-batch processing backend.
+pub struct FlinkBackend {
+    core: Arc<FlinkCore>,
+    pool: LazyWorkerPool,
+    parallelism: AtomicUsize,
+}
+
+impl FlinkBackend {
+    pub fn provision(desc: &PilotDescription, engine: Arc<dyn StepEngine>) -> Self {
+        let core = Arc::new(FlinkCore {
+            engine,
+            store: Arc::new(ObjectStore::default()),
+        });
+        let pool = LazyWorkerPool::new(
+            desc.parallelism,
+            Arc::new(FlinkExecutor {
+                core: Arc::clone(&core),
+            }),
+        );
+        Self {
+            core,
+            pool,
+            parallelism: AtomicUsize::new(desc.parallelism),
+        }
+    }
+}
+
+impl PilotBackend for FlinkBackend {
+    fn platform(&self) -> Platform {
+        Platform::FLINK
+    }
+
+    fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), PilotError> {
+        self.pool.submit(cu, spec).map_err(PilotError::Provision)
+    }
+
+    fn parallelism(&self) -> usize {
+        self.parallelism.load(Ordering::Relaxed)
+    }
+
+    /// Micro-batch rescale: savepoint the job, restore at the new
+    /// parallelism — a flat restart window in either direction.
+    fn resize(&self, to: usize) -> Result<ResizePlan, PilotError> {
+        let from = self.parallelism.load(Ordering::Relaxed);
+        if to == from {
+            return Ok(ResizePlan::no_change(from));
+        }
+        self.parallelism.store(to, Ordering::Relaxed);
+        self.pool.resize(to);
+        Ok(ResizePlan {
+            from,
+            to,
+            transition_s: SAVEPOINT_RESTORE_S,
+            semantics: ResizeSemantics::Restart,
+        })
+    }
+
+    fn processor(&self) -> Option<Arc<dyn StreamProcessor>> {
+        Some(Arc::new(FlinkProcessor {
+            core: Arc::clone(&self.core),
+        }))
+    }
+
+    fn shutdown(&self) {
+        self.pool.shutdown();
+    }
+
+    fn completed(&self) -> u64 {
+        self.pool.completed()
+    }
+}
+
+/// The Flink platform plugin: micro-batch processing, savepoint-based
+/// rescaling.  Registering it is all it took to make `flink` addressable
+/// from `run --platform`, sweeps, TOML configs, and `autoscale --live`.
+pub struct FlinkPlugin;
+
+impl PlatformPlugin for FlinkPlugin {
+    fn platform(&self) -> Platform {
+        Platform::FLINK
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["spark-streaming", "microbatch"]
+    }
+
+    /// Rescaling restarts the job from a savepoint, both ways.
+    fn elasticity(&self) -> Elasticity {
+        Elasticity::elastic(SAVEPOINT_RESTORE_S, SAVEPOINT_RESTORE_S)
+    }
+
+    fn provision(
+        &self,
+        description: &PilotDescription,
+        ctx: &ProvisionContext,
+    ) -> Result<Arc<dyn PilotBackend>, PilotError> {
+        Ok(Arc::new(FlinkBackend::provision(
+            description,
+            Arc::clone(&ctx.engine),
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CalibratedEngine;
+    use crate::pilot::state::CuState;
+
+    fn backend() -> FlinkBackend {
+        let desc = PilotDescription::new(Platform::FLINK).with_parallelism(2);
+        FlinkBackend::provision(&desc, Arc::new(CalibratedEngine::new(5)))
+    }
+
+    #[test]
+    fn every_message_pays_the_scheduling_delay() {
+        let b = backend();
+        let p = b.processor().expect("micro-batch processor");
+        assert_eq!(p.label(), "flink");
+        let pts = vec![0.1f32; 100 * 8];
+        let c1 = p.process(0, &pts, 8, "m", 16).unwrap();
+        let c2 = p.process(1, &pts, 8, "m", 16).unwrap();
+        for c in [c1, c2] {
+            assert!((c.overhead - SCHEDULING_DELAY_S).abs() < 1e-12);
+            assert!(c.compute > 0.0 && c.io > 0.0);
+        }
+    }
+
+    #[test]
+    fn compute_units_run_as_micro_batches() {
+        let b = backend();
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        b.submit(
+            cu.clone(),
+            TaskSpec::KMeansStep {
+                points: Arc::new(vec![0.1; 160]),
+                dim: 8,
+                model_key: "m".into(),
+                centroids: 8,
+            },
+        )
+        .unwrap();
+        assert_eq!(cu.wait(), CuState::Done);
+        let o = cu.outcome().unwrap();
+        assert!((o.overhead_seconds - SCHEDULING_DELAY_S).abs() < 1e-12);
+        assert!(o.executor.starts_with("flink-"));
+        // closures are not operators
+        let cu2 = ComputeUnit::new();
+        cu2.transition(CuState::Queued);
+        b.submit(cu2.clone(), TaskSpec::Custom(Box::new(|| Ok(1.0))))
+            .unwrap();
+        assert_eq!(cu2.wait(), CuState::Failed);
+        b.shutdown();
+    }
+
+    #[test]
+    fn rescale_is_a_savepoint_restart_both_ways() {
+        let b = backend();
+        let up = b.resize(8).unwrap();
+        assert_eq!(up.semantics, ResizeSemantics::Restart);
+        assert!((up.transition_s - SAVEPOINT_RESTORE_S).abs() < 1e-12);
+        assert_eq!(b.parallelism(), 8);
+        let down = b.resize(2).unwrap();
+        assert!((down.transition_s - SAVEPOINT_RESTORE_S).abs() < 1e-12);
+        assert!(b.resize(2).unwrap().transition_s == 0.0, "no-op is free");
+    }
+}

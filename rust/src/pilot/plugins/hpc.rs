@@ -6,13 +6,13 @@ use crate::engine::StepEngine;
 use crate::hpc::{Cluster, DaskPool};
 use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
 use crate::pilot::description::{DescriptionError, PilotDescription, Platform};
-use crate::pilot::job::{PilotBackend, PilotError};
+use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
 use crate::pilot::processor::{ProcessCost, StreamProcessor};
-use crate::pilot::registry::{PlatformPlugin, ProvisionContext};
+use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
 use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
 use crate::sim::{ContentionParams, SharedResource};
 use crate::store::shared_fs::{SharedFsParams, SharedFsStore};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Default Lustre contention coefficients.
 ///
@@ -24,6 +24,13 @@ use std::sync::Arc;
 /// EXPERIMENTS.md Fig 6 and `tests/usl_repro.rs`.
 pub const DEFAULT_LUSTRE_ALPHA: f64 = 0.9;
 pub const DEFAULT_LUSTRE_BETA: f64 = 0.05;
+
+/// Seconds for a Dask worker process to register with the scheduler once
+/// its node is up (workers spawn in parallel, so scale-up within the
+/// current allocation pays this once).
+pub const WORKER_SPAWN_S: f64 = 2.0;
+/// Seconds to drain a retiring worker's in-flight task on scale-down.
+pub const WORKER_DRAIN_S: f64 = 5.0;
 
 struct DaskExecutor {
     pool: Arc<DaskPool>,
@@ -103,7 +110,7 @@ impl StreamProcessor for DaskProcessor {
 pub struct HpcBackend {
     dask: Arc<DaskPool>,
     cluster: Arc<Cluster>,
-    allocation_id: u64,
+    allocation_id: Mutex<u64>,
     pool: LazyWorkerPool,
 }
 
@@ -149,7 +156,7 @@ impl HpcBackend {
         Ok(Self {
             dask,
             cluster,
-            allocation_id: allocation.id,
+            allocation_id: Mutex::new(allocation.id),
             pool,
         })
     }
@@ -168,6 +175,79 @@ impl PilotBackend for HpcBackend {
         self.pool.submit(cu, spec).map_err(PilotError::Provision)
     }
 
+    fn parallelism(&self) -> usize {
+        self.dask.workers()
+    }
+
+    /// HPC resize: workers within the current node allocation spawn after
+    /// a flat scheduler-registration delay; growing past it means a new
+    /// batch allocation — queue wait plus node boot, sampled from the
+    /// cluster's seeded model.  Scale-down drains the retiring workers'
+    /// in-flight tasks.  Targets beyond the machine are *clamped* at its
+    /// capacity (the same cap-push-back contract as the edge plugin), so
+    /// the control loop learns the envelope instead of aborting.
+    fn resize(&self, to: usize) -> Result<ResizePlan, PilotError> {
+        let from = self.dask.workers();
+        let machine = self.dask.machine();
+        let cap = machine.max_workers();
+        let target = to.min(cap);
+        if target == from {
+            return Ok(ResizePlan {
+                from,
+                to: from,
+                transition_s: 0.0,
+                semantics: if to > cap {
+                    ResizeSemantics::Throttle
+                } else {
+                    ResizeSemantics::NoChange
+                },
+            });
+        }
+        let clamped = to > cap;
+        let to = target;
+        let cur_nodes = machine.nodes_for(from);
+        let new_nodes = machine.nodes_for(to);
+        let mut transition_s = if to > from { WORKER_SPAWN_S } else { WORKER_DRAIN_S };
+        if new_nodes != cur_nodes {
+            // the batch scheduler has no "grow allocation" verb: release
+            // and re-request (a shrink re-request never queues long in
+            // practice, so only charge the queue on growth)
+            let mut id = self.allocation_id.lock().unwrap();
+            self.cluster
+                .release(*id)
+                .map_err(|e| PilotError::Provision(e.to_string()))?;
+            let alloc = match self.cluster.allocate(new_nodes) {
+                Ok(a) => a,
+                Err(e) => {
+                    // roll the old allocation back so the pilot keeps its
+                    // nodes rather than ending up resource-less
+                    let rollback = self
+                        .cluster
+                        .allocate(cur_nodes)
+                        .map_err(|e2| PilotError::Provision(e2.to_string()))?;
+                    *id = rollback.id;
+                    return Err(PilotError::Provision(e.to_string()));
+                }
+            };
+            *id = alloc.id;
+            if to > from {
+                transition_s += alloc.queue_wait + alloc.startup;
+            }
+        }
+        self.dask.set_workers(to);
+        self.pool.resize(to);
+        Ok(ResizePlan {
+            from,
+            to,
+            transition_s,
+            semantics: if clamped {
+                ResizeSemantics::Throttle
+            } else {
+                ResizeSemantics::WorkerStartup
+            },
+        })
+    }
+
     fn processor(&self) -> Option<Arc<dyn StreamProcessor>> {
         Some(Arc::new(DaskProcessor {
             pool: Arc::clone(&self.dask),
@@ -176,7 +256,7 @@ impl PilotBackend for HpcBackend {
 
     fn shutdown(&self) {
         self.pool.shutdown();
-        let _ = self.cluster.release(self.allocation_id);
+        let _ = self.cluster.release(*self.allocation_id.lock().unwrap());
     }
 
     fn completed(&self) -> u64 {
@@ -195,6 +275,13 @@ impl PlatformPlugin for HpcPlugin {
 
     fn aliases(&self) -> &'static [&'static str] {
         &["hpc"]
+    }
+
+    /// HPC elasticity: new workers pay scheduler registration (plus batch
+    /// queue + node boot when the allocation grows); retiring workers
+    /// drain their in-flight task first.
+    fn elasticity(&self) -> Elasticity {
+        Elasticity::elastic(WORKER_SPAWN_S, WORKER_DRAIN_S)
     }
 
     fn validate(&self, d: &PilotDescription) -> Result<(), DescriptionError> {
@@ -259,6 +346,53 @@ mod tests {
         assert!(o.io_seconds > 0.0);
         assert!(o.overhead_seconds > 0.0, "coherency sync cost");
         assert!(o.executor.starts_with("dask-"));
+    }
+
+    #[test]
+    fn resize_scales_workers_and_reallocates_nodes() {
+        let desc = PilotDescription::new(Platform::DASK)
+            .with_parallelism(2)
+            .with_machine(MachineKind::Wrangler)
+            .with_max_nodes(4);
+        let backend =
+            HpcBackend::provision(&desc, Arc::new(CalibratedEngine::new(1)), None).unwrap();
+        assert_eq!(backend.parallelism(), 2);
+        assert_eq!(backend.cluster.allocated_nodes(), 1);
+
+        // grow within the node: flat worker-spawn delay, no new allocation
+        let plan = backend.resize(8).unwrap();
+        assert_eq!((plan.from, plan.to), (2, 8));
+        assert_eq!(plan.semantics, ResizeSemantics::WorkerStartup);
+        assert!((plan.transition_s - WORKER_SPAWN_S).abs() < 1e-9);
+        assert_eq!(backend.cluster.allocated_nodes(), 1);
+
+        // grow past the node: batch queue + boot dominate the transition
+        let plan = backend.resize(16).unwrap();
+        assert_eq!(backend.parallelism(), 16);
+        assert_eq!(backend.cluster.allocated_nodes(), 2);
+        assert!(
+            plan.transition_s > WORKER_SPAWN_S,
+            "new allocation must pay queue+boot, got {}",
+            plan.transition_s
+        );
+
+        // shrink: drain cost, nodes released back
+        let plan = backend.resize(4).unwrap();
+        assert!((plan.transition_s - WORKER_DRAIN_S).abs() < 1e-9);
+        assert_eq!(backend.cluster.allocated_nodes(), 1);
+
+        // targets beyond the machine clamp at its capacity and signal
+        // throttling — the loop learns the envelope instead of aborting
+        let plan = backend.resize(4 * 12 + 1).unwrap();
+        assert_eq!(plan.to, 48);
+        assert_eq!(plan.semantics, ResizeSemantics::Throttle);
+        assert_eq!(backend.cluster.allocated_nodes(), 4);
+        // and once pinned at the cap, over-asks are throttling no-ops
+        let plan = backend.resize(4 * 12 + 1).unwrap();
+        assert!(!plan.is_change());
+        assert_eq!(plan.semantics, ResizeSemantics::Throttle);
+        backend.shutdown();
+        assert_eq!(backend.cluster.allocated_nodes(), 0);
     }
 
     #[test]

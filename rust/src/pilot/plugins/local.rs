@@ -5,10 +5,11 @@
 use crate::engine::StepEngine;
 use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
 use crate::pilot::description::{PilotDescription, Platform};
-use crate::pilot::job::{PilotBackend, PilotError};
-use crate::pilot::registry::{PlatformPlugin, ProvisionContext};
+use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
+use crate::pilot::processor::kmeans_step;
+use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
 use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
-use crate::store::{ModelState, ModelStore, ObjectStore};
+use crate::store::{ModelStore, ObjectStore};
 use std::sync::Arc;
 
 struct LocalExecutor {
@@ -25,23 +26,18 @@ impl TaskExecutor for LocalExecutor {
                 model_key,
                 centroids,
             } => {
-                if !self.store.contains(&model_key) {
-                    let init = ModelState::new_random(centroids, dim, 42);
-                    let _ = self.store.put(&model_key, init);
-                }
-                let (model, io_get) = self.store.get(&model_key).map_err(|e| e.to_string())?;
-                let step = self
-                    .engine
-                    .execute_step(&points, dim, &model)
-                    .map_err(|e| e.to_string())?;
-                let (_, io_put) = self
-                    .store
-                    .put(&model_key, step.model)
-                    .map_err(|e| e.to_string())?;
+                let (inertia, compute, io) = kmeans_step(
+                    self.engine.as_ref(),
+                    self.store.as_ref(),
+                    &points,
+                    dim,
+                    &model_key,
+                    centroids,
+                )?;
                 Ok(CuOutcome {
-                    value: step.inertia,
-                    compute_seconds: step.cpu_seconds,
-                    io_seconds: io_get.seconds + io_put.seconds,
+                    value: inertia,
+                    compute_seconds: compute,
+                    io_seconds: io,
                     overhead_seconds: 0.0,
                     executor: format!("local-{worker}"),
                 })
@@ -97,6 +93,26 @@ impl PilotBackend for LocalBackend {
             .map_err(PilotError::Provision)
     }
 
+    fn parallelism(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Threads are free: the pool drains and respawns at the new size with
+    /// no transition window.
+    fn resize(&self, to: usize) -> Result<ResizePlan, PilotError> {
+        let from = self.pool.workers();
+        if to == from {
+            return Ok(ResizePlan::no_change(from));
+        }
+        self.pool.resize(to);
+        Ok(ResizePlan {
+            from,
+            to,
+            transition_s: 0.0,
+            semantics: ResizeSemantics::ColdStart,
+        })
+    }
+
     fn shutdown(&self) {
         self.pool.shutdown();
     }
@@ -116,6 +132,16 @@ impl PlatformPlugin for LocalPlugin {
 
     fn aliases(&self) -> &'static [&'static str] {
         &["threads"]
+    }
+
+    /// Local pilots run bags-of-tasks, not message streams.
+    fn streams(&self) -> bool {
+        false
+    }
+
+    /// In-process threads come and go for free.
+    fn elasticity(&self) -> Elasticity {
+        Elasticity::elastic(0.0, 0.0)
     }
 
     fn provision(

@@ -8,12 +8,14 @@
 
 pub mod broker;
 pub mod edge;
+pub mod flink;
 pub mod hpc;
 pub mod local;
 pub mod serverless;
 
 pub use broker::{KafkaBrokerBackend, KafkaPlugin, KinesisBrokerBackend, KinesisPlugin};
 pub use edge::{EdgeBackend, EdgePlugin};
+pub use flink::{FlinkBackend, FlinkPlugin};
 pub use hpc::{HpcBackend, HpcPlugin};
 pub use local::{LocalBackend, LocalPlugin};
 pub use serverless::{ServerlessBackend, ServerlessPlugin};

@@ -9,9 +9,9 @@
 use crate::engine::StepEngine;
 use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
 use crate::pilot::description::{DescriptionError, PilotDescription, Platform};
-use crate::pilot::job::{PilotBackend, PilotError};
+use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
 use crate::pilot::processor::{ProcessCost, StreamProcessor};
-use crate::pilot::registry::{PlatformPlugin, ProvisionContext};
+use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
 use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
 use crate::serverless::{FunctionConfig, LambdaFleet};
 use crate::sim::SharedClock;
@@ -144,6 +144,36 @@ impl PilotBackend for ServerlessBackend {
         self.pool.submit(cu, spec).map_err(PilotError::Provision)
     }
 
+    fn parallelism(&self) -> usize {
+        self.fleet.concurrency()
+    }
+
+    /// Serverless resize: scale-up raises the concurrency cap — the new
+    /// containers cold-start in-band on their first invocation, so the
+    /// transition window is one (mean) cold start; scale-down is instant
+    /// (idle sandboxes beyond the cap are torn down immediately).
+    fn resize(&self, to: usize) -> Result<ResizePlan, PilotError> {
+        let from = self.fleet.concurrency();
+        if to == from {
+            return Ok(ResizePlan::no_change(from));
+        }
+        self.fleet.set_concurrency(to);
+        self.pool.resize(to);
+        let transition_s = if to > from {
+            // containers boot in parallel: one cold-start window, not one
+            // per container
+            self.fleet.config().cold_start_dist().mean()
+        } else {
+            0.0
+        };
+        Ok(ResizePlan {
+            from,
+            to,
+            transition_s,
+            semantics: ResizeSemantics::ColdStart,
+        })
+    }
+
     fn processor(&self) -> Option<Arc<dyn StreamProcessor>> {
         Some(Arc::new(FleetProcessor {
             fleet: Arc::clone(&self.fleet),
@@ -171,6 +201,13 @@ impl PlatformPlugin for ServerlessPlugin {
 
     fn aliases(&self) -> &'static [&'static str] {
         &["serverless", "faas"]
+    }
+
+    /// Serverless elasticity: scale-up costs one container cold start,
+    /// scale-down is instant — the regime that makes FaaS the natural
+    /// autoscaling target (arXiv:2603.03089's short-stream argument).
+    fn elasticity(&self) -> Elasticity {
+        Elasticity::elastic(FunctionConfig::default().cold_start_dist().mean(), 0.0)
     }
 
     fn validate(&self, d: &PilotDescription) -> Result<(), DescriptionError> {

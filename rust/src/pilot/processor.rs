@@ -34,6 +34,12 @@ pub trait StreamProcessor: Send + Sync {
 
     /// Process one message's points on `partition`; returns the modeled
     /// cost breakdown.
+    ///
+    /// Error convention: *transient admission push-back* (a saturated
+    /// substrate that will accept the message shortly) must mention
+    /// `"throttled"` or `"concurrency"` in the error text — the live
+    /// interval driver retries those within the control interval and
+    /// treats every other error as fatal.
     fn process(
         &self,
         partition: usize,
@@ -42,6 +48,33 @@ pub trait StreamProcessor: Send + Sync {
         model_key: &str,
         centroids: usize,
     ) -> Result<ProcessCost, String>;
+}
+
+/// One K-Means step against a model store: init-if-absent → get model →
+/// execute → put model.  Returns `(inertia, compute seconds, io seconds)`.
+/// The shared core of the in-process backends (local threads, flink
+/// micro-batch); the fleet and Dask substrates carry their own versions
+/// with platform cost terms.
+pub fn kmeans_step(
+    engine: &dyn crate::engine::StepEngine,
+    store: &dyn crate::store::ModelStore,
+    points: &[f32],
+    dim: usize,
+    model_key: &str,
+    centroids: usize,
+) -> Result<(f64, f64, f64), String> {
+    if !store.contains(model_key) {
+        let init = crate::store::ModelState::new_random(centroids, dim, 42);
+        let _ = store.put(model_key, init);
+    }
+    let (model, io_get) = store.get(model_key).map_err(|e| e.to_string())?;
+    let step = engine
+        .execute_step(points, dim, &model)
+        .map_err(|e| e.to_string())?;
+    let (_, io_put) = store
+        .put(model_key, step.model)
+        .map_err(|e| e.to_string())?;
+    Ok((step.inertia, step.cpu_seconds, io_get.seconds + io_put.seconds))
 }
 
 #[cfg(test)]

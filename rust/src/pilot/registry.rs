@@ -4,7 +4,7 @@
 //! platform — cloud, HPC, or edge — is *only* a plugin registration, with
 //! zero edits to the service or the drivers.
 //!
-//! A plugin owns three things for its platform:
+//! A plugin owns four things for its platform:
 //!
 //! 1. **Naming/parsing** — the canonical [`Platform`] name plus aliases
 //!    ([`PluginRegistry::parse`] consults the plugins, nobody else).
@@ -13,6 +13,12 @@
 //!    envelope) via [`PlatformPlugin::validate`].
 //! 3. **Provisioning** — building the [`PilotBackend`] from a validated
 //!    [`PilotDescription`] and the service's [`ProvisionContext`].
+//! 4. **Elasticity** — the platform's live-resize semantics
+//!    ([`PlatformPlugin::elasticity`]): whether pilots can change
+//!    parallelism after provisioning, what one unit of scale-up/-down
+//!    costs in transition time, and any hard capacity cap.  Backends
+//!    realize the descriptor through
+//!    [`PilotBackend::resize`](super::job::PilotBackend::resize).
 
 use super::description::{DescriptionError, PilotDescription, Platform};
 use super::job::{PilotBackend, PilotError};
@@ -29,6 +35,54 @@ pub struct ProvisionContext {
     /// The shared filesystem of the "HPC machine" the service fronts;
     /// plugins that co-deploy on it (Kafka, Dask) contend here together.
     pub shared_fs: Arc<SharedResource>,
+}
+
+/// A platform's declared elasticity: how (and whether) a live pilot's
+/// parallelism can change, and what the transition costs.  The numbers are
+/// *per-unit* planning hints for the control layer; the backend's
+/// [`PilotBackend::resize`](super::job::PilotBackend::resize) commits the
+/// actual [`ResizePlan`](super::job::ResizePlan).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Elasticity {
+    /// Whether live pilots of this platform support `resize` at all.
+    pub resizable: bool,
+    /// Seconds to bring one additional unit of parallelism online
+    /// (container cold start, worker boot, shard split).
+    pub scale_up_s: f64,
+    /// Seconds to retire one unit (drain, merge); 0 = instant.
+    pub scale_down_s: f64,
+    /// Hard platform cap on parallelism (device envelope); `None` means
+    /// unbounded as far as the platform is concerned.
+    pub max_parallelism: Option<usize>,
+}
+
+impl Elasticity {
+    /// A platform whose pilots cannot change size after provisioning.
+    pub fn rigid() -> Self {
+        Self {
+            resizable: false,
+            scale_up_s: f64::INFINITY,
+            scale_down_s: f64::INFINITY,
+            max_parallelism: None,
+        }
+    }
+
+    /// A resizable platform with the given per-unit transition costs.
+    pub fn elastic(scale_up_s: f64, scale_down_s: f64) -> Self {
+        Self {
+            resizable: true,
+            scale_up_s,
+            scale_down_s,
+            max_parallelism: None,
+        }
+    }
+
+    /// Attach a hard capacity cap (e.g. the edge device's container
+    /// count).
+    pub fn with_cap(mut self, cap: usize) -> Self {
+        self.max_parallelism = Some(cap);
+        self
+    }
 }
 
 /// One platform's provisioning plugin.
@@ -49,6 +103,22 @@ pub trait PlatformPlugin: Send + Sync {
     /// Pilots of this platform execute compute units.
     fn accepts_compute(&self) -> bool {
         true
+    }
+
+    /// Pilots of this platform expose a
+    /// [`StreamProcessor`](super::processor::StreamProcessor) — i.e. they
+    /// can anchor a mini-app scenario as its processing stage.  The
+    /// mini-app's platform naming treats the registry as the single source
+    /// of truth, so any plugin returning `true` here is immediately
+    /// addressable from scenarios, sweeps, and TOML configs.
+    fn streams(&self) -> bool {
+        self.accepts_compute()
+    }
+
+    /// The platform's live-resize semantics.  Defaults to rigid; elastic
+    /// platforms override with their transition-cost descriptor.
+    fn elasticity(&self) -> Elasticity {
+        Elasticity::rigid()
     }
 
     /// Platform-appropriate normalization, applied by the service (and by
@@ -101,7 +171,8 @@ impl PluginRegistry {
         Self::default()
     }
 
-    /// All built-in plugins: local, lambda, dask, kinesis, kafka, edge.
+    /// All built-in plugins: local, lambda, dask, kinesis, kafka, edge,
+    /// flink.
     pub fn builtin() -> Self {
         let mut r = Self::empty();
         let builtins: Vec<Arc<dyn PlatformPlugin>> = vec![
@@ -111,6 +182,7 @@ impl PluginRegistry {
             Arc::new(super::plugins::KinesisPlugin),
             Arc::new(super::plugins::KafkaPlugin),
             Arc::new(super::plugins::EdgePlugin),
+            Arc::new(super::plugins::FlinkPlugin),
         ];
         for p in builtins {
             r.register(p).expect("builtin plugins have unique names");
@@ -223,7 +295,7 @@ mod tests {
     #[test]
     fn builtin_registry_has_all_platforms() {
         let r = PluginRegistry::builtin();
-        assert_eq!(r.len(), 6);
+        assert_eq!(r.len(), 7);
         for p in [
             Platform::LOCAL,
             Platform::LAMBDA,
@@ -231,6 +303,7 @@ mod tests {
             Platform::KINESIS,
             Platform::KAFKA,
             Platform::EDGE,
+            Platform::FLINK,
         ] {
             assert!(r.get(p).is_some(), "{p} missing");
             assert_eq!(r.parse(p.name()), Some(p));
@@ -244,7 +317,31 @@ mod tests {
         assert_eq!(r.parse("SERVERLESS"), Some(Platform::LAMBDA));
         assert_eq!(r.parse("greengrass"), Some(Platform::EDGE));
         assert_eq!(r.parse("hpc"), Some(Platform::DASK));
-        assert_eq!(r.parse("flink"), None);
+        assert_eq!(r.parse("microbatch"), Some(Platform::FLINK));
+        assert_eq!(r.parse("heron"), None);
+    }
+
+    #[test]
+    fn builtin_elasticity_declared_per_platform() {
+        let r = PluginRegistry::builtin();
+        // every built-in platform is elastic...
+        for p in r.platforms() {
+            let e = r.get(p).unwrap().elasticity();
+            assert!(e.resizable, "{p} must declare elasticity");
+        }
+        // ...with platform-true shapes: serverless down-scales instantly,
+        // HPC pays a drain, the edge declares its device cap
+        assert_eq!(
+            r.get(Platform::LAMBDA).unwrap().elasticity().scale_down_s,
+            0.0
+        );
+        assert!(r.get(Platform::DASK).unwrap().elasticity().scale_down_s > 0.0);
+        assert_eq!(
+            r.get(Platform::EDGE).unwrap().elasticity().max_parallelism,
+            Some(crate::serverless::edge::EDGE_MAX_CONCURRENCY)
+        );
+        // a plugin that doesn't opt in stays rigid
+        assert!(!FakePlugin("rigid", &[]).elasticity().resizable);
     }
 
     #[test]
@@ -269,8 +366,8 @@ mod tests {
             .register(Arc::new(FakePlugin("mybroker", &["kafka"])))
             .is_err());
         // fresh names are fine
-        assert!(r.register(Arc::new(FakePlugin("flink", &["beam"]))).is_ok());
-        assert_eq!(r.parse("beam"), Some(Platform::from_static("flink")));
+        assert!(r.register(Arc::new(FakePlugin("samza", &["beam"]))).is_ok());
+        assert_eq!(r.parse("beam"), Some(Platform::from_static("samza")));
     }
 
     #[test]

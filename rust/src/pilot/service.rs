@@ -1,11 +1,15 @@
 //! `PilotComputeService` — the Pilot-API facade (paper Fig 2's
-//! Pilot-Manager): one entry point that provisions pilots on any platform
-//! a [`PluginRegistry`] knows, from a [`PilotDescription`], handing back
-//! [`PilotJob`]s.  The service contains **no platform-specific code**: it
-//! resolves the description's platform to a plugin and delegates.
+//! Pilot-Manager), now an **elastic control plane**: one entry point that
+//! provisions pilots on any platform a [`PluginRegistry`] knows
+//! ([`PilotComputeService::submit_pilot`]), *re*-provisions them live
+//! ([`PilotComputeService::resize_pilot`]), and reports their state
+//! ([`PilotComputeService::pilot_state`]).  The service contains **no
+//! platform-specific code**: it resolves the description's platform to a
+//! plugin and delegates; resize semantics and transition costs live with
+//! each plugin's backend.
 
 use super::description::PilotDescription;
-use super::job::{PilotError, PilotJob};
+use super::job::{PilotError, PilotJob, PilotStatus, ResizePlan};
 use super::registry::{default_registry, PluginRegistry, ProvisionContext};
 use crate::engine::StepEngine;
 use crate::sim::{ContentionParams, SharedClock, SharedResource};
@@ -82,7 +86,7 @@ impl PilotComputeService {
             shared_fs: Arc::clone(&self.shared_fs),
         };
         let backend = plugin.provision(&description, &ctx)?;
-        let job = PilotJob::new(description, backend);
+        let job = PilotJob::new(description, backend, Arc::clone(&self.clock));
         self.pilots.lock().unwrap().push(job.clone());
         Ok(job)
     }
@@ -90,6 +94,31 @@ impl PilotComputeService {
     /// All pilots created through this service.
     pub fn pilots(&self) -> Vec<PilotJob> {
         self.pilots.lock().unwrap().clone()
+    }
+
+    /// The pilot with `id`, if this service created it.
+    pub fn pilot(&self, id: u64) -> Option<PilotJob> {
+        self.pilots
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|p| p.id == id)
+            .cloned()
+    }
+
+    /// Live resize (the control-plane verb the autoscaler actuates):
+    /// re-provision pilot `id` to `to` units of parallelism with its
+    /// platform's transition semantics.  The pilot serves at the old
+    /// capacity while `Resizing`; poll [`PilotComputeService::pilot_state`]
+    /// for the transition to land.
+    pub fn resize_pilot(&self, id: u64, to: usize) -> Result<ResizePlan, PilotError> {
+        self.pilot(id).ok_or(PilotError::NoSuchPilot(id))?.resize(to)
+    }
+
+    /// Point-in-time status of pilot `id` — the control plane's read side
+    /// (finalizes a due resize transition first).
+    pub fn pilot_state(&self, id: u64) -> Option<PilotStatus> {
+        self.pilot(id).map(|p| p.status())
     }
 
     /// Cancel everything (teardown).
@@ -130,14 +159,80 @@ mod tests {
     fn submits_pilots_on_every_registered_platform() {
         let svc = service();
         let platforms = svc.registry().platforms();
-        assert_eq!(platforms.len(), 6, "local/lambda/dask/kinesis/kafka/edge");
+        assert_eq!(
+            platforms.len(),
+            7,
+            "local/lambda/dask/kinesis/kafka/edge/flink"
+        );
         for platform in platforms {
             let job = svc.submit_pilot(universal(platform)).unwrap();
             assert_eq!(job.state(), PilotState::Running, "{platform}");
             assert_eq!(job.platform(), platform);
         }
-        assert_eq!(svc.pilots().len(), 6);
+        assert_eq!(svc.pilots().len(), 7);
         svc.shutdown();
+    }
+
+    #[test]
+    fn resize_pilot_walks_the_resizing_state_machine() {
+        // deterministic transition timing needs a virtual clock
+        let clock = Arc::new(crate::sim::SimClock::new());
+        let svc = PilotComputeService::new(
+            clock.clone() as crate::sim::SharedClock,
+            Arc::new(CalibratedEngine::new(1)),
+        );
+        let job = svc.submit_pilot(universal(Platform::LAMBDA)).unwrap();
+        let id = job.id;
+        assert_eq!(svc.pilot_state(id).unwrap().parallelism, 2);
+
+        let plan = svc.resize_pilot(id, 6).unwrap();
+        assert_eq!((plan.from, plan.to), (2, 6));
+        assert!(plan.transition_s > 0.0, "scale-up pays a cold start");
+        let st = svc.pilot_state(id).unwrap();
+        assert_eq!(st.state, PilotState::Resizing);
+        assert_eq!(st.parallelism, 6, "new target visible immediately");
+        assert_eq!(st.ready_at, Some(plan.transition_s));
+
+        // a second resize mid-transition is refused, not queued
+        assert!(matches!(
+            svc.resize_pilot(id, 8),
+            Err(PilotError::ResizeInProgress(_))
+        ));
+
+        // ... and the pilot still serves while resizing
+        let cu = job
+            .submit_compute_unit(TaskSpec::KMeansStep {
+                points: Arc::new(vec![0.1; 160]),
+                dim: 8,
+                model_key: "resizing".into(),
+                centroids: 8,
+            })
+            .unwrap();
+        assert_eq!(cu.wait(), crate::pilot::state::CuState::Done);
+
+        // the transition lands once the clock passes the deadline
+        clock.advance_to(plan.transition_s + 0.001);
+        let st = svc.pilot_state(id).unwrap();
+        assert_eq!(st.state, PilotState::Running);
+        assert_eq!(st.resize_events, 1);
+        assert_eq!(st.ready_at, None);
+
+        // serverless scale-down is instant: no Resizing excursion
+        let plan = svc.resize_pilot(id, 2).unwrap();
+        assert_eq!(plan.transition_s, 0.0);
+        assert_eq!(svc.pilot_state(id).unwrap().state, PilotState::Running);
+        assert_eq!(svc.pilot_state(id).unwrap().parallelism, 2);
+
+        // unknown pilots are a clean error
+        assert!(matches!(
+            svc.resize_pilot(9_999_999, 2),
+            Err(PilotError::NoSuchPilot(_))
+        ));
+        job.finish();
+        assert!(matches!(
+            svc.resize_pilot(id, 4),
+            Err(PilotError::NotRunning(PilotState::Done))
+        ));
     }
 
     #[test]
@@ -233,12 +328,14 @@ mod tests {
     }
 
     /// The redesign's extensibility proof: a third-party platform becomes
-    /// submittable by registering a plugin — zero service edits.
-    struct FlinkPlugin;
+    /// submittable by registering a plugin — zero service edits.  (The
+    /// once-hypothetical flink plugin is a builtin now, so the stand-in
+    /// third-party platform is storm.)
+    struct StormPlugin;
 
-    impl PlatformPlugin for FlinkPlugin {
+    impl PlatformPlugin for StormPlugin {
         fn platform(&self) -> Platform {
-            Platform::from_static("flink")
+            Platform::from_static("storm")
         }
 
         fn provision(
@@ -256,16 +353,21 @@ mod tests {
     #[test]
     fn third_party_plugin_needs_no_service_changes() {
         let mut registry = PluginRegistry::builtin();
-        registry.register(Arc::new(FlinkPlugin)).unwrap();
+        registry.register(Arc::new(StormPlugin)).unwrap();
         let svc = service().with_registry(Arc::new(registry));
         let job = svc
-            .submit_pilot(PilotDescription::new(Platform::from_static("flink")))
+            .submit_pilot(PilotDescription::new(Platform::from_static("storm")))
             .unwrap();
         let cu = job
             .submit_compute_unit(TaskSpec::Custom(Box::new(|| Ok(3.0))))
             .unwrap();
         cu.wait();
         assert_eq!(cu.outcome().unwrap().value, 3.0);
+        // a plugin that never opted into elasticity is cleanly rigid
+        assert!(matches!(
+            job.resize(8),
+            Err(PilotError::ResizeUnsupported("storm"))
+        ));
         job.finish();
     }
 }

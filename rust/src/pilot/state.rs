@@ -1,7 +1,10 @@
 //! State machines for pilots and compute-units.
 //!
-//! The pilot abstraction's lifecycle (P* model, Luckow et al. 2012):
-//! pilots move `New → Pending → Running → {Done, Failed, Canceled}`;
+//! The pilot abstraction's lifecycle (P* model, Luckow et al. 2012),
+//! extended with the elastic control plane's `Resizing` state:
+//! pilots move `New → Pending → Running → {Done, Failed, Canceled}` with
+//! `Running ↔ Resizing` excursions while a live resize transition
+//! (cold-starting containers, booting workers, repartitioning) completes;
 //! compute-units move `New → Queued → Running → {Done, Failed, Canceled}`.
 //! Transitions are validated — an illegal transition is a bug, not data.
 
@@ -15,6 +18,9 @@ pub enum PilotState {
     Pending,
     /// Resources are up; compute-units can run.
     Running,
+    /// A live resize is in flight: the pilot keeps serving at its old
+    /// capacity until the transition's sim-clock deadline passes.
+    Resizing,
     Done,
     Failed,
     Canceled,
@@ -23,6 +29,13 @@ pub enum PilotState {
 impl PilotState {
     pub fn is_terminal(self) -> bool {
         matches!(self, Self::Done | Self::Failed | Self::Canceled)
+    }
+
+    /// Whether the pilot accepts work in this state.  A `Resizing` pilot
+    /// still serves — the previous capacity keeps draining while the new
+    /// capacity comes up.
+    pub fn is_serving(self) -> bool {
+        matches!(self, Self::Running | Self::Resizing)
     }
 
     /// Whether `self -> next` is a legal transition.
@@ -35,9 +48,14 @@ impl PilotState {
                 | (Pending, Running)
                 | (Pending, Failed)
                 | (Pending, Canceled)
+                | (Running, Resizing)
                 | (Running, Done)
                 | (Running, Failed)
                 | (Running, Canceled)
+                | (Resizing, Running)
+                | (Resizing, Done)
+                | (Resizing, Failed)
+                | (Resizing, Canceled)
         )
     }
 }
@@ -48,6 +66,7 @@ impl fmt::Display for PilotState {
             Self::New => "new",
             Self::Pending => "pending",
             Self::Running => "running",
+            Self::Resizing => "resizing",
             Self::Done => "done",
             Self::Failed => "failed",
             Self::Canceled => "canceled",
@@ -122,6 +141,22 @@ mod tests {
         assert!(!Done.can_transition(Running));
         assert!(!Failed.can_transition(Pending));
         assert!(!Running.can_transition(Pending));
+        assert!(!New.can_transition(Resizing)); // only live pilots resize
+        assert!(!Pending.can_transition(Resizing));
+        assert!(!Resizing.can_transition(Pending));
+    }
+
+    #[test]
+    fn resize_excursion_returns_to_running() {
+        use PilotState::*;
+        assert!(Running.can_transition(Resizing));
+        assert!(Resizing.can_transition(Running));
+        // a resizing pilot can still be torn down mid-transition
+        assert!(Resizing.can_transition(Canceled));
+        assert!(Resizing.can_transition(Done));
+        assert!(Resizing.can_transition(Failed));
+        assert!(Resizing.is_serving() && Running.is_serving());
+        assert!(!Pending.is_serving() && !Done.is_serving());
     }
 
     #[test]
@@ -129,7 +164,7 @@ mod tests {
         use PilotState::*;
         for s in [Done, Failed, Canceled] {
             assert!(s.is_terminal());
-            for t in [New, Pending, Running, Done, Failed, Canceled] {
+            for t in [New, Pending, Running, Resizing, Done, Failed, Canceled] {
                 assert!(!s.can_transition(t));
             }
         }

@@ -101,9 +101,11 @@ impl Drop for WorkerPool {
 /// sweep for nothing.  One mutex guards the idle/running/closed state as
 /// a unit, so a submit racing a shutdown can never resurrect the pool.
 pub struct LazyWorkerPool {
-    workers: usize,
+    workers: AtomicUsize,
     executor: Arc<dyn TaskExecutor>,
     state: Mutex<LazyState>,
+    /// Completed-task total of pools retired by [`LazyWorkerPool::resize`].
+    retired_completed: AtomicU64,
 }
 
 enum LazyState {
@@ -117,16 +119,41 @@ impl LazyWorkerPool {
     pub fn new(workers: usize, executor: Arc<dyn TaskExecutor>) -> Self {
         assert!(workers > 0);
         Self {
-            workers,
+            workers: AtomicUsize::new(workers),
             executor,
             state: Mutex::new(LazyState::Idle),
+            retired_completed: AtomicU64::new(0),
+        }
+    }
+
+    /// The dispatch parallelism the pool (re)spawns with.
+    pub fn workers(&self) -> usize {
+        self.workers.load(Ordering::Relaxed)
+    }
+
+    /// Change the dispatch parallelism.  A running pool drains its queue
+    /// and joins its threads first (the elastic control plane's
+    /// worker-level drain); the next submit respawns at the new size.  A
+    /// closed pool stays closed.
+    pub fn resize(&self, workers: usize) {
+        assert!(workers > 0);
+        let mut state = self.state.lock().unwrap();
+        self.workers.store(workers, Ordering::Relaxed);
+        if let LazyState::Running(pool) = &*state {
+            pool.shutdown();
+            self.retired_completed
+                .fetch_add(pool.completed(), Ordering::Relaxed);
+            *state = LazyState::Idle;
         }
     }
 
     pub fn submit(&self, cu: ComputeUnit, spec: TaskSpec) -> Result<(), String> {
         let mut state = self.state.lock().unwrap();
         if let LazyState::Idle = *state {
-            *state = LazyState::Running(WorkerPool::new(self.workers, Arc::clone(&self.executor)));
+            *state = LazyState::Running(WorkerPool::new(
+                self.workers.load(Ordering::Relaxed),
+                Arc::clone(&self.executor),
+            ));
         }
         match &*state {
             LazyState::Running(pool) => pool.submit(cu, spec),
@@ -136,11 +163,13 @@ impl LazyWorkerPool {
     }
 
     pub fn completed(&self) -> u64 {
-        match &*self.state.lock().unwrap() {
-            LazyState::Idle => 0,
-            LazyState::Running(pool) => pool.completed(),
-            LazyState::Closed(count) => *count,
-        }
+        let retired = self.retired_completed.load(Ordering::Relaxed);
+        retired
+            + match &*self.state.lock().unwrap() {
+                LazyState::Idle => 0,
+                LazyState::Running(pool) => pool.completed(),
+                LazyState::Closed(count) => *count,
+            }
     }
 
     /// Drain and join, if threads were ever spawned; further submits fail.
@@ -299,6 +328,29 @@ mod tests {
         assert_eq!(cu.wait(), CuState::Done);
         assert_eq!(pool.completed(), 1);
         pool.shutdown();
+    }
+
+    #[test]
+    fn lazy_pool_resize_drains_and_respawns() {
+        let pool = LazyWorkerPool::new(2, Arc::new(Doubler));
+        assert_eq!(pool.workers(), 2);
+        // resize while idle: just a size change
+        pool.resize(4);
+        assert_eq!(pool.workers(), 4);
+        let cu = ComputeUnit::new();
+        cu.transition(CuState::Queued);
+        pool.submit(cu.clone(), TaskSpec::Sleep(0.0)).unwrap();
+        assert_eq!(cu.wait(), CuState::Done);
+        // resize while running: the old pool drains, counts are preserved
+        pool.resize(1);
+        assert_eq!(pool.completed(), 1);
+        let cu2 = ComputeUnit::new();
+        cu2.transition(CuState::Queued);
+        pool.submit(cu2.clone(), TaskSpec::Sleep(0.0)).unwrap();
+        assert_eq!(cu2.wait(), CuState::Done);
+        assert_eq!(pool.completed(), 2, "retired pools keep counting");
+        pool.shutdown();
+        assert_eq!(pool.completed(), 2);
     }
 
     #[test]

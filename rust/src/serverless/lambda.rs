@@ -12,7 +12,7 @@ use crate::engine::{EngineError, StepEngine};
 use crate::sim::SharedClock;
 use crate::store::{ModelStore, StoreError};
 use crate::util::rng::Pcg32;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Why an invocation failed.
@@ -54,9 +54,26 @@ impl InvocationReport {
     }
 }
 
+/// Tear down idle sandboxes beyond `cap` (the shared half of scale-down
+/// enforcement: busy ones drain and are caught by the next booking).
+fn evict_idle_over_cap(pool: &mut Vec<Container>, cap: usize, now: f64) {
+    while pool.len() > cap {
+        match pool.iter().position(|c| c.busy_until <= now) {
+            Some(idx) => {
+                pool.remove(idx);
+            }
+            None => break,
+        }
+    }
+}
+
 /// The function runtime ("Function Pilot" backend).
 pub struct LambdaFleet {
     config: FunctionConfig,
+    /// Live concurrency cap.  Starts at `config.max_concurrency`; the
+    /// elastic control plane moves it at runtime via
+    /// [`LambdaFleet::set_concurrency`].
+    concurrency: AtomicUsize,
     engine: Arc<dyn StepEngine>,
     store: Arc<dyn ModelStore>,
     clock: SharedClock,
@@ -79,6 +96,7 @@ impl LambdaFleet {
     ) -> Result<Self, String> {
         config.validate()?;
         Ok(Self {
+            concurrency: AtomicUsize::new(config.max_concurrency),
             config,
             engine,
             store,
@@ -94,6 +112,25 @@ impl LambdaFleet {
 
     pub fn config(&self) -> &FunctionConfig {
         &self.config
+    }
+
+    /// The live concurrency cap (reserved concurrency, AWS terms).
+    pub fn concurrency(&self) -> usize {
+        self.concurrency.load(Ordering::Relaxed)
+    }
+
+    /// Move the live concurrency cap — the serverless resize primitive.
+    ///
+    /// Scale-up is free here: new containers are created lazily by the
+    /// next invocations and pay their cold starts in-band.  Scale-down is
+    /// instant: idle sandboxes beyond the new cap are torn down now; busy
+    /// ones finish their in-flight invocation and are never rebooked
+    /// (the next booking evicts them as they go idle).
+    pub fn set_concurrency(&self, n: usize) {
+        assert!(n > 0, "concurrency must be > 0");
+        self.concurrency.store(n, Ordering::Relaxed);
+        let mut pool = self.containers.lock().unwrap();
+        evict_idle_over_cap(&mut pool, n, self.clock.now());
     }
 
     pub fn invocation_count(&self) -> u64 {
@@ -123,9 +160,16 @@ impl LambdaFleet {
     ///
     /// Returns (container id, queue-wait s, cold-start s, was_cold).
     fn book(&self, now: f64, work: f64) -> Result<(u64, f64, f64, bool), InvokeError> {
+        let cap = self.concurrency.load(Ordering::Relaxed);
         let mut pool = self.containers.lock().unwrap();
         // expire stale sandboxes
         pool.retain(|c| c.busy_until > now || c.is_warm(now, self.keep_alive_s));
+        // enforce a lowered concurrency cap *before* any reuse: idle
+        // sandboxes beyond it are torn down now, busy ones finish their
+        // in-flight invocation and get evicted here as they go idle — so
+        // a down-scaled fleet converges to the cap instead of warm-reusing
+        // retired capacity forever
+        evict_idle_over_cap(&mut pool, cap, now);
         // the busy window never exceeds the walltime (Lambda kills the run)
         let occupy = |cold: f64| (cold + work).min(self.config.timeout_s);
         // a warm, idle container?
@@ -139,9 +183,9 @@ impl LambdaFleet {
             c.last_used = c.busy_until;
             return Ok((c.id, 0.0, 0.0, false));
         }
-        if pool.len() >= self.config.max_concurrency {
+        if pool.len() >= cap {
             if !self.config.queue_when_saturated {
-                return Err(InvokeError::ConcurrencyLimit(self.config.max_concurrency));
+                return Err(InvokeError::ConcurrencyLimit(cap));
             }
             // every remaining container is busy (idle+warm ones were caught
             // above, stale ones expired): queue on the earliest to free up
@@ -402,6 +446,71 @@ mod tests {
         assert!(matches!(
             f.invoke(&pts(), 8, "m", 16),
             Err(InvokeError::TimedOut(_))
+        ));
+    }
+
+    #[test]
+    fn concurrency_moves_at_runtime() {
+        let clock = Arc::new(SimClock::new());
+        let mut cfg = FunctionConfig::default();
+        cfg.max_concurrency = 1;
+        let mut eng = CalibratedEngine::new(1);
+        eng.insert((100, 16), Dist::Const(0.1));
+        let f = LambdaFleet::new(
+            cfg,
+            Arc::new(eng),
+            Arc::new(ObjectStore::default()),
+            clock.clone() as SharedClock,
+            3,
+        )
+        .unwrap();
+        f.invoke(&pts(), 8, "m", 16).unwrap();
+        assert!(matches!(
+            f.invoke(&pts(), 8, "m", 16),
+            Err(InvokeError::ConcurrencyLimit(1))
+        ));
+        // scale up: the second container cold-starts in-band
+        f.set_concurrency(2);
+        let r = f.invoke(&pts(), 8, "m", 16).unwrap();
+        assert!(r.was_cold, "new capacity pays its cold start");
+        assert_eq!(f.container_count(), 2);
+        // scale down once idle: instant teardown to the new cap
+        clock.advance_to(100.0);
+        f.set_concurrency(1);
+        assert_eq!(f.container_count(), 1);
+        assert_eq!(f.concurrency(), 1);
+    }
+
+    #[test]
+    fn lowered_cap_is_enforced_against_warm_reuse() {
+        // regression: a cap lowered while every container was busy must
+        // still bite once they go idle — retired capacity is evicted at
+        // booking time, never warm-reused
+        let clock = Arc::new(SimClock::new());
+        let mut cfg = FunctionConfig::default();
+        cfg.max_concurrency = 3;
+        let mut eng = CalibratedEngine::new(1);
+        eng.insert((100, 16), Dist::Const(0.1));
+        let f = LambdaFleet::new(
+            cfg,
+            Arc::new(eng),
+            Arc::new(ObjectStore::default()),
+            clock.clone() as SharedClock,
+            3,
+        )
+        .unwrap();
+        for _ in 0..3 {
+            f.invoke(&pts(), 8, "m", 16).unwrap();
+        }
+        f.set_concurrency(1); // all three busy: nothing evictable yet
+        assert_eq!(f.container_count(), 3);
+        clock.advance_to(10.0); // everyone idle (and still warm)
+        let r = f.invoke(&pts(), 8, "m", 16).unwrap();
+        assert!(!r.was_cold, "the one surviving sandbox is reused warm");
+        assert_eq!(f.container_count(), 1, "over-cap sandboxes evicted");
+        assert!(matches!(
+            f.invoke(&pts(), 8, "m", 16),
+            Err(InvokeError::ConcurrencyLimit(1))
         ));
     }
 

@@ -1,9 +1,10 @@
 //! Plugin conformance: every plugin in the registry — current and future —
 //! must serve the *identical* Pilot-API workflow (the paper's
-//! interoperability claim).  The test iterates the registry rather than a
-//! hard-coded platform list, so registering a new plugin automatically
-//! extends the conformance surface; the edge plugin (paper §V) is asserted
-//! present explicitly.
+//! interoperability claim), including the elastic control plane's
+//! submit → resize up → resize down → shutdown cycle.  The tests iterate
+//! the registry rather than a hard-coded platform list, so registering a
+//! new plugin automatically extends the conformance surface; the edge
+//! plugin (paper §V) is asserted present explicitly.
 
 use pilot_streaming::broker::Message;
 use pilot_streaming::engine::CalibratedEngine;
@@ -11,7 +12,7 @@ use pilot_streaming::pilot::{
     default_registry, CuState, PilotComputeService, PilotDescription, PilotError, PilotState,
     Platform, TaskSpec,
 };
-use pilot_streaming::sim::WallClock;
+use pilot_streaming::sim::{SharedClock, SimClock, WallClock};
 use std::sync::Arc;
 
 fn service() -> PilotComputeService {
@@ -85,6 +86,68 @@ fn every_registered_plugin_serves_the_same_workflow() {
                 "{platform}: pure broker must reject compute units"
             );
         }
+
+        job.finish();
+        assert_eq!(job.state(), PilotState::Done, "{platform}");
+    }
+}
+
+#[test]
+fn every_registered_plugin_survives_a_resize_cycle() {
+    // the elastic-control-plane conformance surface: submit → resize up →
+    // resize down → shutdown, with the pilot state machine asserted at
+    // every step.  Transition timing runs on a virtual clock so the
+    // Resizing excursions are deterministic.
+    let registry = default_registry();
+    let clock = Arc::new(SimClock::new());
+    let svc = PilotComputeService::new(
+        clock.clone() as SharedClock,
+        Arc::new(CalibratedEngine::new(7)),
+    );
+    for platform in registry.platforms() {
+        let plugin = registry.get(platform).unwrap();
+        let elasticity = plugin.elasticity();
+        let job = svc.submit_pilot(universal(platform)).unwrap();
+        assert_eq!(job.parallelism(), 2, "{platform}");
+
+        if !elasticity.resizable {
+            assert!(
+                matches!(job.resize(4), Err(PilotError::ResizeUnsupported(_))),
+                "{platform}: rigid platforms must refuse cleanly"
+            );
+            job.cancel();
+            continue;
+        }
+
+        // resize up (clamped at the platform's declared cap, if any)
+        let expect = elasticity.max_parallelism.map_or(6, |cap| 6.min(cap));
+        let up = job.resize(6).unwrap_or_else(|e| panic!("{platform}: resize up: {e}"));
+        assert_eq!(up.from, 2, "{platform}");
+        assert_eq!(up.to, expect, "{platform}");
+        assert_eq!(job.parallelism(), expect, "{platform}: target visible");
+        if up.transition_s > 0.0 {
+            assert_eq!(job.status().state, PilotState::Resizing, "{platform}");
+            // overlapping resizes are refused, not queued
+            assert!(
+                matches!(job.resize(3), Err(PilotError::ResizeInProgress(_))),
+                "{platform}"
+            );
+            clock.advance_to(clock.now() + up.transition_s + 1e-6);
+        }
+        assert_eq!(job.status().state, PilotState::Running, "{platform}");
+
+        // resize down
+        let down = job
+            .resize(1)
+            .unwrap_or_else(|e| panic!("{platform}: resize down: {e}"));
+        assert_eq!((down.from, down.to), (expect, 1), "{platform}");
+        if down.transition_s > 0.0 {
+            clock.advance_to(clock.now() + down.transition_s + 1e-6);
+        }
+        let status = job.status();
+        assert_eq!(status.state, PilotState::Running, "{platform}");
+        assert_eq!(status.parallelism, 1, "{platform}");
+        assert_eq!(status.resize_events, 2, "{platform}");
 
         job.finish();
         assert_eq!(job.state(), PilotState::Done, "{platform}");
