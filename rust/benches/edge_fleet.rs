@@ -1,0 +1,71 @@
+//! Edge-fleet benchmark: sweep the `edge_sites = [1, 2, 4]` axis and
+//! record one USL fit per fleet size — the quantified effect of backhaul
+//! spillover on the fitted contention/coherency terms — plus the sweep's
+//! wall-clock cost.
+//!
+//! Emits `BENCH_edge_fleet.json` (override the path with
+//! `PS_BENCH_EDGE_FLEET_OUT`; messages per configuration with
+//! `PS_BENCH_MESSAGES`).  Run: `cargo bench --bench edge_fleet`.
+
+#[path = "common.rs"]
+#[allow(dead_code)]
+mod common;
+
+use pilot_streaming::insight::figures::{default_calibration, engine_factory};
+use pilot_streaming::insight::{analyze, run_sweep_jobs, ExperimentSpec};
+use pilot_streaming::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let messages = common::bench_messages();
+    let spec = ExperimentSpec::edge_fleet_grid(messages, 42);
+    eprintln!(
+        "[bench] edge-fleet: {} configs x {} messages",
+        spec.size(),
+        messages
+    );
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let t0 = Instant::now();
+    let rows = run_sweep_jobs(
+        &spec,
+        engine_factory(default_calibration()),
+        cores,
+        |_| {},
+    );
+    let sweep_s = t0.elapsed().as_secs_f64();
+    assert_eq!(rows.len(), spec.size(), "sweep dropped configurations");
+
+    let analysis = analyze(&rows);
+    assert_eq!(analysis.len(), 3, "one USL curve per fleet size");
+    let mut fits = Vec::new();
+    for a in &analysis {
+        let sites = a.axis_int("edge_sites").expect("fleet-size group");
+        println!(
+            "edge_sites={sites}: sigma {:.4} kappa {:.5} lambda {:.2} R2 {:.3}",
+            a.fit.params.sigma, a.fit.params.kappa, a.fit.params.lambda, a.fit.r2
+        );
+        fits.push(Json::obj(vec![
+            ("edge_sites", Json::from(sites as usize)),
+            ("sigma", Json::from(a.fit.params.sigma)),
+            ("kappa", Json::from(a.fit.params.kappa)),
+            ("lambda", Json::from(a.fit.params.lambda)),
+            ("r2", Json::from(a.fit.r2)),
+        ]));
+    }
+    println!("swept in {sweep_s:.2}s on {cores} core(s)");
+
+    let out = std::env::var("PS_BENCH_EDGE_FLEET_OUT")
+        .unwrap_or_else(|_| "BENCH_edge_fleet.json".to_string());
+    let json = Json::obj(vec![
+        ("grid", Json::from("edge-fleet")),
+        ("configs", Json::from(spec.size())),
+        ("messages_per_config", Json::from(messages)),
+        ("cores", Json::from(cores)),
+        ("sweep_seconds", Json::from(sweep_s)),
+        ("fits", Json::Arr(fits)),
+    ]);
+    std::fs::write(&out, json.pretty()).expect("write edge-fleet bench report");
+    println!("wrote {out}");
+}

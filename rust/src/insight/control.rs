@@ -20,6 +20,31 @@
 //! The loop synchronizes belief with reality every tick: whatever the
 //! platform actually realized (edge clamps, in-flight transitions) is
 //! written back into the autoscaler before the next decision.
+//!
+//! The replay side of the seam, end to end — every tick's accounting
+//! conserves offered load into processed + throttled + backlog:
+//!
+//! ```rust
+//! use pilot_streaming::insight::{
+//!     AutoscaleConfig, Autoscaler, ControlLoop, ModelTarget, Predictor,
+//! };
+//! use pilot_streaming::usl::UslParams;
+//!
+//! let predictor = Predictor {
+//!     params: UslParams::new(0.02, 0.0001, 10.0),
+//! };
+//! let scaler = Autoscaler::new(predictor.clone(), AutoscaleConfig::default(), 2);
+//! let mut target = ModelTarget::new(predictor, 2);
+//! let trace = [5.0, 40.0, 80.0, 80.0, 20.0];
+//! let report = ControlLoop::new(scaler, 1.0).run(&mut target, &trace).unwrap();
+//! assert_eq!(report.ticks.len(), trace.len());
+//! let final_backlog = report.ticks.last().unwrap().backlog;
+//! assert!(
+//!     (report.offered_total - report.processed_total - report.throttled_total - final_backlog)
+//!         .abs()
+//!         < 1e-9
+//! );
+//! ```
 
 use super::autoscale::{Autoscaler, ScaleDecision};
 use super::autoscale_sim::{AutoscaleReport, Tick};
@@ -494,6 +519,29 @@ mod tests {
             "scale events must not inflate once the cap is learned: {}",
             report.scale_events
         );
+        target.shutdown();
+    }
+
+    #[test]
+    fn fleet_cap_is_the_sum_of_site_envelopes() {
+        // a two-site fleet (caps 4 + 3) pushes back at 7, not at the
+        // single-site envelope of 4 — the Throttle plan carries the
+        // heterogeneous sum into the autoscaler's belief
+        let mut scenario = live_scenario(PlatformKind::Edge);
+        scenario.set_extra("edge_sites", 2);
+        let mut target =
+            PilotTarget::new(LivePilot::provision(&scenario, engine()).unwrap());
+        let trace = vec![400.0; 20];
+        let report = ControlLoop::new(autoscaler(2, 64), 1.0)
+            .run(&mut target, &trace)
+            .unwrap();
+        let peak = report.ticks.iter().map(|t| t.parallelism).max().unwrap();
+        assert_eq!(peak, 7, "summed per-site caps bound the loop");
+        assert!(report
+            .resizes
+            .iter()
+            .any(|r| r.plan.semantics == ResizeSemantics::Throttle));
+        assert!(report.throttled_total > 0.0);
         target.shutdown();
     }
 

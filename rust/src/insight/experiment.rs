@@ -242,6 +242,22 @@ impl ExperimentSpec {
         spec
     }
 
+    /// The multi-site fleet grid (ROADMAP "Multi-region / multi-site
+    /// edge"): one USL curve per `edge_sites` level, sweeping partitions
+    /// past every fleet's summed container capacity so each fit captures
+    /// where that fleet saturates and starts spilling over the backhaul —
+    /// the backhaul-induced coherency (β) term, quantified per fleet size.
+    pub fn edge_fleet_grid(messages: usize, seed: u64) -> Self {
+        let mut spec = Self::new("edge-fleet-grid", messages, seed);
+        spec.set_platforms(&[PlatformKind::Edge]);
+        spec.set_ints(AXIS_MESSAGE_SIZE, [8_000]);
+        spec.set_ints(AXIS_CENTROIDS, [128]);
+        spec.set_ints(AXIS_MEMORY_MB, [1_024]);
+        spec.set_ints("edge_sites", [1, 2, 4]);
+        spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8, 16]);
+        spec
+    }
+
     /// Fig 3's memory sweep: Lambda, 8,000 points, 1,024 centroids.
     pub fn lambda_memory_sweep(messages: usize, seed: u64) -> Self {
         let mut spec = Self::new("lambda-memory", messages, seed);
@@ -447,6 +463,19 @@ mod tests {
                 s.memory_mb <= crate::serverless::edge::EDGE_MAX_MEMORY_MB,
                 "edge grid stays inside the device envelope"
             );
+        }
+    }
+
+    #[test]
+    fn edge_fleet_grid_dimensions() {
+        let spec = ExperimentSpec::edge_fleet_grid(16, 1);
+        // 1 platform x 1 MS x 1 WC x 1 memory x 3 fleet sizes x 5 partitions
+        assert_eq!(spec.size(), 15);
+        let sites = spec.axis("edge_sites").unwrap();
+        assert_eq!(sites.levels.len(), 3);
+        for sc in spec.scenarios() {
+            assert_eq!(sc.platform, PlatformKind::Edge);
+            assert!(matches!(sc.extra_param("edge_sites"), Some(1 | 2 | 4)));
         }
     }
 

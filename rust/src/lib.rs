@@ -19,7 +19,10 @@
 //!   the same Pilot-API, and the *StreamInsight* USL modeling stack
 //!   ([`usl`], [`insight`]) characterizes every registered platform —
 //!   including the paper's §V edge future work as a first-class scenario
-//!   axis.
+//!   axis: a multi-site [`EdgeFleet`](serverless::EdgeFleet) of
+//!   heterogeneous device envelopes with message-class placement and
+//!   backhaul spillover (`serverless::edge_fleet`), provisioned from the
+//!   `edge_sites` sweep axis.
 //! - **Layer 2** — a JAX MiniBatch K-Means step (`python/compile/model.py`),
 //!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
 //! - **Layer 1** — the Pallas assignment kernel
@@ -29,6 +32,15 @@
 //! once; the Rust binary executes it via PJRT ([`runtime`]) when built with
 //! the `pjrt` feature (without it, live execution is stubbed and the
 //! calibrated simulator drives everything).
+//!
+//! The repository README covers the layer map and quickstart;
+//! `docs/ARCHITECTURE.md` documents the three extension seams —
+//! [`PlatformPlugin`](pilot::PlatformPlugin) /
+//! [`PluginRegistry`](pilot::PluginRegistry),
+//! [`ScalingTarget`](insight::ScalingTarget) /
+//! [`ControlLoop`](insight::ControlLoop), and
+//! [`Axis`](insight::Axis) / `Scenario::extra` — with recipes and the
+//! conformance tests that enforce them.
 
 pub mod broker;
 pub mod engine;

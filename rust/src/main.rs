@@ -31,13 +31,14 @@ fn app() -> App {
             .opt("memory", "3008", "lambda memory MB")
             .opt("messages", "64", "messages to process")
             .opt("seed", "42", "rng seed")
+            .opt("edge-sites", "1", "edge fleet size (multi-site placement; platform edge)")
             .flag("live", "run live (threads + real PJRT) instead of simulated time"),
     )
     .command(
         CommandSpec::new("sweep", "run an experiment grid sweep, fit USL, print analysis")
             .opt("messages", "64", "messages per configuration")
             .opt("seed", "42", "rng seed")
-            .opt("grid", "paper", "preset grid: paper | edge | memory | tiny")
+            .opt("grid", "paper", "preset grid: paper | edge | edge-fleet | memory | tiny")
             .opt("jobs", "0", "parallel sweep workers (0 = one per core)")
             .opt("csv", "", "write per-config CSV to this path")
             .opt("config", "", "TOML experiment file (overrides the preset grid)"),
@@ -55,6 +56,7 @@ fn app() -> App {
             .opt("points", "8000", "points per message (live)")
             .opt("centroids", "1024", "centroids (live)")
             .opt("seed", "42", "rng seed (live)")
+            .opt("edge-sites", "1", "edge fleet size (platform edge)")
             .flag("live", "actuate decisions on a real pilot via resize_pilot instead of replaying the model"),
     )
     .command(
@@ -111,7 +113,7 @@ fn cmd_calibrate(args: &Args) -> Result<(), String> {
 fn scenario_from(args: &Args) -> Result<Scenario, String> {
     let platform = PlatformKind::parse(args.get_or("platform", "lambda"))
         .ok_or_else(|| format!("unknown platform {:?}", args.get("platform")))?;
-    Ok(Scenario {
+    let mut sc = Scenario {
         platform,
         partitions: args.get_usize("partitions").map_err(|e| e.to_string())?,
         points_per_message: args.get_usize("points").map_err(|e| e.to_string())?,
@@ -120,7 +122,12 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
         messages: args.get_usize("messages").map_err(|e| e.to_string())?,
         seed: args.get_u64("seed").map_err(|e| e.to_string())?,
         ..Default::default()
-    })
+    };
+    let sites = args.get_u64("edge-sites").map_err(|e| e.to_string())?;
+    if sites > 1 {
+        sc.set_extra("edge_sites", sites);
+    }
+    Ok(sc)
 }
 
 fn print_summary(label: &str, s: &pilot_streaming::miniapp::RunSummary) {
@@ -166,11 +173,12 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         None => match args.get_or("grid", "paper") {
             "paper" => ExperimentSpec::paper_grid(messages, seed),
             "edge" => ExperimentSpec::edge_grid(messages, seed),
+            "edge-fleet" => ExperimentSpec::edge_fleet_grid(messages, seed),
             "memory" => ExperimentSpec::lambda_memory_sweep(messages, seed),
             "tiny" => ExperimentSpec::tiny_grid(messages, seed),
             other => {
                 return Err(format!(
-                    "unknown grid {other:?} (paper | edge | memory | tiny)"
+                    "unknown grid {other:?} (paper | edge | edge-fleet | memory | tiny)"
                 ))
             }
         },
@@ -362,7 +370,11 @@ fn cmd_autoscale_live(
 ) -> Result<(), String> {
     let platform = PlatformKind::parse(args.get_or("platform", "lambda"))
         .ok_or_else(|| format!("unknown platform {:?}", args.get("platform")))?;
-    let scenario = Scenario {
+    let sites = args
+        .get_u64("edge-sites")
+        .map_err(|e| e.to_string())?
+        .max(1);
+    let mut scenario = Scenario {
         platform,
         partitions: args.get_usize("partitions").map_err(|e| e.to_string())?,
         points_per_message: args.get_usize("points").map_err(|e| e.to_string())?,
@@ -370,13 +382,25 @@ fn cmd_autoscale_live(
         seed: args.get_u64("seed").map_err(|e| e.to_string())?,
         ..Default::default()
     };
+    if sites > 1 {
+        scenario.set_extra("edge_sites", sites);
+    }
     // the platform's declared elasticity caps the search space (the edge
-    // device envelope becomes throttling instead of futile scale-ups)
+    // device envelope becomes throttling instead of futile scale-ups).
+    // The edge cap is per reference site: a multi-site fleet raises the
+    // bound to sites x cap and its Throttle plans teach the loop the
+    // exact heterogeneous sum at runtime.  Other platforms keep their
+    // declared cap untouched.
     let mut config = insight::AutoscaleConfig::default();
     let processing = platform.processing_platform();
     if let Some(plugin) = pilot_streaming::pilot::default_registry().get(processing) {
         if let Some(cap) = plugin.elasticity().max_parallelism {
-            config.max_parallelism = config.max_parallelism.min(cap);
+            let fleet_factor = if processing == pilot_streaming::pilot::Platform::EDGE {
+                sites as usize
+            } else {
+                1
+            };
+            config.max_parallelism = config.max_parallelism.min(cap * fleet_factor);
         }
     }
     let factory = figures::engine_factory(figures::default_calibration());

@@ -244,7 +244,8 @@ impl LivePilot {
 
     /// Actuate a resize through the service (the paper's "integrate
     /// StreamInsight into the resource management algorithm" verb),
-    /// honoring the plan's semantics: under [`ResizeSemantics::Restart`]
+    /// honoring the plan's semantics: under
+    /// [`ResizeSemantics::Restart`](crate::pilot::ResizeSemantics::Restart)
     /// (savepoint + restore) the *whole* job is down for the transition
     /// window; otherwise new lanes come up busy until the deadline while
     /// the old capacity keeps serving, and on scale-down the least-busy

@@ -185,14 +185,19 @@ impl Scenario {
                         .with_seed(self.seed),
                 ]
             }
-            PlatformKind::Edge => vec![
+            PlatformKind::Edge => {
                 // shared memory axis: the edge plugin normalizes memory
                 // into the device envelope and clamps concurrency itself
-                PilotDescription::new(Platform::EDGE)
+                let mut d = PilotDescription::new(Platform::EDGE)
                     .with_parallelism(self.partitions)
                     .with_memory_mb(self.memory_mb)
-                    .with_seed(self.seed),
-            ],
+                    .with_seed(self.seed);
+                // the edge_sites sweep axis provisions a multi-site fleet
+                if let Some(sites) = self.extra_param("edge_sites") {
+                    d = d.with_extra("edge_sites", sites);
+                }
+                vec![d]
+            }
             PlatformKind::Plugin(platform) => vec![
                 PilotDescription::new(Platform::KINESIS)
                     .with_parallelism(self.partitions)
@@ -437,6 +442,30 @@ mod tests {
             ..Default::default()
         };
         assert!(PlatformUnderTest::build(&s, engine(), clock).is_err());
+    }
+
+    #[test]
+    fn edge_sites_axis_flows_into_the_pilot_description() {
+        // the campaign engine's edge_sites extension parameter reaches the
+        // plugin as a description extra — drivers untouched
+        let mut s = Scenario {
+            platform: PlatformKind::Edge,
+            ..Default::default()
+        };
+        assert_eq!(s.pilot_descriptions()[0].extra_param("edge_sites"), None);
+        s.set_extra("edge_sites", 4);
+        let descs = s.pilot_descriptions();
+        assert_eq!(descs.len(), 1, "co-located broker + fleet");
+        assert_eq!(descs[0].extra_param("edge_sites"), Some(4));
+        // ...and the provisioned platform carries a 4-site fleet: the
+        // parallelism floor is one container per site
+        let clock = Arc::new(SimClock::new()) as SharedClock;
+        let s4 = Scenario {
+            partitions: 1,
+            ..s
+        };
+        let p = PlatformUnderTest::build(&s4, engine(), clock).unwrap();
+        assert_eq!(p.processing_pilot().parallelism(), 4);
     }
 
     #[test]

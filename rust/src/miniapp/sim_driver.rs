@@ -284,11 +284,34 @@ mod tests {
     }
 
     #[test]
-    fn edge_throughput_saturates_at_device_capacity() {
-        // only EDGE_MAX_CONCURRENCY containers fit on the box; saturated
-        // invocations queue, so every message still completes but
-        // throughput flattens past 4 partitions — the USL signature the
-        // edge scenario axis contributes
+    fn edge_pinned_throughput_saturates_at_device_capacity() {
+        // a light message class sits under the break-even, so placement
+        // pins it to the box: only EDGE_MAX_CONCURRENCY containers fit,
+        // saturated invocations queue, and throughput flattens past 4
+        // partitions — the USL signature of the latency-bound edge class
+        let t = |p: usize| {
+            let s = Scenario {
+                messages: 240,
+                ..scenario(PlatformKind::Edge, p)
+            };
+            run_sim(&s, engine_with((256, 16), 0.002))
+                .unwrap()
+                .summary
+                .throughput
+        };
+        let t1 = t(1);
+        let t4 = t(4);
+        let t8 = t(8);
+        assert!(t4 > t1 * 2.0, "scales to the container cap: t1={t1} t4={t4}");
+        assert!(t8 < t4 * 1.25, "no gain past 4 containers: t4={t4} t8={t8}");
+    }
+
+    #[test]
+    fn edge_spillable_throughput_grows_past_device_capacity() {
+        // a heavy class exceeds the break-even: once the box saturates,
+        // the placement layer spills over the backhaul to the cloud
+        // fallback, so throughput keeps growing past the device cap —
+        // unlike the pinned class above, which queues
         let t = |p: usize| {
             let s = Scenario {
                 messages: 240,
@@ -299,11 +322,12 @@ mod tests {
                 .summary
                 .throughput
         };
-        let t1 = t(1);
         let t4 = t(4);
         let t8 = t(8);
-        assert!(t4 > t1 * 2.5, "scales to the container cap: t1={t1} t4={t4}");
-        assert!(t8 < t4 * 1.25, "no gain past 4 containers: t4={t4} t8={t8}");
+        assert!(
+            t8 > t4 * 1.3,
+            "spillover must rescue throughput: t4={t4} t8={t8}"
+        );
     }
 
     #[test]

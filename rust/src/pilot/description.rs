@@ -130,6 +130,13 @@ pub struct PilotDescription {
     pub package_mb: f64,
     /// RNG seed for everything this pilot provisions.
     pub seed: u64,
+    /// Platform-specific extension parameters ("infrastructure-specific
+    /// capabilities" in the paper's wording), mirroring `Scenario::extra`:
+    /// non-canonical sweep axes land here and the owning plugin looks its
+    /// parameters up by name — e.g. the edge plugin provisions a
+    /// multi-site fleet from `edge_sites`.  Unknown names are ignored, so
+    /// descriptions stay platform-agnostic.
+    pub extra: Vec<(String, u64)>,
 }
 
 impl Default for PilotDescription {
@@ -144,6 +151,7 @@ impl Default for PilotDescription {
             batch_size: 1,
             package_mb: 50.0,
             seed: 42,
+            extra: Vec::new(),
         }
     }
 }
@@ -200,6 +208,21 @@ impl PilotDescription {
     pub fn with_seed(mut self, s: u64) -> Self {
         self.seed = s;
         self
+    }
+
+    /// Set (or replace) a platform-specific extension parameter.
+    pub fn with_extra(mut self, name: impl Into<String>, value: u64) -> Self {
+        let name = name.into();
+        match self.extra.iter_mut().find(|(n, _)| *n == name) {
+            Some(slot) => slot.1 = value,
+            None => self.extra.push((name, value)),
+        }
+        self
+    }
+
+    /// Look up an extension parameter by name.
+    pub fn extra_param(&self, name: &str) -> Option<u64> {
+        self.extra.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
     }
 
     /// Platform-independent invariants only.  Platform-specific constraints
@@ -269,6 +292,15 @@ impl PilotDescription {
         if let Some(x) = v.get("seed").as_i64() {
             d.seed = x as u64;
         }
+        if let Some(extras) = v.get("extra").as_obj() {
+            for (name, value) in extras {
+                let x = value.as_i64().ok_or_else(|| DescriptionError::Invalid {
+                    field: "extra",
+                    reason: format!("{name:?}: expected integer"),
+                })?;
+                d = d.with_extra(name.as_str(), x as u64);
+            }
+        }
         registry.validate(&d)?;
         Ok(d)
     }
@@ -287,6 +319,15 @@ impl PilotDescription {
             ("batch_size", Json::from(self.batch_size)),
             ("package_mb", Json::from(self.package_mb)),
             ("seed", Json::from(self.seed as i64)),
+            (
+                "extra",
+                Json::Obj(
+                    self.extra
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::from(*v as usize)))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -421,5 +462,27 @@ mod tests {
         assert_eq!(d2.batch_size, d.batch_size);
         assert_eq!(d2.package_mb, d.package_mb);
         assert_eq!(d2.seed, d.seed);
+        assert!(d2.extra.is_empty());
+    }
+
+    #[test]
+    fn extension_params_set_replace_and_roundtrip() {
+        let d = PilotDescription::new(Platform::EDGE)
+            .with_parallelism(2)
+            .with_memory_mb(1024)
+            .with_extra("edge_sites", 2)
+            .with_extra("edge_sites", 4); // replaces in place
+        assert_eq!(d.extra_param("edge_sites"), Some(4));
+        assert_eq!(d.extra.len(), 1);
+        assert_eq!(d.extra_param("nonesuch"), None);
+        // extension params survive the JSON round trip
+        let d2 = PilotDescription::from_json(&d.to_json()).unwrap();
+        assert_eq!(d2.extra_param("edge_sites"), Some(4));
+        // non-integer extension values are rejected, not dropped
+        let bad = crate::util::json::parse(
+            r#"{"platform": "edge", "memory_mb": 1024, "extra": {"edge_sites": "two"}}"#,
+        )
+        .unwrap();
+        assert!(PilotDescription::from_json(&bad).is_err());
     }
 }

@@ -1,92 +1,349 @@
-//! Edge plugin (paper §V future work): a Greengrass-class [`EdgeSite`]
-//! provisioned **purely through the plugin API** — the service and the
-//! drivers were not touched to add this platform.
+//! Edge plugin (paper §V future work): a multi-site
+//! [`EdgeFleet`] of Greengrass-class boxes with a **message-class
+//! placement layer**, provisioned purely through the plugin API — the
+//! service and the drivers were not touched to add (or to generalize)
+//! this platform.
 //!
-//! One edge pilot is a *co-located* broker + processing pair, because the
-//! whole point of the edge is that the broker lives on the same box as the
-//! functions: `broker()` returns a site-local Kinesis-like stream with
-//! LAN put latency (~2 ms vs ~15 ms WAN), and `processor()` a Lambda-
-//! compatible fleet under the device envelope — capped memory, 0.35× CPU,
-//! a handful of containers that *queue* (not throttle) when saturated.
-//! Throughput therefore saturates at the device's container count: the
-//! USL story sweeps and fits pick up as a first-class scenario axis.
+//! One edge pilot is a *co-located* broker + processing pair: `broker()`
+//! returns a site-local Kinesis-like stream with LAN put latency (~2 ms
+//! vs ~15 ms WAN) and `processor()` a placement router over the fleet.
+//! The fleet size comes from the description's `edge_sites` extension
+//! parameter (which `Scenario::pilot_descriptions` forwards from the
+//! sweep axis of the same name); each site runs its own Lambda-compatible
+//! fleet under its device envelope — per-site CPU efficiency, container
+//! cap, LAN and backhaul latency.
+//!
+//! The router stripes broker partitions over sites round-robin and routes
+//! each message class with [`PlacementPolicy`]: classes under a site's
+//! break-even ([`EdgeSite::should_run_at_edge`]) are pinned to the box
+//! (they queue when it is full), heavier classes run data-local while the
+//! site has capacity and **spill over the backhaul** to a cloud-region
+//! fallback fleet when the site saturates.  Resize targets past the
+//! summed per-site caps clamp with [`ResizeSemantics::Throttle`], which
+//! the control loop turns into source throttling.
+//!
+//! ```rust
+//! use pilot_streaming::engine::CalibratedEngine;
+//! use pilot_streaming::pilot::{PilotComputeService, PilotDescription, Platform, ResizeSemantics};
+//! use pilot_streaming::sim::SimClock;
+//! use std::sync::Arc;
+//!
+//! let service = PilotComputeService::new(
+//!     Arc::new(SimClock::new()),
+//!     Arc::new(CalibratedEngine::new(1)),
+//! );
+//! // a two-site fleet, provisioned through the plugin registry
+//! let pilot = service
+//!     .submit_pilot(
+//!         PilotDescription::new(Platform::EDGE)
+//!             .with_parallelism(2)
+//!             .with_memory_mb(1024)
+//!             .with_extra("edge_sites", 2),
+//!     )
+//!     .unwrap();
+//! assert_eq!(pilot.parallelism(), 2);
+//! // the device envelopes are a hard wall: past the summed per-site caps
+//! // the plan clamps and tells the control loop to throttle the source
+//! let plan = pilot.resize(64).unwrap();
+//! assert_eq!(plan.semantics, ResizeSemantics::Throttle);
+//! assert!(plan.to < 64);
+//! pilot.cancel();
+//! ```
 
-use super::serverless::{FleetExecutor, FleetProcessor};
 use crate::broker::kinesis::{KinesisStream, ShardLimits};
 use crate::broker::Broker;
-use crate::pilot::compute_unit::{ComputeUnit, TaskSpec};
+use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
 use crate::pilot::description::{DescriptionError, PilotDescription, Platform};
 use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
-use crate::pilot::processor::StreamProcessor;
+use crate::pilot::processor::{ProcessCost, StreamProcessor};
 use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
-use crate::pilot::workers::LazyWorkerPool;
+use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
 use crate::serverless::edge::{EDGE_MAX_CONCURRENCY, EDGE_MAX_MEMORY_MB};
-use crate::serverless::{EdgeSite, FunctionConfig, LambdaFleet};
+use crate::serverless::edge_fleet::{
+    EdgeFleet, MessageClass, Placement, PlacementPolicy, PlacementSnapshot, PlacementStats,
+    CLOUD_SPILLOVER_CONCURRENCY, MAX_EDGE_SITES,
+};
+use crate::serverless::{
+    EdgeSite, FunctionConfig, InvocationReport, LambdaFleet, LAMBDA_CPU_EFFICIENCY,
+};
 use crate::store::ObjectStore;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-/// The provisioned edge pilot: site-local broker + constrained fleet.
-pub struct EdgeBackend {
+/// One provisioned site: its envelope, the admitted function config, and
+/// the container fleet running under it.
+struct SiteRuntime {
     site: EdgeSite,
-    stream: Arc<KinesisStream>,
+    config: FunctionConfig,
     fleet: Arc<LambdaFleet>,
+}
+
+/// One routed invocation: where it ran and what the backhaul added.
+struct RoutedInvocation {
+    report: InvocationReport,
+    /// Backhaul round trip paid by spilled messages (0 for edge-served).
+    backhaul_s: f64,
+    /// Executor label for traces: the site name, or "edge-cloud".
+    executor_label: String,
+}
+
+/// The placement router: stripes partitions over sites, pins light
+/// message classes to their box, spills heavy classes to the cloud
+/// fallback when a site saturates — with conserved accounting.
+struct EdgeFleetRouter {
+    sites: Vec<SiteRuntime>,
+    cloud: Arc<LambdaFleet>,
+    policy: Mutex<PlacementPolicy>,
+    stats: PlacementStats,
+}
+
+impl EdgeFleetRouter {
+    /// Site choice for bag-of-tasks work, where no partition pins the
+    /// data: start at the worker's home site and take the first one with
+    /// a free container, so heterogeneous per-site allocations (which a
+    /// plain modulo stripe cannot saturate) are fully drivable.  Stream
+    /// partitions do NOT use this — their data lives on `partition % n`.
+    fn site_for_task(&self, worker: usize) -> usize {
+        let n = self.sites.len();
+        let home = worker % n;
+        (0..n)
+            .map(|k| (home + k) % n)
+            .find(|&i| !self.sites[i].fleet.is_saturated())
+            .unwrap_or(home)
+    }
+
+    fn route(
+        &self,
+        partition: usize,
+        points: &[f32],
+        dim: usize,
+        model_key: &str,
+        centroids: usize,
+    ) -> Result<RoutedInvocation, String> {
+        let idx = partition % self.sites.len();
+        let rt = &self.sites[idx];
+        let class = MessageClass::of(points.len() / dim.max(1), centroids);
+        let placement = self
+            .policy
+            .lock()
+            .unwrap()
+            .place(&rt.site, &rt.config, class);
+        if placement == Placement::Spillable && rt.fleet.is_saturated() {
+            // the site is full and the class is not latency-pinned: ship
+            // the message to the region and sync the model back over the
+            // site's backhaul
+            let report = self
+                .cloud
+                .invoke(points, dim, model_key, centroids)
+                .map_err(|e| e.to_string())?;
+            self.policy
+                .lock()
+                .unwrap()
+                .observe_cloud_compute(class, report.compute);
+            let backhaul_s = rt.site.backhaul_round_trip();
+            self.stats.record_spill(backhaul_s);
+            return Ok(RoutedInvocation {
+                report,
+                backhaul_s,
+                executor_label: "edge-cloud".into(),
+            });
+        }
+        let report = rt
+            .fleet
+            .invoke(points, dim, model_key, centroids)
+            .map_err(|e| e.to_string())?;
+        self.policy
+            .lock()
+            .unwrap()
+            .observe_edge_compute(class, &rt.site, report.compute);
+        self.stats.record_edge(idx);
+        Ok(RoutedInvocation {
+            report,
+            backhaul_s: 0.0,
+            executor_label: rt.site.name.clone(),
+        })
+    }
+}
+
+impl StreamProcessor for EdgeFleetRouter {
+    fn label(&self) -> &'static str {
+        "edge"
+    }
+
+    fn process(
+        &self,
+        partition: usize,
+        points: &[f32],
+        dim: usize,
+        model_key: &str,
+        centroids: usize,
+    ) -> Result<ProcessCost, String> {
+        let routed = self.route(partition, points, dim, model_key, centroids)?;
+        let r = &routed.report;
+        Ok(ProcessCost {
+            compute: r.compute,
+            io: r.io_get + r.io_put,
+            overhead: r.cold_start + r.queue_wait + routed.backhaul_s,
+        })
+    }
+}
+
+/// Runs compute-units through the placement router: bag-of-tasks work
+/// has no partition pinning it to a site, so each task takes the first
+/// site with a free container (starting from the worker's home site).
+struct EdgeFleetExecutor {
+    router: Arc<EdgeFleetRouter>,
+}
+
+impl TaskExecutor for EdgeFleetExecutor {
+    fn execute(&self, worker: usize, spec: TaskSpec) -> Result<CuOutcome, String> {
+        match spec {
+            TaskSpec::KMeansStep {
+                points,
+                dim,
+                model_key,
+                centroids,
+            } => {
+                let site = self.router.site_for_task(worker);
+                let routed = self.router.route(site, &points, dim, &model_key, centroids)?;
+                let r = routed.report;
+                Ok(CuOutcome {
+                    value: r.inertia,
+                    compute_seconds: r.compute,
+                    io_seconds: r.io_get + r.io_put,
+                    overhead_seconds: r.cold_start + r.queue_wait + routed.backhaul_s,
+                    executor: format!("{}-{}", routed.executor_label, r.container_id),
+                })
+            }
+            TaskSpec::Sleep(s) => Ok(CuOutcome {
+                value: s,
+                compute_seconds: s,
+                io_seconds: 0.0,
+                overhead_seconds: 0.0,
+                executor: "edge".into(),
+            }),
+            TaskSpec::Custom(_) => {
+                Err("edge backend runs packaged functions, not closures".into())
+            }
+        }
+    }
+}
+
+/// The provisioned edge pilot: site-local broker + fleet + placement
+/// router + cloud spillover.
+pub struct EdgeBackend {
+    fleet: EdgeFleet,
+    stream: Arc<KinesisStream>,
+    router: Arc<EdgeFleetRouter>,
     pool: LazyWorkerPool,
 }
 
 impl EdgeBackend {
     pub fn provision(desc: &PilotDescription, ctx: &ProvisionContext) -> Result<Self, PilotError> {
-        let site = EdgeSite::default();
-        // admit() clamps concurrency to the device and rejects over-memory
-        let config = site
-            .admit(FunctionConfig {
-                memory_mb: desc.memory_mb,
-                timeout_s: desc.walltime_s,
-                package_mb: desc.package_mb,
-                max_concurrency: desc.parallelism,
-                cpu_efficiency: site.cpu_efficiency,
-                queue_when_saturated: true,
-            })
-            .map_err(PilotError::Provision)?;
+        // the plugin's validate rejects out-of-range fleet sizes on the
+        // service path; clamp defensively for direct callers (a per-site
+        // LambdaFleet is provisioned below, so the count must stay sane)
+        let sites_n = desc
+            .extra_param("edge_sites")
+            .unwrap_or(1)
+            .clamp(1, MAX_EDGE_SITES as u64) as usize;
+        let fleet = EdgeFleet::provision(sites_n);
+        let alloc = fleet.distribute(desc.parallelism);
+        let mut runtimes = Vec::with_capacity(sites_n);
+        for (i, (site, slots)) in fleet.sites().iter().zip(&alloc).enumerate() {
+            // admit() clamps concurrency to the device and rejects
+            // over-memory; sites pin latency-bound classes, so a full box
+            // queues rather than throttles
+            let config = site
+                .admit(FunctionConfig {
+                    memory_mb: desc.memory_mb,
+                    timeout_s: desc.walltime_s,
+                    package_mb: desc.package_mb,
+                    max_concurrency: *slots,
+                    cpu_efficiency: site.cpu_efficiency,
+                    queue_when_saturated: true,
+                })
+                .map_err(PilotError::Provision)?;
+            let site_fleet = Arc::new(
+                LambdaFleet::new(
+                    config.clone(),
+                    Arc::clone(&ctx.engine),
+                    Arc::new(ObjectStore::default()),
+                    Arc::clone(&ctx.clock),
+                    desc.seed.wrapping_add(i as u64),
+                )
+                .map_err(PilotError::Provision)?,
+            );
+            runtimes.push(SiteRuntime {
+                site: site.clone(),
+                config,
+                fleet: site_fleet,
+            });
+        }
+        // the cloud-region fallback spilled messages overflow to: cloud
+        // silicon, the paper's observed concurrency ceiling, and queueing
+        // (the region absorbs bursts; the backhaul is charged per message
+        // by the router)
+        let cloud = Arc::new(
+            LambdaFleet::new(
+                FunctionConfig {
+                    memory_mb: desc.memory_mb,
+                    timeout_s: desc.walltime_s,
+                    package_mb: desc.package_mb,
+                    max_concurrency: CLOUD_SPILLOVER_CONCURRENCY,
+                    cpu_efficiency: LAMBDA_CPU_EFFICIENCY,
+                    queue_when_saturated: true,
+                },
+                Arc::clone(&ctx.engine),
+                Arc::new(ObjectStore::default()),
+                Arc::clone(&ctx.clock),
+                desc.seed.wrapping_add(0xC10D),
+            )
+            .map_err(PilotError::Provision)?,
+        );
+        // one co-located stream; the gateway site's LAN latency applies
         let stream = Arc::new(KinesisStream::new(
             "edge-stream",
             desc.parallelism,
             ShardLimits {
-                put_latency: site.broker_latency,
+                put_latency: fleet.sites()[0].broker_latency,
                 ..Default::default()
             },
             Arc::clone(&ctx.clock),
         ));
-        let fleet = Arc::new(
-            LambdaFleet::new(
-                config,
-                Arc::clone(&ctx.engine),
-                Arc::new(ObjectStore::default()),
-                Arc::clone(&ctx.clock),
-                desc.seed,
-            )
-            .map_err(PilotError::Provision)?,
-        );
+        let router = Arc::new(EdgeFleetRouter {
+            sites: runtimes,
+            cloud,
+            policy: Mutex::new(PlacementPolicy::new()),
+            stats: PlacementStats::new(sites_n),
+        });
         let pool = LazyWorkerPool::new(
-            desc.parallelism.min(site.max_concurrency),
-            Arc::new(FleetExecutor {
-                fleet: Arc::clone(&fleet),
-                label: "edge",
+            alloc.iter().sum(),
+            Arc::new(EdgeFleetExecutor {
+                router: Arc::clone(&router),
             }),
         );
         Ok(Self {
-            site,
-            stream,
             fleet,
+            stream,
+            router,
             pool,
         })
     }
 
-    pub fn site(&self) -> &EdgeSite {
-        &self.site
+    /// The fleet's site envelopes.
+    pub fn fleet(&self) -> &EdgeFleet {
+        &self.fleet
     }
 
-    pub fn fleet(&self) -> Arc<LambdaFleet> {
-        Arc::clone(&self.fleet)
+    /// Conserved placement accounting: per-site edge-served counts plus
+    /// backhaul spills (`edge_total + spilled == messages routed`).
+    pub fn placement(&self) -> PlacementSnapshot {
+        self.router.stats.snapshot()
+    }
+
+    /// Total messages the cloud fallback absorbed (diagnostics).
+    pub fn cloud_invocations(&self) -> u64 {
+        self.router.cloud.invocation_count()
     }
 }
 
@@ -100,17 +357,20 @@ impl PilotBackend for EdgeBackend {
     }
 
     fn parallelism(&self) -> usize {
-        self.fleet.concurrency()
+        self.router.sites.iter().map(|rt| rt.fleet.concurrency()).sum()
     }
 
-    /// Edge resize: the device envelope is a hard wall.  Targets above
-    /// the site's container count are *clamped* — the plan lands at the
-    /// cap with [`ResizeSemantics::Throttle`], telling the control loop
-    /// the source must slow down rather than the site scale up.
+    /// Fleet resize: waterfill the target over the per-site caps.  The
+    /// summed device envelopes are a hard wall — targets above them are
+    /// *clamped*, and the plan lands at the fleet capacity with
+    /// [`ResizeSemantics::Throttle`], telling the control loop the source
+    /// must slow down rather than the fleet scale up.  Targets below one
+    /// container per site clamp upward (the data source lives on every
+    /// box).
     fn resize(&self, to: usize) -> Result<ResizePlan, PilotError> {
-        let cap = self.site.max_concurrency;
-        let from = self.fleet.concurrency();
-        let target = to.min(cap);
+        let cap = self.fleet.total_capacity();
+        let from = self.parallelism();
+        let target = to.clamp(self.fleet.len(), cap);
         let semantics = if to > cap {
             ResizeSemantics::Throttle
         } else if target == from {
@@ -126,10 +386,20 @@ impl PilotBackend for EdgeBackend {
                 semantics,
             });
         }
-        self.fleet.set_concurrency(target);
+        let alloc = self.fleet.distribute(target);
+        let mut grew = false;
+        for (rt, slots) in self.router.sites.iter().zip(&alloc) {
+            let current = rt.fleet.concurrency();
+            if *slots != current {
+                grew |= *slots > current;
+                rt.fleet.set_concurrency(*slots);
+            }
+        }
         self.pool.resize(target);
-        let transition_s = if target > from {
-            self.fleet.config().cold_start_dist().mean()
+        // sites grow in parallel: one (mean) cold-start window covers the
+        // whole transition, exactly like the single-fleet serverless case
+        let transition_s = if grew {
+            self.router.sites[0].config.cold_start_dist().mean()
         } else {
             0.0
         };
@@ -146,10 +416,7 @@ impl PilotBackend for EdgeBackend {
     }
 
     fn processor(&self) -> Option<Arc<dyn StreamProcessor>> {
-        Some(Arc::new(FleetProcessor {
-            fleet: Arc::clone(&self.fleet),
-            label: "edge",
-        }))
+        Some(Arc::clone(&self.router) as Arc<dyn StreamProcessor>)
     }
 
     fn shutdown(&self) {
@@ -161,7 +428,8 @@ impl PilotBackend for EdgeBackend {
     }
 }
 
-/// The edge platform plugin: owns the "edge" name and the device envelope.
+/// The edge platform plugin: owns the "edge" name and the device
+/// envelopes.
 pub struct EdgePlugin;
 
 impl PlatformPlugin for EdgePlugin {
@@ -178,8 +446,11 @@ impl PlatformPlugin for EdgePlugin {
     }
 
     /// Edge elasticity: containers start locally (one cold start), tear
-    /// down instantly — but the device envelope caps parallelism, so
-    /// scale-ups past it resolve to throttling the source.
+    /// down instantly — but the device envelopes cap parallelism.  The
+    /// declared cap is the *reference site's* container count (the
+    /// description-independent envelope); multi-site fleets surface their
+    /// true summed cap at runtime through `Throttle` resize plans, which
+    /// the control loop learns from.
     fn elasticity(&self) -> Elasticity {
         Elasticity::elastic(FunctionConfig::default().cold_start_dist().mean(), 0.0)
             .with_cap(EDGE_MAX_CONCURRENCY)
@@ -211,6 +482,14 @@ impl PlatformPlugin for EdgePlugin {
                 format!("{} exceeds the 15-minute function cap", d.walltime_s),
             ));
         }
+        if let Some(sites) = d.extra_param("edge_sites") {
+            if sites == 0 || sites > MAX_EDGE_SITES as u64 {
+                return Err(DescriptionError::invalid(
+                    "extra",
+                    format!("edge_sites {sites} outside [1, {MAX_EDGE_SITES}]"),
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -229,7 +508,7 @@ mod tests {
     use crate::engine::CalibratedEngine;
     use crate::pilot::state::CuState;
     use crate::serverless::edge::{EDGE_BROKER_LATENCY, EDGE_MAX_CONCURRENCY};
-    use crate::sim::{ContentionParams, SharedResource, SimClock, WallClock};
+    use crate::sim::{ContentionParams, Dist, SharedResource, SimClock, WallClock};
 
     fn ctx() -> ProvisionContext {
         ProvisionContext {
@@ -239,10 +518,28 @@ mod tests {
         }
     }
 
+    /// A context on a frozen virtual clock with a constant-cost engine:
+    /// containers booked at t=0 stay busy, so saturation is exact.
+    fn sim_ctx(compute_s: f64) -> (Arc<SimClock>, ProvisionContext) {
+        let clock = Arc::new(SimClock::new());
+        let mut e = CalibratedEngine::new(1);
+        e.insert((20, 16), Dist::Const(compute_s));
+        let ctx = ProvisionContext {
+            engine: Arc::new(e),
+            clock: clock.clone(),
+            shared_fs: SharedResource::new("fs", ContentionParams::ISOLATED),
+        };
+        (clock, ctx)
+    }
+
     fn desc() -> PilotDescription {
         PilotDescription::new(Platform::EDGE)
             .with_parallelism(2)
             .with_memory_mb(1024)
+    }
+
+    fn pts() -> Vec<f32> {
+        vec![0.1f32; 20 * 8]
     }
 
     #[test]
@@ -252,17 +549,24 @@ mod tests {
         assert_eq!(broker.num_partitions(), 2);
         let p = b.processor().expect("edge fleet");
         assert_eq!(p.label(), "edge");
-        assert!(b.site().cpu_efficiency < 1.0);
+        assert_eq!(b.fleet().len(), 1, "no extension param: one site");
+        assert!(b.fleet().sites()[0].cpu_efficiency < 1.0);
+    }
+
+    #[test]
+    fn extension_param_provisions_a_heterogeneous_fleet() {
+        let b = EdgeBackend::provision(&desc().with_extra("edge_sites", 3), &ctx()).unwrap();
+        assert_eq!(b.fleet().len(), 3);
+        // heterogeneous envelopes straight from the fleet table
+        let effs: Vec<f64> = b.fleet().sites().iter().map(|s| s.cpu_efficiency).collect();
+        assert!(effs.windows(2).any(|w| w[0] != w[1]));
+        // parallelism floors at one container per site
+        assert_eq!(b.parallelism(), 3);
     }
 
     #[test]
     fn local_broker_has_lan_latency() {
-        let clock = Arc::new(SimClock::new());
-        let ctx = ProvisionContext {
-            engine: Arc::new(CalibratedEngine::new(1)),
-            clock: clock.clone(),
-            shared_fs: SharedResource::new("fs", ContentionParams::ISOLATED),
-        };
+        let (_, ctx) = sim_ctx(0.05);
         let b = EdgeBackend::provision(&desc(), &ctx).unwrap();
         let r = b
             .broker()
@@ -299,11 +603,81 @@ mod tests {
         .unwrap();
         assert_eq!(cu.wait(), CuState::Done);
         assert!(cu.outcome().unwrap().executor.starts_with("edge-"));
-        assert_eq!(b.fleet().invocation_count(), 1);
+        assert_eq!(b.placement().total(), 1);
     }
 
     #[test]
-    fn resize_clamps_at_the_device_cap() {
+    fn saturated_site_spills_heavy_classes_over_the_backhaul() {
+        // frozen clock: every booked container stays busy, so the 5th
+        // message onward finds site 0 saturated.  0.5 s of cloud compute
+        // is far past the break-even, so the class is spillable once the
+        // first invocation has been measured.
+        let (_, ctx) = sim_ctx(0.5);
+        let d = desc().with_parallelism(8); // site cap 4: full allocation
+        let b = EdgeBackend::provision(&d, &ctx).unwrap();
+        let p = b.processor().unwrap();
+        let mut spilled_costs = Vec::new();
+        for _ in 0..10 {
+            let cost = p.process(0, &pts(), 8, "m", 16).unwrap();
+            spilled_costs.push(cost);
+        }
+        let snap = b.placement();
+        assert_eq!(snap.total(), 10, "every message routed exactly once");
+        assert_eq!(snap.edge_per_site[0], 4, "one per container, then full");
+        assert_eq!(snap.spilled, 6, "overflow went to the region");
+        assert_eq!(b.cloud_invocations(), 6);
+        // conservation: edge + spilled == total, always
+        assert_eq!(snap.edge_total() + snap.spilled, snap.total());
+        // each spilled message was charged the site's backhaul round trip
+        let backhaul = b.fleet().sites()[0].backhaul_round_trip();
+        assert!(
+            (snap.backhaul_seconds - 6.0 * backhaul).abs() < 1e-9,
+            "charged {} expected {}",
+            snap.backhaul_seconds,
+            6.0 * backhaul
+        );
+        // ...and it lands in the processed cost's overhead term (messages
+        // 4.. are the spilled ones on the frozen clock)
+        assert!(spilled_costs[4..].iter().all(|c| c.overhead >= backhaul));
+    }
+
+    #[test]
+    fn light_classes_stay_pinned_and_queue() {
+        // 1 ms of compute sits under the break-even: the class is pinned,
+        // so a saturated site queues instead of spilling
+        let (_, ctx) = sim_ctx(0.001);
+        let d = desc().with_parallelism(8);
+        let b = EdgeBackend::provision(&d, &ctx).unwrap();
+        let p = b.processor().unwrap();
+        let mut costs = Vec::new();
+        for _ in 0..8 {
+            costs.push(p.process(0, &pts(), 8, "m", 16).unwrap());
+        }
+        let snap = b.placement();
+        assert_eq!(snap.spilled, 0, "pinned classes never ride the backhaul");
+        assert_eq!(snap.backhaul_seconds, 0.0);
+        assert_eq!(snap.edge_per_site[0], 8);
+        assert!(
+            costs[4..].iter().all(|c| c.overhead > 0.0),
+            "saturated invocations of a pinned class wait for a container"
+        );
+    }
+
+    #[test]
+    fn partitions_stripe_across_sites() {
+        let (_, ctx) = sim_ctx(0.05);
+        let d = desc().with_parallelism(4).with_extra("edge_sites", 2);
+        let b = EdgeBackend::provision(&d, &ctx).unwrap();
+        let p = b.processor().unwrap();
+        for partition in 0..4 {
+            p.process(partition, &pts(), 8, "m", 16).unwrap();
+        }
+        let snap = b.placement();
+        assert_eq!(snap.edge_per_site, vec![2, 2], "round-robin striping");
+    }
+
+    #[test]
+    fn resize_clamps_at_the_fleet_capacity() {
         let b = EdgeBackend::provision(&desc(), &ctx()).unwrap();
         assert_eq!(b.parallelism(), 2);
         // within the envelope: ordinary cold-start scale-up
@@ -327,6 +701,44 @@ mod tests {
     }
 
     #[test]
+    fn fleet_resize_clamps_at_the_summed_site_caps() {
+        let b =
+            EdgeBackend::provision(&desc().with_extra("edge_sites", 3), &ctx()).unwrap();
+        let cap = b.fleet().total_capacity();
+        assert_eq!(cap, 11, "site caps 4 + 3 + 4");
+        let plan = b.resize(1_000).unwrap();
+        assert_eq!(plan.to, cap, "forced Throttle clamps exactly at the sum");
+        assert_eq!(plan.semantics, ResizeSemantics::Throttle);
+        assert_eq!(b.parallelism(), cap);
+        // scale-down floors at one container per site
+        let plan = b.resize(1).unwrap();
+        assert_eq!(plan.to, 3);
+        assert_eq!(b.parallelism(), 3);
+    }
+
+    #[test]
+    fn fleet_size_is_validated_and_clamped() {
+        let plugin = EdgePlugin;
+        // the service path rejects out-of-range fleet sizes up front...
+        assert!(plugin.validate(&desc().with_extra("edge_sites", 0)).is_err());
+        assert!(plugin
+            .validate(&desc().with_extra("edge_sites", MAX_EDGE_SITES as u64 + 1))
+            .is_err());
+        assert!(plugin
+            .validate(&desc().with_extra("edge_sites", MAX_EDGE_SITES as u64))
+            .is_ok());
+        // ...and a negative JSON value sign-wraps to a huge u64, which the
+        // same check catches before any fleet is built
+        assert!(plugin
+            .validate(&desc().with_extra("edge_sites", u64::MAX))
+            .is_err());
+        // direct provisioning clamps defensively instead of allocating
+        let b = EdgeBackend::provision(&desc().with_extra("edge_sites", u64::MAX), &ctx())
+            .unwrap();
+        assert_eq!(b.fleet().len(), MAX_EDGE_SITES);
+    }
+
+    #[test]
     fn device_envelope_enforced() {
         let plugin = EdgePlugin;
         let mut d = desc();
@@ -340,10 +752,6 @@ mod tests {
         assert!(plugin.validate(&d).is_ok());
         // concurrency is clamped, not rejected
         let b = EdgeBackend::provision(&d.with_parallelism(64), &ctx()).unwrap();
-        assert_eq!(
-            b.fleet().config().max_concurrency,
-            EDGE_MAX_CONCURRENCY,
-            "device cap"
-        );
+        assert_eq!(b.parallelism(), EDGE_MAX_CONCURRENCY, "device cap");
     }
 }

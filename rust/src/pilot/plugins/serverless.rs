@@ -2,9 +2,9 @@
 //! paper Fig 2 step 2a/b) and executes compute-units as function
 //! invocations against the S3-like model store.
 //!
-//! [`FleetExecutor`] and [`FleetProcessor`] are shared with the edge
-//! plugin, whose pilots run the same fleet substrate under a constrained
-//! device envelope.
+//! The edge plugin runs the same [`LambdaFleet`] substrate — one per
+//! fleet site plus a cloud spillover fleet — behind its own placement
+//! router (see `pilot::plugins::edge`).
 
 use crate::engine::StepEngine;
 use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};

@@ -7,6 +7,12 @@
 //! edge hardware next to the data source: broker hops are local-network
 //! cheap (~2 ms instead of ~15 ms WAN), but CPU is weaker, memory is
 //! capped, and only a handful of containers fit on the box.
+//!
+//! Multiple sites compose into an
+//! [`EdgeFleet`](super::edge_fleet::EdgeFleet) with heterogeneous
+//! envelopes and a message-class placement layer (see
+//! [`edge_fleet`](super::edge_fleet)); this module stays the single-site
+//! device model that fleet builds on.
 
 use super::container::FunctionConfig;
 
@@ -20,6 +26,9 @@ pub const EDGE_MAX_CONCURRENCY: usize = 4;
 pub const EDGE_BROKER_LATENCY: f64 = 0.002;
 /// Cloud put latency (the Kinesis WAN default), for comparison.
 pub const CLOUD_BROKER_LATENCY: f64 = 0.015;
+/// One-way backhaul latency of the reference site to the cloud region,
+/// seconds.
+pub const EDGE_BACKHAUL_LATENCY: f64 = 0.040;
 
 /// One edge deployment site.
 #[derive(Debug, Clone)]
@@ -46,7 +55,7 @@ impl Default for EdgeSite {
             max_concurrency: EDGE_MAX_CONCURRENCY,
             cpu_efficiency: EDGE_CPU_EFFICIENCY,
             broker_latency: EDGE_BROKER_LATENCY,
-            backhaul_latency: 0.040,
+            backhaul_latency: EDGE_BACKHAUL_LATENCY,
         }
     }
 }
@@ -93,6 +102,13 @@ impl EdgeSite {
     /// Placement decision for a step with known cloud-side compute cost.
     pub fn should_run_at_edge(&self, config: &FunctionConfig, cloud_compute_s: f64) -> bool {
         cloud_compute_s <= self.breakeven_compute_seconds(config)
+    }
+
+    /// Round-trip backhaul cost of shipping one message to the cloud
+    /// region and syncing the model state back — what a message pays when
+    /// the fleet's placement layer spills it off this site.
+    pub fn backhaul_round_trip(&self) -> f64 {
+        2.0 * self.backhaul_latency
     }
 }
 

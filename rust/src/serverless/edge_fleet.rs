@@ -1,0 +1,468 @@
+//! Multi-site edge fleet + message-class placement (the "from the edge to
+//! the cloud and HPC" half of the paper's §V vision).
+//!
+//! One [`EdgeSite`] models a single Greengrass-class box; an [`EdgeFleet`]
+//! is an ordered set of *heterogeneous* sites — each with its own device
+//! envelope (CPU efficiency, container cap, LAN broker latency, backhaul
+//! latency to the cloud region).  The fleet owns the arithmetic the edge
+//! plugin's substrate wiring builds on:
+//!
+//! - [`EdgeFleet::distribute`] — deterministic waterfill of a parallelism
+//!   target over the per-site container caps (every live site keeps at
+//!   least one container: the data source is on the box).
+//! - [`PlacementPolicy`] — routes each **message class** per site using
+//!   [`EdgeSite::should_run_at_edge`]: classes whose learned cloud-side
+//!   compute cost sits under the site's break-even are *edge-pinned*
+//!   (latency-bound; they queue locally when the box is full), heavier
+//!   classes are *spillable* — they run data-local while the site has
+//!   capacity and overflow to a cloud fallback over the backhaul when the
+//!   site saturates.  Cloud costs are learned: a class starts data-local
+//!   and every measured invocation feeds an EWMA of its cloud-equivalent
+//!   compute cost.
+//! - [`PlacementStats`] — conserved message accounting: every routed
+//!   message is exactly one of edge-served or spilled, so
+//!   `edge_total + spilled == total` always.
+//!
+//! ```rust
+//! use pilot_streaming::serverless::edge_fleet::EdgeFleet;
+//!
+//! let fleet = EdgeFleet::provision(4);
+//! assert_eq!(fleet.len(), 4);
+//! // heterogeneous envelopes: per-site caps differ...
+//! let caps: Vec<usize> = fleet.sites().iter().map(|s| s.max_concurrency).collect();
+//! assert_eq!(fleet.total_capacity(), caps.iter().sum::<usize>());
+//! // ...and a parallelism target waterfills across them, floored at one
+//! // container per site and clamped at the fleet-wide capacity
+//! let alloc = fleet.distribute(6);
+//! assert_eq!(alloc.iter().sum::<usize>(), 6);
+//! assert!(alloc.iter().all(|&a| a >= 1));
+//! assert_eq!(
+//!     fleet.distribute(1_000).iter().sum::<usize>(),
+//!     fleet.total_capacity()
+//! );
+//! ```
+
+use super::container::{FunctionConfig, LAMBDA_CPU_EFFICIENCY};
+use super::edge::{
+    EdgeSite, EDGE_BACKHAUL_LATENCY, EDGE_BROKER_LATENCY, EDGE_CPU_EFFICIENCY,
+    EDGE_MAX_CONCURRENCY,
+};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cloud-region containers available to a fleet's spillover path (the
+/// paper's observed Lambda concurrency ceiling).
+pub const CLOUD_SPILLOVER_CONCURRENCY: usize = 30;
+
+/// Largest fleet [`EdgeFleet::provision`] will build.  A per-site
+/// `LambdaFleet` is provisioned for every site, so the count must stay
+/// sane; the edge plugin's `validate` rejects descriptions beyond it and
+/// `provision` clamps defensively.
+pub const MAX_EDGE_SITES: usize = 64;
+
+/// The deterministic heterogeneity table [`EdgeFleet::provision`] cycles
+/// through: (cpu_efficiency, max_concurrency, broker_latency, backhaul).
+/// Site 0 is always the reference `EdgeSite::default()` envelope (built
+/// from the same named constants), so a one-site fleet is exactly the
+/// pre-fleet edge platform.
+const SITE_ENVELOPES: [(f64, usize, f64, f64); 4] = [
+    // reference Greengrass-class box == EdgeSite::default()
+    (
+        EDGE_CPU_EFFICIENCY,
+        EDGE_MAX_CONCURRENCY,
+        EDGE_BROKER_LATENCY,
+        EDGE_BACKHAUL_LATENCY,
+    ),
+    (0.30, 3, 0.003, 0.060),  // older silicon, farther from the region
+    (0.45, 4, 0.0015, 0.035), // newer box on a better uplink
+    (0.25, 2, 0.0025, 0.080), // battery-class device, worst backhaul
+];
+
+/// An ordered set of heterogeneous edge sites — the unit the edge plugin
+/// provisions from `Scenario::extra_param("edge_sites")`.
+#[derive(Debug, Clone)]
+pub struct EdgeFleet {
+    sites: Vec<EdgeSite>,
+}
+
+impl EdgeFleet {
+    /// A fleet over explicit site envelopes.
+    pub fn new(sites: Vec<EdgeSite>) -> Result<Self, String> {
+        if sites.is_empty() {
+            return Err("an edge fleet needs at least one site".into());
+        }
+        for s in &sites {
+            if s.max_concurrency == 0 {
+                return Err(format!("site {} has zero container capacity", s.name));
+            }
+            if s.cpu_efficiency <= 0.0 {
+                return Err(format!("site {} has non-positive cpu efficiency", s.name));
+            }
+        }
+        Ok(Self { sites })
+    }
+
+    /// The canonical heterogeneous fleet of `n` sites: site 0 is the
+    /// reference envelope, later sites cycle a fixed table of weaker /
+    /// stronger boxes.  Deterministic — the same `n` always provisions the
+    /// same fleet, so sweeps over the `edge_sites` axis are reproducible.
+    /// `n` is clamped to `[1, MAX_EDGE_SITES]`.
+    pub fn provision(n: usize) -> Self {
+        let n = n.clamp(1, MAX_EDGE_SITES);
+        let sites = (0..n)
+            .map(|i| {
+                let (eff, cap, lan, backhaul) = SITE_ENVELOPES[i % SITE_ENVELOPES.len()];
+                EdgeSite {
+                    name: format!("edge-site-{i}"),
+                    cpu_efficiency: eff,
+                    max_concurrency: cap,
+                    broker_latency: lan,
+                    backhaul_latency: backhaul,
+                    ..EdgeSite::default()
+                }
+            })
+            .collect();
+        Self { sites }
+    }
+
+    pub fn sites(&self) -> &[EdgeSite] {
+        &self.sites
+    }
+
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    /// The site a broker partition is pinned to (round-robin striping —
+    /// the same rule the plugin's router uses, so placement is stable).
+    pub fn site_of_partition(&self, partition: usize) -> &EdgeSite {
+        &self.sites[partition % self.sites.len()]
+    }
+
+    /// Fleet-wide container capacity: the sum of per-site caps.  Resize
+    /// targets beyond it surface as `ResizeSemantics::Throttle`.
+    pub fn total_capacity(&self) -> usize {
+        self.sites.iter().map(|s| s.max_concurrency).sum()
+    }
+
+    /// Waterfill `target` containers over the per-site caps: every site
+    /// keeps at least one container (the data source lives on the box),
+    /// then spare units land round-robin on sites with headroom.  The
+    /// result is clamped to `[len(), total_capacity()]` and deterministic.
+    pub fn distribute(&self, target: usize) -> Vec<usize> {
+        let mut alloc = vec![1usize; self.sites.len()];
+        let target = target.clamp(self.sites.len(), self.total_capacity());
+        let mut remaining = target - self.sites.len();
+        while remaining > 0 {
+            let mut progressed = false;
+            for (a, site) in alloc.iter_mut().zip(&self.sites) {
+                if remaining == 0 {
+                    break;
+                }
+                if *a < site.max_concurrency {
+                    *a += 1;
+                    remaining -= 1;
+                    progressed = true;
+                }
+            }
+            debug_assert!(progressed, "target was clamped to total_capacity");
+            if !progressed {
+                break;
+            }
+        }
+        alloc
+    }
+}
+
+/// A message class: the workload coordinates placement keys on.  Two
+/// messages of the same (points, centroids) shape cost the same compute
+/// and are routed identically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MessageClass {
+    /// Points per message (the paper's MS axis).
+    pub points: usize,
+    /// Model size (the paper's WC axis).
+    pub centroids: usize,
+}
+
+impl MessageClass {
+    pub fn of(points: usize, centroids: usize) -> Self {
+        Self { points, centroids }
+    }
+}
+
+/// How the placement layer routes one message class on one site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// The class passes the site's break-even: latency-bound, it stays on
+    /// the box even when that means queueing for a container.
+    EdgePinned,
+    /// The class's cloud-side compute exceeds the site's break-even: it
+    /// runs data-local while the site has free containers and spills to
+    /// the cloud fallback (paying the backhaul round trip) on saturation.
+    Spillable,
+}
+
+/// Per-class placement over heterogeneous sites, built on
+/// [`EdgeSite::should_run_at_edge`].
+///
+/// Cloud-side compute costs are not known a priori: a class starts
+/// data-local and every measured invocation feeds an EWMA of its
+/// *cloud-equivalent* compute seconds.  Once the estimate crosses a
+/// site's break-even, that site treats the class as [`Placement::Spillable`].
+#[derive(Debug, Default)]
+pub struct PlacementPolicy {
+    estimates: HashMap<MessageClass, f64>,
+}
+
+impl PlacementPolicy {
+    /// EWMA smoothing of the cloud-compute estimates.
+    const ALPHA: f64 = 0.5;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The learned cloud-side compute estimate for `class`, if any
+    /// invocation of it has been measured yet.
+    pub fn cloud_compute_estimate(&self, class: MessageClass) -> Option<f64> {
+        self.estimates.get(&class).copied()
+    }
+
+    /// Fold one measured cloud-side compute cost (seconds) into the
+    /// class's estimate.
+    pub fn observe_cloud_compute(&mut self, class: MessageClass, seconds: f64) {
+        self.estimates
+            .entry(class)
+            .and_modify(|e| *e += Self::ALPHA * (seconds - *e))
+            .or_insert(seconds);
+    }
+
+    /// Convert a compute cost measured on `site` silicon into its
+    /// cloud-equivalent (same memory config, so only the per-core
+    /// efficiency ratio differs) and fold it in.
+    pub fn observe_edge_compute(&mut self, class: MessageClass, site: &EdgeSite, seconds: f64) {
+        self.observe_cloud_compute(class, seconds * site.cpu_efficiency / LAMBDA_CPU_EFFICIENCY);
+    }
+
+    /// Route `class` on `site`: [`Placement::Spillable`] once the learned
+    /// cloud cost exceeds the site's break-even, [`Placement::EdgePinned`]
+    /// otherwise (including unmeasured classes — they start data-local).
+    pub fn place(&self, site: &EdgeSite, config: &FunctionConfig, class: MessageClass) -> Placement {
+        match self.cloud_compute_estimate(class) {
+            Some(est) if !site.should_run_at_edge(config, est) => Placement::Spillable,
+            _ => Placement::EdgePinned,
+        }
+    }
+}
+
+/// Conserved placement accounting: every routed message increments exactly
+/// one counter, so `edge_total + spilled == total` always.
+#[derive(Debug)]
+pub struct PlacementStats {
+    edge: Vec<AtomicU64>,
+    spilled: AtomicU64,
+    /// Total backhaul seconds charged to spilled messages, in nanoseconds
+    /// (atomic-friendly fixed point).
+    backhaul_ns: AtomicU64,
+}
+
+impl PlacementStats {
+    pub fn new(sites: usize) -> Self {
+        Self {
+            edge: (0..sites).map(|_| AtomicU64::new(0)).collect(),
+            spilled: AtomicU64::new(0),
+            backhaul_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_edge(&self, site: usize) {
+        self.edge[site].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one spill and the backhaul seconds it was charged.
+    pub fn record_spill(&self, backhaul_s: f64) {
+        self.spilled.fetch_add(1, Ordering::Relaxed);
+        self.backhaul_ns
+            .fetch_add((backhaul_s * 1e9).round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PlacementSnapshot {
+        PlacementSnapshot {
+            edge_per_site: self.edge.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            spilled: self.spilled.load(Ordering::Relaxed),
+            backhaul_seconds: self.backhaul_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+/// A point-in-time copy of [`PlacementStats`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementSnapshot {
+    /// Messages served on each site's own containers.
+    pub edge_per_site: Vec<u64>,
+    /// Messages that overflowed a saturated site onto the backhaul.
+    pub spilled: u64,
+    /// Total backhaul seconds those spills were charged.
+    pub backhaul_seconds: f64,
+}
+
+impl PlacementSnapshot {
+    /// Messages served at the edge, across all sites.
+    pub fn edge_total(&self) -> u64 {
+        self.edge_per_site.iter().sum()
+    }
+
+    /// Every message routed — the conservation check's right-hand side.
+    pub fn total(&self) -> u64 {
+        self.edge_total() + self.spilled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn provision_is_deterministic_and_heterogeneous() {
+        let a = EdgeFleet::provision(4);
+        let b = EdgeFleet::provision(4);
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.sites().iter().zip(b.sites()) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.max_concurrency, y.max_concurrency);
+            assert_eq!(x.cpu_efficiency, y.cpu_efficiency);
+        }
+        // genuinely heterogeneous: envelopes differ across sites
+        let caps: Vec<usize> = a.sites().iter().map(|s| s.max_concurrency).collect();
+        assert!(caps.windows(2).any(|w| w[0] != w[1]));
+        let backhauls: Vec<f64> = a.sites().iter().map(|s| s.backhaul_latency).collect();
+        assert!(backhauls.windows(2).any(|w| w[0] != w[1]));
+        // site 0 is the reference envelope (one-site fleet == old edge)
+        let reference = EdgeSite::default();
+        assert_eq!(a.sites()[0].max_concurrency, reference.max_concurrency);
+        assert_eq!(a.sites()[0].cpu_efficiency, reference.cpu_efficiency);
+        assert_eq!(a.sites()[0].broker_latency, reference.broker_latency);
+        assert_eq!(a.sites()[0].backhaul_latency, reference.backhaul_latency);
+    }
+
+    #[test]
+    fn fleet_validation() {
+        assert!(EdgeFleet::new(Vec::new()).is_err());
+        let bad = EdgeSite {
+            max_concurrency: 0,
+            ..EdgeSite::default()
+        };
+        assert!(EdgeFleet::new(vec![bad]).is_err());
+        assert_eq!(EdgeFleet::provision(0).len(), 1, "floored at one site");
+        assert_eq!(
+            EdgeFleet::provision(usize::MAX).len(),
+            MAX_EDGE_SITES,
+            "absurd site counts clamp instead of exhausting memory"
+        );
+    }
+
+    #[test]
+    fn distribute_waterfills_with_floor_and_cap() {
+        let fleet = EdgeFleet::provision(3); // caps 4, 3, 4 = 11
+        assert_eq!(fleet.total_capacity(), 11);
+        assert_eq!(fleet.distribute(1), vec![1, 1, 1], "one container per site");
+        assert_eq!(fleet.distribute(5), vec![2, 2, 1], "round-robin spare units");
+        assert_eq!(fleet.distribute(11), vec![4, 3, 4]);
+        assert_eq!(fleet.distribute(1_000), vec![4, 3, 4], "clamped at capacity");
+        for target in 1..=14 {
+            let alloc = fleet.distribute(target);
+            assert_eq!(
+                alloc.iter().sum::<usize>(),
+                target.clamp(3, 11),
+                "target {target}"
+            );
+            for (a, s) in alloc.iter().zip(fleet.sites()) {
+                assert!((1..=s.max_concurrency).contains(a));
+            }
+        }
+    }
+
+    #[test]
+    fn partitions_stripe_round_robin() {
+        let fleet = EdgeFleet::provision(2);
+        assert_eq!(fleet.site_of_partition(0).name, "edge-site-0");
+        assert_eq!(fleet.site_of_partition(1).name, "edge-site-1");
+        assert_eq!(fleet.site_of_partition(2).name, "edge-site-0");
+    }
+
+    #[test]
+    fn placement_learns_per_class_and_per_site() {
+        let fleet = EdgeFleet::provision(4);
+        let strong = &fleet.sites()[2]; // 0.45 efficiency
+        let weak = &fleet.sites()[3]; // 0.25 efficiency
+        let config = FunctionConfig {
+            memory_mb: 1_024,
+            ..Default::default()
+        };
+        let light = MessageClass::of(256, 16);
+        let heavy = MessageClass::of(26_000, 8_192);
+
+        let mut policy = PlacementPolicy::new();
+        // unmeasured classes start data-local on every site
+        assert_eq!(policy.place(weak, &config, heavy), Placement::EdgePinned);
+
+        // a light class stays pinned even once measured
+        policy.observe_cloud_compute(light, 0.001);
+        assert_eq!(policy.place(strong, &config, light), Placement::EdgePinned);
+        assert_eq!(policy.place(weak, &config, light), Placement::EdgePinned);
+
+        // a heavy class turns spillable — on the weaker site too
+        policy.observe_cloud_compute(heavy, 0.5);
+        assert_eq!(policy.place(strong, &config, heavy), Placement::Spillable);
+        assert_eq!(policy.place(weak, &config, heavy), Placement::Spillable);
+
+        // break-even heterogeneity: there is a cost band the strong site
+        // keeps pinned while the weak site marks spillable
+        let band = MessageClass::of(1_000, 64);
+        let strong_be = strong.breakeven_compute_seconds(&config);
+        let weak_be = weak.breakeven_compute_seconds(&config);
+        assert!(weak_be < strong_be, "weaker silicon breaks even sooner");
+        policy.observe_cloud_compute(band, (strong_be + weak_be) / 2.0);
+        assert_eq!(policy.place(strong, &config, band), Placement::EdgePinned);
+        assert_eq!(policy.place(weak, &config, band), Placement::Spillable);
+    }
+
+    #[test]
+    fn edge_measurements_convert_to_cloud_equivalents() {
+        let fleet = EdgeFleet::provision(1);
+        let site = &fleet.sites()[0];
+        let class = MessageClass::of(8_000, 1_024);
+        let mut policy = PlacementPolicy::new();
+        // 2 s measured on 0.35-efficiency silicon ≙ 1.4 s on cloud silicon
+        policy.observe_edge_compute(class, site, 2.0);
+        let est = policy.cloud_compute_estimate(class).unwrap();
+        assert!((est - 2.0 * site.cpu_efficiency / LAMBDA_CPU_EFFICIENCY).abs() < 1e-12);
+        // EWMA folds further observations instead of replacing them
+        policy.observe_cloud_compute(class, 0.0);
+        assert!((policy.cloud_compute_estimate(class).unwrap() - est / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_conserve_messages() {
+        let stats = PlacementStats::new(2);
+        for _ in 0..5 {
+            stats.record_edge(0);
+        }
+        for _ in 0..3 {
+            stats.record_edge(1);
+        }
+        stats.record_spill(0.08);
+        stats.record_spill(0.16);
+        let snap = stats.snapshot();
+        assert_eq!(snap.edge_per_site, vec![5, 3]);
+        assert_eq!(snap.edge_total(), 8);
+        assert_eq!(snap.total(), 10);
+        assert_eq!(snap.total(), snap.edge_total() + snap.spilled);
+        assert!((snap.backhaul_seconds - 0.24).abs() < 1e-9);
+    }
+}

@@ -137,6 +137,19 @@ impl LambdaFleet {
         self.invocations.load(Ordering::Relaxed)
     }
 
+    /// Whether every bookable slot is occupied right now: the pool is at
+    /// the live concurrency cap with no idle container.  An invocation
+    /// arriving now would queue (or throttle, per
+    /// `FunctionConfig::queue_when_saturated`) — the edge fleet's
+    /// placement router consults this to spill work to the cloud region
+    /// instead of queueing it on a full site.
+    pub fn is_saturated(&self) -> bool {
+        let now = self.clock.now();
+        let cap = self.concurrency();
+        let pool = self.containers.lock().unwrap();
+        pool.iter().filter(|c| c.busy_until > now).count() >= cap
+    }
+
     pub fn cold_start_count(&self) -> u64 {
         self.cold_starts.load(Ordering::Relaxed)
     }
@@ -428,6 +441,33 @@ mod tests {
             edge > cloud * 1.3,
             "edge silicon must run slower: cloud {cloud} edge {edge}"
         );
+    }
+
+    #[test]
+    fn saturation_is_observable() {
+        let clock = Arc::new(SimClock::new());
+        let mut eng = CalibratedEngine::new(1);
+        eng.insert((100, 16), Dist::Const(0.1));
+        let cfg = FunctionConfig {
+            max_concurrency: 2,
+            queue_when_saturated: true,
+            ..Default::default()
+        };
+        let f = LambdaFleet::new(
+            cfg,
+            Arc::new(eng),
+            Arc::new(ObjectStore::default()),
+            clock.clone() as SharedClock,
+            3,
+        )
+        .unwrap();
+        assert!(!f.is_saturated(), "empty fleet has free slots");
+        f.invoke(&pts(), 8, "m", 16).unwrap();
+        assert!(!f.is_saturated(), "one of two slots busy");
+        f.invoke(&pts(), 8, "m", 16).unwrap();
+        assert!(f.is_saturated(), "both slots busy at t=0");
+        clock.advance_to(100.0);
+        assert!(!f.is_saturated(), "containers went idle");
     }
 
     #[test]

@@ -5,10 +5,15 @@
 
 pub mod container;
 pub mod edge;
+pub mod edge_fleet;
 pub mod event_source;
 pub mod lambda;
 
 pub use container::{Container, FunctionConfig, FULL_VCPU_MB, LAMBDA_CPU_EFFICIENCY, MAX_MEMORY_MB, MAX_WALLTIME_S, MIN_MEMORY_MB};
 pub use edge::EdgeSite;
+pub use edge_fleet::{
+    EdgeFleet, MessageClass, Placement, PlacementPolicy, PlacementSnapshot, PlacementStats,
+    CLOUD_SPILLOVER_CONCURRENCY,
+};
 pub use event_source::{EventSourceMapping, Lease};
 pub use lambda::{InvocationReport, InvokeError, LambdaFleet};

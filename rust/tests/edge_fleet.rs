@@ -1,0 +1,210 @@
+//! Multi-site edge fleet acceptance tests (ROADMAP "Multi-region /
+//! multi-site edge"):
+//!
+//! 1. A sweep over an `edge_sites = [1, 2, 4]` axis yields one *distinct*
+//!    USL fit per fleet size — the campaign engine picks the axis up with
+//!    zero engine edits and the fleets genuinely behave differently.
+//! 2. The fleet is wired into the elastic control plane: a forced resize
+//!    past the summed per-site caps clamps exactly at the sum with
+//!    `Throttle` semantics, through the service's `resize_pilot` path.
+//! 3. Placement conserves messages through the public pilot API, and the
+//!    closed loop on an edge fleet beats the fixed-parallelism baseline
+//!    under a burst trace.
+
+use pilot_streaming::engine::CalibratedEngine;
+use pilot_streaming::insight::figures::{default_calibration, engine_factory};
+use pilot_streaming::insight::{
+    analyze, group_keys, run_fixed, run_sweep, trace_burst, AutoscaleConfig, Autoscaler,
+    ControlLoop, ExperimentSpec, PilotTarget, Predictor,
+};
+use pilot_streaming::miniapp::{LivePilot, PlatformKind, Scenario};
+use pilot_streaming::pilot::{
+    PilotComputeService, PilotDescription, PilotState, Platform, ResizeSemantics,
+};
+use pilot_streaming::sim::{Dist, SharedClock, SimClock};
+use pilot_streaming::usl::UslParams;
+use std::sync::Arc;
+
+#[test]
+fn sweep_over_edge_sites_yields_a_distinct_usl_fit_per_fleet_size() {
+    let spec = ExperimentSpec::edge_fleet_grid(24, 7);
+    let rows = run_sweep(&spec, engine_factory(default_calibration()));
+    assert_eq!(rows.len(), spec.size());
+
+    // one curve per fleet size, derived from the axes with no engine edits
+    let keys = group_keys(&rows);
+    assert_eq!(keys.len(), 3, "one group per edge_sites level");
+    let analysis = analyze(&rows);
+    assert_eq!(analysis.len(), 3);
+    for a in &analysis {
+        assert!(matches!(a.axis_int("edge_sites"), Some(1 | 2 | 4)));
+        assert_eq!(a.observations, spec.scale_levels());
+    }
+
+    // the fleets genuinely differ: at the deepest scale level the measured
+    // curves (and therefore the fits) separate pairwise
+    let top_throughput = |sites: u64| -> f64 {
+        rows.iter()
+            .filter(|r| r.key.int("edge_sites") == Some(sites))
+            .map(|r| (r.scale, r.throughput))
+            .max_by_key(|(scale, _)| *scale)
+            .map(|(_, t)| t)
+            .unwrap()
+    };
+    let t = [top_throughput(1), top_throughput(2), top_throughput(4)];
+    for i in 0..3 {
+        for j in (i + 1)..3 {
+            let rel = (t[i] - t[j]).abs() / t[i].max(t[j]);
+            assert!(
+                rel > 1e-6,
+                "fleet sizes must produce distinct curves: {t:?}"
+            );
+        }
+    }
+    let params: Vec<(f64, f64, f64)> = analysis
+        .iter()
+        .map(|a| (a.fit.params.sigma, a.fit.params.kappa, a.fit.params.lambda))
+        .collect();
+    for i in 0..3 {
+        for j in (i + 1)..3 {
+            assert_ne!(params[i], params[j], "fits must be distinct per fleet");
+        }
+    }
+}
+
+#[test]
+fn forced_throttle_resize_clamps_at_the_summed_site_caps() {
+    let clock = Arc::new(SimClock::new());
+    let service = PilotComputeService::new(
+        clock.clone() as SharedClock,
+        Arc::new(CalibratedEngine::new(3)),
+    );
+    let pilot = service
+        .submit_pilot(
+            PilotDescription::new(Platform::EDGE)
+                .with_parallelism(2)
+                .with_memory_mb(1024)
+                .with_extra("edge_sites", 3),
+        )
+        .unwrap();
+    // 3-site fleet floors at one container per site
+    assert_eq!(pilot.parallelism(), 3);
+
+    // service-level resize far past the fleet: clamps at 4 + 3 + 4
+    let plan = service.resize_pilot(pilot.id, 1_000).unwrap();
+    assert_eq!(plan.to, 11, "sum of per-site caps");
+    assert_eq!(plan.semantics, ResizeSemantics::Throttle);
+    let status = service.pilot_state(pilot.id).unwrap();
+    assert_eq!(status.parallelism, 11);
+    assert_eq!(status.state, PilotState::Resizing);
+    clock.advance_to(clock.now() + plan.transition_s + 1e-6);
+    assert_eq!(
+        service.pilot_state(pilot.id).unwrap().state,
+        PilotState::Running
+    );
+    pilot.cancel();
+}
+
+#[test]
+fn placement_conserves_messages_when_a_site_saturates() {
+    // frozen clock + heavy class: site 0 saturates and the overflow rides
+    // the backhaul, with edge + spilled == total exactly
+    use pilot_streaming::pilot::plugins::EdgeBackend;
+    use pilot_streaming::pilot::{PilotBackend, ProvisionContext};
+    use pilot_streaming::sim::{ContentionParams, SharedResource};
+
+    let mut engine = CalibratedEngine::new(3);
+    engine.insert((64, 8), Dist::Const(0.5));
+    let ctx = ProvisionContext {
+        engine: Arc::new(engine),
+        clock: Arc::new(SimClock::new()),
+        shared_fs: SharedResource::new("fs", ContentionParams::ISOLATED),
+    };
+    let backend = EdgeBackend::provision(
+        &PilotDescription::new(Platform::EDGE)
+            .with_parallelism(8)
+            .with_memory_mb(1024)
+            .with_extra("edge_sites", 2),
+        &ctx,
+    )
+    .unwrap();
+    let processor = backend.processor().expect("edge fleet streams");
+    let points = vec![0.1f32; 64 * 8];
+    let messages = 12u64;
+    for _ in 0..messages {
+        let cost = processor.process(0, &points, 8, "conserve", 8).unwrap();
+        assert!(cost.total() > 0.0);
+    }
+    // all 12 messages hit site 0 (partition 0); its allocation under
+    // parallelism 8 over caps [4, 3] is 4 containers, so 4 run on the box
+    // and the rest spill — none lost, none double-counted
+    let snap = backend.placement();
+    assert_eq!(snap.total(), messages);
+    assert_eq!(snap.edge_per_site, vec![4, 0]);
+    assert_eq!(snap.spilled, messages - 4);
+    assert_eq!(snap.edge_total() + snap.spilled, snap.total());
+    let backhaul = backend.fleet().sites()[0].backhaul_round_trip();
+    assert!((snap.backhaul_seconds - (messages - 4) as f64 * backhaul).abs() < 1e-9);
+    backend.shutdown();
+}
+
+fn burst_autoscaler(initial: usize) -> Autoscaler {
+    Autoscaler::new(
+        Predictor {
+            params: UslParams::new(0.02, 0.0001, 18.0),
+        },
+        AutoscaleConfig {
+            max_parallelism: 64,
+            ..Default::default()
+        },
+        initial,
+    )
+}
+
+#[test]
+fn closed_loop_on_the_fleet_beats_the_fixed_baseline_under_burst() {
+    let mut scenario = Scenario {
+        platform: PlatformKind::Edge,
+        partitions: 2,
+        points_per_message: 64,
+        centroids: 8,
+        messages: 0,
+        ..Default::default()
+    };
+    scenario.set_extra("edge_sites", 2);
+    let engine = || -> Arc<dyn pilot_streaming::engine::StepEngine> {
+        let mut e = CalibratedEngine::new(11);
+        e.insert((64, 8), Dist::Const(0.05));
+        Arc::new(e)
+    };
+    let trace = trace_burst(40, 20.0, 200.0, 10);
+
+    let mut scaled = PilotTarget::new(LivePilot::provision(&scenario, engine()).unwrap());
+    let report = ControlLoop::new(burst_autoscaler(2), 1.0)
+        .run(&mut scaled, &trace)
+        .unwrap();
+    scaled.shutdown();
+    assert!(
+        report
+            .resizes
+            .iter()
+            .any(|r| r.plan.semantics == ResizeSemantics::Throttle),
+        "the burst must drive the loop into the fleet's envelope"
+    );
+
+    let mut fixed = PilotTarget::new(LivePilot::provision(&scenario, engine()).unwrap());
+    let baseline = run_fixed(&mut fixed, &trace, 1.0).unwrap();
+    fixed.shutdown();
+    assert!(
+        report.goodput() >= baseline.goodput(),
+        "autoscaled fleet {} must not lose to fixed {}",
+        report.goodput(),
+        baseline.goodput()
+    );
+    assert!(
+        report.processed_total > baseline.processed_total,
+        "the extra capacity must serve real messages: {} vs {}",
+        report.processed_total,
+        baseline.processed_total
+    );
+}
