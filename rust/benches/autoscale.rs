@@ -1,16 +1,24 @@
 //! Autoscale control-loop benchmark: the USL-model replay vs the live
 //! closed loop (real pilot, real `resize_pilot` transitions) on the same
 //! burst trace — wall-clock cost and goodput side by side, plus the
-//! fixed-parallelism baseline the loop must beat.
+//! fixed-parallelism baseline the loop must beat and the online
+//! recalibration comparison: the same loop steered by a deliberately
+//! stale fit (λ inflated ~3x — an offline characterization gone stale),
+//! with and without streaming USL re-fits hot-swapped in mid-run.
 //!
 //! Emits `BENCH_autoscale.json` (override the path with
-//! `PS_BENCH_AUTOSCALE_OUT`; shrink the trace with
-//! `PS_BENCH_AUTOSCALE_INTERVALS`).  Run: `cargo bench --bench autoscale`.
+//! `PS_BENCH_AUTOSCALE_OUT`, or the directory for all benches with
+//! `PS_BENCH_DIR`; shrink the trace with `PS_BENCH_AUTOSCALE_INTERVALS`).
+//! Run: `cargo bench --bench autoscale`.
+
+#[path = "common.rs"]
+#[allow(dead_code)]
+mod common;
 
 use pilot_streaming::engine::{CalibratedEngine, StepEngine};
 use pilot_streaming::insight::{
-    replay, run_fixed, trace_burst, AutoscaleConfig, Autoscaler, ControlLoop, PilotTarget,
-    Predictor,
+    replay, run_fixed, trace_burst, AutoscaleConfig, AutoscaleReport, Autoscaler, ControlLoop,
+    OnlineUslFitter, PilotTarget, Predictor, RecalibrateConfig,
 };
 use pilot_streaming::miniapp::{LivePilot, PlatformKind, Scenario};
 use pilot_streaming::sim::Dist;
@@ -23,6 +31,30 @@ fn engine() -> Arc<dyn StepEngine> {
     let mut e = CalibratedEngine::new(11);
     e.insert((64, 8), Dist::Const(0.05));
     Arc::new(e)
+}
+
+fn config16() -> AutoscaleConfig {
+    AutoscaleConfig {
+        max_parallelism: 16,
+        ..Default::default()
+    }
+}
+
+fn run_live(
+    scenario: &Scenario,
+    predictor: Predictor,
+    trace: &[f64],
+    fitter: Option<OnlineUslFitter>,
+) -> AutoscaleReport {
+    let scaler = Autoscaler::new(predictor, config16(), 2);
+    let mut control = ControlLoop::new(scaler, 1.0);
+    if let Some(f) = fitter {
+        control = control.with_recalibration(f);
+    }
+    let mut target = PilotTarget::new(LivePilot::provision(scenario, engine()).expect("provision"));
+    let report = control.run(&mut target, trace).expect("live loop");
+    target.shutdown();
+    report
 }
 
 fn main() {
@@ -56,19 +88,7 @@ fn main() {
         ..Default::default()
     };
     let t1 = Instant::now();
-    let scaler = Autoscaler::new(
-        predictor,
-        AutoscaleConfig {
-            max_parallelism: 16,
-            ..Default::default()
-        },
-        2,
-    );
-    let mut live = PilotTarget::new(LivePilot::provision(&scenario, engine()).expect("provision"));
-    let live_report = ControlLoop::new(scaler, 1.0)
-        .run(&mut live, &trace)
-        .expect("live loop");
-    live.shutdown();
+    let live_report = run_live(&scenario, predictor.clone(), &trace, None);
     let live_s = t1.elapsed().as_secs_f64();
 
     // fixed-parallelism baseline on an identical fresh pilot
@@ -82,6 +102,36 @@ fn main() {
         live_report.goodput(),
         fixed_report.goodput()
     );
+
+    // online recalibration: the platform serves ~20 msg/s per lane (0.05 s
+    // per message), but the stale fit believes 3x that — the static loop
+    // under-provisions through the burst, the recalibrated loop re-learns
+    // λ from its own saturated samples and recovers
+    let stale = Predictor {
+        params: UslParams::new(0.02, 0.0001, 60.0),
+    };
+    let static_report = run_live(&scenario, stale.clone(), &trace, None);
+    let recal_report = run_live(
+        &scenario,
+        stale.clone(),
+        &trace,
+        Some(OnlineUslFitter::new(RecalibrateConfig::default())),
+    );
+    let recal = recal_report
+        .recalibration
+        .clone()
+        .expect("recalibrated run carries its trace");
+    assert!(
+        recal_report.goodput() > static_report.goodput() + 0.01,
+        "online re-fits must beat the stale static fit under a burst: {} vs {}",
+        recal_report.goodput(),
+        static_report.goodput()
+    );
+    let recal_lambda = recal
+        .final_params()
+        .map(|p| p.lambda)
+        .unwrap_or(stale.params.lambda);
+
     println!(
         "replay {replay_s:.3}s (goodput {:.3}) | live {live_s:.3}s (goodput {:.3}, {} resizes) | fixed baseline goodput {:.3}",
         model.goodput(),
@@ -89,23 +139,40 @@ fn main() {
         live_report.resizes.len(),
         fixed_report.goodput()
     );
+    println!(
+        "stale fit: static goodput {:.3} | recalibrated goodput {:.3} ({} refits, final lambda {:.2}; true per-lane rate 20.0)",
+        static_report.goodput(),
+        recal_report.goodput(),
+        recal.refits.len(),
+        recal_lambda
+    );
 
-    let out = std::env::var("PS_BENCH_AUTOSCALE_OUT")
-        .unwrap_or_else(|_| "BENCH_autoscale.json".to_string());
-    let json = Json::obj(vec![
-        ("intervals", Json::from(intervals)),
-        ("replay_seconds", Json::from(replay_s)),
-        ("replay_goodput", Json::from(model.goodput())),
-        ("live_seconds", Json::from(live_s)),
-        ("live_goodput", Json::from(live_report.goodput())),
-        ("live_scale_events", Json::from(live_report.scale_events as usize)),
-        ("live_resizes", Json::from(live_report.resizes.len())),
-        ("fixed_goodput", Json::from(fixed_report.goodput())),
-        (
-            "goodput_gain_pts",
-            Json::from((live_report.goodput() - fixed_report.goodput()) * 100.0),
-        ),
-    ]);
-    std::fs::write(&out, json.pretty()).expect("write autoscale bench report");
-    println!("wrote {out}");
+    common::write_bench_json(
+        "PS_BENCH_AUTOSCALE_OUT",
+        "BENCH_autoscale.json",
+        &["replay_goodput", "live_goodput", "fixed_goodput", "recal_goodput"],
+        vec![
+            ("intervals", Json::from(intervals)),
+            ("replay_seconds", Json::from(replay_s)),
+            ("replay_goodput", Json::from(model.goodput())),
+            ("live_seconds", Json::from(live_s)),
+            ("live_goodput", Json::from(live_report.goodput())),
+            ("live_scale_events", Json::from(live_report.scale_events as usize)),
+            ("live_resizes", Json::from(live_report.resizes.len())),
+            ("fixed_goodput", Json::from(fixed_report.goodput())),
+            (
+                "goodput_gain_pts",
+                Json::from((live_report.goodput() - fixed_report.goodput()) * 100.0),
+            ),
+            ("static_goodput", Json::from(static_report.goodput())),
+            ("recal_goodput", Json::from(recal_report.goodput())),
+            ("recal_refits", Json::from(recal.refits.len())),
+            ("recal_lambda", Json::from(recal_lambda)),
+            ("stale_lambda", Json::from(stale.params.lambda)),
+            (
+                "recal_gain_pts",
+                Json::from((recal_report.goodput() - static_report.goodput()) * 100.0),
+            ),
+        ],
+    );
 }

@@ -1,7 +1,53 @@
 //! Shared bench plumbing (no criterion offline): a small timing harness
-//! for micro benches and a uniform runner for the figure benches.
+//! for micro benches, a uniform runner for the figure benches, and the
+//! one writer every `BENCH_*.json` report goes through — a versioned
+//! schema plus a declared gate list, so CI's bench-regression step has a
+//! stable format to parse.
 
 use std::time::Instant;
+
+/// Schema version stamped into every `BENCH_*.json` by
+/// [`write_bench_json`].  Bump when the envelope (not a bench's fields)
+/// changes shape; the CI regression gate refuses to compare across
+/// versions.
+pub const BENCH_SCHEMA_VERSION: usize = 1;
+
+/// Write one bench report with the shared envelope:
+///
+/// - `"schema"`: [`BENCH_SCHEMA_VERSION`], so parsers can reject drift;
+/// - `"gate"`: the dotted paths of the fields the CI regression gate
+///   enforces (higher-is-better, >20% drop vs the committed baseline
+///   fails); everything else is informational trajectory data;
+/// - the bench's own fields, in deterministic (sorted) key order.
+///
+/// Output path resolution: the per-bench env override (exact file path)
+/// wins; else `$PS_BENCH_DIR/<default_name>` (CI's artifact directory);
+/// else `<default_name>` in the working directory.  Parent directories
+/// are created.  Returns the path written.
+pub fn write_bench_json(
+    env_override: &str,
+    default_name: &str,
+    gate: &[&str],
+    mut fields: Vec<(&str, pilot_streaming::util::json::Json)>,
+) -> String {
+    use pilot_streaming::util::json::Json;
+    let path = std::env::var(env_override).unwrap_or_else(|_| {
+        match std::env::var("PS_BENCH_DIR") {
+            Ok(dir) if !dir.is_empty() => format!("{dir}/{default_name}"),
+            _ => default_name.to_string(),
+        }
+    });
+    fields.insert(0, ("schema", Json::from(BENCH_SCHEMA_VERSION)));
+    fields.insert(1, ("gate", Json::Arr(gate.iter().map(|g| Json::from(*g)).collect())));
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).expect("create bench output dir");
+        }
+    }
+    std::fs::write(&path, Json::obj(fields).pretty()).expect("write bench report");
+    println!("wrote {path}");
+    path
+}
 
 /// Time `f` with warmup; returns (ns/op, ops measured).
 pub fn bench_ns<F: FnMut()>(name: &str, mut f: F) -> f64 {

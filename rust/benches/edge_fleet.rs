@@ -56,16 +56,17 @@ fn main() {
     }
     println!("swept in {sweep_s:.2}s on {cores} core(s)");
 
-    let out = std::env::var("PS_BENCH_EDGE_FLEET_OUT")
-        .unwrap_or_else(|_| "BENCH_edge_fleet.json".to_string());
-    let json = Json::obj(vec![
-        ("grid", Json::from("edge-fleet")),
-        ("configs", Json::from(spec.size())),
-        ("messages_per_config", Json::from(messages)),
-        ("cores", Json::from(cores)),
-        ("sweep_seconds", Json::from(sweep_s)),
-        ("fits", Json::Arr(fits)),
-    ]);
-    std::fs::write(&out, json.pretty()).expect("write edge-fleet bench report");
-    println!("wrote {out}");
+    common::write_bench_json(
+        "PS_BENCH_EDGE_FLEET_OUT",
+        "BENCH_edge_fleet.json",
+        &["fits[*].r2"],
+        vec![
+            ("grid", Json::from("edge-fleet")),
+            ("configs", Json::from(spec.size())),
+            ("messages_per_config", Json::from(messages)),
+            ("cores", Json::from(cores)),
+            ("sweep_seconds", Json::from(sweep_s)),
+            ("fits", Json::Arr(fits)),
+        ],
+    );
 }

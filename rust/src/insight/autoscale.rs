@@ -73,6 +73,19 @@ impl Autoscaler {
         self.current
     }
 
+    /// The model currently steering decisions.
+    pub fn predictor(&self) -> &Predictor {
+        &self.predictor
+    }
+
+    /// Hot-swap the model mid-run — the online recalibration seam.  The
+    /// smoothed-rate EWMA, parallelism belief, learned caps, and event
+    /// counters all survive the swap; only the capacity curve changes, so
+    /// the very next decision steers from the refreshed fit.
+    pub fn set_predictor(&mut self, predictor: Predictor) {
+        self.predictor = predictor;
+    }
+
     /// Clamp the autoscaler's belief of current parallelism to what the
     /// platform actually realized.  The control loop calls this after
     /// actuation so device caps (the edge envelope) and clamped

@@ -11,6 +11,7 @@
 use super::autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
 use super::control::{ControlLoop, ModelTarget, ResizeEvent};
 use super::predict::Predictor;
+use super::recalibrate::RecalibrationTrace;
 use crate::util::rng::Pcg32;
 
 /// One control-interval record.
@@ -37,6 +38,9 @@ pub struct AutoscaleReport {
     /// Committed live-resize transitions (empty for model replays, whose
     /// transitions are instantaneous).
     pub resizes: Vec<ResizeEvent>,
+    /// Sample store + model-swap history, when the loop ran with
+    /// [`ControlLoop::with_recalibration`](super::control::ControlLoop::with_recalibration).
+    pub recalibration: Option<RecalibrationTrace>,
 }
 
 impl AutoscaleReport {

@@ -49,8 +49,9 @@
 use super::autoscale::{Autoscaler, ScaleDecision};
 use super::autoscale_sim::{AutoscaleReport, Tick};
 use super::predict::Predictor;
+use super::recalibrate::{OnlineUslFitter, UslSample};
 use crate::miniapp::LivePilot;
-use crate::pilot::{PilotState, ResizePlan, ResizeSemantics};
+use crate::pilot::{ResizePlan, ResizeSemantics};
 
 /// One committed live-resize transition, stamped with its loop time.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -85,6 +86,18 @@ pub trait ScalingTarget {
 
     /// Nominal capacity (msg/s) at current parallelism, for reporting.
     fn capacity(&self) -> f64;
+
+    /// The observation hook (the online-recalibration seam): after each
+    /// serve the loop asks the target for the interval's
+    /// [`UslSample`].  The default reports realized parallelism with the
+    /// loop-measured rates; targets with platform-true push-back
+    /// ([`PilotTarget`] after a `Throttle`/clamp plan) override to mark
+    /// the sample as sitting on the platform's real envelope, so the
+    /// sample store — and every re-fit — carries what the platform
+    /// *actually* did, not what the autoscaler asked for.
+    fn observe_interval(&mut self, served_rate: f64, demand_rate: f64) -> UslSample {
+        UslSample::new(self.parallelism(), served_rate, demand_rate)
+    }
 }
 
 /// The USL model as a scaling target: instant transitions, analytic
@@ -135,11 +148,19 @@ impl ScalingTarget for ModelTarget {
 /// simulates become `resize_pilot` calls on a provisioned backend.
 pub struct PilotTarget {
     pilot: LivePilot,
+    /// The envelope the platform proved with a `Throttle` plan, once one
+    /// was committed: samples served *at* (or beyond) this parallelism
+    /// report push-back; samples below it do not — the platform is no
+    /// longer the binding constraint there.
+    clamp_cap: Option<usize>,
 }
 
 impl PilotTarget {
     pub fn new(pilot: LivePilot) -> Self {
-        Self { pilot }
+        Self {
+            pilot,
+            clamp_cap: None,
+        }
     }
 
     /// The wrapped live pilot (status inspection, teardown).
@@ -162,7 +183,7 @@ impl ScalingTarget for PilotTarget {
     }
 
     fn is_resizing(&self) -> bool {
-        self.pilot.status().state == PilotState::Resizing
+        self.pilot.is_resizing()
     }
 
     fn actuate(&mut self, decision: &ScaleDecision) -> Result<Option<ResizePlan>, String> {
@@ -171,7 +192,7 @@ impl ScalingTarget for PilotTarget {
             ScaleDecision::Scale { to, .. } => *to,
             ScaleDecision::Throttle { parallelism, .. } => *parallelism,
         };
-        if self.pilot.status().state == PilotState::Resizing {
+        if self.pilot.is_resizing() {
             return Ok(None); // one transition at a time
         }
         if want == self.pilot.parallelism() {
@@ -179,7 +200,11 @@ impl ScalingTarget for PilotTarget {
         }
         // no-op plans still flow back: their semantics tell the loop why
         // the platform refused (e.g. the device cap)
-        Ok(Some(self.pilot.resize(want)?))
+        let plan = self.pilot.resize(want)?;
+        if plan.semantics == ResizeSemantics::Throttle {
+            self.clamp_cap = Some(plan.to);
+        }
+        Ok(Some(plan))
     }
 
     fn serve(&mut self, demand: f64, dt: f64) -> Result<f64, String> {
@@ -188,6 +213,12 @@ impl ScalingTarget for PilotTarget {
 
     fn capacity(&self) -> f64 {
         self.pilot.capacity_estimate()
+    }
+
+    fn observe_interval(&mut self, served_rate: f64, demand_rate: f64) -> UslSample {
+        let parallelism = self.pilot.parallelism();
+        let at_envelope = self.clamp_cap.is_some_and(|cap| parallelism >= cap);
+        UslSample::new(parallelism, served_rate, demand_rate).with_pushback(at_envelope)
     }
 }
 
@@ -215,7 +246,8 @@ impl LoopAccounting {
     }
 
     /// Admit one interval's load (throttled to `admitted_rate`), serve it
-    /// from the target, and account the tick.
+    /// from the target, and account the tick.  Returns `(served, demand)`
+    /// in messages — the recalibration sample for this interval.
     fn tick(
         &mut self,
         target: &mut dyn ScalingTarget,
@@ -224,7 +256,7 @@ impl LoopAccounting {
         admitted_rate: f64,
         decision: ScaleDecision,
         dt: f64,
-    ) -> Result<(), String> {
+    ) -> Result<(f64, f64), String> {
         let offered = rate * dt;
         let admitted = admitted_rate.min(rate) * dt;
         let demand = self.backlog + admitted;
@@ -243,7 +275,7 @@ impl LoopAccounting {
             throttled: offered - admitted,
             decision,
         });
-        Ok(())
+        Ok((served, demand))
     }
 
     fn finish(self, scale_events: u64, resizes: Vec<ResizeEvent>) -> AutoscaleReport {
@@ -255,26 +287,48 @@ impl LoopAccounting {
             scale_events,
             max_backlog: self.max_backlog,
             resizes,
+            recalibration: None,
         }
     }
 }
 
 /// The closed loop: one autoscaler driving one [`ScalingTarget`] through a
-/// rate trace, one control interval at a time.
+/// rate trace, one control interval at a time.  Attach an
+/// [`OnlineUslFitter`] with [`ControlLoop::with_recalibration`] and the
+/// loop re-learns its own USL model mid-run: every interval's
+/// `(parallelism, observed goodput)` lands in the fitter's sample store,
+/// and a drift-triggered re-fit is hot-swapped into the autoscaler before
+/// the next decision.
 pub struct ControlLoop {
     autoscaler: Autoscaler,
     dt: f64,
+    recalibrator: Option<OnlineUslFitter>,
 }
 
 impl ControlLoop {
     pub fn new(autoscaler: Autoscaler, dt: f64) -> Self {
         assert!(dt > 0.0, "control interval must be positive");
-        Self { autoscaler, dt }
+        Self {
+            autoscaler,
+            dt,
+            recalibrator: None,
+        }
+    }
+
+    /// Stream online USL re-fits into the loop: observed samples feed
+    /// `fitter`, and every re-fit replaces the autoscaler's predictor
+    /// mid-run.  The run's report carries the full sample store and
+    /// model-swap history in
+    /// [`AutoscaleReport::recalibration`](super::autoscale_sim::AutoscaleReport).
+    pub fn with_recalibration(mut self, fitter: OnlineUslFitter) -> Self {
+        self.recalibrator = Some(fitter);
+        self
     }
 
     /// Run the loop over `trace` (offered msg/s per interval).  Each tick:
     /// observe → decide → actuate → sync belief to the platform's reality
-    /// → admit (throttling if decided) → serve → account.
+    /// → admit (throttling if decided) → serve → account → sample (and
+    /// possibly re-fit and hot-swap the model).
     pub fn run(
         mut self,
         target: &mut dyn ScalingTarget,
@@ -288,7 +342,8 @@ impl ControlLoop {
             // mid-transition the pilot cannot actuate anything: keep the
             // EWMA warm but defer decisions (and their scale_events
             // accounting) until the transition lands
-            let decision = if target.is_resizing() {
+            let was_resizing = target.is_resizing();
+            let decision = if was_resizing {
                 self.autoscaler.observe_rate(rate);
                 ScaleDecision::Hold {
                     parallelism: target.parallelism(),
@@ -296,6 +351,7 @@ impl ControlLoop {
             } else {
                 self.autoscaler.observe(rate)
             };
+            let mut resized_this_tick = false;
             if let Some(plan) = target.actuate(&decision)? {
                 // a clamped plan teaches the autoscaler the platform's
                 // real envelope: future demand beyond it resolves to
@@ -304,6 +360,7 @@ impl ControlLoop {
                     self.autoscaler.limit_max_parallelism(plan.to);
                 }
                 if plan.is_change() {
+                    resized_this_tick = true;
                     resizes.push(ResizeEvent { t, plan });
                 }
             }
@@ -317,9 +374,29 @@ impl ControlLoop {
                 ScaleDecision::Throttle { max_rate, .. } => rate.min(*max_rate),
                 _ => rate,
             };
-            acct.tick(target, t, rate, admitted_rate, decision, dt)?;
+            let (served, demand) = acct.tick(target, t, rate, admitted_rate, decision, dt)?;
+            if let Some(fitter) = self.recalibrator.as_mut() {
+                // transition intervals stay in the trace (accounting) but
+                // are excluded from fitting — their parallelism label lies
+                // about the capacity that actually served them.  Steady
+                // means no transition touched the interval at all: none in
+                // flight at its start, none committed during it (sub-`dt`
+                // cold starts land inside the tick), and none still in
+                // flight after the serve (the serve advances the clock
+                // past resize deadlines, so the post-serve check alone
+                // would mislabel a transition's tail interval).
+                let steady = !was_resizing && !resized_this_tick && !target.is_resizing();
+                let sample = target
+                    .observe_interval(served / dt, demand / dt)
+                    .with_steady(steady);
+                if let Some(refreshed) = fitter.observe(t, sample, self.autoscaler.predictor()) {
+                    self.autoscaler.set_predictor(refreshed);
+                }
+            }
         }
-        Ok(acct.finish(self.autoscaler.scale_events(), resizes))
+        let mut report = acct.finish(self.autoscaler.scale_events(), resizes);
+        report.recalibration = self.recalibrator.map(OnlineUslFitter::into_trace);
+        Ok(report)
     }
 }
 

@@ -43,7 +43,24 @@
 //!
 //! `autoscale --live --platform <p>` runs the closed loop end to end and
 //! reports goodput/backlog/scale-events against a fixed-parallelism
-//! baseline ([`control::run_fixed`]).
+//! baseline ([`control::run_fixed`]).  Broker platforms close the same
+//! loop over their shard count: `--platform kafka|kinesis` actuates
+//! `set_partitions`/`set_shards` repartition plans with the consumer
+//! fleet tracking the shards.
+//!
+//! # Online recalibration: the loop re-learns its own model
+//!
+//! The static fit the loop starts from goes stale the moment the live
+//! platform drifts (cold starts, edge throttling, reshard costs).  The
+//! [`recalibrate`] module closes the remaining gap:
+//! [`control::ScalingTarget::observe_interval`] reports every interval's
+//! `(parallelism, observed goodput)` — platform push-back included — into
+//! an [`recalibrate::OnlineUslFitter`] (windowed, recency-weighted sample
+//! store), whose drift detector triggers streaming USL re-fits
+//! ([`crate::usl::fit_weighted`]) that are hot-swapped into the live
+//! [`Autoscaler`] mid-run ([`Autoscaler::set_predictor`]).
+//! `autoscale --live --recalibrate` reports the recalibrated loop against
+//! the static-fit loop side by side.
 
 pub mod analysis;
 pub mod autoscale;
@@ -53,6 +70,7 @@ pub mod control;
 pub mod experiment;
 pub mod figures;
 pub mod predict;
+pub mod recalibrate;
 pub mod sweep;
 pub mod vars;
 
@@ -68,6 +86,9 @@ pub use experiment::{
     AXIS_MESSAGE_SIZE, AXIS_PARTITIONS, AXIS_PLATFORM,
 };
 pub use predict::Predictor;
+pub use recalibrate::{
+    OnlineUslFitter, RecalibrateConfig, RecalibrationTrace, RefitEvent, UslSample,
+};
 pub use sweep::{
     group_keys, group_observations, paper_key, run_sweep, run_sweep_jobs, to_csv, GroupKey,
     SweepProgress, SweepRow,

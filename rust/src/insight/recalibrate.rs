@@ -1,0 +1,462 @@
+//! Online USL recalibration — the subsystem that lets the live control
+//! loop *re-learn its own model mid-run*.
+//!
+//! The paper's workflow fits USL offline and steers from that static fit.
+//! A live platform drifts away from any offline characterization: cold
+//! starts stretch service times, an edge fleet throttles past its
+//! envelope, a broker pays reshard costs the offline sweep never saw.
+//! [`OnlineUslFitter`] closes that gap: the
+//! [`ControlLoop`](super::control::ControlLoop) records one
+//! [`UslSample`] per serve interval (through the
+//! [`ScalingTarget::observe_interval`](super::control::ScalingTarget::observe_interval)
+//! hook), the fitter keeps a windowed, recency-weighted store of the
+//! *capacity-bound* samples, and a drift detector triggers a re-fit when
+//! observed throughput departs the current model envelope — the refreshed
+//! [`Predictor`] is hot-swapped into the autoscaler for the next decision.
+//!
+//! Two re-fit paths, chosen by how much of the parallelism axis the run
+//! has actually visited:
+//!
+//! - **`"fit"`** — a full recency-weighted USL fit
+//!   ([`crate::usl::fit_weighted`]) once the window covers at least
+//!   [`RecalibrateConfig::min_distinct_n`] distinct parallelism levels.
+//! - **`"rescale"`** — with fewer levels the curve shape is unidentifiable,
+//!   so only λ is corrected by the weighted observed/predicted ratio
+//!   (σ, κ keep their offline values).  This is what repairs a stale
+//!   capacity estimate within a handful of saturated intervals.
+//!
+//! Everything is deterministic: same trace + same seed ⇒ bit-identical
+//! fit sequence (asserted in `rust/tests/recalibrate.rs`).
+
+use super::predict::Predictor;
+use crate::usl::{fit_weighted, Obs, UslParams};
+use std::collections::VecDeque;
+
+/// One control interval's observation of the scaling target, as reported
+/// through [`ScalingTarget::observe_interval`](super::control::ScalingTarget::observe_interval).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UslSample {
+    /// Parallelism in effect while the interval was served.
+    pub n: usize,
+    /// Messages actually served, per second.
+    pub served_rate: f64,
+    /// Messages asked for (admitted load + backlog), per second.
+    pub demand_rate: f64,
+    /// The interval ran at the platform's *proven* envelope: a
+    /// `Throttle`/clamp plan established a hard cap earlier and this
+    /// sample was served at (or beyond) it.  Intervals below the cap do
+    /// not report push-back — the platform was not the binding
+    /// constraint there.
+    pub pushback: bool,
+    /// The target was in steady state (no resize transition in flight).
+    /// Mid-transition intervals stay in the trace for accounting but are
+    /// excluded from fitting — their parallelism label lies.
+    pub steady: bool,
+}
+
+impl UslSample {
+    pub fn new(n: usize, served_rate: f64, demand_rate: f64) -> Self {
+        Self {
+            n: n.max(1),
+            served_rate,
+            demand_rate,
+            pushback: false,
+            steady: true,
+        }
+    }
+
+    pub fn with_pushback(mut self, pushback: bool) -> Self {
+        self.pushback = pushback;
+        self
+    }
+
+    pub fn with_steady(mut self, steady: bool) -> Self {
+        self.steady = steady;
+        self
+    }
+
+    /// Capacity-bound: the target served less than it was asked for, so
+    /// `served_rate` is a true throughput reading at parallelism `n`
+    /// (demand-bound intervals only bound capacity from below).
+    pub fn saturated(&self) -> bool {
+        self.demand_rate > self.served_rate + 1e-9
+    }
+
+    /// Eligible for the fit window: steady, capacity-bound, nonzero.
+    fn fit_eligible(&self) -> bool {
+        self.steady && self.saturated() && self.served_rate > 0.0
+    }
+}
+
+/// Tuning of the online recalibrator.
+#[derive(Debug, Clone)]
+pub struct RecalibrateConfig {
+    /// Capacity-bound samples kept in the sliding fit window.
+    pub window: usize,
+    /// Minimum samples in the window before any re-fit.
+    pub min_samples: usize,
+    /// Distinct parallelism levels required for a full USL fit; below
+    /// this only λ is rescaled.
+    pub min_distinct_n: usize,
+    /// Relative band around the model envelope: a capacity-bound sample
+    /// further than this from the predicted throughput counts as drift.
+    pub drift_band: f64,
+    /// Consecutive out-of-band samples that trigger a re-fit.
+    pub drift_ticks: usize,
+    /// Minimum ticks between re-fits (keeps the model from flapping on
+    /// the noise right after a swap).
+    pub cooldown_ticks: usize,
+    /// Per-sample-age weight decay for the recency-weighted fit (newest
+    /// sample weight 1.0, each older sample multiplied by this).
+    pub decay: f64,
+}
+
+impl Default for RecalibrateConfig {
+    fn default() -> Self {
+        Self {
+            window: 64,
+            min_samples: 6,
+            min_distinct_n: 3,
+            drift_band: 0.25,
+            drift_ticks: 3,
+            cooldown_ticks: 8,
+            decay: 0.97,
+        }
+    }
+}
+
+/// One committed model swap, stamped with its loop time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RefitEvent {
+    pub t: f64,
+    /// The refreshed parameters hot-swapped into the autoscaler.
+    pub params: UslParams,
+    /// `"fit"` (full weighted USL fit) or `"rescale"` (λ correction).
+    pub method: &'static str,
+    /// Capacity-bound samples the re-fit consumed.
+    pub samples: usize,
+}
+
+/// What a recalibrated run leaves behind: every interval's sample (the
+/// conservation surface — served rates sum to the report's processed
+/// total) plus the model-swap history.
+#[derive(Debug, Clone, Default)]
+pub struct RecalibrationTrace {
+    pub samples: Vec<UslSample>,
+    pub refits: Vec<RefitEvent>,
+}
+
+impl RecalibrationTrace {
+    /// The last swapped-in parameters, if any re-fit happened.
+    pub fn final_params(&self) -> Option<UslParams> {
+        self.refits.last().map(|r| r.params)
+    }
+
+    /// Samples where the platform pushed back (`Throttle`/clamp).
+    pub fn pushback_samples(&self) -> usize {
+        self.samples.iter().filter(|s| s.pushback).count()
+    }
+}
+
+/// The streaming re-fitter: windowed sample store + drift detector +
+/// weighted USL fit, producing hot-swappable [`Predictor`]s.
+pub struct OnlineUslFitter {
+    config: RecalibrateConfig,
+    /// Fit-eligible samples, oldest first (bounded by `config.window`).
+    window: VecDeque<UslSample>,
+    /// Every observed sample, for the run's trace/accounting.
+    all: Vec<UslSample>,
+    out_of_band: usize,
+    since_refit: usize,
+    refits: Vec<RefitEvent>,
+}
+
+impl OnlineUslFitter {
+    pub fn new(config: RecalibrateConfig) -> Self {
+        assert!(config.window >= 1, "window must hold at least one sample");
+        assert!(config.drift_band > 0.0, "drift band must be positive");
+        let since_refit = config.cooldown_ticks;
+        Self {
+            config,
+            window: VecDeque::new(),
+            all: Vec::new(),
+            out_of_band: 0,
+            since_refit,
+            refits: Vec::new(),
+        }
+    }
+
+    /// Feed one interval's sample.  Returns a refreshed [`Predictor`] when
+    /// drift triggered a re-fit — the caller hot-swaps it into the
+    /// decision path; `None` means the current model stands.
+    pub fn observe(&mut self, t: f64, sample: UslSample, current: &Predictor) -> Option<Predictor> {
+        self.all.push(sample);
+        self.since_refit = self.since_refit.saturating_add(1);
+        if !sample.fit_eligible() {
+            return None;
+        }
+        self.window.push_back(sample);
+        while self.window.len() > self.config.window {
+            self.window.pop_front();
+        }
+        let predicted = current.throughput(sample.n);
+        let deviation = (sample.served_rate - predicted).abs() / predicted.max(1e-12);
+        if deviation > self.config.drift_band {
+            self.out_of_band += 1;
+        } else {
+            self.out_of_band = 0;
+        }
+        if self.out_of_band < self.config.drift_ticks
+            || self.window.len() < self.config.min_samples
+            || self.since_refit < self.config.cooldown_ticks
+        {
+            return None;
+        }
+        let refreshed = self.refit(t, current)?;
+        self.out_of_band = 0;
+        self.since_refit = 0;
+        Some(refreshed)
+    }
+
+    /// Distinct parallelism levels currently in the fit window.
+    pub fn distinct_levels(&self) -> usize {
+        let mut ns: Vec<usize> = self.window.iter().map(|s| s.n).collect();
+        ns.sort_unstable();
+        ns.dedup();
+        ns.len()
+    }
+
+    /// Re-fit history so far.
+    pub fn refits(&self) -> &[RefitEvent] {
+        &self.refits
+    }
+
+    /// Consume the fitter into the run's trace (the loop calls this when
+    /// the run finishes).
+    pub fn into_trace(self) -> RecalibrationTrace {
+        RecalibrationTrace {
+            samples: self.all,
+            refits: self.refits,
+        }
+    }
+
+    fn recency_weights(&self) -> Vec<f64> {
+        let k = self.window.len();
+        let decay = self.config.decay;
+        (0..k).map(|i| decay.powi((k - 1 - i) as i32)).collect()
+    }
+
+    fn refit(&mut self, t: f64, current: &Predictor) -> Option<Predictor> {
+        let weights = self.recency_weights();
+        let (params, method) = if self.distinct_levels() >= self.config.min_distinct_n {
+            let obs: Vec<Obs> = self
+                .window
+                .iter()
+                .map(|s| Obs::new(s.n as f64, s.served_rate))
+                .collect();
+            match fit_weighted(&obs, &weights) {
+                Ok(f) if f.params.lambda.is_finite() && f.params.lambda > 0.0 => {
+                    (f.params, "fit")
+                }
+                // degenerate fit (collinear window): fall back to rescale
+                _ => (self.rescaled(current, &weights)?, "rescale"),
+            }
+        } else {
+            (self.rescaled(current, &weights)?, "rescale")
+        };
+        self.refits.push(RefitEvent {
+            t,
+            params,
+            method,
+            samples: self.window.len(),
+        });
+        Some(Predictor { params })
+    }
+
+    /// λ-only correction: the weighted mean of observed/predicted ratios
+    /// over the window, applied to the current λ with σ, κ untouched.
+    fn rescaled(&self, current: &Predictor, weights: &[f64]) -> Option<UslParams> {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (s, w) in self.window.iter().zip(weights) {
+            let predicted = current.throughput(s.n);
+            if predicted > 0.0 {
+                num += w * (s.served_rate / predicted);
+                den += w;
+            }
+        }
+        if den <= 0.0 {
+            return None;
+        }
+        let ratio = num / den;
+        if !ratio.is_finite() || ratio <= 0.0 {
+            return None;
+        }
+        let p = current.params;
+        Some(UslParams::new(p.sigma, p.kappa, p.lambda * ratio))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::usl::UslParams;
+
+    fn predictor(sigma: f64, kappa: f64, lambda: f64) -> Predictor {
+        Predictor {
+            params: UslParams::new(sigma, kappa, lambda),
+        }
+    }
+
+    /// Feed `ticks` saturated samples at parallelism `n` whose observed
+    /// rate follows `truth`, against a fitter believing `belief`.
+    fn drive(
+        fitter: &mut OnlineUslFitter,
+        belief: &mut Predictor,
+        truth: &UslParams,
+        n: usize,
+        ticks: usize,
+    ) -> usize {
+        let mut swaps = 0;
+        for i in 0..ticks {
+            let observed = truth.throughput(n as f64);
+            let sample = UslSample::new(n, observed, observed * 2.0);
+            if let Some(p) = fitter.observe(i as f64, sample, belief) {
+                *belief = p;
+                swaps += 1;
+            }
+        }
+        swaps
+    }
+
+    #[test]
+    fn in_band_samples_never_refit() {
+        let truth = UslParams::new(0.02, 0.0001, 20.0);
+        let mut belief = predictor(0.02, 0.0001, 20.0);
+        let mut fitter = OnlineUslFitter::new(RecalibrateConfig::default());
+        let swaps = drive(&mut fitter, &mut belief, &truth, 4, 50);
+        assert_eq!(swaps, 0, "a calibrated model must not be touched");
+        assert!(fitter.refits().is_empty());
+    }
+
+    #[test]
+    fn drift_triggers_a_lambda_rescale_with_one_level() {
+        // belief 3x optimistic, all samples at one parallelism level:
+        // only λ is identifiable, so the re-fit must be a rescale
+        let truth = UslParams::new(0.02, 0.0001, 20.0);
+        let mut belief = predictor(0.02, 0.0001, 60.0);
+        let mut fitter = OnlineUslFitter::new(RecalibrateConfig::default());
+        let swaps = drive(&mut fitter, &mut belief, &truth, 4, 30);
+        assert!(swaps >= 1, "3x drift must trigger");
+        assert_eq!(fitter.refits()[0].method, "rescale");
+        let lambda = belief.params.lambda;
+        assert!(
+            (lambda - 20.0).abs() / 20.0 < 0.05,
+            "rescaled λ must land on the truth: {lambda}"
+        );
+        assert!((belief.params.sigma - 0.02).abs() < 1e-12, "σ untouched");
+    }
+
+    #[test]
+    fn three_levels_earn_a_full_fit() {
+        let truth = UslParams::new(0.3, 0.01, 25.0);
+        let mut belief = predictor(0.02, 0.0001, 60.0);
+        let mut fitter = OnlineUslFitter::new(RecalibrateConfig::default());
+        // visit three parallelism levels, saturated at each
+        for (i, n) in [2usize, 2, 4, 4, 8, 8, 8, 8, 8].iter().enumerate() {
+            let observed = truth.throughput(*n as f64);
+            let sample = UslSample::new(*n, observed, observed * 2.0);
+            if let Some(p) = fitter.observe(i as f64, sample, &belief) {
+                belief = p;
+            }
+        }
+        let last = fitter.refits().last().expect("drift must refit");
+        assert_eq!(last.method, "fit", "3 distinct levels ⇒ full USL fit");
+        assert!(
+            (belief.params.lambda - 25.0).abs() / 25.0 < 0.1,
+            "noise-free samples recover λ: {:?}",
+            belief.params
+        );
+        assert!((belief.params.sigma - 0.3).abs() < 0.1, "{:?}", belief.params);
+    }
+
+    #[test]
+    fn unsteady_and_demand_bound_samples_stay_out_of_the_window() {
+        let mut fitter = OnlineUslFitter::new(RecalibrateConfig::default());
+        let belief = predictor(0.02, 0.0001, 20.0);
+        // demand-bound: served == demand
+        fitter.observe(0.0, UslSample::new(2, 10.0, 10.0), &belief);
+        // mid-transition
+        fitter.observe(1.0, UslSample::new(2, 10.0, 99.0).with_steady(false), &belief);
+        assert_eq!(fitter.window.len(), 0);
+        assert_eq!(fitter.all.len(), 2, "the trace still records everything");
+        // capacity-bound and steady: admitted
+        fitter.observe(2.0, UslSample::new(2, 10.0, 99.0), &belief);
+        assert_eq!(fitter.window.len(), 1);
+    }
+
+    #[test]
+    fn window_evicts_oldest() {
+        let config = RecalibrateConfig {
+            window: 4,
+            ..Default::default()
+        };
+        let mut fitter = OnlineUslFitter::new(config);
+        let belief = predictor(0.02, 0.0001, 20.0);
+        for i in 0..10 {
+            fitter.observe(i as f64, UslSample::new(2, 30.0 + i as f64, 99.0), &belief);
+        }
+        assert_eq!(fitter.window.len(), 4);
+        assert!((fitter.window.front().unwrap().served_rate - 36.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cooldown_spaces_refits() {
+        let truth = UslParams::new(0.02, 0.0001, 20.0);
+        let mut belief = predictor(0.02, 0.0001, 200.0); // absurdly stale
+        let config = RecalibrateConfig {
+            cooldown_ticks: 10,
+            ..Default::default()
+        };
+        let mut fitter = OnlineUslFitter::new(config);
+        // keep the observations 10x off the *original* belief but let the
+        // belief update: after the first swap the model is right and no
+        // further refits should fire at all
+        let swaps = drive(&mut fitter, &mut belief, &truth, 4, 40);
+        assert_eq!(swaps, 1, "one swap repairs a pure λ error");
+    }
+
+    #[test]
+    fn refit_sequence_is_bit_deterministic() {
+        let run = || {
+            let truth = UslParams::new(0.3, 0.01, 25.0);
+            let mut belief = predictor(0.02, 0.0001, 60.0);
+            let mut fitter = OnlineUslFitter::new(RecalibrateConfig::default());
+            for i in 0..40 {
+                let n = 2 + (i % 3) * 3; // levels 2, 5, 8
+                let observed = truth.throughput(n as f64) * (1.0 + 0.01 * (i % 5) as f64);
+                let sample = UslSample::new(n, observed, observed * 2.0);
+                if let Some(p) = fitter.observe(i as f64, sample, &belief) {
+                    belief = p;
+                }
+            }
+            fitter
+                .into_trace()
+                .refits
+                .iter()
+                .map(|r| {
+                    (
+                        r.t.to_bits(),
+                        r.params.sigma.to_bits(),
+                        r.params.kappa.to_bits(),
+                        r.params.lambda.to_bits(),
+                        r.method,
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let a = run();
+        assert!(!a.is_empty());
+        assert_eq!(a, run(), "same inputs ⇒ bit-identical fit sequence");
+    }
+}

@@ -34,12 +34,15 @@
 //! calibrated simulator drives everything).
 //!
 //! The repository README covers the layer map and quickstart;
-//! `docs/ARCHITECTURE.md` documents the three extension seams —
+//! `docs/ARCHITECTURE.md` documents the four extension seams —
 //! [`PlatformPlugin`](pilot::PlatformPlugin) /
 //! [`PluginRegistry`](pilot::PluginRegistry),
 //! [`ScalingTarget`](insight::ScalingTarget) /
-//! [`ControlLoop`](insight::ControlLoop), and
-//! [`Axis`](insight::Axis) / `Scenario::extra` — with recipes and the
+//! [`ControlLoop`](insight::ControlLoop),
+//! [`Axis`](insight::Axis) / `Scenario::extra`, and
+//! [`OnlineUslFitter`](insight::OnlineUslFitter) /
+//! [`ScalingTarget::observe_interval`](insight::ScalingTarget::observe_interval)
+//! (the online-recalibration feedback path) — with recipes and the
 //! conformance tests that enforce them.
 
 pub mod broker;

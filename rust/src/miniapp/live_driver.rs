@@ -21,7 +21,7 @@ use super::platform::{PlatformUnderTest, Scenario};
 use super::trace::{next_run_id, MessageTrace, RunSummary, RunTrace};
 use crate::broker::{BackoffController, BrokerError};
 use crate::engine::StepEngine;
-use crate::pilot::{PilotJob, PilotStatus, ResizePlan};
+use crate::pilot::{PilotJob, PilotState, PilotStatus, ResizePlan, ResizeSemantics};
 use crate::serverless::EventSourceMapping;
 use crate::sim::{SharedClock, SimClock, WallClock};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -178,6 +178,12 @@ pub struct LivePilot {
     now: f64,
     /// The processing pilot's control handle (resize target).
     pilot: PilotJob,
+    /// Broker-driven stacks only
+    /// ([`PlatformKind::broker_driven`](super::platform::PlatformKind::broker_driven)):
+    /// the broker pilot whose shard count follows every resize, so the
+    /// loop's decisions become live `set_shards`/`set_partitions`
+    /// repartitions.
+    broker_pilot: Option<PilotJob>,
     /// Most recent per-message total cost (capacity estimation).
     last_cost: f64,
 }
@@ -198,6 +204,13 @@ impl LivePilot {
         });
         let msg = generator.next_message(next_run_id(), 0.0);
         let pilot = platform.processing_pilot().clone();
+        // broker-driven stacks keep shards == consumers through every
+        // resize: capture the broker pilot as the co-actuated handle
+        let broker_pilot = if scenario.platform.broker_driven().is_some() {
+            platform.broker_pilot().cloned()
+        } else {
+            None
+        };
         let parallelism = pilot.parallelism();
         Ok(Self {
             platform,
@@ -209,6 +222,7 @@ impl LivePilot {
             model_key: format!("autoscale-live-{}", scenario.seed),
             now: 0.0,
             pilot,
+            broker_pilot,
             last_cost: 0.0,
         })
     }
@@ -226,6 +240,23 @@ impl LivePilot {
     /// Control-plane read side: the processing pilot's live status.
     pub fn status(&self) -> PilotStatus {
         self.pilot.status()
+    }
+
+    /// The co-actuated broker pilot of a broker-driven stack.
+    pub fn broker_pilot(&self) -> Option<&PilotJob> {
+        self.broker_pilot.as_ref()
+    }
+
+    /// Whether any backing pilot — the processing pilot, or the broker
+    /// pilot of a broker-driven stack — is mid-transition.  The control
+    /// loop defers decisions (and fit samples) until every transition
+    /// lands.
+    pub fn is_resizing(&self) -> bool {
+        self.pilot.status().state == PilotState::Resizing
+            || self
+                .broker_pilot
+                .as_ref()
+                .is_some_and(|bp| bp.status().state == PilotState::Resizing)
     }
 
     /// Short label of the platform under test ("lambda", "dask", ...).
@@ -250,8 +281,31 @@ impl LivePilot {
     /// window; otherwise new lanes come up busy until the deadline while
     /// the old capacity keeps serving, and on scale-down the least-busy
     /// lanes survive (the rest drain away).
+    ///
+    /// On a broker-driven stack the compute pilot commits first (it may
+    /// clamp), then the broker reshards to the realized parallelism so
+    /// shards == consumers survives every transition (the AWS invariant);
+    /// the combined plan carries the slower of the two transition windows
+    /// and reports [`ResizeSemantics::Repartition`] — or `Throttle`, when
+    /// the compute side clamped, so the loop still learns the envelope.
     pub fn resize(&mut self, to: usize) -> Result<ResizePlan, String> {
-        let plan = self.pilot.resize(to).map_err(|e| e.to_string())?;
+        let plan = match &self.broker_pilot {
+            Some(bp) => {
+                let pplan = self.pilot.resize(to).map_err(|e| e.to_string())?;
+                let bplan = bp.resize(pplan.to).map_err(|e| e.to_string())?;
+                ResizePlan {
+                    from: pplan.from,
+                    to: pplan.to,
+                    transition_s: pplan.transition_s.max(bplan.transition_s),
+                    semantics: if pplan.semantics == ResizeSemantics::Throttle {
+                        ResizeSemantics::Throttle
+                    } else {
+                        ResizeSemantics::Repartition
+                    },
+                }
+            }
+            None => self.pilot.resize(to).map_err(|e| e.to_string())?,
+        };
         if plan.semantics == crate::pilot::ResizeSemantics::Restart && plan.is_change() {
             let ready = self.now + plan.transition_s;
             self.lanes.clear();

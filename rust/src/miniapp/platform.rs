@@ -42,6 +42,15 @@ pub enum PlatformKind {
     /// platform): provisioned as a Kinesis broker + that platform's
     /// processing pilot.
     Plugin(Platform),
+    /// A **broker-driven** stack: the named broker pilot (kinesis, kafka)
+    /// fronts its ecosystem's default processing platform (kinesis →
+    /// lambda, kafka → dask), and the *broker's* shard count is the
+    /// control loop's resize target — `autoscale --live --platform
+    /// kafka|kinesis` turns the broker plugins' `set_shards` /
+    /// `set_partitions` repartition plans into first-class loop
+    /// actuations, with the compute fleet tracking the shard count
+    /// (consumers == shards).
+    Broker(Platform),
 }
 
 impl PlatformKind {
@@ -51,7 +60,7 @@ impl PlatformKind {
             Self::DaskWrangler => "kafka/dask(wrangler)",
             Self::DaskStampede2 => "kafka/dask(stampede2)",
             Self::Edge => "edge/greengrass",
-            Self::Plugin(p) => p.name(),
+            Self::Plugin(p) | Self::Broker(p) => p.name(),
         }
     }
 
@@ -77,7 +86,12 @@ impl PlatformKind {
             Platform::DASK => Self::DaskWrangler,
             Platform::EDGE => Self::Edge,
             other if registry.get(other).is_some_and(|p| p.streams()) => Self::Plugin(other),
-            _ => return None, // pure brokers / bag-of-tasks pools don't stream
+            // pure broker plugins anchor a broker-driven stack: the
+            // broker's shard count becomes the loop's resize target
+            other if registry.get(other).is_some_and(|p| p.provisions_broker()) => {
+                Self::Broker(other)
+            }
+            _ => return None, // bag-of-tasks pools don't stream
         })
     }
 
@@ -88,6 +102,22 @@ impl PlatformKind {
             Self::DaskWrangler | Self::DaskStampede2 => Platform::DASK,
             Self::Edge => Platform::EDGE,
             Self::Plugin(p) => p,
+            Self::Broker(b) => {
+                if b == Platform::KAFKA {
+                    Platform::DASK
+                } else {
+                    Platform::LAMBDA
+                }
+            }
+        }
+    }
+
+    /// For broker-driven stacks, the broker platform whose shard count the
+    /// control loop reshards; `None` for every compute-anchored stack.
+    pub fn broker_driven(self) -> Option<Platform> {
+        match self {
+            Self::Broker(b) => Some(b),
+            _ => None,
         }
     }
 
@@ -207,6 +237,29 @@ impl Scenario {
                     .with_memory_mb(self.memory_mb)
                     .with_seed(self.seed),
             ],
+            PlatformKind::Broker(b) => {
+                // the broker pilot is the loop's resize target; its
+                // ecosystem's default processing platform consumes the
+                // shards at matching parallelism (consumers == shards)
+                let compute = if b == Platform::KAFKA {
+                    PilotDescription::new(Platform::DASK)
+                        .with_parallelism(self.partitions)
+                        .with_machine(crate::pilot::MachineKind::Wrangler)
+                        .with_max_nodes(64)
+                        .with_seed(self.seed)
+                } else {
+                    PilotDescription::new(Platform::LAMBDA)
+                        .with_parallelism(self.partitions.min(30))
+                        .with_memory_mb(self.memory_mb)
+                        .with_seed(self.seed)
+                };
+                vec![
+                    PilotDescription::new(b)
+                        .with_parallelism(self.partitions)
+                        .with_seed(self.seed),
+                    compute,
+                ]
+            }
         }
     }
 }
@@ -220,6 +273,10 @@ pub struct PlatformUnderTest {
     /// The pilot whose backend exposed the processor — the control plane's
     /// resize target.
     processing: PilotJob,
+    /// The pilot that stood up the broker (on co-located stacks this is
+    /// the processing pilot itself) — the co-actuated resize handle of a
+    /// broker-driven stack.
+    broker_job: PilotJob,
 }
 
 impl PlatformUnderTest {
@@ -234,12 +291,14 @@ impl PlatformUnderTest {
         // HPC stacks; serverless pilots simply never touch it
         let service = PilotComputeService::new(clock, engine)
             .with_shared_fs(SharedResource::new("lustre", scenario.lustre));
-        let mut broker: Option<Arc<dyn Broker>> = None;
+        let mut broker: Option<(Arc<dyn Broker>, PilotJob)> = None;
         let mut processing: Option<(PilotJob, Arc<dyn StreamProcessor>)> = None;
         for desc in scenario.pilot_descriptions() {
             let job = service.submit_pilot(desc).map_err(|e| e.to_string())?;
             if broker.is_none() {
-                broker = job.broker();
+                if let Some(b) = job.broker() {
+                    broker = Some((b, job.clone()));
+                }
             }
             if processing.is_none() {
                 if let Some(p) = job.processor() {
@@ -249,16 +308,26 @@ impl PlatformUnderTest {
         }
         let (processing, processor) =
             processing.ok_or("scenario provisioned no processing pilot")?;
+        let (broker, broker_job) = broker.ok_or("scenario provisioned no broker pilot")?;
         Ok(Self {
             service,
-            broker: broker.ok_or("scenario provisioned no broker pilot")?,
+            broker,
             processor,
             processing,
+            broker_job,
         })
     }
 
     pub fn broker(&self) -> Arc<dyn Broker> {
         Arc::clone(&self.broker)
+    }
+
+    /// The *dedicated* broker pilot — a broker-driven stack's co-actuated
+    /// resize handle.  `None` on co-located stacks (the edge), where the
+    /// broker lives inside the processing pilot and resizing it
+    /// separately would double-actuate the same backend.
+    pub fn broker_pilot(&self) -> Option<&PilotJob> {
+        (self.broker_job.id != self.processing.id).then_some(&self.broker_job)
     }
 
     /// The service that provisioned this platform — the control plane
@@ -381,9 +450,17 @@ mod tests {
             PlatformKind::parse("microbatch"),
             Some(PlatformKind::Plugin(Platform::FLINK))
         );
-        // pure brokers and bag-of-tasks pools are not streaming stacks
-        assert_eq!(PlatformKind::parse("kinesis"), None);
-        assert_eq!(PlatformKind::parse("kafka"), None);
+        // pure brokers anchor broker-driven stacks: the broker's shard
+        // count is the control loop's resize target
+        assert_eq!(
+            PlatformKind::parse("kinesis"),
+            Some(PlatformKind::Broker(Platform::KINESIS))
+        );
+        assert_eq!(
+            PlatformKind::parse("kafka"),
+            Some(PlatformKind::Broker(Platform::KAFKA))
+        );
+        // bag-of-tasks pools still don't stream
         assert_eq!(PlatformKind::parse("local"), None);
     }
 
@@ -396,9 +473,44 @@ mod tests {
             PlatformKind::DaskStampede2,
             PlatformKind::Edge,
             PlatformKind::Plugin(Platform::FLINK),
+            PlatformKind::Broker(Platform::KINESIS),
+            PlatformKind::Broker(Platform::KAFKA),
         ] {
             assert_eq!(PlatformKind::parse(kind.label()), Some(kind), "{kind:?}");
         }
+    }
+
+    #[test]
+    fn broker_driven_stack_builds_with_a_co_actuated_broker_pilot() {
+        // `--platform kafka`: kafka broker pilot (the resize target) +
+        // dask consumers at matching parallelism; `--platform kinesis`:
+        // kinesis + lambda
+        let clock = Arc::new(SimClock::new()) as SharedClock;
+        let s = Scenario {
+            platform: PlatformKind::Broker(Platform::KAFKA),
+            centroids: 16,
+            ..Scenario::default()
+        };
+        assert_eq!(s.platform.broker_driven(), Some(Platform::KAFKA));
+        assert_eq!(s.platform.processing_platform(), Platform::DASK);
+        let p = PlatformUnderTest::build(&s, engine(), Arc::clone(&clock)).unwrap();
+        assert_eq!(p.broker().kind(), "kafka");
+        assert_eq!(p.label(), "dask");
+        let bp = p.broker_pilot().expect("broker pilot handle");
+        assert_eq!(bp.platform(), Platform::KAFKA);
+        assert_eq!(bp.parallelism(), s.partitions);
+        assert_eq!(p.processing_pilot().parallelism(), s.partitions);
+
+        let s2 = Scenario {
+            platform: PlatformKind::Broker(Platform::KINESIS),
+            centroids: 16,
+            ..Scenario::default()
+        };
+        assert_eq!(s2.platform.processing_platform(), Platform::LAMBDA);
+        let p2 = PlatformUnderTest::build(&s2, engine(), clock).unwrap();
+        assert_eq!(p2.broker().kind(), "kinesis");
+        assert_eq!(p2.label(), "lambda");
+        assert_eq!(p2.broker_pilot().unwrap().platform(), Platform::KINESIS);
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //!    which over-weights small-T points — the same reason the USL R
 //!    package uses `nls`).
 //!
-//! Both enforce σ, κ ≥ 0 by clamping.
+//! Both enforce σ, κ ≥ 0 by clamping, and both accept per-observation
+//! weights ([`fit_weighted`]) — the online recalibrator
+//! (`insight::recalibrate`) feeds EWMA-recency weights so a drifting live
+//! platform's newest samples dominate the re-fit.
 
 use super::model::UslParams;
 use crate::util::stats;
@@ -58,6 +61,16 @@ fn validate(obs: &[Obs], min: usize) -> Result<(), FitError> {
     Ok(())
 }
 
+fn validate_weights(obs: &[Obs], weights: &[f64]) -> Result<(), FitError> {
+    if weights.len() != obs.len() {
+        return Err(FitError::BadData);
+    }
+    if weights.iter().any(|w| !w.is_finite() || *w <= 0.0) {
+        return Err(FitError::BadData);
+    }
+    Ok(())
+}
+
 fn metrics(params: &UslParams, obs: &[Obs]) -> (f64, f64) {
     let pred: Vec<f64> = obs.iter().map(|o| params.throughput(o.n)).collect();
     let actual: Vec<f64> = obs.iter().map(|o| o.t).collect();
@@ -67,23 +80,24 @@ fn metrics(params: &UslParams, obs: &[Obs]) -> (f64, f64) {
     )
 }
 
-/// OLS with intercept on two regressors: y = b0 + b1 x1 + b2 x2.
-fn ols3(x1: &[f64], x2: &[f64], y: &[f64]) -> (f64, f64, f64) {
-    let n = y.len() as f64;
-    // normal equations, 3x3 symmetric
-    let s1: f64 = x1.iter().sum();
-    let s2: f64 = x2.iter().sum();
-    let s11: f64 = x1.iter().map(|v| v * v).sum();
-    let s22: f64 = x2.iter().map(|v| v * v).sum();
-    let s12: f64 = x1.iter().zip(x2).map(|(a, b)| a * b).sum();
-    let sy: f64 = y.iter().sum();
-    let sy1: f64 = y.iter().zip(x1).map(|(a, b)| a * b).sum();
-    let sy2: f64 = y.iter().zip(x2).map(|(a, b)| a * b).sum();
+/// Weighted OLS with intercept on two regressors: minimize
+/// Σ w (y − b0 − b1 x1 − b2 x2)².  Uniform weights reduce to plain OLS.
+fn ols3(x1: &[f64], x2: &[f64], y: &[f64], w: &[f64]) -> (f64, f64, f64) {
+    // weighted normal equations, 3x3 symmetric
+    let sw: f64 = w.iter().sum();
+    let s1: f64 = x1.iter().zip(w).map(|(a, w)| a * w).sum();
+    let s2: f64 = x2.iter().zip(w).map(|(a, w)| a * w).sum();
+    let s11: f64 = x1.iter().zip(w).map(|(a, w)| a * a * w).sum();
+    let s22: f64 = x2.iter().zip(w).map(|(a, w)| a * a * w).sum();
+    let s12: f64 = x1.iter().zip(x2).zip(w).map(|((a, b), w)| a * b * w).sum();
+    let sy: f64 = y.iter().zip(w).map(|(a, w)| a * w).sum();
+    let sy1: f64 = y.iter().zip(x1).zip(w).map(|((a, b), w)| a * b * w).sum();
+    let sy2: f64 = y.iter().zip(x2).zip(w).map(|((a, b), w)| a * b * w).sum();
 
-    // solve [n s1 s2; s1 s11 s12; s2 s12 s22] b = [sy sy1 sy2]
-    let a = [[n, s1, s2], [s1, s11, s12], [s2, s12, s22]];
+    // solve [sw s1 s2; s1 s11 s12; s2 s12 s22] b = [sy sy1 sy2]
+    let a = [[sw, s1, s2], [s1, s11, s12], [s2, s12, s22]];
     let rhs = [sy, sy1, sy2];
-    solve3(a, rhs).unwrap_or((sy / n, 0.0, 0.0).into()).into()
+    solve3(a, rhs).unwrap_or((sy / sw, 0.0, 0.0).into()).into()
 }
 
 struct Triple(f64, f64, f64);
@@ -134,13 +148,20 @@ fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<Triple> {
 
 /// Gunther's linearized least-squares fit.
 pub fn fit_linearized(obs: &[Obs]) -> Result<UslFit, FitError> {
+    fit_linearized_w(obs, &vec![1.0; obs.len()])
+}
+
+fn fit_linearized_w(obs: &[Obs], weights: &[f64]) -> Result<UslFit, FitError> {
     validate(obs, 3)?;
+    validate_weights(obs, weights)?;
     let x1: Vec<f64> = obs.iter().map(|o| o.n - 1.0).collect();
     let x2: Vec<f64> = obs.iter().map(|o| o.n * (o.n - 1.0)).collect();
     let y: Vec<f64> = obs.iter().map(|o| o.n / o.t).collect();
-    let (b0, b1, b2) = ols3(&x1, &x2, &y);
+    let (b0, b1, b2) = ols3(&x1, &x2, &y, weights);
     // y = 1/λ + (σ/λ) x1 + (κ/λ) x2
-    let lambda = if b0 > 1e-12 { 1.0 / b0 } else {
+    let lambda = if b0 > 1e-12 {
+        1.0 / b0
+    } else {
         // degenerate intercept: fall back to λ from the N=1-ish point
         obs.iter()
             .min_by(|a, b| a.n.partial_cmp(&b.n).unwrap())
@@ -160,20 +181,26 @@ pub fn fit_linearized(obs: &[Obs]) -> Result<UslFit, FitError> {
 /// Levenberg–Marquardt refinement in throughput space, seeded by the
 /// linearized fit.
 pub fn fit_lm(obs: &[Obs]) -> Result<UslFit, FitError> {
-    let seed = fit_linearized(obs)?;
+    fit_lm_w(obs, &vec![1.0; obs.len()])
+}
+
+fn fit_lm_w(obs: &[Obs], weights: &[f64]) -> Result<UslFit, FitError> {
+    let seed = fit_linearized_w(obs, weights)?;
+    let seed_p = [seed.params.sigma, seed.params.kappa, seed.params.lambda];
+    let seed_sse = sse(seed_p, obs, weights);
     let mut p = [
         seed.params.sigma.max(1e-9),
         seed.params.kappa.max(1e-12),
         seed.params.lambda,
     ];
     let mut mu = 1e-3;
-    let mut last_sse = sse(p, obs);
+    let mut last_sse = sse(p, obs, weights);
 
     for _iter in 0..200 {
         // Jacobian (residual = T_pred - T_obs) via analytic partials
         let mut jtj = [[0.0f64; 3]; 3];
         let mut jtr = [0.0f64; 3];
-        for o in obs {
+        for (o, w) in obs.iter().zip(weights) {
             let n = o.n;
             let d = 1.0 + p[0] * (n - 1.0) + p[1] * n * (n - 1.0);
             let tp = p[2] * n / d;
@@ -185,9 +212,9 @@ pub fn fit_lm(obs: &[Obs]) -> Result<UslFit, FitError> {
                 n / d,
             ];
             for i in 0..3 {
-                jtr[i] += g[i] * r;
+                jtr[i] += w * g[i] * r;
                 for j in 0..3 {
-                    jtj[i][j] += g[i] * g[j];
+                    jtj[i][j] += w * g[i] * g[j];
                 }
             }
         }
@@ -204,7 +231,7 @@ pub fn fit_lm(obs: &[Obs]) -> Result<UslFit, FitError> {
             (p[1] + d1).max(0.0),
             (p[2] + d2).max(1e-12),
         ];
-        let cand_sse = sse(cand, obs);
+        let cand_sse = sse(cand, obs, weights);
         if cand_sse < last_sse {
             let rel = (last_sse - cand_sse) / last_sse.max(1e-300);
             p = cand;
@@ -222,8 +249,11 @@ pub fn fit_lm(obs: &[Obs]) -> Result<UslFit, FitError> {
     }
     let params = UslParams::new(p[0], p[1], p[2]);
     let (r2, rmse) = metrics(&params, obs);
-    // keep whichever fit is better in throughput space (LM should win)
-    if rmse <= seed.rmse {
+    // keep whichever fit is better in (weighted) throughput space — LM
+    // should win; the reported r2/rmse stay unweighted for comparability.
+    // `last_sse` already tracks the final candidate's weighted SSE, so no
+    // extra passes over the window are needed here.
+    if last_sse <= seed_sse {
         Ok(UslFit {
             params,
             r2,
@@ -235,12 +265,13 @@ pub fn fit_lm(obs: &[Obs]) -> Result<UslFit, FitError> {
     }
 }
 
-fn sse(p: [f64; 3], obs: &[Obs]) -> f64 {
+fn sse(p: [f64; 3], obs: &[Obs], weights: &[f64]) -> f64 {
     obs.iter()
-        .map(|o| {
+        .zip(weights)
+        .map(|(o, w)| {
             let d = 1.0 + p[0] * (o.n - 1.0) + p[1] * o.n * (o.n - 1.0);
             let tp = p[2] * o.n / d;
-            (tp - o.t) * (tp - o.t)
+            w * (tp - o.t) * (tp - o.t)
         })
         .sum()
 }
@@ -248,6 +279,14 @@ fn sse(p: [f64; 3], obs: &[Obs]) -> f64 {
 /// Default fit = LM with linearized seeding (the USL R package approach).
 pub fn fit(obs: &[Obs]) -> Result<UslFit, FitError> {
     fit_lm(obs)
+}
+
+/// Weighted default fit: both stages minimize the `weights`-scaled error.
+/// Weights must be positive and finite, one per observation — the online
+/// recalibrator passes recency weights so the newest live samples
+/// dominate.  Uniform weights reproduce [`fit`] exactly.
+pub fn fit_weighted(obs: &[Obs], weights: &[f64]) -> Result<UslFit, FitError> {
+    fit_lm_w(obs, weights)
 }
 
 #[cfg(test)]
@@ -338,6 +377,60 @@ mod tests {
             Obs::new(4.0, 20.0),
         ];
         assert!(matches!(fit(&obs), Err(FitError::BadData)));
+    }
+
+    #[test]
+    fn uniform_weights_reproduce_the_unweighted_fit() {
+        let truth = UslParams::new(0.3, 0.01, 50.0);
+        let obs = synth(truth, &NS, 0.03, 2);
+        let plain = fit(&obs).unwrap();
+        let weighted = fit_weighted(&obs, &vec![1.0; obs.len()]).unwrap();
+        assert_eq!(plain.params.sigma.to_bits(), weighted.params.sigma.to_bits());
+        assert_eq!(plain.params.kappa.to_bits(), weighted.params.kappa.to_bits());
+        assert_eq!(
+            plain.params.lambda.to_bits(),
+            weighted.params.lambda.to_bits()
+        );
+    }
+
+    #[test]
+    fn recency_weights_favor_the_recent_regime() {
+        // two regimes at every N: stale observations from a λ=40 platform,
+        // then fresh ones from the λ=20 platform it degraded into.  Heavy
+        // weights on the fresh half must pull λ to the recent regime.
+        let old = UslParams::new(0.05, 0.001, 40.0);
+        let new = UslParams::new(0.05, 0.001, 20.0);
+        let mut obs = Vec::new();
+        let mut weights = Vec::new();
+        for &n in &NS {
+            obs.push(Obs::new(n, old.throughput(n)));
+            weights.push(0.01);
+        }
+        for &n in &NS {
+            obs.push(Obs::new(n, new.throughput(n)));
+            weights.push(1.0);
+        }
+        let f = fit_weighted(&obs, &weights).unwrap();
+        assert!(
+            (f.params.lambda - 20.0).abs() < 2.0,
+            "λ must track the heavily-weighted regime: {:?}",
+            f.params
+        );
+    }
+
+    #[test]
+    fn bad_weights_rejected() {
+        let truth = UslParams::new(0.1, 0.001, 10.0);
+        let obs = synth(truth, &NS, 0.0, 1);
+        assert!(matches!(
+            fit_weighted(&obs, &[1.0]),
+            Err(FitError::BadData)
+        ));
+        let mut w = vec![1.0; obs.len()];
+        w[2] = 0.0;
+        assert!(matches!(fit_weighted(&obs, &w), Err(FitError::BadData)));
+        w[2] = f64::NAN;
+        assert!(matches!(fit_weighted(&obs, &w), Err(FitError::BadData)));
     }
 
     #[test]

@@ -9,5 +9,5 @@ pub mod model;
 
 pub use baselines::{fit_amdahl, fit_linear};
 pub use eval::{rmse_vs_train_size, EvalPoint};
-pub use fit::{fit, fit_linearized, fit_lm, FitError, Obs, UslFit};
+pub use fit::{fit, fit_linearized, fit_lm, fit_weighted, FitError, Obs, UslFit};
 pub use model::UslParams;

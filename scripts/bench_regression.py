@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare freshly produced BENCH_*.json reports
+against the baselines committed at the repository root.
+
+Each report (written by rust/benches/common.rs::write_bench_json) carries:
+
+  - "schema": envelope version; candidate and baseline must match.
+  - "gate":   dotted paths of the fields this bench wants enforced
+              (higher-is-better).  ``fits[*].r2`` addresses a field inside
+              every element of an array.
+
+The gate fails when any gated value in the candidate drops more than
+``--tolerance`` (default 20%) below the committed baseline.  Every shared
+numeric field is printed as a delta table either way, so the perf
+trajectory stays visible in the CI log even when nothing regresses.
+
+Usage:
+    python3 scripts/bench_regression.py --baseline-dir . --candidate-dir bench-out
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+TOLERANCE = 0.20
+
+
+def walk_numeric(value, prefix=""):
+    """Yield (dotted_path, number) for every numeric leaf."""
+    if isinstance(value, bool):
+        return
+    if isinstance(value, (int, float)):
+        yield prefix, float(value)
+    elif isinstance(value, dict):
+        for key, child in sorted(value.items()):
+            path = f"{prefix}.{key}" if prefix else key
+            yield from walk_numeric(child, path)
+    elif isinstance(value, list):
+        for i, child in enumerate(value):
+            yield from walk_numeric(child, f"{prefix}[{i}]")
+
+
+def gate_pattern_matches(pattern, path):
+    """Match a gate pattern like ``fits[*].r2`` against ``fits[2].r2``."""
+    if pattern == path:
+        return True
+    if "[*]" not in pattern:
+        return False
+    prefix, _, suffix = pattern.partition("[*]")
+    if not path.startswith(prefix + "["):
+        return False
+    rest = path[len(prefix) + 1 :]
+    index, bracket, tail = rest.partition("]")
+    return bracket == "]" and index.isdigit() and tail == suffix
+
+
+def compare_file(name, baseline, candidate, tolerance):
+    """Return (rows, failures) for one bench report pair."""
+    rows, failures = [], []
+    if baseline.get("schema") != candidate.get("schema"):
+        failures.append(
+            f"{name}: schema mismatch (baseline {baseline.get('schema')} vs "
+            f"candidate {candidate.get('schema')}) - refresh the committed baseline"
+        )
+        return rows, failures
+    gates = baseline.get("gate", [])
+    base_values = dict(walk_numeric(baseline))
+    cand_values = dict(walk_numeric(candidate))
+    for path in sorted(set(base_values) & set(cand_values)):
+        if path == "schema":
+            continue
+        old, new = base_values[path], cand_values[path]
+        delta = (new - old) / abs(old) * 100.0 if old != 0 else float("inf")
+        gated = any(gate_pattern_matches(g, path) for g in gates)
+        status = "gated" if gated else ""
+        if gated and old > 0 and new < old * (1.0 - tolerance):
+            status = "FAIL"
+            failures.append(
+                f"{name}: {path} regressed {old:.4g} -> {new:.4g} "
+                f"({delta:+.1f}%, tolerance -{tolerance * 100:.0f}%)"
+            )
+        rows.append((path, old, new, delta, status))
+    for path in sorted(set(base_values) - set(cand_values)):
+        if any(gate_pattern_matches(g, path) for g in gates):
+            failures.append(f"{name}: gated field {path} missing from the candidate")
+    return rows, failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default=".")
+    ap.add_argument("--candidate-dir", default="bench-out")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    args = ap.parse_args()
+
+    baselines = sorted(glob.glob(os.path.join(args.baseline_dir, "BENCH_*.json")))
+    if not baselines:
+        print(f"no BENCH_*.json baselines under {args.baseline_dir}", file=sys.stderr)
+        return 1
+
+    all_failures = []
+    for baseline_path in baselines:
+        name = os.path.basename(baseline_path)
+        candidate_path = os.path.join(args.candidate_dir, name)
+        print(f"\n== {name} ==")
+        if not os.path.exists(candidate_path):
+            all_failures.append(
+                f"{name}: no candidate at {candidate_path} - the bench stopped emitting"
+            )
+            print(f"  MISSING candidate ({candidate_path})")
+            continue
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+        with open(candidate_path) as f:
+            candidate = json.load(f)
+        rows, failures = compare_file(name, baseline, candidate, args.tolerance)
+        all_failures.extend(failures)
+        print(f"  {'field':<28} {'baseline':>12} {'candidate':>12} {'delta':>9}  gate")
+        for path, old, new, delta, status in rows:
+            delta_s = f"{delta:+.1f}%" if delta != float("inf") else "n/a"
+            print(f"  {path:<28} {old:>12.4g} {new:>12.4g} {delta_s:>9}  {status}")
+
+    extra = sorted(
+        set(os.path.basename(p) for p in glob.glob(os.path.join(args.candidate_dir, "BENCH_*.json")))
+        - set(os.path.basename(p) for p in baselines)
+    )
+    for name in extra:
+        print(f"\n== {name} == (new bench, no committed baseline yet - commit one)")
+
+    if all_failures:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for failure in all_failures:
+            print(f"  - {failure}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
