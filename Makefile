@@ -6,7 +6,7 @@
 # The optional PJRT path needs the AOT artifacts first:
 #   make artifacts  (requires python + jax; see python/compile/aot.py)
 
-.PHONY: all build test clippy bench python-test artifacts clean
+.PHONY: all build test lint clippy bench python-test artifacts clean
 
 all: build test
 
@@ -15,6 +15,10 @@ build:
 
 test:
 	cargo test -q
+
+# determinism & invariant static analysis (fails on any unwaived finding)
+lint:
+	cargo run --release -p ps-lint
 
 clippy:
 	cargo clippy --all-targets -- -D warnings

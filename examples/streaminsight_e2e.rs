@@ -26,6 +26,7 @@ use pilot_streaming::util::stats::mean;
 use std::sync::Arc;
 
 fn main() {
+    // ps-lint: allow(wall-clock): end-to-end example reports real wall time of a live PJRT run
     let t0 = std::time::Instant::now();
     let manifest = Manifest::load(&Manifest::default_dir())
         .expect("artifacts/manifest.json missing — run `make artifacts`");

@@ -4,10 +4,12 @@
 
 use super::message::{Message, StoredRecord};
 use std::collections::VecDeque;
+// ps-lint: allow(hot-path-lock): known debt — shard locks are slated for removal in the lock-free sim-core rebuild (ROADMAP)
 use std::sync::Mutex;
 
 /// Append-only log with offset-based fetch and optional retention trimming.
 pub struct Shard {
+    // ps-lint: allow(hot-path-lock): known debt — shard locks are slated for removal in the lock-free sim-core rebuild (ROADMAP)
     inner: Mutex<ShardInner>,
 }
 
@@ -25,6 +27,7 @@ struct ShardInner {
 impl Shard {
     pub fn new(retention: usize) -> Self {
         Self {
+            // ps-lint: allow(hot-path-lock): known debt — shard locks are slated for removal in the lock-free sim-core rebuild (ROADMAP)
             inner: Mutex::new(ShardInner {
                 records: VecDeque::new(),
                 next_offset: 0,

@@ -12,7 +12,7 @@
 use crate::sim::Dist;
 use crate::store::ModelState;
 use crate::util::rng::Pcg32;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 /// Result of one processing step.
@@ -58,7 +58,8 @@ pub type WorkloadKey = (usize, usize);
 /// Simulation engine: draws CPU cost from per-workload calibrated
 /// distributions and bumps the model version without computing numerics.
 pub struct CalibratedEngine {
-    table: HashMap<WorkloadKey, Dist>,
+    // BTreeMap: calibration keys iterate in a stable order (ps-lint R2)
+    table: BTreeMap<WorkloadKey, Dist>,
     /// Fallback cost model used when a key is missing: seconds per
     /// point-centroid pair (the O(n*c) coefficient) + fixed overhead.
     pub per_pair_seconds: f64,
@@ -69,7 +70,7 @@ pub struct CalibratedEngine {
 impl CalibratedEngine {
     pub fn new(seed: u64) -> Self {
         Self {
-            table: HashMap::new(),
+            table: BTreeMap::new(),
             // defaults calibrated against the PJRT CPU engine on this
             // machine (see runtime::calibrate and EXPERIMENTS.md §Perf)
             per_pair_seconds: 2.0e-9,
@@ -84,9 +85,7 @@ impl CalibratedEngine {
     }
 
     pub fn calibrated_keys(&self) -> Vec<WorkloadKey> {
-        let mut ks: Vec<_> = self.table.keys().copied().collect();
-        ks.sort_unstable();
-        ks
+        self.table.keys().copied().collect()
     }
 
     fn cost(&self, n_points: usize, centroids: usize) -> f64 {

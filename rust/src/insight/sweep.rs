@@ -20,6 +20,7 @@ use crate::engine::StepEngine;
 use crate::miniapp::{run_sim, PlatformKind, Scenario};
 use crate::pilot::workers::parallel_indexed_map;
 use crate::usl::Obs;
+// ps-lint: allow(hash-iteration): HashSet used for membership/dedup only below; GroupKey has no Ord (AxisValue) so BTreeSet cannot replace it
 use std::collections::HashSet;
 use std::sync::Arc;
 
@@ -251,6 +252,7 @@ where
 /// (e.g. one returned by [`group_keys`]) to select exactly one curve.
 pub fn group_observations(rows: &[SweepRow], query: &GroupKey) -> Vec<Obs> {
     let selected: Vec<&SweepRow> = rows.iter().filter(|r| query.selects(&r.key)).collect();
+    // ps-lint: allow(hash-iteration): only len() is read — a distinct-count, never iterated
     let distinct: HashSet<&GroupKey> = selected.iter().map(|r| &r.key).collect();
     if distinct.len() > 1 {
         log::warn!(
@@ -270,6 +272,7 @@ pub fn group_observations(rows: &[SweepRow], query: &GroupKey) -> Vec<Obs> {
 /// All distinct group keys in sweep order (order-preserving set — the
 /// scan is O(n), not O(n²)).
 pub fn group_keys(rows: &[SweepRow]) -> Vec<GroupKey> {
+    // ps-lint: allow(hash-iteration): membership test only — output order comes from the rows scan, not the set
     let mut seen: HashSet<&GroupKey> = HashSet::with_capacity(rows.len().min(1024));
     let mut keys = Vec::new();
     for r in rows {

@@ -103,6 +103,7 @@ impl StepEngine for NativeEngine {
                 points.len()
             )));
         }
+        // ps-lint: allow(wall-clock): live ablation engine — cpu_seconds IS a real measurement; sim paths use CalibratedEngine instead
         let start = Instant::now();
         let (centroids, counts, inertia) =
             minibatch_step(points, dim, &model.centroids, &model.counts);

@@ -66,6 +66,7 @@ pub fn run_live(
         let stop = Arc::clone(&stop);
         let clock = Arc::clone(&clock);
         let scenario = scenario.clone();
+        // ps-lint: allow(thread-spawn): live-mode driver intentionally uses real consumer threads against the real broker; sim paths never reach here
         consumers.push(std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
                 let now = clock.now();

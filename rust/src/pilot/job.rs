@@ -274,6 +274,10 @@ impl PilotJob {
             return Err(PilotError::NotRunning(state));
         }
         let plan = self.backend.resize(to)?;
+        debug_assert!(
+            (1..=to).contains(&plan.to) && plan.transition_s >= 0.0,
+            "backend resize plan out of range: {plan:?}"
+        );
         if plan.is_change() {
             self.shared.resize_events.fetch_add(1, Ordering::Relaxed);
             if plan.transition_s > 0.0 {

@@ -43,6 +43,7 @@ impl RuntimeThread {
     /// Spawn a runtime thread serving executions for `manifest`'s artifacts.
     pub fn spawn(manifest: Manifest) -> Self {
         let (tx, rx) = mpsc::channel::<ExecRequest>();
+        // ps-lint: allow(thread-spawn): the PJRT runtime thread is a live OS resource, not sim concurrency; workers.rs owns sim-side threading
         let handle = std::thread::Builder::new()
             .name("pjrt-runtime".into())
             .spawn(move || runtime_main(manifest, rx))

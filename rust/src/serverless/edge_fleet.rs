@@ -47,7 +47,7 @@ use super::edge::{
     EdgeSite, EDGE_BACKHAUL_LATENCY, EDGE_BROKER_LATENCY, EDGE_CPU_EFFICIENCY,
     EDGE_MAX_CONCURRENCY,
 };
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Cloud-region containers available to a fleet's spillover path (the
@@ -181,7 +181,7 @@ impl EdgeFleet {
 /// A message class: the workload coordinates placement keys on.  Two
 /// messages of the same (points, centroids) shape cost the same compute
 /// and are routed identically.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct MessageClass {
     /// Points per message (the paper's MS axis).
     pub points: usize,
@@ -216,7 +216,8 @@ pub enum Placement {
 /// site's break-even, that site treats the class as [`Placement::Spillable`].
 #[derive(Debug, Default)]
 pub struct PlacementPolicy {
-    estimates: HashMap<MessageClass, f64>,
+    // BTreeMap: estimate iteration order is the class order (ps-lint R2)
+    estimates: BTreeMap<MessageClass, f64>,
 }
 
 impl PlacementPolicy {

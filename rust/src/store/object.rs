@@ -6,7 +6,7 @@
 //! out near zero.
 
 use super::{IoReport, ModelState, ModelStore, StoreError};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 /// Object-store latency parameters (S3-class defaults).
@@ -30,14 +30,14 @@ impl Default for ObjectStoreParams {
 /// The S3-like store.
 pub struct ObjectStore {
     params: ObjectStoreParams,
-    objects: Mutex<HashMap<String, ModelState>>,
+    objects: Mutex<BTreeMap<String, ModelState>>,
 }
 
 impl ObjectStore {
     pub fn new(params: ObjectStoreParams) -> Self {
         Self {
             params,
-            objects: Mutex::new(HashMap::new()),
+            objects: Mutex::new(BTreeMap::new()),
         }
     }
 

@@ -8,7 +8,7 @@
 
 use super::{IoReport, ModelState, ModelStore, StoreError};
 use crate::sim::SharedResource;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 /// Lustre-class parameters.
@@ -40,7 +40,7 @@ pub struct SharedFsStore {
     params: SharedFsParams,
     /// The contended resource (shared with Kafka on the same machine).
     fs: Arc<SharedResource>,
-    files: Mutex<HashMap<String, ModelState>>,
+    files: Mutex<BTreeMap<String, ModelState>>,
 }
 
 impl SharedFsStore {
@@ -48,7 +48,7 @@ impl SharedFsStore {
         Self {
             params,
             fs,
-            files: Mutex::new(HashMap::new()),
+            files: Mutex::new(BTreeMap::new()),
         }
     }
 

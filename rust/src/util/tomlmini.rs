@@ -2,8 +2,9 @@
 //!
 //! Supports the subset the config system needs (no `toml` crate offline):
 //! `[table]` and `[table.sub]` headers, `key = value` with strings, ints,
-//! floats, booleans, and homogeneous inline arrays, `#` comments, and bare
-//! or quoted keys.  Unsupported: dates, multi-line strings, inline tables,
+//! floats, booleans, and homogeneous arrays (inline or spanning multiple
+//! lines until the brackets balance), `#` comments, and bare or quoted
+//! keys.  Unsupported: dates, multi-line strings, inline tables,
 //! arrays-of-tables.  Values land in the same [`Json`] value model the rest
 //! of the stack uses, nested by table path.
 
@@ -26,10 +27,13 @@ pub enum TomlError {
 pub fn parse(text: &str) -> Result<Json, TomlError> {
     let mut root: BTreeMap<String, Json> = BTreeMap::new();
     let mut path: Vec<String> = Vec::new();
+    let lines: Vec<&str> = text.lines().collect();
 
-    for (lineno, raw) in text.lines().enumerate() {
-        let lineno = lineno + 1;
-        let line = strip_comment(raw).trim();
+    let mut idx = 0usize;
+    while idx < lines.len() {
+        let lineno = idx + 1;
+        let line = strip_comment(lines[idx]).trim();
+        idx += 1;
         if line.is_empty() {
             continue;
         }
@@ -51,8 +55,17 @@ pub fn parse(text: &str) -> Result<Json, TomlError> {
         }
         let eq = line.find('=').ok_or(TomlError::BadKeyValue(lineno))?;
         let key = unquote_key(line[..eq].trim()).ok_or(TomlError::BadKeyValue(lineno))?;
-        let val_src = line[eq + 1..].trim();
-        let val = parse_value(val_src, lineno)?;
+        let mut val_src = line[eq + 1..].trim().to_string();
+        // multi-line array: join following lines until brackets balance
+        while open_brackets(&val_src) > 0 {
+            let Some(cont) = lines.get(idx) else {
+                return Err(TomlError::BadValue(lineno, val_src));
+            };
+            idx += 1;
+            val_src.push(' ');
+            val_src.push_str(strip_comment(cont).trim());
+        }
+        let val = parse_value(&val_src, lineno)?;
         let table = ensure_table(&mut root, &path, lineno)?;
         if table.contains_key(&key) {
             return Err(TomlError::DuplicateKey(lineno, key));
@@ -60,6 +73,24 @@ pub fn parse(text: &str) -> Result<Json, TomlError> {
         table.insert(key, val);
     }
     Ok(Json::Obj(root))
+}
+
+/// Net count of `[` still open at the end of `s` (brackets inside quoted
+/// strings don't count) — drives multi-line array joining.
+fn open_brackets(s: &str) -> usize {
+    let mut depth = 0i64;
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for ch in s.chars() {
+        match ch {
+            '"' if !prev_escape => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+        prev_escape = ch == '\\' && !prev_escape;
+    }
+    depth.max(0) as usize
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -213,6 +244,16 @@ mod tests {
         assert_eq!(v.get("xs").as_arr().unwrap().len(), 3);
         assert_eq!(v.get("ys").as_arr().unwrap()[1].as_str(), Some("b"));
         assert_eq!(v.get("nested").as_arr().unwrap()[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn multiline_arrays() {
+        let v = parse("xs = [\n  \"a\", # per-entry comment\n  \"b\",\n]\nn = 1\n").unwrap();
+        let xs = v.get("xs").as_arr().unwrap();
+        assert_eq!(xs.len(), 2);
+        assert_eq!(xs[1].as_str(), Some("b"));
+        assert_eq!(v.get("n").as_i64(), Some(1));
+        assert!(parse("xs = [\n  1,\n").is_err()); // never closes
     }
 
     #[test]

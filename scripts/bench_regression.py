@@ -56,13 +56,28 @@ def gate_pattern_matches(pattern, path):
     return bracket == "]" and index.isdigit() and tail == suffix
 
 
+def provenance_of(baseline):
+    """Human-readable origin of a committed baseline, from its optional
+    ``provenance`` block ({commit, date, source})."""
+    prov = baseline.get("provenance")
+    if not isinstance(prov, dict):
+        return "baseline provenance unrecorded"
+    commit = prov.get("commit", "?")
+    date = prov.get("date", "?")
+    source = prov.get("source", "")
+    text = f"baseline from commit {commit} ({date})"
+    return f"{text}, {source}" if source else text
+
+
 def compare_file(name, baseline, candidate, tolerance):
     """Return (rows, failures) for one bench report pair."""
     rows, failures = [], []
+    prov = provenance_of(baseline)
     if baseline.get("schema") != candidate.get("schema"):
         failures.append(
             f"{name}: schema mismatch (baseline {baseline.get('schema')} vs "
-            f"candidate {candidate.get('schema')}) - refresh the committed baseline"
+            f"candidate {candidate.get('schema')}) - refresh the committed baseline "
+            f"[{prov}]"
         )
         return rows, failures
     gates = baseline.get("gate", [])
@@ -79,12 +94,14 @@ def compare_file(name, baseline, candidate, tolerance):
             status = "FAIL"
             failures.append(
                 f"{name}: {path} regressed {old:.4g} -> {new:.4g} "
-                f"({delta:+.1f}%, tolerance -{tolerance * 100:.0f}%)"
+                f"({delta:+.1f}%, tolerance -{tolerance * 100:.0f}%) [{prov}]"
             )
         rows.append((path, old, new, delta, status))
     for path in sorted(set(base_values) - set(cand_values)):
         if any(gate_pattern_matches(g, path) for g in gates):
-            failures.append(f"{name}: gated field {path} missing from the candidate")
+            failures.append(
+                f"{name}: gated field {path} missing from the candidate [{prov}]"
+            )
     return rows, failures
 
 
@@ -115,6 +132,7 @@ def main():
             baseline = json.load(f)
         with open(candidate_path) as f:
             candidate = json.load(f)
+        print(f"  ({provenance_of(baseline)})")
         rows, failures = compare_file(name, baseline, candidate, args.tolerance)
         all_failures.extend(failures)
         print(f"  {'field':<28} {'baseline':>12} {'candidate':>12} {'delta':>9}  gate")

@@ -1,0 +1,155 @@
+//! `ps-lint.toml` loading, on top of the main crate's TOML-subset parser
+//! (`util::tomlmini`) — no external dependencies.
+
+use pilot_streaming::util::json::Json;
+use pilot_streaming::util::tomlmini;
+
+/// Rule identifiers, as they appear in config headers, waiver comments,
+/// and reports.
+pub const WALL_CLOCK: &str = "wall-clock";
+pub const HASH_ITERATION: &str = "hash-iteration";
+pub const THREAD_SPAWN: &str = "thread-spawn";
+pub const ENTROPY: &str = "entropy";
+pub const HOT_PATH_LOCK: &str = "hot-path-lock";
+pub const CONSERVED: &str = "conserved-accounting";
+/// Meta-rules (always on, never configurable, never waivable).
+pub const BAD_WAIVER: &str = "bad-waiver";
+pub const UNUSED_WAIVER: &str = "unused-waiver";
+
+/// All real (configurable, waivable) rule names.
+pub const RULES: [&str; 6] = [
+    WALL_CLOCK,
+    HASH_ITERATION,
+    THREAD_SPAWN,
+    ENTROPY,
+    HOT_PATH_LOCK,
+    CONSERVED,
+];
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    /// Directories (relative to the scan root) to walk for `.rs` files.
+    pub roots: Vec<String>,
+    /// Skip `#[cfg(test)] mod` bodies (tests may thread/sleep freely).
+    pub skip_test_modules: bool,
+    /// R1: path prefixes where wall-clock reads are legitimate.
+    pub wall_clock_allow: Vec<String>,
+    /// R2: path prefixes of deterministic modules (no HashMap/HashSet).
+    pub hash_modules: Vec<String>,
+    /// R3: path prefixes allowed to spawn threads directly.
+    pub thread_allow: Vec<String>,
+    /// R4: identifiers that mean ambient entropy (`thread_rng`, ...).
+    pub entropy_banned: Vec<String>,
+    /// R5: path prefixes tagged `hot-path` (no RwLock/Mutex).
+    pub hot_path_modules: Vec<String>,
+    /// R6: path prefixes tagged `conserved`.
+    pub conserved_modules: Vec<String>,
+    /// R6: exact names of accounting functions needing assertion cover.
+    pub accounting_fns: Vec<String>,
+}
+
+impl Config {
+    /// Parse a `ps-lint.toml` document.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = tomlmini::parse(text).map_err(|e| format!("config: {e}"))?;
+        let scan = doc.get("scan");
+        let rules = doc.get("rules");
+        let cfg = Config {
+            roots: str_list(scan.get("roots")),
+            skip_test_modules: scan.get("skip_test_modules").as_bool().unwrap_or(true),
+            wall_clock_allow: str_list(rules.get(WALL_CLOCK).get("allow")),
+            hash_modules: str_list(rules.get(HASH_ITERATION).get("modules")),
+            thread_allow: str_list(rules.get(THREAD_SPAWN).get("allow")),
+            entropy_banned: str_list(rules.get(ENTROPY).get("banned")),
+            hot_path_modules: str_list(rules.get(HOT_PATH_LOCK).get("modules")),
+            conserved_modules: str_list(rules.get(CONSERVED).get("modules")),
+            accounting_fns: str_list(rules.get(CONSERVED).get("accounting_fns")),
+        };
+        if cfg.roots.is_empty() {
+            return Err("config: [scan] roots must list at least one directory".into());
+        }
+        Ok(cfg)
+    }
+
+    pub fn is_known_rule(name: &str) -> bool {
+        RULES.contains(&name)
+    }
+}
+
+fn str_list(v: &Json) -> Vec<String> {
+    v.as_arr()
+        .map(|items| {
+            items
+                .iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Does `rel` (a `/`-separated path relative to the scan root) fall under
+/// `prefix`?  A prefix of `"."` matches everything; otherwise the prefix
+/// must equal the path or name one of its ancestor directories.
+pub fn path_matches(rel: &str, prefix: &str) -> bool {
+    let p = prefix.trim_end_matches('/');
+    p == "." || rel == p || rel.starts_with(&format!("{p}/"))
+}
+
+/// True when `rel` falls under any of `prefixes`.
+pub fn path_in(rel: &str, prefixes: &[String]) -> bool {
+    prefixes.iter().any(|p| path_matches(rel, p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = Config::from_toml(
+            r#"
+[scan]
+roots = ["rust/src", "examples"]
+skip_test_modules = true
+
+[rules.wall-clock]
+allow = ["rust/src/sim/clock.rs"]
+
+[rules.hash-iteration]
+modules = ["rust/src/sim"]
+
+[rules.thread-spawn]
+allow = ["rust/src/pilot/workers.rs"]
+
+[rules.entropy]
+banned = ["thread_rng"]
+
+[rules.hot-path-lock]
+modules = ["rust/src/broker/kafka.rs"]
+
+[rules.conserved-accounting]
+modules = ["rust/src/pilot/job.rs"]
+accounting_fns = ["resize"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.roots.len(), 2);
+        assert!(cfg.skip_test_modules);
+        assert_eq!(cfg.wall_clock_allow, vec!["rust/src/sim/clock.rs"]);
+        assert_eq!(cfg.accounting_fns, vec!["resize"]);
+    }
+
+    #[test]
+    fn missing_roots_is_an_error() {
+        assert!(Config::from_toml("[scan]\n").is_err());
+    }
+
+    #[test]
+    fn path_matching() {
+        assert!(path_matches("rust/src/sim/engine.rs", "rust/src/sim"));
+        assert!(path_matches("rust/src/sim/engine.rs", "."));
+        assert!(path_matches("a/b.rs", "a/b.rs"));
+        assert!(!path_matches("rust/src/simx/e.rs", "rust/src/sim"));
+        assert!(!path_matches("rust/src/sim.rs", "rust/src/sim"));
+    }
+}

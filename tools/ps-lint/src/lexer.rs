@@ -1,0 +1,394 @@
+//! A minimal Rust tokenizer: good enough to find identifier/path patterns
+//! without being fooled by comments, string literals, or `#[cfg(test)]`
+//! modules.
+//!
+//! The output is a flat stream of [`Token`]s (identifiers keep their text,
+//! literals collapse to `"<lit>"`, punctuation is one token per character)
+//! plus the line comments (waivers live there).  It is deliberately *not*
+//! a full lexer — raw strings, nested block comments, char literals and
+//! lifetimes are handled just well enough that nothing inside them leaks
+//! into the token stream.
+
+/// One lexed token: identifiers carry their text, literals are `"<lit>"`,
+/// punctuation is a single-character string.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    /// 1-based source line the token starts on.
+    pub line: usize,
+    pub text: String,
+}
+
+/// One `//` line comment (block comments never carry waivers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Comment {
+    /// 1-based source line.
+    pub line: usize,
+    /// Text after the `//`, untrimmed.
+    pub text: String,
+    /// True when nothing but whitespace precedes the comment on its line.
+    pub own_line: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+/// Tokenize `src`. Never fails: malformed trailing input degrades to
+/// punctuation tokens, which no rule pattern matches.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut saw_token_on_line = false;
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            saw_token_on_line = false;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < chars.len() && chars[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push(Comment {
+                line,
+                text: chars[start..j].iter().collect(),
+                own_line: !saw_token_on_line,
+            });
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < chars.len() && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                } else if chars[j] == '/' && chars.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 1;
+                } else if chars[j] == '*' && chars.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 1;
+                }
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        // raw / byte string: (r|b|br|rb) #* "
+        if c == 'r' || c == 'b' {
+            if let Some((end, lines)) = try_string_prefix(&chars, i) {
+                out.tokens.push(Token {
+                    line,
+                    text: "<lit>".into(),
+                });
+                saw_token_on_line = true;
+                line += lines;
+                i = end;
+                continue;
+            }
+        }
+        // plain string
+        if c == '"' {
+            let (end, lines) = consume_string(&chars, i + 1, 0, true);
+            out.tokens.push(Token {
+                line,
+                text: "<lit>".into(),
+            });
+            saw_token_on_line = true;
+            line += lines;
+            i = end;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if chars.get(i + 1) == Some(&'\\') {
+                // escaped char literal: scan to the closing quote
+                let mut j = i + 2;
+                while j < chars.len() && chars[j] != '\'' {
+                    j += 1;
+                }
+                out.tokens.push(Token {
+                    line,
+                    text: "<lit>".into(),
+                });
+                saw_token_on_line = true;
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < chars.len() && chars[i + 2] == '\'' {
+                out.tokens.push(Token {
+                    line,
+                    text: "<lit>".into(),
+                });
+                saw_token_on_line = true;
+                i += 3;
+                continue;
+            }
+            // lifetime: consume the quote + identifier, emit nothing
+            let mut j = i + 1;
+            while j < chars.len() && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            i = j.max(i + 1);
+            continue;
+        }
+        // number literal (suffixes and separators folded in; `.` stays
+        // punctuation so `0..6` cannot swallow an identifier)
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < chars.len() && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                line,
+                text: "<lit>".into(),
+            });
+            saw_token_on_line = true;
+            i = j;
+            continue;
+        }
+        // identifier / keyword (incl. r#raw idents, caught above only when
+        // followed by a quote)
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < chars.len() && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                line,
+                text: chars[i..j].iter().collect(),
+            });
+            saw_token_on_line = true;
+            i = j;
+            continue;
+        }
+        // punctuation: one token per character
+        out.tokens.push(Token {
+            line,
+            text: c.to_string(),
+        });
+        saw_token_on_line = true;
+        i += 1;
+    }
+    out
+}
+
+/// If `chars[i..]` starts a raw/byte string (`r"`, `b"`, `br#"` ...),
+/// consume it and return (index past the literal, newlines crossed).
+fn try_string_prefix(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    let mut is_raw = false;
+    for _ in 0..2 {
+        match chars.get(j) {
+            Some('r') => {
+                is_raw = true;
+                j += 1;
+            }
+            Some('b') => {
+                j += 1;
+            }
+            _ => break,
+        }
+    }
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) != Some(&'"') {
+        return None;
+    }
+    if hashes > 0 && !is_raw {
+        return None;
+    }
+    Some(consume_string(chars, j + 1, hashes, !is_raw))
+}
+
+/// Consume a string body starting just after the opening quote; returns
+/// (index past the closing delimiter, newlines crossed).  `escapes` is
+/// false inside raw strings.
+fn consume_string(chars: &[char], start: usize, hashes: usize, escapes: bool) -> (usize, usize) {
+    let mut j = start;
+    let mut lines = 0usize;
+    while j < chars.len() {
+        let c = chars[j];
+        if c == '\n' {
+            lines += 1;
+            j += 1;
+            continue;
+        }
+        if escapes && c == '\\' {
+            j += 2;
+            continue;
+        }
+        if c == '"' {
+            // need `hashes` trailing '#'s to close a raw string
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while seen < hashes && chars.get(k) == Some(&'#') {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return (k, lines);
+            }
+        }
+        j += 1;
+    }
+    (j, lines)
+}
+
+/// Token index ranges `[start, end)` covered by `#[cfg(test)] mod ... { }`
+/// blocks.  Intervening attributes between the cfg gate and the `mod`
+/// keyword are skipped.
+pub fn test_mod_ranges(tokens: &[Token]) -> Vec<(usize, usize)> {
+    const GATE: [&str; 7] = ["#", "[", "cfg", "(", "test", ")", "]"];
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i + GATE.len() <= tokens.len() {
+        if !GATE
+            .iter()
+            .zip(&tokens[i..])
+            .all(|(want, tok)| *want == tok.text)
+        {
+            i += 1;
+            continue;
+        }
+        let mut j = i + GATE.len();
+        // skip further attributes
+        while tokens.get(j).map(|t| t.text.as_str()) == Some("#")
+            && tokens.get(j + 1).map(|t| t.text.as_str()) == Some("[")
+        {
+            let mut depth = 0usize;
+            j += 1;
+            while j < tokens.len() {
+                match tokens[j].text.as_str() {
+                    "[" => depth += 1,
+                    "]" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        if tokens.get(j).map(|t| t.text.as_str()) != Some("mod") {
+            i += 1;
+            continue;
+        }
+        // find the opening brace, then its match
+        while j < tokens.len() && tokens[j].text != "{" {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        while j < tokens.len() {
+            match tokens[j].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        ranges.push((i, j));
+        i = j;
+    }
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_and_paths() {
+        assert_eq!(
+            texts("Instant::now()"),
+            vec!["Instant", ":", ":", "now", "(", ")"]
+        );
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_leak() {
+        let t = texts("let s = \"Instant::now()\"; // HashMap\n/* SystemTime */ let x = 1;");
+        assert!(!t.contains(&"HashMap".to_string()));
+        assert!(!t.contains(&"SystemTime".to_string()));
+        assert!(!t.contains(&"now".to_string()));
+        assert!(t.contains(&"let".to_string()));
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let t = texts("fn f<'a>(x: &'a str) { let r = r#\"thread::spawn\"#; }");
+        assert!(!t.contains(&"spawn".to_string()));
+        assert!(t.contains(&"fn".to_string()));
+        assert!(!t.contains(&"a".to_string()), "lifetime leaked: {t:?}");
+    }
+
+    #[test]
+    fn char_literals() {
+        let t = texts("let c = 'x'; let n = '\\n'; let q = ','; m.split(',')");
+        assert!(t.contains(&"<lit>".to_string()));
+        assert!(!t.contains(&"x".to_string()));
+        assert!(!t.contains(&"n".to_string()));
+    }
+
+    #[test]
+    fn comment_lines_and_ownership() {
+        let l = lex("let a = 1; // trailing\n  // own line\nlet b = 2;");
+        assert_eq!(l.comments.len(), 2);
+        assert!(!l.comments[0].own_line);
+        assert_eq!(l.comments[0].line, 1);
+        assert!(l.comments[1].own_line);
+        assert_eq!(l.comments[1].line, 2);
+    }
+
+    #[test]
+    fn line_numbers_cross_strings() {
+        let l = lex("let s = \"a\nb\";\nInstant::now()");
+        let inst = l.tokens.iter().find(|t| t.text == "Instant").unwrap();
+        assert_eq!(inst.line, 3);
+    }
+
+    #[test]
+    fn test_mod_range_detection() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n  #[test]\n  fn t() { std::thread::spawn(|| {}); }\n}\nfn b() {}";
+        let l = lex(src);
+        let ranges = test_mod_ranges(&l.tokens);
+        assert_eq!(ranges.len(), 1);
+        let (s, e) = ranges[0];
+        let inside: Vec<_> = l.tokens[s..e].iter().map(|t| t.text.as_str()).collect();
+        assert!(inside.contains(&"spawn"));
+        // fn b survives outside
+        assert!(l.tokens[e..].iter().any(|t| t.text == "b"));
+    }
+}

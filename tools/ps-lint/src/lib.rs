@@ -1,0 +1,116 @@
+//! `ps-lint` — determinism & invariant static analysis for the
+//! pilot-streaming tree.
+//!
+//! The repo's reproducibility claims rest on invariants the compiler
+//! cannot see: parallel sweeps byte-identical to sequential, refit
+//! sequences bit-deterministic, conserved accounting through every
+//! resize.  One stray `Instant::now()` or `HashMap` iteration in a sim
+//! module silently breaks them.  This crate tokenizes every `.rs` file
+//! under the configured roots and enforces six rules from `ps-lint.toml`:
+//!
+//! | rule                   | invariant                                             |
+//! |------------------------|-------------------------------------------------------|
+//! | `wall-clock`           | no `Instant::now`/`SystemTime::now` outside allowlist |
+//! | `hash-iteration`       | no `HashMap`/`HashSet` in deterministic modules       |
+//! | `thread-spawn`         | all parallelism through the pilot worker pool         |
+//! | `entropy`              | all randomness via `util::rng` seeded constructors    |
+//! | `hot-path-lock`        | no `RwLock`/`Mutex` in `hot-path`-tagged modules      |
+//! | `conserved-accounting` | accounting fns covered by `debug_assert!`/tests       |
+//!
+//! Violations are waivable inline with a mandatory reason:
+//! `// ps-lint: allow(<rule>): <reason>`.  Reasonless or unused waivers
+//! are findings themselves (`bad-waiver`, `unused-waiver`), so the waiver
+//! set stays honest.  The pass runs on its own sources too.
+
+pub mod config;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use config::Config;
+pub use report::{Finding, Report, Waived};
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Run the configured scan rooted at `root` (the directory `ps-lint.toml`
+/// paths are relative to).  Returns a sorted [`Report`].
+pub fn run_scan(root: &Path, cfg: &Config) -> io::Result<Report> {
+    let mut files: BTreeSet<PathBuf> = BTreeSet::new();
+    for scan_root in &cfg.roots {
+        let dir = root.join(scan_root);
+        if !dir.is_dir() {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("scan root {} is not a directory", dir.display()),
+            ));
+        }
+        collect_rs(&dir, &mut files)?;
+    }
+    let mut report = Report::default();
+    for path in &files {
+        let rel = rel_path(root, path);
+        let src = fs::read_to_string(path)?;
+        let (findings, waived) = rules::scan_file(&rel, &src, cfg);
+        report.findings.extend(findings);
+        report.waived.extend(waived);
+        report.files_scanned += 1;
+    }
+    report.sort();
+    Ok(report)
+}
+
+/// Convenience: load `ps-lint.toml` from `config_path` and scan.
+pub fn run_from_config_file(root: &Path, config_path: &Path) -> Result<Report, String> {
+    let text = fs::read_to_string(config_path)
+        .map_err(|e| format!("cannot read {}: {e}", config_path.display()))?;
+    let cfg = Config::from_toml(&text)?;
+    run_scan(root, &cfg).map_err(|e| format!("scan failed: {e}"))
+}
+
+fn collect_rs(dir: &Path, out: &mut BTreeSet<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.insert(p);
+        }
+    }
+    Ok(())
+}
+
+/// `/`-separated path of `path` relative to `root` (falls back to the
+/// full path when `path` is not under `root`).
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_paths_are_slash_separated() {
+        let root = Path::new("/a/b");
+        let p = Path::new("/a/b/rust/src/x.rs");
+        assert_eq!(rel_path(root, p), "rust/src/x.rs");
+    }
+
+    #[test]
+    fn missing_scan_root_errors() {
+        let cfg = Config {
+            roots: vec!["definitely-not-a-dir".into()],
+            ..Config::default()
+        };
+        assert!(run_scan(Path::new("."), &cfg).is_err());
+    }
+}

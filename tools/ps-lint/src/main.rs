@@ -1,0 +1,68 @@
+//! CLI for the determinism & invariant lint.
+//!
+//! ```text
+//! cargo run -p ps-lint                       # text report, repo-root config
+//! cargo run -p ps-lint -- --format json      # machine-readable (CI artifact)
+//! cargo run -p ps-lint -- --root DIR --config FILE
+//! ```
+//!
+//! Exit codes: 0 clean, 1 unwaived findings, 2 usage/config/io error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+ps-lint: determinism & invariant static analysis
+
+USAGE:
+    ps-lint [--root DIR] [--config FILE] [--format text|json]
+
+OPTIONS:
+    --root DIR       directory config paths are relative to (default .)
+    --config FILE    rule configuration (default <root>/ps-lint.toml)
+    --format FMT     text (default) or json
+    --help           print this help
+";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("ps-lint: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<ExitCode, String> {
+    let mut root = PathBuf::from(".");
+    let mut config: Option<PathBuf> = None;
+    let mut format = String::from("text");
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = PathBuf::from(args.next().ok_or("--root needs a value")?),
+            "--config" => config = Some(PathBuf::from(args.next().ok_or("--config needs a value")?)),
+            "--format" => format = args.next().ok_or("--format needs a value")?,
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return Ok(ExitCode::SUCCESS);
+            }
+            other => return Err(format!("unknown argument {other:?}\n{USAGE}")),
+        }
+    }
+    if format != "text" && format != "json" {
+        return Err(format!("--format must be text or json, got {format:?}"));
+    }
+
+    let config_path = config.unwrap_or_else(|| root.join("ps-lint.toml"));
+    let report = ps_lint::run_from_config_file(&root, &config_path)?;
+
+    if format == "json" {
+        println!("{}", report.to_json().pretty());
+    } else {
+        print!("{}", report.to_text());
+    }
+    Ok(ExitCode::from(u8::try_from(report.exit_code()).unwrap_or(1)))
+}

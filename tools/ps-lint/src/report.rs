@@ -1,0 +1,157 @@
+//! Finding collection and human/JSON rendering.  JSON output reuses the
+//! main crate's deterministic `util::json` writer (sorted object keys),
+//! so reports are diffable and golden-testable byte for byte.
+
+use pilot_streaming::util::json::Json;
+
+/// One unwaived rule violation.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub message: String,
+}
+
+/// One violation suppressed by a reason-carrying inline waiver.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Waived {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// The full result of one scan.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub waived: Vec<Waived>,
+}
+
+impl Report {
+    /// Canonical ordering: by (file, line, rule).
+    pub fn sort(&mut self) {
+        self.findings
+            .sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+        self.waived
+            .sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    }
+
+    /// Process exit code: clean tree → 0, any unwaived finding → 1.
+    pub fn exit_code(&self) -> i32 {
+        i32::from(!self.findings.is_empty())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("file", Json::from(f.file.as_str())),
+                    ("line", Json::from(f.line)),
+                    ("message", Json::from(f.message.as_str())),
+                    ("rule", Json::from(f.rule.as_str())),
+                ])
+            })
+            .collect();
+        let waived: Vec<Json> = self
+            .waived
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("file", Json::from(w.file.as_str())),
+                    ("line", Json::from(w.line)),
+                    ("reason", Json::from(w.reason.as_str())),
+                    ("rule", Json::from(w.rule.as_str())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "counts",
+                Json::obj(vec![
+                    ("findings", Json::from(self.findings.len())),
+                    ("waived", Json::from(self.waived.len())),
+                ]),
+            ),
+            ("files_scanned", Json::from(self.files_scanned)),
+            ("findings", Json::Arr(findings)),
+            ("schema", Json::from(1usize)),
+            ("tool", Json::from("ps-lint")),
+            ("waived", Json::Arr(waived)),
+        ])
+    }
+
+    /// Human-readable rendering, one line per finding.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        for w in &self.waived {
+            s.push_str(&format!(
+                "{}:{}: waived [{}] — {}\n",
+                w.file, w.line, w.rule, w.reason
+            ));
+        }
+        s.push_str(&format!(
+            "ps-lint: {} file(s) scanned, {} finding(s), {} waived\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.waived.len()
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_codes() {
+        let mut r = Report::default();
+        assert_eq!(r.exit_code(), 0);
+        r.findings.push(Finding {
+            file: "a.rs".into(),
+            line: 1,
+            rule: "wall-clock".into(),
+            message: "m".into(),
+        });
+        assert_eq!(r.exit_code(), 1);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let mut r = Report {
+            files_scanned: 2,
+            findings: vec![
+                Finding {
+                    file: "b.rs".into(),
+                    line: 3,
+                    rule: "entropy".into(),
+                    message: "m2".into(),
+                },
+                Finding {
+                    file: "a.rs".into(),
+                    line: 9,
+                    rule: "wall-clock".into(),
+                    message: "m1".into(),
+                },
+            ],
+            waived: vec![],
+        };
+        r.sort();
+        assert_eq!(r.findings[0].file, "a.rs");
+        let j = r.to_json();
+        assert_eq!(j.get("schema").as_i64(), Some(1));
+        assert_eq!(j.get("counts").get("findings").as_i64(), Some(2));
+        assert_eq!(
+            j.get("findings").as_arr().unwrap()[0].get("file").as_str(),
+            Some("a.rs")
+        );
+    }
+}

@@ -1,0 +1,369 @@
+//! The rule engine: runs every determinism/invariant rule over one lexed
+//! file, resolves inline waivers, and emits findings.
+//!
+//! Waiver syntax (line comments only, reason mandatory):
+//!
+//! ```text
+//! // ps-lint: allow(<rule>): <reason>
+//! ```
+//!
+//! A waiver on a code line covers that line; a waiver alone on its own
+//! line covers the next line that carries code.  Waivers that suppress
+//! nothing are themselves findings (`unused-waiver`), as are waivers
+//! missing the reason or naming an unknown rule (`bad-waiver`).
+
+use crate::config::{self, Config};
+use crate::lexer::{lex, test_mod_ranges, Token};
+use crate::report::{Finding, Waived};
+use std::collections::BTreeSet;
+
+#[derive(Debug)]
+struct Waiver {
+    /// Line the waiver is declared on.
+    decl_line: usize,
+    /// Line whose findings it suppresses.
+    covers_line: usize,
+    rule: String,
+    reason: String,
+    used: bool,
+}
+
+/// Scan one file's source text.  `rel` is the `/`-separated path relative
+/// to the scan root (used for allowlist/module matching and reporting).
+pub fn scan_file(rel: &str, src: &str, cfg: &Config) -> (Vec<Finding>, Vec<Waived>) {
+    let lexed = lex(src);
+    let excluded = if cfg.skip_test_modules {
+        test_mod_ranges(&lexed.tokens)
+    } else {
+        Vec::new()
+    };
+    let has_test_mod = !excluded.is_empty();
+    // tokens outside #[cfg(test)] modules — what the rules look at
+    let live: Vec<&Token> = lexed
+        .tokens
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !excluded.iter().any(|(s, e)| i >= s && i < e))
+        .map(|(_, t)| t)
+        .collect();
+
+    let (mut waivers, mut findings) = parse_waivers(rel, &lexed.comments, &lexed.tokens);
+
+    // candidate findings, deduped per (rule, line)
+    let mut seen: BTreeSet<(String, usize)> = BTreeSet::new();
+    let mut candidates: Vec<Finding> = Vec::new();
+    let mut push = |rule: &str, line: usize, message: String, cands: &mut Vec<Finding>| {
+        if seen.insert((rule.to_string(), line)) {
+            cands.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: rule.to_string(),
+                message,
+            });
+        }
+    };
+
+    // R1 — wall-clock reads
+    if !config::path_in(rel, &cfg.wall_clock_allow) {
+        for src_ty in ["Instant", "SystemTime"] {
+            for i in find_seq(&live, &[src_ty, ":", ":", "now"]) {
+                push(
+                    config::WALL_CLOCK,
+                    live[i].line,
+                    format!("{src_ty}::now() outside the wall-clock allowlist — sim/model code must read time through sim::clock"),
+                    &mut candidates,
+                );
+            }
+        }
+    }
+
+    // R2 — HashMap/HashSet in deterministic modules
+    if config::path_in(rel, &cfg.hash_modules) {
+        for ty in ["HashMap", "HashSet"] {
+            for t in live.iter().filter(|t| t.text == ty) {
+                push(
+                    config::HASH_ITERATION,
+                    t.line,
+                    format!("{ty} in a deterministic module — iteration order can leak into output; use BTreeMap/BTreeSet or sort before iterating"),
+                    &mut candidates,
+                );
+            }
+        }
+    }
+
+    // R3 — thread spawning outside the deterministic-merge pool
+    if !config::path_in(rel, &cfg.thread_allow) {
+        for prim in ["spawn", "Builder", "scope"] {
+            for i in find_seq(&live, &["thread", ":", ":", prim]) {
+                push(
+                    config::THREAD_SPAWN,
+                    live[i].line,
+                    format!("thread::{prim} outside pilot/workers.rs — parallelism must go through the deterministic-merge pool"),
+                    &mut candidates,
+                );
+            }
+        }
+    }
+
+    // R4 — ambient entropy
+    for i in find_seq(&live, &["rand", ":", ":"]) {
+        push(
+            config::ENTROPY,
+            live[i].line,
+            "rand:: path — all randomness must come from util::rng seeded constructors".to_string(),
+            &mut candidates,
+        );
+    }
+    for t in live.iter().filter(|t| cfg.entropy_banned.contains(&t.text)) {
+        push(
+            config::ENTROPY,
+            t.line,
+            format!(
+                "{} is entropy-seeded — all randomness must come from util::rng seeded constructors",
+                t.text
+            ),
+            &mut candidates,
+        );
+    }
+
+    // R5 — locks on hot-path modules
+    if config::path_in(rel, &cfg.hot_path_modules) {
+        for ty in ["RwLock", "Mutex"] {
+            for t in live.iter().filter(|t| t.text == ty) {
+                push(
+                    config::HOT_PATH_LOCK,
+                    t.line,
+                    format!("{ty} in a hot-path module — prefer sharded ownership (ROADMAP: sim core at million-user scale)"),
+                    &mut candidates,
+                );
+            }
+        }
+    }
+
+    // R6 — conserved accounting sites need assertion/test cover
+    if config::path_in(rel, &cfg.conserved_modules) {
+        let has_debug_assert = live.iter().any(|t| t.text.starts_with("debug_assert"));
+        if !has_debug_assert && !has_test_mod {
+            for i in find_seq(&live, &["pub", "fn"]) {
+                let Some(name) = live.get(i + 2) else { continue };
+                if cfg.accounting_fns.contains(&name.text) {
+                    push(
+                        config::CONSERVED,
+                        name.line,
+                        format!("accounting fn `{}` in a conserved module with no debug_assert!/test marker in the file", name.text),
+                        &mut candidates,
+                    );
+                }
+            }
+        }
+    }
+
+    // resolve waivers
+    let mut waived: Vec<Waived> = Vec::new();
+    for cand in candidates {
+        let w = waivers
+            .iter_mut()
+            .find(|w| !w.used && w.rule == cand.rule && w.covers_line == cand.line);
+        match w {
+            Some(w) => {
+                w.used = true;
+                waived.push(Waived {
+                    file: cand.file,
+                    line: cand.line,
+                    rule: cand.rule,
+                    reason: w.reason.clone(),
+                });
+            }
+            None => findings.push(cand),
+        }
+    }
+    for w in waivers.iter().filter(|w| !w.used) {
+        findings.push(Finding {
+            file: rel.to_string(),
+            line: w.decl_line,
+            rule: config::UNUSED_WAIVER.to_string(),
+            message: format!(
+                "waiver for `{}` suppresses nothing on line {} — remove it",
+                w.rule, w.covers_line
+            ),
+        });
+    }
+    (findings, waived)
+}
+
+/// Extract waivers from comments; malformed ones become `bad-waiver`
+/// findings immediately.
+fn parse_waivers(
+    rel: &str,
+    comments: &[crate::lexer::Comment],
+    all_tokens: &[Token],
+) -> (Vec<Waiver>, Vec<Finding>) {
+    let mut waivers = Vec::new();
+    let mut findings = Vec::new();
+    for c in comments {
+        // the directive must open the comment (`// ps-lint: ...`), so prose
+        // *mentioning* the syntax — like this file's docs — never parses
+        let Some(directive) = c.text.trim_start().strip_prefix("ps-lint:") else {
+            continue;
+        };
+        let directive = directive.trim();
+        let mut bad = |why: &str, findings: &mut Vec<Finding>| {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: c.line,
+                rule: config::BAD_WAIVER.to_string(),
+                message: format!("malformed waiver ({why}) — expected `ps-lint: allow(<rule>): <reason>`"),
+            });
+        };
+        let Some(rest) = directive.strip_prefix("allow(") else {
+            bad("unknown directive", &mut findings);
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            bad("unclosed rule name", &mut findings);
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        if !Config::is_known_rule(&rule) {
+            bad(&format!("unknown rule `{rule}`"), &mut findings);
+            continue;
+        }
+        let after = rest[close + 1..].trim_start();
+        let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+        if reason.is_empty() {
+            bad("missing reason", &mut findings);
+            continue;
+        }
+        let covers_line = if c.own_line {
+            all_tokens
+                .iter()
+                .find(|t| t.line > c.line)
+                .map(|t| t.line)
+                .unwrap_or(c.line)
+        } else {
+            c.line
+        };
+        waivers.push(Waiver {
+            decl_line: c.line,
+            covers_line,
+            rule,
+            reason: reason.to_string(),
+            used: false,
+        });
+    }
+    (waivers, findings)
+}
+
+/// Indices `i` where `tokens[i..]` matches `pat` textually.
+fn find_seq(tokens: &[&Token], pat: &[&str]) -> Vec<usize> {
+    if tokens.len() < pat.len() {
+        return Vec::new();
+    }
+    (0..=tokens.len() - pat.len())
+        .filter(|&i| pat.iter().enumerate().all(|(k, w)| tokens[i + k].text == *w))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_all() -> Config {
+        Config {
+            roots: vec![".".into()],
+            skip_test_modules: true,
+            wall_clock_allow: vec![],
+            hash_modules: vec![".".into()],
+            thread_allow: vec![],
+            entropy_banned: vec!["thread_rng".into(), "OsRng".into()],
+            hot_path_modules: vec![".".into()],
+            conserved_modules: vec![".".into()],
+            accounting_fns: vec!["resize".into()],
+        }
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    #[test]
+    fn wall_clock_detected_and_allowlisted() {
+        let src = "fn f() { let t = Instant::now(); }";
+        let (f, _) = scan_file("x.rs", src, &cfg_all());
+        assert_eq!(rules_of(&f), vec![config::WALL_CLOCK]);
+        let mut cfg = cfg_all();
+        cfg.wall_clock_allow = vec!["x.rs".into()];
+        let (f, _) = scan_file("x.rs", src, &cfg);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn hash_and_lock_flag_each_line_once() {
+        let src = "use std::collections::HashMap;\nstruct S { a: HashMap<u8, u8>, b: HashMap<u8, u8> }";
+        let (f, _) = scan_file("x.rs", src, &cfg_all());
+        let hash: Vec<_> = f
+            .iter()
+            .filter(|x| x.rule == config::HASH_ITERATION)
+            .collect();
+        assert_eq!(hash.len(), 2); // line 1 and line 2, deduped within line 2
+    }
+
+    #[test]
+    fn spawns_in_test_modules_are_skipped() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n fn t() { std::thread::spawn(|| {}); }\n}";
+        let (f, _) = scan_file("x.rs", src, &cfg_all());
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn conserved_requires_cover() {
+        let bare = "impl P { pub fn resize(&self, to: usize) {} }";
+        let (f, _) = scan_file("x.rs", bare, &cfg_all());
+        assert_eq!(rules_of(&f), vec![config::CONSERVED]);
+        let covered = "impl P { pub fn resize(&self, to: usize) { debug_assert!(to > 0); } }";
+        let (f, _) = scan_file("x.rs", covered, &cfg_all());
+        assert!(f.is_empty());
+        let tested = "impl P { pub fn resize(&self, to: usize) {} }\n#[cfg(test)]\nmod tests { fn t() {} }";
+        let (f, _) = scan_file("x.rs", tested, &cfg_all());
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn waiver_same_line_and_own_line() {
+        let src = "fn f() { let t = Instant::now(); } // ps-lint: allow(wall-clock): live example timing";
+        let (f, w) = scan_file("x.rs", src, &cfg_all());
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].reason, "live example timing");
+
+        let src = "// ps-lint: allow(wall-clock): live example timing\nfn f() { let t = Instant::now(); }";
+        let (f, w) = scan_file("x.rs", src, &cfg_all());
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(w[0].line, 2);
+    }
+
+    #[test]
+    fn waiver_without_reason_is_a_finding() {
+        let src = "fn f() { let t = Instant::now(); } // ps-lint: allow(wall-clock)";
+        let (f, w) = scan_file("x.rs", src, &cfg_all());
+        assert!(w.is_empty());
+        let rules = rules_of(&f);
+        assert!(rules.contains(&config::BAD_WAIVER));
+        assert!(rules.contains(&config::WALL_CLOCK)); // not suppressed
+    }
+
+    #[test]
+    fn unused_waiver_is_a_finding() {
+        let src = "// ps-lint: allow(thread-spawn): nothing spawns here\nfn calm() {}";
+        let (f, _) = scan_file("x.rs", src, &cfg_all());
+        assert_eq!(rules_of(&f), vec![config::UNUSED_WAIVER]);
+    }
+
+    #[test]
+    fn entropy_paths_and_idents() {
+        let src = "fn f() { let mut r = rand::thread_rng(); }";
+        let (f, _) = scan_file("x.rs", src, &cfg_all());
+        // rand:: and thread_rng are on the same line — one finding (dedup)
+        assert_eq!(rules_of(&f), vec![config::ENTROPY]);
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture: waivers missing the reason are findings themselves, and the
+//! violation they failed to waive still reports.
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now() // ps-lint: allow(wall-clock)
+}

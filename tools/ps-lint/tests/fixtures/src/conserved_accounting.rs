@@ -1,0 +1,11 @@
+//! Fixture: R6 — accounting fn with no debug_assert!/test cover.
+
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    pub fn resize(&mut self, to: usize) {
+        self.workers = to;
+    }
+}

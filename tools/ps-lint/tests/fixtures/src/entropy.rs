@@ -1,0 +1,6 @@
+//! Fixture: R4 — ambient entropy instead of util::rng seeded constructors.
+
+pub fn roll() -> u32 {
+    let mut rng = rand::thread_rng();
+    rng.next_u32()
+}

@@ -1,0 +1,11 @@
+//! Fixture: R2 — hash collections in a deterministic module.
+
+use std::collections::HashMap;
+
+pub fn histogram(keys: &[u64]) -> usize {
+    let mut counts: HashMap<u64, usize> = HashMap::new();
+    for k in keys {
+        *counts.entry(*k).or_insert(0) += 1;
+    }
+    counts.len()
+}

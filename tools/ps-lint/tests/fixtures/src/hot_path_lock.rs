@@ -1,0 +1,8 @@
+//! Fixture: R5 — locks in a module tagged hot-path.
+
+use std::sync::{Mutex, RwLock};
+
+pub struct Buffers {
+    pub pending: Mutex<Vec<u8>>,
+    pub routes: RwLock<Vec<u16>>,
+}

@@ -1,0 +1,15 @@
+//! Fixture: R3 — direct thread spawning outside the worker pool.
+//! The spawn inside the `#[cfg(test)]` module must NOT be flagged.
+
+pub fn fan_out() -> i32 {
+    let h = std::thread::spawn(|| 7);
+    h.join().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn spawning_in_tests_is_fine() {
+        std::thread::spawn(|| ()).join().unwrap();
+    }
+}

@@ -1,0 +1,4 @@
+//! Fixture: waivers that suppress nothing are findings.
+
+// ps-lint: allow(thread-spawn): nothing here actually spawns
+pub fn calm() {}

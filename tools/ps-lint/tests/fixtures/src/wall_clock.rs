@@ -1,0 +1,12 @@
+//! Fixture: R1 — wall-clock reads outside the allowlist.
+
+use std::time::{Instant, SystemTime};
+
+pub fn elapsed() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn stamp() -> SystemTime {
+    SystemTime::now()
+}

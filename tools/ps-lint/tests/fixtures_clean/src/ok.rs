@@ -1,0 +1,20 @@
+//! A file every rule is happy with: BTreeMap instead of HashMap, a
+//! covered accounting fn, no locks, no wall clock, no ambient entropy.
+
+use std::collections::BTreeMap;
+
+pub struct Pool {
+    slots: BTreeMap<u32, u32>,
+    workers: usize,
+}
+
+impl Pool {
+    pub fn resize(&mut self, to: usize) {
+        self.workers = to;
+        debug_assert!(self.workers > 0, "pool cannot be emptied");
+    }
+
+    pub fn slot_sum(&self) -> u32 {
+        self.slots.values().sum()
+    }
+}

@@ -1,0 +1,110 @@
+//! Golden test: the known-bad fixture tree under `tests/fixtures/` must
+//! produce exactly the report in `tests/fixtures/expected.json`, and the
+//! clean tree under `tests/fixtures_clean/` must exit 0.
+//!
+//! JSON comparison is structural (parsed via `util::json`), so the golden
+//! file stays whitespace-insensitive while field values match exactly.
+
+use pilot_streaming::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn fixtures(which: &str) -> PathBuf {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    root.join("tests").join(which)
+}
+
+fn scan(which: &str) -> ps_lint::Report {
+    let root = fixtures(which);
+    ps_lint::run_from_config_file(&root, &root.join("ps-lint.toml")).expect("scan fixtures")
+}
+
+fn expected() -> Json {
+    let text = std::fs::read_to_string(fixtures("fixtures").join("expected.json"))
+        .expect("read expected.json");
+    Json::from_str_slice(&text).expect("parse expected.json")
+}
+
+#[test]
+fn bad_fixtures_match_golden_report() {
+    let report = scan("fixtures");
+    let actual = report.to_json();
+    let want = expected();
+    assert_eq!(
+        actual,
+        want,
+        "fixture report drifted from golden:\n--- actual ---\n{}\n--- expected ---\n{}",
+        actual.pretty(),
+        want.pretty()
+    );
+    assert_eq!(report.exit_code(), 1);
+}
+
+#[test]
+fn every_bad_fixture_contributes_a_finding() {
+    let report = scan("fixtures");
+    for file in [
+        "src/bad_waiver.rs",
+        "src/conserved_accounting.rs",
+        "src/entropy.rs",
+        "src/hash_iteration.rs",
+        "src/hot_path_lock.rs",
+        "src/thread_spawn.rs",
+        "src/unused_waiver.rs",
+        "src/wall_clock.rs",
+    ] {
+        assert!(
+            report.findings.iter().any(|f| f.file == file),
+            "no finding for {file}"
+        );
+    }
+    // the waived fixture shows up waived, never as a finding
+    assert!(report.findings.iter().all(|f| f.file != "src/waived.rs"));
+    assert!(report.waived.iter().any(|w| w.file == "src/waived.rs"));
+}
+
+#[test]
+fn clean_tree_is_clean() {
+    let report = scan("fixtures_clean");
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+    assert!(report.waived.is_empty());
+    assert_eq!(report.exit_code(), 0);
+}
+
+#[test]
+fn binary_exits_1_on_bad_tree_with_golden_json() {
+    let out = Command::new(env!("CARGO_BIN_EXE_ps-lint"))
+        .args(["--root", fixtures("fixtures").to_str().unwrap(), "--format", "json"])
+        .output()
+        .expect("run ps-lint");
+    assert_eq!(out.status.code(), Some(1), "{out:?}");
+    let actual = Json::from_str_slice(&String::from_utf8(out.stdout).unwrap())
+        .expect("binary emitted invalid JSON");
+    assert_eq!(actual, expected());
+}
+
+#[test]
+fn binary_exits_0_on_clean_tree() {
+    let out = Command::new(env!("CARGO_BIN_EXE_ps-lint"))
+        .args(["--root", fixtures("fixtures_clean").to_str().unwrap()])
+        .output()
+        .expect("run ps-lint");
+    assert_eq!(out.status.code(), Some(0), "{out:?}");
+    let text = String::from_utf8(out.stdout).unwrap();
+    assert!(text.contains("0 finding(s)"), "{text}");
+}
+
+#[test]
+fn binary_exits_2_on_usage_and_config_errors() {
+    let out = Command::new(env!("CARGO_BIN_EXE_ps-lint"))
+        .arg("--definitely-not-a-flag")
+        .output()
+        .expect("run ps-lint");
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+
+    let out = Command::new(env!("CARGO_BIN_EXE_ps-lint"))
+        .args(["--config", "/definitely/not/a/config.toml"])
+        .output()
+        .expect("run ps-lint");
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+}
