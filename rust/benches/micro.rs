@@ -27,7 +27,7 @@ fn main() {
     // --- broker put/fetch ---
     let clock = Arc::new(SimClock::new());
     let kafka = KafkaTopic::isolated("bench", 8, clock.clone());
-    let payload: Arc<Vec<f32>> = Arc::new(vec![0.0; 256 * 8]);
+    let payload: Arc<[f32]> = vec![0.0; 256 * 8].into();
     let mut key = 0u64;
     bench_ns("kafka.put (256-pt message)", || {
         key = key.wrapping_add(1);

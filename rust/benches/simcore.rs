@@ -1,0 +1,126 @@
+//! Million-user sim-core benchmark: one Lambda scenario pushed through
+//! the batched-cohort / SoA / lock-free-shard hot path at full scale —
+//! 10M messages by default (`PS_BENCH_SIMCORE_MESSAGES` overrides; CI
+//! runs a small count, the committed baseline records a full run).
+//!
+//! The scenario decomposes into one cell per shard (16 shards ≤ the
+//! paper's 30-container Lambda cap, forkable calibrated engine), so the
+//! run exercises the parallel-lane path with sampled tracing — the
+//! configuration a million-user campaign actually uses.
+//!
+//! Emits `BENCH_simcore.json` (override the path with
+//! `PS_BENCH_SIMCORE_OUT`); `msgs_per_sec` is the gated field, peak RSS
+//! and DES event counts ride along as trajectory data.
+//! Run: `cargo bench --bench simcore`.
+
+#[path = "common.rs"]
+#[allow(dead_code)]
+mod common;
+
+use pilot_streaming::engine::{CalibratedEngine, StepEngine};
+use pilot_streaming::miniapp::{run_sim_opts, PlatformKind, Scenario, SimMode, SimOptions, TraceMode};
+use pilot_streaming::sim::Dist;
+use pilot_streaming::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Messages for the headline run: ≥10M per the sim-core PR's bar.
+fn simcore_messages() -> usize {
+    std::env::var("PS_BENCH_SIMCORE_MESSAGES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000_000)
+}
+
+/// Peak resident set (MiB) from /proc/self/status VmHWM; 0.0 where the
+/// proc filesystem is unavailable (the field stays informational).
+fn peak_rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+fn main() {
+    let messages = simcore_messages();
+    let partitions = 16usize;
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let lanes = cores.min(partitions);
+
+    let sc = Scenario {
+        platform: PlatformKind::Lambda,
+        partitions,
+        points_per_message: 256,
+        centroids: 16,
+        messages,
+        seed: 42,
+        ..Default::default()
+    };
+    // A constant calibrated cost keeps the DES schedule dense and
+    // deterministic; wall time here measures the sim core, not the model.
+    let mut eng = CalibratedEngine::new(7);
+    eng.insert((256, 16), Dist::Const(0.001));
+    let engine: Arc<dyn StepEngine> = Arc::new(eng);
+
+    let opts = SimOptions {
+        mode: SimMode::Cohort,
+        lanes,
+        trace: TraceMode::Sampled { every: 1024 },
+    };
+    eprintln!(
+        "[bench] simcore: {messages} messages across {partitions} shards, {lanes} lane(s) on {cores} core(s)"
+    );
+
+    let t0 = Instant::now();
+    let r = run_sim_opts(&sc, engine, opts).expect("simcore run failed");
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let processed = r.summary.messages;
+    assert!(
+        processed >= messages,
+        "sim dropped messages: {processed} < {messages}"
+    );
+    assert!(
+        r.summary.throughput.is_finite() && r.summary.service.mean.is_finite(),
+        "non-finite summary out of the sim core"
+    );
+    let msgs_per_sec = processed as f64 / wall;
+    let rss = peak_rss_mb();
+    println!(
+        "{processed} msgs in {wall:.2}s | {msgs_per_sec:.0} msgs/s | {} DES events | peak RSS {rss:.1} MiB",
+        r.des_events
+    );
+
+    common::write_bench_json(
+        "PS_BENCH_SIMCORE_OUT",
+        "BENCH_simcore.json",
+        &["msgs_per_sec"],
+        vec![
+            ("platform", Json::from("lambda")),
+            ("partitions", Json::from(partitions)),
+            ("lanes", Json::from(lanes)),
+            ("cores", Json::from(cores)),
+            ("mode", Json::from("cohort")),
+            ("trace", Json::from("sampled:1024")),
+            ("messages", Json::from(processed)),
+            ("wall_seconds", Json::from(wall)),
+            ("msgs_per_sec", Json::from(msgs_per_sec)),
+            ("des_events", Json::from(r.des_events as usize)),
+            ("backoff_events", Json::from(r.backoff_events as usize)),
+            ("peak_rss_mb", Json::from(rss)),
+        ],
+    );
+}

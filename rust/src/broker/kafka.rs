@@ -3,13 +3,14 @@
 //! data log lives on Lustre and competes with the processing engine's model
 //! synchronization for the same I/O resource.
 
+use super::lane::LaneSet;
 use super::message::{Message, StoredRecord};
 use super::shard::Shard;
 use super::{partition_for_key, Broker, BrokerError, PutResult};
+use crate::sim::cohort::Cohort;
 use crate::sim::{ContentionParams, SharedClock, SharedResource};
 use std::sync::atomic::{AtomicU64, Ordering};
-// ps-lint: allow(hot-path-lock): known debt — shard locks are slated for removal in the lock-free sim-core rebuild (ROADMAP)
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 /// Kafka broker configuration.
 #[derive(Debug, Clone)]
@@ -32,13 +33,13 @@ impl Default for KafkaConfig {
     }
 }
 
-/// The Kafka-like topic.  Partitions live behind a `RwLock` so the
-/// elastic control plane can repartition a live topic
+/// The Kafka-like topic.  Partitions are single-owner lanes in a
+/// [`LaneSet`], so the data path (append/fetch) is lock-free while the
+/// elastic control plane can still repartition a live topic
 /// ([`KafkaTopic::set_partitions`]).
 pub struct KafkaTopic {
     name: String,
-    // ps-lint: allow(hot-path-lock): known debt — shard locks are slated for removal in the lock-free sim-core rebuild (ROADMAP)
-    partitions: RwLock<Vec<Shard>>,
+    partitions: LaneSet<Shard>,
     config: KafkaConfig,
     clock: SharedClock,
     /// The shared filesystem the log is flushed to.  On the paper's HPC
@@ -57,14 +58,10 @@ impl KafkaTopic {
         shared_fs: Arc<SharedResource>,
     ) -> Self {
         assert!(num_partitions > 0);
+        let retention = config.retention;
         Self {
             name: name.to_string(),
-            // ps-lint: allow(hot-path-lock): known debt — shard locks are slated for removal in the lock-free sim-core rebuild (ROADMAP)
-            partitions: RwLock::new(
-                (0..num_partitions)
-                    .map(|_| Shard::new(config.retention))
-                    .collect(),
-            ),
+            partitions: LaneSet::with_lanes(num_partitions, || Shard::new(retention)),
             config,
             clock,
             shared_fs,
@@ -78,12 +75,9 @@ impl KafkaTopic {
     /// models a topic rebuild.
     pub fn set_partitions(&self, n: usize) {
         assert!(n > 0, "topic needs at least one partition");
-        let mut parts = self.partitions.write().unwrap();
-        while parts.len() < n {
-            parts.push(Shard::new(self.config.retention));
-        }
-        parts.truncate(n);
-        debug_assert_eq!(parts.len(), n, "repartition must land exactly on n");
+        self.partitions
+            .resize_with(n, || Shard::new(self.config.retention));
+        debug_assert_eq!(self.partitions.len(), n, "repartition must land exactly on n");
     }
 
     /// Convenience: topic on an isolated (uncontended) filesystem.
@@ -115,6 +109,15 @@ impl KafkaTopic {
         let flush = wire / self.config.fs_bytes_per_sec;
         self.config.append_latency + flush * guard.inflation()
     }
+
+    /// Shared admission: partition choice + append cost for `wire` bytes of
+    /// key `key` at `now`; identical for solo and cohort records.
+    fn admit(&self, key: u64, wire: usize) -> (usize, f64) {
+        let partition = partition_for_key(key, self.partitions.len());
+        let now = self.clock.now();
+        let cost = self.append_cost(wire as f64);
+        (partition, now + cost)
+    }
 }
 
 impl Broker for KafkaTopic {
@@ -123,22 +126,37 @@ impl Broker for KafkaTopic {
     }
 
     fn num_partitions(&self) -> usize {
-        self.partitions.read().unwrap().len()
+        self.partitions.len()
     }
 
     fn put(&self, message: Message) -> Result<PutResult, BrokerError> {
-        let parts = self.partitions.read().unwrap();
-        let partition = partition_for_key(message.key, parts.len());
-        let now = self.clock.now();
-        let cost = self.append_cost(message.wire_bytes() as f64);
+        let (partition, available_at) = self.admit(message.key, message.wire_bytes());
         let produced_at = message.produced_at;
-        let available_at = now + cost;
-        let offset = parts[partition].append(message, available_at);
+        let shard = self
+            .partitions
+            .get(partition)
+            .ok_or(BrokerError::UnknownPartition(partition))?;
+        let offset = shard.append(message, available_at);
         self.appends.fetch_add(1, Ordering::Relaxed);
         Ok(PutResult {
             partition,
             offset,
             broker_latency: available_at - produced_at,
+        })
+    }
+
+    fn put_cohort(&self, cohort: &Cohort, seq: usize, now: f64) -> Result<PutResult, BrokerError> {
+        let (partition, available_at) = self.admit(cohort.key, cohort.wire_bytes());
+        let shard = self
+            .partitions
+            .get(partition)
+            .ok_or(BrokerError::UnknownPartition(partition))?;
+        let offset = shard.append_cohort_record(cohort, seq, now, available_at);
+        self.appends.fetch_add(1, Ordering::Relaxed);
+        Ok(PutResult {
+            partition,
+            offset,
+            broker_latency: available_at - now,
         })
     }
 
@@ -150,8 +168,6 @@ impl Broker for KafkaTopic {
         now: f64,
     ) -> Result<Vec<StoredRecord>, BrokerError> {
         self.partitions
-            .read()
-            .unwrap()
             .get(partition)
             .map(|s| s.fetch(offset, max, now))
             .ok_or(BrokerError::UnknownPartition(partition))
@@ -159,8 +175,6 @@ impl Broker for KafkaTopic {
 
     fn latest_offset(&self, partition: usize) -> Result<u64, BrokerError> {
         self.partitions
-            .read()
-            .unwrap()
             .get(partition)
             .map(|s| s.latest_offset())
             .ok_or(BrokerError::UnknownPartition(partition))
@@ -173,7 +187,7 @@ mod tests {
     use crate::sim::SimClock;
 
     fn msg(key: u64, n: usize, t: f64) -> Message {
-        Message::new(9, key, Arc::new(vec![0.0; n * 8]), 8, t)
+        Message::new(9, key, vec![0.0; n * 8].into(), 8, t)
     }
 
     #[test]
@@ -229,5 +243,41 @@ mod tests {
         clock.advance_to(10.0);
         let recs = t.fetch(0, 0, 100, 10.0).unwrap();
         assert_eq!(recs.len(), 5);
+    }
+
+    #[test]
+    fn cohort_put_matches_per_message_timing() {
+        let clock = Arc::new(SimClock::new());
+        let a = KafkaTopic::isolated("a", 2, clock.clone());
+        let b = KafkaTopic::isolated("b", 2, clock.clone());
+        let payload: Arc<[f32]> = vec![0.0f32; 100 * 8].into();
+        let cohort = Cohort::new(9, 500, 6, 1, Arc::clone(&payload), 8);
+        clock.advance_to(1.0);
+        for seq in 0..6 {
+            let rm = a
+                .put(Message::with_id(
+                    500 + seq as u64,
+                    9,
+                    1,
+                    Arc::clone(&payload),
+                    8,
+                    1.0,
+                ))
+                .unwrap();
+            let rc = b.put_cohort(&cohort, seq, 1.0).unwrap();
+            assert_eq!(rm, rc, "seq {seq}");
+        }
+        let (fa, fb) = (a.fetch(rm_part(&a), 0, 10, 2.0), b.fetch(rm_part(&b), 0, 10, 2.0));
+        let (fa, fb) = (fa.unwrap(), fb.unwrap());
+        assert_eq!(fa.len(), fb.len());
+        for (x, y) in fa.iter().zip(fb.iter()) {
+            assert_eq!(x.offset, y.offset);
+            assert_eq!(x.message.id, y.message.id);
+            assert_eq!(x.message.available_at.to_bits(), y.message.available_at.to_bits());
+        }
+    }
+
+    fn rm_part(t: &KafkaTopic) -> usize {
+        partition_for_key(1, t.num_partitions())
     }
 }

@@ -1,13 +1,19 @@
 //! Kinesis-like stream: provisioned shards, per-shard ingest rate limits
 //! with throttling, isolated (no cross-shard contention) — the serverless
 //! broker of the paper's AWS experiments.
+//!
+//! Shards are single-owner lanes ([`super::lane::LaneSet`]): the ingest
+//! gate (token buckets + counters) is plain atomics under the lane's
+//! single-writer contract, so the steady-state put/fetch path takes no
+//! locks; resharding goes through the lane set's control plane.
 
+use super::lane::LaneSet;
 use super::message::{Message, StoredRecord};
 use super::shard::Shard;
 use super::{partition_for_key, Broker, BrokerError, PutResult};
+use crate::sim::cohort::Cohort;
 use crate::sim::SharedClock;
-// ps-lint: allow(hot-path-lock): known debt — shard locks are slated for removal in the lock-free sim-core rebuild (ROADMAP)
-use std::sync::{Mutex, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Per-shard ingest limits (real Kinesis: 1 MB/s and 1,000 records/s).
 #[derive(Debug, Clone, Copy)]
@@ -29,12 +35,14 @@ impl Default for ShardLimits {
 }
 
 /// Token bucket over continuous time (works with wall or virtual clocks).
+/// State lives in bit-cast `f64` atomics, written only by the shard's
+/// producer (single-writer lane contract) so no lock is needed.
 #[derive(Debug)]
 struct TokenBucket {
     rate: f64,
     burst: f64,
-    tokens: f64,
-    last: f64,
+    tokens: AtomicU64,
+    last: AtomicU64,
 }
 
 impl TokenBucket {
@@ -42,41 +50,62 @@ impl TokenBucket {
         Self {
             rate,
             burst,
-            tokens: burst,
-            last: 0.0,
+            tokens: AtomicU64::new(burst.to_bits()),
+            last: AtomicU64::new(0f64.to_bits()),
         }
     }
 
     /// Try to take `amount` tokens at time `now`. On failure returns the
     /// time until enough tokens accrue.
-    fn try_take(&mut self, amount: f64, now: f64) -> Result<(), f64> {
-        if now > self.last {
-            self.tokens = (self.tokens + (now - self.last) * self.rate).min(self.burst);
-            self.last = now;
+    fn try_take(&self, amount: f64, now: f64) -> Result<(), f64> {
+        let mut tokens = f64::from_bits(self.tokens.load(Ordering::Relaxed));
+        let last = f64::from_bits(self.last.load(Ordering::Relaxed));
+        if now > last {
+            tokens = (tokens + (now - last) * self.rate).min(self.burst);
+            self.last.store(now.to_bits(), Ordering::Relaxed);
         }
-        if self.tokens >= amount {
-            self.tokens -= amount;
+        if tokens >= amount {
+            self.tokens.store((tokens - amount).to_bits(), Ordering::Relaxed);
             Ok(())
         } else {
-            Err((amount - self.tokens) / self.rate)
+            self.tokens.store(tokens.to_bits(), Ordering::Relaxed);
+            Err((amount - tokens) / self.rate)
         }
     }
 }
 
-struct ShardState {
+/// Admission control for one shard: rate buckets + diagnostics counters.
+struct IngestGate {
     bytes: TokenBucket,
     records: TokenBucket,
-    throttles: u64,
-    puts: u64,
+    throttles: AtomicU64,
+    puts: AtomicU64,
 }
 
-impl ShardState {
+impl IngestGate {
     fn new(limits: &ShardLimits) -> Self {
         Self {
             bytes: TokenBucket::new(limits.bytes_per_sec, limits.bytes_per_sec),
             records: TokenBucket::new(limits.records_per_sec, limits.records_per_sec),
-            throttles: 0,
-            puts: 0,
+            throttles: AtomicU64::new(0),
+            puts: AtomicU64::new(0),
+        }
+    }
+
+    /// Admit one record of `wire` bytes at `now`, or report how long until
+    /// the exhausted bucket refills.
+    fn admit(&self, wire: f64, now: f64) -> Result<(), f64> {
+        let need_bytes = self.bytes.try_take(wire, now);
+        let need_recs = self.records.try_take(1.0, now);
+        match (need_bytes, need_recs) {
+            (Ok(()), Ok(())) => {
+                self.puts.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            (b, r) => {
+                self.throttles.fetch_add(1, Ordering::Relaxed);
+                Err(b.err().unwrap_or(0.0).max(r.err().unwrap_or(0.0)))
+            }
         }
     }
 }
@@ -84,28 +113,24 @@ impl ShardState {
 /// One shard with its rate-limit state; the stream's resharding unit.
 struct ShardSlot {
     log: Shard,
-    // ps-lint: allow(hot-path-lock): known debt — shard locks are slated for removal in the lock-free sim-core rebuild (ROADMAP)
-    state: Mutex<ShardState>,
+    gate: IngestGate,
 }
 
 impl ShardSlot {
     fn new(limits: &ShardLimits) -> Self {
         Self {
             log: Shard::new(0),
-            // ps-lint: allow(hot-path-lock): known debt — shard locks are slated for removal in the lock-free sim-core rebuild (ROADMAP)
-            state: Mutex::new(ShardState::new(limits)),
+            gate: IngestGate::new(limits),
         }
     }
 }
 
-/// The Kinesis-like stream.  The shard set lives behind a `RwLock` so the
-/// elastic control plane can reshard a live stream
-/// ([`KinesisStream::set_shards`]) while producers and consumers keep
-/// running.
+/// The Kinesis-like stream.  The shard set is a [`LaneSet`] so the elastic
+/// control plane can reshard a live stream ([`KinesisStream::set_shards`])
+/// while producers and consumers keep running lock-free.
 pub struct KinesisStream {
     name: String,
-    // ps-lint: allow(hot-path-lock): known debt — shard locks are slated for removal in the lock-free sim-core rebuild (ROADMAP)
-    shards: RwLock<Vec<ShardSlot>>,
+    shards: LaneSet<ShardSlot>,
     limits: ShardLimits,
     clock: SharedClock,
 }
@@ -115,8 +140,7 @@ impl KinesisStream {
         assert!(num_shards > 0);
         Self {
             name: name.to_string(),
-            // ps-lint: allow(hot-path-lock): known debt — shard locks are slated for removal in the lock-free sim-core rebuild (ROADMAP)
-            shards: RwLock::new((0..num_shards).map(|_| ShardSlot::new(&limits)).collect()),
+            shards: LaneSet::with_lanes(num_shards, || ShardSlot::new(&limits)),
             limits,
             clock,
         }
@@ -132,31 +156,41 @@ impl KinesisStream {
     /// records the way a merge folds child iterators into the survivor.
     pub fn set_shards(&self, n: usize) {
         assert!(n > 0, "stream needs at least one shard");
-        let mut shards = self.shards.write().unwrap();
-        while shards.len() < n {
-            shards.push(ShardSlot::new(&self.limits));
-        }
-        shards.truncate(n);
-        debug_assert_eq!(shards.len(), n, "reshard must land exactly on n");
+        self.shards.resize_with(n, || ShardSlot::new(&self.limits));
+        debug_assert_eq!(self.shards.len(), n, "reshard must land exactly on n");
     }
 
     /// Throttling events observed on a shard (for backoff diagnostics).
     /// Shards merged away by [`KinesisStream::set_shards`] report 0.
     pub fn throttle_count(&self, shard: usize) -> u64 {
         self.shards
-            .read()
-            .unwrap()
             .get(shard)
-            .map_or(0, |s| s.state.lock().unwrap().throttles)
+            .map_or(0, |s| s.gate.throttles.load(Ordering::Relaxed))
     }
 
     /// Puts accepted on a shard; 0 for shards merged away.
     pub fn put_count(&self, shard: usize) -> u64 {
         self.shards
-            .read()
-            .unwrap()
             .get(shard)
-            .map_or(0, |s| s.state.lock().unwrap().puts)
+            .map_or(0, |s| s.gate.puts.load(Ordering::Relaxed))
+    }
+
+    /// Shared admission: pick the shard for `key` and run its ingest gate
+    /// for `wire` bytes; identical for solo and cohort records.
+    fn admit(&self, key: u64, wire: usize) -> Result<(usize, &ShardSlot, f64), BrokerError> {
+        let partition = partition_for_key(key, self.shards.len());
+        let slot = self
+            .shards
+            .get(partition)
+            .ok_or(BrokerError::UnknownPartition(partition))?;
+        let now = self.clock.now();
+        match slot.gate.admit(wire as f64, now) {
+            Ok(()) => Ok((partition, slot, now + self.limits.put_latency)),
+            Err(retry_after) => Err(BrokerError::Throttled {
+                shard: partition,
+                retry_after,
+            }),
+        }
     }
 }
 
@@ -166,39 +200,27 @@ impl Broker for KinesisStream {
     }
 
     fn num_partitions(&self) -> usize {
-        self.shards.read().unwrap().len()
+        self.shards.len()
     }
 
     fn put(&self, message: Message) -> Result<PutResult, BrokerError> {
-        let shards = self.shards.read().unwrap();
-        let partition = partition_for_key(message.key, shards.len());
-        let now = self.clock.now();
-        let wire = message.wire_bytes() as f64;
-        {
-            let mut st = shards[partition].state.lock().unwrap();
-            let need_bytes = st.bytes.try_take(wire, now);
-            let need_recs = st.records.try_take(1.0, now);
-            match (need_bytes, need_recs) {
-                (Ok(()), Ok(())) => {
-                    st.puts += 1;
-                }
-                (b, r) => {
-                    st.throttles += 1;
-                    let retry_after = b.err().unwrap_or(0.0).max(r.err().unwrap_or(0.0));
-                    return Err(BrokerError::Throttled {
-                        shard: partition,
-                        retry_after,
-                    });
-                }
-            }
-        }
+        let (partition, slot, available_at) = self.admit(message.key, message.wire_bytes())?;
         let produced_at = message.produced_at;
-        let available_at = now + self.limits.put_latency;
-        let offset = shards[partition].log.append(message, available_at);
+        let offset = slot.log.append(message, available_at);
         Ok(PutResult {
             partition,
             offset,
             broker_latency: available_at - produced_at,
+        })
+    }
+
+    fn put_cohort(&self, cohort: &Cohort, seq: usize, now: f64) -> Result<PutResult, BrokerError> {
+        let (partition, slot, available_at) = self.admit(cohort.key, cohort.wire_bytes())?;
+        let offset = slot.log.append_cohort_record(cohort, seq, now, available_at);
+        Ok(PutResult {
+            partition,
+            offset,
+            broker_latency: available_at - now,
         })
     }
 
@@ -210,8 +232,6 @@ impl Broker for KinesisStream {
         now: f64,
     ) -> Result<Vec<StoredRecord>, BrokerError> {
         self.shards
-            .read()
-            .unwrap()
             .get(partition)
             .map(|s| s.log.fetch(offset, max, now))
             .ok_or(BrokerError::UnknownPartition(partition))
@@ -219,8 +239,6 @@ impl Broker for KinesisStream {
 
     fn latest_offset(&self, partition: usize) -> Result<u64, BrokerError> {
         self.shards
-            .read()
-            .unwrap()
             .get(partition)
             .map(|s| s.log.latest_offset())
             .ok_or(BrokerError::UnknownPartition(partition))
@@ -245,7 +263,7 @@ mod tests {
     }
 
     fn msg(key: u64, n: usize, t: f64) -> Message {
-        Message::new(7, key, Arc::new(vec![0.0; n * 8]), 8, t)
+        Message::new(7, key, vec![0.0; n * 8].into(), 8, t)
     }
 
     #[test]
@@ -352,5 +370,60 @@ mod tests {
         }
         let lag = s.total_lag(&[0, 0]);
         assert_eq!(lag, s.latest_offset(0).unwrap() + s.latest_offset(1).unwrap());
+    }
+
+    #[test]
+    fn cohort_put_throttles_and_times_like_messages() {
+        // two identical streams fed the same traffic — one per message, one
+        // via the cohort fast path — must agree on every admit/throttle
+        // decision and every stored timestamp.
+        let clock = Arc::new(SimClock::new());
+        let limits = ShardLimits::default();
+        let a = KinesisStream::new("a", 1, limits, clock.clone() as SharedClock);
+        let b = KinesisStream::new("b", 1, limits, clock.clone() as SharedClock);
+        let payload: Arc<[f32]> = vec![0.0f32; 8000 * 8].into();
+        let cohort = Cohort::new(7, 100, 10, 1, Arc::clone(&payload), 8);
+        let (mut seq, mut step, mut throttled) = (0usize, 0u64, 0u64);
+        while seq < 10 {
+            let t = step as f64 * 0.1;
+            clock.advance_to(t);
+            let rm = a.put(Message::with_id(
+                100 + seq as u64,
+                7,
+                1,
+                Arc::clone(&payload),
+                8,
+                t,
+            ));
+            let rc = b.put_cohort(&cohort, seq, t);
+            assert_eq!(rm, rc, "seq {seq} step {step}");
+            // retry the same record after a throttle, as the driver does
+            if rm.is_ok() {
+                seq += 1;
+            } else {
+                throttled += 1;
+            }
+            step += 1;
+        }
+        assert!(throttled > 0, "8000-point records must throttle at 1 MB/s");
+        assert_eq!(a.throttle_count(0), b.throttle_count(0));
+        assert_eq!(a.put_count(0), b.put_count(0));
+        let (fa, fb) = (
+            a.fetch(0, 0, 100, 100.0).unwrap(),
+            b.fetch(0, 0, 100, 100.0).unwrap(),
+        );
+        assert_eq!(fa.len(), fb.len());
+        for (x, y) in fa.iter().zip(fb.iter()) {
+            assert_eq!(x.offset, y.offset);
+            assert_eq!(x.message.id, y.message.id);
+            assert_eq!(
+                x.message.available_at.to_bits(),
+                y.message.available_at.to_bits()
+            );
+            assert_eq!(
+                x.message.produced_at.to_bits(),
+                y.message.produced_at.to_bits()
+            );
+        }
     }
 }

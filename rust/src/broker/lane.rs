@@ -1,0 +1,208 @@
+//! Single-owner shard lanes: a lock-free, resizable lane directory.
+//!
+//! Brokers used to keep their shard vectors behind a reader-writer lock so
+//! the elastic control plane could reshard live streams; every `put` and
+//! `fetch` paid for that lock.  [`LaneSet`] replaces the pattern with an
+//! append-only arena (lanes are allocated once and never move, so readers
+//! hold stable references with no guard) plus an atomic lane→arena map the
+//! control plane repoints on reshard.  The steady-state path — `get`,
+//! `len`, iteration — is wait-free; only the *resize* path serializes
+//! control-plane callers, which is exactly the ownership-transfer story of
+//! the sim core: a lane belongs to one producer until the control plane
+//! hands it over.
+//!
+//! Lanes retired by a shrink stay allocated (readers may still hold them)
+//! and are reclaimed when the `LaneSet` drops — reshard cycles are bounded
+//! and rare, so this trades a few retained lanes for a lock-free data path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+// ps-lint: allow(hot-path-lock): import only — the one Mutex guards control-plane reshard
+use std::sync::{Mutex, OnceLock};
+
+/// Levels in the geometric directories (level `l` holds `1 << l` slots).
+const DIR_LEVELS: usize = 40;
+
+type Level<T> = OnceLock<Box<[T]>>;
+
+fn level_of(i: usize) -> (usize, usize) {
+    let level = (usize::BITS - 1 - (i + 1).leading_zeros()) as usize;
+    (level, (i + 1) - (1 << level))
+}
+
+/// A resizable set of single-owner lanes with a wait-free read path.
+pub struct LaneSet<T> {
+    /// Append-only lane storage; a slot, once set, never moves or frees
+    /// until the set drops.
+    arena: [Level<OnceLock<T>>; DIR_LEVELS],
+    /// Arena slots allocated so far (mutated under `resize` only).
+    arena_len: AtomicUsize,
+    /// Lane index → arena index + 1 (0 = unmapped).
+    map: [Level<AtomicUsize>; DIR_LEVELS],
+    /// Live lane count.
+    len: AtomicUsize,
+    /// Control-plane resize serialization — never taken on the data path.
+    // ps-lint: allow(hot-path-lock): control-plane reshard only; get/len/iteration are lock-free
+    resize: Mutex<()>,
+}
+
+impl<T> LaneSet<T> {
+    pub fn new() -> Self {
+        Self {
+            arena: std::array::from_fn(|_| OnceLock::new()),
+            arena_len: AtomicUsize::new(0),
+            map: std::array::from_fn(|_| OnceLock::new()),
+            len: AtomicUsize::new(0),
+            // ps-lint: allow(hot-path-lock): control-plane reshard only; never taken on the data path
+            resize: Mutex::new(()),
+        }
+    }
+
+    pub fn with_lanes(n: usize, make: impl FnMut() -> T) -> Self {
+        let set = Self::new();
+        set.resize_with(n, make);
+        set
+    }
+
+    fn arena_slot(&self, i: usize) -> &OnceLock<T> {
+        let (level, pos) = level_of(i);
+        let arr = self.arena[level].get_or_init(|| {
+            (0..(1usize << level))
+                .map(|_| OnceLock::new())
+                .collect::<Vec<_>>()
+                .into_boxed_slice()
+        });
+        &arr[pos]
+    }
+
+    fn map_slot(&self, lane: usize) -> &AtomicUsize {
+        let (level, pos) = level_of(lane);
+        let arr = self.map[level].get_or_init(|| {
+            (0..(1usize << level))
+                .map(|_| AtomicUsize::new(0))
+                .collect::<Vec<_>>()
+                .into_boxed_slice()
+        });
+        &arr[pos]
+    }
+
+    /// Live lane count.
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Acquire)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lane `i`, or `None` past the live count.  Wait-free; the reference
+    /// stays valid for the set's lifetime even across a reshard.
+    pub fn get(&self, i: usize) -> Option<&T> {
+        if i >= self.len() {
+            return None;
+        }
+        let idx = self.map_slot(i).load(Ordering::Acquire);
+        if idx == 0 {
+            return None;
+        }
+        self.arena_slot(idx - 1).get()
+    }
+
+    /// Iterate the live lanes (a snapshot of the count at call time).
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        (0..self.len()).filter_map(move |i| self.get(i))
+    }
+
+    /// Resize to `n` lanes: grown lanes come fresh from `make`; shrunk
+    /// lanes are retired (kept allocated for in-flight readers) and are
+    /// replaced by fresh ones if the set grows again.  Serializes against
+    /// concurrent resizes only — readers never block.
+    pub fn resize_with(&self, n: usize, mut make: impl FnMut() -> T) {
+        let _guard = self.resize.lock().unwrap();
+        let old = self.len.load(Ordering::Relaxed);
+        for lane in old..n {
+            let idx = self.arena_len.load(Ordering::Relaxed);
+            let ok = self.arena_slot(idx).set(make()).is_ok();
+            debug_assert!(ok, "arena slot {idx} already set");
+            self.arena_len.store(idx + 1, Ordering::Relaxed);
+            // repoint the lane before publishing the new count
+            self.map_slot(lane).store(idx + 1, Ordering::Release);
+        }
+        self.len.store(n, Ordering::Release);
+    }
+}
+
+impl<T> Default for LaneSet<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_and_index() {
+        let mut next = 0;
+        let set = LaneSet::with_lanes(3, || {
+            next += 1;
+            next
+        });
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.get(0), Some(&1));
+        assert_eq!(set.get(2), Some(&3));
+        assert_eq!(set.get(3), None);
+        assert_eq!(set.iter().copied().collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn shrink_then_regrow_gets_fresh_lanes() {
+        let set = LaneSet::with_lanes(4, || 0u64);
+        set.resize_with(1, || 0);
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.get(1), None);
+        let mut stamp = 100;
+        set.resize_with(3, || {
+            stamp += 1;
+            stamp
+        });
+        // regrown lanes are fresh, not the retired ones
+        assert_eq!(set.get(1), Some(&101));
+        assert_eq!(set.get(2), Some(&102));
+        assert_eq!(set.get(0), Some(&0));
+    }
+
+    #[test]
+    fn references_survive_resharding() {
+        let set = LaneSet::with_lanes(2, || AtomicUsize::new(7));
+        let held = set.get(1).unwrap();
+        set.resize_with(1, || AtomicUsize::new(0));
+        set.resize_with(8, || AtomicUsize::new(0));
+        // the retired lane is still alive and usable
+        assert_eq!(held.load(Ordering::Relaxed), 7);
+        held.store(9, Ordering::Relaxed);
+        assert_eq!(held.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn concurrent_readers_while_resharding() {
+        let set = std::sync::Arc::new(LaneSet::with_lanes(1, || 42u32));
+        let reader = {
+            let set = std::sync::Arc::clone(&set);
+            std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    let n = set.len();
+                    for i in 0..n {
+                        if let Some(v) = set.get(i) {
+                            assert_eq!(*v, 42);
+                        }
+                    }
+                }
+            })
+        };
+        for n in (1..50).chain((1..50).rev()) {
+            set.resize_with(n, || 42);
+        }
+        reader.join().unwrap();
+    }
+}

@@ -2,8 +2,10 @@
 //!
 //! A message is one unit of streaming work: a batch of `n_points` d-dim f32
 //! points (the K-Means minibatch) plus tracing metadata.  The payload is an
-//! `Arc<Vec<f32>>` so brokers, consumers and the PJRT runtime share one
-//! allocation — no copies on the hot path.
+//! `Arc<[f32]>` slab so brokers, consumers, cohort batches and the PJRT
+//! runtime share one allocation — no copies on the hot path, and cohort
+//! records in a [`crate::broker::shard::Shard`] batch all point at the same
+//! slab.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -11,6 +13,11 @@ use std::sync::Arc;
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Unique, process-wide message id.
+///
+/// Live/interactive paths use this fallback allocator; the sim driver
+/// allocates ids per run ([`crate::sim::cohort::IdAlloc`]) so same-seed
+/// scenarios see identical id sequences regardless of what else ran in the
+/// process.
 pub fn next_message_id() -> u64 {
     NEXT_ID.fetch_add(1, Ordering::Relaxed)
 }
@@ -18,7 +25,8 @@ pub fn next_message_id() -> u64 {
 /// One streaming message.
 #[derive(Debug, Clone)]
 pub struct Message {
-    /// Process-unique id.
+    /// Message id: process-unique ([`Message::new`]) or run-scoped
+    /// ([`Message::with_id`]).
     pub id: u64,
     /// Benchmark run this message belongs to (StreamInsight trace id,
     /// propagated producer → broker → processing, paper §IV).
@@ -26,7 +34,7 @@ pub struct Message {
     /// Partitioning key (hashed onto a shard).
     pub key: u64,
     /// The points payload, row-major [n_points, dim].
-    pub points: Arc<Vec<f32>>,
+    pub points: Arc<[f32]>,
     /// Number of points in the payload.
     pub n_points: usize,
     /// Feature dimension.
@@ -38,11 +46,24 @@ pub struct Message {
 }
 
 impl Message {
-    pub fn new(run_id: u64, key: u64, points: Arc<Vec<f32>>, dim: usize, now: f64) -> Self {
+    pub fn new(run_id: u64, key: u64, points: Arc<[f32]>, dim: usize, now: f64) -> Self {
+        Self::with_id(next_message_id(), run_id, key, points, dim, now)
+    }
+
+    /// Build a message with a caller-chosen id (per-run deterministic id
+    /// allocation on the sim path).
+    pub fn with_id(
+        id: u64,
+        run_id: u64,
+        key: u64,
+        points: Arc<[f32]>,
+        dim: usize,
+        now: f64,
+    ) -> Self {
         assert!(dim > 0 && points.len() % dim == 0, "ragged payload");
         let n_points = points.len() / dim;
         Self {
-            id: next_message_id(),
+            id,
             run_id,
             key,
             points,
@@ -71,6 +92,13 @@ impl Message {
     }
 }
 
+/// Wire size for a flat payload of `flat_len` f32s covering `n_points`
+/// points (mirrors [`Message::wire_bytes`] exactly) — usable before a
+/// `Message` is materialized (cohort fast path).
+pub fn wire_bytes_for_flat(flat_len: usize, n_points: usize) -> usize {
+    flat_len * std::mem::size_of::<f32>() + 64 + 5 * n_points
+}
+
 /// A record as stored in a shard: message + position.
 #[derive(Debug, Clone)]
 pub struct StoredRecord {
@@ -83,7 +111,7 @@ mod tests {
     use super::*;
 
     fn msg(n: usize, d: usize) -> Message {
-        Message::new(1, 42, Arc::new(vec![0.0; n * d]), d, 10.0)
+        Message::new(1, 42, vec![0.0; n * d].into(), d, 10.0)
     }
 
     #[test]
@@ -94,6 +122,13 @@ mod tests {
     }
 
     #[test]
+    fn with_id_is_caller_controlled() {
+        let m = Message::with_id(1234, 1, 0, vec![0.0; 4].into(), 2, 0.0);
+        assert_eq!(m.id, 1234);
+        assert_eq!(m.n_points, 2);
+    }
+
+    #[test]
     fn sizes() {
         let m = msg(8000, 8);
         assert_eq!(m.n_points, 8000);
@@ -101,12 +136,13 @@ mod tests {
         // ~296 kB on the wire for the paper's 8,000-point message
         let kb = m.wire_bytes() as f64 / 1000.0;
         assert!((kb - 296.0).abs() < 10.0, "wire={kb} kB");
+        assert_eq!(wire_bytes_for_flat(8000 * 8, 8000), m.wire_bytes());
     }
 
     #[test]
     #[should_panic(expected = "ragged")]
     fn ragged_payload_rejected() {
-        Message::new(1, 0, Arc::new(vec![0.0; 7]), 2, 0.0);
+        Message::new(1, 0, vec![0.0; 7].into(), 2, 0.0);
     }
 
     #[test]

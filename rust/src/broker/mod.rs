@@ -13,14 +13,18 @@
 pub mod backoff;
 pub mod kafka;
 pub mod kinesis;
+pub mod lane;
 pub mod message;
 pub mod shard;
 
 pub use backoff::BackoffController;
 pub use kafka::KafkaTopic;
 pub use kinesis::KinesisStream;
-pub use message::{Message, StoredRecord};
+pub use lane::LaneSet;
+pub use message::{next_message_id, wire_bytes_for_flat, Message, StoredRecord};
 pub use shard::Shard;
+
+use crate::sim::cohort::Cohort;
 
 use thiserror::Error;
 
@@ -53,6 +57,15 @@ pub trait Broker: Send + Sync {
 
     /// Put a record; the broker assigns the partition from `message.key`.
     fn put(&self, message: Message) -> Result<PutResult, BrokerError>;
+
+    /// Cohort fast path: admit record `seq` of `cohort` at time `now`.
+    /// Admission control and timing are identical to [`Broker::put`] record
+    /// by record — only the storage may batch.  The default materializes
+    /// the record and goes through `put`, so every broker (plugins
+    /// included) accepts cohorts.
+    fn put_cohort(&self, cohort: &Cohort, seq: usize, now: f64) -> Result<PutResult, BrokerError> {
+        self.put(cohort.message_at(seq, now))
+    }
 
     /// Fetch up to `max` records from `partition` starting at `offset`,
     /// visible at time `now`.

@@ -50,6 +50,16 @@ pub trait StepEngine: Send + Sync {
         dim: usize,
         model: &ModelState,
     ) -> Result<StepResult, EngineError>;
+
+    /// Fork an independent engine for a parallel sim lane, reseeded
+    /// deterministically by `salt` (same configuration, decorrelated cost
+    /// stream).  `None` (the default) means the engine has shared state
+    /// that cannot be split — the sim driver then keeps the scenario on a
+    /// single lane.
+    fn fork(&self, salt: u64) -> Option<std::sync::Arc<dyn StepEngine>> {
+        let _ = salt;
+        None
+    }
 }
 
 /// Key for calibration tables: (points-per-message, centroids).
@@ -64,6 +74,8 @@ pub struct CalibratedEngine {
     /// point-centroid pair (the O(n*c) coefficient) + fixed overhead.
     pub per_pair_seconds: f64,
     pub fixed_seconds: f64,
+    /// Seed the rng was built from (kept so lane forks stay deterministic).
+    seed: u64,
     rng: Mutex<Pcg32>,
 }
 
@@ -75,6 +87,7 @@ impl CalibratedEngine {
             // machine (see runtime::calibrate and EXPERIMENTS.md §Perf)
             per_pair_seconds: 2.0e-9,
             fixed_seconds: 1.5e-3,
+            seed,
             rng: Mutex::new(Pcg32::seeded(seed)),
         }
     }
@@ -124,6 +137,19 @@ impl StepEngine for CalibratedEngine {
             cpu_seconds: cpu,
         })
     }
+
+    /// A calibrated engine forks cleanly: same table and coefficients, rng
+    /// reseeded from (seed, salt) so each lane draws an independent but
+    /// reproducible cost stream.
+    fn fork(&self, salt: u64) -> Option<std::sync::Arc<dyn StepEngine>> {
+        let seed = crate::util::rng::SplitMix64::new(self.seed ^ (salt.wrapping_add(1)))
+            .next_u64();
+        let mut forked = CalibratedEngine::new(seed);
+        forked.table = self.table.clone();
+        forked.per_pair_seconds = self.per_pair_seconds;
+        forked.fixed_seconds = self.fixed_seconds;
+        Some(std::sync::Arc::new(forked))
+    }
 }
 
 #[cfg(test)]
@@ -157,6 +183,27 @@ mod tests {
         let m = ModelState::new_random(4, 4, 1);
         assert!(e.execute_step(&vec![0.0; 7], 4, &m).is_err());
         assert!(e.execute_step(&vec![0.0; 4], 0, &m).is_err());
+    }
+
+    #[test]
+    fn fork_keeps_table_and_is_deterministic() {
+        let mut e = CalibratedEngine::new(11);
+        e.insert((100, 16), Dist::Const(0.25));
+        let m = ModelState::new_random(16, 8, 1);
+        let draw = |eng: &dyn StepEngine| {
+            (0..4)
+                .map(|_| eng.execute_step(&vec![0.0; 80], 8, &m).unwrap().cpu_seconds)
+                .collect::<Vec<_>>()
+        };
+        let f1 = e.fork(3).expect("calibrated engines fork");
+        let f2 = e.fork(3).unwrap();
+        assert_eq!(draw(f1.as_ref()), draw(f2.as_ref()), "same salt, same stream");
+        let other = e.fork(4).unwrap();
+        assert_ne!(draw(f1.as_ref()), draw(other.as_ref()), "salts decorrelate");
+        // the calibration table travels with the fork
+        let mt = ModelState::new_random(16, 8, 1);
+        let r = e.fork(0).unwrap().execute_step(&vec![0.0; 800], 8, &mt).unwrap();
+        assert_eq!(r.cpu_seconds, 0.25);
     }
 
     #[test]

@@ -90,6 +90,6 @@ pub use recalibrate::{
     OnlineUslFitter, RecalibrateConfig, RecalibrationTrace, RefitEvent, UslSample,
 };
 pub use sweep::{
-    group_keys, group_observations, paper_key, run_sweep, run_sweep_jobs, to_csv, GroupKey,
-    SweepProgress, SweepRow,
+    group_keys, group_observations, paper_key, run_sweep, run_sweep_jobs, run_sweep_jobs_opts,
+    to_csv, GroupKey, SweepProgress, SweepRow,
 };

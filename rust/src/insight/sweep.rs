@@ -17,7 +17,7 @@
 use super::experiment::{axis_value_of, AxisValue, ExperimentSpec};
 use super::experiment::{AXIS_CENTROIDS, AXIS_MEMORY_MB, AXIS_MESSAGE_SIZE, AXIS_PLATFORM};
 use crate::engine::StepEngine;
-use crate::miniapp::{run_sim, PlatformKind, Scenario};
+use crate::miniapp::{run_sim_opts, PlatformKind, Scenario, SimOptions};
 use crate::pilot::workers::parallel_indexed_map;
 use crate::usl::Obs;
 // ps-lint: allow(hash-iteration): HashSet used for membership/dedup only below; GroupKey has no Ord (AxisValue) so BTreeSet cannot replace it
@@ -150,11 +150,16 @@ pub struct SweepProgress<'a> {
     pub row: &'a SweepRow,
 }
 
-fn measure<F>(spec: &ExperimentSpec, sc: &Scenario, engine_factory: &F) -> Result<SweepRow, String>
+fn measure<F>(
+    spec: &ExperimentSpec,
+    sc: &Scenario,
+    engine_factory: &F,
+    opts: SimOptions,
+) -> Result<SweepRow, String>
 where
     F: Fn(&Scenario) -> Arc<dyn StepEngine>,
 {
-    let r = run_sim(sc, engine_factory(sc))?;
+    let r = run_sim_opts(sc, engine_factory(sc), opts)?;
     let key = GroupKey::new(
         spec.axes
             .iter()
@@ -203,6 +208,24 @@ pub fn run_sweep_jobs<F, C>(
     spec: &ExperimentSpec,
     engine_factory: F,
     jobs: usize,
+    progress: C,
+) -> Vec<SweepRow>
+where
+    F: Fn(&Scenario) -> Arc<dyn StepEngine> + Sync,
+    C: FnMut(SweepProgress<'_>),
+{
+    run_sweep_jobs_opts(spec, engine_factory, jobs, SimOptions::default(), progress)
+}
+
+/// [`run_sweep_jobs`] with explicit sim-core options (production mode,
+/// per-scenario lanes, trace retention).  Every combination of `jobs`,
+/// `opts.lanes`, and `opts.mode` yields byte-identical rows — the
+/// determinism tests pin this.
+pub fn run_sweep_jobs_opts<F, C>(
+    spec: &ExperimentSpec,
+    engine_factory: F,
+    jobs: usize,
+    opts: SimOptions,
     mut progress: C,
 ) -> Vec<SweepRow>
 where
@@ -219,7 +242,7 @@ where
     parallel_indexed_map(
         jobs.max(1),
         total,
-        move |_worker, i| measure(spec, &scenarios_ref[i], factory_ref),
+        move |_worker, i| measure(spec, &scenarios_ref[i], factory_ref, opts),
         |i, outcome| match outcome {
             Ok(row) => {
                 done += 1;
@@ -397,6 +420,82 @@ mod tests {
         assert_eq!(events, seq.len());
         assert_eq!(seq, par, "rows identical in value and order");
         assert_eq!(to_csv(&seq), to_csv(&par), "byte-identical CSV");
+    }
+
+    #[test]
+    fn cohort_and_per_message_sweeps_are_byte_identical() {
+        // satellite determinism gate: the batched sim core (cohorts,
+        // cells, lanes) must reproduce the per-message oracle's CSV to
+        // the byte, across seeds, sweep workers, and sim lanes
+        use crate::miniapp::SimMode;
+        for seed in [5u64, 11] {
+            let mut spec = ExperimentSpec::tiny_grid(24, seed);
+            spec.lustre = ContentionParams::new(0.5, 0.03);
+            let base = to_csv(&run_sweep_jobs_opts(
+                &spec,
+                factory,
+                1,
+                SimOptions {
+                    mode: SimMode::PerMessage,
+                    ..Default::default()
+                },
+                |_| {},
+            ));
+            assert_eq!(base.lines().count(), spec.size() + 1, "header + one row per config");
+            for jobs in [1usize, 2, 8] {
+                for (mode, lanes) in [
+                    (SimMode::Cohort, 1),
+                    (SimMode::Cohort, 4),
+                    (SimMode::PerMessage, 2),
+                ] {
+                    let rows = run_sweep_jobs_opts(
+                        &spec,
+                        factory,
+                        jobs,
+                        SimOptions {
+                            mode,
+                            lanes,
+                            ..Default::default()
+                        },
+                        |_| {},
+                    );
+                    assert_eq!(
+                        to_csv(&rows),
+                        base,
+                        "seed={seed} jobs={jobs} lanes={lanes} {mode:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn edge_fleet_sweep_matches_across_modes() {
+        // the co-located edge stack exercises the default put_cohort
+        // (materialize + put) — still byte-identical to per-message
+        use crate::miniapp::SimMode;
+        let edge_factory = |sc: &crate::miniapp::Scenario| -> Arc<dyn StepEngine> {
+            let mut e = CalibratedEngine::new(sc.seed ^ sc.partitions as u64);
+            e.insert((8_000, 128), Dist::Const(0.01));
+            Arc::new(e)
+        };
+        let spec = ExperimentSpec::edge_fleet_grid(8, 7);
+        let base = to_csv(&run_sweep_jobs_opts(
+            &spec,
+            edge_factory,
+            1,
+            SimOptions {
+                mode: SimMode::PerMessage,
+                ..Default::default()
+            },
+            |_| {},
+        ));
+        assert_eq!(base.lines().count(), spec.size() + 1, "header + one row per config");
+        for jobs in [2usize, 8] {
+            let rows =
+                run_sweep_jobs_opts(&spec, edge_factory, jobs, SimOptions::default(), |_| {});
+            assert_eq!(to_csv(&rows), base, "jobs={jobs}");
+        }
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use pilot_streaming::engine::StepEngine;
 use pilot_streaming::insight::{self, figures, ExperimentSpec};
-use pilot_streaming::miniapp::{run_live, run_sim, PlatformKind, Scenario};
+use pilot_streaming::miniapp::{run_live, run_sim_opts, PlatformKind, Scenario, SimOptions};
 use pilot_streaming::runtime::{calibrate, Manifest, PjrtEngine};
 use pilot_streaming::util::cli::{App, Args, CliError, CommandSpec};
 use pilot_streaming::util::logging;
@@ -32,6 +32,7 @@ fn app() -> App {
             .opt("messages", "64", "messages to process")
             .opt("seed", "42", "rng seed")
             .opt("edge-sites", "1", "edge fleet size (multi-site placement; platform edge)")
+            .opt("lanes", "1", "parallel sim lanes per scenario (0 = one per core; sim only)")
             .flag("live", "run live (threads + real PJRT) instead of simulated time"),
     )
     .command(
@@ -40,6 +41,7 @@ fn app() -> App {
             .opt("seed", "42", "rng seed")
             .opt("grid", "paper", "preset grid: paper | edge | edge-fleet | memory | tiny")
             .opt("jobs", "0", "parallel sweep workers (0 = one per core)")
+            .opt("lanes", "1", "parallel sim lanes per scenario (0 = one per core)")
             .opt("csv", "", "write per-config CSV to this path")
             .opt("config", "", "TOML experiment file (overrides the preset grid)"),
     )
@@ -161,11 +163,25 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         println!("final rate         {:.2} msg/s", r.final_rate);
     } else {
         let engine = engine_for_scenario(false, 1)?;
-        let r = run_sim(&sc, engine)?;
+        let opts = SimOptions {
+            lanes: lanes_from(args)?,
+            ..Default::default()
+        };
+        let r = run_sim_opts(&sc, engine, opts)?;
         print_summary(&format!("sim {}", sc.platform.label()), &r.summary);
         println!("des events         {}", r.des_events);
     }
     Ok(())
+}
+
+/// `--lanes`: parallel sim lanes per scenario (0 = one per core).
+fn lanes_from(args: &Args) -> Result<usize, String> {
+    Ok(match args.get_usize("lanes").map_err(|e| e.to_string())? {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    })
 }
 
 fn cmd_sweep(args: &Args) -> Result<(), String> {
@@ -200,10 +216,15 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     // the final table/CSV below are reassembled in spec order and are
     // byte-identical for every --jobs value
     let mut inc = insight::IncrementalAnalysis::new(&spec);
-    let rows = insight::run_sweep_jobs(
+    let opts = SimOptions {
+        lanes: lanes_from(args)?,
+        ..Default::default()
+    };
+    let rows = insight::run_sweep_jobs_opts(
         &spec,
         figures::engine_factory(figures::default_calibration()),
         jobs,
+        opts,
         |p| {
             eprintln!(
                 "[{}/{}] {} {}={} -> {:.2} msg/s",

@@ -7,7 +7,6 @@
 
 use crate::broker::Message;
 use crate::util::rng::Pcg32;
-use std::sync::Arc;
 
 /// Generator configuration.
 #[derive(Debug, Clone)]
@@ -90,7 +89,7 @@ impl DataGenerator {
         }
         self.produced += 1;
         self.next_key = self.next_key.wrapping_add(1);
-        Message::new(run_id, self.next_key, Arc::new(points), d, now)
+        Message::new(run_id, self.next_key, points.into(), d, now)
     }
 
     /// Generate a message targeted at a specific partition of a

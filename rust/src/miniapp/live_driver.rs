@@ -172,7 +172,7 @@ pub struct LivePilot {
     clock: Arc<SimClock>,
     /// Per-lane busy-until time (sim seconds).
     lanes: Vec<f64>,
-    points: Arc<Vec<f32>>,
+    points: Arc<[f32]>,
     dim: usize,
     centroids: usize,
     model_key: String,

@@ -18,5 +18,5 @@ pub mod trace;
 pub use generator::{DataGenerator, GeneratorConfig};
 pub use live_driver::{run_live, LivePilot, LiveRunResult};
 pub use platform::{PlatformKind, PlatformUnderTest, ProcessCost, Scenario};
-pub use sim_driver::{run_sim, SimRunResult};
-pub use trace::{next_run_id, MessageTrace, RunSummary, RunTrace};
+pub use sim_driver::{run_sim, run_sim_opts, SimMode, SimOptions, SimRunResult};
+pub use trace::{next_run_id, MessageTrace, RunSummary, RunTrace, TraceMode};

@@ -183,6 +183,39 @@ impl Scenario {
         }
     }
 
+    /// Deterministic 64-bit key of this configuration — the sim driver's
+    /// run id.  Derived from every field (FNV-1a over a canonical
+    /// serialization), so two same-seed runs of the same scenario share a
+    /// run id — and therefore identical message-id streams — no matter
+    /// what else ran in the process, while any config change moves it.
+    pub fn run_key(&self) -> u64 {
+        fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+            h
+        }
+        let mut h = fnv(0xcbf2_9ce4_8422_2325, self.platform.label().as_bytes());
+        for v in [
+            self.partitions as u64,
+            self.points_per_message as u64,
+            self.centroids as u64,
+            self.memory_mb as u64,
+            self.messages as u64,
+            self.seed,
+            self.lustre.alpha.to_bits(),
+            self.lustre.beta.to_bits(),
+        ] {
+            h = fnv(h, &v.to_le_bytes());
+        }
+        for (name, v) in &self.extra {
+            h = fnv(h, name.as_bytes());
+            h = fnv(h, &v.to_le_bytes());
+        }
+        h | 1 // run ids are nonzero
+    }
+
     /// Expand into the pilot descriptions this scenario provisions:
     /// broker + processing pilots for the cloud/HPC stacks, one co-located
     /// pilot for the edge (its broker lives on the device).
@@ -543,6 +576,24 @@ mod tests {
         s.set_extra("edge_sites", 8);
         assert_eq!(s.extra_param("edge_sites"), Some(8));
         assert_eq!(s.extra.len(), 1, "set_extra replaces in place");
+    }
+
+    #[test]
+    fn run_key_is_stable_and_config_sensitive() {
+        let s = Scenario::default();
+        assert_eq!(s.run_key(), s.run_key());
+        assert_ne!(s.run_key(), 0);
+        for other in [
+            Scenario { seed: 43, ..s.clone() },
+            Scenario { partitions: 5, ..s.clone() },
+            Scenario { messages: 65, ..s.clone() },
+            Scenario { platform: PlatformKind::Edge, ..s.clone() },
+        ] {
+            assert_ne!(s.run_key(), other.run_key(), "{other:?}");
+        }
+        let mut extra = s.clone();
+        extra.set_extra("edge_sites", 4);
+        assert_ne!(s.run_key(), extra.run_key());
     }
 
     #[test]

@@ -11,23 +11,85 @@
 //!   (platform cost model; compute calibrated from live PJRT runs) →
 //!   commit → produce next …
 //!
-//! [`run_sim`] is **safely spawnable per worker thread**: every call owns
-//! its DES, clock, generator, stores, and engine (the caller's factory
-//! builds a fresh one per scenario), and the only cross-run state is the
-//! atomic run-id counter — which stamps traces but never feeds a cost
-//! model.  The insight campaign engine relies on this to run independent
-//! sweep configurations concurrently with bit-identical results.
+//! # The million-user sim core
+//!
+//! The hot path is batched and sharded so one scenario scales to tens of
+//! millions of messages (see ARCHITECTURE.md "Sim-core data layout"):
+//!
+//! - **Cohorts** ([`SimMode::Cohort`], the default): each production lane
+//!   emits one [`Cohort`] — a count, one shared payload slab, one key, a
+//!   contiguous id range — and the broker stores ~16-byte SoA records
+//!   instead of `Message` clones.  Admission (token buckets, append
+//!   costs) happens per record at the same event times, so the cohort
+//!   path is **bit-identical** in every measured quantity to
+//!   [`SimMode::PerMessage`], which materializes each message the
+//!   historical way.
+//! - **Cells**: a serverless scenario whose shards are independent by
+//!   construction (Kinesis shard + its own Lambda container, no shared
+//!   medium) decomposes into one sub-simulation per shard.  Each cell
+//!   owns a DES, a forked engine ([`StepEngine::fork`]), a derived-seed
+//!   generator, and a per-lane id stream; cell traces merge in cell
+//!   order, then sim-clock order.  Platforms with a shared medium (the
+//!   Dask/Lustre stacks, the edge device envelope) keep the exact
+//!   single-DES path.
+//! - **Lanes** ([`SimOptions::lanes`]): cells are embarrassingly
+//!   parallel, so `lanes > 1` farms them to the worker pool
+//!   ([`parallel_indexed_map`]) — PR 2's deterministic-reassembly trick
+//!   applied *inside* one scenario.  Results are byte-identical for
+//!   every lane count.
+//!
+//! [`run_sim`] remains **safely spawnable per worker thread**: every call
+//! owns its DES, clock, generator, stores, and engine, and run/message
+//! ids derive from [`Scenario::run_key`] — no process-global state feeds
+//! the simulation.
 
 use super::generator::{DataGenerator, GeneratorConfig};
-use super::platform::{PlatformUnderTest, Scenario};
-use super::trace::{next_run_id, MessageTrace, RunSummary, RunTrace};
-use crate::broker::BrokerError;
+use super::platform::{PlatformKind, PlatformUnderTest, Scenario};
+use super::trace::{MessageTrace, RunSummary, RunTrace, TraceMode};
+use crate::broker::{Broker, BrokerError};
 use crate::engine::StepEngine;
+use crate::pilot::workers::parallel_indexed_map;
 use crate::serverless::EventSourceMapping;
-use crate::sim::{Engine as Des, SharedClock};
+use crate::sim::{Cohort, Engine as Des, IdAlloc};
+use crate::util::rng::SplitMix64;
 use std::cell::RefCell;
 use std::rc::Rc;
 use std::sync::Arc;
+
+/// How the producer hands messages to the broker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimMode {
+    /// Batched production: one [`Cohort`] per lane, SoA broker records.
+    #[default]
+    Cohort,
+    /// Historical reference path: one materialized [`crate::broker::Message`]
+    /// per produce event.  Kept as the oracle the cohort path is asserted
+    /// bit-identical against.
+    PerMessage,
+}
+
+/// Knobs of the sim core.  `Default` is the reference configuration:
+/// cohort production, one lane, full tracing.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    pub mode: SimMode,
+    /// Worker threads for cell-decomposable scenarios (1 = in-process,
+    /// sequential).  Output is identical for every value.
+    pub lanes: usize,
+    /// Trace retention; multi-million-message runs want
+    /// [`TraceMode::Sampled`] or [`TraceMode::Off`].
+    pub trace: TraceMode,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self {
+            mode: SimMode::Cohort,
+            lanes: 1,
+            trace: TraceMode::Full,
+        }
+    }
+}
 
 /// Result of one simulated configuration run.
 #[derive(Debug, Clone)]
@@ -35,38 +97,95 @@ pub struct SimRunResult {
     pub summary: RunSummary,
     /// Producer throttle/backoff events observed.
     pub backoff_events: u64,
-    /// Total simulated events executed.
+    /// Total simulated events executed (summed over cells).
     pub des_events: u64,
+    /// The merged run trace (retention governed by [`SimOptions::trace`]).
+    pub trace: Arc<RunTrace>,
 }
 
-struct ShardLoop {
+struct CellLoop {
     platform: Arc<PlatformUnderTest>,
+    broker: Arc<dyn Broker>,
     esm: Arc<EventSourceMapping>,
     generator: RefCell<DataGenerator>,
-    run: Arc<RunTrace>,
-    scenario: Scenario,
+    ids: RefCell<IdAlloc>,
+    /// Lazily built production cohort per local shard (cohort mode).
+    cohorts: RefCell<Vec<Option<Rc<Cohort>>>>,
+    run: RunTrace,
+    mode: SimMode,
+    /// Hoisted once per cell — the legacy path formatted it per message.
+    model_key: String,
+    centroids: usize,
     run_id: u64,
+    /// Global index of this cell's local shard 0 (trace partitions and
+    /// generator key targeting stay global under cell decomposition).
+    shard_base: usize,
+    global_partitions: usize,
+    total: Vec<usize>,
     remaining: RefCell<Vec<usize>>,
     backoffs: RefCell<u64>,
-    clock: SharedClock,
 }
 
-impl ShardLoop {
+struct CellOutcome {
+    trace: RunTrace,
+    backoffs: u64,
+    des_events: u64,
+}
+
+impl CellLoop {
+    /// The shard's production cohort, drawn from the generator on first
+    /// use.  Payload content never feeds a cost model, so sharing one
+    /// slab across the lane leaves every event time untouched.
+    fn cohort_for(&self, shard: usize, now: f64) -> Rc<Cohort> {
+        let mut cohorts = self.cohorts.borrow_mut();
+        let slot = &mut cohorts[shard];
+        if slot.is_none() {
+            let template = self.generator.borrow_mut().next_message_for_partition(
+                self.run_id,
+                now,
+                self.shard_base + shard,
+                self.global_partitions,
+            );
+            let base = self.ids.borrow_mut().reserve(self.total[shard]);
+            *slot = Some(Rc::new(Cohort::new(
+                self.run_id,
+                base,
+                self.total[shard],
+                template.key,
+                template.points,
+                template.dim,
+            )));
+        }
+        Rc::clone(slot.as_ref().unwrap())
+    }
+
     fn produce(self: &Rc<Self>, des: &mut Des, shard: usize) {
-        {
-            let rem = self.remaining.borrow();
-            if rem[shard] == 0 {
-                return;
-            }
+        let rem = self.remaining.borrow()[shard];
+        if rem == 0 {
+            return;
         }
         let now = des.now();
-        let msg = self.generator.borrow_mut().next_message_for_partition(
-            self.run_id,
-            now,
-            shard,
-            self.scenario.partitions,
-        );
-        match self.platform.broker().put(msg) {
+        let put = match self.mode {
+            SimMode::PerMessage => {
+                let mut msg = self.generator.borrow_mut().next_message_for_partition(
+                    self.run_id,
+                    now,
+                    self.shard_base + shard,
+                    self.global_partitions,
+                );
+                msg.id = self.ids.borrow_mut().next();
+                self.broker.put(msg)
+            }
+            SimMode::Cohort => {
+                let cohort = self.cohort_for(shard, now);
+                // exactly one commit per successful put before the next
+                // produce, so this counts successful puts — a throttled
+                // retry re-presents the same seq
+                let seq = self.total[shard] - rem;
+                self.broker.put_cohort(&cohort, seq, now)
+            }
+        };
+        match put {
             Ok(put) => {
                 debug_assert_eq!(put.partition, shard);
                 let this = Rc::clone(self);
@@ -96,21 +215,20 @@ impl ShardLoop {
         };
         let rec = &lease.records[0];
         let msg = rec.message.clone();
-        let cost = match self.platform.process(
-            shard,
-            &msg.points,
-            msg.dim,
-            &format!("model-{}", self.run_id),
-            self.scenario.centroids,
-        ) {
-            Ok(c) => c,
-            Err(e) => {
-                log::error!("sim process failed: {e}");
-                self.esm.abort(lease);
-                return;
-            }
-        };
+        let cost =
+            match self
+                .platform
+                .process(shard, &msg.points, msg.dim, &self.model_key, self.centroids)
+            {
+                Ok(c) => c,
+                Err(e) => {
+                    log::error!("sim process failed: {e}");
+                    self.esm.abort(lease);
+                    return;
+                }
+            };
         let this = Rc::clone(self);
+        let partition = self.shard_base + shard;
         des.schedule_in(
             cost.total(),
             Box::new(move |des| {
@@ -119,7 +237,7 @@ impl ShardLoop {
                 this.run.record(MessageTrace {
                     run_id: msg.run_id,
                     message_id: msg.id,
-                    partition: shard,
+                    partition,
                     produced_at: msg.produced_at,
                     available_at: msg.available_at,
                     proc_start: now,
@@ -136,38 +254,48 @@ impl ShardLoop {
                 this.produce(des, shard);
             }),
         );
-        let _ = self.clock.now(); // keep clock captured (diagnostics)
     }
 }
 
-/// Run one scenario in simulated time.
-pub fn run_sim(scenario: &Scenario, engine: Arc<dyn StepEngine>) -> Result<SimRunResult, String> {
+/// One independent sub-simulation: `scenario` is already cell-local (its
+/// `partitions`/`messages` describe this cell), while `shard_base` and
+/// `global_partitions` keep trace partitions and key targeting global.
+fn run_cell(
+    scenario: &Scenario,
+    engine: Arc<dyn StepEngine>,
+    run_id: u64,
+    shard_base: usize,
+    global_partitions: usize,
+    opts: SimOptions,
+) -> Result<CellOutcome, String> {
     let mut des = Des::new().with_event_limit(20_000_000);
-    let clock = des.clock() as SharedClock;
-    let platform = Arc::new(PlatformUnderTest::build(
-        scenario,
-        engine,
-        Arc::clone(&clock),
-    )?);
+    let clock = des.clock();
+    let platform = Arc::new(PlatformUnderTest::build(scenario, engine, clock)?);
+    let broker = platform.broker();
     let esm = Arc::new(EventSourceMapping::new(platform.broker(), 1));
-    let run_id = next_run_id();
-    let run = Arc::new(RunTrace::new(run_id));
-
     let per_shard = scenario.messages.div_ceil(scenario.partitions);
-    let state = Rc::new(ShardLoop {
+
+    let state = Rc::new(CellLoop {
         platform,
+        broker,
         esm,
         generator: RefCell::new(DataGenerator::new(GeneratorConfig {
             points_per_message: scenario.points_per_message,
             seed: scenario.seed,
             ..Default::default()
         })),
-        run: Arc::clone(&run),
-        scenario: scenario.clone(),
+        ids: RefCell::new(IdAlloc::for_run(run_id, shard_base as u64)),
+        cohorts: RefCell::new(vec![None; scenario.partitions]),
+        run: RunTrace::with_mode(run_id, opts.trace),
+        mode: opts.mode,
+        model_key: format!("model-{run_id}"),
+        centroids: scenario.centroids,
         run_id,
+        shard_base,
+        global_partitions,
+        total: vec![per_shard; scenario.partitions],
         remaining: RefCell::new(vec![per_shard; scenario.partitions]),
         backoffs: RefCell::new(0),
-        clock,
     });
 
     for shard in 0..scenario.partitions {
@@ -175,15 +303,106 @@ pub fn run_sim(scenario: &Scenario, engine: Arc<dyn StepEngine>) -> Result<SimRu
         des.schedule_at(0.0, Box::new(move |des| st.produce(des, shard)));
     }
     des.run();
+    let des_events = des.executed();
+    drop(des); // releases the pending closures' Rc clones
+    let state = Rc::try_unwrap(state).map_err(|_| "sim cell leaked its state".to_string())?;
+    Ok(CellOutcome {
+        trace: state.run,
+        backoffs: state.backoffs.into_inner(),
+        des_events,
+    })
+}
 
-    let summary = run
+/// Derived seed for cell `cell` — decorrelates generator content and
+/// platform cold-start draws across cells, deterministically.
+fn cell_scenario(base: &Scenario, cell: usize, per_shard: usize) -> Scenario {
+    let mut cs = base.clone();
+    cs.partitions = 1;
+    cs.messages = per_shard;
+    cs.seed =
+        SplitMix64::new(base.seed ^ (cell as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            .next_u64();
+    cs
+}
+
+/// Cells the scenario decomposes into: one per shard when the shards are
+/// independent by construction — a serverless stack with a 1:1
+/// shard→container mapping (≤ the paper's 30-container Lambda cap) and a
+/// forkable engine — otherwise 1 (the exact single-DES path).
+fn shard_cells(scenario: &Scenario, engine: &dyn StepEngine) -> usize {
+    let p = scenario.partitions;
+    if scenario.platform == PlatformKind::Lambda
+        && (2..=30).contains(&p)
+        && engine.fork(0).is_some()
+    {
+        p
+    } else {
+        1
+    }
+}
+
+/// Run one scenario in simulated time with the default [`SimOptions`].
+pub fn run_sim(scenario: &Scenario, engine: Arc<dyn StepEngine>) -> Result<SimRunResult, String> {
+    run_sim_opts(scenario, engine, SimOptions::default())
+}
+
+/// Run one scenario in simulated time.
+pub fn run_sim_opts(
+    scenario: &Scenario,
+    engine: Arc<dyn StepEngine>,
+    opts: SimOptions,
+) -> Result<SimRunResult, String> {
+    let run_id = scenario.run_key();
+    let cells = shard_cells(scenario, engine.as_ref());
+    if cells == 1 {
+        let out = run_cell(scenario, engine, run_id, 0, scenario.partitions, opts)?;
+        let summary = out
+            .trace
+            .summarize()
+            .ok_or_else(|| "no messages processed".to_string())?;
+        return Ok(SimRunResult {
+            summary,
+            backoff_events: out.backoffs,
+            des_events: out.des_events,
+            trace: Arc::new(out.trace),
+        });
+    }
+
+    let per_shard = scenario.messages.div_ceil(scenario.partitions);
+    let mut slots: Vec<Option<Result<CellOutcome, String>>> = Vec::with_capacity(cells);
+    slots.resize_with(cells, || None);
+    let engine_ref = &engine;
+    parallel_indexed_map(
+        opts.lanes.max(1).min(cells),
+        cells,
+        move |_worker, cell| {
+            let forked = engine_ref
+                .fork(cell as u64)
+                .ok_or_else(|| "engine stopped forking mid-run".to_string())?;
+            run_cell(
+                &cell_scenario(scenario, cell, per_shard),
+                forked,
+                run_id,
+                cell,
+                scenario.partitions,
+                opts,
+            )
+        },
+        |i, outcome| slots[i] = Some(outcome),
+    );
+    let mut outcomes = Vec::with_capacity(cells);
+    for slot in slots {
+        outcomes.push(slot.ok_or_else(|| "sim lane vanished".to_string())??);
+    }
+    let trace = RunTrace::merged(run_id, opts.trace, outcomes.iter().map(|o| &o.trace));
+    let summary = trace
         .summarize()
         .ok_or_else(|| "no messages processed".to_string())?;
-    let backoff_events = *state.backoffs.borrow();
     Ok(SimRunResult {
         summary,
-        backoff_events,
-        des_events: des.executed(),
+        backoff_events: outcomes.iter().map(|o| o.backoffs).sum(),
+        des_events: outcomes.iter().map(|o| o.des_events).sum(),
+        trace: Arc::new(trace),
     })
 }
 
@@ -209,6 +428,17 @@ mod tests {
             messages: 32,
             ..Default::default()
         }
+    }
+
+    fn with_mode(mode: SimMode) -> SimOptions {
+        SimOptions {
+            mode,
+            ..Default::default()
+        }
+    }
+
+    fn ids_of(r: &SimRunResult) -> Vec<u64> {
+        r.trace.traces().iter().map(|t| t.message_id).collect()
     }
 
     #[test]
@@ -342,8 +572,7 @@ mod tests {
     #[test]
     fn concurrent_runs_match_the_sequential_result() {
         // the campaign engine spawns run_sim per worker; interleaving with
-        // other runs (and the resulting run-id shuffle) must not move a
-        // single measured number
+        // other runs must not move a single measured number
         let s = scenario(PlatformKind::Lambda, 2);
         let base = run_sim(&s, engine_with((256, 16), 0.05)).unwrap();
         let handles: Vec<_> = (0..4)
@@ -371,5 +600,132 @@ mod tests {
             "L^br mean {}",
             r.summary.broker.mean
         );
+    }
+
+    #[test]
+    fn cohort_and_per_message_paths_are_bit_identical() {
+        // the headline invariant: batching production into cohorts moves
+        // no event time — every measured quantity matches to the bit,
+        // on the cell-decomposed path (Lambda), the shared-medium path
+        // (Dask), and the co-located edge stack (default put_cohort)
+        for (platform, p) in [
+            (PlatformKind::Lambda, 4),
+            (PlatformKind::DaskWrangler, 4),
+            (PlatformKind::Edge, 2),
+        ] {
+            let s = scenario(platform, p);
+            let a = run_sim_opts(&s, engine_with((256, 16), 0.05), with_mode(SimMode::Cohort))
+                .unwrap();
+            let b = run_sim_opts(
+                &s,
+                engine_with((256, 16), 0.05),
+                with_mode(SimMode::PerMessage),
+            )
+            .unwrap();
+            assert_eq!(a.summary.messages, b.summary.messages, "{platform:?}");
+            assert_eq!(a.backoff_events, b.backoff_events, "{platform:?}");
+            assert_eq!(a.des_events, b.des_events, "{platform:?}");
+            for (x, y) in [
+                (a.summary.throughput, b.summary.throughput),
+                (a.summary.window_seconds, b.summary.window_seconds),
+                (a.summary.service.mean, b.summary.service.mean),
+                (a.summary.service.std, b.summary.service.std),
+                (a.summary.service.p95, b.summary.service.p95),
+                (a.summary.sojourn.mean, b.summary.sojourn.mean),
+                (a.summary.broker.mean, b.summary.broker.mean),
+                (a.summary.compute_mean, b.summary.compute_mean),
+            ] {
+                assert_eq!(x.to_bits(), y.to_bits(), "{platform:?}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_count_does_not_change_the_result() {
+        let s = Scenario {
+            messages: 96,
+            ..scenario(PlatformKind::Lambda, 8)
+        };
+        let run = |lanes: usize| {
+            run_sim_opts(
+                &s,
+                engine_with((256, 16), 0.05),
+                SimOptions {
+                    lanes,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let base = run(1);
+        for lanes in [2, 8] {
+            let r = run(lanes);
+            assert_eq!(ids_of(&base), ids_of(&r), "lanes={lanes}");
+            assert_eq!(
+                base.summary.throughput.to_bits(),
+                r.summary.throughput.to_bits(),
+                "lanes={lanes}"
+            );
+            assert_eq!(
+                base.summary.service.mean.to_bits(),
+                r.summary.service.mean.to_bits(),
+                "lanes={lanes}"
+            );
+            assert_eq!(base.des_events, r.des_events, "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn same_seed_runs_repeat_the_id_sequence() {
+        // ids derive from the scenario's run key, not the process-global
+        // counter: interleaving unrelated runs (which consume global ids)
+        // must not move the sim's id stream
+        let s = scenario(PlatformKind::Lambda, 4);
+        let a = run_sim(&s, engine_with((256, 16), 0.05)).unwrap();
+        let _ = crate::broker::next_message_id();
+        let other = scenario(PlatformKind::DaskWrangler, 2);
+        run_sim(&other, engine_with((256, 16), 0.05)).unwrap();
+        let b = run_sim(&s, engine_with((256, 16), 0.05)).unwrap();
+        let (ia, ib) = (ids_of(&a), ids_of(&b));
+        assert!(!ia.is_empty());
+        assert_eq!(ia, ib);
+        // and the per-message oracle assigns the very same ids
+        let c = run_sim_opts(
+            &s,
+            engine_with((256, 16), 0.05),
+            with_mode(SimMode::PerMessage),
+        )
+        .unwrap();
+        assert_eq!(ia, ids_of(&c));
+    }
+
+    #[test]
+    fn sampled_and_off_tracing_keep_the_exact_moments() {
+        let s = Scenario {
+            messages: 96,
+            ..scenario(PlatformKind::Lambda, 4)
+        };
+        let run = |trace: TraceMode| {
+            run_sim_opts(
+                &s,
+                engine_with((256, 16), 0.05),
+                SimOptions {
+                    trace,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let full = run(TraceMode::Full);
+        let sampled = run(TraceMode::Sampled { every: 7 });
+        let off = run(TraceMode::Off);
+        assert!(off.trace.traces().is_empty());
+        assert!(sampled.trace.traces().len() < full.trace.traces().len());
+        for r in [&sampled, &off] {
+            assert_eq!(r.summary.messages, full.summary.messages);
+            assert!((r.summary.throughput - full.summary.throughput).abs() < 1e-9);
+            assert!((r.summary.service.mean - full.summary.service.mean).abs() < 1e-12);
+            assert!((r.summary.broker.mean - full.summary.broker.mean).abs() < 1e-12);
+        }
     }
 }

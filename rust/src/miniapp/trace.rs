@@ -5,15 +5,40 @@
 //! specific benchmark run."  One [`MessageTrace`] per processed message;
 //! a [`RunTrace`] aggregates a benchmark run and computes the paper's
 //! metrics: L^br, L^px, T^px.
+//!
+//! Multi-million-message runs must not buffer one `MessageTrace` per
+//! message, so a trace has a [`TraceMode`]: `Full` keeps every trace (the
+//! sim default — determinism tests compare full traces bit-for-bit),
+//! `Sampled` streams exact moment statistics (Welford) plus a retained
+//! sample subset for percentiles, and `Off` streams the moments only.
 
-use crate::util::stats::Summary;
+use crate::util::stats::{percentile, Summary};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 static NEXT_RUN_ID: AtomicU64 = AtomicU64::new(1);
 
+/// Process-global run-id allocator used by live/interactive paths.  Sim
+/// runs derive their run id from the scenario instead
+/// ([`super::platform::Scenario::run_key`]), so same-seed sim runs are
+/// identical no matter what ran before them in the process.
 pub fn next_run_id() -> u64 {
     NEXT_RUN_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// How much per-message trace data a run retains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    /// Keep every `MessageTrace` (exact percentiles, byte-identical
+    /// summaries — the reference mode).
+    #[default]
+    Full,
+    /// Stream exact counts/means/stds; keep 1-in-`every` traces for
+    /// percentile estimation.
+    Sampled { every: usize },
+    /// Stream exact counts/means/stds only; percentiles degrade to the
+    /// mean.
+    Off,
 }
 
 /// Per-message timing record (all timestamps from the run's shared clock).
@@ -60,41 +85,241 @@ impl MessageTrace {
     }
 }
 
+/// Streaming exact moments (Welford) with min/max, mergeable across sim
+/// lanes in deterministic (cell) order.
+#[derive(Debug, Clone)]
+struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Moments {
+    fn default() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Moments {
+    fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Chan's parallel combine — exact for counts/means, numerically stable
+    /// for variance.
+    fn absorb(&mut self, other: &Moments) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let delta = other.mean - self.mean;
+        let n = na + nb;
+        self.mean += delta * nb / n;
+        self.m2 += other.m2 + delta * delta * na * nb / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Summary with percentiles estimated from `samples` (falls back to the
+    /// mean when no samples were retained).
+    fn summary(&self, samples: &[f64]) -> Option<Summary> {
+        if self.n == 0 {
+            return None;
+        }
+        let var = self.m2 / if self.n > 1 { (self.n - 1) as f64 } else { 1.0 };
+        let (p50, p95, p99) = if samples.is_empty() {
+            (self.mean, self.mean, self.mean)
+        } else {
+            (
+                percentile(samples, 0.50),
+                percentile(samples, 0.95),
+                percentile(samples, 0.99),
+            )
+        };
+        Some(Summary {
+            n: self.n as usize,
+            mean: self.mean,
+            std: var.sqrt(),
+            min: self.min,
+            max: self.max,
+            p50,
+            p95,
+            p99,
+        })
+    }
+}
+
+/// Streaming aggregate of a run (Sampled/Off modes).
+#[derive(Debug, Clone, Default)]
+struct RunAgg {
+    service: Moments,
+    warm: Moments,
+    sojourn: Moments,
+    broker: Moments,
+    compute_sum: f64,
+    io_sum: f64,
+    start: Option<f64>,
+    end: Option<f64>,
+}
+
+impl RunAgg {
+    fn push(&mut self, t: &MessageTrace) {
+        let service = t.service_time();
+        self.service.push(service);
+        if t.overhead == 0.0 {
+            self.warm.push(service);
+        }
+        self.sojourn.push(t.processing_latency());
+        self.broker.push(t.broker_latency());
+        self.compute_sum += t.compute;
+        self.io_sum += t.io;
+        self.start = Some(self.start.map_or(t.produced_at, |s| s.min(t.produced_at)));
+        self.end = Some(self.end.map_or(t.proc_end, |e| e.max(t.proc_end)));
+    }
+
+    fn absorb(&mut self, other: &RunAgg) {
+        self.service.absorb(&other.service);
+        self.warm.absorb(&other.warm);
+        self.sojourn.absorb(&other.sojourn);
+        self.broker.absorb(&other.broker);
+        self.compute_sum += other.compute_sum;
+        self.io_sum += other.io_sum;
+        if let Some(s) = other.start {
+            self.start = Some(self.start.map_or(s, |x| x.min(s)));
+        }
+        if let Some(e) = other.end {
+            self.end = Some(self.end.map_or(e, |x| x.max(e)));
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct TraceStore {
+    /// Every trace (`Full`) or the retained 1-in-N subset (`Sampled`).
+    kept: Vec<MessageTrace>,
+    /// Streaming aggregate (`Sampled`/`Off` modes).
+    agg: RunAgg,
+    /// Traces recorded (all modes).
+    seen: u64,
+}
+
 /// Collected traces for one benchmark run.
-#[derive(Default)]
+#[derive(Debug, Default)]
 pub struct RunTrace {
     pub run_id: u64,
-    traces: Mutex<Vec<MessageTrace>>,
+    mode: TraceMode,
+    // One lane owns one RunTrace in the sim (no contention); the lock
+    // exists for the live driver's producer/consumer threads.
+    inner: Mutex<TraceStore>,
 }
 
 impl RunTrace {
     pub fn new(run_id: u64) -> Self {
+        Self::with_mode(run_id, TraceMode::Full)
+    }
+
+    pub fn with_mode(run_id: u64, mode: TraceMode) -> Self {
+        if let TraceMode::Sampled { every } = mode {
+            assert!(every > 0, "sampling stride must be positive");
+        }
         Self {
             run_id,
-            traces: Mutex::new(Vec::new()),
+            mode,
+            inner: Mutex::new(TraceStore::default()),
         }
+    }
+
+    pub fn mode(&self) -> TraceMode {
+        self.mode
     }
 
     pub fn record(&self, t: MessageTrace) {
         debug_assert_eq!(t.run_id, self.run_id, "trace from another run");
-        self.traces.lock().unwrap().push(t);
+        let mut g = self.inner.lock().unwrap();
+        g.seen += 1;
+        match self.mode {
+            TraceMode::Full => g.kept.push(t),
+            TraceMode::Sampled { every } => {
+                g.agg.push(&t);
+                if (g.seen - 1) % every as u64 == 0 {
+                    g.kept.push(t);
+                }
+            }
+            TraceMode::Off => g.agg.push(&t),
+        }
     }
 
+    /// Messages recorded (not the retained subset size).
     pub fn len(&self) -> usize {
-        self.traces.lock().unwrap().len()
+        self.inner.lock().unwrap().seen as usize
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Retained traces: everything in `Full` mode, the sample subset in
+    /// `Sampled`, empty in `Off`.
     pub fn traces(&self) -> Vec<MessageTrace> {
-        self.traces.lock().unwrap().clone()
+        self.inner.lock().unwrap().kept.clone()
+    }
+
+    /// Merge per-lane traces into one run, in lane order — lane boundaries
+    /// then sim-clock (`proc_end`) order, so any lane count produces the
+    /// same merged run.
+    pub fn merged<'a>(
+        run_id: u64,
+        mode: TraceMode,
+        lanes: impl IntoIterator<Item = &'a RunTrace>,
+    ) -> RunTrace {
+        let out = RunTrace::with_mode(run_id, mode);
+        {
+            let mut g = out.inner.lock().unwrap();
+            let mut kept: Vec<MessageTrace> = Vec::new();
+            for lane in lanes {
+                let lg = lane.inner.lock().unwrap();
+                g.seen += lg.seen;
+                g.agg.absorb(&lg.agg);
+                kept.extend(lg.kept.iter().cloned());
+            }
+            kept.sort_by(|a, b| a.proc_end.partial_cmp(&b.proc_end).unwrap());
+            g.kept = kept;
+        }
+        out
     }
 
     /// Aggregate the run into the paper's metrics.
     pub fn summarize(&self) -> Option<RunSummary> {
-        let ts = self.traces.lock().unwrap();
+        let g = self.inner.lock().unwrap();
+        match self.mode {
+            TraceMode::Full => Self::summarize_full(self.run_id, &g.kept),
+            TraceMode::Sampled { .. } | TraceMode::Off => {
+                Self::summarize_agg(self.run_id, &g.agg, &g.kept, g.seen)
+            }
+        }
+    }
+
+    /// Reference path: identical arithmetic (and float-sum order) to the
+    /// historical all-traces summarize, so `Full` runs are bit-stable.
+    fn summarize_full(run_id: u64, ts: &[MessageTrace]) -> Option<RunSummary> {
         if ts.is_empty() {
             return None;
         }
@@ -115,7 +340,7 @@ impl RunTrace {
         let end = ts.iter().map(|t| t.proc_end).fold(0.0f64, f64::max);
         let window = (end - start).max(1e-9);
         Some(RunSummary {
-            run_id: self.run_id,
+            run_id,
             messages: ts.len(),
             window_seconds: window,
             throughput: ts.len() as f64 / window,
@@ -129,6 +354,47 @@ impl RunTrace {
             broker: Summary::of(&broker)?,
             compute_mean: crate::util::stats::mean(&compute),
             io_mean: crate::util::stats::mean(&io),
+        })
+    }
+
+    /// Streaming path: exact n/mean/std/min/max from the moment
+    /// aggregates, percentiles from the retained subset.
+    fn summarize_agg(
+        run_id: u64,
+        agg: &RunAgg,
+        kept: &[MessageTrace],
+        seen: u64,
+    ) -> Option<RunSummary> {
+        if seen == 0 {
+            return None;
+        }
+        let window = (agg.end? - agg.start?).max(1e-9);
+        let service_samples: Vec<f64> = kept.iter().map(MessageTrace::service_time).collect();
+        let sojourn_samples: Vec<f64> =
+            kept.iter().map(MessageTrace::processing_latency).collect();
+        let broker_samples: Vec<f64> = kept.iter().map(MessageTrace::broker_latency).collect();
+        let service = agg.service.summary(&service_samples)?;
+        let service_warm = if agg.warm.n == 0 {
+            service.clone()
+        } else {
+            let warm_samples: Vec<f64> = kept
+                .iter()
+                .filter(|t| t.overhead == 0.0)
+                .map(MessageTrace::service_time)
+                .collect();
+            agg.warm.summary(&warm_samples)?
+        };
+        Some(RunSummary {
+            run_id,
+            messages: seen as usize,
+            window_seconds: window,
+            throughput: seen as f64 / window,
+            service,
+            service_warm,
+            sojourn: agg.sojourn.summary(&sojourn_samples)?,
+            broker: agg.broker.summary(&broker_samples)?,
+            compute_mean: agg.compute_sum / seen as f64,
+            io_mean: agg.io_sum / seen as f64,
         })
     }
 }
@@ -200,10 +466,66 @@ mod tests {
     #[test]
     fn empty_run_summarizes_none() {
         assert!(RunTrace::new(1).summarize().is_none());
+        assert!(RunTrace::with_mode(1, TraceMode::Off).summarize().is_none());
     }
 
     #[test]
     fn run_ids_unique() {
         assert_ne!(next_run_id(), next_run_id());
+    }
+
+    #[test]
+    fn sampled_and_off_match_full_moments() {
+        let (full, sampled, off) = (
+            RunTrace::new(1),
+            RunTrace::with_mode(1, TraceMode::Sampled { every: 3 }),
+            RunTrace::with_mode(1, TraceMode::Off),
+        );
+        for i in 0..100 {
+            let t = trace(i, i as f64 * 0.37);
+            full.record(t.clone());
+            sampled.record(t.clone());
+            off.record(t);
+        }
+        // bounded memory: the sampled store keeps ~1/3 of the traces
+        assert_eq!(sampled.traces().len(), 34);
+        assert!(off.traces().is_empty());
+        let (f, s, o) = (
+            full.summarize().unwrap(),
+            sampled.summarize().unwrap(),
+            off.summarize().unwrap(),
+        );
+        for x in [&s, &o] {
+            assert_eq!(x.messages, f.messages);
+            assert!((x.throughput - f.throughput).abs() < 1e-9);
+            assert!((x.service.mean - f.service.mean).abs() < 1e-12);
+            assert!((x.service.std - f.service.std).abs() < 1e-9);
+            assert!((x.service.min - f.service.min).abs() < 1e-12);
+            assert!((x.broker.mean - f.broker.mean).abs() < 1e-12);
+            assert!((x.compute_mean - f.compute_mean).abs() < 1e-12);
+        }
+        // percentiles: exact in Full, estimated from the subset in Sampled,
+        // mean-degenerate in Off
+        assert!((s.service.p50 - f.service.p50).abs() < 1e-9);
+        assert!((o.service.p50 - f.service.mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merged_lanes_equal_one_big_run() {
+        let whole = RunTrace::new(1);
+        let lanes: Vec<RunTrace> = (0..4).map(|_| RunTrace::new(1)).collect();
+        for i in 0..40u64 {
+            let t = trace(i, i as f64);
+            whole.record(t.clone());
+            lanes[(i % 4) as usize].record(t);
+        }
+        let merged = RunTrace::merged(1, TraceMode::Full, &lanes);
+        let (a, b) = (whole.summarize().unwrap(), merged.summarize().unwrap());
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.service.mean.to_bits(), b.service.mean.to_bits());
+        assert_eq!(a.window_seconds.to_bits(), b.window_seconds.to_bits());
+        // merged order is proc_end (sim-clock) order
+        let ts = merged.traces();
+        assert!(ts.windows(2).all(|w| w[0].proc_end <= w[1].proc_end));
     }
 }

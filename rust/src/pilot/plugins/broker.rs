@@ -232,7 +232,7 @@ mod tests {
         assert_eq!(broker.num_partitions(), 8);
         assert_eq!(broker.kind(), "kinesis");
         broker
-            .put(Message::new(1, 0, Arc::new(vec![0.0; 16]), 8, 0.0))
+            .put(Message::new(1, 0, vec![0.0; 16].into(), 8, 0.0))
             .unwrap();
     }
 

@@ -574,7 +574,7 @@ mod tests {
             .put(crate::broker::Message::new(
                 1,
                 0,
-                Arc::new(vec![0.0; 16]),
+                vec![0.0; 16].into(),
                 8,
                 0.0,
             ))

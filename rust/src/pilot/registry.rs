@@ -163,6 +163,12 @@ pub enum RegistryError {
 #[derive(Default)]
 pub struct PluginRegistry {
     plugins: Vec<Arc<dyn PlatformPlugin>>,
+    /// Lazily built name index: lowercase name/alias → (plugin position,
+    /// is-canonical).  `parse`/`get` run on every scenario build and every
+    /// `PlatformKind::parse`, so the linear alias scan is hoisted into a
+    /// process-lifetime cache (per registry; `register` invalidates it).
+    /// BTreeMap keeps iteration deterministic (ps-lint R2).
+    index: OnceLock<std::collections::BTreeMap<String, (usize, bool)>>,
 }
 
 impl PluginRegistry {
@@ -208,28 +214,40 @@ impl PluginRegistry {
             }
         }
         self.plugins.push(plugin);
+        self.index.take(); // rebuilt lazily with the new plugin included
         Ok(())
     }
 
-    /// The plugin registered for `platform`.  Matching is by name,
-    /// case-insensitively — the same identity rule `register` and `parse`
-    /// use, so every lookup path agrees on what a platform is.
+    fn index(&self) -> &std::collections::BTreeMap<String, (usize, bool)> {
+        self.index.get_or_init(|| {
+            let mut m = std::collections::BTreeMap::new();
+            for (i, p) in self.plugins.iter().enumerate() {
+                // register guarantees names and aliases are globally
+                // unique (case-insensitively), so inserts never collide
+                m.insert(p.platform().name().to_ascii_lowercase(), (i, true));
+                for a in p.aliases() {
+                    m.insert(a.to_ascii_lowercase(), (i, false));
+                }
+            }
+            m
+        })
+    }
+
+    /// The plugin registered for `platform`.  Matching is by canonical
+    /// name, case-insensitively — the same identity rule `register` and
+    /// `parse` use, so every lookup path agrees on what a platform is.
     pub fn get(&self, platform: Platform) -> Option<Arc<dyn PlatformPlugin>> {
-        self.plugins
-            .iter()
-            .find(|p| p.platform().name().eq_ignore_ascii_case(platform.name()))
-            .cloned()
+        match self.index().get(&platform.name().to_ascii_lowercase()) {
+            Some(&(i, true)) => Some(Arc::clone(&self.plugins[i])),
+            _ => None,
+        }
     }
 
     /// Resolve a user-supplied name or alias (case-insensitive).
     pub fn parse(&self, s: &str) -> Option<Platform> {
-        self.plugins
-            .iter()
-            .find(|p| {
-                p.platform().name().eq_ignore_ascii_case(s)
-                    || p.aliases().iter().any(|a| a.eq_ignore_ascii_case(s))
-            })
-            .map(|p| p.platform())
+        self.index()
+            .get(&s.to_ascii_lowercase())
+            .map(|&(i, _)| self.plugins[i].platform())
     }
 
     /// Registered platforms, in registration order.
@@ -368,6 +386,19 @@ mod tests {
         // fresh names are fine
         assert!(r.register(Arc::new(FakePlugin("samza", &["beam"]))).is_ok());
         assert_eq!(r.parse("beam"), Some(Platform::from_static("samza")));
+    }
+
+    #[test]
+    fn name_index_rebuilds_after_late_registration() {
+        let mut r = PluginRegistry::builtin();
+        // force the lazy index to materialize...
+        assert_eq!(r.parse("lambda"), Some(Platform::LAMBDA));
+        // ...then register a new plugin: the cache must not go stale
+        r.register(Arc::new(FakePlugin("samza", &["beam"]))).unwrap();
+        assert_eq!(r.parse("beam"), Some(Platform::from_static("samza")));
+        assert!(r.get(Platform::from_static("samza")).is_some());
+        // aliases never resolve through `get` (canonical names only)
+        assert!(r.get(Platform::from_static("beam")).is_none());
     }
 
     #[test]

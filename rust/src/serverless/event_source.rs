@@ -134,7 +134,7 @@ mod tests {
 
     fn put(broker: &KinesisStream, key: u64) {
         broker
-            .put(Message::new(1, key, Arc::new(vec![0.0; 8]), 2, 0.0))
+            .put(Message::new(1, key, vec![0.0; 8].into(), 2, 0.0))
             .unwrap();
     }
 

@@ -4,11 +4,13 @@
 //! this engine with service times calibrated from live PJRT executions.
 
 pub mod clock;
+pub mod cohort;
 pub mod contention;
 pub mod dist;
 pub mod engine;
 
 pub use clock::{Clock, SharedClock, SimClock, WallClock};
+pub use cohort::{Cohort, IdAlloc};
 
 pub use contention::{Bandwidth, ContentionParams, SharedResource};
 pub use dist::Dist;

@@ -88,7 +88,7 @@ fn ablation_event_source_batch_size() {
         let topic = Arc::new(KafkaTopic::isolated("t", 1, clock.clone()));
         for i in 0..64u64 {
             topic
-                .put(Message::new(1, i, Arc::new(vec![0.0; 8]), 2, 0.0))
+                .put(Message::new(1, i, vec![0.0; 8].into(), 2, 0.0))
                 .unwrap();
         }
         clock.advance_to(100.0);

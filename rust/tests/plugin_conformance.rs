@@ -58,7 +58,7 @@ fn every_registered_plugin_serves_the_same_workflow() {
                 .unwrap_or_else(|| panic!("{platform}: advertised a broker, exposed none"));
             assert_eq!(broker.num_partitions(), 2, "{platform}");
             broker
-                .put(Message::new(1, 0, Arc::new(vec![0.0; 16]), 8, 0.0))
+                .put(Message::new(1, 0, vec![0.0; 16].into(), 8, 0.0))
                 .unwrap_or_else(|e| panic!("{platform}: broker put failed: {e}"));
         }
 

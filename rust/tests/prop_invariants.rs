@@ -29,7 +29,7 @@ fn cases(n: u64, f: impl Fn(&mut Pcg32)) {
 
 fn msg(rng: &mut Pcg32, t: f64) -> Message {
     let n = 1 + rng.gen_range(16) as usize;
-    Message::new(1, rng.next_u64(), Arc::new(vec![0.0; n * 4]), 4, t)
+    Message::new(1, rng.next_u64(), vec![0.0; n * 4].into(), 4, t)
 }
 
 #[test]
