@@ -1,0 +1,112 @@
+//! The ML-inference workflow graph, end to end — the workflow-subsystem
+//! walkthrough:
+//!
+//!   1. **Build**: the RMMap-style diamond — an API gateway fans requests
+//!      through edge preprocessing into two parallel model branches
+//!      (serverless CNN, HPC ensemble) whose scores re-join at a ranker.
+//!   2. **Run**: execute the DAG once through the cohort sim core and
+//!      print per-stage results with the conserved end-to-end accounting.
+//!   3. **Sweep + fit**: sweep the shared parallelism budget, fit one USL
+//!      curve per stage.
+//!   4. **Compose**: the critical-path model predicts end-to-end
+//!      throughput from the stage fits and names the bottleneck stage at
+//!      every budget level.
+//!
+//! Run: `cargo run --release --example workflow_inference`
+
+use pilot_streaming::insight::figures::{default_calibration, engine_factory};
+use pilot_streaming::insight::{
+    fit_stages, run_workflow_sweep_jobs, CriticalPathModel, ExperimentSpec, AXIS_PARTITIONS,
+    AXIS_WORKFLOW,
+};
+use pilot_streaming::miniapp::SimOptions;
+use pilot_streaming::workflow::{run_workflow, WorkflowSpec};
+
+const MESSAGES: usize = 32;
+const SEED: u64 = 42;
+
+fn main() {
+    // ---- 1. build ----
+    let wf = WorkflowSpec::ml_inference()
+        .with_source_messages(MESSAGES)
+        .with_seed(SEED);
+    println!(
+        "[1/4] {} — {} stages, {} edges, {} source messages",
+        wf.name,
+        wf.stages.len(),
+        wf.edges.len(),
+        wf.source_messages
+    );
+
+    // ---- 2. one end-to-end run with conserved accounting ----
+    let factory = engine_factory(default_calibration());
+    let r = run_workflow(&wf, 2, &factory, SimOptions::default()).expect("run");
+    println!("\n[2/4] single run at scale x2:");
+    for s in &r.stages {
+        println!(
+            "   [{}] {:<18} {:<22} N={:<2} in={:<4} T={:>9.3} msg/s  window={:.3}s",
+            s.stage,
+            s.name,
+            s.platform.label(),
+            s.parallelism,
+            s.ingested,
+            s.throughput,
+            s.window_seconds
+        );
+    }
+    println!(
+        "   accounting: ingested {} -> delivered {} + in-flight {} (conserved: {})",
+        r.accounting.ingested,
+        r.accounting.delivered,
+        r.accounting.in_flight,
+        r.accounting.verify(&wf, &r.edges).is_ok()
+    );
+    println!(
+        "   critical path {:?}, makespan {:.3}s, e2e {:.3} msg/s",
+        r.critical_path, r.makespan, r.throughput
+    );
+
+    // ---- 3. sweep the budget, fit every stage ----
+    let mut spec = ExperimentSpec::new("ml-inference-budget", MESSAGES, SEED);
+    let id = WorkflowSpec::preset_id("ml-inference").expect("preset id");
+    spec.set_ints(AXIS_WORKFLOW, [id]);
+    spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8]);
+    println!("\n[3/4] sweeping {} budget levels...", spec.scale_levels());
+    let (rows, stage_rows) = run_workflow_sweep_jobs(
+        &spec,
+        engine_factory(default_calibration()),
+        2,
+        SimOptions::default(),
+        |_| {},
+    );
+    let fits = fit_stages(&stage_rows);
+    for f in &fits {
+        println!(
+            "   stage [{}] {:<18} sigma={:.4} kappa={:.5} lambda={:.2} R2={:.3}",
+            f.stage, f.name, f.fit.params.sigma, f.fit.params.kappa, f.fit.params.lambda, f.fit.r2
+        );
+    }
+
+    // ---- 4. compose: critical-path prediction + bottleneck report ----
+    let model = CriticalPathModel::new(wf, &fits).expect("model");
+    println!("\n[4/4] critical-path model vs simulated end-to-end:");
+    let mut worst = 0.0f64;
+    for row in &rows {
+        let pred = model.predict(row.scale).expect("prediction");
+        let err = (pred.throughput - row.throughput).abs() / row.throughput;
+        worst = worst.max(err);
+        let b = pred.bottleneck;
+        println!(
+            "   x{:<2} sim {:>9.3}  model {:>9.3}  err {:>5.1}%  bottleneck [{}] {}",
+            row.scale,
+            row.throughput,
+            pred.throughput,
+            err * 100.0,
+            b,
+            model.spec().stages[b].name
+        );
+    }
+    println!("   worst model error {:.1}%", worst * 100.0);
+    assert!(worst <= 0.10, "model must stay within 10% (got {:.1}%)", worst * 100.0);
+    println!("\nworkflow_inference: OK");
+}

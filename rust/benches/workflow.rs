@@ -1,0 +1,124 @@
+//! Workflow-graph benchmark: the workflow grid (all four preset DAGs x
+//! budget levels) swept end-to-end, per-stage USL fits composed into the
+//! critical-path model, and the model checked against the simulated
+//! end-to-end throughput.
+//!
+//! Emits `BENCH_workflow.json` (override the path with
+//! `PS_BENCH_WORKFLOW_OUT`).  Gated fields (higher is better, >20% drop
+//! vs the committed baseline fails CI):
+//!
+//! - `e2e_msgs_per_sec`: mean simulated end-to-end throughput over the
+//!   grid (simulated time — deterministic, not wall-clock noisy);
+//! - `prediction_accuracy`: `1 - mean(|model - sim| / sim)` over every
+//!   grid cell — the composed critical-path model's fidelity.
+//!
+//! Run: `cargo bench --bench workflow`.
+
+#[path = "common.rs"]
+#[allow(dead_code)]
+mod common;
+
+use pilot_streaming::insight::figures::{default_calibration, engine_factory};
+use pilot_streaming::insight::{
+    fit_stages, run_workflow_sweep_jobs, stage_csv, to_csv, CriticalPathModel, ExperimentSpec,
+    SweepRow, AXIS_WORKFLOW,
+};
+use pilot_streaming::miniapp::SimOptions;
+use pilot_streaming::util::json::Json;
+use pilot_streaming::workflow::WorkflowSpec;
+use std::time::Instant;
+
+fn main() {
+    let messages = common::bench_messages();
+    let spec = ExperimentSpec::workflow_grid(messages, 42);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    eprintln!(
+        "[bench] workflow: {} DAG configs x {} source messages, {} core(s)",
+        spec.size(),
+        messages,
+        cores
+    );
+
+    let t0 = Instant::now();
+    let (rows, stage_rows) = run_workflow_sweep_jobs(
+        &spec,
+        engine_factory(default_calibration()),
+        cores,
+        SimOptions::default(),
+        |_| {},
+    );
+    let sweep_s = t0.elapsed().as_secs_f64();
+    assert_eq!(rows.len(), spec.size(), "workflow sweep dropped configs");
+
+    // determinism contract on the way: parallel == sequential, bytes
+    let (seq_rows, seq_stage_rows) = run_workflow_sweep_jobs(
+        &spec,
+        engine_factory(default_calibration()),
+        1,
+        SimOptions::default(),
+        |_| {},
+    );
+    assert_eq!(to_csv(&rows), to_csv(&seq_rows), "e2e rows must be deterministic");
+    assert_eq!(
+        stage_csv(&stage_rows),
+        stage_csv(&seq_stage_rows),
+        "stage rows must be deterministic"
+    );
+
+    let fits = fit_stages(&stage_rows);
+    let axis = spec.axis(AXIS_WORKFLOW).expect("workflow axis");
+    let mut abs_rel_errs: Vec<f64> = Vec::new();
+    for level in &axis.levels {
+        let id = level.as_int().expect("int workflow level");
+        let wf = WorkflowSpec::preset_by_id(id)
+            .expect("preset id")
+            .with_source_messages(spec.messages)
+            .with_seed(spec.seed);
+        let model = CriticalPathModel::new(wf, &fits).expect("critical-path model");
+        let selected: Vec<&SweepRow> = rows
+            .iter()
+            .filter(|r| {
+                r.key
+                    .pairs()
+                    .iter()
+                    .any(|(n, v)| n.as_str() == AXIS_WORKFLOW && v.as_int() == Some(id))
+            })
+            .collect();
+        for row in selected {
+            let pred = model.predict(row.scale).expect("prediction");
+            abs_rel_errs.push((pred.throughput - row.throughput).abs() / row.throughput);
+        }
+    }
+    let mean_t = rows.iter().map(|r| r.throughput).sum::<f64>() / rows.len() as f64;
+    let mean_err = abs_rel_errs.iter().sum::<f64>() / abs_rel_errs.len().max(1) as f64;
+    let accuracy = 1.0 - mean_err;
+    println!(
+        "e2e throughput (grid mean) {mean_t:.3} msg/s | model accuracy {:.1}% | sweep {sweep_s:.2}s",
+        accuracy * 100.0
+    );
+    assert!(
+        mean_err <= 0.10,
+        "critical-path model off by {:.1}% on average (>10%)",
+        mean_err * 100.0
+    );
+
+    common::write_bench_json(
+        "PS_BENCH_WORKFLOW_OUT",
+        "BENCH_workflow.json",
+        &["e2e_msgs_per_sec", "prediction_accuracy"],
+        vec![
+            ("grid", Json::from("workflow")),
+            ("configs", Json::from(spec.size())),
+            ("messages_per_config", Json::from(messages)),
+            ("cores", Json::from(cores)),
+            ("e2e_msgs_per_sec", Json::from(mean_t)),
+            ("prediction_accuracy", Json::from(accuracy)),
+            ("mean_abs_rel_error", Json::from(mean_err)),
+            ("stage_fits", Json::from(fits.len())),
+            ("sweep_seconds", Json::from(sweep_s)),
+            ("deterministic", Json::from(true)),
+        ],
+    );
+}

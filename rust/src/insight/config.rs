@@ -23,6 +23,7 @@
 
 use super::experiment::{
     Axis, ExperimentSpec, AXIS_CENTROIDS, AXIS_MEMORY_MB, AXIS_MESSAGE_SIZE, AXIS_PARTITIONS,
+    AXIS_WORKFLOW,
 };
 use crate::miniapp::PlatformKind;
 use crate::sim::ContentionParams;
@@ -111,6 +112,31 @@ pub fn spec_from_toml(text: &str) -> Result<ExperimentSpec, ConfigError> {
                 .ok_or_else(|| ConfigError::Invalid(format!("axes.{name}: expected an array")))?;
             spec.set_axis(Axis::ints(name.as_str(), xs.into_iter().map(|x| x as u64)));
         }
+    }
+    if let Json::Arr(workflows) = v.get("workflows") {
+        let mut ids = Vec::new();
+        for w in workflows {
+            let s = w
+                .as_str()
+                .ok_or_else(|| ConfigError::Invalid("workflows: expected strings".into()))?;
+            ids.push(
+                crate::workflow::WorkflowSpec::preset_id(s)
+                    .ok_or_else(|| ConfigError::Invalid(format!("unknown workflow {s:?}")))?,
+            );
+        }
+        if ids.is_empty() {
+            return Err(ConfigError::Invalid("workflows: empty".into()));
+        }
+        // A workflow campaign sweeps whole DAGs over a shared budget: the
+        // single-stage axes don't apply, so the grid is rebuilt as
+        // workflow x partitions (partitions = the budget multiplier).
+        let scales = usize_list(&v, "partitions")?.unwrap_or_else(|| vec![1, 2, 4, 8]);
+        if scales.is_empty() {
+            return Err(ConfigError::Invalid("partitions: empty".into()));
+        }
+        spec.axes.clear();
+        spec.set_ints(AXIS_WORKFLOW, ids);
+        spec.set_ints(AXIS_PARTITIONS, scales.into_iter().map(|x| x as u64));
     }
     if spec.messages == 0 {
         return Err(ConfigError::Invalid("messages must be non-zero".into()));
@@ -232,6 +258,30 @@ beta = 0.1
             Some(PlatformKind::Plugin(crate::pilot::Platform::FLINK))
         );
         assert_eq!(levels[1].as_platform(), Some(PlatformKind::Lambda));
+    }
+
+    #[test]
+    fn workflow_campaigns_parse_declaratively() {
+        let spec = spec_from_toml(
+            "messages = 16\nworkflows = [\"word_count\", \"finra\"]\npartitions = [1, 2]\n",
+        )
+        .unwrap();
+        let wf = spec.axis(AXIS_WORKFLOW).unwrap();
+        assert_eq!(wf.levels.len(), 2);
+        assert_eq!(wf.levels[0].as_int(), Some(3)); // word-count preset id
+        assert_eq!(wf.levels[1].as_int(), Some(0)); // finra preset id
+        assert_eq!(spec.size(), 4); // 2 workflows x 2 budget levels
+        assert!(spec
+            .scenarios()
+            .iter()
+            .all(|sc| sc.extra_param(AXIS_WORKFLOW).is_some()));
+    }
+
+    #[test]
+    fn bad_workflow_configs_rejected() {
+        assert!(spec_from_toml("workflows = [\"heron-dag\"]\n").is_err());
+        assert!(spec_from_toml("workflows = []\n").is_err());
+        assert!(spec_from_toml("workflows = [1]\n").is_err());
     }
 
     #[test]

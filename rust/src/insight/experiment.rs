@@ -26,6 +26,11 @@ pub const AXIS_MESSAGE_SIZE: &str = "message_size";
 pub const AXIS_CENTROIDS: &str = "centroids";
 pub const AXIS_MEMORY_MB: &str = "memory_mb";
 pub const AXIS_PARTITIONS: &str = "partitions";
+/// Workflow-graph axis: each level is a preset id
+/// ([`crate::workflow::WorkflowSpec::preset_by_id`]). When present, the
+/// sweep runs whole DAGs through the workflow driver instead of
+/// single-stage scenarios.
+pub const AXIS_WORKFLOW: &str = "workflow";
 
 /// One typed level of an [`Axis`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -282,6 +287,22 @@ impl ExperimentSpec {
         spec.set_ints(AXIS_CENTROIDS, [16]);
         spec.set_ints(AXIS_MEMORY_MB, [3_008]);
         spec.set_ints(AXIS_PARTITIONS, [1, 2, 4]);
+        spec
+    }
+
+    /// The workflow-graph grid: every preset DAG
+    /// ([`crate::workflow::PRESETS`]) swept over a shared parallelism
+    /// budget multiplier. `partitions` scales every stage's base
+    /// parallelism, so each workflow yields one end-to-end USL curve and
+    /// one critical-path model fit.
+    pub fn workflow_grid(messages: usize, seed: u64) -> Self {
+        let mut spec = Self::new("workflow-grid", messages, seed);
+        spec.lustre = ContentionParams::new(
+            crate::pilot::plugins::hpc::DEFAULT_LUSTRE_ALPHA,
+            crate::pilot::plugins::hpc::DEFAULT_LUSTRE_BETA,
+        );
+        spec.set_ints(AXIS_WORKFLOW, [0, 1, 2, 3]);
+        spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8]);
         spec
     }
 

@@ -61,6 +61,19 @@
 //! [`Autoscaler`] mid-run ([`Autoscaler::set_predictor`]).
 //! `autoscale --live --recalibrate` reports the recalibrated loop against
 //! the static-fit loop side by side.
+//!
+//! # Workflow graphs: per-stage fits composed along the critical path
+//!
+//! The [`workflow`] module models whole DAG campaigns
+//! ([`crate::workflow::WorkflowSpec`]): a `workflow` axis level stands for
+//! an entire graph, the sweep runs each stage through the cohort sim core
+//! ([`workflow::run_workflow_sweep_jobs`] keeps per-stage rows),
+//! [`workflow::fit_stages`] fits one USL curve per stage over the shared
+//! parallelism budget, and [`workflow::CriticalPathModel`] composes the
+//! fits into an end-to-end throughput prediction with bottleneck
+//! identification.  [`workflow::WorkflowTarget`] plugs the composed model
+//! into [`ControlLoop`]: one worker budget, water-filled across stages so
+//! the allocation follows the bottleneck as load shifts between stages.
 
 pub mod analysis;
 pub mod autoscale;
@@ -73,6 +86,7 @@ pub mod predict;
 pub mod recalibrate;
 pub mod sweep;
 pub mod vars;
+pub mod workflow;
 
 pub use analysis::{analyze, table, AnalysisRow, IncrementalAnalysis};
 pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
@@ -83,7 +97,7 @@ pub use control::{
 };
 pub use experiment::{
     axis_value_of, Axis, AxisValue, ExperimentSpec, AXIS_CENTROIDS, AXIS_MEMORY_MB,
-    AXIS_MESSAGE_SIZE, AXIS_PARTITIONS, AXIS_PLATFORM,
+    AXIS_MESSAGE_SIZE, AXIS_PARTITIONS, AXIS_PLATFORM, AXIS_WORKFLOW,
 };
 pub use predict::Predictor;
 pub use recalibrate::{
@@ -92,4 +106,9 @@ pub use recalibrate::{
 pub use sweep::{
     group_keys, group_observations, paper_key, run_sweep, run_sweep_jobs, run_sweep_jobs_opts,
     to_csv, GroupKey, SweepProgress, SweepRow,
+};
+pub use workflow::{
+    fit_stages, measure_workflow_row, run_workflow_sweep_jobs, stage_csv, CriticalPathModel,
+    LoadShift, RebalanceEvent, RebalancePolicy, StageFit, StageRow, WorkflowPrediction,
+    WorkflowTarget,
 };

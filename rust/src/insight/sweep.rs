@@ -15,7 +15,9 @@
 //! export without any code edits here.
 
 use super::experiment::{axis_value_of, AxisValue, ExperimentSpec};
-use super::experiment::{AXIS_CENTROIDS, AXIS_MEMORY_MB, AXIS_MESSAGE_SIZE, AXIS_PLATFORM};
+use super::experiment::{
+    AXIS_CENTROIDS, AXIS_MEMORY_MB, AXIS_MESSAGE_SIZE, AXIS_PLATFORM, AXIS_WORKFLOW,
+};
 use crate::engine::StepEngine;
 use crate::miniapp::{run_sim_opts, PlatformKind, Scenario, SimOptions};
 use crate::pilot::workers::parallel_indexed_map;
@@ -159,6 +161,11 @@ fn measure<F>(
 where
     F: Fn(&Scenario) -> Arc<dyn StepEngine>,
 {
+    if sc.extra_param(AXIS_WORKFLOW).is_some() {
+        // Workflow-axis scenarios stand for whole DAGs: route them through
+        // the workflow driver so the row carries end-to-end metrics.
+        return super::workflow::measure_workflow_sweep_row(spec, sc, engine_factory, opts);
+    }
     let r = run_sim_opts(sc, engine_factory(sc), opts)?;
     let key = GroupKey::new(
         spec.axes

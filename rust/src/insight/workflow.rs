@@ -1,0 +1,810 @@
+//! Workflow modeling and control: per-stage USL fits composed into an
+//! end-to-end critical-path prediction, plus cross-stage rebalancing.
+//!
+//! The sweep layer treats a workflow-axis scenario as a whole DAG:
+//! [`measure_workflow_row`] runs the graph through
+//! [`crate::workflow::run_workflow`] and reports one end-to-end
+//! [`SweepRow`] plus one [`StageRow`] per stage.  [`fit_stages`] fits each
+//! stage's throughput curve over the shared parallelism-budget axis, and
+//! [`CriticalPathModel`] composes those fits back into an end-to-end
+//! throughput prediction by replaying the DAG schedule with *modeled*
+//! stage windows — the acceptance gate holds the composed prediction
+//! within 10% of the simulated end-to-end throughput.
+//!
+//! [`WorkflowTarget`] closes the loop: a [`ScalingTarget`] whose
+//! parallelism is a *budget* water-filled across stages by modeled
+//! effective rate, so when a load shift moves the bottleneck the
+//! allocation follows it — the cross-stage question the source paper
+//! never asked.
+
+use super::autoscale::ScaleDecision;
+use super::control::ScalingTarget;
+use super::experiment::{axis_value_of, AxisValue, ExperimentSpec, AXIS_WORKFLOW};
+use super::predict::Predictor;
+use super::sweep::{GroupKey, SweepProgress, SweepRow};
+use crate::engine::StepEngine;
+use crate::miniapp::{PlatformKind, Scenario, SimOptions};
+use crate::pilot::workers::parallel_indexed_map;
+use crate::pilot::{ResizePlan, ResizeSemantics};
+use crate::usl::{fit, Obs, UslFit, UslParams};
+use crate::workflow::{effective_parallelism, run_workflow, schedule, StageResult, WorkflowSpec};
+use std::sync::Arc;
+
+/// One stage's measurement at one sweep configuration — the raw material
+/// for the per-stage USL fits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageRow {
+    pub workflow: String,
+    pub stage: usize,
+    pub name: String,
+    pub platform: PlatformKind,
+    /// The shared budget multiplier (the sweep's scale-axis level).
+    pub scale: usize,
+    /// Nominal stage parallelism (`base * scale`).
+    pub parallelism: usize,
+    pub ingested: u64,
+    pub throughput: f64,
+    pub window_seconds: f64,
+}
+
+/// Run the workflow a scenario stands for and collapse it into one
+/// end-to-end [`SweepRow`] (grouped like any other sweep row) plus the
+/// per-stage rows behind it.
+///
+/// The end-to-end row reports the DAG's delivered-per-makespan throughput;
+/// latency-style columns are composed along the critical path (sums for
+/// means/quantiles of the serial chain, ingest-weighted means for CVs) so
+/// the analysis layer can fit and tabulate workflows unchanged.
+pub fn measure_workflow_row<F>(
+    spec: &ExperimentSpec,
+    sc: &Scenario,
+    engine_factory: &F,
+    opts: SimOptions,
+) -> Result<(SweepRow, Vec<StageRow>), String>
+where
+    F: Fn(&Scenario) -> Arc<dyn StepEngine>,
+{
+    let id = sc
+        .extra_param(AXIS_WORKFLOW)
+        .ok_or_else(|| format!("scenario carries no {AXIS_WORKFLOW:?} axis"))?;
+    let wf = WorkflowSpec::preset_by_id(id)
+        .ok_or_else(|| format!("unknown workflow preset id {id}"))?
+        .with_source_messages(sc.messages)
+        .with_seed(sc.seed);
+    let scale = sc.partitions.max(1);
+    let run = run_workflow(&wf, scale, engine_factory, opts)?;
+
+    let key = GroupKey::new(
+        spec.axes
+            .iter()
+            .filter(|a| a.name != spec.scale_axis)
+            .map(|a| {
+                let v = axis_value_of(sc, &a.name).unwrap_or(AxisValue::Int(0));
+                (a.name.clone(), v)
+            })
+            .collect(),
+    );
+    let row_scale = match axis_value_of(sc, &spec.scale_axis) {
+        Some(AxisValue::Int(n)) => n as usize,
+        _ => sc.partitions,
+    };
+
+    // Compose latency columns over the critical path's active stages.
+    let path: Vec<&StageResult> = run
+        .critical_path
+        .iter()
+        .filter_map(|&s| run.stages.iter().find(|r| r.stage == s && r.ingested > 0))
+        .collect();
+    let sum = |f: fn(&StageResult) -> f64| path.iter().map(|r| f(r)).sum::<f64>();
+    let path_ingest: f64 = path.iter().map(|r| r.ingested as f64).sum();
+    let weighted = |f: fn(&StageResult) -> f64| {
+        if path_ingest > 0.0 {
+            path.iter().map(|r| f(r) * r.ingested as f64).sum::<f64>() / path_ingest
+        } else {
+            0.0
+        }
+    };
+
+    let e2e = SweepRow {
+        key,
+        scale_axis: spec.scale_axis.clone(),
+        scale: row_scale,
+        throughput: run.throughput,
+        service_mean: sum(|r| r.service_mean),
+        service_p95: sum(|r| r.service_p95),
+        service_cv: weighted(|r| r.service_cv),
+        warm_mean: sum(|r| r.warm_mean),
+        warm_cv: weighted(|r| r.warm_cv),
+        broker_mean: sum(|r| r.broker_mean),
+        messages: run.accounting.delivered as usize,
+    };
+
+    let stage_rows = run
+        .stages
+        .iter()
+        .map(|r| StageRow {
+            workflow: wf.name.clone(),
+            stage: r.stage,
+            name: r.name.clone(),
+            platform: r.platform,
+            scale,
+            parallelism: r.parallelism,
+            ingested: r.ingested,
+            throughput: r.throughput,
+            window_seconds: r.window_seconds,
+        })
+        .collect();
+    Ok((e2e, stage_rows))
+}
+
+/// The [`measure_workflow_row`] entry the generic sweep dispatcher calls —
+/// end-to-end row only, stage rows discarded (use
+/// [`run_workflow_sweep_jobs`] to keep them).
+pub fn measure_workflow_sweep_row<F>(
+    spec: &ExperimentSpec,
+    sc: &Scenario,
+    engine_factory: &F,
+    opts: SimOptions,
+) -> Result<SweepRow, String>
+where
+    F: Fn(&Scenario) -> Arc<dyn StepEngine>,
+{
+    measure_workflow_row(spec, sc, engine_factory, opts).map(|(row, _)| row)
+}
+
+/// Run a workflow sweep on `jobs` workers, keeping both the end-to-end
+/// rows and every per-stage row (in spec order, stages in topo order
+/// within each configuration).  Mirrors
+/// [`run_sweep_jobs_opts`](super::sweep::run_sweep_jobs_opts): output is
+/// byte-identical for every `jobs` value.
+pub fn run_workflow_sweep_jobs<F, C>(
+    spec: &ExperimentSpec,
+    engine_factory: F,
+    jobs: usize,
+    opts: SimOptions,
+    mut progress: C,
+) -> (Vec<SweepRow>, Vec<StageRow>)
+where
+    F: Fn(&Scenario) -> Arc<dyn StepEngine> + Sync,
+    C: FnMut(SweepProgress<'_>),
+{
+    let scenarios = spec.scenarios();
+    let total = scenarios.len();
+    let mut slots: Vec<Option<(SweepRow, Vec<StageRow>)>> = Vec::with_capacity(total);
+    slots.resize_with(total, || None);
+    let mut done = 0usize;
+    let scenarios_ref = &scenarios;
+    let factory_ref = &engine_factory;
+    parallel_indexed_map(
+        jobs.max(1),
+        total,
+        move |_worker, i| measure_workflow_row(spec, &scenarios_ref[i], factory_ref, opts),
+        |i, outcome| match outcome {
+            Ok(pair) => {
+                done += 1;
+                progress(SweepProgress {
+                    done,
+                    total,
+                    row: &pair.0,
+                });
+                slots[i] = Some(pair);
+            }
+            Err(e) => log::error!("workflow sweep config failed ({:?}): {e}", scenarios[i]),
+        },
+    );
+    let mut rows = Vec::with_capacity(total);
+    let mut stage_rows = Vec::new();
+    for slot in slots.into_iter().flatten() {
+        rows.push(slot.0);
+        stage_rows.extend(slot.1);
+    }
+    (rows, stage_rows)
+}
+
+/// Render per-stage rows as CSV (deterministic, spec order).
+pub fn stage_csv(rows: &[StageRow]) -> String {
+    let mut s = String::from(
+        "workflow,stage,name,platform,scale,parallelism,ingested,throughput,window_seconds\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{:.6},{:.6}\n",
+            r.workflow,
+            r.stage,
+            r.name,
+            r.platform.label(),
+            r.scale,
+            r.parallelism,
+            r.ingested,
+            r.throughput,
+            r.window_seconds
+        ));
+    }
+    s
+}
+
+/// One stage's fitted USL curve over the budget sweep.
+#[derive(Debug, Clone)]
+pub struct StageFit {
+    pub workflow: String,
+    pub stage: usize,
+    pub name: String,
+    pub platform: PlatformKind,
+    pub fit: UslFit,
+}
+
+/// Fit each (workflow, stage) group's throughput curve over nominal
+/// parallelism.  Starved configurations (zero throughput) are skipped;
+/// groups with fewer than three usable observations are dropped with a
+/// warning.
+pub fn fit_stages(rows: &[StageRow]) -> Vec<StageFit> {
+    // First-appearance group scan (no hash maps: deterministic order).
+    let mut groups: Vec<(String, usize)> = Vec::new();
+    for r in rows {
+        if !groups.iter().any(|(w, s)| *w == r.workflow && *s == r.stage) {
+            groups.push((r.workflow.clone(), r.stage));
+        }
+    }
+    let mut fits = Vec::new();
+    for (wf, stage) in groups {
+        let members: Vec<&StageRow> = rows
+            .iter()
+            .filter(|r| r.workflow == wf && r.stage == stage)
+            .collect();
+        let mut obs: Vec<Obs> = members
+            .iter()
+            .filter(|r| r.throughput > 0.0)
+            .map(|r| Obs::new(r.parallelism as f64, r.throughput))
+            .collect();
+        obs.sort_by(|a, b| a.n.partial_cmp(&b.n).unwrap_or(std::cmp::Ordering::Equal));
+        if obs.len() < 3 {
+            log::warn!("stage {wf}/{stage}: {} usable observations, skipping fit", obs.len());
+            continue;
+        }
+        match fit(&obs) {
+            Ok(f) => fits.push(StageFit {
+                workflow: wf,
+                stage,
+                name: members[0].name.clone(),
+                platform: members[0].platform,
+                fit: f,
+            }),
+            Err(e) => log::warn!("stage {wf}/{stage}: USL fit failed: {e}"),
+        }
+    }
+    fits
+}
+
+/// End-to-end throughput predicted by composing per-stage USL fits along
+/// the DAG's critical path.
+#[derive(Debug, Clone)]
+pub struct WorkflowPrediction {
+    pub workflow: String,
+    pub scale: usize,
+    /// Modeled per-stage windows (0 for starved stages).
+    pub windows: Vec<f64>,
+    pub critical_path: Vec<usize>,
+    pub makespan: f64,
+    /// Predicted end-to-end throughput: delivered / makespan.
+    pub throughput: f64,
+    /// The critical-path stage with the widest modeled window.
+    pub bottleneck: usize,
+}
+
+/// Composes per-stage USL fits into an end-to-end model: each active
+/// stage's window is `inflow / T_fit(base * scale)`, the DAG schedule is
+/// replayed with those modeled windows, and the prediction is
+/// delivered-per-makespan — directly comparable to the simulated
+/// end-to-end throughput at any budget level.
+#[derive(Debug, Clone)]
+pub struct CriticalPathModel {
+    spec: WorkflowSpec,
+    predictors: Vec<Option<Predictor>>,
+}
+
+impl CriticalPathModel {
+    /// Build from fitted stages; every stage the flow plan feeds must have
+    /// a fit (starved stages may go unfitted).
+    pub fn new(spec: WorkflowSpec, fits: &[StageFit]) -> Result<Self, String> {
+        let plan = spec.flow_plan()?;
+        let mut predictors = Vec::with_capacity(spec.stages.len());
+        for (s, st) in spec.stages.iter().enumerate() {
+            let fit = fits
+                .iter()
+                .find(|f| f.workflow == spec.name && f.stage == s)
+                .map(|f| Predictor::from_fit(&f.fit));
+            if fit.is_none() && plan.inflow[s] > 0 {
+                return Err(format!(
+                    "workflow {:?}: active stage {s} ({:?}) has no USL fit",
+                    spec.name, st.name
+                ));
+            }
+            predictors.push(fit);
+        }
+        Ok(Self { spec, predictors })
+    }
+
+    pub fn spec(&self) -> &WorkflowSpec {
+        &self.spec
+    }
+
+    /// Predict end-to-end throughput at budget multiplier `scale`.
+    pub fn predict(&self, scale: usize) -> Result<WorkflowPrediction, String> {
+        let plan = self.spec.flow_plan()?;
+        let n = self.spec.stages.len();
+        let mut windows = vec![0.0f64; n];
+        for s in 0..n {
+            if plan.inflow[s] == 0 {
+                continue;
+            }
+            let p = self.predictors[s]
+                .as_ref()
+                .ok_or_else(|| format!("stage {s}: no predictor"))?;
+            let st = &self.spec.stages[s];
+            let nominal = effective_parallelism(st.platform, st.parallelism * scale.max(1));
+            let t = p.throughput(nominal);
+            if t <= 0.0 {
+                return Err(format!("stage {s}: modeled throughput {t} not positive"));
+            }
+            windows[s] = plan.inflow[s] as f64 / t;
+        }
+        let (_, _, critical_path, makespan) = schedule(&self.spec, &plan, &windows);
+        if makespan <= 0.0 {
+            return Err(format!("workflow {:?}: modeled makespan is zero", self.spec.name));
+        }
+        let throughput = plan.delivered(&self.spec) as f64 / makespan;
+        let bottleneck = critical_path
+            .iter()
+            .copied()
+            .max_by(|&a, &b| {
+                windows[a]
+                    .partial_cmp(&windows[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(b.cmp(&a))
+            })
+            .unwrap_or(0);
+        Ok(WorkflowPrediction {
+            workflow: self.spec.name.clone(),
+            scale: scale.max(1),
+            windows,
+            critical_path,
+            makespan,
+            throughput,
+            bottleneck,
+        })
+    }
+}
+
+/// How [`WorkflowTarget`] splits its budget across stages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RebalancePolicy {
+    /// Water-fill by modeled effective rate: the slowest stage gets the
+    /// next worker, so the allocation tracks the bottleneck as it moves.
+    Adaptive,
+    /// Fixed per-stage weights (largest-remainder split, min 1 per active
+    /// stage) — the baseline the adaptive policy must beat.
+    Static(Vec<f64>),
+}
+
+/// A deterministic bottleneck-shifting load: per-stage demand multipliers
+/// cycled phase by phase on the sim clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadShift {
+    pub ticks_per_phase: usize,
+    /// One multiplier vector per phase (len = stage count).
+    pub phases: Vec<Vec<f64>>,
+}
+
+/// One allocation change, recorded when the controller's budget or the
+/// load phase moves the bottleneck.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RebalanceEvent {
+    pub tick: usize,
+    /// The allocation in effect *after* the event.
+    pub alloc: Vec<usize>,
+    /// The stage the policy was feeding (slowest modeled effective rate).
+    pub bottleneck: usize,
+}
+
+/// A [`ScalingTarget`] over a whole workflow: its "parallelism" is a
+/// worker *budget* split across stages, re-balanced on every actuation by
+/// modeled per-stage effective rate.  End-to-end capacity is the min over
+/// stages of `T_fit(alloc) / (relative load * phase multiplier)` — the
+/// pipeline drains only as fast as its slowest stage.
+#[derive(Debug, Clone)]
+pub struct WorkflowTarget {
+    name: String,
+    predictors: Vec<Predictor>,
+    /// Per-stage relative load: stage inflow per delivered message.
+    load: Vec<f64>,
+    /// Stages with nonzero load, in index order.
+    active: Vec<usize>,
+    alloc: Vec<usize>,
+    policy: RebalancePolicy,
+    shift: Option<LoadShift>,
+    tick: usize,
+    rebalances: Vec<RebalanceEvent>,
+}
+
+impl WorkflowTarget {
+    pub fn new(
+        name: impl Into<String>,
+        predictors: Vec<Predictor>,
+        load: Vec<f64>,
+        initial_budget: usize,
+        policy: RebalancePolicy,
+    ) -> Result<Self, String> {
+        if predictors.len() != load.len() {
+            return Err(format!(
+                "predictors ({}) and load ({}) must cover the same stages",
+                predictors.len(),
+                load.len()
+            ));
+        }
+        let active: Vec<usize> = (0..load.len()).filter(|&s| load[s] > 0.0).collect();
+        if active.is_empty() {
+            return Err("workflow target: no stage carries load".to_string());
+        }
+        if let RebalancePolicy::Static(w) = &policy {
+            if w.len() != load.len() {
+                return Err(format!(
+                    "static weights ({}) must cover all {} stages",
+                    w.len(),
+                    load.len()
+                ));
+            }
+        }
+        let mut target = Self {
+            name: name.into(),
+            predictors,
+            load,
+            active,
+            alloc: Vec::new(),
+            policy,
+            shift: None,
+            tick: 0,
+            rebalances: Vec::new(),
+        };
+        target.alloc = target.target_alloc(initial_budget.max(1));
+        Ok(target)
+    }
+
+    /// Build from a fitted workflow: relative loads from the flow plan,
+    /// one predictor per stage (placeholder for starved stages).
+    pub fn for_workflow(
+        spec: &WorkflowSpec,
+        fits: &[StageFit],
+        initial_budget: usize,
+        policy: RebalancePolicy,
+    ) -> Result<Self, String> {
+        let plan = spec.flow_plan()?;
+        let delivered = plan.delivered(spec);
+        if delivered == 0 {
+            return Err(format!("workflow {:?}: nothing delivered", spec.name));
+        }
+        let mut predictors = Vec::with_capacity(spec.stages.len());
+        let mut load = Vec::with_capacity(spec.stages.len());
+        for s in 0..spec.stages.len() {
+            load.push(plan.inflow[s] as f64 / delivered as f64);
+            let p = fits
+                .iter()
+                .find(|f| f.workflow == spec.name && f.stage == s)
+                .map(|f| Predictor::from_fit(&f.fit));
+            match p {
+                Some(p) => predictors.push(p),
+                None if plan.inflow[s] > 0 => {
+                    return Err(format!(
+                        "workflow {:?}: active stage {s} has no USL fit",
+                        spec.name
+                    ))
+                }
+                None => predictors.push(Predictor {
+                    params: UslParams::new(0.0, 0.0, 1.0),
+                }),
+            }
+        }
+        Self::new(spec.name.clone(), predictors, load, initial_budget, policy)
+    }
+
+    /// Attach a deterministic bottleneck-shifting load schedule.
+    pub fn with_shift(mut self, shift: LoadShift) -> Self {
+        self.shift = Some(shift);
+        self
+    }
+
+    pub fn alloc(&self) -> &[usize] {
+        &self.alloc
+    }
+
+    pub fn rebalances(&self) -> &[RebalanceEvent] {
+        &self.rebalances
+    }
+
+    fn phase_multipliers(&self) -> Vec<f64> {
+        match &self.shift {
+            Some(shift) if !shift.phases.is_empty() => {
+                let phase = (self.tick / shift.ticks_per_phase.max(1)) % shift.phases.len();
+                shift.phases[phase].clone()
+            }
+            _ => vec![1.0; self.load.len()],
+        }
+    }
+
+    /// Modeled end-to-end messages/s stage `s` sustains at `n` workers
+    /// under the current load phase.
+    fn effective_rate(&self, s: usize, n: usize, mults: &[f64]) -> f64 {
+        let demand = self.load[s] * mults.get(s).copied().unwrap_or(1.0);
+        if demand <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.predictors[s].throughput(n.max(1)) / demand
+    }
+
+    /// The stage with the smallest modeled effective rate (first wins
+    /// ties) — where the next worker goes, and what a rebalance reports.
+    fn bottleneck_stage(&self, alloc: &[usize], mults: &[f64]) -> usize {
+        let mut best = self.active[0];
+        let mut best_rate = self.effective_rate(best, alloc[best], mults);
+        for &s in &self.active[1..] {
+            let rate = self.effective_rate(s, alloc[s], mults);
+            if rate < best_rate {
+                best = s;
+                best_rate = rate;
+            }
+        }
+        best
+    }
+
+    /// Split `budget` workers across active stages under the current
+    /// policy and load phase.
+    fn target_alloc(&self, budget: usize) -> Vec<usize> {
+        let n = self.load.len();
+        let budget = budget.max(self.active.len());
+        let mut alloc = vec![0usize; n];
+        match &self.policy {
+            RebalancePolicy::Adaptive => {
+                let mults = self.phase_multipliers();
+                for &s in &self.active {
+                    alloc[s] = 1;
+                }
+                let mut spare = budget - self.active.len();
+                while spare > 0 {
+                    let slow = self.bottleneck_stage(&alloc, &mults);
+                    alloc[slow] += 1;
+                    spare -= 1;
+                }
+            }
+            RebalancePolicy::Static(weights) => {
+                // Largest-remainder proportional split, min 1 per stage.
+                let spare = budget - self.active.len();
+                let total: f64 = self.active.iter().map(|&s| weights[s].max(0.0)).sum();
+                let mut shares: Vec<(usize, f64)> = Vec::with_capacity(self.active.len());
+                for &s in &self.active {
+                    let w = if total > 0.0 {
+                        weights[s].max(0.0) / total
+                    } else {
+                        0.0
+                    };
+                    let exact = w * spare as f64;
+                    alloc[s] = 1 + exact.floor() as usize;
+                    shares.push((s, exact - exact.floor()));
+                }
+                let mut assigned: usize = self.active.iter().map(|&s| alloc[s] - 1).sum();
+                while assigned < spare {
+                    let (winner, _) = shares
+                        .iter()
+                        .copied()
+                        .max_by(|a, b| {
+                            a.1.partial_cmp(&b.1)
+                                .unwrap_or(std::cmp::Ordering::Equal)
+                                .then(b.0.cmp(&a.0))
+                        })
+                        .unwrap_or((self.active[0], 0.0));
+                    alloc[winner] += 1;
+                    if let Some(slot) = shares.iter_mut().find(|(s, _)| *s == winner) {
+                        slot.1 = -1.0;
+                    }
+                    assigned += 1;
+                }
+            }
+        }
+        alloc
+    }
+}
+
+impl ScalingTarget for WorkflowTarget {
+    fn label(&self) -> String {
+        format!("workflow:{}", self.name)
+    }
+
+    fn parallelism(&self) -> usize {
+        self.alloc.iter().sum()
+    }
+
+    fn actuate(&mut self, decision: &ScaleDecision) -> Result<Option<ResizePlan>, String> {
+        let budget = match *decision {
+            ScaleDecision::Hold { parallelism } => parallelism,
+            ScaleDecision::Scale { to, .. } => to,
+            ScaleDecision::Throttle { parallelism, .. } => parallelism,
+        }
+        .max(1);
+        let next = self.target_alloc(budget);
+        if next == self.alloc {
+            return Ok(None);
+        }
+        let from: usize = self.alloc.iter().sum();
+        let to: usize = next.iter().sum();
+        self.alloc = next;
+        let mults = self.phase_multipliers();
+        self.rebalances.push(RebalanceEvent {
+            tick: self.tick,
+            alloc: self.alloc.clone(),
+            bottleneck: self.bottleneck_stage(&self.alloc, &mults),
+        });
+        if from == to {
+            // Pure rebalance: workers moved between stages, total intact.
+            return Ok(None);
+        }
+        Ok(Some(ResizePlan {
+            from,
+            to,
+            transition_s: 0.0,
+            semantics: ResizeSemantics::Repartition,
+        }))
+    }
+
+    fn serve(&mut self, demand: f64, dt: f64) -> Result<f64, String> {
+        let served = demand.min(self.capacity() * dt.max(0.0));
+        self.tick += 1;
+        Ok(served)
+    }
+
+    fn capacity(&self) -> f64 {
+        let mults = self.phase_multipliers();
+        let mut cap = f64::INFINITY;
+        for &s in &self.active {
+            cap = cap.min(self.effective_rate(s, self.alloc[s], &mults));
+        }
+        if cap.is_finite() { cap } else { 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::usl::UslFit;
+
+    fn predictor(sigma: f64, lambda: f64) -> Predictor {
+        Predictor {
+            params: UslParams::new(sigma, 0.0, lambda),
+        }
+    }
+
+    fn two_stage_target(policy: RebalancePolicy) -> WorkflowTarget {
+        WorkflowTarget::new(
+            "pair",
+            vec![predictor(0.02, 10.0), predictor(0.02, 10.0)],
+            vec![1.0, 1.0],
+            8,
+            policy,
+        )
+        .expect("valid target")
+    }
+
+    #[test]
+    fn static_split_is_proportional_with_min_one() {
+        let t = two_stage_target(RebalancePolicy::Static(vec![1.0, 3.0]));
+        assert_eq!(t.alloc(), &[3, 5]);
+        let even = two_stage_target(RebalancePolicy::Static(vec![1.0, 1.0]));
+        assert_eq!(even.alloc(), &[4, 4]);
+    }
+
+    #[test]
+    fn adaptive_waterfill_follows_the_loaded_stage() {
+        let shift = LoadShift {
+            ticks_per_phase: 10,
+            phases: vec![vec![2.0, 0.5], vec![0.5, 2.0]],
+        };
+        let mut t = two_stage_target(RebalancePolicy::Adaptive).with_shift(shift);
+        t.actuate(&ScaleDecision::Hold { parallelism: 8 }).unwrap();
+        assert_eq!(t.alloc(), &[6, 2], "phase A loads stage 0");
+        for _ in 0..10 {
+            t.serve(60.0, 1.0).unwrap();
+        }
+        t.actuate(&ScaleDecision::Hold { parallelism: 8 }).unwrap();
+        assert_eq!(t.alloc(), &[2, 6], "phase B moves the bottleneck");
+        let last = t.rebalances().last().unwrap();
+        assert_eq!(last.bottleneck, 1, "rebalance reports the fed stage");
+    }
+
+    #[test]
+    fn adaptive_beats_every_static_split_under_shifting_load() {
+        let shift = LoadShift {
+            ticks_per_phase: 10,
+            phases: vec![vec![2.0, 0.5], vec![0.5, 2.0]],
+        };
+        let ticks = 40;
+        let run = |mut t: WorkflowTarget, adapt: bool| -> f64 {
+            let mut served = 0.0;
+            for _ in 0..ticks {
+                if adapt {
+                    t.actuate(&ScaleDecision::Hold { parallelism: 8 }).unwrap();
+                }
+                served += t.serve(60.0, 1.0).unwrap();
+            }
+            served
+        };
+        let adaptive = run(
+            two_stage_target(RebalancePolicy::Adaptive).with_shift(shift.clone()),
+            true,
+        );
+        let mut best_static = 0.0f64;
+        for a in 1..8usize {
+            let t = two_stage_target(RebalancePolicy::Static(vec![a as f64, (8 - a) as f64]))
+                .with_shift(shift.clone());
+            best_static = best_static.max(run(t, false));
+        }
+        assert!(
+            adaptive > best_static * 1.1,
+            "adaptive {adaptive:.1} must beat best static {best_static:.1} by >10%"
+        );
+    }
+
+    #[test]
+    fn rebalancing_is_deterministic() {
+        let mk = || {
+            let shift = LoadShift {
+                ticks_per_phase: 5,
+                phases: vec![vec![3.0, 1.0], vec![1.0, 3.0]],
+            };
+            let mut t = two_stage_target(RebalancePolicy::Adaptive).with_shift(shift);
+            let mut trace = Vec::new();
+            for _ in 0..20 {
+                t.actuate(&ScaleDecision::Hold { parallelism: 8 }).unwrap();
+                trace.push((t.alloc().to_vec(), t.serve(60.0, 1.0).unwrap().to_bits()));
+            }
+            (trace, t.rebalances().to_vec())
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn critical_path_model_recovers_exact_stage_curves() {
+        use crate::workflow::{EdgeSpec, StageSpec};
+        let mut spec = WorkflowSpec::new("pair");
+        let a = spec.stage(StageSpec::new("ingest", PlatformKind::Lambda, 1));
+        let b = spec.stage(StageSpec::new("train", PlatformKind::DaskWrangler, 1));
+        spec.edge(EdgeSpec::new(a, b));
+        let spec = spec.with_source_messages(64);
+        let params = [UslParams::new(0.05, 0.0, 8.0), UslParams::new(0.01, 0.0, 2.0)];
+        let fits: Vec<StageFit> = params
+            .iter()
+            .enumerate()
+            .map(|(s, p)| StageFit {
+                workflow: "pair".to_string(),
+                stage: s,
+                name: spec.stages[s].name.clone(),
+                platform: spec.stages[s].platform,
+                fit: UslFit {
+                    params: *p,
+                    r2: 1.0,
+                    rmse: 0.0,
+                    method: "exact",
+                },
+            })
+            .collect();
+        let model = CriticalPathModel::new(spec, &fits).unwrap();
+        for scale in [1usize, 2, 4] {
+            let pred = model.predict(scale).unwrap();
+            // Chain of two stages: makespan is the sum of both windows.
+            let expect = 64.0 / (64.0 / params[0].throughput(scale as f64)
+                + 64.0 / params[1].throughput(scale as f64));
+            assert!(
+                (pred.throughput - expect).abs() < 1e-9,
+                "scale {scale}: {} vs {expect}",
+                pred.throughput
+            );
+            assert_eq!(pred.bottleneck, 1, "slower stage is the bottleneck");
+        }
+    }
+}

@@ -59,3 +59,4 @@ pub mod sim;
 pub mod store;
 pub mod usl;
 pub mod util;
+pub mod workflow;

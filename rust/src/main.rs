@@ -33,13 +33,22 @@ fn app() -> App {
             .opt("seed", "42", "rng seed")
             .opt("edge-sites", "1", "edge fleet size (multi-site placement; platform edge)")
             .opt("lanes", "1", "parallel sim lanes per scenario (0 = one per core; sim only)")
+            .opt(
+                "workflow",
+                "",
+                "run a preset workflow DAG instead of a single stage: finra | ml-training | ml-inference | word-count (--partitions scales every stage)",
+            )
             .flag("live", "run live (threads + real PJRT) instead of simulated time"),
     )
     .command(
         CommandSpec::new("sweep", "run an experiment grid sweep, fit USL, print analysis")
             .opt("messages", "64", "messages per configuration")
             .opt("seed", "42", "rng seed")
-            .opt("grid", "paper", "preset grid: paper | edge | edge-fleet | memory | tiny")
+            .opt(
+                "grid",
+                "paper",
+                "preset grid: paper | edge | edge-fleet | memory | tiny | workflow",
+            )
             .opt("jobs", "0", "parallel sweep workers (0 = one per core)")
             .opt("lanes", "1", "parallel sim lanes per scenario (0 = one per core)")
             .opt("csv", "", "write per-config CSV to this path")
@@ -154,6 +163,9 @@ fn print_summary(label: &str, s: &pilot_streaming::miniapp::RunSummary) {
 }
 
 fn cmd_run(args: &Args) -> Result<(), String> {
+    if let Some(name) = args.get("workflow").filter(|s| !s.is_empty()) {
+        return cmd_run_workflow(args, name);
+    }
     let sc = scenario_from(args)?;
     if args.has_flag("live") {
         let engine = engine_for_scenario(true, sc.partitions.min(4))?;
@@ -184,6 +196,64 @@ fn lanes_from(args: &Args) -> Result<usize, String> {
     })
 }
 
+fn cmd_run_workflow(args: &Args, name: &str) -> Result<(), String> {
+    use pilot_streaming::workflow::{run_workflow, WorkflowSpec};
+    if args.has_flag("live") {
+        return Err("--workflow runs in simulated time only (drop --live)".into());
+    }
+    let wf = WorkflowSpec::preset(name)
+        .ok_or_else(|| {
+            format!("unknown workflow {name:?} (finra | ml-training | ml-inference | word-count)")
+        })?
+        .with_source_messages(args.get_usize("messages").map_err(|e| e.to_string())?)
+        .with_seed(args.get_u64("seed").map_err(|e| e.to_string())?);
+    let scale = args
+        .get_usize("partitions")
+        .map_err(|e| e.to_string())?
+        .max(1);
+    let opts = SimOptions {
+        lanes: lanes_from(args)?,
+        ..Default::default()
+    };
+    let factory = figures::engine_factory(figures::default_calibration());
+    let r = run_workflow(&wf, scale, &factory, opts)?;
+    println!("-- workflow {} (scale x{scale}) --", wf.name);
+    println!(
+        "{:>2}  {:<14}{:<11}{:>5}  {:>9}  {:>12}  {:>10}",
+        "#", "stage", "platform", "N", "ingested", "T msg/s", "window s"
+    );
+    for s in &r.stages {
+        println!(
+            "{:>2}  {:<14}{:<11}{:>5}  {:>9}  {:>12.3}  {:>10.3}",
+            s.stage,
+            s.name,
+            s.platform.label(),
+            s.parallelism,
+            s.ingested,
+            s.throughput,
+            s.window_seconds
+        );
+    }
+    for e in &r.edges {
+        println!(
+            "edge {} -> {}: consumed {}  emitted {}  residual {}",
+            e.from, e.to, e.consumed, e.emitted, e.residual
+        );
+    }
+    let a = &r.accounting;
+    println!(
+        "accounting         ingested {}  delivered {}  in-flight {} (conserved)",
+        a.ingested, a.delivered, a.in_flight
+    );
+    let path: Vec<String> = r.critical_path.iter().map(|s| s.to_string()).collect();
+    println!("critical path      {}", path.join(" -> "));
+    println!("makespan           {:.3} s", r.makespan);
+    println!("throughput e2e     {:.3} msg/s", r.throughput);
+    let b = r.bottleneck();
+    println!("bottleneck         stage {} ({})", b, r.stages[b].name);
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     let messages = args.get_usize("messages").map_err(|e| e.to_string())?;
     let seed = args.get_u64("seed").map_err(|e| e.to_string())?;
@@ -195,9 +265,10 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             "edge-fleet" => ExperimentSpec::edge_fleet_grid(messages, seed),
             "memory" => ExperimentSpec::lambda_memory_sweep(messages, seed),
             "tiny" => ExperimentSpec::tiny_grid(messages, seed),
+            "workflow" => ExperimentSpec::workflow_grid(messages, seed),
             other => {
                 return Err(format!(
-                    "unknown grid {other:?} (paper | edge | edge-fleet | memory | tiny)"
+                    "unknown grid {other:?} (paper | edge | edge-fleet | memory | tiny | workflow)"
                 ))
             }
         },
@@ -208,6 +279,9 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             .unwrap_or(1),
         n => n,
     };
+    if spec.axis(insight::AXIS_WORKFLOW).is_some() {
+        return cmd_sweep_workflow(args, &spec, jobs);
+    }
     eprintln!(
         "running {} configurations on {jobs} worker(s) (simulated time)...",
         spec.size()
@@ -255,6 +329,99 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     if let Some(path) = args.get("csv").filter(|s| !s.is_empty()) {
         std::fs::write(path, insight::to_csv(&rows)).map_err(|e| e.to_string())?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `sweep --grid workflow` (or a TOML `workflows = [...]` campaign): run
+/// whole-DAG configurations, fit every stage's USL curve, and report the
+/// composed critical-path model against the simulated end-to-end
+/// throughput.
+fn cmd_sweep_workflow(args: &Args, spec: &ExperimentSpec, jobs: usize) -> Result<(), String> {
+    use pilot_streaming::workflow::WorkflowSpec;
+    let opts = SimOptions {
+        lanes: lanes_from(args)?,
+        ..Default::default()
+    };
+    eprintln!(
+        "running {} workflow configurations on {jobs} worker(s) (simulated time)...",
+        spec.size()
+    );
+    let (rows, stage_rows) = insight::run_workflow_sweep_jobs(
+        spec,
+        figures::engine_factory(figures::default_calibration()),
+        jobs,
+        opts,
+        |p| {
+            eprintln!(
+                "[{}/{}] {} {}={} -> {:.2} msg/s",
+                p.done,
+                p.total,
+                p.row.key.label(),
+                p.row.scale_axis,
+                p.row.scale,
+                p.row.throughput
+            );
+        },
+    );
+    if rows.is_empty() {
+        return Err("sweep produced no rows (every configuration failed)".into());
+    }
+    let analysis = insight::analyze(&rows);
+    println!("{}", insight::table(&analysis));
+    let fits = insight::fit_stages(&stage_rows);
+    println!("per-stage USL fits:");
+    for f in &fits {
+        println!(
+            "  {:<12} [{}] {:<14} sigma {:.4}  kappa {:.5}  lambda {:.2}  R2 {:.3}",
+            f.workflow,
+            f.stage,
+            f.name,
+            f.fit.params.sigma,
+            f.fit.params.kappa,
+            f.fit.params.lambda,
+            f.fit.r2
+        );
+    }
+    println!("critical-path model vs simulated end-to-end throughput:");
+    let axis = spec
+        .axis(insight::AXIS_WORKFLOW)
+        .expect("workflow sweep without workflow axis");
+    for level in &axis.levels {
+        let Some(id) = level.as_int() else { continue };
+        let wf = WorkflowSpec::preset_by_id(id)
+            .ok_or_else(|| format!("unknown workflow preset id {id}"))?
+            .with_source_messages(spec.messages)
+            .with_seed(spec.seed);
+        let name = wf.name.clone();
+        let model = insight::CriticalPathModel::new(wf, &fits)?;
+        let mut worst: f64 = 0.0;
+        for row in rows.iter().filter(|r| {
+            r.key.pairs().iter().any(|(n, v)| {
+                n.as_str() == insight::AXIS_WORKFLOW
+                    && matches!(v, insight::AxisValue::Int(i) if *i == id)
+            })
+        }) {
+            let pred = model.predict(row.scale)?;
+            let err = (pred.throughput - row.throughput).abs() / row.throughput.max(1e-12);
+            worst = worst.max(err);
+            println!(
+                "  {name:<12} x{:<2}  sim {:>10.3}  model {:>10.3}  err {:>5.1}%  bottleneck {}",
+                row.scale,
+                row.throughput,
+                pred.throughput,
+                err * 100.0,
+                pred.bottleneck
+            );
+        }
+        println!("  {name:<12} worst model error {:.1}%", worst * 100.0);
+    }
+    if let Some(path) = args.get("csv").filter(|s| !s.is_empty()) {
+        std::fs::write(path, insight::to_csv(&rows)).map_err(|e| e.to_string())?;
+        let stage_path = format!("{path}.stages.csv");
+        std::fs::write(&stage_path, insight::stage_csv(&stage_rows))
+            .map_err(|e| e.to_string())?;
+        println!("wrote {path} and {stage_path}");
     }
     Ok(())
 }

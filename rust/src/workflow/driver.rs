@@ -1,0 +1,371 @@
+//! The workflow driver: execute a [`WorkflowSpec`] end to end by running
+//! each stage through the cohort sim core ([`run_sim_opts`]) and routing
+//! its delivered messages into downstream stage brokers with the
+//! integer-exact fan arithmetic of [`WorkflowSpec::flow_plan`].
+//!
+//! Every run carries a [`WorkflowAccounting`] proving the end-to-end
+//! invariant — `sum(ingested) * ratios == sum(delivered) + in-flight` —
+//! re-derived from the routed edge flows and asserted per edge
+//! (`debug_assert!`) as the plan is walked.
+//!
+//! Stage timing composes by critical path: a stage's measurement window is
+//! `ingested / throughput` (the sim core may pad the simulated message
+//! count up to a partition multiple; the routed counts stay exact), and
+//! [`schedule`] places each stage after its last-finishing predecessor.
+//! End-to-end throughput is delivered messages over the makespan — the
+//! quantity the `insight::workflow` critical-path model predicts from
+//! per-stage USL fits.
+
+use super::spec::{schedule, EdgeFlow, FlowPlan, WorkflowSpec};
+use crate::engine::StepEngine;
+use crate::miniapp::{run_sim_opts, PlatformKind, Scenario, SimOptions};
+use crate::util::rng::SplitMix64;
+use std::sync::Arc;
+
+/// Extension-parameter name carrying the stage index into each stage's
+/// [`Scenario`] (perturbs the engine seed stream per stage, and makes the
+/// stage visible to engine factories).
+pub const STAGE_PARAM: &str = "workflow_stage";
+
+/// One executed stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageResult {
+    pub stage: usize,
+    pub name: String,
+    pub platform: PlatformKind,
+    /// Effective parallelism: `base parallelism * scale`, clamped by the
+    /// platform's device cap (see [`effective_parallelism`]).
+    pub parallelism: usize,
+    /// Messages routed into this stage (exact).
+    pub ingested: u64,
+    /// Messages the sim core actually processed (may exceed `ingested` by
+    /// ceil-padding to a partition multiple; routing uses `ingested`).
+    pub simulated: u64,
+    /// Measured stage throughput (msg/s).
+    pub throughput: f64,
+    /// Time to drain this stage's inflow: `ingested / throughput`.
+    pub window_seconds: f64,
+    pub service_mean: f64,
+    pub service_p95: f64,
+    pub service_cv: f64,
+    pub warm_mean: f64,
+    pub warm_cv: f64,
+    pub broker_mean: f64,
+    /// Critical-path schedule: this stage starts when its last
+    /// predecessor finishes.
+    pub start: f64,
+    pub finish: f64,
+}
+
+/// End-to-end conservation record of one workflow run, re-derived from
+/// the routed edge flows (not copied from the plan) so `verify` is a
+/// proof, not a tautology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkflowAccounting {
+    /// Messages ingested by source stages.
+    pub ingested: u64,
+    /// Messages delivered by sink stages.
+    pub delivered: u64,
+    /// Units parked at fan-in boundaries.
+    pub in_flight: u64,
+}
+
+impl WorkflowAccounting {
+    /// Re-check conservation against a spec and its routed flows: every
+    /// edge satisfies `consumed * fan_out == emitted * fan_in + residual`,
+    /// every stage's inflow is the sum of its incoming emissions (sources:
+    /// `source_messages`), and the totals match this record.
+    pub fn verify(&self, spec: &WorkflowSpec, flows: &[EdgeFlow]) -> Result<(), String> {
+        if flows.len() != spec.edges.len() {
+            return Err(format!(
+                "accounting: {} flows for {} edges",
+                flows.len(),
+                spec.edges.len()
+            ));
+        }
+        for (flow, edge) in flows.iter().zip(&spec.edges) {
+            if !flow.conserved(edge) {
+                return Err(format!(
+                    "edge {} -> {}: {} * {} != {} * {} + {}",
+                    edge.from, edge.to, flow.consumed, edge.fan_out, flow.emitted, edge.fan_in,
+                    flow.residual
+                ));
+            }
+        }
+        let mut inflow = vec![0u64; spec.stages.len()];
+        for &s in &spec.sources() {
+            inflow[s] = spec.source_messages as u64;
+        }
+        for flow in flows {
+            inflow[flow.to] += flow.emitted;
+        }
+        for (flow, edge) in flows.iter().zip(&spec.edges) {
+            if flow.consumed != inflow[edge.from] {
+                return Err(format!(
+                    "edge {} -> {}: consumed {} != upstream inflow {}",
+                    edge.from, edge.to, flow.consumed, inflow[edge.from]
+                ));
+            }
+        }
+        let ingested: u64 = spec.sources().iter().map(|&s| inflow[s]).sum();
+        let delivered: u64 = spec.sinks().iter().map(|&s| inflow[s]).sum();
+        let in_flight: u64 = flows.iter().map(|f| f.residual).sum();
+        if (ingested, delivered, in_flight) != (self.ingested, self.delivered, self.in_flight) {
+            return Err(format!(
+                "totals drifted: recorded ({}, {}, {}) vs re-derived ({ingested}, {delivered}, {in_flight})",
+                self.ingested, self.delivered, self.in_flight
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Result of one end-to-end workflow run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowRunResult {
+    pub workflow: String,
+    /// The global scale factor applied to every stage's base parallelism.
+    pub scale: usize,
+    /// Per-stage measurements, indexed by stage.
+    pub stages: Vec<StageResult>,
+    /// Routed counts per spec edge.
+    pub edges: Vec<EdgeFlow>,
+    pub accounting: WorkflowAccounting,
+    /// Stage indices on the critical path, source to sink.
+    pub critical_path: Vec<usize>,
+    /// Latest stage finish time.
+    pub makespan: f64,
+    /// End-to-end throughput: delivered messages / makespan.
+    pub throughput: f64,
+}
+
+impl WorkflowRunResult {
+    /// The critical-path stage with the largest window — where added
+    /// parallelism buys the most end-to-end throughput.
+    pub fn bottleneck(&self) -> usize {
+        self.critical_path
+            .iter()
+            .copied()
+            .max_by(|&a, &b| {
+                self.stages[a]
+                    .window_seconds
+                    .partial_cmp(&self.stages[b].window_seconds)
+                    .unwrap()
+                    .then(b.cmp(&a))
+            })
+            .unwrap_or(0)
+    }
+}
+
+/// Deterministic per-stage seed: independent streams per stage, stable
+/// across scales (the engine factory mixes partitions in separately).
+fn stage_seed(workflow_seed: u64, stage: usize) -> u64 {
+    SplitMix64::new(workflow_seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(stage as u64 + 1))
+        .next_u64()
+}
+
+/// The parallelism a platform actually grants for a nominal request —
+/// the edge device cap is the one built-in clamp.  Stage results, USL
+/// fits, and the critical-path model all use effective parallelism so the
+/// modeled curve matches what the sim provisioned.
+pub fn effective_parallelism(platform: PlatformKind, nominal: usize) -> usize {
+    let nominal = nominal.max(1);
+    match platform {
+        PlatformKind::Edge => nominal.min(crate::serverless::edge::EDGE_MAX_CONCURRENCY),
+        _ => nominal,
+    }
+}
+
+/// The scenario one stage provisions: its platform, its scaled
+/// parallelism, the flow plan's routed inflow and message size.
+pub fn stage_scenario(
+    spec: &WorkflowSpec,
+    plan: &FlowPlan,
+    stage: usize,
+    scale: usize,
+) -> Scenario {
+    let st = &spec.stages[stage];
+    let mut sc = Scenario {
+        platform: st.platform,
+        partitions: (st.parallelism * scale.max(1)).max(1),
+        points_per_message: plan.points[stage].max(1),
+        centroids: st.centroids,
+        memory_mb: st.memory_mb,
+        messages: plan.inflow[stage] as usize,
+        seed: stage_seed(spec.seed, stage),
+        ..Scenario::default()
+    };
+    sc.set_extra(STAGE_PARAM, stage as u64);
+    sc
+}
+
+/// Execute the workflow at a global `scale` factor: run every stage with
+/// routed inflow through the sim core in topological order, compose the
+/// critical-path schedule, and prove conservation.
+pub fn run_workflow<F>(
+    spec: &WorkflowSpec,
+    scale: usize,
+    engine_factory: &F,
+    opts: SimOptions,
+) -> Result<WorkflowRunResult, String>
+where
+    F: Fn(&Scenario) -> Arc<dyn StepEngine>,
+{
+    let plan = spec.flow_plan()?;
+    let n = spec.stages.len();
+    let mut stages: Vec<StageResult> = Vec::with_capacity(n);
+    for (i, st) in spec.stages.iter().enumerate() {
+        stages.push(StageResult {
+            stage: i,
+            name: st.name.clone(),
+            platform: st.platform,
+            parallelism: effective_parallelism(st.platform, st.parallelism * scale.max(1)),
+            ingested: plan.inflow[i],
+            simulated: 0,
+            throughput: 0.0,
+            window_seconds: 0.0,
+            service_mean: 0.0,
+            service_p95: 0.0,
+            service_cv: 0.0,
+            warm_mean: 0.0,
+            warm_cv: 0.0,
+            broker_mean: 0.0,
+            start: 0.0,
+            finish: 0.0,
+        });
+    }
+    for &i in &plan.order {
+        if plan.inflow[i] == 0 {
+            // a fan-in boundary starved this stage (all units in flight):
+            // nothing to simulate, zero window
+            continue;
+        }
+        let sc = stage_scenario(spec, &plan, i, scale);
+        let r = run_sim_opts(&sc, engine_factory(&sc), opts)
+            .map_err(|e| format!("stage {:?}: {e}", spec.stages[i].name))?;
+        let out = &mut stages[i];
+        out.simulated = r.summary.messages as u64;
+        debug_assert!(
+            out.simulated >= out.ingested,
+            "stage {:?}: sim core processed {} of {} routed messages",
+            out.name,
+            out.simulated,
+            out.ingested
+        );
+        out.throughput = r.summary.throughput;
+        out.window_seconds = if r.summary.throughput > 0.0 {
+            out.ingested as f64 / r.summary.throughput
+        } else {
+            0.0
+        };
+        out.service_mean = r.summary.service.mean;
+        out.service_p95 = r.summary.service.p95;
+        out.service_cv = r.summary.service.cv();
+        out.warm_mean = r.summary.service_warm.mean;
+        out.warm_cv = r.summary.service_warm.cv();
+        out.broker_mean = r.summary.broker.mean;
+    }
+    let windows: Vec<f64> = stages.iter().map(|s| s.window_seconds).collect();
+    let (start, finish, critical_path, makespan) = schedule(spec, &plan, &windows);
+    for (i, st) in stages.iter_mut().enumerate() {
+        st.start = start[i];
+        st.finish = finish[i];
+    }
+    let accounting = WorkflowAccounting {
+        ingested: spec.sources().iter().map(|&s| plan.inflow[s]).sum(),
+        delivered: plan.delivered(spec),
+        in_flight: plan.in_flight(),
+    };
+    debug_assert!(
+        accounting.verify(spec, &plan.edges).is_ok(),
+        "workflow {:?}: conservation violated: {:?}",
+        spec.name,
+        accounting.verify(spec, &plan.edges)
+    );
+    let throughput = if makespan > 0.0 {
+        accounting.delivered as f64 / makespan
+    } else {
+        0.0
+    };
+    Ok(WorkflowRunResult {
+        workflow: spec.name.clone(),
+        scale: scale.max(1),
+        stages,
+        edges: plan.edges,
+        accounting,
+        critical_path,
+        makespan,
+        throughput,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CalibratedEngine;
+    use crate::sim::Dist;
+    use crate::workflow::spec::PRESETS;
+
+    fn factory(sc: &Scenario) -> Arc<dyn StepEngine> {
+        // the analytic O(n·c) fallback covers every (points, centroids)
+        // key the preset stages produce
+        let mut e = CalibratedEngine::new(sc.seed ^ sc.partitions as u64);
+        e.insert((256, 16), Dist::Const(0.05));
+        Arc::new(e)
+    }
+
+    #[test]
+    fn every_preset_runs_with_conserved_accounting() {
+        for name in PRESETS {
+            let wf = WorkflowSpec::preset(name).unwrap().with_source_messages(16);
+            let r = run_workflow(&wf, 1, &factory, SimOptions::default()).unwrap();
+            r.accounting.verify(&wf, &r.edges).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(r.makespan > 0.0, "{name}");
+            assert!(r.throughput > 0.0, "{name}");
+            assert!(!r.critical_path.is_empty(), "{name}");
+            for st in r.stages.iter().filter(|s| s.ingested > 0) {
+                assert!(st.throughput > 0.0, "{name}/{}", st.name);
+                assert!(st.simulated >= st.ingested, "{name}/{}", st.name);
+            }
+        }
+    }
+
+    #[test]
+    fn run_is_deterministic() {
+        let wf = WorkflowSpec::ml_inference().with_source_messages(12).with_seed(7);
+        let a = run_workflow(&wf, 2, &factory, SimOptions::default()).unwrap();
+        let b = run_workflow(&wf, 2, &factory, SimOptions::default()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scale_raises_end_to_end_throughput() {
+        let wf = WorkflowSpec::word_count().with_source_messages(16);
+        let t1 = run_workflow(&wf, 1, &factory, SimOptions::default()).unwrap().throughput;
+        let t4 = run_workflow(&wf, 4, &factory, SimOptions::default()).unwrap().throughput;
+        assert!(t4 > t1, "scale 4 {t4} must beat scale 1 {t1}");
+    }
+
+    #[test]
+    fn starved_stages_are_skipped_not_failed() {
+        // one source message cannot satisfy word-count's 16-way shuffle
+        let wf = WorkflowSpec::word_count().with_source_messages(1);
+        let r = run_workflow(&wf, 1, &factory, SimOptions::default()).unwrap();
+        assert_eq!(r.accounting.delivered, 0);
+        assert!(r.accounting.in_flight > 0);
+        assert_eq!(r.stages[2].throughput, 0.0);
+        r.accounting.verify(&wf, &r.edges).unwrap();
+    }
+
+    #[test]
+    fn bottleneck_sits_on_the_critical_path() {
+        let wf = WorkflowSpec::ml_training().with_source_messages(16);
+        let r = run_workflow(&wf, 2, &factory, SimOptions::default()).unwrap();
+        let b = r.bottleneck();
+        assert!(r.critical_path.contains(&b));
+        let w = r.stages[b].window_seconds;
+        for &s in &r.critical_path {
+            assert!(r.stages[s].window_seconds <= w + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Workflow-graph applications: multi-stage streaming DAGs spanning
+//! serverless, HPC, and edge platforms (the EILC pipelines the source
+//! paper motivates but never models).
+//!
+//! - [`spec`] — [`WorkflowSpec`]: stages ([`StageSpec`]) on any registered
+//!   platform, edges ([`EdgeSpec`]) carrying a [`MessageTransform`] and a
+//!   fan-out/fan-in ratio, integer-exact flow resolution
+//!   ([`WorkflowSpec::flow_plan`]), and the four ground-truth preset
+//!   graphs (FINRA, ML training, ML inference, MapReduce word count).
+//! - [`driver`] — [`run_workflow`]: execute each stage through the cohort
+//!   sim core, route delivered messages into downstream brokers, compose
+//!   the critical-path schedule, and prove end-to-end conservation
+//!   ([`WorkflowAccounting`]).
+//!
+//! The modeling layer on top — per-stage USL fits composed into an
+//! end-to-end critical-path prediction, the workflow sweep grid, and the
+//! cross-stage rebalancing [`WorkflowTarget`](crate::insight::workflow::WorkflowTarget)
+//! — lives in [`crate::insight::workflow`].
+
+pub mod driver;
+pub mod spec;
+
+pub use driver::{
+    effective_parallelism, run_workflow, stage_scenario, StageResult, WorkflowAccounting,
+    WorkflowRunResult, STAGE_PARAM,
+};
+pub use spec::{
+    schedule, EdgeFlow, EdgeSpec, FlowPlan, MessageTransform, StageSpec, WorkflowSpec, PRESETS,
+};

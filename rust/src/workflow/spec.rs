@@ -1,0 +1,710 @@
+//! Workflow graphs: a [`WorkflowSpec`] is a DAG of streaming stages, each
+//! stage a pilot on any registered platform, each edge carrying a message
+//! transform plus a fan-out/fan-in ratio.
+//!
+//! The flow arithmetic is **integer-exact** so conservation is provable,
+//! not approximate.  For an edge `from -> to` with ratio `fan_out :
+//! fan_in`, every message the upstream stage delivers expands into
+//! `fan_out` units, and every `fan_in` units coalesce into one downstream
+//! message:
+//!
+//! ```text
+//! units    = consumed * fan_out
+//! emitted  = units / fan_in          (integer division)
+//! residual = units % fan_in          (units buffered at the edge, awaiting fan-in)
+//! =>  consumed * fan_out == emitted * fan_in + residual      (per edge, exactly)
+//! ```
+//!
+//! Summed over a topological order this gives the end-to-end invariant the
+//! driver asserts on every run: ingested messages, multiplied through the
+//! edge ratios, equal delivered messages plus the in-flight units parked
+//! at fan-in boundaries.
+//!
+//! Four ground-truth graphs from the serverless-workflow literature ship
+//! as named presets — [`WorkflowSpec::finra`],
+//! [`WorkflowSpec::ml_training`], [`WorkflowSpec::ml_inference`],
+//! [`WorkflowSpec::word_count`] — mixing serverless, HPC, and edge stages,
+//! reachable from `run --workflow <name>`, `sweep --grid workflow`, and
+//! TOML (`workflows = [...]`).
+
+use crate::miniapp::PlatformKind;
+
+/// How an edge reshapes the payload of the messages it carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MessageTransform {
+    /// Downstream messages keep the upstream point count.
+    Identity,
+    /// Scale the point count by `num / den` (ceiling, floor of 1 point).
+    Scale { num: u32, den: u32 },
+    /// Replace the point count outright (re-encode, re-sample).
+    Resize { points: usize },
+}
+
+impl MessageTransform {
+    /// Points per downstream message given `points` per upstream message.
+    pub fn apply(self, points: usize) -> usize {
+        match self {
+            Self::Identity => points.max(1),
+            Self::Scale { num, den } => {
+                let den = den.max(1) as usize;
+                (points * num as usize).div_ceil(den).max(1)
+            }
+            Self::Resize { points } => points.max(1),
+        }
+    }
+}
+
+/// One stage of the workflow: a streaming pilot on a registered platform.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpec {
+    pub name: String,
+    pub platform: PlatformKind,
+    /// Base parallelism at workflow scale 1; the driver provisions
+    /// `parallelism * scale` partitions (platform caps still apply).
+    pub parallelism: usize,
+    /// Points per message this stage *generates* when it is a source;
+    /// non-source stages derive their message size from incoming edges.
+    pub points_per_message: usize,
+    pub centroids: usize,
+    pub memory_mb: u32,
+}
+
+impl StageSpec {
+    pub fn new(name: impl Into<String>, platform: PlatformKind, parallelism: usize) -> Self {
+        Self {
+            name: name.into(),
+            platform,
+            parallelism: parallelism.max(1),
+            points_per_message: 1_024,
+            centroids: 128,
+            memory_mb: 1_024,
+        }
+    }
+
+    pub fn with_workload(mut self, points_per_message: usize, centroids: usize) -> Self {
+        self.points_per_message = points_per_message.max(1);
+        self.centroids = centroids.max(1);
+        self
+    }
+
+    pub fn with_memory(mut self, memory_mb: u32) -> Self {
+        self.memory_mb = memory_mb;
+        self
+    }
+}
+
+/// One directed edge: messages delivered by `from` are routed into the
+/// broker of `to`, expanded `fan_out`-fold and coalesced `fan_in`-fold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeSpec {
+    pub from: usize,
+    pub to: usize,
+    /// Units produced per consumed upstream message (>= 1).
+    pub fan_out: u64,
+    /// Units coalesced per emitted downstream message (>= 1).
+    pub fan_in: u64,
+    pub transform: MessageTransform,
+}
+
+impl EdgeSpec {
+    pub fn new(from: usize, to: usize) -> Self {
+        Self {
+            from,
+            to,
+            fan_out: 1,
+            fan_in: 1,
+            transform: MessageTransform::Identity,
+        }
+    }
+
+    pub fn with_ratio(mut self, fan_out: u64, fan_in: u64) -> Self {
+        self.fan_out = fan_out.max(1);
+        self.fan_in = fan_in.max(1);
+        self
+    }
+
+    pub fn with_transform(mut self, transform: MessageTransform) -> Self {
+        self.transform = transform;
+        self
+    }
+}
+
+/// The exact routed flow of one edge for a given source load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeFlow {
+    pub from: usize,
+    pub to: usize,
+    /// Upstream messages consumed by this edge.
+    pub consumed: u64,
+    /// Downstream messages emitted into `to`'s broker.
+    pub emitted: u64,
+    /// Units left buffered at the fan-in boundary (in-flight).
+    pub residual: u64,
+}
+
+impl EdgeFlow {
+    /// The per-edge conservation identity, exactly.
+    pub fn conserved(&self, edge: &EdgeSpec) -> bool {
+        self.consumed * edge.fan_out == self.emitted * edge.fan_in + self.residual
+    }
+}
+
+/// The resolved flow of a workflow at a given source load: per-stage
+/// inflow and message size, per-edge routed counts, in topological order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowPlan {
+    /// Stage indices in deterministic topological order (Kahn, smallest
+    /// index first among ready stages).
+    pub order: Vec<usize>,
+    /// Messages ingested by each stage (sources: `source_messages`).
+    pub inflow: Vec<u64>,
+    /// Points per message entering each stage.
+    pub points: Vec<usize>,
+    /// Routed counts, one per spec edge (spec edge order).
+    pub edges: Vec<EdgeFlow>,
+}
+
+impl FlowPlan {
+    /// Total messages delivered by sink stages.
+    pub fn delivered(&self, spec: &WorkflowSpec) -> u64 {
+        spec.sinks().iter().map(|&s| self.inflow[s]).sum()
+    }
+
+    /// Total units parked at fan-in boundaries.
+    pub fn in_flight(&self) -> u64 {
+        self.edges.iter().map(|e| e.residual).sum()
+    }
+}
+
+/// A DAG of streaming stages with ratio-carrying edges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowSpec {
+    pub name: String,
+    pub stages: Vec<StageSpec>,
+    pub edges: Vec<EdgeSpec>,
+    /// Messages ingested by *each* source stage.
+    pub source_messages: usize,
+    pub seed: u64,
+}
+
+/// The preset workflow names, in preset-id order (`workflow` axis levels).
+pub const PRESETS: [&str; 4] = ["finra", "ml-training", "ml-inference", "word-count"];
+
+impl WorkflowSpec {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            stages: Vec::new(),
+            edges: Vec::new(),
+            source_messages: 64,
+            seed: 42,
+        }
+    }
+
+    pub fn with_source_messages(mut self, messages: usize) -> Self {
+        self.source_messages = messages.max(1);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Append a stage, returning its index.
+    pub fn stage(&mut self, stage: StageSpec) -> usize {
+        self.stages.push(stage);
+        self.stages.len() - 1
+    }
+
+    pub fn edge(&mut self, edge: EdgeSpec) {
+        self.edges.push(edge);
+    }
+
+    /// Stage indices with no incoming edges.
+    pub fn sources(&self) -> Vec<usize> {
+        (0..self.stages.len())
+            .filter(|&s| self.edges.iter().all(|e| e.to != s))
+            .collect()
+    }
+
+    /// Stage indices with no outgoing edges.
+    pub fn sinks(&self) -> Vec<usize> {
+        (0..self.stages.len())
+            .filter(|&s| self.edges.iter().all(|e| e.from != s))
+            .collect()
+    }
+
+    /// Structural validation: index bounds, positive ratios, unique stage
+    /// names, acyclicity, at least one source.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err(format!("workflow {:?}: no stages", self.name));
+        }
+        if self.source_messages == 0 {
+            return Err(format!("workflow {:?}: source_messages must be >= 1", self.name));
+        }
+        for (i, st) in self.stages.iter().enumerate() {
+            if st.name.is_empty() {
+                return Err(format!("workflow {:?}: stage {i} has an empty name", self.name));
+            }
+            if st.parallelism == 0 {
+                return Err(format!("stage {:?}: parallelism must be >= 1", st.name));
+            }
+            if self.stages[..i].iter().any(|o| o.name == st.name) {
+                return Err(format!("workflow {:?}: duplicate stage {:?}", self.name, st.name));
+            }
+        }
+        for e in &self.edges {
+            if e.from >= self.stages.len() || e.to >= self.stages.len() {
+                return Err(format!(
+                    "workflow {:?}: edge {} -> {} out of bounds",
+                    self.name, e.from, e.to
+                ));
+            }
+            if e.from == e.to {
+                return Err(format!("workflow {:?}: self-edge on stage {}", self.name, e.from));
+            }
+            if e.fan_out == 0 || e.fan_in == 0 {
+                return Err(format!(
+                    "workflow {:?}: edge {} -> {} has a zero ratio",
+                    self.name, e.from, e.to
+                ));
+            }
+        }
+        if self.sources().is_empty() {
+            return Err(format!("workflow {:?}: no source stage", self.name));
+        }
+        self.topo_order().map(|_| ())
+    }
+
+    /// Deterministic topological order (Kahn's algorithm; among ready
+    /// stages the smallest index goes first), or the cycle error.
+    pub fn topo_order(&self) -> Result<Vec<usize>, String> {
+        let n = self.stages.len();
+        let mut indegree = vec![0usize; n];
+        for e in &self.edges {
+            indegree[e.to] += 1;
+        }
+        let mut order = Vec::with_capacity(n);
+        let mut done = vec![false; n];
+        while order.len() < n {
+            let Some(next) = (0..n).find(|&s| !done[s] && indegree[s] == 0) else {
+                return Err(format!("workflow {:?}: cycle among stages", self.name));
+            };
+            done[next] = true;
+            order.push(next);
+            for e in self.edges.iter().filter(|e| e.from == next) {
+                indegree[e.to] -= 1;
+            }
+        }
+        Ok(order)
+    }
+
+    /// Resolve the exact routed flow: walk the topological order, feed
+    /// each source `source_messages`, and route every edge with the
+    /// integer-exact fan arithmetic.  Message sizes propagate along edges
+    /// (a stage fed by several edges processes the largest incoming
+    /// payload).
+    pub fn flow_plan(&self) -> Result<FlowPlan, String> {
+        self.validate()?;
+        let order = self.topo_order()?;
+        let n = self.stages.len();
+        let mut inflow = vec![0u64; n];
+        let mut points = vec![0usize; n];
+        for &s in &self.sources() {
+            inflow[s] = self.source_messages as u64;
+            points[s] = self.stages[s].points_per_message.max(1);
+        }
+        let mut edges = vec![
+            EdgeFlow {
+                from: 0,
+                to: 0,
+                consumed: 0,
+                emitted: 0,
+                residual: 0
+            };
+            self.edges.len()
+        ];
+        for &s in &order {
+            for (i, e) in self.edges.iter().enumerate().filter(|(_, e)| e.from == s) {
+                let consumed = inflow[s];
+                let units = consumed * e.fan_out;
+                let emitted = units / e.fan_in;
+                let residual = units % e.fan_in;
+                debug_assert_eq!(
+                    consumed * e.fan_out,
+                    emitted * e.fan_in + residual,
+                    "edge {} -> {}: fan arithmetic must conserve units",
+                    e.from,
+                    e.to
+                );
+                edges[i] = EdgeFlow {
+                    from: e.from,
+                    to: e.to,
+                    consumed,
+                    emitted,
+                    residual,
+                };
+                inflow[e.to] += emitted;
+                let incoming = e.transform.apply(points[s]);
+                points[e.to] = points[e.to].max(incoming);
+            }
+        }
+        Ok(FlowPlan {
+            order,
+            inflow,
+            points,
+            edges,
+        })
+    }
+
+    /// Resolve a preset by name (the `--workflow` / TOML vocabulary).
+    pub fn preset(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().replace('_', "-").as_str() {
+            "finra" => Some(Self::finra()),
+            "ml-training" => Some(Self::ml_training()),
+            "ml-inference" => Some(Self::ml_inference()),
+            "word-count" => Some(Self::word_count()),
+            _ => None,
+        }
+    }
+
+    /// Resolve a preset by its `workflow` axis level (sweep grids bind
+    /// integer levels; the id is the index into [`PRESETS`]).
+    pub fn preset_by_id(id: u64) -> Option<Self> {
+        PRESETS.get(id as usize).and_then(|n| Self::preset(n))
+    }
+
+    /// The `workflow` axis level of a preset name — inverse of
+    /// [`preset_by_id`](Self::preset_by_id).
+    pub fn preset_id(name: &str) -> Option<u64> {
+        let canon = name.to_ascii_lowercase().replace('_', "-");
+        PRESETS.iter().position(|&p| p == canon).map(|i| i as u64)
+    }
+
+    /// FINRA data validation (AWS case study): two ingest feeds — trade
+    /// records from the cloud, market data from an edge gateway — merged
+    /// and validated, each record fanned out against four audit-rule sets,
+    /// results coalesced into one aggregate stream on HPC.
+    pub fn finra() -> Self {
+        let mut wf = Self::new("finra");
+        let trades = wf.stage(
+            StageSpec::new("fetch-trades", PlatformKind::Lambda, 2).with_workload(2_048, 64),
+        );
+        let market = wf.stage(
+            StageSpec::new("fetch-market", PlatformKind::Edge, 1).with_workload(1_024, 32),
+        );
+        let validate = wf.stage(
+            StageSpec::new("validate", PlatformKind::Lambda, 2)
+                .with_workload(2_048, 128)
+                .with_memory(1_792),
+        );
+        let audit = wf.stage(
+            StageSpec::new("audit", PlatformKind::Lambda, 4)
+                .with_workload(512, 256)
+                .with_memory(3_008),
+        );
+        let aggregate = wf.stage(
+            StageSpec::new("aggregate", PlatformKind::DaskWrangler, 2)
+                .with_workload(512, 64)
+                .with_memory(3_008),
+        );
+        wf.edge(EdgeSpec::new(trades, validate));
+        wf.edge(EdgeSpec::new(market, validate).with_transform(MessageTransform::Resize {
+            points: 2_048,
+        }));
+        // every validated record is checked against four audit-rule sets
+        wf.edge(
+            EdgeSpec::new(validate, audit)
+                .with_ratio(4, 1)
+                .with_transform(MessageTransform::Scale { num: 1, den: 4 }),
+        );
+        wf.edge(EdgeSpec::new(audit, aggregate).with_ratio(1, 8));
+        wf
+    }
+
+    /// ML training (Orion / RMMap): ingest → preprocess → mini-batch
+    /// training on HPC (4 preprocessed records per batch) → validation.
+    pub fn ml_training() -> Self {
+        let mut wf = Self::new("ml-training");
+        let ingest = wf.stage(
+            StageSpec::new("ingest", PlatformKind::Lambda, 2)
+                .with_workload(4_096, 128)
+                .with_memory(1_792),
+        );
+        let preprocess = wf.stage(
+            StageSpec::new("preprocess", PlatformKind::Lambda, 2)
+                .with_workload(2_048, 256)
+                .with_memory(3_008),
+        );
+        let train = wf.stage(
+            StageSpec::new("train", PlatformKind::DaskWrangler, 4).with_workload(8_000, 1_024),
+        );
+        let validate = wf.stage(
+            StageSpec::new("validate", PlatformKind::Lambda, 1).with_workload(1_000, 128),
+        );
+        wf.edge(
+            EdgeSpec::new(ingest, preprocess)
+                .with_transform(MessageTransform::Scale { num: 1, den: 2 }),
+        );
+        wf.edge(
+            EdgeSpec::new(preprocess, train)
+                .with_ratio(1, 4)
+                .with_transform(MessageTransform::Resize { points: 8_000 }),
+        );
+        wf.edge(
+            EdgeSpec::new(train, validate)
+                .with_ratio(1, 2)
+                .with_transform(MessageTransform::Scale { num: 1, den: 8 }),
+        );
+        wf
+    }
+
+    /// ML inference (RMMap): the diamond — an API gateway fans requests
+    /// through edge preprocessing into two parallel model branches
+    /// (serverless CNN, HPC ensemble) whose scores re-join at a ranker.
+    pub fn ml_inference() -> Self {
+        let mut wf = Self::new("ml-inference");
+        let gateway = wf.stage(
+            StageSpec::new("gateway", PlatformKind::Lambda, 2).with_workload(1_024, 32),
+        );
+        let preprocess = wf.stage(
+            StageSpec::new("preprocess", PlatformKind::Edge, 1).with_workload(2_048, 128),
+        );
+        let infer_a = wf.stage(
+            StageSpec::new("infer-serverless", PlatformKind::Lambda, 2)
+                .with_workload(2_048, 1_024)
+                .with_memory(3_008),
+        );
+        let infer_b = wf.stage(
+            StageSpec::new("infer-hpc", PlatformKind::DaskWrangler, 2).with_workload(1_024, 512),
+        );
+        let rank =
+            wf.stage(StageSpec::new("rank", PlatformKind::Lambda, 1).with_workload(1_024, 64));
+        wf.edge(EdgeSpec::new(gateway, preprocess).with_transform(MessageTransform::Resize {
+            points: 2_048,
+        }));
+        wf.edge(EdgeSpec::new(preprocess, infer_a));
+        wf.edge(
+            EdgeSpec::new(preprocess, infer_b)
+                .with_transform(MessageTransform::Scale { num: 1, den: 2 }),
+        );
+        wf.edge(EdgeSpec::new(infer_a, rank).with_ratio(1, 2));
+        wf.edge(EdgeSpec::new(infer_b, rank).with_ratio(1, 2));
+        wf
+    }
+
+    /// MapReduce word count (FunctionBench): each document splits into 8
+    /// chunks mapped in parallel, 16 map outputs shuffle into one reduce
+    /// record on HPC, reduce outputs coalesce at a collector.
+    pub fn word_count() -> Self {
+        let mut wf = Self::new("word-count");
+        let split = wf.stage(
+            StageSpec::new("split", PlatformKind::Lambda, 2)
+                .with_workload(8_000, 64)
+                .with_memory(1_792),
+        );
+        let map = wf.stage(
+            StageSpec::new("map", PlatformKind::Lambda, 4).with_workload(1_000, 128),
+        );
+        let reduce = wf.stage(
+            StageSpec::new("reduce", PlatformKind::DaskWrangler, 2).with_workload(4_000, 256),
+        );
+        let collect = wf.stage(
+            StageSpec::new("collect", PlatformKind::Lambda, 1).with_workload(1_000, 32),
+        );
+        wf.edge(
+            EdgeSpec::new(split, map)
+                .with_ratio(8, 1)
+                .with_transform(MessageTransform::Scale { num: 1, den: 8 }),
+        );
+        wf.edge(
+            EdgeSpec::new(map, reduce)
+                .with_ratio(1, 16)
+                .with_transform(MessageTransform::Resize { points: 4_000 }),
+        );
+        wf.edge(
+            EdgeSpec::new(reduce, collect)
+                .with_ratio(1, 4)
+                .with_transform(MessageTransform::Scale { num: 1, den: 4 }),
+        );
+        wf
+    }
+}
+
+/// Critical-path schedule over per-stage windows: each stage starts when
+/// its last predecessor finishes.  Returns `(start, finish)` per stage,
+/// the critical path (sink with the latest finish, predecessors
+/// backtracked by latest finish, ties to the smallest index), and the
+/// makespan.  Shared by the driver (measured windows) and the model
+/// (predicted windows) so the two sides are comparable by construction.
+pub fn schedule(
+    spec: &WorkflowSpec,
+    plan: &FlowPlan,
+    windows: &[f64],
+) -> (Vec<f64>, Vec<f64>, Vec<usize>, f64) {
+    let n = spec.stages.len();
+    let mut start = vec![0.0f64; n];
+    let mut finish = vec![0.0f64; n];
+    for &s in &plan.order {
+        let ready = spec
+            .edges
+            .iter()
+            .filter(|e| e.to == s)
+            .map(|e| finish[e.from])
+            .fold(0.0f64, f64::max);
+        start[s] = ready;
+        finish[s] = ready + windows[s];
+    }
+    let last = (0..n)
+        .filter(|&s| plan.inflow[s] > 0)
+        .max_by(|&a, &b| {
+            finish[a]
+                .partial_cmp(&finish[b])
+                .unwrap()
+                .then(b.cmp(&a)) // tie -> smallest index
+        })
+        .unwrap_or(0);
+    let mut path = vec![last];
+    let mut cur = last;
+    loop {
+        let pred = spec
+            .edges
+            .iter()
+            .filter(|e| e.to == cur && plan.inflow[e.from] > 0)
+            .map(|e| e.from)
+            .max_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap().then(b.cmp(&a)));
+        match pred {
+            Some(p) => {
+                path.push(p);
+                cur = p;
+            }
+            None => break,
+        }
+    }
+    path.reverse();
+    let makespan = finish[last];
+    (start, finish, path, makespan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_and_are_dags() {
+        for name in PRESETS {
+            let wf = WorkflowSpec::preset(name).unwrap();
+            wf.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(wf.name, name);
+            assert!(!wf.sources().is_empty(), "{name}");
+            assert!(!wf.sinks().is_empty(), "{name}");
+            // id round-trip
+            let id = WorkflowSpec::preset_id(name).unwrap();
+            assert_eq!(WorkflowSpec::preset_by_id(id).unwrap().name, wf.name);
+        }
+        assert!(WorkflowSpec::preset("unknown").is_none());
+    }
+
+    #[test]
+    fn every_preset_edge_conserves_units() {
+        for name in PRESETS {
+            // include loads that do NOT divide the fan ratios evenly
+            for messages in [1usize, 7, 16, 33] {
+                let wf = WorkflowSpec::preset(name).unwrap().with_source_messages(messages);
+                let plan = wf.flow_plan().unwrap();
+                for (flow, edge) in plan.edges.iter().zip(&wf.edges) {
+                    assert!(
+                        flow.conserved(edge),
+                        "{name} m={messages}: edge {} -> {}",
+                        edge.from,
+                        edge.to
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_is_rejected() {
+        let mut wf = WorkflowSpec::new("loop");
+        let a = wf.stage(StageSpec::new("a", PlatformKind::Lambda, 1));
+        let b = wf.stage(StageSpec::new("b", PlatformKind::Lambda, 1));
+        wf.edge(EdgeSpec::new(a, b));
+        wf.edge(EdgeSpec::new(b, a));
+        assert!(wf.validate().is_err());
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(WorkflowSpec::new("empty").validate().is_err());
+        let mut dup = WorkflowSpec::new("dup");
+        dup.stage(StageSpec::new("x", PlatformKind::Lambda, 1));
+        dup.stage(StageSpec::new("x", PlatformKind::Lambda, 1));
+        assert!(dup.validate().is_err());
+        let mut oob = WorkflowSpec::new("oob");
+        oob.stage(StageSpec::new("a", PlatformKind::Lambda, 1));
+        oob.edge(EdgeSpec::new(0, 5));
+        assert!(oob.validate().is_err());
+    }
+
+    #[test]
+    fn transforms_shape_points() {
+        assert_eq!(MessageTransform::Identity.apply(100), 100);
+        assert_eq!(MessageTransform::Scale { num: 1, den: 4 }.apply(100), 25);
+        assert_eq!(MessageTransform::Scale { num: 1, den: 3 }.apply(100), 34); // ceil
+        assert_eq!(MessageTransform::Scale { num: 1, den: 1000 }.apply(10), 1); // floor of 1
+        assert_eq!(MessageTransform::Resize { points: 512 }.apply(9), 512);
+    }
+
+    #[test]
+    fn finra_flow_is_exact() {
+        let wf = WorkflowSpec::finra().with_source_messages(16);
+        let plan = wf.flow_plan().unwrap();
+        // two sources feed validate: 16 + 16
+        assert_eq!(plan.inflow[2], 32);
+        // audit: 32 * 4 = 128; aggregate: 128 / 8 = 16
+        assert_eq!(plan.inflow[3], 128);
+        assert_eq!(plan.inflow[4], 16);
+        assert_eq!(plan.delivered(&wf), 16);
+        assert_eq!(plan.in_flight(), 0);
+        // market feed is re-encoded up to the trade record size
+        assert_eq!(plan.points[2], 2_048);
+        // audit payloads shrink 4x
+        assert_eq!(plan.points[3], 512);
+    }
+
+    #[test]
+    fn word_count_residuals_stay_in_flight() {
+        let wf = WorkflowSpec::word_count().with_source_messages(7);
+        let plan = wf.flow_plan().unwrap();
+        // split 7 -> 56 map chunks -> 56/16 = 3 reduce records, 8 units in flight
+        assert_eq!(plan.inflow[1], 56);
+        assert_eq!(plan.inflow[2], 3);
+        assert_eq!(plan.edges[1].residual, 8);
+        // reduce 3 -> 3/4 = 0 collected, 3 units in flight
+        assert_eq!(plan.inflow[3], 0);
+        assert_eq!(plan.in_flight(), 8 + 3);
+    }
+
+    #[test]
+    fn schedule_respects_dependencies() {
+        let wf = WorkflowSpec::ml_inference().with_source_messages(8);
+        let plan = wf.flow_plan().unwrap();
+        let windows: Vec<f64> = (0..wf.stages.len()).map(|i| 1.0 + i as f64).collect();
+        let (start, finish, path, makespan) = schedule(&wf, &plan, &windows);
+        for e in &wf.edges {
+            assert!(start[e.to] >= finish[e.from] - 1e-12, "{} -> {}", e.from, e.to);
+        }
+        // the critical path ends at the latest-finishing stage
+        let last = *path.last().unwrap();
+        assert!(finish.iter().all(|&f| f <= finish[last] + 1e-12));
+        assert!((makespan - finish[last]).abs() < 1e-12);
+        // the path is connected source -> sink
+        assert!(wf.sources().contains(&path[0]));
+        for w in path.windows(2) {
+            assert!(wf.edges.iter().any(|e| e.from == w[0] && e.to == w[1]));
+        }
+    }
+}

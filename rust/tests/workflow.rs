@@ -1,0 +1,209 @@
+//! Workflow-graph acceptance tests (ISSUE 8):
+//!
+//! 1. Every preset DAG runs end-to-end with provably conserved accounting
+//!    at every scale and message count, including residual-heavy odd loads.
+//! 2. The workflow sweep is deterministic: `--jobs N` (and every lane
+//!    count) produces byte-identical end-to-end AND per-stage CSV.
+//! 3. Per-stage USL fits compose into a critical-path prediction within
+//!    10% of the simulated end-to-end throughput on the workflow grid.
+//! 4. `WorkflowTarget` rebalancing beats the best static allocation under
+//!    a bottleneck-shifting load, deterministically under a fixed seed.
+
+use pilot_streaming::insight::figures::{default_calibration, engine_factory};
+use pilot_streaming::insight::{
+    fit_stages, run_workflow_sweep_jobs, stage_csv, to_csv, CriticalPathModel, ExperimentSpec,
+    LoadShift, RebalancePolicy, WorkflowTarget, AXIS_WORKFLOW,
+};
+use pilot_streaming::miniapp::SimOptions;
+use pilot_streaming::workflow::{run_workflow, WorkflowSpec, PRESETS};
+
+fn opts(lanes: usize) -> SimOptions {
+    SimOptions {
+        lanes,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_preset_conserves_accounting_at_every_scale() {
+    let factory = engine_factory(default_calibration());
+    for name in PRESETS {
+        for (scale, messages) in [(1usize, 7usize), (2, 13), (4, 16)] {
+            let wf = WorkflowSpec::preset(name)
+                .unwrap()
+                .with_source_messages(messages)
+                .with_seed(42);
+            let r = run_workflow(&wf, scale, &factory, opts(1))
+                .unwrap_or_else(|e| panic!("{name} x{scale}: {e}"));
+            r.accounting
+                .verify(&wf, &r.edges)
+                .unwrap_or_else(|e| panic!("{name} x{scale}: {e}"));
+            assert!(r.throughput > 0.0, "{name} x{scale}: no end-to-end flow");
+            assert!(
+                !r.critical_path.is_empty(),
+                "{name} x{scale}: empty critical path"
+            );
+            // per-edge identity, spelled out: consumed*out == emitted*in + residual
+            for (flow, edge) in r.edges.iter().zip(&wf.edges) {
+                assert_eq!(
+                    flow.consumed * edge.fan_out,
+                    flow.emitted * edge.fan_in + flow.residual,
+                    "{name} x{scale}: edge {}->{} leaks units",
+                    edge.from,
+                    edge.to
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn workflow_sweep_is_byte_identical_across_jobs_and_lanes() {
+    let spec = ExperimentSpec::workflow_grid(8, 42);
+    let (base_rows, base_stages) =
+        run_workflow_sweep_jobs(&spec, engine_factory(default_calibration()), 1, opts(1), |_| {});
+    assert_eq!(base_rows.len(), spec.size(), "every configuration must land");
+    let base_csv = to_csv(&base_rows);
+    let base_stage_csv = stage_csv(&base_stages);
+    for (jobs, lanes) in [(2usize, 1usize), (4, 1), (2, 2), (1, 4)] {
+        let (rows, stages) = run_workflow_sweep_jobs(
+            &spec,
+            engine_factory(default_calibration()),
+            jobs,
+            opts(lanes),
+            |_| {},
+        );
+        assert_eq!(
+            to_csv(&rows),
+            base_csv,
+            "end-to-end CSV must be byte-identical (jobs={jobs} lanes={lanes})"
+        );
+        assert_eq!(
+            stage_csv(&stages),
+            base_stage_csv,
+            "stage CSV must be byte-identical (jobs={jobs} lanes={lanes})"
+        );
+    }
+}
+
+#[test]
+fn critical_path_model_predicts_e2e_throughput_within_10pct() {
+    let spec = ExperimentSpec::workflow_grid(16, 42);
+    let (rows, stage_rows) =
+        run_workflow_sweep_jobs(&spec, engine_factory(default_calibration()), 4, opts(1), |_| {});
+    let fits = fit_stages(&stage_rows);
+    let axis = spec.axis(AXIS_WORKFLOW).unwrap();
+    for level in &axis.levels {
+        let id = level.as_int().unwrap();
+        let wf = WorkflowSpec::preset_by_id(id)
+            .unwrap()
+            .with_source_messages(spec.messages)
+            .with_seed(spec.seed);
+        let name = wf.name.clone();
+        let model = CriticalPathModel::new(wf, &fits).unwrap();
+        for row in rows.iter().filter(|r| {
+            r.key
+                .pairs()
+                .iter()
+                .any(|(n, v)| n.as_str() == AXIS_WORKFLOW && v.as_int() == Some(id))
+        }) {
+            let pred = model.predict(row.scale).unwrap();
+            let err = (pred.throughput - row.throughput).abs() / row.throughput;
+            assert!(
+                err <= 0.10,
+                "{name} x{}: model {:.3} vs sim {:.3} ({:.1}% > 10%)",
+                row.scale,
+                pred.throughput,
+                row.throughput,
+                err * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn fitted_workflow_builds_a_rebalancing_target() {
+    // End-to-end seam check: sweep -> fits -> WorkflowTarget, and the
+    // water-filled allocation covers every active stage.
+    let spec = ExperimentSpec::workflow_grid(16, 42);
+    let (_, stage_rows) =
+        run_workflow_sweep_jobs(&spec, engine_factory(default_calibration()), 4, opts(1), |_| {});
+    let fits = fit_stages(&stage_rows);
+    let wf = WorkflowSpec::word_count()
+        .with_source_messages(16)
+        .with_seed(42);
+    let plan = wf.flow_plan().unwrap();
+    let target =
+        WorkflowTarget::for_workflow(&wf, &fits, 12, RebalancePolicy::Adaptive).unwrap();
+    use pilot_streaming::insight::ScalingTarget;
+    assert_eq!(target.parallelism(), 12, "budget fully allocated");
+    for (s, &n) in target.alloc().iter().enumerate() {
+        if plan.inflow[s] > 0 {
+            assert!(n >= 1, "active stage {s} must keep a worker");
+        }
+    }
+    assert!(target.capacity() > 0.0);
+}
+
+#[test]
+fn adaptive_rebalancing_beats_best_static_split_deterministically() {
+    // Bottleneck-shifting load over the fitted word-count pipeline: the
+    // adaptive water-fill must beat EVERY static split by a clear margin,
+    // and do so identically on every run under the fixed seed.
+    let spec = ExperimentSpec::workflow_grid(16, 42);
+    let (_, stage_rows) =
+        run_workflow_sweep_jobs(&spec, engine_factory(default_calibration()), 4, opts(1), |_| {});
+    let fits = fit_stages(&stage_rows);
+    let wf = WorkflowSpec::word_count()
+        .with_source_messages(16)
+        .with_seed(42);
+    let n_stages = wf.stages.len();
+    let budget = 2 * n_stages + 4;
+    // phase A hammers split (stage 0) hard enough to out-load map; phase
+    // B hammers map (stage 1) — the bottleneck provably flips.
+    let mut shift_a = vec![1.0; n_stages];
+    let mut shift_b = vec![1.0; n_stages];
+    shift_a[0] = 16.0;
+    shift_b[1] = 4.0;
+    let shift = LoadShift {
+        ticks_per_phase: 10,
+        phases: vec![shift_a, shift_b],
+    };
+    use pilot_streaming::insight::{ScaleDecision, ScalingTarget};
+    let run = |policy: RebalancePolicy, adapt: bool| -> (f64, usize) {
+        let mut t = WorkflowTarget::for_workflow(&wf, &fits, budget, policy)
+            .unwrap()
+            .with_shift(shift.clone());
+        let mut served = 0.0;
+        for _ in 0..40 {
+            if adapt {
+                t.actuate(&ScaleDecision::Hold {
+                    parallelism: budget,
+                })
+                .unwrap();
+            }
+            served += t.serve(1e9, 1.0).unwrap();
+        }
+        (served, t.rebalances().len())
+    };
+    let (adaptive, events) = run(RebalancePolicy::Adaptive, true);
+    assert!(events >= 2, "the bottleneck shift must trigger rebalances");
+    // exhaustive static baseline: every weight split of the budget across
+    // the two phase-loaded stages (remaining stages keep unit weight)
+    let mut best_static = 0.0f64;
+    for a in 1..budget {
+        let mut weights = vec![1.0; n_stages];
+        weights[0] = a as f64;
+        weights[1] = (budget - a) as f64;
+        let (served, _) = run(RebalancePolicy::Static(weights), false);
+        best_static = best_static.max(served);
+    }
+    assert!(
+        adaptive > best_static,
+        "adaptive ({adaptive:.1}) must beat the best static split ({best_static:.1})"
+    );
+    // fixed seed + fixed fits => bit-identical trajectories
+    let (again, events_again) = run(RebalancePolicy::Adaptive, true);
+    assert_eq!(adaptive.to_bits(), again.to_bits(), "must be deterministic");
+    assert_eq!(events, events_again);
+}
