@@ -1,0 +1,206 @@
+//! Fault-recovery benchmark: the live closed loop under every preset
+//! fault shape, steered by a deliberately stale fit (λ inflated 3x) with
+//! and without online recalibration.  For each fault the bench records
+//! goodput under fault, time-to-detect / time-to-restore-goodput, and the
+//! backlog area, and hard-asserts the recalibrated loop beats the stale
+//! static fit on both goodput and restoration — the chaos axis's
+//! "recalibrated-beats-static under every fault shape" claim as a
+//! regression gate.
+//!
+//! Emits `BENCH_faults.json` (override the path with
+//! `PS_BENCH_FAULTS_OUT`, or the directory for all benches with
+//! `PS_BENCH_DIR`; shrink the trace with `PS_BENCH_FAULTS_INTERVALS`).
+//! Run: `cargo bench --bench faults`.
+
+#[path = "common.rs"]
+#[allow(dead_code)]
+mod common;
+
+use pilot_streaming::engine::{CalibratedEngine, StepEngine};
+use pilot_streaming::insight::{
+    AutoscaleConfig, AutoscaleReport, Autoscaler, ControlLoop, FaultyTarget, OnlineUslFitter,
+    PilotTarget, Predictor, RecalibrateConfig,
+};
+use pilot_streaming::miniapp::{LivePilot, PlatformKind, Scenario};
+use pilot_streaming::sim::{
+    Dist, FaultEvent, FaultPlan, RecoveryMetrics, RecoverySample, FAULT_PRESET_IDS,
+};
+use pilot_streaming::usl::UslParams;
+use pilot_streaming::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn engine() -> Arc<dyn StepEngine> {
+    let mut e = CalibratedEngine::new(11);
+    e.insert((64, 8), Dist::Const(0.05));
+    Arc::new(e)
+}
+
+fn run_faulted(
+    scenario: &Scenario,
+    predictor: Predictor,
+    trace: &[f64],
+    fitter: Option<OnlineUslFitter>,
+    plan: FaultPlan,
+) -> (AutoscaleReport, Vec<(FaultEvent, RecoveryMetrics)>, Vec<RecoverySample>) {
+    let scaler = Autoscaler::new(
+        predictor,
+        AutoscaleConfig {
+            max_parallelism: 32,
+            ..Default::default()
+        },
+        2,
+    );
+    let mut control = ControlLoop::new(scaler, 1.0);
+    if let Some(f) = fitter {
+        control = control.with_recalibration(f);
+    }
+    let inner = PilotTarget::new(LivePilot::provision(scenario, engine()).expect("provision"));
+    let mut target = FaultyTarget::new(inner, plan, trace.len(), 1.0);
+    let report = control.run(&mut target, trace).expect("live loop");
+    let recovery = target.recovery_report();
+    let series = target.series().to_vec();
+    target.into_inner().shutdown();
+    (report, recovery, series)
+}
+
+/// JSON has no Infinity: map "never" to -1.0 in emitted reports.
+fn fin(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        -1.0
+    }
+}
+
+fn main() {
+    let intervals: usize = std::env::var("PS_BENCH_FAULTS_INTERVALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
+    // the platform truly serves ~20 msg/s per lane (0.05 s per message);
+    // the stale fit believes 3x that, so the static loop under-provisions
+    // through every fault while the recalibrated loop re-learns λ
+    let stale = Predictor {
+        params: UslParams::new(0.02, 0.0001, 60.0),
+    };
+    let trace = vec![120.0; intervals];
+    let scenario = Scenario {
+        platform: PlatformKind::Lambda,
+        partitions: 2,
+        points_per_message: 64,
+        centroids: 8,
+        ..Default::default()
+    };
+    eprintln!(
+        "[bench] faults: {} control intervals at 120 msg/s, stale lambda 60 (true per-lane rate 20)",
+        intervals
+    );
+
+    let t0 = Instant::now();
+    let mut names: Vec<String> = Vec::new();
+    let mut per_fault: Vec<(f64, f64, f64, f64, f64)> = Vec::new(); // static gp, recal gp, detect, restore, backlog area
+    let mut outage_trajectory: Vec<Json> = Vec::new();
+    let mut recal_goodput_min = f64::INFINITY;
+    let mut recal_gain_pts_min = f64::INFINITY;
+    for id in FAULT_PRESET_IDS {
+        let plan = FaultPlan::preset_by_id(id);
+        let name = plan.name.clone();
+        let (static_report, static_recovery, _) =
+            run_faulted(&scenario, stale.clone(), &trace, None, plan.clone());
+        let (recal_report, recal_recovery, recal_series) = run_faulted(
+            &scenario,
+            stale.clone(),
+            &trace,
+            Some(OnlineUslFitter::new(RecalibrateConfig::default())),
+            plan,
+        );
+        let (_, sm) = static_recovery[0];
+        let (ev, rm) = recal_recovery[0];
+        assert!(
+            recal_report.goodput() > static_report.goodput(),
+            "{name}: online re-fits must out-serve the stale fit under fault: {} vs {}",
+            recal_report.goodput(),
+            static_report.goodput()
+        );
+        assert!(
+            rm.restored(),
+            "{name}: the recalibrated loop must restore goodput after the fault clears"
+        );
+        assert!(
+            !sm.restored() || rm.time_to_restore <= sm.time_to_restore,
+            "{name}: recalibration must not slow restoration: {} vs {}",
+            rm.time_to_restore,
+            sm.time_to_restore
+        );
+        println!(
+            "{:<12} static goodput {:.3} | recal goodput {:.3} | detect {:.0}s restore {:.0}s backlog area {:.0} msg*s (fault {:.0}s..{:.0}s)",
+            name,
+            static_report.goodput(),
+            recal_report.goodput(),
+            rm.time_to_detect,
+            rm.time_to_restore,
+            rm.backlog_area,
+            ev.start * intervals as f64,
+            ev.end * intervals as f64,
+        );
+        if id == 1 {
+            // goodput-under-fault trajectory for the canonical outage
+            outage_trajectory = recal_series
+                .iter()
+                .map(|s| Json::from(s.served_rate))
+                .collect();
+        }
+        let gain_pts = (recal_report.goodput() - static_report.goodput()) * 100.0;
+        recal_goodput_min = recal_goodput_min.min(recal_report.goodput());
+        recal_gain_pts_min = recal_gain_pts_min.min(gain_pts);
+        names.push(name);
+        per_fault.push((
+            static_report.goodput(),
+            recal_report.goodput(),
+            fin(rm.time_to_detect),
+            fin(rm.time_to_restore),
+            rm.backlog_area,
+        ));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!(
+        "all {} fault shapes: recal goodput min {:.3}, gain min {:.1} pts ({elapsed:.1}s)",
+        per_fault.len(),
+        recal_goodput_min,
+        recal_gain_pts_min
+    );
+
+    let keys: Vec<(String, String, String, String, String)> = names
+        .iter()
+        .map(|n| {
+            (
+                format!("static_goodput_{n}"),
+                format!("recal_goodput_{n}"),
+                format!("detect_seconds_{n}"),
+                format!("restore_seconds_{n}"),
+                format!("backlog_area_{n}"),
+            )
+        })
+        .collect();
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("intervals", Json::from(intervals)),
+        ("bench_seconds", Json::from(elapsed)),
+        ("recal_goodput_min", Json::from(recal_goodput_min)),
+        ("recal_gain_pts_min", Json::from(recal_gain_pts_min)),
+        ("outage_recal_served_trajectory", Json::Arr(outage_trajectory)),
+    ];
+    for (k, (sg, rg, detect, restore, area)) in keys.iter().zip(&per_fault) {
+        fields.push((k.0.as_str(), Json::from(*sg)));
+        fields.push((k.1.as_str(), Json::from(*rg)));
+        fields.push((k.2.as_str(), Json::from(*detect)));
+        fields.push((k.3.as_str(), Json::from(*restore)));
+        fields.push((k.4.as_str(), Json::from(*area)));
+    }
+    common::write_bench_json(
+        "PS_BENCH_FAULTS_OUT",
+        "BENCH_faults.json",
+        &["recal_goodput_min", "recal_gain_pts_min"],
+        fields,
+    );
+}

@@ -1,0 +1,238 @@
+//! Fault injection for the live control loop: wrap any
+//! [`ScalingTarget`] in a [`FaultyTarget`] and the [`FaultPlan`]'s
+//! windows degrade its goodput envelope — a site outage drops its share
+//! of traffic, a cold-start storm slows the whole fleet, a hot key
+//! bounds throughput at the hot shard, stragglers drag the affected
+//! fraction, a partition walls off its shards.
+//!
+//! The wrapper sits on the *serve* seam, so the loop's conservation
+//! identity (`offered == processed + throttled + backlog`) holds
+//! untouched: whatever the fault withholds stays in the loop's backlog
+//! and drains after the window closes.  Every tick is recorded as a
+//! [`RecoverySample`], and [`FaultyTarget::recovery_report`] turns the
+//! trajectory into per-fault [`RecoveryMetrics`] (time-to-detect,
+//! time-to-restore-goodput, backlog area) — the evidence
+//! `autoscale --live --faults <plan>` uses to prove the recalibrating
+//! loop beats a stale static fit under every fault shape.
+
+use super::control::ScalingTarget;
+use super::recalibrate::UslSample;
+use crate::insight::autoscale::ScaleDecision;
+use crate::pilot::ResizePlan;
+use crate::sim::faults::{FaultEvent, FaultPlan, RecoveryMetrics, RecoverySample};
+
+/// A [`ScalingTarget`] decorator that injects a [`FaultPlan`] into the
+/// serve path.  Fault windows are fractions of the loop's total length
+/// (`intervals`), mirroring how the sim driver measures them in run
+/// progress; the goodput multiplier of each active window comes from
+/// [`FaultKind::capacity_multiplier`](crate::sim::faults::FaultKind).
+pub struct FaultyTarget<T: ScalingTarget> {
+    inner: T,
+    plan: FaultPlan,
+    intervals: usize,
+    dt: f64,
+    tick: usize,
+    series: Vec<RecoverySample>,
+}
+
+impl<T: ScalingTarget> FaultyTarget<T> {
+    pub fn new(inner: T, plan: FaultPlan, intervals: usize, dt: f64) -> Self {
+        assert!(dt > 0.0, "control interval must be positive");
+        Self {
+            inner,
+            plan,
+            intervals: intervals.max(1),
+            dt,
+            tick: 0,
+            series: Vec::with_capacity(intervals),
+        }
+    }
+
+    /// The wrapped target (status inspection, teardown).
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    /// The injected plan.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The recorded per-tick trajectory.
+    pub fn series(&self) -> &[RecoverySample] {
+        &self.series
+    }
+
+    fn progress(&self) -> f64 {
+        self.tick as f64 / self.intervals as f64
+    }
+
+    /// Goodput multiplier of every fault window active at `progress`.
+    fn multiplier(&self, progress: f64) -> f64 {
+        let n = self.inner.parallelism();
+        self.plan
+            .events
+            .iter()
+            .filter(|ev| progress >= ev.start && progress < ev.end)
+            .map(|ev| ev.kind.capacity_multiplier(n))
+            .product()
+    }
+
+    /// Per-fault recovery metrics from the recorded trajectory: each
+    /// event's window is mapped to loop time and analyzed with
+    /// [`RecoveryMetrics::from_series`].
+    pub fn recovery_report(&self) -> Vec<(FaultEvent, RecoveryMetrics)> {
+        let horizon = self.intervals as f64 * self.dt;
+        self.plan
+            .events
+            .iter()
+            .map(|ev| {
+                let m = RecoveryMetrics::from_series(
+                    &self.series,
+                    ev.start * horizon,
+                    ev.end * horizon,
+                );
+                (*ev, m)
+            })
+            .collect()
+    }
+}
+
+impl<T: ScalingTarget> ScalingTarget for FaultyTarget<T> {
+    fn label(&self) -> String {
+        format!("{}+{}", self.inner.label(), self.plan.name)
+    }
+
+    fn parallelism(&self) -> usize {
+        self.inner.parallelism()
+    }
+
+    fn is_resizing(&self) -> bool {
+        self.inner.is_resizing()
+    }
+
+    fn actuate(&mut self, decision: &ScaleDecision) -> Result<Option<ResizePlan>, String> {
+        self.inner.actuate(decision)
+    }
+
+    fn serve(&mut self, demand: f64, dt: f64) -> Result<f64, String> {
+        let mult = self.multiplier(self.progress());
+        let raw = self.inner.serve(demand, dt)?;
+        // hash routing keeps feeding the fault its share of the traffic,
+        // so the multiplier applies to whatever the fleet realized; the
+        // withheld remainder stays in the loop's backlog (conserved)
+        let served = raw * mult;
+        let t = self.tick as f64 * self.dt;
+        self.series.push(RecoverySample {
+            t,
+            offered_rate: demand / dt,
+            served_rate: served / dt,
+            backlog: (demand - served).max(0.0),
+        });
+        self.tick += 1;
+        Ok(served)
+    }
+
+    fn capacity(&self) -> f64 {
+        self.inner.capacity() * self.multiplier(self.progress())
+    }
+
+    fn observe_interval(&mut self, served_rate: f64, demand_rate: f64) -> UslSample {
+        // the inner target keeps its push-back semantics; the rates the
+        // loop measured already carry the fault, so the sample store (and
+        // every re-fit) sees the degraded envelope — that is exactly the
+        // drift the recalibrating loop re-learns through
+        self.inner.observe_interval(served_rate, demand_rate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::insight::autoscale::{AutoscaleConfig, Autoscaler};
+    use crate::insight::control::{run_fixed, ControlLoop, ModelTarget};
+    use crate::insight::predict::Predictor;
+    use crate::usl::UslParams;
+
+    fn predictor(lambda: f64) -> Predictor {
+        Predictor {
+            params: UslParams::new(0.02, 0.0001, lambda),
+        }
+    }
+
+    #[test]
+    fn fair_weather_wrapper_is_transparent() {
+        let trace = vec![40.0; 30];
+        let mut plain = ModelTarget::new(predictor(20.0), 4);
+        let base = run_fixed(&mut plain, &trace, 1.0).unwrap();
+        let inner = ModelTarget::new(predictor(20.0), 4);
+        let mut wrapped = FaultyTarget::new(inner, FaultPlan::none(), trace.len(), 1.0);
+        let faulted = run_fixed(&mut wrapped, &trace, 1.0).unwrap();
+        assert_eq!(
+            base.processed_total.to_bits(),
+            faulted.processed_total.to_bits()
+        );
+        assert_eq!(wrapped.series().len(), trace.len());
+    }
+
+    #[test]
+    fn outage_window_dents_goodput_then_backlog_drains() {
+        // fixed parallelism with headroom: the fault window halves served
+        // throughput, the backlog drains after rejoin
+        let trace = vec![40.0; 40];
+        let inner = ModelTarget::new(predictor(30.0), 4); // cap ~112
+        let mut target =
+            FaultyTarget::new(inner, FaultPlan::preset_by_id(1), trace.len(), 1.0);
+        let report = run_fixed(&mut target, &trace, 1.0).unwrap();
+        let final_backlog = report.ticks.last().unwrap().backlog;
+        assert!(
+            (report.offered_total - report.processed_total - report.throttled_total
+                - final_backlog)
+                .abs()
+                < 1e-9,
+            "loop conservation must hold through the fault"
+        );
+        let during = &report.ticks[13]; // inside [0.3, 0.6) * 40
+        assert!(during.backlog > 1.0, "the outage must build a backlog");
+        let metrics = target.recovery_report();
+        assert_eq!(metrics.len(), 1);
+        let (_, m) = metrics[0];
+        assert!(m.time_to_detect.is_finite());
+        assert!(m.restored(), "headroom must drain the backlog after rejoin");
+        assert!(m.backlog_area > 0.0);
+    }
+
+    #[test]
+    fn autoscaled_loop_survives_every_preset() {
+        for id in crate::sim::faults::FAULT_PRESET_IDS {
+            let trace = vec![60.0; 30];
+            let scaler = Autoscaler::new(
+                predictor(20.0),
+                AutoscaleConfig {
+                    max_parallelism: 16,
+                    ..Default::default()
+                },
+                2,
+            );
+            let inner = ModelTarget::new(predictor(20.0), 2);
+            let mut target =
+                FaultyTarget::new(inner, FaultPlan::preset_by_id(id), trace.len(), 1.0);
+            let report = ControlLoop::new(scaler, 1.0).run(&mut target, &trace).unwrap();
+            let final_backlog = report.ticks.last().unwrap().backlog;
+            assert!(
+                (report.offered_total
+                    - report.processed_total
+                    - report.throttled_total
+                    - final_backlog)
+                    .abs()
+                    < 1e-9,
+                "fault id {id}: conservation violated"
+            );
+            assert!(report.processed_total > 0.0, "fault id {id}");
+        }
+    }
+}

@@ -31,6 +31,13 @@ pub const AXIS_PARTITIONS: &str = "partitions";
 /// sweep runs whole DAGs through the workflow driver instead of
 /// single-stage scenarios.
 pub const AXIS_WORKFLOW: &str = "workflow";
+/// Fault-plan axis: each level is a [`FaultPlan`] preset id
+/// ([`crate::sim::faults::FaultPlan::preset_by_id`]; 0 = fair weather).
+/// A non-canonical name, so it rides `Scenario::extra` into the sim
+/// driver with zero engine edits and composes with every existing grid.
+///
+/// [`FaultPlan`]: crate::sim::faults::FaultPlan
+pub const AXIS_FAULTS: &str = crate::sim::faults::FAULTS_PARAM;
 
 /// One typed level of an [`Axis`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -543,6 +550,24 @@ mod tests {
             seen.push(sites);
         }
         assert!(seen.contains(&1) && seen.contains(&2));
+    }
+
+    #[test]
+    fn fault_axis_composes_with_any_grid() {
+        // the chaos axis is just another extra-param axis: no engine edits
+        let spec = ExperimentSpec::tiny_grid(8, 3).with_axis(Axis::ints(AXIS_FAULTS, [0, 1, 3]));
+        assert_eq!(spec.size(), 18); // tiny grid (6) x 3 fault levels
+        let mut keys = Vec::new();
+        for sc in spec.scenarios() {
+            let id = sc.extra_param(AXIS_FAULTS).unwrap();
+            assert!(matches!(id, 0 | 1 | 3));
+            assert_eq!(axis_value_of(&sc, AXIS_FAULTS), Some(AxisValue::Int(id)));
+            keys.push(sc.run_key());
+        }
+        keys.sort_unstable();
+        let before = keys.len();
+        keys.dedup();
+        assert_eq!(before, keys.len(), "fault levels must derive distinct run keys");
     }
 
     #[test]

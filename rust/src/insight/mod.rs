@@ -78,6 +78,7 @@
 pub mod analysis;
 pub mod autoscale;
 pub mod autoscale_sim;
+pub mod chaos;
 pub mod config;
 pub mod control;
 pub mod experiment;
@@ -91,13 +92,14 @@ pub mod workflow;
 pub use analysis::{analyze, table, AnalysisRow, IncrementalAnalysis};
 pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
 pub use autoscale_sim::{replay, trace_burst, trace_diurnal, AutoscaleReport};
+pub use chaos::FaultyTarget;
 pub use config::{spec_from_file, spec_from_toml};
 pub use control::{
     run_fixed, ControlLoop, ModelTarget, PilotTarget, ResizeEvent, ScalingTarget,
 };
 pub use experiment::{
-    axis_value_of, Axis, AxisValue, ExperimentSpec, AXIS_CENTROIDS, AXIS_MEMORY_MB,
-    AXIS_MESSAGE_SIZE, AXIS_PARTITIONS, AXIS_PLATFORM, AXIS_WORKFLOW,
+    axis_value_of, Axis, AxisValue, ExperimentSpec, AXIS_CENTROIDS, AXIS_FAULTS,
+    AXIS_MEMORY_MB, AXIS_MESSAGE_SIZE, AXIS_PARTITIONS, AXIS_PLATFORM, AXIS_WORKFLOW,
 };
 pub use predict::Predictor;
 pub use recalibrate::{

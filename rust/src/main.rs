@@ -5,6 +5,7 @@ use pilot_streaming::engine::StepEngine;
 use pilot_streaming::insight::{self, figures, ExperimentSpec};
 use pilot_streaming::miniapp::{run_live, run_sim_opts, PlatformKind, Scenario, SimOptions};
 use pilot_streaming::runtime::{calibrate, Manifest, PjrtEngine};
+use pilot_streaming::sim::{FaultEvent, FaultPlan, RecoveryMetrics, FAULTS_PARAM, FAULT_PRESET_IDS};
 use pilot_streaming::util::cli::{App, Args, CliError, CommandSpec};
 use pilot_streaming::util::logging;
 use std::sync::Arc;
@@ -38,6 +39,11 @@ fn app() -> App {
                 "",
                 "run a preset workflow DAG instead of a single stage: finra | ml-training | ml-inference | word-count (--partitions scales every stage)",
             )
+            .opt(
+                "faults",
+                "",
+                "inject a fault plan: none | site-outage | cold-storm | hot-key | straggler | partition (or a numeric plan id; sim only)",
+            )
             .flag("live", "run live (threads + real PJRT) instead of simulated time"),
     )
     .command(
@@ -52,7 +58,12 @@ fn app() -> App {
             .opt("jobs", "0", "parallel sweep workers (0 = one per core)")
             .opt("lanes", "1", "parallel sim lanes per scenario (0 = one per core)")
             .opt("csv", "", "write per-config CSV to this path")
-            .opt("config", "", "TOML experiment file (overrides the preset grid)"),
+            .opt("config", "", "TOML experiment file (overrides the preset grid)")
+            .opt(
+                "faults",
+                "",
+                "compose a fault axis onto the grid: comma list of plans/ids, or \"all\" for fair weather + every preset",
+            ),
     )
     .command(
         CommandSpec::new("autoscale", "run the predictive autoscaler: replay a rate trace against the USL model, or close the loop on a live pilot (--live)")
@@ -70,6 +81,11 @@ fn app() -> App {
             .opt("edge-sites", "1", "edge fleet size (platform edge)")
             .opt("refit-window", "64", "recalibration sample window (with --recalibrate)")
             .opt("drift-band", "0.25", "relative throughput band before a re-fit triggers (with --recalibrate)")
+            .opt(
+                "faults",
+                "",
+                "inject a fault plan into the live loop (with --live): site-outage | cold-storm | hot-key | straggler | partition (or id); reports per-fault recovery metrics",
+            )
             .flag("live", "actuate decisions on a real pilot via resize_pilot instead of replaying the model")
             .flag("recalibrate", "stream online USL re-fits from observed goodput back into the live loop, and report static fit vs recalibrated side by side (with --live)"),
     )
@@ -141,7 +157,25 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
     if sites > 1 {
         sc.set_extra("edge_sites", sites);
     }
+    if let Some(plan) = fault_plan_from(args)? {
+        sc.set_extra(FAULTS_PARAM, plan.id);
+    }
     Ok(sc)
+}
+
+/// `--faults`: parse a single fault plan; `None` when absent or fair
+/// weather ("none" / "off" / 0).
+fn fault_plan_from(args: &Args) -> Result<Option<FaultPlan>, String> {
+    let spec = args.get_or("faults", "");
+    if spec.is_empty() {
+        return Ok(None);
+    }
+    let plan = FaultPlan::parse(spec).ok_or_else(|| {
+        format!(
+            "unknown fault plan {spec:?} (none | site-outage | cold-storm | hot-key | straggler | partition | <numeric id>)"
+        )
+    })?;
+    Ok(plan.is_active().then_some(plan))
 }
 
 fn print_summary(label: &str, s: &pilot_streaming::miniapp::RunSummary) {
@@ -168,6 +202,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     }
     let sc = scenario_from(args)?;
     if args.has_flag("live") {
+        if sc.extra_param(FAULTS_PARAM).is_some() {
+            return Err("--faults runs in simulated time only (drop --live, or use autoscale --live --faults)".into());
+        }
         let engine = engine_for_scenario(true, sc.partitions.min(4))?;
         let r = run_live(&sc, engine, 50.0)?;
         print_summary(&format!("live {}", sc.platform.label()), &r.summary);
@@ -182,6 +219,17 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         let r = run_sim_opts(&sc, engine, opts)?;
         print_summary(&format!("sim {}", sc.platform.label()), &r.summary);
         println!("des events         {}", r.des_events);
+        if let Some(fa) = &r.faults {
+            println!(
+                "fault accounting   offered {}  served clean {}  delayed {}  dropped {}  denied attempts {}  (conserved: {})",
+                fa.offered,
+                fa.served_clean,
+                fa.delayed,
+                fa.dropped,
+                fa.denied_attempts,
+                fa.conserved()
+            );
+        }
     }
     Ok(())
 }
@@ -200,6 +248,9 @@ fn cmd_run_workflow(args: &Args, name: &str) -> Result<(), String> {
     use pilot_streaming::workflow::{run_workflow, WorkflowSpec};
     if args.has_flag("live") {
         return Err("--workflow runs in simulated time only (drop --live)".into());
+    }
+    if !args.get_or("faults", "").is_empty() {
+        return Err("--faults applies to single-stage runs; the workflow driver does not thread fault plans yet".into());
     }
     let wf = WorkflowSpec::preset(name)
         .ok_or_else(|| {
@@ -273,6 +324,17 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             }
         },
     };
+    let spec = match fault_axis_from(args)? {
+        Some(ids) => {
+            if spec.axis(insight::AXIS_WORKFLOW).is_some() {
+                return Err(
+                    "--faults composes with single-stage grids; the workflow grid does not thread fault plans yet".into(),
+                );
+            }
+            spec.with_axis(insight::Axis::ints(insight::AXIS_FAULTS, ids))
+        }
+        None => spec,
+    };
     let jobs = match args.get_usize("jobs").map_err(|e| e.to_string())? {
         0 => std::thread::available_parallelism()
             .map(|n| n.get())
@@ -331,6 +393,28 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         println!("wrote {path}");
     }
     Ok(())
+}
+
+/// `sweep --faults`: expand a comma list of fault plans (or "all") into
+/// the id levels of a [`FaultPlan`] axis.  Fair weather (id 0) rides
+/// along with "all" so every fit has its undisturbed reference curve.
+fn fault_axis_from(args: &Args) -> Result<Option<Vec<u64>>, String> {
+    let spec = args.get_or("faults", "");
+    if spec.is_empty() {
+        return Ok(None);
+    }
+    if spec == "all" {
+        let mut ids = vec![0];
+        ids.extend(FAULT_PRESET_IDS);
+        return Ok(Some(ids));
+    }
+    let mut ids = Vec::new();
+    for part in spec.split(',') {
+        let plan = FaultPlan::parse(part)
+            .ok_or_else(|| format!("unknown fault plan {part:?} in --faults"))?;
+        ids.push(plan.id);
+    }
+    Ok(Some(ids))
 }
 
 /// `sweep --grid workflow` (or a TOML `workflows = [...]` campaign): run
@@ -542,6 +626,9 @@ fn cmd_autoscale(args: &Args) -> Result<(), String> {
     if args.has_flag("recalibrate") {
         return Err("--recalibrate needs a live pilot to learn from: pass --live".into());
     }
+    if !args.get_or("faults", "").is_empty() {
+        return Err("--faults needs a live loop to degrade: pass --live".into());
+    }
     let report = insight::replay(
         predictor,
         insight::AutoscaleConfig::default(),
@@ -603,6 +690,7 @@ fn cmd_autoscale_live(
             args, predictor, config, &scenario, trace, intervals, &factory,
         );
     }
+    let plan = fault_plan_from(args)?;
     let scaler = insight::Autoscaler::new(predictor, config, scenario.partitions);
 
     eprintln!(
@@ -611,20 +699,19 @@ fn cmd_autoscale_live(
         scenario.partitions,
         intervals
     );
-    let mut live = insight::PilotTarget::new(
-        pilot_streaming::miniapp::LivePilot::provision(&scenario, factory(&scenario))?,
-    );
-    let report = insight::ControlLoop::new(scaler, 1.0).run(&mut live, trace)?;
-    let status = live.pilot().status();
-    live.shutdown();
+    if let Some(p) = &plan {
+        eprintln!("injecting fault plan {:?} ({} event(s))", p.name, p.events.len());
+    }
+    let (report, recovery, status) =
+        run_live_loop(&scenario, &factory, Some(scaler), None, plan.as_ref(), trace)?;
+    let (baseline, base_recovery, _) =
+        run_live_loop(&scenario, &factory, None, None, plan.as_ref(), trace)?;
 
-    let mut fixed = insight::PilotTarget::new(
-        pilot_streaming::miniapp::LivePilot::provision(&scenario, factory(&scenario))?,
-    );
-    let baseline = insight::run_fixed(&mut fixed, trace, 1.0)?;
-    fixed.shutdown();
-
-    println!("-- live {} (closed loop) --", platform.label());
+    let suffix = plan
+        .as_ref()
+        .map(|p| format!(", faults: {}", p.name))
+        .unwrap_or_default();
+    println!("-- live {} (closed loop{suffix}) --", platform.label());
     print_autoscale_ticks(&report, intervals);
     println!("\nresize transitions:");
     for ev in &report.resizes {
@@ -633,10 +720,14 @@ fn cmd_autoscale_live(
             ev.t, ev.plan.from, ev.plan.to, ev.plan.transition_s, ev.plan.semantics
         );
     }
-    println!(
-        "final pilot_state: {} at N={} after {} resize(s)",
-        status.state, status.parallelism, status.resize_events
-    );
+    println!("{status}");
+    if let Some(rec) = &recovery {
+        println!("\nper-fault recovery (closed loop vs fixed baseline):");
+        print_recovery("autoscaled", rec);
+        if let Some(base_rec) = &base_recovery {
+            print_recovery("fixed", base_rec);
+        }
+    }
     println!(
         "\nlive goodput {:.1}%  vs fixed N={} baseline {:.1}%  ({:+.1} pts)",
         report.goodput() * 100.0,
@@ -645,6 +736,93 @@ fn cmd_autoscale_live(
         (report.goodput() - baseline.goodput()) * 100.0
     );
     Ok(())
+}
+
+type RecoveryReport = Vec<(FaultEvent, RecoveryMetrics)>;
+
+/// Run one control loop (or a fixed-parallelism baseline when `scaler` is
+/// `None`) on a fresh live pilot, optionally degraded by a fault plan.
+/// Returns the report, the per-fault recovery metrics (when a plan is
+/// injected), and the pilot's final status line.
+fn run_live_loop<F>(
+    scenario: &Scenario,
+    factory: &F,
+    scaler: Option<insight::Autoscaler>,
+    fitter: Option<insight::OnlineUslFitter>,
+    plan: Option<&FaultPlan>,
+    trace: &[f64],
+) -> Result<(insight::AutoscaleReport, Option<RecoveryReport>, String), String>
+where
+    F: Fn(&Scenario) -> Arc<dyn StepEngine>,
+{
+    let inner = insight::PilotTarget::new(pilot_streaming::miniapp::LivePilot::provision(
+        scenario,
+        factory(scenario),
+    )?);
+    match plan {
+        Some(plan) => {
+            let mut target = insight::FaultyTarget::new(inner, plan.clone(), trace.len(), 1.0);
+            let report = run_loop_on(&mut target, scaler, fitter, trace)?;
+            let recovery = target.recovery_report();
+            let inner = target.into_inner();
+            let status = pilot_status_line(&inner);
+            inner.shutdown();
+            Ok((report, Some(recovery), status))
+        }
+        None => {
+            let mut target = inner;
+            let report = run_loop_on(&mut target, scaler, fitter, trace)?;
+            let status = pilot_status_line(&target);
+            target.shutdown();
+            Ok((report, None, status))
+        }
+    }
+}
+
+fn run_loop_on(
+    target: &mut dyn insight::ScalingTarget,
+    scaler: Option<insight::Autoscaler>,
+    fitter: Option<insight::OnlineUslFitter>,
+    trace: &[f64],
+) -> Result<insight::AutoscaleReport, String> {
+    match scaler {
+        Some(scaler) => {
+            let mut control = insight::ControlLoop::new(scaler, 1.0);
+            if let Some(f) = fitter {
+                control = control.with_recalibration(f);
+            }
+            control.run(target, trace)
+        }
+        None => insight::run_fixed(target, trace, 1.0),
+    }
+}
+
+fn pilot_status_line(target: &insight::PilotTarget) -> String {
+    let s = target.pilot().status();
+    format!(
+        "final pilot_state: {} at N={} after {} resize(s)",
+        s.state, s.parallelism, s.resize_events
+    )
+}
+
+fn print_recovery(label: &str, metrics: &RecoveryReport) {
+    for (ev, m) in metrics {
+        println!(
+            "  {label:<13} {:<12} detect {:>7}  restore {:>7}  backlog area {:.0} msg*s",
+            ev.kind.label(),
+            fmt_ticks(m.time_to_detect),
+            fmt_ticks(m.time_to_restore),
+            m.backlog_area
+        );
+    }
+}
+
+fn fmt_ticks(t: f64) -> String {
+    if t.is_finite() {
+        format!("{t:.0}s")
+    } else {
+        "never".to_string()
+    }
 }
 
 /// `autoscale --live --recalibrate`: run the closed loop twice on
@@ -664,7 +842,6 @@ fn run_recalibrate_comparison<F>(
 where
     F: Fn(&Scenario) -> Arc<dyn StepEngine>,
 {
-    use pilot_streaming::insight::AutoscaleReport;
     let window = args.get_usize("refit-window").map_err(|e| e.to_string())?;
     let band = args.get_f64("drift-band").map_err(|e| e.to_string())?;
     let recal_config = insight::RecalibrateConfig {
@@ -672,31 +849,28 @@ where
         drift_band: band.max(0.01),
         ..Default::default()
     };
+    let plan = fault_plan_from(args)?;
     let label = scenario.platform.label();
     eprintln!(
         "closing the loop twice on live {label} ({intervals} intervals): static fit vs online recalibration..."
     );
-    let run = |fitter: Option<insight::OnlineUslFitter>| -> Result<AutoscaleReport, String> {
-        let scaler =
-            insight::Autoscaler::new(predictor.clone(), config.clone(), scenario.partitions);
-        let mut control = insight::ControlLoop::new(scaler, 1.0);
-        if let Some(f) = fitter {
-            control = control.with_recalibration(f);
-        }
-        let mut target = insight::PilotTarget::new(
-            pilot_streaming::miniapp::LivePilot::provision(scenario, factory(scenario))?,
-        );
-        let report = control.run(&mut target, intervals_trace)?;
-        target.shutdown();
-        Ok(report)
-    };
-    let static_report = run(None)?;
-    let recal_report = run(Some(insight::OnlineUslFitter::new(recal_config)))?;
-    let mut fixed = insight::PilotTarget::new(
-        pilot_streaming::miniapp::LivePilot::provision(scenario, factory(scenario))?,
-    );
-    let baseline = insight::run_fixed(&mut fixed, intervals_trace, 1.0)?;
-    fixed.shutdown();
+    if let Some(p) = &plan {
+        eprintln!("injecting fault plan {:?} ({} event(s)) into both loops", p.name, p.events.len());
+    }
+    let scaler =
+        || insight::Autoscaler::new(predictor.clone(), config.clone(), scenario.partitions);
+    let (static_report, static_recovery, _) =
+        run_live_loop(scenario, factory, Some(scaler()), None, plan.as_ref(), intervals_trace)?;
+    let (recal_report, recal_recovery, _) = run_live_loop(
+        scenario,
+        factory,
+        Some(scaler()),
+        Some(insight::OnlineUslFitter::new(recal_config)),
+        plan.as_ref(),
+        intervals_trace,
+    )?;
+    let (baseline, _, _) =
+        run_live_loop(scenario, factory, None, None, plan.as_ref(), intervals_trace)?;
 
     let recal = recal_report.recalibration.clone().unwrap_or_default();
     println!("-- live {label}: static fit vs online recalibration --");
@@ -741,6 +915,11 @@ where
             "recalibrated fit: sigma {:.4}  kappa {:.5}  lambda {:.2}",
             p.sigma, p.kappa, p.lambda
         );
+    }
+    if let (Some(s), Some(r)) = (&static_recovery, &recal_recovery) {
+        println!("\nper-fault recovery: stale static fit vs recalibrated");
+        print_recovery("static fit", s);
+        print_recovery("recalibrated", r);
     }
     match probe_ground_truth(scenario, factory, config.max_parallelism) {
         Some(truth) => println!(

@@ -50,6 +50,7 @@ use crate::broker::{Broker, BrokerError};
 use crate::engine::StepEngine;
 use crate::pilot::workers::parallel_indexed_map;
 use crate::serverless::EventSourceMapping;
+use crate::sim::faults::{FaultAccounting, FaultPlan, FaultSchedule, FAULTS_PARAM};
 use crate::sim::{Cohort, Engine as Des, IdAlloc};
 use crate::util::rng::SplitMix64;
 use std::cell::RefCell;
@@ -101,6 +102,9 @@ pub struct SimRunResult {
     pub des_events: u64,
     /// The merged run trace (retention governed by [`SimOptions::trace`]).
     pub trace: Arc<RunTrace>,
+    /// Conserved fault accounting when the scenario carries a fault plan
+    /// (`Scenario::extra["faults"]`), `None` in fair weather.
+    pub faults: Option<FaultAccounting>,
 }
 
 struct CellLoop {
@@ -124,15 +128,40 @@ struct CellLoop {
     total: Vec<usize>,
     remaining: RefCell<Vec<usize>>,
     backoffs: RefCell<u64>,
+    /// Materialized fault plan (inactive schedules answer every query
+    /// with "fair weather" and the fast-path guards skip them entirely).
+    faults: FaultSchedule,
+    faults_active: bool,
+    /// Committed + denied produce outcomes over `fault_total` — the
+    /// run-progress measure fault windows are defined on.  Counting
+    /// denials guarantees a deny window always eventually closes even if
+    /// only denied shards still hold messages (no deadlock).
+    fault_acct: RefCell<FaultAccounting>,
+    /// Per-shard flag: the shard's in-flight message was denied or slowed
+    /// by a fault and must commit as `delayed` (one in-flight message per
+    /// shard in the closed loop, so a flag suffices).
+    tainted: RefCell<Vec<bool>>,
+    fault_total: f64,
 }
 
 struct CellOutcome {
     trace: RunTrace,
     backoffs: u64,
     des_events: u64,
+    faults: Option<FaultAccounting>,
 }
 
 impl CellLoop {
+    /// Run progress in `[0, 1+)` as fault windows measure it: produce
+    /// outcomes (commits + fault denials) over the total message count.
+    /// A pure function of committed state, identical on the cohort and
+    /// per-message paths, so fault decisions never move an event time
+    /// between modes.
+    fn fault_progress(&self) -> f64 {
+        let acct = self.fault_acct.borrow();
+        (acct.served_clean + acct.delayed + acct.denied_attempts) as f64 / self.fault_total
+    }
+
     /// The shard's production cohort, drawn from the generator on first
     /// use.  Payload content never feeds a cost model, so sharing one
     /// slab across the lane leaves every event time untouched.
@@ -163,6 +192,19 @@ impl CellLoop {
         let rem = self.remaining.borrow()[shard];
         if rem == 0 {
             return;
+        }
+        // an active outage/partition window denies the put before any
+        // generator or id state is consumed: the attempt is counted,
+        // the message marked delayed, and the producer retries — work is
+        // deferred, never lost
+        if self.faults_active {
+            if let Some(delay) = self.faults.deny_delay(shard, self.fault_progress()) {
+                self.fault_acct.borrow_mut().denied_attempts += 1;
+                self.tainted.borrow_mut()[shard] = true;
+                let this = Rc::clone(self);
+                des.schedule_in(delay, Box::new(move |des| this.produce(des, shard)));
+                return;
+            }
         }
         let now = des.now();
         let put = match self.mode {
@@ -227,10 +269,24 @@ impl CellLoop {
                     return;
                 }
             };
+        // cold-start storms and stragglers stretch service inside their
+        // windows; the stretch lands in the trace's overhead component so
+        // the per-message timeline still sums exactly
+        let penalty = if self.faults_active {
+            let mult = self
+                .faults
+                .service_multiplier(shard, self.fault_progress());
+            cost.total() * (mult - 1.0)
+        } else {
+            0.0
+        };
+        if penalty > 0.0 {
+            self.tainted.borrow_mut()[shard] = true;
+        }
         let this = Rc::clone(self);
         let partition = self.shard_base + shard;
         des.schedule_in(
-            cost.total(),
+            cost.total() + penalty,
             Box::new(move |des| {
                 let end = des.now();
                 this.esm.commit(lease);
@@ -244,11 +300,21 @@ impl CellLoop {
                     proc_end: end,
                     compute: cost.compute,
                     io: cost.io,
-                    overhead: cost.overhead,
+                    overhead: cost.overhead + penalty,
                 });
                 {
                     let mut rem = this.remaining.borrow_mut();
                     rem[shard] = rem[shard].saturating_sub(1);
+                }
+                if this.faults_active {
+                    let mut acct = this.fault_acct.borrow_mut();
+                    let mut tainted = this.tainted.borrow_mut();
+                    if tainted[shard] {
+                        acct.delayed += 1;
+                        tainted[shard] = false;
+                    } else {
+                        acct.served_clean += 1;
+                    }
                 }
                 // closed loop: next message for this shard immediately
                 this.produce(des, shard);
@@ -275,6 +341,18 @@ fn run_cell(
     let esm = Arc::new(EventSourceMapping::new(platform.broker(), 1));
     let per_shard = scenario.messages.div_ceil(scenario.partitions);
 
+    let fault_plan = scenario
+        .extra_param(FAULTS_PARAM)
+        .map(FaultPlan::preset_by_id)
+        .unwrap_or_else(FaultPlan::none);
+    let faults = FaultSchedule::new(&fault_plan, scenario.seed, scenario.partitions);
+    let faults_active = faults.is_active();
+    // hot-key skew is structural: the hot shard owns its share of the
+    // whole run's traffic (the message count is conserved exactly)
+    let mut total = vec![per_shard; scenario.partitions];
+    faults.distribute(&mut total);
+    let grand_total: usize = total.iter().sum();
+
     let state = Rc::new(CellLoop {
         platform,
         broker,
@@ -293,9 +371,17 @@ fn run_cell(
         run_id,
         shard_base,
         global_partitions,
-        total: vec![per_shard; scenario.partitions],
-        remaining: RefCell::new(vec![per_shard; scenario.partitions]),
+        remaining: RefCell::new(total.clone()),
+        total,
         backoffs: RefCell::new(0),
+        faults,
+        faults_active,
+        fault_acct: RefCell::new(FaultAccounting {
+            offered: if faults_active { grand_total as u64 } else { 0 },
+            ..Default::default()
+        }),
+        tainted: RefCell::new(vec![false; scenario.partitions]),
+        fault_total: (grand_total as f64).max(1.0),
     });
 
     for shard in 0..scenario.partitions {
@@ -306,10 +392,19 @@ fn run_cell(
     let des_events = des.executed();
     drop(des); // releases the pending closures' Rc clones
     let state = Rc::try_unwrap(state).map_err(|_| "sim cell leaked its state".to_string())?;
+    let faults = if state.faults_active {
+        let acct = state.fault_acct.into_inner();
+        // the conserved identity: dropped + delayed + served_clean == offered
+        acct.verify();
+        Some(acct)
+    } else {
+        None
+    };
     Ok(CellOutcome {
         trace: state.run,
         backoffs: state.backoffs.into_inner(),
         des_events,
+        faults,
     })
 }
 
@@ -331,8 +426,11 @@ fn cell_scenario(base: &Scenario, cell: usize, per_shard: usize) -> Scenario {
 /// forkable engine — otherwise 1 (the exact single-DES path).
 fn shard_cells(scenario: &Scenario, engine: &dyn StepEngine) -> usize {
     let p = scenario.partitions;
+    // a fault plan couples shards (global progress windows, hot-key
+    // redistribution), so fault runs keep the exact single-DES path
     if scenario.platform == PlatformKind::Lambda
         && (2..=30).contains(&p)
+        && scenario.extra_param(FAULTS_PARAM).unwrap_or(0) == 0
         && engine.fork(0).is_some()
     {
         p
@@ -365,6 +463,7 @@ pub fn run_sim_opts(
             backoff_events: out.backoffs,
             des_events: out.des_events,
             trace: Arc::new(out.trace),
+            faults: out.faults,
         });
     }
 
@@ -403,6 +502,8 @@ pub fn run_sim_opts(
         backoff_events: outcomes.iter().map(|o| o.backoffs).sum(),
         des_events: outcomes.iter().map(|o| o.des_events).sum(),
         trace: Arc::new(trace),
+        // cell decomposition is gated off whenever a fault plan is active
+        faults: None,
     })
 }
 

@@ -1,0 +1,640 @@
+//! Seed-deterministic fault injection: the chaos axis.
+//!
+//! A [`FaultPlan`] is an injectable schedule of faults — edge-site
+//! outage/rejoin, cold-start storm, broker hot-key skew, straggler
+//! consumers, backhaul partition — that rides the campaign engine's
+//! `[axes] faults = [...]` into [`Scenario::extra`] as a preset id, with
+//! zero engine edits (the PR 2 extra-param seam).  The sim driver and the
+//! live control loop both materialize the plan into a [`FaultSchedule`]:
+//! every affected-shard draw and retry delay comes from [`crate::util::rng`]
+//! seeded by `(scenario seed, plan id)`, so a fault campaign is
+//! bit-reproducible — double-run and parallel-vs-sequential byte-identical,
+//! gated in CI.
+//!
+//! # The accounting identity
+//!
+//! Faults may *delay* work, never lose it silently:
+//!
+//! ```text
+//! dropped + delayed + served_clean == offered
+//! ```
+//!
+//! [`FaultAccounting::verify`] backs the identity with `debug_assert!`s and
+//! every fault test asserts it at every scale.  In the closed-loop sim
+//! `dropped == 0` by construction: a produce attempt denied by an outage or
+//! partition window counts a `denied_attempts` retry and the message lands
+//! later as `delayed`.
+//!
+//! [`Scenario::extra`]: crate::miniapp::Scenario
+//!
+//! Recovery is measured, not assumed: [`RecoveryMetrics::from_series`]
+//! computes time-to-detect, time-to-restore-goodput, and backlog area from
+//! a per-tick trajectory, so `autoscale --live --faults <plan>` can prove
+//! the recalibrating loop beats a stale static fit under every fault shape.
+
+use crate::util::rng::Pcg32;
+
+/// `Scenario::extra` key carrying the fault-plan preset id.
+pub const FAULTS_PARAM: &str = "faults";
+
+/// Mixing salt decorrelating fault draws from every other consumer of the
+/// scenario seed (generator content, cold-start draws, cell derivation).
+const FAULT_SEED_SALT: u64 = 0xFA17_5EED_0C4A_0517;
+
+/// One fault shape.  Shares and factors are fixed at plan construction;
+/// *which* shards a fault hits is drawn per run from the scenario seed
+/// when the plan is materialized into a [`FaultSchedule`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// A fraction `share` of sites/shards goes dark, then rejoins.  Work
+    /// routed to a dark shard is denied at produce time and retried.
+    SiteOutage { share: f64 },
+    /// Cold-start storm: every warm container is evicted, so each
+    /// invocation pays the cold path — a fleet-wide service slowdown.
+    ColdStorm { slowdown: f64 },
+    /// Broker hot-key skew: one shard takes `share` of the traffic.
+    HotKey { share: f64 },
+    /// A fraction `share` of consumers runs `factor`x slower.
+    Straggler { share: f64, factor: f64 },
+    /// Backhaul partition: a fraction `share` of shards is unreachable
+    /// behind the partition; their traffic is denied and retried.
+    Partition { share: f64 },
+}
+
+impl FaultKind {
+    /// Short stable label (CLI, CSV, bench reports).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::SiteOutage { .. } => "site-outage",
+            FaultKind::ColdStorm { .. } => "cold-storm",
+            FaultKind::HotKey { .. } => "hot-key",
+            FaultKind::Straggler { .. } => "straggler",
+            FaultKind::Partition { .. } => "partition",
+        }
+    }
+
+    /// Whether the fault denies produce attempts (vs slowing service).
+    pub fn denies(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::SiteOutage { .. } | FaultKind::Partition { .. }
+        )
+    }
+
+    /// Envelope-level goodput multiplier while the fault is active, as
+    /// seen by the live control loop at parallelism `n`.  Hash routing
+    /// keeps sending the affected share of traffic into the fault, so the
+    /// multiplier applies even when the fleet is not capacity-bound.
+    pub fn capacity_multiplier(&self, n: usize) -> f64 {
+        let n = n.max(1) as f64;
+        match *self {
+            FaultKind::SiteOutage { share } => 1.0 - share,
+            FaultKind::ColdStorm { slowdown } => 1.0 / slowdown.max(1.0),
+            // the hot shard bounds throughput at (lane rate)/share; adding
+            // lanes does not cool the key
+            FaultKind::HotKey { share } => (1.0 / (share * n)).min(1.0),
+            FaultKind::Straggler { share, factor } => {
+                (1.0 - share) + share / factor.max(1.0)
+            }
+            FaultKind::Partition { share } => 1.0 - share,
+        }
+    }
+}
+
+/// One scheduled fault: a kind plus an active window expressed as
+/// fractions of run progress in `[0, 1)` — sim runs measure progress in
+/// committed messages, live loops in elapsed ticks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl FaultEvent {
+    fn contains(&self, progress: f64) -> bool {
+        progress >= self.start && progress < self.end
+    }
+}
+
+/// A named, id-addressable schedule of [`FaultEvent`]s.  Id 0 is the
+/// fair-weather plan; ids 1–5 are the named presets; any other id derives
+/// a pseudo-random (but fully deterministic) plan from the id itself —
+/// the property tests fuzz conservation across that unbounded space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub id: u64,
+    pub name: String,
+    pub events: Vec<FaultEvent>,
+}
+
+/// The named preset ids, in menu order.
+pub const FAULT_PRESET_IDS: [u64; 5] = [1, 2, 3, 4, 5];
+
+impl FaultPlan {
+    /// The fair-weather plan: no faults.
+    pub fn none() -> Self {
+        Self {
+            id: 0,
+            name: "none".to_string(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Resolve a preset id: 0 = none, 1–5 = the named menu, anything else
+    /// = a derived pseudo-random plan (see [`FaultPlan::derived`]).
+    pub fn preset_by_id(id: u64) -> Self {
+        let window = (0.3, 0.6);
+        let (name, kind) = match id {
+            0 => return Self::none(),
+            1 => ("site-outage", FaultKind::SiteOutage { share: 0.5 }),
+            2 => ("cold-storm", FaultKind::ColdStorm { slowdown: 2.5 }),
+            3 => ("hot-key", FaultKind::HotKey { share: 0.6 }),
+            4 => (
+                "straggler",
+                FaultKind::Straggler {
+                    share: 0.5,
+                    factor: 4.0,
+                },
+            ),
+            5 => ("partition", FaultKind::Partition { share: 0.4 }),
+            other => return Self::derived(other),
+        };
+        Self {
+            id,
+            name: name.to_string(),
+            events: vec![FaultEvent {
+                kind,
+                start: window.0,
+                end: window.1,
+            }],
+        }
+    }
+
+    /// Derive a deterministic pseudo-random plan from an arbitrary id:
+    /// 1–3 events with random kinds, shares, and non-degenerate windows.
+    /// Same id → same plan, always.
+    pub fn derived(id: u64) -> Self {
+        let mut rng = Pcg32::seeded(id ^ FAULT_SEED_SALT);
+        let n = 1 + rng.gen_range(3) as usize;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let kind = match rng.gen_range(5) {
+                0 => FaultKind::SiteOutage {
+                    share: rng.uniform(0.2, 0.8),
+                },
+                1 => FaultKind::ColdStorm {
+                    slowdown: rng.uniform(1.5, 4.0),
+                },
+                2 => FaultKind::HotKey {
+                    share: rng.uniform(0.4, 0.9),
+                },
+                3 => FaultKind::Straggler {
+                    share: rng.uniform(0.2, 0.8),
+                    factor: rng.uniform(2.0, 8.0),
+                },
+                _ => FaultKind::Partition {
+                    share: rng.uniform(0.2, 0.7),
+                },
+            };
+            let start = rng.uniform(0.1, 0.6);
+            let end = (start + rng.uniform(0.1, 0.3)).min(0.95);
+            events.push(FaultEvent { kind, start, end });
+        }
+        Self {
+            id,
+            name: format!("derived-{id}"),
+            events,
+        }
+    }
+
+    /// Parse a CLI spelling: a preset name (`site-outage`, `cold-storm`,
+    /// `hot-key`, `straggler`, `partition`, `none`) or a numeric plan id.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        match s {
+            "none" | "off" => Some(Self::none()),
+            "site-outage" => Some(Self::preset_by_id(1)),
+            "cold-storm" => Some(Self::preset_by_id(2)),
+            "hot-key" => Some(Self::preset_by_id(3)),
+            "straggler" => Some(Self::preset_by_id(4)),
+            "partition" => Some(Self::preset_by_id(5)),
+            other => other.parse::<u64>().ok().map(Self::preset_by_id),
+        }
+    }
+
+    /// Whether the plan injects anything at all.
+    pub fn is_active(&self) -> bool {
+        !self.events.is_empty()
+    }
+}
+
+/// A [`FaultPlan`] materialized against one run: the per-event affected
+/// shard sets and retry delays, drawn once at construction from the
+/// scenario seed.  Everything downstream is a pure function of
+/// `(shard, progress)`, so the cohort and per-message sim paths see
+/// identical fault decisions and stay bit-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    plan: FaultPlan,
+    partitions: usize,
+    /// Affected local shard indices per event (sorted).
+    affected: Vec<Vec<usize>>,
+    /// Retry delay (seconds) a denied produce waits before re-presenting.
+    retry: Vec<f64>,
+}
+
+impl FaultSchedule {
+    pub fn new(plan: &FaultPlan, seed: u64, partitions: usize) -> Self {
+        let p = partitions.max(1);
+        let mut rng =
+            Pcg32::seeded(seed ^ plan.id.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ FAULT_SEED_SALT);
+        let mut affected = Vec::with_capacity(plan.events.len());
+        let mut retry = Vec::with_capacity(plan.events.len());
+        for ev in &plan.events {
+            let shards = match ev.kind {
+                // a deny-type fault must leave at least one shard serving,
+                // or the closed loop would deadlock: with p == 1 the fault
+                // degrades to a no-op (accounting still conserved)
+                FaultKind::SiteOutage { share } | FaultKind::Partition { share } => {
+                    if p < 2 {
+                        Vec::new()
+                    } else {
+                        let k = ((share * p as f64).round() as usize).clamp(1, p - 1);
+                        rng.sample_indices(p, k)
+                    }
+                }
+                FaultKind::Straggler { share, .. } => {
+                    let k = ((share * p as f64).round() as usize).clamp(1, p);
+                    rng.sample_indices(p, k)
+                }
+                FaultKind::ColdStorm { .. } => (0..p).collect(),
+                FaultKind::HotKey { .. } => vec![rng.gen_range(p as u64) as usize],
+            };
+            affected.push(shards);
+            retry.push(rng.uniform(0.02, 0.08));
+        }
+        Self {
+            plan: plan.clone(),
+            partitions: p,
+            affected,
+            retry,
+        }
+    }
+
+    /// Whether any fault is scheduled at all.
+    pub fn is_active(&self) -> bool {
+        self.plan.is_active()
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Affected local shard set of event `i` (sorted).
+    pub fn affected_shards(&self, i: usize) -> &[usize] {
+        &self.affected[i]
+    }
+
+    /// If `shard` is denied at `progress` (an active outage or partition
+    /// window), the retry delay the producer must wait before
+    /// re-presenting the message.  `None` means the put may proceed.
+    pub fn deny_delay(&self, shard: usize, progress: f64) -> Option<f64> {
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if ev.kind.denies() && ev.contains(progress) && self.affected[i].contains(&shard) {
+                return Some(self.retry[i]);
+            }
+        }
+        None
+    }
+
+    /// Service-time multiplier for `shard` at `progress`: cold storms slow
+    /// every shard, stragglers slow the affected subset.  Multiplicative
+    /// across overlapping events; 1.0 in fair weather.
+    pub fn service_multiplier(&self, shard: usize, progress: f64) -> f64 {
+        let mut m = 1.0;
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if !ev.contains(progress) {
+                continue;
+            }
+            match ev.kind {
+                FaultKind::ColdStorm { slowdown } => m *= slowdown.max(1.0),
+                FaultKind::Straggler { factor, .. } => {
+                    if self.affected[i].contains(&shard) {
+                        m *= factor.max(1.0);
+                    }
+                }
+                _ => {}
+            }
+        }
+        m
+    }
+
+    /// Apply hot-key skew to the per-shard message totals: the hot shard
+    /// takes `share` of the run's traffic, the rest splits the remainder
+    /// evenly.  The message count is conserved exactly.
+    pub fn distribute(&self, totals: &mut [usize]) {
+        let p = totals.len();
+        if p < 2 {
+            return;
+        }
+        let before: usize = totals.iter().sum();
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            let FaultKind::HotKey { share } = ev.kind else {
+                continue;
+            };
+            let sum: usize = totals.iter().sum();
+            let hot = self.affected[i][0];
+            let hot_take = (((share * sum as f64).round() as usize).max(1)).min(sum - (p - 1));
+            let rest = sum - hot_take;
+            let base = rest / (p - 1);
+            let mut leftover = rest % (p - 1);
+            for (s, t) in totals.iter_mut().enumerate() {
+                if s == hot {
+                    *t = hot_take;
+                } else {
+                    *t = base + usize::from(leftover > 0);
+                    leftover = leftover.saturating_sub(1);
+                }
+            }
+        }
+        let after: usize = totals.iter().sum();
+        debug_assert_eq!(
+            before, after,
+            "hot-key redistribution must conserve the message count"
+        );
+    }
+}
+
+/// Conserved per-run fault accounting.  Every offered message ends in
+/// exactly one bucket: `served_clean` (untouched by any fault), `delayed`
+/// (denied at least once, or served through a slowdown window), or
+/// `dropped` (permanently lost — zero in the closed-loop sim, where every
+/// denial retries).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultAccounting {
+    pub offered: u64,
+    pub served_clean: u64,
+    pub delayed: u64,
+    pub dropped: u64,
+    /// Produce attempts rejected by an active fault window (each retried;
+    /// an attempt is not a message, so this sits outside the identity).
+    pub denied_attempts: u64,
+}
+
+impl FaultAccounting {
+    /// The identity: `dropped + delayed + served_clean == offered`.
+    pub fn conserved(&self) -> bool {
+        self.dropped + self.delayed + self.served_clean == self.offered
+    }
+
+    /// `debug_assert!` the identity (call once the run has drained).
+    pub fn verify(&self) {
+        debug_assert!(
+            self.conserved(),
+            "fault accounting violated: dropped {} + delayed {} + served_clean {} != offered {}",
+            self.dropped,
+            self.delayed,
+            self.served_clean,
+            self.offered
+        );
+    }
+}
+
+/// One control-loop tick as seen by the recovery analyzer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoverySample {
+    pub t: f64,
+    pub offered_rate: f64,
+    pub served_rate: f64,
+    pub backlog: f64,
+}
+
+/// Per-fault recovery metrics, computed from a tick trajectory and the
+/// fault's active window `[start, end)` in loop time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryMetrics {
+    /// Seconds from fault start until served goodput visibly dips below
+    /// the pre-fault baseline (`f64::INFINITY` if the fault never bites).
+    pub time_to_detect: f64,
+    /// Seconds from fault clear until the backlog drains back to steady
+    /// state (`f64::INFINITY` if goodput is never restored).
+    pub time_to_restore: f64,
+    /// Integrated backlog (message-seconds) from fault start to restore —
+    /// the total delay debt the fault incurred.
+    pub backlog_area: f64,
+}
+
+impl RecoveryMetrics {
+    /// Whether goodput came back at all.
+    pub fn restored(&self) -> bool {
+        self.time_to_restore.is_finite()
+    }
+
+    /// Analyze one fault window against a per-tick trajectory (samples
+    /// must be in time order; uniform spacing is assumed for the area).
+    pub fn from_series(series: &[RecoverySample], start: f64, end: f64) -> Self {
+        let dt = if series.len() >= 2 {
+            (series[1].t - series[0].t).max(1e-9)
+        } else {
+            1.0
+        };
+        let pre: Vec<&RecoverySample> = series.iter().filter(|s| s.t < start).collect();
+        let baseline = if pre.is_empty() {
+            series.first().map_or(0.0, |s| s.served_rate)
+        } else {
+            pre.iter().map(|s| s.served_rate).sum::<f64>() / pre.len() as f64
+        };
+        let time_to_detect = series
+            .iter()
+            .filter(|s| s.t >= start)
+            .find(|s| s.served_rate < 0.9 * baseline)
+            .map_or(f64::INFINITY, |s| s.t - start);
+        let restore_at = series
+            .iter()
+            .filter(|s| s.t >= end)
+            .find(|s| s.backlog <= (0.05 * s.offered_rate).max(1.0))
+            .map(|s| s.t);
+        let time_to_restore = restore_at.map_or(f64::INFINITY, |t| t - end);
+        let horizon = restore_at.unwrap_or(f64::INFINITY);
+        let backlog_area = series
+            .iter()
+            .filter(|s| s.t >= start && s.t <= horizon)
+            .map(|s| s.backlog * dt)
+            .sum();
+        Self {
+            time_to_detect,
+            time_to_restore,
+            backlog_area,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_menu_is_stable() {
+        for id in FAULT_PRESET_IDS {
+            let plan = FaultPlan::preset_by_id(id);
+            assert_eq!(plan.id, id);
+            assert_eq!(plan.events.len(), 1);
+            let back = FaultPlan::parse(&plan.name).unwrap();
+            assert_eq!(back, plan, "name {} must round-trip", plan.name);
+        }
+        assert!(!FaultPlan::none().is_active());
+        assert_eq!(FaultPlan::parse("none").unwrap().id, 0);
+        assert_eq!(FaultPlan::parse("7").unwrap().id, 7);
+        assert!(FaultPlan::parse("no-such-fault").is_none());
+    }
+
+    #[test]
+    fn derived_plans_are_deterministic_and_well_formed() {
+        for id in [6u64, 99, 0xDEAD_BEEF, u64::MAX] {
+            let a = FaultPlan::derived(id);
+            let b = FaultPlan::derived(id);
+            assert_eq!(a, b);
+            assert!(a.is_active());
+            for ev in &a.events {
+                assert!(ev.start >= 0.0 && ev.end <= 1.0 && ev.start < ev.end);
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_under_fixed_seed() {
+        let plan = FaultPlan::preset_by_id(1);
+        let a = FaultSchedule::new(&plan, 42, 8);
+        let b = FaultSchedule::new(&plan, 42, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn deny_faults_always_leave_a_serving_shard() {
+        for id in [1u64, 5] {
+            let plan = FaultPlan::preset_by_id(id);
+            for p in 2..=16 {
+                let sched = FaultSchedule::new(&plan, 7, p);
+                let denied = sched.affected_shards(0).len();
+                assert!(denied >= 1 && denied < p, "p={p} denied={denied}");
+                let free = (0..p).filter(|s| sched.deny_delay(*s, 0.45).is_none());
+                assert!(free.count() >= 1);
+            }
+            // single shard: the fault degrades to a no-op, never a deadlock
+            let sched = FaultSchedule::new(&plan, 7, 1);
+            assert!(sched.deny_delay(0, 0.45).is_none());
+        }
+    }
+
+    #[test]
+    fn deny_windows_open_and_close() {
+        let plan = FaultPlan::preset_by_id(1); // window [0.3, 0.6)
+        let sched = FaultSchedule::new(&plan, 11, 4);
+        let dark = sched.affected_shards(0)[0];
+        assert!(sched.deny_delay(dark, 0.1).is_none(), "before the window");
+        assert!(sched.deny_delay(dark, 0.45).is_some(), "inside the window");
+        assert!(sched.deny_delay(dark, 0.7).is_none(), "after rejoin");
+    }
+
+    #[test]
+    fn service_multiplier_composes() {
+        let storm = FaultPlan::preset_by_id(2);
+        let sched = FaultSchedule::new(&storm, 3, 4);
+        assert_eq!(sched.service_multiplier(0, 0.1), 1.0);
+        assert!(sched.service_multiplier(0, 0.45) > 2.0, "storm slows all");
+        let strag = FaultPlan::preset_by_id(4);
+        let sched = FaultSchedule::new(&strag, 3, 4);
+        let slow = sched.affected_shards(0)[0];
+        let fast = (0..4).find(|s| !sched.affected_shards(0).contains(s)).unwrap();
+        assert!(sched.service_multiplier(slow, 0.45) >= 4.0);
+        assert_eq!(sched.service_multiplier(fast, 0.45), 1.0);
+    }
+
+    #[test]
+    fn hot_key_distribute_conserves_and_skews() {
+        let plan = FaultPlan::preset_by_id(3); // share 0.6
+        let sched = FaultSchedule::new(&plan, 21, 4);
+        let mut totals = vec![25usize; 4];
+        sched.distribute(&mut totals);
+        assert_eq!(totals.iter().sum::<usize>(), 100);
+        let hot = sched.affected_shards(0)[0];
+        assert_eq!(totals[hot], 60);
+        for (s, t) in totals.iter().enumerate() {
+            if s != hot {
+                assert!(*t >= 13 && *t <= 14, "cold shard {s} got {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn accounting_identity_holds() {
+        let ok = FaultAccounting {
+            offered: 10,
+            served_clean: 7,
+            delayed: 3,
+            dropped: 0,
+            denied_attempts: 5,
+        };
+        assert!(ok.conserved());
+        ok.verify();
+        let bad = FaultAccounting {
+            offered: 10,
+            served_clean: 7,
+            delayed: 2,
+            ..Default::default()
+        };
+        assert!(!bad.conserved());
+    }
+
+    #[test]
+    fn capacity_multiplier_shapes() {
+        assert!((FaultKind::SiteOutage { share: 0.5 }.capacity_multiplier(4) - 0.5).abs() < 1e-12);
+        assert!((FaultKind::ColdStorm { slowdown: 2.0 }.capacity_multiplier(4) - 0.5).abs() < 1e-12);
+        // hot key: adding lanes does not cool the key
+        let hk = FaultKind::HotKey { share: 0.5 };
+        assert!(hk.capacity_multiplier(2) >= hk.capacity_multiplier(8));
+        assert!(hk.capacity_multiplier(1) <= 1.0);
+        let st = FaultKind::Straggler { share: 0.5, factor: 4.0 };
+        assert!((st.capacity_multiplier(4) - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovery_metrics_from_a_synthetic_dip() {
+        // steady 100 msg/s; fault [10, 20) halves goodput; backlog grows
+        // then drains by t=25
+        let mut series = Vec::new();
+        let mut backlog = 0.0f64;
+        for t in 0..40 {
+            let tf = t as f64;
+            let served = if (10.0..20.0).contains(&tf) {
+                50.0
+            } else {
+                (100.0 + backlog).min(200.0) // spare capacity drains backlog
+            };
+            backlog = (backlog + 100.0 - served).max(0.0);
+            series.push(RecoverySample {
+                t: tf,
+                offered_rate: 100.0,
+                served_rate: served,
+                backlog,
+            });
+        }
+        let m = RecoveryMetrics::from_series(&series, 10.0, 20.0);
+        assert_eq!(m.time_to_detect, 0.0);
+        assert!(m.restored());
+        assert!(m.time_to_restore > 0.0 && m.time_to_restore < 15.0);
+        assert!(m.backlog_area > 0.0);
+        // a loop that never recovers
+        let flat: Vec<RecoverySample> = (0..40)
+            .map(|t| RecoverySample {
+                t: t as f64,
+                offered_rate: 100.0,
+                served_rate: 50.0,
+                backlog: 50.0 * t as f64,
+            })
+            .collect();
+        let never = RecoveryMetrics::from_series(&flat, 10.0, 20.0);
+        assert!(!never.restored());
+    }
+}

@@ -8,9 +8,14 @@ pub mod cohort;
 pub mod contention;
 pub mod dist;
 pub mod engine;
+pub mod faults;
 
 pub use clock::{Clock, SharedClock, SimClock, WallClock};
 pub use cohort::{Cohort, IdAlloc};
+pub use faults::{
+    FaultAccounting, FaultEvent, FaultKind, FaultPlan, FaultSchedule, RecoveryMetrics,
+    RecoverySample, FAULTS_PARAM, FAULT_PRESET_IDS,
+};
 
 pub use contention::{Bandwidth, ContentionParams, SharedResource};
 pub use dist::Dist;

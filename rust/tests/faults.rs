@@ -1,0 +1,263 @@
+//! The fault-scenario suite: the chaos axis end to end.  Per-fault-type
+//! conservation at every scale (`dropped + delayed + served_clean ==
+//! offered`), bit-determinism of fault schedules under a fixed seed,
+//! outage→rejoin goodput restoration, and a registry walk proving every
+//! streaming plugin survives every fault with its Throttle/push-back
+//! semantics intact.
+
+use pilot_streaming::engine::{CalibratedEngine, StepEngine};
+use pilot_streaming::insight::{
+    run_fixed, AutoscaleConfig, Autoscaler, ControlLoop, FaultyTarget, ModelTarget,
+    OnlineUslFitter, PilotTarget, Predictor, RecalibrateConfig,
+};
+use pilot_streaming::miniapp::{run_sim, LivePilot, PlatformKind, Scenario};
+use pilot_streaming::pilot::{default_registry, ResizeSemantics};
+use pilot_streaming::sim::{Dist, FaultPlan, FaultSchedule, FAULTS_PARAM, FAULT_PRESET_IDS};
+use pilot_streaming::usl::UslParams;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn engine() -> Arc<dyn StepEngine> {
+    let mut e = CalibratedEngine::new(11);
+    e.insert((64, 8), Dist::Const(0.05));
+    Arc::new(e)
+}
+
+fn scenario(partitions: usize, messages: usize, fault_id: u64) -> Scenario {
+    let mut sc = Scenario {
+        platform: PlatformKind::Lambda,
+        partitions,
+        points_per_message: 64,
+        centroids: 8,
+        messages,
+        ..Default::default()
+    };
+    if fault_id != 0 {
+        sc.set_extra(FAULTS_PARAM, fault_id);
+    }
+    sc
+}
+
+fn predictor(lambda: f64) -> Predictor {
+    Predictor {
+        params: UslParams::new(0.02, 0.0001, lambda),
+    }
+}
+
+/// The tentpole identity, at every scale: every preset fault, across
+/// partition counts and message counts, conserves the offered messages
+/// exactly — nothing is silently lost, and the run still processes every
+/// message it was offered.
+#[test]
+fn every_fault_type_conserves_accounting_at_every_scale() {
+    for id in FAULT_PRESET_IDS {
+        for partitions in [1usize, 2, 4, 8] {
+            for messages in [32usize, 96] {
+                let sc = scenario(partitions, messages, id);
+                let r = run_sim(&sc, engine()).unwrap();
+                let fa = r
+                    .faults
+                    .unwrap_or_else(|| panic!("fault id {id}: accounting must be reported"));
+                fa.verify();
+                assert!(
+                    fa.conserved(),
+                    "id {id} p={partitions} m={messages}: {fa:?} not conserved"
+                );
+                assert_eq!(
+                    fa.offered, messages as u64,
+                    "id {id} p={partitions} m={messages}: every message is offered"
+                );
+                assert_eq!(fa.dropped, 0, "the closed-loop sim never drops");
+                assert_eq!(
+                    r.summary.messages, messages,
+                    "id {id} p={partitions} m={messages}: every message still commits"
+                );
+            }
+        }
+    }
+    // fair weather reports no fault accounting at all
+    let r = run_sim(&scenario(4, 32, 0), engine()).unwrap();
+    assert!(r.faults.is_none());
+}
+
+/// Each fault shape leaves its signature in the accounting: deny-type
+/// faults reject produce attempts, slowdown-type faults taint served
+/// messages as delayed.
+#[test]
+fn fault_shapes_leave_their_accounting_signature() {
+    // site outage and partition deny and retry
+    for id in [1u64, 5] {
+        let r = run_sim(&scenario(4, 96, id), engine()).unwrap();
+        let fa = r.faults.unwrap();
+        assert!(fa.denied_attempts > 0, "id {id}: the window must deny");
+        assert!(fa.delayed > 0, "id {id}: denied messages land as delayed");
+        assert!(fa.served_clean > 0, "id {id}: shards outside the fault serve clean");
+    }
+    // cold storm slows every shard; stragglers slow a subset
+    for id in [2u64, 4] {
+        let r = run_sim(&scenario(4, 96, id), engine()).unwrap();
+        let fa = r.faults.unwrap();
+        assert_eq!(fa.denied_attempts, 0, "id {id}: slowdowns do not deny");
+        assert!(fa.delayed > 0, "id {id}: the window must slow someone");
+    }
+}
+
+/// Hot-key skew reroutes traffic: the hot shard ends up with its
+/// configured share of the run's messages (preset 3: 60%), visible in the
+/// per-partition trace counts.
+#[test]
+fn hot_key_skew_is_visible_in_the_partition_counts() {
+    let sc = scenario(4, 100, 3);
+    let r = run_sim(&sc, engine()).unwrap();
+    let mut per_shard: BTreeMap<usize, usize> = BTreeMap::new();
+    for t in r.trace.traces() {
+        *per_shard.entry(t.partition).or_default() += 1;
+    }
+    assert_eq!(per_shard.values().sum::<usize>(), 100);
+    let hot = *per_shard.values().max().unwrap();
+    let cold = *per_shard.values().min().unwrap();
+    assert_eq!(hot, 60, "the hot shard takes its 60% share");
+    assert!(cold >= 13, "cold shards split the remainder: {per_shard:?}");
+    // and the schedule itself knows which shard that was
+    let sched = FaultSchedule::new(&FaultPlan::preset_by_id(3), sc.seed, sc.partitions);
+    let hot_shard = sched.affected_shards(0)[0];
+    assert_eq!(per_shard[&hot_shard], 60);
+}
+
+/// Bit-determinism: the same seed yields a byte-identical fault schedule
+/// and a bit-identical faulted run, for every preset.
+#[test]
+fn faulted_runs_are_bit_deterministic_under_fixed_seed() {
+    for id in FAULT_PRESET_IDS {
+        let run = || {
+            let r = run_sim(&scenario(4, 64, id), engine()).unwrap();
+            (
+                r.summary.throughput.to_bits(),
+                r.summary.service.mean.to_bits(),
+                r.summary.window_seconds.to_bits(),
+                r.faults.unwrap(),
+                r.des_events,
+            )
+        };
+        assert_eq!(run(), run(), "fault id {id}: double-run must be identical");
+        let plan = FaultPlan::preset_by_id(id);
+        assert_eq!(
+            FaultSchedule::new(&plan, 42, 8),
+            FaultSchedule::new(&plan, 42, 8),
+            "fault id {id}: schedule must be seed-deterministic"
+        );
+    }
+}
+
+/// Outage → rejoin restores steady-state goodput: a fixed fleet with
+/// headroom dips during the window, then drains its backlog back to the
+/// pre-fault envelope.
+#[test]
+fn outage_then_rejoin_restores_steady_state_goodput() {
+    let trace = vec![50.0; 50];
+    let inner = ModelTarget::new(predictor(30.0), 4); // capacity well above 50
+    let mut target = FaultyTarget::new(inner, FaultPlan::preset_by_id(1), trace.len(), 1.0);
+    let report = run_fixed(&mut target, &trace, 1.0).unwrap();
+    let series = target.series();
+    let pre: f64 = series[..10].iter().map(|s| s.served_rate).sum::<f64>() / 10.0;
+    let post: f64 = series[45..].iter().map(|s| s.served_rate).sum::<f64>() / 5.0;
+    assert!(
+        (post - pre).abs() < 1e-6,
+        "steady-state goodput must come back: pre {pre} post {post}"
+    );
+    let metrics = target.recovery_report();
+    let (_, m) = metrics[0];
+    assert!(m.time_to_detect.is_finite(), "the outage must be visible");
+    assert!(m.restored(), "the backlog must drain after rejoin");
+    assert!(m.backlog_area > 0.0);
+    let final_backlog = report.ticks.last().unwrap().backlog;
+    assert!(final_backlog < 1.0, "no residual backlog: {final_backlog}");
+}
+
+/// Registry walk: every registered streaming platform closes the loop
+/// under every preset fault with conserved accounting, real progress, and
+/// its Throttle/push-back semantics intact (push-back samples appear
+/// exactly when the platform committed a Throttle plan — the fault
+/// wrapper must not forge or swallow push-back).
+#[test]
+fn every_streaming_plugin_survives_every_fault() {
+    let registry = default_registry();
+    let mut walked = 0;
+    for platform in registry.platforms() {
+        let Some(kind) = PlatformKind::parse(platform.name()) else {
+            continue; // bag-of-tasks pools don't stream
+        };
+        walked += 1;
+        for id in FAULT_PRESET_IDS {
+            let sc = Scenario {
+                platform: kind,
+                partitions: 2,
+                points_per_message: 64,
+                centroids: 8,
+                messages: 0,
+                ..Default::default()
+            };
+            let scaler = Autoscaler::new(
+                predictor(18.0),
+                AutoscaleConfig {
+                    max_parallelism: 64,
+                    ..Default::default()
+                },
+                2,
+            );
+            let inner = PilotTarget::new(LivePilot::provision(&sc, engine()).unwrap());
+            let trace = vec![300.0; 20];
+            let mut target =
+                FaultyTarget::new(inner, FaultPlan::preset_by_id(id), trace.len(), 1.0);
+            let report = ControlLoop::new(scaler, 1.0)
+                .with_recalibration(OnlineUslFitter::new(RecalibrateConfig::default()))
+                .run(&mut target, &trace)
+                .unwrap();
+            let final_backlog = report.ticks.last().unwrap().backlog;
+            assert!(
+                (report.offered_total
+                    - report.processed_total
+                    - report.throttled_total
+                    - final_backlog)
+                    .abs()
+                    < 1e-9,
+                "{platform} fault {id}: loop accounting must conserve"
+            );
+            assert!(
+                report.processed_total > 0.0,
+                "{platform} fault {id}: the loop must make progress"
+            );
+            let recal = report.recalibration.as_ref().expect("trace present");
+            let sampled: f64 = recal.samples.iter().map(|s| s.served_rate).sum();
+            assert!(
+                (sampled - report.processed_total).abs() < 1e-9,
+                "{platform} fault {id}: sample store must conserve accounting"
+            );
+            let clamped = report
+                .resizes
+                .iter()
+                .any(|r| r.plan.semantics == ResizeSemantics::Throttle);
+            assert_eq!(
+                recal.samples.iter().any(|s| s.pushback),
+                clamped,
+                "{platform} fault {id}: push-back marking must survive the fault wrapper"
+            );
+            target.into_inner().shutdown();
+        }
+    }
+    assert!(walked >= 6, "streaming platform set shrank: {walked}");
+}
+
+/// The fault axis changes the run id (campaign rows never collide) but a
+/// fair-weather plan leaves the scenario untouched.
+#[test]
+fn fault_axis_changes_the_run_key() {
+    let base = scenario(4, 64, 0);
+    let mut keys: Vec<u64> = vec![base.run_key()];
+    for id in FAULT_PRESET_IDS {
+        keys.push(scenario(4, 64, id).run_key());
+    }
+    keys.sort_unstable();
+    keys.dedup();
+    assert_eq!(keys.len(), 1 + FAULT_PRESET_IDS.len(), "distinct run ids per plan");
+}

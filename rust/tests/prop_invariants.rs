@@ -4,13 +4,14 @@
 //!
 //! Covered invariants: broker ordering/no-loss, event-source-mapping
 //! exactly-once accounting, USL fit equivariance, backoff bounds,
-//! histogram quantile monotonicity, native k-means conservation laws.
+//! histogram quantile monotonicity, native k-means conservation laws,
+//! and fault-plan conservation fuzzed across random fault schedules.
 
 use pilot_streaming::broker::{partition_for_key, Broker, KafkaTopic, Message};
 use pilot_streaming::kmeans::minibatch_step;
 use pilot_streaming::metrics::Histogram;
 use pilot_streaming::serverless::EventSourceMapping;
-use pilot_streaming::sim::SimClock;
+use pilot_streaming::sim::{FaultPlan, FaultSchedule, SimClock, FAULTS_PARAM};
 use pilot_streaming::usl::{fit, Obs, UslParams};
 use pilot_streaming::util::rng::Pcg32;
 use std::sync::Arc;
@@ -227,6 +228,73 @@ fn prop_kmeans_step_conservation_laws() {
                     &cen[j * d..(j + 1) * d],
                     "untouched centroid moved"
                 );
+            }
+        }
+    });
+}
+
+/// A random fault plan id (derived plans explore the whole kind/window
+/// space), random scale — conservation must hold for every schedule, and
+/// the same configuration twice must be bit-identical.
+#[test]
+fn prop_fault_conservation_fuzzed_across_random_schedules() {
+    use pilot_streaming::engine::{CalibratedEngine, StepEngine};
+    use pilot_streaming::miniapp::{run_sim, PlatformKind, Scenario};
+    use pilot_streaming::sim::Dist;
+    cases(15, |rng| {
+        let plan_id = 1 + rng.gen_range(10_000); // any nonzero id is a valid plan
+        let partitions = 1 + rng.gen_range(6) as usize;
+        let messages = partitions * (8 + rng.gen_range(24) as usize);
+        let mut sc = Scenario {
+            platform: PlatformKind::Lambda,
+            partitions,
+            points_per_message: 64,
+            centroids: 8,
+            messages,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        sc.set_extra(FAULTS_PARAM, plan_id);
+        let run = || {
+            let mut e = CalibratedEngine::new(11);
+            e.insert((64, 8), Dist::Const(0.05));
+            run_sim(&sc, Arc::new(e) as Arc<dyn StepEngine>).unwrap()
+        };
+        let r = run();
+        let fa = r.faults.expect("an active plan must report accounting");
+        fa.verify();
+        assert!(fa.conserved(), "plan {plan_id}: {fa:?}");
+        assert_eq!(fa.offered, messages as u64, "plan {plan_id}");
+        assert_eq!(fa.dropped, 0, "plan {plan_id}: the sim never drops");
+        assert_eq!(r.summary.messages, messages, "plan {plan_id}: all commit");
+        // double-run bit-determinism under the randomized configuration
+        let r2 = run();
+        assert_eq!(r.faults, r2.faults, "plan {plan_id}");
+        assert_eq!(
+            r.summary.throughput.to_bits(),
+            r2.summary.throughput.to_bits(),
+            "plan {plan_id}"
+        );
+    });
+}
+
+/// Hot-key redistribution conserves the message count for any share,
+/// shard count, and totals vector.
+#[test]
+fn prop_fault_distribute_conserves_message_count() {
+    cases(40, |rng| {
+        let plan_id = 1 + rng.gen_range(10_000);
+        let plan = FaultPlan::preset_by_id(plan_id);
+        let p = 1 + rng.gen_range(12) as usize;
+        let sched = FaultSchedule::new(&plan, rng.next_u64(), p);
+        let mut totals: Vec<usize> = (0..p).map(|_| p + rng.gen_range(64) as usize).collect();
+        let before: usize = totals.iter().sum();
+        sched.distribute(&mut totals);
+        assert_eq!(totals.iter().sum::<usize>(), before, "plan {plan_id} p={p}");
+        // deny-type events never cover every shard (no deadlock)
+        for (i, ev) in plan.events.iter().enumerate() {
+            if ev.kind.denies() && p > 1 {
+                assert!(sched.affected_shards(i).len() < p, "plan {plan_id} ev {i}");
             }
         }
     });

@@ -7,12 +7,12 @@
 
 use pilot_streaming::engine::{CalibratedEngine, StepEngine};
 use pilot_streaming::insight::{
-    run_fixed, trace_burst, AutoscaleConfig, Autoscaler, ControlLoop, OnlineUslFitter,
-    PilotTarget, Predictor, RecalibrateConfig,
+    run_fixed, trace_burst, AutoscaleConfig, Autoscaler, ControlLoop, FaultyTarget,
+    OnlineUslFitter, PilotTarget, Predictor, RecalibrateConfig,
 };
 use pilot_streaming::miniapp::{LivePilot, PlatformKind, Scenario};
 use pilot_streaming::pilot::{default_registry, Platform, ResizeSemantics};
-use pilot_streaming::sim::Dist;
+use pilot_streaming::sim::{Dist, FaultEvent, FaultPlan, RecoveryMetrics};
 use pilot_streaming::usl::UslParams;
 use std::sync::Arc;
 
@@ -67,6 +67,79 @@ fn run_loop(
     let report = control.run(&mut target, trace).unwrap();
     target.shutdown();
     report
+}
+
+/// [`run_loop`] with a fault plan wrapped around the live pilot; returns
+/// the report plus the per-fault recovery metrics.
+fn run_faulted_loop(
+    p: Predictor,
+    max: usize,
+    trace: &[f64],
+    fitter: Option<OnlineUslFitter>,
+    plan: FaultPlan,
+) -> (
+    pilot_streaming::insight::AutoscaleReport,
+    Vec<(FaultEvent, RecoveryMetrics)>,
+) {
+    let scaler = Autoscaler::new(p, config(max), 2);
+    let mut control = ControlLoop::new(scaler, 1.0);
+    if let Some(f) = fitter {
+        control = control.with_recalibration(f);
+    }
+    let inner = PilotTarget::new(
+        LivePilot::provision(&scenario(PlatformKind::Lambda), engine()).unwrap(),
+    );
+    let mut target = FaultyTarget::new(inner, plan, trace.len(), 1.0);
+    let report = control.run(&mut target, trace).unwrap();
+    let recovery = target.recovery_report();
+    target.into_inner().shutdown();
+    (report, recovery)
+}
+
+/// The recovery race: under a site outage, the recalibrated loop restores
+/// goodput within K ticks of the fault clearing, while the 3x-stale
+/// static fit never does — it believes N=3 covers the load, so its
+/// backlog grows without bound and the fault's damage is never repaid.
+#[test]
+fn recalibrated_loop_wins_the_recovery_race_after_an_outage() {
+    const K: f64 = 12.0; // ticks allowed between fault clear and restored goodput
+    let stale = predictor(0.02, 0.0001, TRUE_LANE_RATE * 3.0);
+    let trace = vec![120.0; 60]; // constant load: the fault is the only disturbance
+    let plan = FaultPlan::preset_by_id(1); // site outage over ticks [18, 36)
+    let (static_report, static_recovery) =
+        run_faulted_loop(stale.clone(), 16, &trace, None, plan.clone());
+    let (recal_report, recal_recovery) = run_faulted_loop(
+        stale,
+        16,
+        &trace,
+        Some(OnlineUslFitter::new(RecalibrateConfig::default())),
+        plan,
+    );
+    let (_, sm) = static_recovery[0];
+    let (_, rm) = recal_recovery[0];
+    assert!(
+        rm.restored() && rm.time_to_restore <= K,
+        "the recalibrated loop must restore goodput within {K} ticks of the clear: {rm:?}"
+    );
+    assert!(
+        !sm.restored(),
+        "the 3x-stale static fit keeps under-provisioning and never drains: {sm:?}"
+    );
+    assert!(
+        recal_report.goodput() > static_report.goodput(),
+        "recalibrated {} must beat static {} under the fault",
+        recal_report.goodput(),
+        static_report.goodput()
+    );
+    assert!(
+        !recal_report
+            .recalibration
+            .as_ref()
+            .unwrap()
+            .refits
+            .is_empty(),
+        "the degraded envelope must trigger re-fits"
+    );
 }
 
 /// The acceptance bar: `autoscale --live --recalibrate --platform lambda
