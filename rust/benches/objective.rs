@@ -1,0 +1,147 @@
+//! Multi-objective control-plane benchmark: the live closed loop on the
+//! same burst trace under three objectives — goodput-only, cost (hard
+//! dollars-per-hour budget), and SLO (p99 sojourn target) — with real
+//! Lambda GB-second pricing from the plugin registry.  The headline
+//! gate is goodput per dollar: the cost objective must beat the
+//! goodput-only loop on it (hard-asserted), because the affordable
+//! fleet serves more admitted messages per unit-hour than the burst
+//! fleet the unconstrained loop rents.
+//!
+//! Emits `BENCH_objective.json` (override the path with
+//! `PS_BENCH_OBJECTIVE_OUT`, or the directory for all benches with
+//! `PS_BENCH_DIR`; shrink the trace with `PS_BENCH_OBJECTIVE_INTERVALS`).
+//! Run: `cargo bench --bench objective`.
+
+#[path = "common.rs"]
+#[allow(dead_code)]
+mod common;
+
+use pilot_streaming::engine::{CalibratedEngine, StepEngine};
+use pilot_streaming::insight::{
+    platform_price, trace_burst, AutoscaleConfig, AutoscaleReport, Autoscaler, ControlLoop,
+    Objective, PilotTarget, Predictor,
+};
+use pilot_streaming::miniapp::{LivePilot, PlatformKind, Scenario};
+use pilot_streaming::sim::Dist;
+use pilot_streaming::usl::UslParams;
+use pilot_streaming::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn engine() -> Arc<dyn StepEngine> {
+    let mut e = CalibratedEngine::new(11);
+    e.insert((64, 8), Dist::Const(0.05));
+    Arc::new(e)
+}
+
+fn run_live(objective: Objective, trace: &[f64]) -> AutoscaleReport {
+    let scenario = Scenario {
+        platform: PlatformKind::Lambda,
+        partitions: 2,
+        points_per_message: 64,
+        centroids: 8,
+        ..Default::default()
+    };
+    let config = AutoscaleConfig {
+        max_parallelism: 16,
+        ..Default::default()
+    };
+    let predictor = Predictor {
+        params: UslParams::new(0.02, 0.0001, 18.0),
+    };
+    let scaler = Autoscaler::new(predictor, config, 2)
+        .with_objective(objective, platform_price(PlatformKind::Lambda));
+    let mut target = PilotTarget::new(LivePilot::provision(&scenario, engine()).expect("provision"));
+    let report = ControlLoop::new(scaler, 1.0)
+        .run(&mut target, trace)
+        .expect("live loop");
+    target.shutdown();
+    report
+}
+
+fn main() {
+    let intervals: usize = std::env::var("PS_BENCH_OBJECTIVE_INTERVALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120);
+    let budget = 1.0; // $/h: affords 5 of the 16-unit cap at Lambda list price
+    let p99 = 0.5; // seconds
+    let trace = trace_burst(intervals, 20.0, 200.0, intervals / 4);
+    eprintln!(
+        "[bench] objective: {} live control intervals, burst 20 -> 200 msg/s, budget ${budget}/h, p99 {p99}s",
+        intervals
+    );
+
+    let t0 = Instant::now();
+    let goodput = run_live(Objective::Goodput, &trace);
+    let cost = run_live(
+        Objective::Cost {
+            budget_per_hour: budget,
+        },
+        &trace,
+    );
+    let slo = run_live(Objective::Slo { p_latency_s: p99 }, &trace);
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let goodput_mpd = goodput.msgs_per_dollar().expect("priced loop");
+    let cost_mpd = cost.msgs_per_dollar().expect("priced loop");
+    assert!(
+        cost_mpd > goodput_mpd,
+        "the cost objective must beat goodput-only on goodput per dollar: {cost_mpd:.0} vs {goodput_mpd:.0}"
+    );
+    let hours = trace.len() as f64 / 3600.0;
+    assert!(
+        cost.dollars_total() <= budget * hours + 1e-9,
+        "cost loop overspent: ${:.6} of ${:.6}",
+        cost.dollars_total(),
+        budget * hours
+    );
+
+    println!(
+        "goodput-only: goodput {:.3}  ${:.4}  {:.0} msgs/$",
+        goodput.goodput(),
+        goodput.dollars_total(),
+        goodput_mpd
+    );
+    println!(
+        "cost (${budget}/h): goodput {:.3}  ${:.4}  {:.0} msgs/$",
+        cost.goodput(),
+        cost.dollars_total(),
+        cost_mpd
+    );
+    println!(
+        "slo ({p99}s p99): goodput {:.3}  attainment {:.3} (goodput-only attains {:.3})",
+        slo.goodput(),
+        slo.slo_attainment(p99),
+        goodput.slo_attainment(p99)
+    );
+    println!("[bench] three live loops in {wall_s:.1}s");
+
+    common::write_bench_json(
+        "PS_BENCH_OBJECTIVE_OUT",
+        "BENCH_objective.json",
+        &["cost_msgs_per_dollar", "goodput_msgs_per_dollar", "cost_goodput", "slo_attainment"],
+        vec![
+            ("intervals", Json::from(intervals)),
+            ("budget_per_hour", Json::from(budget)),
+            ("slo_p99_s", Json::from(p99)),
+            ("wall_seconds", Json::from(wall_s)),
+            ("goodput_goodput", Json::from(goodput.goodput())),
+            ("goodput_dollars", Json::from(goodput.dollars_total())),
+            ("goodput_msgs_per_dollar", Json::from(goodput_mpd)),
+            ("cost_goodput", Json::from(cost.goodput())),
+            ("cost_dollars", Json::from(cost.dollars_total())),
+            ("cost_msgs_per_dollar", Json::from(cost_mpd)),
+            (
+                "msgs_per_dollar_gain",
+                Json::from(cost_mpd / goodput_mpd - 1.0),
+            ),
+            ("slo_goodput", Json::from(slo.goodput())),
+            ("slo_attainment", Json::from(slo.slo_attainment(p99))),
+            (
+                "goodput_only_attainment",
+                Json::from(goodput.slo_attainment(p99)),
+            ),
+        ],
+    );
+}

@@ -5,7 +5,10 @@
 //! incoming data rate(s). This will also enable the determination of the
 //! amount of throttling of data sources to guarantee processing."
 
+use super::objective::{shape, CostLedger, CostedDecision, Objective, Shaped};
 use super::predict::Predictor;
+use crate::pilot::PriceModel;
+use crate::util::json::Json;
 use crate::util::stats::Ewma;
 
 /// Autoscaler decision for one control interval.
@@ -18,6 +21,76 @@ pub enum ScaleDecision {
     /// Even the optimal deployment cannot absorb the rate: throttle the
     /// source to `max_rate` while running at `parallelism`.
     Throttle { parallelism: usize, max_rate: f64 },
+}
+
+impl ScaleDecision {
+    /// The parallelism this decision steers the platform toward: `None`
+    /// for a hold (keep whatever is running), the destination for a
+    /// scale, the capped fleet for a throttle.  Every decision decoder —
+    /// both live targets, the chaos wrapper, the replay model — goes
+    /// through this one accessor.
+    pub fn target_parallelism(&self) -> Option<usize> {
+        match self {
+            Self::Hold { .. } => None,
+            Self::Scale { to, .. } => Some(*to),
+            Self::Throttle { parallelism, .. } => Some(*parallelism),
+        }
+    }
+
+    /// The canonical machine representation, round-trippable through
+    /// [`ScaleDecision::from_json`] (floats survive via Rust's
+    /// shortest-repr `Display`).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Self::Hold { parallelism } => Json::obj(vec![
+                ("kind", Json::Str("hold".into())),
+                ("parallelism", Json::Num(*parallelism as f64)),
+            ]),
+            Self::Scale { from, to } => Json::obj(vec![
+                ("kind", Json::Str("scale".into())),
+                ("from", Json::Num(*from as f64)),
+                ("to", Json::Num(*to as f64)),
+            ]),
+            Self::Throttle {
+                parallelism,
+                max_rate,
+            } => Json::obj(vec![
+                ("kind", Json::Str("throttle".into())),
+                ("parallelism", Json::Num(*parallelism as f64)),
+                ("max_rate", Json::Num(*max_rate)),
+            ]),
+        }
+    }
+
+    /// Parse the [`ScaleDecision::to_json`] representation.
+    pub fn from_json(json: &Json) -> Option<Self> {
+        match json.get("kind").as_str()? {
+            "hold" => Some(Self::Hold {
+                parallelism: json.get("parallelism").as_usize()?,
+            }),
+            "scale" => Some(Self::Scale {
+                from: json.get("from").as_usize()?,
+                to: json.get("to").as_usize()?,
+            }),
+            "throttle" => Some(Self::Throttle {
+                parallelism: json.get("parallelism").as_usize()?,
+                max_rate: json.get("max_rate").as_f64()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// The canonical human representation — what the CLI tick table, report
+/// summaries, and benches print.
+impl std::fmt::Display for ScaleDecision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Hold { .. } => write!(f, "hold"),
+            Self::Scale { from, to } => write!(f, "{from}->{to}"),
+            Self::Throttle { max_rate, .. } => write!(f, "throttle@{max_rate:.1}"),
+        }
+    }
 }
 
 /// Configuration of the predictive autoscaler.
@@ -46,7 +119,8 @@ impl Default for AutoscaleConfig {
 }
 
 /// The predictive autoscaler: feeds observed ingest rates into an EWMA,
-/// consults the USL predictor, and recommends scale/hold/throttle.
+/// consults the USL predictor, shapes the proposal under its
+/// [`Objective`], and recommends scale/hold/throttle.
 pub struct Autoscaler {
     predictor: Predictor,
     config: AutoscaleConfig,
@@ -54,6 +128,8 @@ pub struct Autoscaler {
     current: usize,
     decisions: u64,
     scale_events: u64,
+    objective: Objective,
+    price: PriceModel,
 }
 
 impl Autoscaler {
@@ -66,7 +142,26 @@ impl Autoscaler {
             current: initial_parallelism.max(1),
             decisions: 0,
             scale_events: 0,
+            objective: Objective::Goodput,
+            price: PriceModel::free(),
         }
+    }
+
+    /// Steer decisions by `objective`, pricing them with the platform's
+    /// declared model (builder leg; the default is goodput, unpriced —
+    /// the exact pre-objective behavior).
+    pub fn with_objective(mut self, objective: Objective, price: PriceModel) -> Self {
+        self.objective = objective;
+        self.price = price;
+        self
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    pub fn price(&self) -> PriceModel {
+        self.price
     }
 
     pub fn current_parallelism(&self) -> usize {
@@ -116,48 +211,83 @@ impl Autoscaler {
     }
 
     /// Feed one control-interval observation of the incoming rate (msg/s)
-    /// and get a decision.
+    /// and get a decision.  Equivalent to [`Autoscaler::observe_costed`]
+    /// with an unmetered ledger — under the default goodput objective
+    /// this is the exact pre-objective decision sequence.
     pub fn observe(&mut self, incoming_rate: f64) -> ScaleDecision {
+        self.observe_costed(incoming_rate, &CostLedger::unmetered())
+            .decision
+    }
+
+    /// Observe one interval under the configured objective, weighing the
+    /// proposal against the budget state in `ledger` (run-rate cap +
+    /// accrued transition allowance) before committing — the decision and
+    /// its price tag come back together as a [`CostedDecision`].
+    pub fn observe_costed(&mut self, incoming_rate: f64, ledger: &CostLedger) -> CostedDecision {
         self.decisions += 1;
         let smoothed = self.observe_rate(incoming_rate);
-        let target =
-            self.predictor
-                .required_parallelism(smoothed, self.config.headroom, self.config.max_parallelism);
-        match target {
-            None => {
-                // cap at the optimum and throttle the source
-                let best = self.predictor.optimal_parallelism(self.config.max_parallelism);
-                if best != self.current {
+        let goodput_target = self.predictor.required_parallelism(
+            smoothed,
+            self.config.headroom,
+            self.config.max_parallelism,
+        );
+        let shaping = shape(
+            self.objective,
+            &self.predictor,
+            &self.price,
+            ledger,
+            smoothed,
+            self.config.headroom,
+            self.config.max_parallelism,
+            self.current,
+        );
+        let from = self.current;
+        let decision = match shaping.shaped {
+            Shaped::Throttle { n, max_rate } => {
+                if n != self.current {
                     self.scale_events += 1;
-                    self.current = best;
+                    self.current = n;
                 }
                 ScaleDecision::Throttle {
-                    parallelism: best,
-                    max_rate: self.predictor.sustainable_rate(best, self.config.headroom),
+                    parallelism: n,
+                    max_rate,
                 }
             }
-            Some(n) if n == self.current => ScaleDecision::Hold {
-                parallelism: self.current,
-            },
-            Some(n) => {
-                // hysteresis: require a meaningful capacity delta
-                let cur_cap = self.predictor.throughput(self.current);
-                let new_cap = self.predictor.throughput(n);
-                let ratio = if new_cap > cur_cap {
-                    new_cap / cur_cap.max(1e-12)
-                } else {
-                    cur_cap / new_cap.max(1e-12)
-                };
-                if ratio < self.config.hysteresis {
-                    return ScaleDecision::Hold {
+            Shaped::Reach { n, urgent } => {
+                if n == self.current {
+                    ScaleDecision::Hold {
                         parallelism: self.current,
+                    }
+                } else {
+                    // hysteresis: require a meaningful capacity delta
+                    // (urgent SLO reaches skip it — a latency breach with
+                    // capacity available must not flap-guard itself)
+                    let cur_cap = self.predictor.throughput(self.current);
+                    let new_cap = self.predictor.throughput(n);
+                    let ratio = if new_cap > cur_cap {
+                        new_cap / cur_cap.max(1e-12)
+                    } else {
+                        cur_cap / new_cap.max(1e-12)
                     };
+                    if !urgent && ratio < self.config.hysteresis {
+                        ScaleDecision::Hold {
+                            parallelism: self.current,
+                        }
+                    } else {
+                        self.current = n;
+                        self.scale_events += 1;
+                        ScaleDecision::Scale { from, to: n }
+                    }
                 }
-                let from = self.current;
-                self.current = n;
-                self.scale_events += 1;
-                ScaleDecision::Scale { from, to: n }
             }
+        };
+        let committed = decision.target_parallelism().unwrap_or(from);
+        CostedDecision {
+            run_rate_dollars_per_hour: self.price.run_rate_dollars_per_hour(committed),
+            transition_dollars: self.price.transition_dollars(from, committed),
+            capped_by_budget: shaping.capped,
+            goodput_target,
+            decision,
         }
     }
 }
@@ -230,6 +360,88 @@ mod tests {
             }
             other => panic!("expected throttle, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn decision_display_and_json_round_trip() {
+        let decisions = [
+            ScaleDecision::Hold { parallelism: 3 },
+            ScaleDecision::Scale { from: 2, to: 7 },
+            ScaleDecision::Throttle {
+                parallelism: 4,
+                max_rate: 37.25,
+            },
+        ];
+        // the canonical strings the CLI/benches print
+        assert_eq!(decisions[0].to_string(), "hold");
+        assert_eq!(decisions[1].to_string(), "2->7");
+        assert_eq!(decisions[2].to_string(), "throttle@37.2");
+        // lossless machine representation
+        for d in &decisions {
+            let json = d.to_json().to_string();
+            let parsed = crate::util::json::parse(&json).unwrap();
+            assert_eq!(ScaleDecision::from_json(&parsed).as_ref(), Some(d), "{json}");
+        }
+        assert!(ScaleDecision::from_json(&crate::util::json::Json::Null).is_none());
+    }
+
+    #[test]
+    fn target_parallelism_decodes_every_variant() {
+        assert_eq!(
+            ScaleDecision::Hold { parallelism: 3 }.target_parallelism(),
+            None
+        );
+        assert_eq!(
+            ScaleDecision::Scale { from: 2, to: 7 }.target_parallelism(),
+            Some(7)
+        );
+        assert_eq!(
+            ScaleDecision::Throttle {
+                parallelism: 4,
+                max_rate: 1.0
+            }
+            .target_parallelism(),
+            Some(4)
+        );
+    }
+
+    #[test]
+    fn goodput_objective_is_the_default_and_changes_nothing() {
+        // observe() and observe_costed(unmetered) must agree decision for
+        // decision — the objective head is a no-op until opted into
+        let mut plain = autoscaler(0.02, 0.0001, 10.0, 1);
+        let mut costed = autoscaler(0.02, 0.0001, 10.0, 1);
+        assert_eq!(costed.objective(), super::Objective::Goodput);
+        for rate in [5.0, 50.0, 120.0, 80.0, 10.0, 10.0] {
+            let d = plain.observe(rate);
+            let c = costed.observe_costed(rate, &super::CostLedger::unmetered());
+            assert_eq!(d, c.decision);
+            // unpriced platform: every dollar figure is zero
+            assert_eq!(c.run_rate_dollars_per_hour, 0.0);
+            assert_eq!(c.transition_dollars, 0.0);
+            assert!(!c.capped_by_budget);
+        }
+        assert_eq!(plain.scale_events(), costed.scale_events());
+    }
+
+    #[test]
+    fn cost_objective_prices_committed_decisions() {
+        let price = crate::pilot::PriceModel::per_unit_hour(0.10, "unit-hour");
+        let mut a = autoscaler(0.02, 0.0001, 10.0, 1).with_objective(
+            super::Objective::Cost {
+                budget_per_hour: 0.50,
+            },
+            price,
+        );
+        let mut peak = 0;
+        for _ in 0..10 {
+            let c = a.observe_costed(100.0, &super::CostLedger::unmetered());
+            peak = peak.max(a.current_parallelism());
+            let run_fraction = crate::insight::objective::RUN_BUDGET_FRACTION;
+            assert!(c.run_rate_dollars_per_hour <= 0.50 * run_fraction + 1e-9);
+        }
+        // 0.9 * 0.50 / 0.10 affords 4 units; demand wanted far more
+        assert_eq!(peak, 4);
     }
 
     #[test]

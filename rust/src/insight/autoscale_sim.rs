@@ -10,8 +10,10 @@
 
 use super::autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
 use super::control::{ControlLoop, ModelTarget, ResizeEvent};
+use super::objective::Objective;
 use super::predict::Predictor;
 use super::recalibrate::RecalibrationTrace;
+use crate::pilot::PriceModel;
 use crate::util::rng::Pcg32;
 
 /// One control-interval record.
@@ -23,6 +25,10 @@ pub struct Tick {
     pub capacity: f64,
     pub backlog: f64,
     pub throttled: f64,
+    /// Estimated p99 sojourn this interval
+    /// ([`super::objective::estimate_p99_s`]): backlog drain + M/M/1
+    /// tail.  Infinite while the interval is overloaded.
+    pub est_p99_s: f64,
     pub decision: ScaleDecision,
 }
 
@@ -35,6 +41,10 @@ pub struct AutoscaleReport {
     pub throttled_total: f64,
     pub scale_events: u64,
     pub max_backlog: f64,
+    /// Run-rate dollars accrued over the run (0 on unpriced loops).
+    pub run_dollars: f64,
+    /// One-time scale-up transition dollars accrued over the run.
+    pub transition_dollars: f64,
     /// Committed live-resize transitions (empty for model replays, whose
     /// transitions are instantaneous).
     pub resizes: Vec<ResizeEvent>,
@@ -50,6 +60,29 @@ impl AutoscaleReport {
             return 1.0;
         }
         self.processed_total / self.offered_total
+    }
+
+    /// Total dollars the run moved (run-rate + transitions).
+    pub fn dollars_total(&self) -> f64 {
+        self.run_dollars + self.transition_dollars
+    }
+
+    /// Messages processed per dollar spent — the cost-normalized goodput
+    /// the objective comparison ranks loops by.  `None` on unpriced runs
+    /// (no denominator to normalize with).
+    pub fn msgs_per_dollar(&self) -> Option<f64> {
+        let d = self.dollars_total();
+        (d > 0.0).then(|| self.processed_total / d)
+    }
+
+    /// Fraction of intervals whose estimated p99 sojourn met `p99_s`
+    /// (1.0 on empty runs) — the SLO-attainment column.
+    pub fn slo_attainment(&self, p99_s: f64) -> f64 {
+        if self.ticks.is_empty() {
+            return 1.0;
+        }
+        let met = self.ticks.iter().filter(|t| t.est_p99_s <= p99_s).count();
+        met as f64 / self.ticks.len() as f64
     }
 }
 
@@ -88,6 +121,27 @@ pub fn replay(
     initial_parallelism: usize,
 ) -> AutoscaleReport {
     let scaler = Autoscaler::new(predictor.clone(), config, initial_parallelism);
+    let mut target = ModelTarget::new(predictor, initial_parallelism);
+    ControlLoop::new(scaler, dt)
+        .run(&mut target, trace)
+        .expect("the model target cannot fail")
+}
+
+/// [`replay`] under an [`Objective`] with the platform's [`PriceModel`]:
+/// the same model-target loop, with decisions shaped by the objective
+/// and every dollar accounted.  `replay` is this with
+/// `(Objective::Goodput, PriceModel::free())`.
+pub fn replay_objective(
+    predictor: Predictor,
+    config: AutoscaleConfig,
+    objective: Objective,
+    price: PriceModel,
+    trace: &[f64],
+    dt: f64,
+    initial_parallelism: usize,
+) -> AutoscaleReport {
+    let scaler = Autoscaler::new(predictor.clone(), config, initial_parallelism)
+        .with_objective(objective, price);
     let mut target = ModelTarget::new(predictor, initial_parallelism);
     ControlLoop::new(scaler, dt)
         .run(&mut target, trace)

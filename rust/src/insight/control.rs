@@ -48,10 +48,13 @@
 
 use super::autoscale::{Autoscaler, ScaleDecision};
 use super::autoscale_sim::{AutoscaleReport, Tick};
+use super::objective::{
+    estimate_p99_s, CostLedger, RUN_BUDGET_FRACTION, TRANSITION_BUDGET_FRACTION,
+};
 use super::predict::Predictor;
 use super::recalibrate::{OnlineUslFitter, UslSample};
 use crate::miniapp::LivePilot;
-use crate::pilot::{ResizePlan, ResizeSemantics};
+use crate::pilot::{PriceModel, ResizePlan, ResizeSemantics};
 
 /// One committed live-resize transition, stamped with its loop time.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -126,12 +129,10 @@ impl ScalingTarget for ModelTarget {
     }
 
     fn actuate(&mut self, decision: &ScaleDecision) -> Result<Option<ResizePlan>, String> {
-        self.parallelism = match decision {
-            ScaleDecision::Hold { parallelism } => *parallelism,
-            ScaleDecision::Scale { to, .. } => *to,
-            ScaleDecision::Throttle { parallelism, .. } => *parallelism,
+        // a Hold targets nothing, so the model keeps its parallelism
+        if let Some(n) = decision.target_parallelism() {
+            self.parallelism = n.max(1);
         }
-        .max(1);
         Ok(None)
     }
 
@@ -187,10 +188,8 @@ impl ScalingTarget for PilotTarget {
     }
 
     fn actuate(&mut self, decision: &ScaleDecision) -> Result<Option<ResizePlan>, String> {
-        let want = match decision {
-            ScaleDecision::Hold { .. } => return Ok(None),
-            ScaleDecision::Scale { to, .. } => *to,
-            ScaleDecision::Throttle { parallelism, .. } => *parallelism,
+        let Some(want) = decision.target_parallelism() else {
+            return Ok(None); // a hold actuates nothing
         };
         if self.pilot.is_resizing() {
             return Ok(None); // one transition at a time
@@ -223,7 +222,9 @@ impl ScalingTarget for PilotTarget {
 }
 
 /// The per-tick conservation arithmetic shared by [`ControlLoop::run`]
-/// and [`run_fixed`]: offered = processed + throttled + backlog, always.
+/// and [`run_fixed`]: offered = processed + throttled + backlog, always —
+/// plus the exact dollar ledger (run-rate per interval at the *realized*
+/// parallelism, transitions per committed scale-up).
 struct LoopAccounting {
     backlog: f64,
     ticks: Vec<Tick>,
@@ -231,10 +232,16 @@ struct LoopAccounting {
     processed_total: f64,
     throttled_total: f64,
     max_backlog: f64,
+    price: PriceModel,
+    /// The hard dollars-per-hour bound a cost-objective loop
+    /// ([`super::objective::Objective::Cost`]) runs under; every tick
+    /// `debug_assert`s cumulative spend against it.
+    budget_per_hour: Option<f64>,
+    ledger: CostLedger,
 }
 
 impl LoopAccounting {
-    fn new(intervals: usize) -> Self {
+    fn new(intervals: usize, price: PriceModel, budget_per_hour: Option<f64>) -> Self {
         Self {
             backlog: 0.0,
             ticks: Vec::with_capacity(intervals),
@@ -242,7 +249,17 @@ impl LoopAccounting {
             processed_total: 0.0,
             throttled_total: 0.0,
             max_backlog: 0.0,
+            price,
+            budget_per_hour,
+            ledger: CostLedger::new(),
         }
+    }
+
+    /// Accrue the one-time charge for a realized parallelism move (the
+    /// loop calls this with the pre/post-actuation parallelism; scale-
+    /// downs are free by construction).
+    fn charge_transition(&mut self, from: usize, to: usize) {
+        self.ledger.charge_transition(&self.price, from, to);
     }
 
     /// Admit one interval's load (throttled to `admitted_rate`), serve it
@@ -266,16 +283,52 @@ impl LoopAccounting {
         self.processed_total += served;
         self.throttled_total += offered - admitted;
         self.max_backlog = self.max_backlog.max(self.backlog);
+        let parallelism = target.parallelism();
+        let capacity = target.capacity();
+        self.ledger.charge_interval(&self.price, parallelism, dt);
+        self.assert_within_budget(parallelism);
         self.ticks.push(Tick {
             t,
             offered_rate: rate,
-            parallelism: target.parallelism(),
-            capacity: target.capacity(),
+            parallelism,
+            capacity,
             backlog: self.backlog,
             throttled: offered - admitted,
+            est_p99_s: estimate_p99_s(self.backlog, admitted_rate.min(rate), capacity),
             decision,
         });
         Ok((served, demand))
+    }
+
+    /// The cost objective's contract, kept executable: at every tick the
+    /// run-rate leg stays within [`RUN_BUDGET_FRACTION`] of the budget
+    /// (floored at one unit — parallelism cannot go below 1, so a budget
+    /// under one unit's run-rate degenerates to N=1) and the transition
+    /// leg within its accrued [`TRANSITION_BUDGET_FRACTION`] allowance.
+    /// Together: cumulative spend <= `budget * elapsed_hours` whenever
+    /// the budget covers the N=1 floor.
+    fn assert_within_budget(&self, _parallelism: usize) {
+        #[cfg(debug_assertions)]
+        if let Some(budget) = self.budget_per_hour {
+            let hours = self.ledger.elapsed_s / 3600.0;
+            let run_cap = (RUN_BUDGET_FRACTION * budget)
+                .max(self.price.run_rate_dollars_per_hour(1));
+            debug_assert!(
+                self.ledger.run_dollars <= run_cap * hours + 1e-9,
+                "run spend {} exceeds {} $/h over {} h (N={_parallelism})",
+                self.ledger.run_dollars,
+                run_cap,
+                hours
+            );
+            debug_assert!(
+                self.ledger.transition_dollars
+                    <= TRANSITION_BUDGET_FRACTION * budget * hours + 1e-9,
+                "transition spend {} exceeds its {} $/h allowance over {} h",
+                self.ledger.transition_dollars,
+                TRANSITION_BUDGET_FRACTION * budget,
+                hours
+            );
+        }
     }
 
     fn finish(self, scale_events: u64, resizes: Vec<ResizeEvent>) -> AutoscaleReport {
@@ -286,6 +339,8 @@ impl LoopAccounting {
             throttled_total: self.throttled_total,
             scale_events,
             max_backlog: self.max_backlog,
+            run_dollars: self.ledger.run_dollars,
+            transition_dollars: self.ledger.transition_dollars,
             resizes,
             recalibration: None,
         }
@@ -335,7 +390,9 @@ impl ControlLoop {
         trace: &[f64],
     ) -> Result<AutoscaleReport, String> {
         let dt = self.dt;
-        let mut acct = LoopAccounting::new(trace.len());
+        let price = self.autoscaler.price();
+        let budget = self.autoscaler.objective().budget_per_hour();
+        let mut acct = LoopAccounting::new(trace.len(), price, budget);
         let mut resizes = Vec::new();
         for (i, &rate) in trace.iter().enumerate() {
             let t = i as f64 * dt;
@@ -349,8 +406,12 @@ impl ControlLoop {
                     parallelism: target.parallelism(),
                 }
             } else {
-                self.autoscaler.observe(rate)
+                // the objective weighs the proposal against the ledger's
+                // budget state (run-rate cap + accrued transition
+                // allowance) before committing
+                self.autoscaler.observe_costed(rate, &acct.ledger).decision
             };
+            let before_actuation = target.parallelism();
             let mut resized_this_tick = false;
             if let Some(plan) = target.actuate(&decision)? {
                 // a clamped plan teaches the autoscaler the platform's
@@ -370,6 +431,10 @@ impl ControlLoop {
             if parallelism != self.autoscaler.current_parallelism() {
                 self.autoscaler.set_parallelism(parallelism);
             }
+            // transitions are charged on the *realized* move — what the
+            // platform actually committed, clamps included, not what the
+            // decision asked for (scale-downs are free by construction)
+            acct.charge_transition(before_actuation, parallelism);
             let admitted_rate = match &decision {
                 ScaleDecision::Throttle { max_rate, .. } => rate.min(*max_rate),
                 _ => rate,
@@ -407,8 +472,19 @@ pub fn run_fixed(
     trace: &[f64],
     dt: f64,
 ) -> Result<AutoscaleReport, String> {
+    run_fixed_priced(target, trace, dt, PriceModel::free())
+}
+
+/// [`run_fixed`] with the platform's [`PriceModel`], so a fixed-fleet
+/// baseline carries comparable dollar columns in objective comparisons.
+pub fn run_fixed_priced(
+    target: &mut dyn ScalingTarget,
+    trace: &[f64],
+    dt: f64,
+    price: PriceModel,
+) -> Result<AutoscaleReport, String> {
     assert!(dt > 0.0, "control interval must be positive");
-    let mut acct = LoopAccounting::new(trace.len());
+    let mut acct = LoopAccounting::new(trace.len(), price, None);
     for (i, &rate) in trace.iter().enumerate() {
         let hold = ScaleDecision::Hold {
             parallelism: target.parallelism(),

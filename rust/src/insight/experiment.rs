@@ -38,6 +38,14 @@ pub const AXIS_WORKFLOW: &str = "workflow";
 ///
 /// [`FaultPlan`]: crate::sim::faults::FaultPlan
 pub const AXIS_FAULTS: &str = crate::sim::faults::FAULTS_PARAM;
+/// Price axis: each level is an integer *percent of list price* (100 =
+/// the plugin's declared [`PriceModel`](crate::pilot::PriceModel), 50 =
+/// half price / spot, 200 = peak surcharge).  A non-canonical name, so
+/// it rides `Scenario::extra` with zero engine edits — the sim is
+/// price-blind; [`cost_rows`](super::objective::cost_rows) reads the
+/// level back out of the [`GroupKey`](super::sweep::GroupKey) to price
+/// each fitted USL curve and mark the goodput-vs-$/msg Pareto front.
+pub const AXIS_PRICE: &str = "price";
 
 /// One typed level of an [`Axis`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -294,6 +302,25 @@ impl ExperimentSpec {
         spec.set_ints(AXIS_CENTROIDS, [16]);
         spec.set_ints(AXIS_MEMORY_MB, [3_008]);
         spec.set_ints(AXIS_PARTITIONS, [1, 2, 4]);
+        spec
+    }
+
+    /// The cost grid: the tiny-grid workload swept over price levels
+    /// ([`AXIS_PRICE`], percent of list price), so every (platform,
+    /// price) pair yields its own USL fit and the analysis can report
+    /// the goodput-vs-$/msg Pareto front across pricing regimes.
+    pub fn cost_grid(messages: usize, seed: u64) -> Self {
+        let mut spec = Self::new("cost-grid", messages, seed);
+        spec.lustre = ContentionParams::new(
+            crate::pilot::plugins::hpc::DEFAULT_LUSTRE_ALPHA,
+            crate::pilot::plugins::hpc::DEFAULT_LUSTRE_BETA,
+        );
+        spec.set_platforms(&[PlatformKind::Lambda, PlatformKind::DaskWrangler]);
+        spec.set_ints(AXIS_MESSAGE_SIZE, [256]);
+        spec.set_ints(AXIS_CENTROIDS, [16]);
+        spec.set_ints(AXIS_MEMORY_MB, [3_008]);
+        spec.set_ints(AXIS_PRICE, [50, 100, 200]);
+        spec.set_ints(AXIS_PARTITIONS, [1, 2, 4, 8]);
         spec
     }
 
@@ -568,6 +595,24 @@ mod tests {
         let before = keys.len();
         keys.dedup();
         assert_eq!(before, keys.len(), "fault levels must derive distinct run keys");
+    }
+
+    #[test]
+    fn price_axis_composes_with_any_grid() {
+        // the price axis is just another extra-param axis: no engine edits
+        let spec = ExperimentSpec::cost_grid(8, 3);
+        assert_eq!(spec.size(), 48); // 2 platforms x 3 price levels x 4 partitions
+        let mut keys = Vec::new();
+        for sc in spec.scenarios() {
+            let pct = sc.extra_param(AXIS_PRICE).unwrap();
+            assert!(matches!(pct, 50 | 100 | 200));
+            assert_eq!(axis_value_of(&sc, AXIS_PRICE), Some(AxisValue::Int(pct)));
+            keys.push(sc.run_key());
+        }
+        keys.sort_unstable();
+        let before = keys.len();
+        keys.dedup();
+        assert_eq!(before, keys.len(), "price levels must derive distinct run keys");
     }
 
     #[test]

@@ -62,6 +62,24 @@
 //! `autoscale --live --recalibrate` reports the recalibrated loop against
 //! the static-fit loop side by side.
 //!
+//! # Objectives & pricing: goodput per dollar under a latency SLO
+//!
+//! Every platform plugin declares a [`PriceModel`](crate::pilot::PriceModel)
+//! next to its transition times, and the [`objective`] module gives the
+//! loop a multi-objective head: [`Objective::Cost`] maximizes goodput
+//! under a hard dollars-per-hour budget (run-rate capped, scale-up
+//! transitions drawn from an accrued allowance — a re-fit's
+//! recommendation is weighed against transition *and* run-rate cost
+//! before committing), [`Objective::Slo`] holds an estimated p99 sojourn
+//! target whenever the fit says capacity exists, and
+//! [`Objective::Goodput`] (the default) reproduces the pre-objective
+//! loop bit for bit.  `autoscale --objective cost|slo|goodput` compares
+//! the shaped loop against the goodput-only loop with dollar totals and
+//! SLO-attainment columns; a `price` axis ([`AXIS_PRICE`]) rides
+//! `Scenario::extra` through the campaign engine so `sweep --grid cost`
+//! fits USL curves per price point and [`cost_rows`]/[`pareto_csv`]
+//! report the goodput-vs-$/msg Pareto front.
+//!
 //! # Workflow graphs: per-stage fits composed along the critical path
 //!
 //! The [`workflow`] module models whole DAG campaigns
@@ -83,6 +101,7 @@ pub mod config;
 pub mod control;
 pub mod experiment;
 pub mod figures;
+pub mod objective;
 pub mod predict;
 pub mod recalibrate;
 pub mod sweep;
@@ -91,15 +110,22 @@ pub mod workflow;
 
 pub use analysis::{analyze, table, AnalysisRow, IncrementalAnalysis};
 pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
-pub use autoscale_sim::{replay, trace_burst, trace_diurnal, AutoscaleReport};
+pub use autoscale_sim::{
+    replay, replay_objective, trace_burst, trace_diurnal, AutoscaleReport,
+};
 pub use chaos::FaultyTarget;
 pub use config::{spec_from_file, spec_from_toml};
 pub use control::{
-    run_fixed, ControlLoop, ModelTarget, PilotTarget, ResizeEvent, ScalingTarget,
+    run_fixed, run_fixed_priced, ControlLoop, ModelTarget, PilotTarget, ResizeEvent,
+    ScalingTarget,
 };
 pub use experiment::{
     axis_value_of, Axis, AxisValue, ExperimentSpec, AXIS_CENTROIDS, AXIS_FAULTS,
-    AXIS_MEMORY_MB, AXIS_MESSAGE_SIZE, AXIS_PARTITIONS, AXIS_PLATFORM, AXIS_WORKFLOW,
+    AXIS_MEMORY_MB, AXIS_MESSAGE_SIZE, AXIS_PARTITIONS, AXIS_PLATFORM, AXIS_PRICE,
+    AXIS_WORKFLOW,
+};
+pub use objective::{
+    cost_rows, pareto_csv, platform_price, CostLedger, CostedDecision, CostedRow, Objective,
 };
 pub use predict::Predictor;
 pub use recalibrate::{

@@ -1,0 +1,622 @@
+//! Multi-objective scaling: goodput per dollar under a latency SLO.
+//!
+//! The paper's EILC motivation is *resource selection* — serverless vs
+//! HPC vs edge is ultimately a cost/latency trade, not a throughput race
+//! (PAPERS.md: Malawski & Balis' serverless-for-scientific-applications
+//! cost analyses).  This module gives the control plane that head:
+//!
+//! - [`Objective`] names what the loop optimizes: raw [`Objective::Goodput`]
+//!   (the PR 3/5 behavior, still the default), [`Objective::Cost`] (maximize
+//!   goodput subject to a hard dollars-per-hour budget), or
+//!   [`Objective::Slo`] (hold an estimated p99 sojourn target whenever the
+//!   USL fit says capacity exists).
+//! - [`CostLedger`] is the loop's exact dollar accounting: run-rate charged
+//!   per interval at the realized parallelism, transitions charged per
+//!   committed scale-up, both from the platform's declared
+//!   [`PriceModel`](crate::pilot::PriceModel).
+//! - [`CostedDecision`] is what [`Autoscaler::observe_costed`]
+//!   (crate::insight::Autoscaler::observe_costed) returns: the committed
+//!   [`ScaleDecision`] plus the dollars it moves and whether the objective
+//!   capped a goodput-wanted scale-up — the carried PR 5 follow-on, where a
+//!   re-fit's recommendation is weighed against transition *and* run-rate
+//!   cost before committing.
+//!
+//! The campaign side reuses ARCHITECTURE seam 3: a `price` axis (integer
+//! percent of list price) rides `Scenario::extra` with zero engine edits,
+//! and [`cost_rows`]/[`pareto_csv`] turn any priced sweep into a goodput
+//! vs $/msg Pareto front.
+
+use super::autoscale::ScaleDecision;
+use super::predict::Predictor;
+use super::sweep::SweepRow;
+use crate::miniapp::PlatformKind;
+use crate::pilot::{default_registry, PriceModel};
+
+/// `-ln(0.01)`: the p99 tail factor of an exponential sojourn
+/// distribution.  With smoothed arrival rate λ and service capacity C
+/// (both msg/s), the M/M/1 sojourn p99 is `ln(100) / (C - λ)`; clearing
+/// an existing backlog adds `backlog / C` in front of it.
+pub const P99_TAIL_FACTOR: f64 = 4.605_170_185_988_091;
+
+/// Fraction of a [`Objective::Cost`] budget reserved for run-rate spend.
+pub const RUN_BUDGET_FRACTION: f64 = 0.9;
+/// Fraction reserved for transition spend — `RUN + TRANSITION == 1`, so
+/// the two caps together bound cumulative spend by `budget * elapsed_h`
+/// at every tick (the `debug_assert` in the control loop).
+pub const TRANSITION_BUDGET_FRACTION: f64 = 1.0 - RUN_BUDGET_FRACTION;
+
+/// What the autoscaler optimizes.  [`Objective::Goodput`] reproduces the
+/// pre-objective loop bit for bit; the other two reshape its proposals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Track demand at minimum sufficient parallelism (the default).
+    Goodput,
+    /// Maximize goodput subject to a hard budget in dollars per hour:
+    /// run-rate is capped at [`RUN_BUDGET_FRACTION`] of the budget and
+    /// scale-up transitions draw from the remaining
+    /// [`TRANSITION_BUDGET_FRACTION`], accrued over elapsed time.
+    Cost { budget_per_hour: f64 },
+    /// Hold estimated p99 sojourn at or below `p_latency_s` whenever the
+    /// fit says capacity exists, bypassing scale-up hysteresis to get
+    /// there; when no parallelism reaches the target, throttle admission
+    /// to the rate the optimum *can* serve within the SLO.
+    Slo { p_latency_s: f64 },
+}
+
+impl Objective {
+    /// Parse the CLI surface: `--objective goodput|cost|slo` with
+    /// `--budget` (dollars/hour) and `--slo-p99` (seconds) riders.
+    pub fn parse(name: &str, budget_per_hour: f64, slo_p99_s: f64) -> Result<Self, String> {
+        match name.to_ascii_lowercase().as_str() {
+            "goodput" => Ok(Self::Goodput),
+            "cost" => {
+                if budget_per_hour > 0.0 {
+                    Ok(Self::Cost { budget_per_hour })
+                } else {
+                    Err("--objective cost needs --budget <dollars/hour> > 0".into())
+                }
+            }
+            "slo" => {
+                if slo_p99_s > 0.0 {
+                    Ok(Self::Slo {
+                        p_latency_s: slo_p99_s,
+                    })
+                } else {
+                    Err("--objective slo needs --slo-p99 <seconds> > 0".into())
+                }
+            }
+            other => Err(format!(
+                "unknown objective {other:?} (expected goodput, cost, or slo)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Goodput => "goodput",
+            Self::Cost { .. } => "cost",
+            Self::Slo { .. } => "slo",
+        }
+    }
+
+    /// The budget rider, when this is a cost objective.
+    pub fn budget_per_hour(&self) -> Option<f64> {
+        match self {
+            Self::Cost { budget_per_hour } => Some(*budget_per_hour),
+            _ => None,
+        }
+    }
+
+    /// The p99 target, when this is an SLO objective.
+    pub fn slo_p99(&self) -> Option<f64> {
+        match self {
+            Self::Slo { p_latency_s } => Some(*p_latency_s),
+            _ => None,
+        }
+    }
+}
+
+/// Exact dollar accounting for one control-loop run.  The loop owns one;
+/// the autoscaler reads it when gating transitions against the budget.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CostLedger {
+    /// Wall seconds accounted so far.
+    pub elapsed_s: f64,
+    /// Dollars accrued keeping units running.
+    pub run_dollars: f64,
+    /// Dollars accrued on committed scale-up transitions.
+    pub transition_dollars: f64,
+}
+
+impl CostLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A ledger that never constrains anything: infinite elapsed time
+    /// means every accrued budget allowance is already infinite.  This is
+    /// what plain `observe` hands the objective, so unmetered callers
+    /// keep the exact pre-objective decision sequence.
+    pub fn unmetered() -> Self {
+        Self {
+            elapsed_s: f64::INFINITY,
+            run_dollars: 0.0,
+            transition_dollars: 0.0,
+        }
+    }
+
+    pub fn total_dollars(&self) -> f64 {
+        self.run_dollars + self.transition_dollars
+    }
+
+    /// Accrue one interval of run-rate spend at `parallelism` units.
+    pub fn charge_interval(&mut self, price: &PriceModel, parallelism: usize, dt_s: f64) {
+        self.run_dollars += price.interval_dollars(parallelism, dt_s);
+        self.elapsed_s += dt_s;
+    }
+
+    /// Accrue the one-time charge for a realized `from -> to` move
+    /// (scale-downs are free by [`PriceModel::transition_dollars`]).
+    pub fn charge_transition(&mut self, price: &PriceModel, from: usize, to: usize) -> f64 {
+        let d = price.transition_dollars(from, to);
+        self.transition_dollars += d;
+        d
+    }
+}
+
+/// A [`ScaleDecision`] with its price tag: what the committed decision
+/// costs to run, what the transition moves, and whether the objective
+/// overrode the goodput-only recommendation to stay within budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostedDecision {
+    /// The committed decision (identical to what `observe` returns).
+    pub decision: ScaleDecision,
+    /// Parallelism the goodput-only policy wanted this interval (`None`
+    /// when even the optimum cannot absorb the smoothed rate).
+    pub goodput_target: Option<usize>,
+    /// Run-rate in dollars/hour at the committed parallelism.
+    pub run_rate_dollars_per_hour: f64,
+    /// One-time dollars this decision's scale-up moves (0 for holds,
+    /// scale-downs, and unpriced platforms).
+    pub transition_dollars: f64,
+    /// True when the objective reduced or deferred a wanted scale-up
+    /// (budget cap or transition-allowance gate).
+    pub capped_by_budget: bool,
+}
+
+/// The objective's reshaped proposal, before hysteresis/commit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum Shaped {
+    /// Track toward `n`; `urgent` bypasses scale-up hysteresis (SLO
+    /// breach with capacity available).
+    Reach { n: usize, urgent: bool },
+    /// Run at `n` and throttle admission to `max_rate`.
+    Throttle { n: usize, max_rate: f64 },
+}
+
+pub(crate) struct Shaping {
+    pub(crate) shaped: Shaped,
+    /// A goodput-wanted scale-up was reduced or deferred by the budget.
+    pub(crate) capped: bool,
+}
+
+/// Reshape the goodput proposal under `objective`.  Pure: all state the
+/// decision needs arrives as arguments, which keeps double runs
+/// bit-identical.
+pub(crate) fn shape(
+    objective: Objective,
+    predictor: &Predictor,
+    price: &PriceModel,
+    ledger: &CostLedger,
+    smoothed: f64,
+    headroom: f64,
+    max_parallelism: usize,
+    current: usize,
+) -> Shaping {
+    let goal = predictor.required_parallelism(smoothed, headroom, max_parallelism);
+    match objective {
+        Objective::Goodput => Shaping {
+            shaped: match goal {
+                Some(n) => Shaped::Reach { n, urgent: false },
+                None => {
+                    let best = predictor.optimal_parallelism(max_parallelism);
+                    Shaped::Throttle {
+                        n: best,
+                        max_rate: predictor.sustainable_rate(best, headroom),
+                    }
+                }
+            },
+            capped: false,
+        },
+        Objective::Cost { budget_per_hour } => {
+            let wanted = goal.unwrap_or_else(|| predictor.optimal_parallelism(max_parallelism));
+            // Run-rate cap: the largest fleet whose $/h fits the run
+            // fraction of the budget.  A budget below one unit's run-rate
+            // is infeasible (parallelism floors at 1) and degenerates to
+            // N=1 — the loop's debug_assert bounds spend accordingly.
+            let affordable = if price.unit_dollars_per_hour > 0.0 {
+                ((RUN_BUDGET_FRACTION * budget_per_hour / price.unit_dollars_per_hour).floor()
+                    as usize)
+                    .max(1)
+            } else {
+                max_parallelism
+            };
+            let mut n = wanted.min(affordable).min(max_parallelism).max(1);
+            // Transition gate: scale-ups draw from the transition
+            // allowance accrued over elapsed hours; commit only the step
+            // the allowance affords right now, deferring the rest.
+            let mut deferred = false;
+            if n > current && price.transition_dollars_per_unit > 0.0 {
+                let allowance = TRANSITION_BUDGET_FRACTION * budget_per_hour * ledger.elapsed_s
+                    / 3600.0
+                    - ledger.transition_dollars;
+                let affordable_units =
+                    (allowance / price.transition_dollars_per_unit).floor() as i64;
+                let step = (n - current) as i64;
+                if affordable_units < step {
+                    n = current + affordable_units.max(0) as usize;
+                    deferred = true;
+                }
+            }
+            // Below demand, deferred, or currently *over* the affordable
+            // fleet (initial conditions): commit the move immediately via
+            // Throttle — hysteresis must never hold the loop above what
+            // the budget affords.
+            let capped = deferred || goal.map_or(true, |g| n < g) || current > affordable;
+            if capped {
+                // Under-provisioned relative to demand: throttle admission
+                // to what the affordable fleet sustains, so backlog (and
+                // spend) stay bounded instead of growing with the queue.
+                Shaping {
+                    shaped: Shaped::Throttle {
+                        n,
+                        max_rate: predictor.sustainable_rate(n, headroom),
+                    },
+                    capped: true,
+                }
+            } else {
+                Shaping {
+                    shaped: Shaped::Reach { n, urgent: false },
+                    capped: false,
+                }
+            }
+        }
+        Objective::Slo { p_latency_s } => {
+            // Capacity that keeps the M/M/1 p99 sojourn at the target:
+            // C >= λ + ln(100)/p.  Find the smallest fleet providing it.
+            let need = smoothed + P99_TAIL_FACTOR / p_latency_s.max(1e-9);
+            let n_slo = (1..=max_parallelism).find(|&n| predictor.throughput(n) >= need);
+            match n_slo {
+                Some(n_slo) => {
+                    // Never run below the goodput target either — the SLO
+                    // objective is goodput plus a latency floor.
+                    let n = n_slo.max(goal.unwrap_or(n_slo));
+                    let urgent = n > current && predictor.throughput(current) < need;
+                    Shaping {
+                        shaped: Shaped::Reach { n, urgent },
+                        capped: false,
+                    }
+                }
+                None => {
+                    // No fleet reaches the target at this rate: run the
+                    // optimum and admit only what it can serve within the
+                    // SLO tail budget.
+                    let best = predictor.optimal_parallelism(max_parallelism);
+                    let max_rate =
+                        (predictor.throughput(best) - P99_TAIL_FACTOR / p_latency_s.max(1e-9))
+                            .max(0.0);
+                    Shaping {
+                        shaped: Shaped::Throttle { n: best, max_rate },
+                        capped: false,
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Estimated p99 sojourn for one control interval: drain the standing
+/// backlog at capacity `c`, then ride the M/M/1 tail at utilization
+/// `admitted/c`.  Infinite when the interval is overloaded.
+pub fn estimate_p99_s(backlog: f64, admitted_rate: f64, capacity: f64) -> f64 {
+    if capacity > admitted_rate && capacity > 0.0 {
+        backlog.max(0.0) / capacity + P99_TAIL_FACTOR / (capacity - admitted_rate)
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// The list-price model for a mini-app platform: the processing
+/// plugin's declared [`PriceModel`] from the default registry.
+pub fn platform_price(platform: PlatformKind) -> PriceModel {
+    default_registry()
+        .get(platform.processing_platform())
+        .map(|p| p.elasticity().price)
+        .unwrap_or_default()
+}
+
+/// One sweep row with its dollar columns (the `sweep --grid cost`
+/// analysis).  `price_percent` is the `price` axis level — an integer
+/// percent of the platform's list price, so spot discounts (50) and
+/// on-demand surcharges (200) sweep as ordinary axis levels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostedRow {
+    pub row: SweepRow,
+    /// The `price` axis level (percent of list price; 100 = list).
+    pub price_percent: u64,
+    /// Run-rate at this row's scale, dollars per hour.
+    pub dollars_per_hour: f64,
+    /// Dollars per 1000 messages at this row's throughput.
+    pub dollars_per_kmsg: f64,
+    /// On the goodput-vs-$/msg Pareto front of its sweep.
+    pub pareto: bool,
+}
+
+/// Price every row of a sweep and mark the Pareto front (maximize
+/// throughput, minimize $/msg).  Row order is preserved, so the derived
+/// CSV inherits the sweep's deterministic ordering.
+pub fn cost_rows(rows: &[SweepRow]) -> Vec<CostedRow> {
+    let mut costed: Vec<CostedRow> = rows
+        .iter()
+        .map(|row| {
+            let price = row
+                .platform()
+                .map(platform_price)
+                .unwrap_or_else(PriceModel::free);
+            let price_percent = row.key.int(super::experiment::AXIS_PRICE).unwrap_or(100);
+            let dollars_per_hour = price.run_rate_dollars_per_hour(row.scale)
+                * (price_percent as f64 / 100.0);
+            let dollars_per_kmsg = if row.throughput > 0.0 {
+                dollars_per_hour / 3600.0 / row.throughput * 1000.0
+            } else {
+                f64::INFINITY
+            };
+            CostedRow {
+                row: row.clone(),
+                price_percent,
+                dollars_per_hour,
+                dollars_per_kmsg,
+                pareto: false,
+            }
+        })
+        .collect();
+    for i in 0..costed.len() {
+        let dominated = costed.iter().enumerate().any(|(j, other)| {
+            j != i
+                && other.row.throughput >= costed[i].row.throughput
+                && other.dollars_per_kmsg <= costed[i].dollars_per_kmsg
+                && (other.row.throughput > costed[i].row.throughput
+                    || other.dollars_per_kmsg < costed[i].dollars_per_kmsg)
+        });
+        costed[i].pareto = !dominated;
+    }
+    costed
+}
+
+/// CSV of a priced sweep: the sweep's group columns plus the dollar
+/// columns and the Pareto marker.  Deterministic: row order is the
+/// sweep's spec order, floats print with fixed precision.
+pub fn pareto_csv(costed: &[CostedRow]) -> String {
+    let mut out = String::new();
+    let mut cols: Vec<String> = Vec::new();
+    if let Some(first) = costed.first() {
+        cols = first
+            .row
+            .key
+            .pairs()
+            .iter()
+            .map(|(n, _)| n.clone())
+            .collect();
+        cols.push(first.row.scale_axis.clone());
+    }
+    out.push_str(&cols.join(","));
+    if !cols.is_empty() {
+        out.push(',');
+    }
+    out.push_str("throughput,dollars_per_hour,dollars_per_kmsg,pareto\n");
+    for c in costed {
+        for (_, v) in c.row.key.pairs() {
+            out.push_str(&v.to_string());
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{},{:.3},{:.6},{:.8},{}\n",
+            c.row.scale,
+            c.row.throughput,
+            c.dollars_per_hour,
+            c.dollars_per_kmsg,
+            u8::from(c.pareto)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::usl::UslParams;
+
+    fn predictor(sigma: f64, kappa: f64, lambda: f64) -> Predictor {
+        Predictor {
+            params: UslParams::new(sigma, kappa, lambda),
+        }
+    }
+
+    #[test]
+    fn parse_covers_the_cli_surface() {
+        assert_eq!(Objective::parse("goodput", 0.0, 0.0), Ok(Objective::Goodput));
+        assert_eq!(
+            Objective::parse("Cost", 2.5, 0.0),
+            Ok(Objective::Cost {
+                budget_per_hour: 2.5
+            })
+        );
+        assert_eq!(
+            Objective::parse("slo", 0.0, 0.25),
+            Ok(Objective::Slo { p_latency_s: 0.25 })
+        );
+        assert!(Objective::parse("cost", 0.0, 0.0).is_err());
+        assert!(Objective::parse("slo", 0.0, 0.0).is_err());
+        assert!(Objective::parse("latency", 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn goodput_shaping_mirrors_required_parallelism() {
+        let p = predictor(0.02, 0.0001, 10.0);
+        let s = shape(
+            Objective::Goodput,
+            &p,
+            &PriceModel::free(),
+            &CostLedger::unmetered(),
+            50.0,
+            1.25,
+            64,
+            1,
+        );
+        let expect = p.required_parallelism(50.0, 1.25, 64).unwrap();
+        assert_eq!(
+            s.shaped,
+            Shaped::Reach {
+                n: expect,
+                urgent: false
+            }
+        );
+        assert!(!s.capped);
+    }
+
+    #[test]
+    fn cost_shaping_caps_at_the_affordable_fleet() {
+        let p = predictor(0.02, 0.0001, 10.0);
+        let price = PriceModel::per_unit_hour(0.10, "unit-hour");
+        // 0.9 * $1/h budget affords 9 units; demand wants ~8+ at rate 60
+        let s = shape(
+            Objective::Cost {
+                budget_per_hour: 0.50,
+            },
+            &p,
+            &price,
+            &CostLedger::unmetered(),
+            60.0,
+            1.25,
+            64,
+            1,
+        );
+        // 0.9 * 0.50 / 0.10 = 4.5 -> 4 affordable units < goodput target
+        match s.shaped {
+            Shaped::Throttle { n, max_rate } => {
+                assert_eq!(n, 4);
+                assert!(max_rate < 60.0);
+            }
+            other => panic!("expected budget throttle, got {other:?}"),
+        }
+        assert!(s.capped);
+    }
+
+    #[test]
+    fn cost_transition_gate_defers_unaffordable_jumps() {
+        let p = predictor(0.02, 0.0001, 10.0);
+        let price = PriceModel::per_unit_hour(0.01, "unit-hour").with_transition(0.05);
+        // plenty of run budget, but at t=0 the transition allowance is 0
+        let fresh = CostLedger::new();
+        let s = shape(
+            Objective::Cost {
+                budget_per_hour: 10.0,
+            },
+            &p,
+            &price,
+            &fresh,
+            60.0,
+            1.25,
+            64,
+            2,
+        );
+        match s.shaped {
+            Shaped::Throttle { n, .. } => assert_eq!(n, 2, "no allowance accrued yet"),
+            other => panic!("expected deferred scale-up, got {other:?}"),
+        }
+        assert!(s.capped);
+        // after an hour of accrual the same jump is affordable
+        let warm = CostLedger {
+            elapsed_s: 3600.0,
+            run_dollars: 0.0,
+            transition_dollars: 0.0,
+        };
+        let s = shape(
+            Objective::Cost {
+                budget_per_hour: 10.0,
+            },
+            &p,
+            &price,
+            &warm,
+            60.0,
+            1.25,
+            64,
+            2,
+        );
+        assert!(matches!(s.shaped, Shaped::Reach { .. }));
+    }
+
+    #[test]
+    fn slo_shaping_reaches_tail_capacity_urgently() {
+        let p = predictor(0.02, 0.0001, 10.0);
+        // rate 50, p99 0.5s => need 50 + 9.2 = 59.2 capacity
+        let s = shape(
+            Objective::Slo { p_latency_s: 0.5 },
+            &p,
+            &PriceModel::free(),
+            &CostLedger::unmetered(),
+            50.0,
+            1.25,
+            64,
+            2,
+        );
+        match s.shaped {
+            Shaped::Reach { n, urgent } => {
+                assert!(p.throughput(n) >= 50.0 + P99_TAIL_FACTOR / 0.5);
+                assert!(urgent, "current capacity misses the tail target");
+            }
+            other => panic!("expected reach, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slo_shaping_throttles_unreachable_targets() {
+        let p = predictor(0.9, 0.1, 5.0); // peaks near N=1
+        let s = shape(
+            Objective::Slo { p_latency_s: 0.1 },
+            &p,
+            &PriceModel::free(),
+            &CostLedger::unmetered(),
+            500.0,
+            1.25,
+            64,
+            2,
+        );
+        match s.shaped {
+            Shaped::Throttle { max_rate, .. } => assert!(max_rate < 500.0),
+            other => panic!("expected throttle, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn p99_estimate_blows_up_at_saturation() {
+        assert!(estimate_p99_s(0.0, 10.0, 20.0).is_finite());
+        assert!(estimate_p99_s(0.0, 20.0, 20.0).is_infinite());
+        assert!(estimate_p99_s(0.0, 30.0, 20.0).is_infinite());
+        // backlog adds drain time in front of the tail
+        let clean = estimate_p99_s(0.0, 10.0, 20.0);
+        let backlogged = estimate_p99_s(40.0, 10.0, 20.0);
+        assert!((backlogged - clean - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn every_builtin_platform_prices_the_cost_axis() {
+        for kind in [
+            PlatformKind::Lambda,
+            PlatformKind::DaskWrangler,
+            PlatformKind::Edge,
+        ] {
+            assert!(platform_price(kind).is_priced(), "{kind:?}");
+        }
+    }
+}

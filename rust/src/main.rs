@@ -4,6 +4,7 @@
 use pilot_streaming::engine::StepEngine;
 use pilot_streaming::insight::{self, figures, ExperimentSpec};
 use pilot_streaming::miniapp::{run_live, run_sim_opts, PlatformKind, Scenario, SimOptions};
+use pilot_streaming::pilot::PriceModel;
 use pilot_streaming::runtime::{calibrate, Manifest, PjrtEngine};
 use pilot_streaming::sim::{FaultEvent, FaultPlan, RecoveryMetrics, FAULTS_PARAM, FAULT_PRESET_IDS};
 use pilot_streaming::util::cli::{App, Args, CliError, CommandSpec};
@@ -53,7 +54,7 @@ fn app() -> App {
             .opt(
                 "grid",
                 "paper",
-                "preset grid: paper | edge | edge-fleet | memory | tiny | workflow",
+                "preset grid: paper | edge | edge-fleet | memory | tiny | cost | workflow",
             )
             .opt("jobs", "0", "parallel sweep workers (0 = one per core)")
             .opt("lanes", "1", "parallel sim lanes per scenario (0 = one per core)")
@@ -73,7 +74,10 @@ fn app() -> App {
             .opt("trace", "diurnal", "diurnal | burst")
             .opt("intervals", "120", "control intervals to replay")
             .opt("peak", "200", "peak offered rate (msg/s)")
-            .opt("platform", "lambda", "live pilot platform (any registered streaming plugin; kafka | kinesis close the loop over the broker's shard count)")
+            .opt("objective", "goodput", "what the loop optimizes: goodput | cost | slo (cost/slo print a comparison against the goodput-only loop)")
+            .opt("budget", "0", "dollars-per-hour budget (with --objective cost)")
+            .opt("slo-p99", "0", "p99 sojourn target in seconds (with --objective slo)")
+            .opt("platform", "lambda", "pilot platform — prices the loop via the plugin's PriceModel (kafka | kinesis close the live loop over the broker's shard count)")
             .opt("partitions", "2", "initial parallelism of the live pilot")
             .opt("points", "8000", "points per message (live)")
             .opt("centroids", "1024", "centroids (live)")
@@ -316,10 +320,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             "edge-fleet" => ExperimentSpec::edge_fleet_grid(messages, seed),
             "memory" => ExperimentSpec::lambda_memory_sweep(messages, seed),
             "tiny" => ExperimentSpec::tiny_grid(messages, seed),
+            "cost" => ExperimentSpec::cost_grid(messages, seed),
             "workflow" => ExperimentSpec::workflow_grid(messages, seed),
             other => {
                 return Err(format!(
-                    "unknown grid {other:?} (paper | edge | edge-fleet | memory | tiny | workflow)"
+                    "unknown grid {other:?} (paper | edge | edge-fleet | memory | tiny | cost | workflow)"
                 ))
             }
         },
@@ -388,11 +393,48 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     }
     let analysis = insight::analyze(&rows);
     println!("{}", insight::table(&analysis));
+    let costed = spec
+        .axis(insight::AXIS_PRICE)
+        .is_some()
+        .then(|| insight::cost_rows(&rows));
+    if let Some(costed) = &costed {
+        print_pareto_front(costed);
+    }
     if let Some(path) = args.get("csv").filter(|s| !s.is_empty()) {
         std::fs::write(path, insight::to_csv(&rows)).map_err(|e| e.to_string())?;
         println!("wrote {path}");
+        if let Some(costed) = &costed {
+            let pareto_path = format!("{path}.pareto.csv");
+            std::fs::write(&pareto_path, insight::pareto_csv(costed))
+                .map_err(|e| e.to_string())?;
+            println!("wrote {pareto_path}");
+        }
     }
     Ok(())
+}
+
+/// The goodput-vs-$/msg trade of a priced sweep: every configuration on
+/// the Pareto front (no other config has both more throughput and a
+/// lower $/msg), ordered as the sweep emitted them.
+fn print_pareto_front(costed: &[insight::CostedRow]) {
+    println!("\nPareto front (maximize msg/s, minimize $/kmsg):");
+    println!(
+        "{:<40} {:>6} {:>7} {:>10} {:>12} {:>12}",
+        "configuration", "price%", "N", "msg/s", "$/hour", "$/kmsg"
+    );
+    for c in costed.iter().filter(|c| c.pareto) {
+        println!(
+            "{:<40} {:>6} {:>7} {:>10.2} {:>12.4} {:>12.6}",
+            c.row.key.label(),
+            c.price_percent,
+            c.row.scale,
+            c.row.throughput,
+            c.dollars_per_hour,
+            c.dollars_per_kmsg
+        );
+    }
+    let on = costed.iter().filter(|c| c.pareto).count();
+    println!("{on} of {} configurations on the front", costed.len());
 }
 
 /// `sweep --faults`: expand a comma list of fault plans (or "all") into
@@ -584,16 +626,14 @@ fn print_autoscale_ticks(report: &insight::AutoscaleReport, intervals: usize) {
         "t", "rate", "N", "capacity", "backlog", "decision"
     );
     for tick in report.ticks.iter().step_by((intervals / 24).max(1)) {
-        let d = match &tick.decision {
-            insight::ScaleDecision::Hold { .. } => "hold".to_string(),
-            insight::ScaleDecision::Scale { from, to } => format!("{from}->{to}"),
-            insight::ScaleDecision::Throttle { max_rate, .. } => {
-                format!("throttle@{max_rate:.1}")
-            }
-        };
         println!(
             "{:>5.0} {:>10.1} {:>6} {:>10.1} {:>10.1} {:>10}",
-            tick.t, tick.offered_rate, tick.parallelism, tick.capacity, tick.backlog, d
+            tick.t,
+            tick.offered_rate,
+            tick.parallelism,
+            tick.capacity,
+            tick.backlog,
+            tick.decision
         );
     }
     println!(
@@ -604,6 +644,73 @@ goodput {:.1}%  scale events {}  max backlog {:.0}  throttled {:.0} msgs",
         report.max_backlog,
         report.throttled_total
     );
+    if let Some(msgs_per_dollar) = report.msgs_per_dollar() {
+        println!(
+            "spend ${:.4} (run ${:.4} + transitions ${:.4})  {:.0} msgs/$",
+            report.dollars_total(),
+            report.run_dollars,
+            report.transition_dollars,
+            msgs_per_dollar
+        );
+    }
+}
+
+/// `--objective` with its `--budget` / `--slo-p99` riders.
+fn objective_from(args: &Args) -> Result<insight::Objective, String> {
+    insight::Objective::parse(
+        args.get_or("objective", "goodput"),
+        args.get_f64("budget").map_err(|e| e.to_string())?,
+        args.get_f64("slo-p99").map_err(|e| e.to_string())?,
+    )
+}
+
+/// The cost-normalized comparison `--objective cost|slo` prints: the
+/// shaped loop against the goodput-only loop serving the same trace at
+/// the same platform price.
+fn print_objective_comparison(
+    objective: insight::Objective,
+    shaped: &insight::AutoscaleReport,
+    goodput_only: &insight::AutoscaleReport,
+) {
+    let p99 = objective.slo_p99();
+    println!(
+        "\n-- objective {} vs goodput-only (same trace, same price) --",
+        objective.label()
+    );
+    print!(
+        "{:<14} {:>9} {:>10} {:>9} {:>10}",
+        "loop", "goodput", "$ total", "$/hour", "msgs/$"
+    );
+    match p99 {
+        Some(p) => println!(" {:>12}", format!("p99<={p}s")),
+        None => println!(),
+    }
+    for (label, report) in [
+        (objective.label(), shaped),
+        ("goodput-only", goodput_only),
+    ] {
+        let hours = report.ticks.len() as f64 / 3600.0;
+        let per_hour = if hours > 0.0 {
+            report.dollars_total() / hours
+        } else {
+            0.0
+        };
+        let msgs_per_dollar = report
+            .msgs_per_dollar()
+            .map(|m| format!("{m:.0}"))
+            .unwrap_or_else(|| "-".into());
+        print!(
+            "{label:<14} {:>8.1}% {:>10.4} {:>9.4} {:>10}",
+            report.goodput() * 100.0,
+            report.dollars_total(),
+            per_hour,
+            msgs_per_dollar
+        );
+        match p99 {
+            Some(p) => println!(" {:>11.1}%", report.slo_attainment(p) * 100.0),
+            None => println!(),
+        }
+    }
 }
 
 fn cmd_autoscale(args: &Args) -> Result<(), String> {
@@ -629,14 +736,42 @@ fn cmd_autoscale(args: &Args) -> Result<(), String> {
     if !args.get_or("faults", "").is_empty() {
         return Err("--faults needs a live loop to degrade: pass --live".into());
     }
-    let report = insight::replay(
-        predictor,
-        insight::AutoscaleConfig::default(),
+    let objective = objective_from(args)?;
+    let platform = PlatformKind::parse(args.get_or("platform", "lambda"))
+        .ok_or_else(|| format!("unknown platform {:?}", args.get("platform")))?;
+    let price = insight::platform_price(platform);
+    let config = insight::AutoscaleConfig::default();
+    let report = insight::replay_objective(
+        predictor.clone(),
+        config.clone(),
+        objective,
+        price,
         &trace,
         1.0,
         1,
     );
+    if objective != insight::Objective::Goodput {
+        println!(
+            "-- replay: objective {} on {} (${:.4}/{}/h) --",
+            objective.label(),
+            platform.label(),
+            price.unit_dollars_per_hour,
+            price.billing_unit
+        );
+    }
     print_autoscale_ticks(&report, intervals);
+    if objective != insight::Objective::Goodput {
+        let goodput_only = insight::replay_objective(
+            predictor,
+            config,
+            insight::Objective::Goodput,
+            price,
+            &trace,
+            1.0,
+            1,
+        );
+        print_objective_comparison(objective, &report, &goodput_only);
+    }
     Ok(())
 }
 
@@ -691,21 +826,25 @@ fn cmd_autoscale_live(
         );
     }
     let plan = fault_plan_from(args)?;
-    let scaler = insight::Autoscaler::new(predictor, config, scenario.partitions);
+    let objective = objective_from(args)?;
+    let price = insight::platform_price(platform);
+    let scaler = insight::Autoscaler::new(predictor.clone(), config.clone(), scenario.partitions)
+        .with_objective(objective, price);
 
     eprintln!(
-        "provisioning live {} pilot (N={}) and closing the loop over {} intervals...",
+        "provisioning live {} pilot (N={}, objective {}) and closing the loop over {} intervals...",
         platform.label(),
         scenario.partitions,
+        objective.label(),
         intervals
     );
     if let Some(p) = &plan {
         eprintln!("injecting fault plan {:?} ({} event(s))", p.name, p.events.len());
     }
     let (report, recovery, status) =
-        run_live_loop(&scenario, &factory, Some(scaler), None, plan.as_ref(), trace)?;
+        run_live_loop(&scenario, &factory, Some(scaler), None, plan.as_ref(), price, trace)?;
     let (baseline, base_recovery, _) =
-        run_live_loop(&scenario, &factory, None, None, plan.as_ref(), trace)?;
+        run_live_loop(&scenario, &factory, None, None, plan.as_ref(), price, trace)?;
 
     let suffix = plan
         .as_ref()
@@ -713,6 +852,21 @@ fn cmd_autoscale_live(
         .unwrap_or_default();
     println!("-- live {} (closed loop{suffix}) --", platform.label());
     print_autoscale_ticks(&report, intervals);
+    if objective != insight::Objective::Goodput {
+        let goodput_scaler =
+            insight::Autoscaler::new(predictor, config, scenario.partitions)
+                .with_objective(insight::Objective::Goodput, price);
+        let (goodput_only, _, _) = run_live_loop(
+            &scenario,
+            &factory,
+            Some(goodput_scaler),
+            None,
+            plan.as_ref(),
+            price,
+            trace,
+        )?;
+        print_objective_comparison(objective, &report, &goodput_only);
+    }
     println!("\nresize transitions:");
     for ev in &report.resizes {
         println!(
@@ -750,6 +904,7 @@ fn run_live_loop<F>(
     scaler: Option<insight::Autoscaler>,
     fitter: Option<insight::OnlineUslFitter>,
     plan: Option<&FaultPlan>,
+    price: PriceModel,
     trace: &[f64],
 ) -> Result<(insight::AutoscaleReport, Option<RecoveryReport>, String), String>
 where
@@ -762,7 +917,7 @@ where
     match plan {
         Some(plan) => {
             let mut target = insight::FaultyTarget::new(inner, plan.clone(), trace.len(), 1.0);
-            let report = run_loop_on(&mut target, scaler, fitter, trace)?;
+            let report = run_loop_on(&mut target, scaler, fitter, price, trace)?;
             let recovery = target.recovery_report();
             let inner = target.into_inner();
             let status = pilot_status_line(&inner);
@@ -771,7 +926,7 @@ where
         }
         None => {
             let mut target = inner;
-            let report = run_loop_on(&mut target, scaler, fitter, trace)?;
+            let report = run_loop_on(&mut target, scaler, fitter, price, trace)?;
             let status = pilot_status_line(&target);
             target.shutdown();
             Ok((report, None, status))
@@ -783,6 +938,7 @@ fn run_loop_on(
     target: &mut dyn insight::ScalingTarget,
     scaler: Option<insight::Autoscaler>,
     fitter: Option<insight::OnlineUslFitter>,
+    price: PriceModel,
     trace: &[f64],
 ) -> Result<insight::AutoscaleReport, String> {
     match scaler {
@@ -793,7 +949,7 @@ fn run_loop_on(
             }
             control.run(target, trace)
         }
-        None => insight::run_fixed(target, trace, 1.0),
+        None => insight::run_fixed_priced(target, trace, 1.0, price),
     }
 }
 
@@ -857,20 +1013,36 @@ where
     if let Some(p) = &plan {
         eprintln!("injecting fault plan {:?} ({} event(s)) into both loops", p.name, p.events.len());
     }
+    let price = insight::platform_price(scenario.platform);
     let scaler =
         || insight::Autoscaler::new(predictor.clone(), config.clone(), scenario.partitions);
-    let (static_report, static_recovery, _) =
-        run_live_loop(scenario, factory, Some(scaler()), None, plan.as_ref(), intervals_trace)?;
+    let (static_report, static_recovery, _) = run_live_loop(
+        scenario,
+        factory,
+        Some(scaler()),
+        None,
+        plan.as_ref(),
+        price,
+        intervals_trace,
+    )?;
     let (recal_report, recal_recovery, _) = run_live_loop(
         scenario,
         factory,
         Some(scaler()),
         Some(insight::OnlineUslFitter::new(recal_config)),
         plan.as_ref(),
+        price,
         intervals_trace,
     )?;
-    let (baseline, _, _) =
-        run_live_loop(scenario, factory, None, None, plan.as_ref(), intervals_trace)?;
+    let (baseline, _, _) = run_live_loop(
+        scenario,
+        factory,
+        None,
+        None,
+        plan.as_ref(),
+        price,
+        intervals_trace,
+    )?;
 
     let recal = recal_report.recalibration.clone().unwrap_or_default();
     println!("-- live {label}: static fit vs online recalibration --");

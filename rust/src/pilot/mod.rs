@@ -61,7 +61,7 @@ pub use description::{DescriptionError, MachineKind, PilotDescription, Platform}
 pub use job::{PilotBackend, PilotError, PilotJob, PilotStatus, ResizePlan, ResizeSemantics};
 pub use processor::{ProcessCost, StreamProcessor};
 pub use registry::{
-    default_registry, Elasticity, PlatformPlugin, PluginRegistry, ProvisionContext,
+    default_registry, Elasticity, PlatformPlugin, PluginRegistry, PriceModel, ProvisionContext,
 };
 pub use service::PilotComputeService;
 pub use state::{CuState, PilotState};

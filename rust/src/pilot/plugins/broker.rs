@@ -8,7 +8,7 @@ use crate::broker::Broker;
 use crate::pilot::compute_unit::{ComputeUnit, TaskSpec};
 use crate::pilot::description::{PilotDescription, Platform};
 use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
-use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
+use crate::pilot::registry::{Elasticity, PlatformPlugin, PriceModel, ProvisionContext};
 use crate::sim::{SharedClock, SharedResource};
 use std::sync::Arc;
 
@@ -16,6 +16,19 @@ use std::sync::Arc;
 /// (Kinesis `UpdateShardCount` and Kafka partition adds both proceed
 /// shard-by-shard).
 pub const REPARTITION_S_PER_SHARD: f64 = 1.5;
+
+/// Kinesis' 2019 list price per shard-hour (us-east-1).  A shard split
+/// bills the child shards from the moment the split starts, so the
+/// transition charges the repartition window at the shard-hour rate.
+pub const KINESIS_SHARD_HOUR_DOLLARS: f64 = 0.015;
+/// Amortized broker-instance cost per Kafka partition-hour: a
+/// self-managed 3-broker streaming cluster serving ~32 partitions.
+pub const KAFKA_PARTITION_HOUR_DOLLARS: f64 = 0.011;
+
+fn broker_price(unit_hour: f64, unit: &'static str) -> PriceModel {
+    PriceModel::per_unit_hour(unit_hour, unit)
+        .with_transition(unit_hour * REPARTITION_S_PER_SHARD / 3600.0)
+}
 
 /// The repartition plan both broker backends share: cost is linear in the
 /// shard delta, in either direction.
@@ -169,6 +182,7 @@ impl PlatformPlugin for KinesisPlugin {
     /// shard-by-shard.
     fn elasticity(&self) -> Elasticity {
         Elasticity::elastic(REPARTITION_S_PER_SHARD, REPARTITION_S_PER_SHARD)
+            .with_price(broker_price(KINESIS_SHARD_HOUR_DOLLARS, "shard-hour"))
     }
 
     fn provision(
@@ -203,6 +217,7 @@ impl PlatformPlugin for KafkaPlugin {
     /// Partition adds/rebuilds proceed partition-by-partition.
     fn elasticity(&self) -> Elasticity {
         Elasticity::elastic(REPARTITION_S_PER_SHARD, REPARTITION_S_PER_SHARD)
+            .with_price(broker_price(KAFKA_PARTITION_HOUR_DOLLARS, "partition-hour"))
     }
 
     fn provision(

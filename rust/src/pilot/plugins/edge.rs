@@ -56,7 +56,7 @@ use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
 use crate::pilot::description::{DescriptionError, PilotDescription, Platform};
 use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
 use crate::pilot::processor::{ProcessCost, StreamProcessor};
-use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
+use crate::pilot::registry::{Elasticity, PlatformPlugin, PriceModel, ProvisionContext};
 use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
 use crate::serverless::edge::{EDGE_MAX_CONCURRENCY, EDGE_MAX_MEMORY_MB};
 use crate::serverless::edge_fleet::{
@@ -68,6 +68,19 @@ use crate::serverless::{
 };
 use crate::store::ObjectStore;
 use std::sync::{Arc, Mutex};
+
+/// Draw of one active edge container (an SBC-class device running one
+/// sandbox) — the per-site energy term of the edge price model.
+pub const EDGE_CONTAINER_WATTS: f64 = 7.5;
+/// Retail electricity price at the sites, dollars per kWh.
+pub const EDGE_KWH_DOLLARS: f64 = 0.14;
+
+/// The edge price model: hardware is owned, so the marginal cost of one
+/// unit of parallelism is the site's electricity draw.  Local container
+/// starts move no money (no billed init, no data egress).
+pub(crate) fn edge_price() -> PriceModel {
+    PriceModel::per_unit_hour(EDGE_CONTAINER_WATTS / 1000.0 * EDGE_KWH_DOLLARS, "site-kWh")
+}
 
 /// One provisioned site: its envelope, the admitted function config, and
 /// the container fleet running under it.
@@ -454,6 +467,7 @@ impl PlatformPlugin for EdgePlugin {
     fn elasticity(&self) -> Elasticity {
         Elasticity::elastic(FunctionConfig::default().cold_start_dist().mean(), 0.0)
             .with_cap(EDGE_MAX_CONCURRENCY)
+            .with_price(edge_price())
     }
 
     /// Clamp container memory into the device envelope, so the cloud

@@ -14,7 +14,7 @@ use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
 use crate::pilot::description::{PilotDescription, Platform};
 use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
 use crate::pilot::processor::{kmeans_step, ProcessCost, StreamProcessor};
-use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
+use crate::pilot::registry::{Elasticity, PlatformPlugin, PriceModel, ProvisionContext};
 use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
 use crate::store::{ModelStore, ObjectStore};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -29,6 +29,17 @@ pub const SCHEDULING_DELAY_S: f64 = MICRO_BATCH_INTERVAL_S / 2.0;
 
 /// Savepoint + restore window a running job pays to rescale.
 pub const SAVEPOINT_RESTORE_S: f64 = 3.0;
+
+/// Amortized cluster cost per task-slot-hour (a managed-Flink task
+/// manager slot; cheaper than an HPC worker, dearer than a broker
+/// shard).  Rescaling restarts the *whole* job from a savepoint, so the
+/// per-unit transition charges the restore window across a slot.
+pub const TASK_SLOT_HOUR_DOLLARS: f64 = 0.07;
+
+pub(crate) fn flink_price() -> PriceModel {
+    PriceModel::per_unit_hour(TASK_SLOT_HOUR_DOLLARS, "slot-hour")
+        .with_transition(TASK_SLOT_HOUR_DOLLARS * SAVEPOINT_RESTORE_S / 3600.0)
+}
 
 /// Shared execution core: one K-Means step against the job's state store.
 struct FlinkCore {
@@ -210,7 +221,7 @@ impl PlatformPlugin for FlinkPlugin {
 
     /// Rescaling restarts the job from a savepoint, both ways.
     fn elasticity(&self) -> Elasticity {
-        Elasticity::elastic(SAVEPOINT_RESTORE_S, SAVEPOINT_RESTORE_S)
+        Elasticity::elastic(SAVEPOINT_RESTORE_S, SAVEPOINT_RESTORE_S).with_price(flink_price())
     }
 
     fn provision(

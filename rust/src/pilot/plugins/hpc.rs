@@ -8,7 +8,7 @@ use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
 use crate::pilot::description::{DescriptionError, PilotDescription, Platform};
 use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
 use crate::pilot::processor::{ProcessCost, StreamProcessor};
-use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
+use crate::pilot::registry::{Elasticity, PlatformPlugin, PriceModel, ProvisionContext};
 use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
 use crate::sim::{ContentionParams, SharedResource};
 use crate::store::shared_fs::{SharedFsParams, SharedFsStore};
@@ -31,6 +31,23 @@ pub const DEFAULT_LUSTRE_BETA: f64 = 0.05;
 pub const WORKER_SPAWN_S: f64 = 2.0;
 /// Seconds to drain a retiring worker's in-flight task on scale-down.
 pub const WORKER_DRAIN_S: f64 = 5.0;
+
+/// Dollars per node-hour, an XSEDE-era service-unit conversion for a
+/// Wrangler-class node (the paper's testbed machine).
+pub const NODE_HOUR_DOLLARS: f64 = 1.20;
+/// Allocations bill in whole minutes: growing the worker pool charges at
+/// least one minute of worker time per added worker.
+pub const ALLOCATION_BILLING_QUANTUM_S: f64 = 60.0;
+
+/// The HPC price model: one unit of parallelism is one Dask worker, 12
+/// of which share a Wrangler node ([`crate::hpc::Machine::wrangler`]), so
+/// a worker-hour costs `NODE_HOUR_DOLLARS / 12`; each added worker pays
+/// the allocation's one-minute billing quantum up front.
+pub(crate) fn hpc_price() -> PriceModel {
+    let worker_hour = NODE_HOUR_DOLLARS / crate::hpc::Machine::wrangler(1).workers_per_node as f64;
+    PriceModel::per_unit_hour(worker_hour, "node-hour")
+        .with_transition(worker_hour * ALLOCATION_BILLING_QUANTUM_S / 3600.0)
+}
 
 struct DaskExecutor {
     pool: Arc<DaskPool>,
@@ -281,7 +298,7 @@ impl PlatformPlugin for HpcPlugin {
     /// queue + node boot when the allocation grows); retiring workers
     /// drain their in-flight task first.
     fn elasticity(&self) -> Elasticity {
-        Elasticity::elastic(WORKER_SPAWN_S, WORKER_DRAIN_S)
+        Elasticity::elastic(WORKER_SPAWN_S, WORKER_DRAIN_S).with_price(hpc_price())
     }
 
     fn validate(&self, d: &PilotDescription) -> Result<(), DescriptionError> {

@@ -7,10 +7,15 @@ use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
 use crate::pilot::description::{PilotDescription, Platform};
 use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
 use crate::pilot::processor::kmeans_step;
-use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
+use crate::pilot::registry::{Elasticity, PlatformPlugin, PriceModel, ProvisionContext};
 use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
 use crate::store::{ModelStore, ObjectStore};
 use std::sync::Arc;
+
+/// Amortized electricity + depreciation of one host core: even the
+/// "free" in-process platform declares a real price so cost objectives
+/// always have a denominator (and the conformance walk stays uniform).
+pub const LOCAL_CORE_HOUR_DOLLARS: f64 = 0.008;
 
 struct LocalExecutor {
     engine: Arc<dyn StepEngine>,
@@ -139,9 +144,11 @@ impl PlatformPlugin for LocalPlugin {
         false
     }
 
-    /// In-process threads come and go for free.
+    /// In-process threads come and go for free (in time — the host core
+    /// still draws power, which is the declared run-rate).
     fn elasticity(&self) -> Elasticity {
         Elasticity::elastic(0.0, 0.0)
+            .with_price(PriceModel::per_unit_hour(LOCAL_CORE_HOUR_DOLLARS, "core-hour"))
     }
 
     fn provision(

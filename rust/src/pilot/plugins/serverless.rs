@@ -11,12 +11,27 @@ use crate::pilot::compute_unit::{ComputeUnit, CuOutcome, TaskSpec};
 use crate::pilot::description::{DescriptionError, PilotDescription, Platform};
 use crate::pilot::job::{PilotBackend, PilotError, ResizePlan, ResizeSemantics};
 use crate::pilot::processor::{ProcessCost, StreamProcessor};
-use crate::pilot::registry::{Elasticity, PlatformPlugin, ProvisionContext};
+use crate::pilot::registry::{Elasticity, PlatformPlugin, PriceModel, ProvisionContext};
 use crate::pilot::workers::{LazyWorkerPool, TaskExecutor};
 use crate::serverless::{FunctionConfig, LambdaFleet};
 use crate::sim::SharedClock;
 use crate::store::ObjectStore;
 use std::sync::Arc;
+
+/// AWS Lambda's 2019 list price per GB-second (us-east-1), the billing
+/// constant behind the paper-era serverless cost analyses in PAPERS.md.
+pub const LAMBDA_GB_SECOND_DOLLARS: f64 = 0.000_016_666_7;
+
+/// The serverless price model, derived from the same [`FunctionConfig`]
+/// the cold-start transition time uses: one unit of parallelism is one
+/// warm container billed `memory_gb * 3600` GB-s per hour, and each
+/// scale-up pays the billed cold-start init at that memory size.
+pub(crate) fn serverless_price() -> PriceModel {
+    let cfg = FunctionConfig::default();
+    let gb = cfg.memory_mb as f64 / 1024.0;
+    PriceModel::per_unit_hour(gb * 3600.0 * LAMBDA_GB_SECOND_DOLLARS, "GB-s")
+        .with_transition(cfg.cold_start_dist().mean() * gb * LAMBDA_GB_SECOND_DOLLARS)
+}
 
 /// Runs compute-units as fleet invocations (serverless and edge pilots).
 pub(crate) struct FleetExecutor {
@@ -208,6 +223,7 @@ impl PlatformPlugin for ServerlessPlugin {
     /// autoscaling target (arXiv:2603.03089's short-stream argument).
     fn elasticity(&self) -> Elasticity {
         Elasticity::elastic(FunctionConfig::default().cold_start_dist().mean(), 0.0)
+            .with_price(serverless_price())
     }
 
     fn validate(&self, d: &PilotDescription) -> Result<(), DescriptionError> {

@@ -37,11 +37,92 @@ pub struct ProvisionContext {
     pub shared_fs: Arc<SharedResource>,
 }
 
+/// A platform's declared billing model: what one unit of parallelism
+/// costs per hour of run time, and what a scale-up transition costs on
+/// top.  Like [`Elasticity`]'s transition times these are *per-unit*
+/// planning constants for the decision layer
+/// ([`Objective`](crate::insight::Objective) weighs them against a
+/// re-fit's scale-up recommendation before committing); they are not a
+/// billing simulation.  Scale-*downs* are free on every modeled platform
+/// (serverless containers just stop billing, HPC drains inside the
+/// existing allocation, broker shard merges are control-plane-only), so
+/// [`PriceModel::transition_dollars`] charges upward moves only.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PriceModel {
+    /// Dollars per hour for one unit of parallelism kept running
+    /// (one container, worker, shard, slot, or site).
+    pub unit_dollars_per_hour: f64,
+    /// One-time dollars to bring one additional unit online (billed
+    /// cold-start init, allocation billing quantum, shard split).
+    pub transition_dollars_per_unit: f64,
+    /// The platform's native billing unit, for reports ("GB-s",
+    /// "node-hour", "shard-hour", ...).
+    pub billing_unit: &'static str,
+}
+
+impl PriceModel {
+    /// An unpriced platform: every dollar figure is zero.  This is the
+    /// *default* a plugin gets for free — the conformance suite insists
+    /// every registered plugin overrides it with a real model.
+    pub const fn free() -> Self {
+        Self {
+            unit_dollars_per_hour: 0.0,
+            transition_dollars_per_unit: 0.0,
+            billing_unit: "unpriced",
+        }
+    }
+
+    /// A model billing `dollars` per unit-hour in the platform's native
+    /// `unit`, with free transitions (compose with
+    /// [`PriceModel::with_transition`]).
+    pub const fn per_unit_hour(dollars: f64, unit: &'static str) -> Self {
+        Self {
+            unit_dollars_per_hour: dollars,
+            transition_dollars_per_unit: 0.0,
+            billing_unit: unit,
+        }
+    }
+
+    /// Attach a one-time per-unit scale-up charge.
+    pub const fn with_transition(mut self, dollars: f64) -> Self {
+        self.transition_dollars_per_unit = dollars;
+        self
+    }
+
+    /// Whether this is a real (non-default) price model.
+    pub fn is_priced(&self) -> bool {
+        self.unit_dollars_per_hour > 0.0
+    }
+
+    /// Run-rate in dollars per hour at `parallelism` units.
+    pub fn run_rate_dollars_per_hour(&self, parallelism: usize) -> f64 {
+        self.unit_dollars_per_hour * parallelism as f64
+    }
+
+    /// Dollars accrued keeping `parallelism` units up for `dt_s` seconds.
+    pub fn interval_dollars(&self, parallelism: usize, dt_s: f64) -> f64 {
+        self.run_rate_dollars_per_hour(parallelism) * (dt_s / 3600.0)
+    }
+
+    /// One-time dollars for the transition `from -> to`.  Only scale-up
+    /// units are charged (see the type-level note on free scale-downs).
+    pub fn transition_dollars(&self, from: usize, to: usize) -> f64 {
+        self.transition_dollars_per_unit * to.saturating_sub(from) as f64
+    }
+}
+
+impl Default for PriceModel {
+    fn default() -> Self {
+        Self::free()
+    }
+}
+
 /// A platform's declared elasticity: how (and whether) a live pilot's
-/// parallelism can change, and what the transition costs.  The numbers are
-/// *per-unit* planning hints for the control layer; the backend's
-/// [`PilotBackend::resize`](super::job::PilotBackend::resize) commits the
-/// actual [`ResizePlan`](super::job::ResizePlan).
+/// parallelism can change, and what the transition costs — in seconds
+/// ([`Elasticity::scale_up_s`]) *and* in dollars ([`Elasticity::price`]).
+/// The numbers are *per-unit* planning hints for the control layer; the
+/// backend's [`PilotBackend::resize`](super::job::PilotBackend::resize)
+/// commits the actual [`ResizePlan`](super::job::ResizePlan).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Elasticity {
     /// Whether live pilots of this platform support `resize` at all.
@@ -54,6 +135,8 @@ pub struct Elasticity {
     /// Hard platform cap on parallelism (device envelope); `None` means
     /// unbounded as far as the platform is concerned.
     pub max_parallelism: Option<usize>,
+    /// The platform's billing model, consumed by cost-aware objectives.
+    pub price: PriceModel,
 }
 
 impl Elasticity {
@@ -64,6 +147,7 @@ impl Elasticity {
             scale_up_s: f64::INFINITY,
             scale_down_s: f64::INFINITY,
             max_parallelism: None,
+            price: PriceModel::free(),
         }
     }
 
@@ -74,6 +158,7 @@ impl Elasticity {
             scale_up_s,
             scale_down_s,
             max_parallelism: None,
+            price: PriceModel::free(),
         }
     }
 
@@ -81,6 +166,13 @@ impl Elasticity {
     /// count).
     pub fn with_cap(mut self, cap: usize) -> Self {
         self.max_parallelism = Some(cap);
+        self
+    }
+
+    /// Attach the platform's billing model (builder leg; every built-in
+    /// plugin declares one — enforced by `plugin_conformance`).
+    pub fn with_price(mut self, price: PriceModel) -> Self {
+        self.price = price;
         self
     }
 }
@@ -360,6 +452,25 @@ mod tests {
         );
         // a plugin that doesn't opt in stays rigid
         assert!(!FakePlugin("rigid", &[]).elasticity().resizable);
+    }
+
+    #[test]
+    fn price_model_arithmetic_and_builder() {
+        let p = PriceModel::per_unit_hour(0.10, "worker-hour").with_transition(0.02);
+        assert!(p.is_priced());
+        assert!((p.run_rate_dollars_per_hour(4) - 0.40).abs() < 1e-12);
+        assert!((p.interval_dollars(4, 1800.0) - 0.20).abs() < 1e-12);
+        assert!((p.transition_dollars(2, 5) - 0.06).abs() < 1e-12);
+        // scale-downs are free on every modeled platform
+        assert_eq!(p.transition_dollars(5, 2), 0.0);
+        assert!(!PriceModel::free().is_priced());
+        assert_eq!(PriceModel::default(), PriceModel::free());
+        // builder legs compose and rigid/elastic start unpriced
+        assert_eq!(Elasticity::rigid().price, PriceModel::free());
+        let e = Elasticity::elastic(1.0, 0.0).with_cap(8).with_price(p);
+        assert_eq!(e.price, p);
+        assert_eq!(e.max_parallelism, Some(8));
+        assert!(e.resizable);
     }
 
     #[test]

@@ -155,6 +155,54 @@ fn every_registered_plugin_survives_a_resize_cycle() {
 }
 
 #[test]
+fn every_registered_plugin_declares_a_price_model() {
+    // the cost-objective conformance surface: a plugin that keeps the
+    // default (free) PriceModel silently breaks every dollar column, so
+    // declaring one is part of the plugin contract
+    let registry = default_registry();
+    for platform in registry.platforms() {
+        let price = registry.get(platform).unwrap().elasticity().price;
+        assert!(
+            price.is_priced(),
+            "{platform}: plugins must declare a non-default PriceModel"
+        );
+        assert_ne!(price.billing_unit, "unpriced", "{platform}");
+        assert!(
+            price.unit_dollars_per_hour.is_finite() && price.unit_dollars_per_hour > 0.0,
+            "{platform}: unit run-rate must be a positive dollar amount"
+        );
+        assert!(
+            price.transition_dollars_per_unit >= 0.0,
+            "{platform}: transition charge cannot be negative"
+        );
+        // scale-downs are free everywhere; scale-ups charge per unit added
+        assert_eq!(price.transition_dollars(5, 2), 0.0, "{platform}");
+        assert!(
+            (price.transition_dollars(2, 5) - 3.0 * price.transition_dollars_per_unit).abs()
+                < 1e-12,
+            "{platform}"
+        );
+    }
+
+    // platform-shape sanity: the declared prices keep the real-world
+    // ordering the paper's cost discussion leans on
+    let price_of = |p| registry.get(p).unwrap().elasticity().price;
+    let lambda = price_of(Platform::LAMBDA);
+    let edge = price_of(Platform::EDGE);
+    let dask = price_of(Platform::DASK);
+    assert!(
+        lambda.unit_dollars_per_hour > edge.unit_dollars_per_hour,
+        "a serverless GB-hour costs more than an edge site's energy"
+    );
+    assert!(
+        dask.unit_dollars_per_hour > edge.unit_dollars_per_hour,
+        "an HPC worker-hour costs more than an edge site's energy"
+    );
+    assert_eq!(edge.transition_dollars_per_unit, 0.0, "edge sites are owned, not rented");
+    assert!(lambda.transition_dollars_per_unit > 0.0, "cold starts bill GB-seconds");
+}
+
+#[test]
 fn processing_plugins_expose_stream_processors() {
     // the mini-app contract: every compute-capable pilot can pump messages
     let registry = default_registry();
